@@ -1,0 +1,128 @@
+//! Consecutive vs concurrent matching (paper §3.2).
+//!
+//! PointPainting's original latency mitigation reuses the *previous* frame's
+//! 2D segmentation ("consecutive matching") — cheap, but wrong whenever the
+//! camera moves. PointSplit's answer is "concurrent matching": run 2D and 3D
+//! on the *current* frame in parallel on GPU+NPU.
+//!
+//! This driver simulates a camera panning through a scene sequence: each
+//! frame is the same room viewed from a slightly rotated camera. It compares
+//! three policies on latency AND accuracy:
+//!
+//!   1. concurrent  — PointSplit: fresh segmentation every frame, overlapped
+//!   2. consecutive — segmentation every k-th frame, reused in between
+//!   3. sequential  — fresh segmentation, naive Fig. 2 schedule
+//!
+//! ```bash
+//! cargo run --release --example consecutive_matching -- [frames]
+//! ```
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{generate_scene, SYNRGBD};
+use pointsplit::eval::{eval_map, Detection};
+use pointsplit::runtime::Runtime;
+use pointsplit::sim::DeviceKind;
+use pointsplit::util::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let frames: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+    let rt = Runtime::open("artifacts")?;
+    let seq = Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let par = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+
+    // "camera pan": consecutive frames are *different* generated scenes —
+    // the adversarial case for stale segmentation (view change between
+    // frames, which the paper says consecutive matching cannot survive)
+    let scenes: Vec<_> = (0..frames).map(|i| generate_scene(910_000 + i as u64, &SYNRGBD)).collect();
+    let gts: Vec<_> = scenes.iter().map(|s| s.gt_boxes()).collect();
+
+    let mut table =
+        Table::new(&["policy", "mAP@0.25", "sim ms/frame", "NPU seg runs"]);
+
+    // 1. concurrent matching (PointSplit, fresh seg each frame)
+    {
+        let pipe =
+            ScenePipeline::new(&rt, DetectorConfig::new("synrgbd", Variant::PointSplit, true, par));
+        let mut dets = Vec::new();
+        let mut lat = 0.0;
+        for (i, scene) in scenes.iter().enumerate() {
+            let out = pipe.run(scene, i as u64)?;
+            lat += out.timeline.total_ms;
+            dets.extend(out.detections.into_iter().map(|b| Detection { scene: i, b }));
+        }
+        let r = eval_map(&dets, &gts, rt.manifest.num_class(), 0.25);
+        table.row(vec![
+            "concurrent (PointSplit)".into(),
+            format!("{:.1}", r.map * 100.0),
+            format!("{:.0}", lat / frames as f64),
+            format!("{frames}"),
+        ]);
+    }
+
+    // 2. consecutive matching: segment every k-th frame, reuse in between
+    for k in [2usize, 4] {
+        let pipe = ScenePipeline::new(
+            &rt,
+            DetectorConfig::new("synrgbd", Variant::PointPainting, true, seq),
+        );
+        let mut dets = Vec::new();
+        let mut lat = 0.0;
+        let mut carried: Option<Tensor> = None;
+        let mut seg_runs = 0;
+        for (i, scene) in scenes.iter().enumerate() {
+            let reuse = i % k != 0;
+            let prev = if reuse { carried.as_ref() } else { None };
+            if !reuse {
+                seg_runs += 1;
+            }
+            let (out, scores) = pipe.run_with_scores(scene, i as u64, prev)?;
+            if !reuse {
+                carried = scores;
+            }
+            lat += out.timeline.total_ms;
+            dets.extend(out.detections.into_iter().map(|b| Detection { scene: i, b }));
+        }
+        let r = eval_map(&dets, &gts, rt.manifest.num_class(), 0.25);
+        table.row(vec![
+            format!("consecutive (reuse, k={k})"),
+            format!("{:.1}", r.map * 100.0),
+            format!("{:.0}", lat / frames as f64),
+            format!("{seg_runs}"),
+        ]);
+    }
+
+    // 3. sequential fresh segmentation (Fig. 2 baseline)
+    {
+        let pipe = ScenePipeline::new(
+            &rt,
+            DetectorConfig::new("synrgbd", Variant::PointPainting, true, seq),
+        );
+        let mut dets = Vec::new();
+        let mut lat = 0.0;
+        for (i, scene) in scenes.iter().enumerate() {
+            let out = pipe.run(scene, i as u64)?;
+            lat += out.timeline.total_ms;
+            dets.extend(out.detections.into_iter().map(|b| Detection { scene: i, b }));
+        }
+        let r = eval_map(&dets, &gts, rt.manifest.num_class(), 0.25);
+        table.row(vec![
+            "sequential (fresh seg)".into(),
+            format!("{:.1}", r.map * 100.0),
+            format!("{:.0}", lat / frames as f64),
+            format!("{frames}"),
+        ]);
+    }
+
+    table.print(&format!(
+        "consecutive vs concurrent matching over a {frames}-frame pan (view changes every frame)"
+    ));
+    println!(
+        "\npaper §3.2: reusing stale segmentation is \"vulnerable to the difference\n\
+         between the current and previous scenes and cannot be applied to\n\
+         single-shot detection\" — here every frame changes view, so the reuse\n\
+         rows trade accuracy for their latency win, while concurrent matching\n\
+         (PointSplit) gets the latency without the staleness."
+    );
+    Ok(())
+}

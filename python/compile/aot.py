@@ -1,0 +1,461 @@
+"""AOT build orchestrator: train -> calibrate -> quantize -> export HLO.
+
+Runs ONCE at build time (``make artifacts``); the Rust request path never
+imports Python. Produces, under ``artifacts/``:
+
+- ``weights/{dataset}_{model}.npz``       trained parameters (training cache)
+- ``{dataset}_{model}_{net}_{prec}.hlo.txt``  one HLO-text module per
+  network-only subgraph (point manipulation excluded — that is Rust's job)
+- ``manifest.json``   shapes, dtypes, workload descriptors (FLOPs/bytes for
+  the device simulator), model/dataset constants, role groups
+- ``head_stats.json`` per-channel weight/activation stats (Fig. 6/7)
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, model, quantize, scene, train
+from .common import (
+    FEAT_DIM,
+    FEAT_DIM_PLAIN,
+    IMG_SIZE,
+    NUM_PROPOSALS,
+    NUM_SEEDS,
+    NUM_SEG_CLASSES,
+    PROPOSAL_K,
+    SA_CONFIGS,
+    SEED_FEAT,
+)
+from .export_utils import export_fn
+from .model import FP_IN
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def mlp_flops(n: int, widths: List[int]) -> int:
+    return int(n * sum(2 * widths[i] * widths[i + 1] for i in range(len(widths) - 1)))
+
+
+def conv_flops() -> int:
+    """Segmenter FLOPs (3x3 convs at full/half/quarter resolution)."""
+    c = model.SEG_CHANNELS
+    hw = IMG_SIZE * IMG_SIZE
+    f = 0
+    f += 2 * hw * 9 * 3 * c[0]
+    f += 2 * (hw // 4) * 9 * c[0] * c[1]
+    f += 2 * (hw // 16) * 9 * c[1] * c[2]
+    f += 2 * (hw // 16) * 9 * c[2] * c[3]
+    f += 2 * (hw // 4) * 9 * c[3] * c[1]
+    f += 2 * hw * 9 * (c[1] + c[1]) * c[0]
+    f += 2 * hw * (c[0] + c[0]) * NUM_SEG_CLASSES
+    return int(f)
+
+
+def probe(shape) -> np.ndarray:
+    """Deterministic probe input for cross-language parity fixtures:
+    x[i] = sin(0.1 + 0.001*i) over the flattened buffer (mirrored in
+    rust/tests). See fixtures.json consumers (Table 3 bench)."""
+    n = int(np.prod(shape)) if shape else 1
+    idx = np.arange(n, dtype=np.float64)
+    return np.sin(0.1 + 0.001 * idx).astype(np.float32).reshape(shape)
+
+
+# artifacts that get parity fixtures (suffix match)
+FIXTURE_SUFFIXES = (
+    "seg_fp32",
+    "pointsplit_sa1_half_fp32",
+    "pointsplit_sa1_half_int8",
+    "pointsplit_sa4_full_fp32",
+    "pointsplit_fp_fc_fp32",
+    "pointsplit_vote_fp32",
+    "pointsplit_vote_int8_role",
+    "pointsplit_vote_int8_layer",
+    "pointsplit_prop_fp32",
+    "pointsplit_prop_int8_role",
+    "votenet_sa1_full_fp32",
+    "painted_vote_fp32",
+)
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts: List[Dict] = []
+        self.fixtures: Dict[str, Dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    def add(self, name: str, fn, specs, meta: Dict, flops: int):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        export_fn(fn, specs, path)
+        if name.endswith(FIXTURE_SUFFIXES):
+            ins = [jnp.asarray(probe(s.shape)) for s in specs]
+            out = np.asarray(jax.jit(fn)(*ins)[0])
+            self.fixtures[name] = {
+                "output_shape": list(out.shape),
+                "mean": float(out.mean()),
+                "std": float(out.std()),
+                "l1": float(np.abs(out).mean()),
+                "first": [float(v) for v in out.flatten()[:12]],
+            }
+        bytes_in = int(sum(np.prod(s.shape) for s in specs) * 4)
+        # int8 executables move quantized tensors over the interconnect
+        wire = 1 if "int8" in meta.get("precision", "") else 4
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": [int(x) for x in s.shape], "dtype": "f32"} for s in specs],
+            "flops": int(flops),
+            "bytes_in": bytes_in,
+            "wire_bytes_per_elem": wire,
+            **meta,
+        }
+        self.artifacts.append(entry)
+        print(f"    exported {name} ({time.time() - t0:.1f}s)")
+
+
+def export_detector(
+    ex: Exporter,
+    dataset: str,
+    model_name: str,
+    params,
+    painted: bool,
+    precisions: Dict[str, Optional[model.QConfig]],
+    shapes: List[str],
+):
+    """Export every network-only subgraph of one trained detector.
+
+    precisions: {"fp32": None, "int8_role": qc, ...} — heads get per-scheme
+    artifacts; backbone nets are exported once per unique backbone precision
+    (fp32 + int8) since granularity only affects the head layers.
+    """
+    widths = model.sa_widths(painted)
+    backbone_done = set()
+    for prec, qc in precisions.items():
+        bb_prec = "fp32" if prec == "fp32" else "int8"
+        if bb_prec not in backbone_done:
+            backbone_done.add(bb_prec)
+            for li, (m, _, k, _) in enumerate(SA_CONFIGS):
+                layer = li + 1
+                for shape in shapes:
+                    if shape == "half" and layer == 4:
+                        continue  # pipelines fuse before SA4
+                    b = m if shape == "full" else m // 2
+                    cin = widths[li][0]
+
+                    def fn(groups, layer=layer, qc=qc):
+                        return (model.sa_pointnet_apply(params, layer, groups, qc=qc),)
+
+                    ex.add(
+                        f"{dataset}_{model_name}_sa{layer}_{shape}_{bb_prec}",
+                        fn,
+                        [spec(b, SA_CONFIGS[li][2], cin)],
+                        {
+                            "dataset": dataset,
+                            "model": model_name,
+                            "net": f"sa{layer}_{shape}",
+                            "precision": bb_prec,
+                        },
+                        mlp_flops(b * SA_CONFIGS[li][2], widths[li]),
+                    )
+            ex.add(
+                f"{dataset}_{model_name}_fp_fc_{bb_prec}",
+                lambda f2, qc=qc: (model.fp_fc_apply(params, f2, qc=qc),),
+                [spec(NUM_SEEDS, FP_IN)],
+                {"dataset": dataset, "model": model_name, "net": "fp_fc", "precision": bb_prec},
+                mlp_flops(NUM_SEEDS, [FP_IN, SEED_FEAT]),
+            )
+        # heads per precision/scheme
+        ex.add(
+            f"{dataset}_{model_name}_vote_{prec}",
+            lambda sf, qc=qc: (model.vote_apply(params, sf, qc=qc),),
+            [spec(NUM_SEEDS, SEED_FEAT)],
+            {"dataset": dataset, "model": model_name, "net": "vote", "precision": prec},
+            mlp_flops(NUM_SEEDS, [SEED_FEAT, 128, 128, common.VOTE_CH]),
+        )
+        ex.add(
+            f"{dataset}_{model_name}_prop_{prec}",
+            lambda g, qc=qc: (model.proposal_apply(params, g, qc=qc),),
+            [spec(NUM_PROPOSALS, PROPOSAL_K, 3 + SEED_FEAT)],
+            {"dataset": dataset, "model": model_name, "net": "prop", "precision": prec},
+            mlp_flops(NUM_PROPOSALS * PROPOSAL_K, [3 + SEED_FEAT, 128, 64])
+            + mlp_flops(NUM_PROPOSALS, [64, 64, common.PROPOSAL_CH]),
+        )
+
+
+def calib_inputs(pool: train.ScenePool, painted: bool, n: int = 16):
+    """First n pool scenes as (xyz, feats, fg) calibration inputs."""
+    out = []
+    for i in range(min(n, len(pool.scenes))):
+        s = pool.scenes[i]
+        npts = pool.cfg.num_points
+        sel = np.arange(len(s.points))[:npts]
+        p = s.points[sel]
+        h = p[:, 2:3]
+        if painted:
+            sc = pool.scores[i][sel]
+            feats = np.concatenate([h, sc], 1).astype(np.float32)
+            fg = (1.0 - sc[:, 0] > 0.5).astype(np.float32)
+        else:
+            feats = h.astype(np.float32)
+            fg = np.zeros(len(p), np.float32)
+        out.append((p.astype(np.float32), feats, fg))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny training for smoke runs")
+    ap.add_argument("--datasets", default="synrgbd,synscan")
+    args = ap.parse_args()
+
+    if args.quick:
+        train.SEG_STEPS = 12
+        train.DET_STEPS = 12
+        train.POOL_SIZE = 24
+
+    ex = Exporter(args.out_dir)
+    wdir = os.path.join(args.out_dir, "weights")
+    head_stats_all: Dict = {}
+    quant_meta: Dict = {}
+
+    def cached(name, builder):
+        path = os.path.join(wdir, f"{name}.npz")
+        if os.path.exists(path):
+            print(f"  [cache] {name}")
+            return train.load_params(path)
+        t0 = time.time()
+        p = builder()
+        train.save_params(path, p)
+        print(f"  [trained] {name} ({time.time() - t0:.0f}s)")
+        return p
+
+    t_start = time.time()
+    for ds_name in args.datasets.split(","):
+        cfg = common.DATASETS[ds_name]
+        print(f"== dataset {ds_name} ==")
+        seg_params = cached(f"{ds_name}_seg", lambda: train.train_segmenter(cfg))
+        pool = train.ScenePool(cfg, seg_params, size=train.POOL_SIZE)
+
+        votenet = cached(
+            f"{ds_name}_votenet", lambda: train.train_detector(pool, False, "full", seed=3)
+        )
+        painted = cached(
+            f"{ds_name}_painted", lambda: train.train_detector(pool, True, "full", seed=4)
+        )
+        pointsplit = cached(
+            f"{ds_name}_pointsplit", lambda: train.train_detector(pool, True, "split", seed=5)
+        )
+
+        # ---- calibration + QConfigs
+        ci_plain = calib_inputs(pool, painted=False)
+        ci_paint = calib_inputs(pool, painted=True)
+        calib_vn = quantize.calibrate(votenet, ci_plain, variant="full")
+        calib_pp = quantize.calibrate(painted, ci_paint, variant="full")
+        calib_ps = quantize.calibrate(pointsplit, ci_paint, variant="split")
+
+        head_stats_all[f"{ds_name}_pointsplit"] = quantize.head_stats(pointsplit, calib_ps)
+        head_stats_all[f"{ds_name}_votenet"] = quantize.head_stats(votenet, calib_vn)
+
+        # ---- segmenter artifacts
+        for prec in ("fp32", "int8"):
+            # (activation quantization of the segmenter is folded into its
+            # scores; INT8 matters for the simulator's wire/compute model)
+            ex.add(
+                f"{ds_name}_seg_{prec}",
+                lambda img: (model.segmenter_scores(seg_params, img),),
+                [spec(IMG_SIZE, IMG_SIZE, 3)],
+                {"dataset": ds_name, "model": "seg", "net": "seg", "precision": prec},
+                conv_flops(),
+            )
+
+        # ---- detector artifacts
+        export_detector(
+            ex,
+            ds_name,
+            "votenet",
+            votenet,
+            painted=False,
+            precisions={
+                "fp32": None,
+                "int8_layer": quantize.build_qconfig(votenet, calib_vn, "layer"),
+            },
+            shapes=["full"],
+        )
+        export_detector(
+            ex,
+            ds_name,
+            "painted",
+            painted,
+            painted=True,
+            precisions={
+                "fp32": None,
+                "int8_layer": quantize.build_qconfig(painted, calib_pp, "layer"),
+            },
+            shapes=["full", "half"],
+        )
+        export_detector(
+            ex,
+            ds_name,
+            "pointsplit",
+            pointsplit,
+            painted=True,
+            precisions={
+                "fp32": None,
+                **{
+                    f"int8_{s}": quantize.build_qconfig(pointsplit, calib_ps, s)
+                    for s in quantize.SCHEMES
+                },
+            },
+            shapes=["full", "half"],
+        )
+
+    # ---- attention-head variants (Table 8) on the primary dataset
+    cfg = common.SYNRGBD
+    seg_params = train.load_params(os.path.join(wdir, "synrgbd_seg.npz"))
+    pool = train.ScenePool(cfg, seg_params, size=min(train.POOL_SIZE, 192))
+    attn_steps = max(train.DET_STEPS * 2 // 3, 8)
+    for aname, apainted, avariant in (
+        ("attn_plain", False, "full"),
+        ("attn_painted", True, "full"),
+        ("attn_split", True, "split"),
+    ):
+        pair = cached(
+            f"synrgbd_{aname}",
+            lambda: list(
+                train.train_detector(
+                    pool, apainted, avariant, steps=attn_steps, seed=11, head="attn"
+                )
+            ),
+        )
+        det_p, attn_p = pair[0], pair[1]
+        widths = model.sa_widths(apainted)
+        for li, (m, _, k, _) in enumerate(SA_CONFIGS):
+            for shape in ["full"] + (["half"] if avariant != "full" and li < 3 else []):
+                b = m if shape == "full" else m // 2
+                ex.add(
+                    f"synrgbd_{aname}_sa{li + 1}_{shape}_fp32",
+                    lambda g, layer=li + 1: (model.sa_pointnet_apply(det_p, layer, g),),
+                    [spec(b, SA_CONFIGS[li][2], widths[li][0])],
+                    {
+                        "dataset": "synrgbd",
+                        "model": aname,
+                        "net": f"sa{li + 1}_{shape}",
+                        "precision": "fp32",
+                    },
+                    mlp_flops(b * k, widths[li]),
+                )
+        ex.add(
+            f"synrgbd_{aname}_fp_fc_fp32",
+            lambda f2: (model.fp_fc_apply(det_p, f2),),
+            [spec(NUM_SEEDS, FP_IN)],
+            {"dataset": "synrgbd", "model": aname, "net": "fp_fc", "precision": "fp32"},
+            mlp_flops(NUM_SEEDS, [FP_IN, SEED_FEAT]),
+        )
+        ex.add(
+            f"synrgbd_{aname}_attn_proj_fp32",
+            lambda sf: (model.attn_proj(attn_p, sf),),
+            [spec(NUM_SEEDS, SEED_FEAT)],
+            {"dataset": "synrgbd", "model": aname, "net": "attn_proj", "precision": "fp32"},
+            mlp_flops(NUM_SEEDS, [SEED_FEAT, model.ATTN_DIM]),
+        )
+        ex.add(
+            f"synrgbd_{aname}_attn_decode_fp32",
+            lambda cf, af: (model.attn_apply(attn_p, cf, af),),
+            [spec(NUM_PROPOSALS, model.ATTN_DIM), spec(NUM_SEEDS, model.ATTN_DIM)],
+            {"dataset": "synrgbd", "model": aname, "net": "attn_decode", "precision": "fp32"},
+            # rough: per layer self+cross attention + FF over 32 candidates
+            model.ATTN_LAYERS
+            * (
+                mlp_flops(NUM_PROPOSALS, [model.ATTN_DIM] * 5)
+                + 2 * 2 * NUM_PROPOSALS * NUM_SEEDS * model.ATTN_DIM
+                + mlp_flops(NUM_PROPOSALS, [model.ATTN_DIM, 2 * model.ATTN_DIM, model.ATTN_DIM])
+            )
+            + mlp_flops(NUM_PROPOSALS, [model.ATTN_DIM, common.PROPOSAL_CH]),
+        )
+
+    # ---- manifest
+    quant_meta = {s: quantize.quant_param_count(s) for s in quantize.SCHEMES}
+    (p_orig, m_orig), (p_ps, m_ps) = model.fp_layer_cost(paper_scale=False)
+    (pp_orig, mm_orig), (pp_ps, mm_ps) = model.fp_layer_cost(paper_scale=True)
+    manifest = {
+        "classes": common.CLASSES,
+        "mean_sizes": [list(s) for s in common.MEAN_SIZES],
+        "num_heading_bin": common.NUM_HEADING_BIN,
+        "num_seg_classes": NUM_SEG_CLASSES,
+        "img_size": IMG_SIZE,
+        "sa_configs": [
+            {"m": m, "radius": r, "k": k, "mlp": list(mlp)} for m, r, k, mlp in SA_CONFIGS
+        ],
+        "num_seeds": NUM_SEEDS,
+        "num_proposals": NUM_PROPOSALS,
+        "proposal_radius": common.PROPOSAL_RADIUS,
+        "proposal_k": PROPOSAL_K,
+        "seed_feat": SEED_FEAT,
+        "fp_in": FP_IN,
+        "feat_dim_painted": FEAT_DIM,
+        "feat_dim_plain": FEAT_DIM_PLAIN,
+        "head_layout": {
+            "center": list(common.SLICE_CENTER),
+            "objectness": list(common.SLICE_OBJECTNESS),
+            "heading_cls": list(common.SLICE_HEADING_CLS),
+            "heading_reg": list(common.SLICE_HEADING_REG),
+            "size_cls": list(common.SLICE_SIZE_CLS),
+            "size_reg": list(common.SLICE_SIZE_REG),
+            "sem_cls": list(common.SLICE_SEM_CLS),
+        },
+        "role_groups": {
+            "vote": common.vote_role_groups(),
+            "prop": common.proposal_role_groups(),
+        },
+        "quant_param_count": quant_meta,
+        "fp_layer_cost": {
+            "mini": {"orig": [p_orig, m_orig], "pointsplit": [p_ps, m_ps]},
+            "paper_scale": {"orig": [pp_orig, mm_orig], "pointsplit": [pp_ps, mm_ps]},
+        },
+        "datasets": {
+            name: {
+                "num_points": c.num_points,
+                "room_min": c.room_min,
+                "room_max": c.room_max,
+                "min_objects": c.min_objects,
+                "max_objects": c.max_objects,
+                "single_view": c.single_view,
+                "depth_noise": c.depth_noise,
+                "seg_noise": c.seg_noise,
+            }
+            for name, c in common.DATASETS.items()
+        },
+        "default_w0": common.DEFAULT_W0,
+        "default_bias_layers": common.DEFAULT_BIAS_LAYERS,
+        "artifacts": ex.artifacts,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out_dir, "head_stats.json"), "w") as f:
+        json.dump(head_stats_all, f)
+    with open(os.path.join(args.out_dir, "fixtures.json"), "w") as f:
+        json.dump(ex.fixtures, f, indent=1)
+    print(f"fixtures: {len(ex.fixtures)}")
+    print(f"done: {len(ex.artifacts)} artifacts in {time.time() - t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

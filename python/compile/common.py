@@ -1,0 +1,168 @@
+"""Shared constants and configuration for the PointSplit reproduction.
+
+Everything here is mirrored on the Rust side via ``artifacts/manifest.json``:
+class names, canonical mean sizes, head channel layout, role groups, and the
+per-dataset generation parameters. Keep this file the single source of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+# ---------------------------------------------------------------------------
+# Classes (mirrors the 10 SUN RGB-D evaluation categories)
+# ---------------------------------------------------------------------------
+
+CLASSES: List[str] = [
+    "bed",
+    "table",
+    "sofa",
+    "chair",
+    "toilet",
+    "desk",
+    "dresser",
+    "nightstand",
+    "bookshelf",
+    "bathtub",
+]
+NUM_CLASS = len(CLASSES)
+
+# Background + per-class channels produced by the 2D segmenter and appended to
+# each painted point (PointPainting appends the full score vector).
+NUM_SEG_CLASSES = NUM_CLASS + 1  # index 0 == background
+
+NUM_HEADING_BIN = 12
+
+# Canonical mean sizes (w, d, h) per class, the "size clusters" of VoteNet.
+# These are the midpoints of the procedural generator ranges in scene.py; the
+# Rust generator uses the same table (exported in the manifest).
+MEAN_SIZES: List[Tuple[float, float, float]] = [
+    (1.85, 1.65, 0.50),  # bed
+    (1.40, 0.85, 0.72),  # table
+    (1.85, 0.90, 0.75),  # sofa
+    (0.48, 0.48, 0.85),  # chair
+    (0.40, 0.55, 0.75),  # toilet
+    (1.30, 0.70, 0.74),  # desk
+    (1.00, 0.50, 0.95),  # dresser
+    (0.50, 0.50, 0.60),  # nightstand
+    (0.80, 0.30, 1.75),  # bookshelf
+    (1.60, 0.80, 0.55),  # bathtub
+]
+
+# ---------------------------------------------------------------------------
+# Proposal-head channel layout (paper Table 2) — 79 channels for 10 classes.
+# ---------------------------------------------------------------------------
+# [0:3)    center offset (xyz)                      -> role group 1
+# [3:5)    objectness (2)                           -> role group 2
+# [5:17)   heading-bin classification (12)          -> role group 2
+# [17:29)  heading-bin regression (12)              -> role group 3
+# [29:39)  size classification (10)                 -> role group 2
+# [39:69)  size regression (10*3)                   -> role group 3
+# [69:79)  semantic classification (10)             -> role group 2
+
+PROPOSAL_CH = 3 + 2 + NUM_HEADING_BIN + NUM_HEADING_BIN + NUM_CLASS + 3 * NUM_CLASS + NUM_CLASS
+
+SLICE_CENTER = (0, 3)
+SLICE_OBJECTNESS = (3, 5)
+SLICE_HEADING_CLS = (5, 5 + NUM_HEADING_BIN)
+SLICE_HEADING_REG = (17, 17 + NUM_HEADING_BIN)
+SLICE_SIZE_CLS = (29, 29 + NUM_CLASS)
+SLICE_SIZE_REG = (39, 39 + 3 * NUM_CLASS)
+SLICE_SEM_CLS = (69, 69 + NUM_CLASS)
+
+
+def proposal_role_groups() -> List[List[int]]:
+    """Role groups of the proposal head (paper Table 2).
+
+    Group1: xyz regression; Group2: all classification-style channels;
+    Group3: all box-regression channels.
+    """
+    g1 = list(range(*SLICE_CENTER))
+    g2 = (
+        list(range(*SLICE_OBJECTNESS))
+        + list(range(*SLICE_HEADING_CLS))
+        + list(range(*SLICE_SIZE_CLS))
+        + list(range(*SLICE_SEM_CLS))
+    )
+    g3 = list(range(*SLICE_HEADING_REG)) + list(range(*SLICE_SIZE_REG))
+    assert sorted(g1 + g2 + g3) == list(range(PROPOSAL_CH))
+    return [g1, g2, g3]
+
+
+VOTE_CH = 3 + 128  # xyz offset + feature residual
+
+
+def vote_role_groups() -> List[List[int]]:
+    """Role groups of the voting head: xyz offsets vs feature residuals."""
+    return [list(range(3)), list(range(3, VOTE_CH))]
+
+
+# ---------------------------------------------------------------------------
+# Model architecture (VoteNet-mini, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+FEAT_DIM = 1 + NUM_SEG_CLASSES  # height + painted seg scores (painted variants)
+FEAT_DIM_PLAIN = 1  # height only (VoteNet variant)
+
+# (num_centroids, radius, num_neighbors, mlp widths)
+SA_CONFIGS = [
+    (256, 0.3, 32, (32, 32, 64)),
+    (128, 0.6, 16, (64, 64, 128)),
+    (64, 1.2, 8, (96, 96, 128)),
+    (32, 2.4, 8, (128, 128, 128)),
+]
+
+SEED_FEAT = 128  # seed feature width after FP
+NUM_SEEDS = 128  # seeds live at the SA2 level
+NUM_PROPOSALS = 32
+PROPOSAL_RADIUS = 0.6
+PROPOSAL_K = 8
+
+IMG_SIZE = 64  # 2D render resolution (square)
+
+# Default biased-FPS settings (paper Table 9/10 best config)
+DEFAULT_W0 = 2.0
+DEFAULT_BIAS_LAYERS = 2  # biased FPS on SA1 and SA2 of the bias pipeline
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetConfig:
+    """Procedural dataset parameters (mirrored by rust/src/data)."""
+
+    name: str
+    num_points: int
+    room_min: float  # room side length range
+    room_max: float
+    min_objects: int
+    max_objects: int
+    single_view: bool  # SynRGBD: single-shot visibility; SynScan: full scan
+    depth_noise: float
+    seg_noise: float  # label corruption prob in the rendered image
+
+
+SYNRGBD = DatasetConfig(
+    name="synrgbd",
+    num_points=2048,
+    room_min=3.0,
+    room_max=4.5,
+    min_objects=3,
+    max_objects=7,
+    single_view=True,
+    depth_noise=0.008,
+    seg_noise=0.05,
+)
+
+SYNSCAN = DatasetConfig(
+    name="synscan",
+    num_points=4096,
+    room_min=5.0,
+    room_max=8.0,
+    min_objects=6,
+    max_objects=12,
+    single_view=False,
+    depth_noise=0.004,
+    seg_noise=0.03,
+)
+
+DATASETS = {d.name: d for d in (SYNRGBD, SYNSCAN)}

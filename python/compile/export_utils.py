@@ -1,0 +1,39 @@
+"""HLO-text export helpers (the AOT bridge to the Rust runtime).
+
+HLO *text* is the interchange format — NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The
+text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to XLA HLO text with a tuple root.
+
+    ``print_large_constants=True`` is ESSENTIAL: the default HLO printer
+    elides big literals as ``constant({...})`` and the xla_extension 0.5.1
+    text parser silently zero-fills them — every baked weight would read as
+    zero on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def export_fn(fn, specs, path: str) -> str:
+    """jit-lower ``fn`` at the given ShapeDtypeStructs and write HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text

@@ -1,0 +1,92 @@
+"""Cross-language parity fixtures.
+
+For a subset of exported artifacts, runs the jax reference at deterministic
+probe inputs and records output summaries in ``artifacts/fixtures.json``.
+The Rust integration tests (and the Table 3 implementation-parity bench)
+execute the same artifacts through PJRT with identical inputs and assert the
+numbers match — the analog of the paper's "our TF implementation matches the
+original PyTorch VoteNet" claim (Table 3).
+
+Probe inputs use an index formula both sides implement independently:
+``x[i] = sin(0.1 + 0.001 * i)`` over the flattened buffer, cast to f32.
+
+Usage: ``cd python && python -m compile.fixtures --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def probe(shape) -> np.ndarray:
+    n = int(np.prod(shape))
+    idx = np.arange(n, dtype=np.float64)
+    return np.sin(0.1 + 0.001 * idx).astype(np.float32).reshape(shape)
+
+
+# artifact name suffixes to fixture (dataset-prefixed below)
+TARGETS = [
+    "seg_fp32",
+    "pointsplit_sa1_half_fp32",
+    "pointsplit_sa1_half_int8",
+    "pointsplit_sa4_full_fp32",
+    "pointsplit_fp_fc_fp32",
+    "pointsplit_vote_fp32",
+    "pointsplit_vote_int8_role",
+    "pointsplit_vote_int8_layer",
+    "pointsplit_prop_fp32",
+    "pointsplit_prop_int8_role",
+    "votenet_sa1_full_fp32",
+    "painted_vote_fp32",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    from jax._src.lib import xla_client as xc
+
+    manifest = json.load(open(os.path.join(args.out_dir, "manifest.json")))
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    fixtures = {}
+    for ds in ("synrgbd", "synscan"):
+        for suffix in TARGETS:
+            name = f"{ds}_{suffix}"
+            if name not in arts:
+                continue
+            meta = arts[name]
+            inputs = [probe(i["shape"]) for i in meta["inputs"]]
+            # execute the artifact's own HLO text via the python XLA client —
+            # the exact program the rust runtime compiles
+            with open(os.path.join(args.out_dir, meta["file"])) as f:
+                hlo_text = f.read()
+            comp = xc.XlaComputation(
+                xc._xla.hlo_module_from_text(hlo_text).as_serialized_hlo_module_proto()
+            )
+            client = jax.devices()[0].client
+            exe = client.compile(comp)
+            outs = exe.execute([client.buffer_from_pyval(x) for x in inputs])
+            out = np.asarray(outs[0])
+            fixtures[name] = {
+                "output_shape": list(out.shape),
+                "mean": float(out.mean()),
+                "std": float(out.std()),
+                "first": [float(v) for v in out.flatten()[:12]],
+                "l1": float(np.abs(out).mean()),
+            }
+            print(f"fixture {name}: shape {out.shape} mean {out.mean():.5f}")
+    with open(os.path.join(args.out_dir, "fixtures.json"), "w") as f:
+        json.dump(fixtures, f, indent=1)
+    print(f"wrote {len(fixtures)} fixtures")
+
+
+if __name__ == "__main__":
+    main()

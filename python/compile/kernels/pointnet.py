@@ -1,0 +1,108 @@
+"""Pallas kernel: fused shared-MLP + max-pool (the PointNet core).
+
+This is the paper's NPU hot-spot. On the EdgeTPU the shared MLP is a chain of
+1x1 convolutions over grouped points followed by a max-pool across each ball.
+The TPU adaptation (DESIGN.md §Hardware-Adaptation): grid over ball blocks;
+each program stages a ``(BB*K, C_in)`` tile in VMEM, runs the whole MLP as
+chained MXU matmuls with the weight panels resident in VMEM, max-reduces over
+the K axis in-register, and writes a ``(BB, C_out)`` tile — i.e. one
+HBM→VMEM→HBM pass for the entire fused layer instead of one per conv.
+
+Run with ``interpret=True`` everywhere: the CPU PJRT client cannot execute
+Mosaic custom calls; real-TPU perf is estimated from the VMEM footprint / MXU
+utilization (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of balls processed per program instance. 32 balls x 32
+# neighbors x 64 ch fp32 = 256 KiB of VMEM for the widest SA1 tile — well
+# under the ~16 MiB VMEM budget, leaving room for double buffering.
+DEFAULT_BLOCK_B = 32
+
+
+def _pointnet_kernel(x_ref, *refs, num_layers: int):
+    """One grid step: x_ref (BB, K, C_in) -> o_ref (BB, C_out)."""
+    o_ref = refs[-1]
+    wb = refs[:-1]  # alternating W, b
+    bb, k, cin = x_ref.shape
+    x = x_ref[...].reshape(bb * k, cin)
+    for layer in range(num_layers):
+        w = wb[2 * layer][...]
+        b = wb[2 * layer + 1][...]
+        # MXU matmul; keep accumulation in f32.
+        x = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+        x = jnp.maximum(x, 0.0)
+    cout = x.shape[-1]
+    o_ref[...] = jnp.max(x.reshape(bb, k, cout), axis=1)
+
+
+def pointnet_pallas(
+    groups: jnp.ndarray,
+    weights: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jnp.ndarray:
+    """Fused PointNet over grouped points.
+
+    groups:  (B, K, C_in); B must be a multiple of ``block_b`` (callers pad).
+    weights: [(W1, b1), (W2, b2), ...] of the shared MLP.
+    returns: (B, C_out).
+    """
+    b, k, cin = groups.shape
+    if b % block_b != 0:
+        block_b = next(bb for bb in range(min(block_b, b), 0, -1) if b % bb == 0)
+    cout = weights[-1][0].shape[1]
+    num_layers = len(weights)
+
+    in_specs = [pl.BlockSpec((block_b, k, cin), lambda i: (i, 0, 0))]
+    flat_wb = []
+    for w, bias in weights:
+        # weight panels are small; keep them whole in VMEM for every program
+        in_specs.append(pl.BlockSpec(w.shape, lambda i, nd=w.ndim: (0,) * nd))
+        in_specs.append(pl.BlockSpec(bias.shape, lambda i, nd=bias.ndim: (0,) * nd))
+        flat_wb += [w, bias]
+
+    return pl.pallas_call(
+        functools.partial(_pointnet_kernel, num_layers=num_layers),
+        grid=(b // block_b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, cout), jnp.float32),
+        interpret=True,
+    )(groups, *flat_wb)
+
+
+def vmem_footprint_bytes(
+    b: int, k: int, widths: Sequence[int], block_b: int = DEFAULT_BLOCK_B
+) -> int:
+    """Estimated per-program VMEM footprint of :func:`pointnet_pallas`.
+
+    widths = (C_in, C1, ..., C_out). Used by the §Perf structural analysis:
+    input tile + the two widest chained activations + all weight panels.
+    """
+    del b
+    acts = sorted((block_b * k * c for c in widths), reverse=True)
+    act_bytes = sum(acts[:2]) * 4  # current + next activation, f32
+    w_bytes = sum(widths[i] * widths[i + 1] + widths[i + 1] for i in range(len(widths) - 1)) * 4
+    return act_bytes + w_bytes
+
+
+def mxu_utilization_estimate(k: int, widths: Sequence[int]) -> float:
+    """Fraction of 128x128 MXU lanes busy for the chained matmuls.
+
+    Each matmul is (BB*K, C_l) x (C_l, C_{l+1}); the systolic array is padded
+    to 128 on both contraction and output dims, so utilization is the mean of
+    (C_l/128 * C_{l+1}/128) clipped at 1 per layer.
+    """
+    del k
+    utils = []
+    for i in range(len(widths) - 1):
+        utils.append(min(widths[i] / 128.0, 1.0) * min(widths[i + 1] / 128.0, 1.0))
+    return float(sum(utils) / len(utils))

@@ -1,0 +1,64 @@
+"""Pallas kernel: group-wise INT8 quantize-dequantize head layer.
+
+The paper's role-based group-wise quantization (§4.3) is a *kernel-level*
+concern on the EdgeTPU: the final voting/proposal layers execute with int8
+weights and requantized int8 outputs whose scales are chosen per channel
+group. This kernel fuses (weight QDQ) matmul + bias + (activation QDQ) in one
+VMEM pass. Any granularity — layer / even-group / channel / role-based — is
+expressed through the per-channel scale vectors (a group's scale repeated
+across its member channels), so the kernel is granularity-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 32
+
+
+def _qmlp_kernel(x_ref, w_ref, b_ref, ws_ref, as_ref, az_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    ws = ws_ref[...]
+    # weight QDQ (symmetric, per output channel)
+    wq = jnp.clip(jnp.round(w / ws[None, :]), -127.0, 127.0) * ws[None, :]
+    y = jnp.dot(x, wq, preferred_element_type=jnp.float32) + b_ref[...]
+    # activation QDQ (affine, per output channel)
+    sa = as_ref[...]
+    za = az_ref[...]
+    q = jnp.clip(jnp.round(y / sa + za), -128.0, 127.0)
+    o_ref[...] = (q - za) * sa
+
+
+def qmlp_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    a_scale: jnp.ndarray,
+    a_zero: jnp.ndarray,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jnp.ndarray:
+    """Quantized head layer. x: (N, C_in) -> (N, C_out)."""
+    n, cin = x.shape
+    cout = w.shape[1]
+    if n % block_n != 0:
+        block_n = next(bb for bb in range(min(block_n, n), 0, -1) if n % bb == 0)
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, nd=a.ndim: (0,) * nd)
+    return pl.pallas_call(
+        _qmlp_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, cin), lambda i: (i, 0)),
+            full(w),
+            full(b),
+            full(w_scale),
+            full(a_scale),
+            full(a_zero),
+        ],
+        out_specs=pl.BlockSpec((block_n, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cout), jnp.float32),
+        interpret=True,
+    )(x, w, b, w_scale, a_scale, a_zero)

@@ -1,0 +1,73 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+These are the ground truth for pytest (kernel vs ref allclose) and are also
+used by the L2 model when ``use_pallas=False`` — keeping one numerical
+definition of each op.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pointnet_ref(groups: jnp.ndarray, weights) -> jnp.ndarray:
+    """Shared-MLP + max-pool PointNet core.
+
+    groups:  (B, K, C_in) grouped point features (B balls, K neighbors)
+    weights: sequence of (W, b) with W: (C_l, C_{l+1})
+    returns: (B, C_out) = max over K of MLP(point)
+    """
+    x = groups
+    for w, b in weights:
+        x = jnp.maximum(jnp.dot(x, w) + b, 0.0)
+    return jnp.max(x, axis=1)
+
+
+def mlp_ref(x: jnp.ndarray, weights, relu_last: bool = True) -> jnp.ndarray:
+    """Plain per-point shared MLP (no pooling). x: (N, C_in)."""
+    n = len(weights)
+    for i, (w, b) in enumerate(weights):
+        x = jnp.dot(x, w) + b
+        if relu_last or i + 1 < n:
+            x = jnp.maximum(x, 0.0)
+    return x
+
+
+def qdq_weight(w: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric INT8 quantize-dequantize of a weight matrix.
+
+    scale: per-output-channel (C_out,) scale vector (any granularity is
+    encoded by repeating a group's scale across its channels).
+    """
+    q = jnp.clip(jnp.round(w / scale[None, :]), -127, 127)
+    return q * scale[None, :]
+
+
+def qdq_act(x: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray) -> jnp.ndarray:
+    """Affine INT8 quantize-dequantize of activations along the last axis."""
+    q = jnp.clip(jnp.round(x / scale + zero), -128, 127)
+    return (q - zero) * scale
+
+
+def qmlp_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    a_scale: jnp.ndarray,
+    a_zero: jnp.ndarray,
+) -> jnp.ndarray:
+    """Quantized head layer: QDQ(weights) matmul + bias, QDQ(output).
+
+    This models a fully-integer EdgeTPU layer: the achievable numerics are
+    exactly those of (dequantized int8 weights, int8-requantized outputs).
+    """
+    wq = qdq_weight(w, w_scale)
+    y = jnp.dot(x, wq) + b
+    return qdq_act(y, a_scale, a_zero)
+
+
+def pairwise_dist2_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distances. a: (N, 3), b: (M, 3) -> (N, M)."""
+    d = a[:, None, :] - b[None, :, :]
+    return jnp.sum(d * d, axis=-1)

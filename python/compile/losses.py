@@ -1,0 +1,152 @@
+"""VoteNet losses (per-scene, jax) for the mini detector.
+
+Follows the original VoteNet loss decomposition: vote regression, objectness,
+center (both-direction chamfer), heading bin cls+reg, size cls+reg, semantic
+classification. GT comes padded to MAX_OBJ boxes with a validity mask.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import NUM_CLASS, NUM_HEADING_BIN
+
+MAX_OBJ = 14
+NEAR_THRESH = 0.3
+FAR_THRESH = 0.6
+
+# loss weights (VoteNet defaults, box-loss style)
+W_VOTE = 1.0
+W_OBJ = 0.5
+W_CENTER = 1.0
+W_HEAD_CLS = 0.1
+W_HEAD_REG = 1.0
+W_SIZE_CLS = 0.1
+W_SIZE_REG = 1.0
+W_SEM = 0.1
+
+
+def huber(x, delta: float = 1.0):
+    a = jnp.abs(x)
+    return jnp.where(a < delta, 0.5 * a * a, delta * (a - 0.5 * delta))
+
+
+def _point_in_box(points, centers, sizes, headings, slack: float = 0.1):
+    """points (N,3) vs boxes (K,...) -> inside (N,K) bool."""
+    d = points[:, None, :] - centers[None, :, :]  # (N,K,3)
+    c, s = jnp.cos(-headings), jnp.sin(-headings)
+    lx = d[..., 0] * c[None, :] - d[..., 1] * s[None, :]
+    ly = d[..., 0] * s[None, :] + d[..., 1] * c[None, :]
+    return (
+        (jnp.abs(lx) < sizes[None, :, 0] / 2 + slack)
+        & (jnp.abs(ly) < sizes[None, :, 1] / 2 + slack)
+        & (jnp.abs(d[..., 2]) < sizes[None, :, 2] / 2 + slack)
+    )
+
+
+def scene_loss(end_points: Dict, gt: Dict, mean_sizes: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Per-scene loss. gt: centers (K,3), sizes (K,3), headings (K,),
+    classes (K,) int32, mask (K,) float. Returns dict with 'total' + parts."""
+    centers, sizes = gt["centers"], gt["sizes"]
+    headings, classes, mask = gt["headings"], gt["classes"], gt["mask"]
+    big = jnp.float32(1e6)
+
+    # --- vote loss: seeds inside a GT box must vote for its center
+    seed_xyz = end_points["seed_xyz"]
+    vote_xyz = end_points["vote_xyz"]
+    inside = _point_in_box(seed_xyz, centers, sizes, headings) & (mask[None, :] > 0.5)
+    d2_seed = jnp.sum((seed_xyz[:, None, :] - centers[None, :, :]) ** 2, -1)
+    d2_seed = jnp.where(inside, d2_seed, big)
+    owner = jnp.argmin(d2_seed, axis=1)
+    has_owner = jnp.any(inside, axis=1).astype(jnp.float32)
+    target = centers[owner]
+    vote_loss = jnp.sum(
+        huber(vote_xyz - target).sum(-1) * has_owner
+    ) / jnp.maximum(jnp.sum(has_owner), 1.0)
+
+    # --- objectness: proposals near a GT center are positive
+    cl_xyz = end_points["cluster_xyz"]
+    d2 = jnp.sum((cl_xyz[:, None, :] - centers[None, :, :]) ** 2, -1)
+    d2 = jnp.where(mask[None, :] > 0.5, d2, big)
+    nearest = jnp.argmin(d2, axis=1)
+    ndist = jnp.sqrt(jnp.min(d2, axis=1))
+    pos = (ndist < NEAR_THRESH).astype(jnp.float32)
+    neg = (ndist > FAR_THRESH).astype(jnp.float32)
+    prop = end_points["proposal"]
+    obj_logits = prop[:, slice(*common.SLICE_OBJECTNESS)]
+    logp = jax.nn.log_softmax(obj_logits, axis=-1)
+    obj_loss = -(pos * logp[:, 1] + neg * logp[:, 0])
+    obj_loss = jnp.sum(obj_loss) / jnp.maximum(jnp.sum(pos + neg), 1.0)
+
+    npos = jnp.maximum(jnp.sum(pos), 1.0)
+
+    # --- center: predicted centers of positives -> their GT, and every GT ->
+    # nearest prediction (coverage term)
+    pred_center = cl_xyz + prop[:, slice(*common.SLICE_CENTER)]
+    tgt_center = centers[nearest]
+    center_loss = jnp.sum(huber(pred_center - tgt_center).sum(-1) * pos) / npos
+    d2_cov = jnp.sum((centers[:, None, :] - pred_center[None, :, :]) ** 2, -1)
+    cov = jnp.sqrt(jnp.min(d2_cov, axis=1) + 1e-8)
+    center_loss = center_loss + jnp.sum(huber(cov) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # --- heading
+    gt_heading = headings[nearest] % (2 * jnp.pi)
+    per = 2 * jnp.pi / NUM_HEADING_BIN
+    hbin = jnp.floor(gt_heading / per).astype(jnp.int32) % NUM_HEADING_BIN
+    hres = (gt_heading - (hbin * per + per / 2)) / (per / 2)  # in [-1, 1]
+    h_logits = prop[:, slice(*common.SLICE_HEADING_CLS)]
+    h_logp = jax.nn.log_softmax(h_logits, axis=-1)
+    head_cls_loss = jnp.sum(-jnp.take_along_axis(h_logp, hbin[:, None], 1)[:, 0] * pos) / npos
+    h_reg = prop[:, slice(*common.SLICE_HEADING_REG)]
+    h_reg_sel = jnp.take_along_axis(h_reg, hbin[:, None], 1)[:, 0]
+    head_reg_loss = jnp.sum(huber(h_reg_sel - hres) * pos) / npos
+
+    # --- size (class-anchored, VoteNet style)
+    gt_cls = classes[nearest]
+    s_logits = prop[:, slice(*common.SLICE_SIZE_CLS)]
+    s_logp = jax.nn.log_softmax(s_logits, axis=-1)
+    size_cls_loss = jnp.sum(-jnp.take_along_axis(s_logp, gt_cls[:, None], 1)[:, 0] * pos) / npos
+    s_reg = prop[:, slice(*common.SLICE_SIZE_REG)].reshape(-1, NUM_CLASS, 3)
+    s_reg_sel = jnp.take_along_axis(s_reg, gt_cls[:, None, None].repeat(3, -1), 1)[:, 0]
+    tgt_res = sizes[nearest] / mean_sizes[gt_cls] - 1.0
+    size_reg_loss = jnp.sum(huber(s_reg_sel - tgt_res).sum(-1) * pos) / npos
+
+    # --- semantic class
+    sem_logits = prop[:, slice(*common.SLICE_SEM_CLS)]
+    sem_logp = jax.nn.log_softmax(sem_logits, axis=-1)
+    sem_loss = jnp.sum(-jnp.take_along_axis(sem_logp, gt_cls[:, None], 1)[:, 0] * pos) / npos
+
+    total = (
+        W_VOTE * vote_loss
+        + W_OBJ * obj_loss
+        + W_CENTER * center_loss
+        + W_HEAD_CLS * head_cls_loss
+        + W_HEAD_REG * head_reg_loss
+        + W_SIZE_CLS * size_cls_loss
+        + W_SIZE_REG * size_reg_loss
+        + W_SEM * sem_loss
+    )
+    return {
+        "total": total,
+        "vote": vote_loss,
+        "objectness": obj_loss,
+        "center": center_loss,
+        "heading_cls": head_cls_loss,
+        "heading_reg": head_reg_loss,
+        "size_cls": size_cls_loss,
+        "size_reg": size_reg_loss,
+        "sem": sem_loss,
+    }
+
+
+def seg_loss(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Pixel cross-entropy with 3x weight on foreground pixels (the class
+    imbalance trick standing in for the paper's oversampling of rare classes)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, mask[..., None], axis=-1)[..., 0]
+    w = jnp.where(mask > 0, 3.0, 1.0)
+    return -jnp.sum(ll * w) / jnp.sum(w)

@@ -1,0 +1,597 @@
+"""L2: VoteNet-mini + PointSplit variants + segmenter + attention head, in JAX.
+
+Everything here is build-time only; the request path executes the HLO that
+``aot.py`` lowers from these functions. The module provides:
+
+- a small encoder-decoder **segmenter** (Deeplabv3+ stand-in, DESIGN.md §2),
+- the **VoteNet-mini** detector: 4 SA layers (PointNet++), simplified FP
+  (paper Table 1), voting and proposal modules with the paper's role-grouped
+  head channels (Table 2),
+- the three sampling **variants**: ``full`` (VoteNet / PointPainting),
+  ``randsplit`` (ablation) and ``split`` (PointSplit: SA-normal + SA-bias
+  with biased FPS, fused before SA4, Fig. 5),
+- a **GroupFree3D-mini** attention head (Table 8),
+- network-only subgraphs (`sa_pointnet_apply`, `vote_apply`, ...) that are
+  exported as individual HLO artifacts — these receive *grouped* tensors so
+  that all point manipulation stays outside (on the "GPU"/Rust side).
+
+Parameters are nested dicts of jnp arrays; initialization is deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common, sampling
+from .common import (
+    DEFAULT_BIAS_LAYERS,
+    DEFAULT_W0,
+    FEAT_DIM,
+    FEAT_DIM_PLAIN,
+    IMG_SIZE,
+    NUM_CLASS,
+    NUM_HEADING_BIN,
+    NUM_PROPOSALS,
+    NUM_SEEDS,
+    NUM_SEG_CLASSES,
+    PROPOSAL_CH,
+    PROPOSAL_K,
+    PROPOSAL_RADIUS,
+    SA_CONFIGS,
+    SEED_FEAT,
+    VOTE_CH,
+)
+from .kernels.pointnet import pointnet_pallas
+from .kernels.qmlp import qmlp_pallas
+from .kernels.ref import mlp_ref, pointnet_ref, qmlp_ref
+
+Params = Dict[str, object]
+
+
+# ---------------------------------------------------------------------------
+# Initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, cin: int, cout: int, scale: float = 1.0):
+    k1, _ = jax.random.split(key)
+    w = jax.random.normal(k1, (cin, cout), jnp.float32) * scale * jnp.sqrt(2.0 / cin)
+    return w, jnp.zeros((cout,), jnp.float32)
+
+
+def _mlp_init(key, widths: Sequence[int]) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    keys = jax.random.split(key, len(widths) - 1)
+    return [_dense_init(k, widths[i], widths[i + 1]) for i, k in enumerate(keys)]
+
+
+def _conv_init(key, cin: int, cout: int, ksize: int = 3):
+    k1, _ = jax.random.split(key)
+    fan_in = cin * ksize * ksize
+    w = jax.random.normal(k1, (ksize, ksize, cin, cout), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+    return w, jnp.zeros((cout,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Segmenter (2D semantic segmentation, Deeplabv3+ stand-in)
+# ---------------------------------------------------------------------------
+
+SEG_CHANNELS = [16, 32, 48, 64]
+
+
+def segmenter_init(key) -> Params:
+    ks = jax.random.split(key, 8)
+    return {
+        "enc1": _conv_init(ks[0], 3, SEG_CHANNELS[0]),
+        "enc2": _conv_init(ks[1], SEG_CHANNELS[0], SEG_CHANNELS[1]),  # stride 2
+        "enc3": _conv_init(ks[2], SEG_CHANNELS[1], SEG_CHANNELS[2]),  # stride 2
+        "enc4": _conv_init(ks[3], SEG_CHANNELS[2], SEG_CHANNELS[3]),
+        "dec1": _conv_init(ks[4], SEG_CHANNELS[3], SEG_CHANNELS[1]),
+        "dec2": _conv_init(ks[5], SEG_CHANNELS[1] + SEG_CHANNELS[1], SEG_CHANNELS[0]),
+        "out": _conv_init(ks[6], SEG_CHANNELS[0] + SEG_CHANNELS[0], NUM_SEG_CLASSES, 1),
+    }
+
+
+def _conv2d(x, wb, stride: int = 1):
+    w, b = wb
+    y = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return y + b
+
+
+def _resize2x(x):
+    return jnp.repeat(jnp.repeat(x, 2, axis=0), 2, axis=1)
+
+
+def segmenter_forward(params: Params, img: jnp.ndarray) -> jnp.ndarray:
+    """img (H, W, 3) -> logits (H, W, NUM_SEG_CLASSES)."""
+    e1 = jax.nn.relu(_conv2d(img, params["enc1"]))  # 64
+    e2 = jax.nn.relu(_conv2d(e1, params["enc2"], stride=2))  # 32
+    e3 = jax.nn.relu(_conv2d(e2, params["enc3"], stride=2))  # 16
+    e4 = jax.nn.relu(_conv2d(e3, params["enc4"]))  # 16
+    d1 = jax.nn.relu(_conv2d(_resize2x(e4), params["dec1"]))  # 32
+    d1 = jnp.concatenate([d1, e2], axis=-1)  # skip connection
+    d2 = jax.nn.relu(_conv2d(_resize2x(d1), params["dec2"]))  # 64
+    d2 = jnp.concatenate([d2, e1], axis=-1)
+    return _conv2d(d2, params["out"])
+
+
+def segmenter_scores(params: Params, img: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.softmax(segmenter_forward(params, img), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Detector parameters
+# ---------------------------------------------------------------------------
+
+
+def sa_widths(painted: bool) -> List[List[int]]:
+    """Per-SA-layer MLP widths including the input width (rel-xyz + feats)."""
+    feat_in = FEAT_DIM if painted else FEAT_DIM_PLAIN
+    widths = []
+    prev = feat_in
+    for _, _, _, mlp in SA_CONFIGS:
+        widths.append([3 + prev] + list(mlp))
+        prev = mlp[-1]
+    return widths
+
+
+FP_IN = SA_CONFIGS[1][3][-1] + (SA_CONFIGS[2][3][-1] + SA_CONFIGS[3][3][-1])  # 128+(128+128)
+
+
+def detector_init(key, painted: bool) -> Params:
+    ks = jax.random.split(key, 12)
+    widths = sa_widths(painted)
+    params: Params = {}
+    for i, w in enumerate(widths):
+        params[f"sa{i + 1}"] = _mlp_init(ks[i], w)
+    # simplified FP: one shared FC (paper Table 1)
+    params["fp_fc"] = _dense_init(ks[4], FP_IN, SEED_FEAT)
+    params["vote_mlp"] = _mlp_init(ks[5], [SEED_FEAT, 128, 128])
+    params["vote_out"] = _dense_init(ks[6], 128, VOTE_CH, scale=0.5)
+    params["prop_pointnet"] = _mlp_init(ks[7], [3 + SEED_FEAT, 128, 64])
+    params["prop_mlp"] = _mlp_init(ks[8], [64, 64])
+    params["prop_out"] = _dense_init(ks[9], 64, PROPOSAL_CH, scale=0.5)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Quantization wrappers (QDQ). QConfig is produced by quantize.py.
+# When a layer has no entry it runs in fp32.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QConfig:
+    """Per-layer QDQ parameters (missing entry => fp32)."""
+
+    weight_scales: Dict[str, jnp.ndarray]
+    act_q: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]  # name -> (scale, zero)
+
+    @staticmethod
+    def empty() -> "QConfig":
+        return QConfig({}, {})
+
+
+def _maybe_qdq_weights(weights, name: str, qc: Optional[QConfig]):
+    if qc is None:
+        return weights
+    out = []
+    for i, (w, b) in enumerate(weights):
+        key = f"{name}.{i}"
+        if key in qc.weight_scales:
+            s = qc.weight_scales[key]
+            wq = jnp.clip(jnp.round(w / s[None, :]), -127, 127) * s[None, :]
+            out.append((wq, b))
+        else:
+            out.append((w, b))
+    return out
+
+
+def _pointnet(groups, weights, use_pallas: bool):
+    if use_pallas:
+        return pointnet_pallas(groups, weights)
+    return pointnet_ref(groups, weights)
+
+
+def _head_layer(x, wb, name: str, qc: Optional[QConfig], use_pallas: bool):
+    """Final head layer: fp32 matmul or fused QDQ kernel (group-wise quant)."""
+    w, b = wb
+    if qc is not None and name in qc.act_q:
+        ws = qc.weight_scales[name + ".w"]
+        a_scale, a_zero = qc.act_q[name]
+        if use_pallas:
+            return qmlp_pallas(x, w, b, ws, a_scale, a_zero)
+        return qmlp_ref(x, w, b, ws, a_scale, a_zero)
+    return jnp.dot(x, w) + b
+
+
+# ---------------------------------------------------------------------------
+# SA / FP / voting / proposal building blocks (per-scene, vmap for batches)
+# ---------------------------------------------------------------------------
+
+
+def sa_apply(
+    params_sa,
+    xyz: jnp.ndarray,
+    feats: Optional[jnp.ndarray],
+    m: int,
+    radius: float,
+    k: int,
+    fg: Optional[jnp.ndarray] = None,
+    w0: float = 1.0,
+    use_pallas: bool = False,
+    qc: Optional[QConfig] = None,
+    name: str = "",
+    start: int = 0,
+):
+    """One set-abstraction layer. Returns (new_xyz, new_feats, new_fg, idx)."""
+    idx = sampling.fps(xyz, m, fg if w0 != 1.0 else None, w0, start=start)
+    centers = xyz[idx]
+    group_idx = sampling.ball_query(centers, xyz, radius, k, use_pallas=use_pallas)
+    groups = sampling.group_features(xyz, feats, idx, group_idx)
+    weights = _maybe_qdq_weights(params_sa, name, qc)
+    new_feats = _pointnet(groups, weights, use_pallas)
+    new_fg = fg[idx] if fg is not None else None
+    return centers, new_feats, new_fg, idx
+
+
+def backbone_forward(
+    params: Params,
+    xyz: jnp.ndarray,
+    feats: Optional[jnp.ndarray],
+    variant: str = "full",
+    fg: Optional[jnp.ndarray] = None,
+    w0: float = DEFAULT_W0,
+    bias_layers: int = DEFAULT_BIAS_LAYERS,
+    split_key: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    qc: Optional[QConfig] = None,
+):
+    """PointNet++ backbone with the three sampling variants.
+
+    variant: 'full'      — regular FPS with the full centroid budget
+             'split'     — PointSplit: SA-normal + SA-bias (biased FPS with
+                           weight w0 on the first `bias_layers` SA layers),
+                           fused before SA4 (paper Fig. 5)
+             'randsplit' — RandomSplit ablation: random halves, regular FPS
+    Returns (seed_xyz (NUM_SEEDS, 3), seed_feats (NUM_SEEDS, SEED_FEAT)).
+    """
+    cfgs = SA_CONFIGS
+
+    def run_pipeline(xyz_p, feats_p, fg_p, halves: bool, biased: bool):
+        """SA1..SA3 of one pipeline; centroid budget halved when split. The
+        bias pipeline's SA1 starts FPS at a different index so the two views
+        decorrelate (start 0 for both would duplicate the sampled sets
+        wherever the bias weight has no effect)."""
+        out = []
+        cur_xyz, cur_feats, cur_fg = xyz_p, feats_p, fg_p
+        for li in range(3):
+            m, r, k, _ = cfgs[li]
+            if halves:
+                m = m // 2
+            wl = w0 if (biased and li < bias_layers) else 1.0
+            start = int(xyz_p.shape[0]) // 2 if (biased and li == 0) else 0
+            cur_xyz, cur_feats, cur_fg, _ = sa_apply(
+                params[f"sa{li + 1}"],
+                cur_xyz,
+                cur_feats,
+                m,
+                r,
+                k,
+                fg=cur_fg,
+                w0=wl,
+                use_pallas=use_pallas,
+                qc=qc,
+                name=f"sa{li + 1}",
+                start=start,
+            )
+            out.append((cur_xyz, cur_feats))
+        return out
+
+    if variant == "full":
+        levels = run_pipeline(xyz, feats, fg, halves=False, biased=False)
+        sa2, sa3 = levels[1], levels[2]
+    elif variant == "split":
+        ln = run_pipeline(xyz, feats, fg, halves=True, biased=False)
+        lb = run_pipeline(xyz, feats, fg, halves=True, biased=True)
+        sa2 = (jnp.concatenate([ln[1][0], lb[1][0]]), jnp.concatenate([ln[1][1], lb[1][1]]))
+        sa3 = (jnp.concatenate([ln[2][0], lb[2][0]]), jnp.concatenate([ln[2][1], lb[2][1]]))
+    elif variant == "randsplit":
+        assert split_key is not None
+        ia, ib = sampling.random_split(xyz.shape[0], split_key)
+        fa = feats[ia] if feats is not None else None
+        fb = feats[ib] if feats is not None else None
+        ln = run_pipeline(xyz[ia], fa, None, halves=True, biased=False)
+        lb = run_pipeline(xyz[ib], fb, None, halves=True, biased=False)
+        sa2 = (jnp.concatenate([ln[1][0], lb[1][0]]), jnp.concatenate([ln[1][1], lb[1][1]]))
+        sa3 = (jnp.concatenate([ln[2][0], lb[2][0]]), jnp.concatenate([ln[2][1], lb[2][1]]))
+    else:
+        raise ValueError(variant)
+
+    # SA4 over the (fused) SA3 set — always regular FPS (paper §4.2)
+    m4, r4, k4, _ = cfgs[3]
+    sa4_xyz, sa4_feats, _, _ = sa_apply(
+        params["sa4"], sa3[0], sa3[1], m4, r4, k4, use_pallas=use_pallas, qc=qc, name="sa4"
+    )
+
+    # Simplified FP (Table 1): 3-NN interpolation twice + one shared FC.
+    f3 = jnp.concatenate(
+        [sa3[1], sampling.three_nn_interpolate(sa3[0], sa4_xyz, sa4_feats)], axis=-1
+    )
+    f2 = jnp.concatenate([sa2[1], sampling.three_nn_interpolate(sa2[0], sa3[0], f3)], axis=-1)
+    seed_feats = fp_fc_apply(params, f2, qc=qc)
+    return sa2[0], seed_feats
+
+
+def voting_forward(params, seed_xyz, seed_feats, use_pallas=False, qc: Optional[QConfig] = None):
+    """Voting module: seeds -> votes (xyz offset + feature residual)."""
+    out = vote_apply(params, seed_feats, use_pallas=use_pallas, qc=qc)
+    vote_xyz = seed_xyz + out[:, :3]
+    vote_feats = seed_feats + out[:, 3:]
+    return vote_xyz, vote_feats
+
+
+def proposal_forward(params, vote_xyz, vote_feats, use_pallas=False, qc: Optional[QConfig] = None):
+    """Proposal module: cluster votes, PointNet, role-grouped head (Table 2)."""
+    idx = sampling.fps(vote_xyz, NUM_PROPOSALS)
+    centers = vote_xyz[idx]
+    gidx = sampling.ball_query(centers, vote_xyz, PROPOSAL_RADIUS, PROPOSAL_K, use_pallas)
+    groups = sampling.group_features(vote_xyz, vote_feats, idx, gidx)
+    out = proposal_apply(params, groups, use_pallas=use_pallas, qc=qc)
+    return centers, out
+
+
+def detector_forward(
+    params: Params,
+    xyz: jnp.ndarray,
+    feats: Optional[jnp.ndarray],
+    variant: str = "full",
+    fg: Optional[jnp.ndarray] = None,
+    w0: float = DEFAULT_W0,
+    bias_layers: int = DEFAULT_BIAS_LAYERS,
+    split_key: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    qc: Optional[QConfig] = None,
+):
+    """Full per-scene detector. Returns dict of raw outputs (pre-decode)."""
+    seed_xyz, seed_feats = backbone_forward(
+        params,
+        xyz,
+        feats,
+        variant=variant,
+        fg=fg,
+        w0=w0,
+        bias_layers=bias_layers,
+        split_key=split_key,
+        use_pallas=use_pallas,
+        qc=qc,
+    )
+    vote_xyz, vote_feats = voting_forward(params, seed_xyz, seed_feats, use_pallas, qc)
+    centers, prop = proposal_forward(params, vote_xyz, vote_feats, use_pallas, qc)
+    return {
+        "seed_xyz": seed_xyz,
+        "vote_xyz": vote_xyz,
+        "cluster_xyz": centers,
+        "proposal": prop,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Box decoding (mirrored in rust/src/coordinator/decode.rs)
+# ---------------------------------------------------------------------------
+
+
+def decode_proposals(cluster_xyz: jnp.ndarray, prop: jnp.ndarray, mean_sizes: jnp.ndarray):
+    """Raw head channels -> boxes. Returns dict with arrays over proposals."""
+    center = cluster_xyz + prop[:, slice(*common.SLICE_CENTER)]
+    objness = jax.nn.softmax(prop[:, slice(*common.SLICE_OBJECTNESS)], axis=-1)[:, 1]
+    h_cls = prop[:, slice(*common.SLICE_HEADING_CLS)]
+    h_reg = prop[:, slice(*common.SLICE_HEADING_REG)]
+    hbin = jnp.argmax(h_cls, axis=-1)
+    per = 2 * jnp.pi / NUM_HEADING_BIN
+    h_res = jnp.take_along_axis(h_reg, hbin[:, None], axis=1)[:, 0] * (per / 2)
+    heading = hbin * per + h_res
+    s_cls = prop[:, slice(*common.SLICE_SIZE_CLS)]
+    s_reg = prop[:, slice(*common.SLICE_SIZE_REG)].reshape(-1, NUM_CLASS, 3)
+    sbin = jnp.argmax(s_cls, axis=-1)
+    base = mean_sizes[sbin]
+    res = jnp.take_along_axis(s_reg, sbin[:, None, None].repeat(3, -1), axis=1)[:, 0]
+    size = base * (1.0 + jnp.clip(res, -0.9, 2.0))
+    sem = jax.nn.softmax(prop[:, slice(*common.SLICE_SEM_CLS)], axis=-1)
+    return {
+        "center": center,
+        "heading": heading % (2 * jnp.pi),
+        "size": size,
+        "objectness": objness,
+        "sem_scores": sem,
+    }
+
+
+# ---------------------------------------------------------------------------
+# GroupFree3D-mini: attention-based detection head (Table 8)
+# ---------------------------------------------------------------------------
+
+ATTN_DIM = 64
+ATTN_HEADS = 4
+ATTN_LAYERS = 2
+
+
+def attn_head_init(key) -> Params:
+    ks = jax.random.split(key, 4 + ATTN_LAYERS * 8)
+    p: Params = {
+        "in_proj": _dense_init(ks[0], SEED_FEAT, ATTN_DIM),
+        "out": _dense_init(ks[1], ATTN_DIM, PROPOSAL_CH, scale=0.5),
+    }
+    for l in range(ATTN_LAYERS):
+        base = 4 + l * 8
+        p[f"l{l}"] = {
+            "q_self": _dense_init(ks[base], ATTN_DIM, ATTN_DIM),
+            "kv_self": _dense_init(ks[base + 1], ATTN_DIM, 2 * ATTN_DIM),
+            "q_cross": _dense_init(ks[base + 2], ATTN_DIM, ATTN_DIM),
+            "kv_cross": _dense_init(ks[base + 3], ATTN_DIM, 2 * ATTN_DIM),
+            "ff1": _dense_init(ks[base + 4], ATTN_DIM, 2 * ATTN_DIM),
+            "ff2": _dense_init(ks[base + 5], 2 * ATTN_DIM, ATTN_DIM),
+            "o_self": _dense_init(ks[base + 6], ATTN_DIM, ATTN_DIM),
+            "o_cross": _dense_init(ks[base + 7], ATTN_DIM, ATTN_DIM),
+        }
+    return p
+
+
+def _mha(q, k, v, nheads: int):
+    d = q.shape[-1] // nheads
+    qh = q.reshape(q.shape[0], nheads, d).transpose(1, 0, 2)
+    kh = k.reshape(k.shape[0], nheads, d).transpose(1, 0, 2)
+    vh = v.reshape(v.shape[0], nheads, d).transpose(1, 0, 2)
+    att = jax.nn.softmax(qh @ kh.transpose(0, 2, 1) / jnp.sqrt(d), axis=-1)
+    return (att @ vh).transpose(1, 0, 2).reshape(q.shape[0], -1)
+
+
+def _ln(x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5)
+
+
+def attn_proj(params: Params, seed_feats):
+    """Project seed features into the attention width (network-only)."""
+    return jnp.dot(seed_feats, params["in_proj"][0]) + params["in_proj"][1]
+
+
+def attn_decode(params: Params, cand_feats, all_feats):
+    """Transformer decoder over candidates (network-only; candidates were
+    selected by FPS on the point-manipulation side)."""
+    x, feats = cand_feats, all_feats
+    for l in range(ATTN_LAYERS):
+        lp = params[f"l{l}"]
+        q = jnp.dot(_ln(x), lp["q_self"][0]) + lp["q_self"][1]
+        kv = jnp.dot(_ln(x), lp["kv_self"][0]) + lp["kv_self"][1]
+        sa = _mha(q, kv[:, :ATTN_DIM], kv[:, ATTN_DIM:], ATTN_HEADS)
+        x = x + jnp.dot(sa, lp["o_self"][0]) + lp["o_self"][1]
+        q = jnp.dot(_ln(x), lp["q_cross"][0]) + lp["q_cross"][1]
+        kv = jnp.dot(_ln(feats), lp["kv_cross"][0]) + lp["kv_cross"][1]
+        ca = _mha(q, kv[:, :ATTN_DIM], kv[:, ATTN_DIM:], ATTN_HEADS)
+        x = x + jnp.dot(ca, lp["o_cross"][0]) + lp["o_cross"][1]
+        h = jax.nn.relu(jnp.dot(_ln(x), lp["ff1"][0]) + lp["ff1"][1])
+        x = x + jnp.dot(h, lp["ff2"][0]) + lp["ff2"][1]
+    return jnp.dot(_ln(x), params["out"][0]) + params["out"][1]
+
+
+def attn_head_forward(params: Params, seed_xyz, seed_feats):
+    """GroupFree3D-mini: candidates attend to each other and to all seeds."""
+    feats = attn_proj(params, seed_feats)
+    # initial candidates: FPS over seeds (the KPS of GroupFree3D)
+    idx = sampling.fps(seed_xyz, NUM_PROPOSALS)
+    out = attn_decode(params, feats[idx], feats)
+    return seed_xyz[idx], out
+
+
+def attn_detector_forward(
+    det_params,
+    attn_params,
+    xyz,
+    feats,
+    variant="full",
+    fg=None,
+    w0=DEFAULT_W0,
+    bias_layers=DEFAULT_BIAS_LAYERS,
+    split_key=None,
+):
+    seed_xyz, seed_feats = backbone_forward(
+        det_params,
+        xyz,
+        feats,
+        variant=variant,
+        fg=fg,
+        w0=w0,
+        bias_layers=bias_layers,
+        split_key=split_key,
+    )
+    centers, out = attn_head_forward(attn_params, seed_xyz, seed_feats)
+    return {"seed_xyz": seed_xyz, "vote_xyz": seed_xyz, "cluster_xyz": centers, "proposal": out}
+
+
+# ---------------------------------------------------------------------------
+# Network-only subgraphs for AOT export (all point manipulation excluded).
+# Each takes already-grouped tensors; rust/src/pointops produces them.
+# ---------------------------------------------------------------------------
+
+
+def sa_pointnet_apply(params, layer: int, groups, use_pallas=True, qc=None):
+    """groups (B, K, 3+C) -> (B, C_out). The per-SA-layer NPU workload."""
+    weights = _maybe_qdq_weights(params[f"sa{layer}"], f"sa{layer}", qc)
+    return _pointnet(groups, weights, use_pallas)
+
+
+def fp_fc_apply(params, f2, qc: Optional[QConfig] = None):
+    """Fused-FP features (NUM_SEEDS, FP_IN) -> seed feats."""
+    w, b = params["fp_fc"]
+    if qc is not None and "fp_fc.0" in qc.weight_scales:
+        s = qc.weight_scales["fp_fc.0"]
+        w = jnp.clip(jnp.round(w / s[None, :]), -127, 127) * s[None, :]
+    return jax.nn.relu(jnp.dot(f2, w) + b)
+
+
+def vote_apply(params, seed_feats, use_pallas=True, qc=None):
+    """Seed feats -> raw vote output (NUM_SEEDS, VOTE_CH)."""
+    weights = _maybe_qdq_weights(params["vote_mlp"], "vote_mlp", qc)
+    h = mlp_ref(seed_feats, weights)
+    return _head_layer(h, params["vote_out"], "vote_out", qc, use_pallas)
+
+
+def proposal_apply(params, groups, use_pallas=True, qc=None):
+    """Grouped votes (NUM_PROPOSALS, K, 3+C) -> raw head (NUM_PROPOSALS, 79)."""
+    weights = _maybe_qdq_weights(params["prop_pointnet"], "prop_pointnet", qc)
+    cluster_feats = _pointnet(groups, weights, use_pallas)
+    weights2 = _maybe_qdq_weights(params["prop_mlp"], "prop_mlp", qc)
+    h = mlp_ref(cluster_feats, weights2)
+    return _head_layer(h, params["prop_out"], "prop_out", qc, use_pallas)
+
+
+def attn_apply(attn_params, cand_feats, all_feats):
+    """Network-only attention head: (candidates, all projected seeds) -> raw
+    head channels. FPS candidate selection happens on the Rust side."""
+    return attn_decode(attn_params, cand_feats, all_feats)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (Table 1)
+# ---------------------------------------------------------------------------
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(x.size for x in leaves if hasattr(x, "size")))
+
+
+def fp_layer_cost(paper_scale: bool = False):
+    """(params, madds) of the FP stage: PointNet++ (two FP PointNets) vs
+    PointSplit (one shared FC). ``paper_scale=True`` uses the original VoteNet
+    widths (256-ch FP MLPs over 512/1024 points) to reproduce Table 1's
+    absolute numbers; otherwise the VoteNet-mini widths.
+    """
+    if paper_scale:
+        fp1 = [(512, 256), (256, 256)]
+        fp2 = [(512, 256), (256, 256)]
+        n1, n2 = 512, 1024
+        ps = [(512, 384)]
+        n_ps = 1024
+    else:
+        fp1 = [(FP_IN - SA_CONFIGS[1][3][-1], 128), (128, 128)]
+        fp2 = [(128 + 128, 128), (128, 128)]
+        n1, n2 = 64, NUM_SEEDS
+        ps = [(FP_IN, SEED_FEAT)]
+        n_ps = NUM_SEEDS
+    p_orig = sum(ci * co + co for ci, co in fp1 + fp2)
+    m_orig = sum(ci * co * n1 for ci, co in fp1) + sum(ci * co * n2 for ci, co in fp2)
+    p_ps = sum(ci * co + co for ci, co in ps)
+    m_ps = sum(ci * co * n_ps for ci, co in ps)
+    return (p_orig, m_orig), (p_ps, m_ps)

@@ -1,0 +1,227 @@
+"""Post-training INT8 quantization (paper §4.3) at four granularities.
+
+The paper's claim: the last layers of the voting/proposal modules emit
+channels with *role-dependent* distributions (Table 2, Fig. 6/7); a single
+per-layer scale destroys the small-magnitude regression channels, per-channel
+is parameter-hungry, and grouping channels **by role** hits the sweet spot.
+
+This module does PTQ calibration on a handful of scenes and builds
+``model.QConfig`` objects for each scheme:
+
+- ``layer``   — one (scale, zero) per head layer
+- ``group``   — channels split into N *even contiguous* groups (the naive
+                group-wise baseline in Table 11)
+- ``channel`` — per-channel scales
+- ``role``    — the paper's role groups (common.proposal_role_groups etc.)
+
+Backbone layers are always per-tensor weight-QDQ (that granularity is
+harmless there — the paper quantizes the whole model and attributes the
+collapse to the heads). It also exports head weight/activation statistics for
+the Fig. 6/7 benches.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, model, sampling
+from .kernels.ref import mlp_ref, pointnet_ref
+from .model import QConfig
+
+SCHEMES = ["layer", "group", "channel", "role"]
+
+# head layers subject to the granularity study: name -> (C_out, role groups)
+HEAD_LAYERS = {
+    "vote_out": (common.VOTE_CH, common.vote_role_groups()),
+    "prop_out": (common.PROPOSAL_CH, common.proposal_role_groups()),
+}
+
+# backbone layers quantized per-tensor in every INT8 scheme
+BACKBONE_MLPS = ["sa1", "sa2", "sa3", "sa4", "vote_mlp", "prop_pointnet", "prop_mlp"]
+
+
+def channel_groups(scheme: str, cout: int, roles: List[List[int]]) -> List[List[int]]:
+    """Channel partition for a scheme."""
+    if scheme == "layer":
+        return [list(range(cout))]
+    if scheme == "channel":
+        return [[c] for c in range(cout)]
+    if scheme == "role":
+        return roles
+    if scheme == "group":
+        n = len(roles)  # same number of groups as the role scheme (paper)
+        bounds = [round(i * cout / n) for i in range(n + 1)]
+        return [list(range(bounds[i], bounds[i + 1])) for i in range(n)]
+    raise ValueError(scheme)
+
+
+def _expand(groups: List[List[int]], values: np.ndarray, cout: int) -> np.ndarray:
+    out = np.zeros(cout, np.float32)
+    for g, v in zip(groups, values):
+        out[g] = v
+    return out
+
+
+def weight_scale_vector(w: np.ndarray, groups: List[List[int]]) -> np.ndarray:
+    """Symmetric per-group weight scales, expanded to per-channel."""
+    cout = w.shape[1]
+    vals = np.array([max(np.abs(w[:, g]).max(), 1e-8) / 127.0 for g in groups], np.float32)
+    return _expand(groups, vals, cout)
+
+
+def act_qparams(lo: np.ndarray, hi: np.ndarray, groups: List[List[int]]):
+    """Affine per-group activation qparams from per-channel min/max."""
+    cout = len(lo)
+    scales = np.zeros(cout, np.float32)
+    zeros = np.zeros(cout, np.float32)
+    for g in groups:
+        glo = float(min(lo[g].min(), 0.0))
+        ghi = float(max(hi[g].max(), 0.0))
+        s = max((ghi - glo) / 255.0, 1e-8)
+        z = np.clip(round(-128 - glo / s), -128, 127)
+        scales[g] = s
+        zeros[g] = z
+    return scales, zeros
+
+
+# ---------------------------------------------------------------------------
+# Calibration: collect head activation ranges over a few scenes
+# ---------------------------------------------------------------------------
+
+
+def calibrate(
+    params,
+    scenes_inputs: List[Tuple[np.ndarray, Optional[np.ndarray], np.ndarray]],
+    variant: str = "full",
+    w0: float = common.DEFAULT_W0,
+) -> Dict[str, np.ndarray]:
+    """Run fp32 forward on calibration scenes, returning per-channel
+    min/max of the head outputs plus raw activations (for Fig. 6/7 stats).
+
+    scenes_inputs: list of (xyz, feats_or_None, fg).
+    """
+    vote_outs, prop_outs = [], []
+
+    @jax.jit
+    def fwd(xyz, feats, fg, key):
+        seed_xyz, seed_feats = model.backbone_forward(
+            params, xyz, feats, variant=variant, fg=fg, w0=w0, split_key=key
+        )
+        h = mlp_ref(seed_feats, params["vote_mlp"])
+        vote_out = jnp.dot(h, params["vote_out"][0]) + params["vote_out"][1]
+        vote_xyz = seed_xyz + vote_out[:, :3]
+        vote_feats = seed_feats + vote_out[:, 3:]
+        idx = sampling.fps(vote_xyz, common.NUM_PROPOSALS)
+        gidx = sampling.ball_query(
+            vote_xyz[idx], vote_xyz, common.PROPOSAL_RADIUS, common.PROPOSAL_K, use_pallas=False
+        )
+        groups = sampling.group_features(vote_xyz, vote_feats, idx, gidx)
+        cf = pointnet_ref(groups, params["prop_pointnet"])
+        h2 = mlp_ref(cf, params["prop_mlp"])
+        prop_out = jnp.dot(h2, params["prop_out"][0]) + params["prop_out"][1]
+        return vote_out, prop_out
+
+    for i, (xyz, feats, fg) in enumerate(scenes_inputs):
+        v, p = fwd(
+            jnp.asarray(xyz),
+            jnp.asarray(feats) if feats is not None else None,
+            jnp.asarray(fg),
+            jax.random.PRNGKey(i),
+        )
+        vote_outs.append(np.asarray(v))
+        prop_outs.append(np.asarray(p))
+
+    vote_all = np.concatenate(vote_outs)
+    prop_all = np.concatenate(prop_outs)
+    return {
+        "vote_out_min": vote_all.min(0),
+        "vote_out_max": vote_all.max(0),
+        "prop_out_min": prop_all.min(0),
+        "prop_out_max": prop_all.max(0),
+        "vote_acts": vote_all,
+        "prop_acts": prop_all,
+    }
+
+
+# ---------------------------------------------------------------------------
+# QConfig construction
+# ---------------------------------------------------------------------------
+
+
+def _per_tensor_scales(weights, name: str) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for i, (w, _) in enumerate(weights):
+        s = float(max(np.abs(np.asarray(w)).max(), 1e-8)) / 127.0
+        out[f"{name}.{i}"] = jnp.full((w.shape[1],), s, jnp.float32)
+    return out
+
+
+def build_qconfig(params, calib: Dict[str, np.ndarray], scheme: str) -> QConfig:
+    """Full-model INT8 QConfig with the head layers at `scheme` granularity."""
+    wsc: Dict[str, jnp.ndarray] = {}
+    act: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+    for name in BACKBONE_MLPS:
+        if name in params:
+            wsc.update(_per_tensor_scales(params[name], name))
+    if "fp_fc" in params:
+        wsc.update(_per_tensor_scales([params["fp_fc"]], "fp_fc"))
+
+    for name, (cout, roles) in HEAD_LAYERS.items():
+        groups = channel_groups(scheme, cout, roles)
+        w = np.asarray(params[name][0])
+        wsc[name + ".w"] = jnp.asarray(weight_scale_vector(w, groups))
+        lo = calib[f"{name}_min"]
+        hi = calib[f"{name}_max"]
+        s, z = act_qparams(lo, hi, groups)
+        act[name] = (jnp.asarray(s), jnp.asarray(z))
+    return QConfig(wsc, act)
+
+
+def quant_param_count(scheme: str) -> int:
+    """Number of quantization parameters the head layers need (Table 11):
+    per channel group, one weight scale + one activation (scale, zero)."""
+    total = 0
+    for _, (cout, roles) in HEAD_LAYERS.items():
+        total += 3 * len(channel_groups(scheme, cout, roles))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6/7 statistics
+# ---------------------------------------------------------------------------
+
+
+def head_stats(params, calib: Dict[str, np.ndarray], bins: int = 24) -> Dict:
+    """Per-channel weight ranges + activation histograms for the distribution
+    figures. Channels are reported in role-group order (as in Fig. 6)."""
+    out: Dict = {}
+    for name, (cout, roles) in HEAD_LAYERS.items():
+        w = np.asarray(params[name][0])
+        acts = calib[name.replace("_out", "_acts")]
+        order = [c for g in roles for c in g]
+        group_of = np.zeros(cout, np.int32)
+        for gi, g in enumerate(roles):
+            group_of[g] = gi
+        hists = []
+        lo, hi = float(acts.min()), float(acts.max())
+        edges = np.linspace(lo, hi, bins + 1)
+        for c in order:
+            h, _ = np.histogram(acts[:, c], bins=edges)
+            hists.append((h / max(h.sum(), 1)).tolist())
+        out[name] = {
+            "channel_order": order,
+            "group_of_ordered": [int(group_of[c]) for c in order],
+            "weight_min": [float(w[:, c].min()) for c in order],
+            "weight_max": [float(w[:, c].max()) for c in order],
+            "weight_std": [float(w[:, c].std()) for c in order],
+            "act_min": [float(acts[:, c].min()) for c in order],
+            "act_max": [float(acts[:, c].max()) for c in order],
+            "act_hist": hists,
+            "act_hist_lo": lo,
+            "act_hist_hi": hi,
+        }
+    return out

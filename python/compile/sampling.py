@@ -1,0 +1,128 @@
+"""Point-manipulation ops in JAX (L2): FPS, biased FPS, ball query, 3-NN FP.
+
+These are the operations the paper identifies as *not NPU-executable* — at
+inference they run in Rust (`rust/src/pointops/`), but the training graph and
+the pure-python reference pipeline need jittable versions. The Rust port is
+numerics-checked against these in the parity tests (Table 3 bench).
+
+Biased FPS implements paper Eq. 1: d(p1, p2) = w * ||p1 - p2|| with
+w = w0 when either endpoint is foreground. In the incremental FPS update the
+pair factor is f_ij = 1 + (w0 - 1) * (fg_i OR fg_j).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise import pairwise_dist2_pallas
+from .kernels.ref import pairwise_dist2_ref
+
+
+def fps(
+    xyz: jnp.ndarray,
+    m: int,
+    fg: jnp.ndarray | None = None,
+    w0: float = 1.0,
+    start: int = 0,
+) -> jnp.ndarray:
+    """(Biased) farthest point sampling.
+
+    xyz: (N, 3); fg: (N,) float {0,1} foreground mask (from painted scores);
+    w0: Eq. 1 weight. Returns (m,) int32 indices. Deterministic: starts from
+    `start` (matches the Rust implementation). The SA-bias pipeline starts at
+    a different point than SA-normal so the two views stay decorrelated even
+    where both use regular FPS.
+    """
+    n = xyz.shape[0]
+    if fg is None:
+        fg = jnp.zeros((n,), jnp.float32)
+    fg = fg.astype(jnp.float32)
+
+    def body(i, state):
+        min_d2, last, out = state
+        d2 = jnp.sum((xyz - xyz[last]) ** 2, axis=1)
+        # pair weight^2: w0^2 if either endpoint is foreground (Eq. 1)
+        either = fg + fg[last] - fg * fg[last]
+        f2 = (1.0 + (w0 - 1.0) * either) ** 2
+        min_d2 = jnp.minimum(min_d2, d2 * f2)
+        nxt = jnp.argmax(min_d2).astype(jnp.int32)
+        out = out.at[i].set(nxt)
+        return min_d2, nxt, out
+
+    out = jnp.zeros((m,), jnp.int32)
+    init = (jnp.full((n,), jnp.inf, jnp.float32), jnp.int32(start), out.at[0].set(start))
+    _, _, out = jax.lax.fori_loop(1, m, body, init)
+    return out
+
+
+def ball_query(
+    centers: jnp.ndarray,
+    xyz: jnp.ndarray,
+    radius: float,
+    k: int,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Nearest-K-within-radius grouping.
+
+    centers: (M, 3), xyz: (N, 3) -> (M, K) int32 indices. Out-of-radius slots
+    are filled with the nearest in-radius point (PointNet++ convention of
+    repeating a valid member); if a ball is empty the nearest point is used.
+    """
+    dist2 = (
+        pairwise_dist2_pallas(centers, xyz) if use_pallas else pairwise_dist2_ref(centers, xyz)
+    )
+    big = jnp.float32(1e10)
+    masked = jnp.where(dist2 <= radius * radius, dist2, big)
+    neg, idx = jax.lax.top_k(-masked, k)  # nearest within radius first
+    valid = -neg < big * 0.5
+    # fill invalid slots with the ball's first (nearest) member
+    fallback_in = idx[:, :1]
+    fallback_any = jnp.argmin(dist2, axis=1, keepdims=True).astype(idx.dtype)
+    fallback = jnp.where(valid[:, :1], fallback_in, fallback_any)
+    return jnp.where(valid, idx, fallback).astype(jnp.int32)
+
+
+def group_features(
+    xyz: jnp.ndarray, feats: jnp.ndarray | None, centers_idx: jnp.ndarray, group_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Gather grouped features: relative xyz ++ point features.
+
+    xyz: (N, 3), feats: (N, C) or None, centers_idx: (M,), group_idx: (M, K)
+    -> (M, K, 3 + C).
+    """
+    centers = xyz[centers_idx]  # (M, 3)
+    pts = xyz[group_idx]  # (M, K, 3)
+    rel = pts - centers[:, None, :]
+    if feats is None:
+        return rel
+    return jnp.concatenate([rel, feats[group_idx]], axis=-1)
+
+
+def three_nn_interpolate(
+    dst_xyz: jnp.ndarray, src_xyz: jnp.ndarray, src_feats: jnp.ndarray
+) -> jnp.ndarray:
+    """Feature propagation: inverse-distance weighted 3-NN interpolation.
+
+    dst_xyz: (Nd, 3) fine points, src_xyz: (Ns, 3) coarse points,
+    src_feats: (Ns, C) -> (Nd, C).
+    """
+    d2 = pairwise_dist2_ref(dst_xyz, src_xyz)
+    neg, idx = jax.lax.top_k(-d2, 3)
+    w = 1.0 / jnp.maximum(-neg, 1e-8)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    return jnp.sum(src_feats[idx] * w[..., None], axis=1)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def fps_jit(xyz: jnp.ndarray, m: int) -> jnp.ndarray:
+    return fps(xyz, m)
+
+
+def random_split(n: int, key: jax.Array) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RandomSplit baseline: permute indices and split the point set in half."""
+    perm = jax.random.permutation(key, n)
+    return perm[: n // 2], perm[n // 2 :]

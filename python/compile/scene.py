@@ -1,0 +1,452 @@
+"""Procedural RGB-D scene generator (SynRGBD / SynScan).
+
+Substitute for SUN RGB-D / ScanNet V2 (see DESIGN.md §2). A scene is a room
+(floor + two walls) populated with parametric furniture of 10 classes. Each
+object is a composition of axis-aligned cuboid *parts* in a canonical frame,
+rotated by a yaw heading and translated onto the floor. Points are sampled on
+all surfaces; SynRGBD applies single-viewpoint visibility culling + depth
+noise, SynScan keeps full coverage (multi-view scan). A 64x64 RGB render and
+a ground-truth segmentation mask are produced by splatting points through a
+pinhole camera with a z-buffer.
+
+The Rust mirror lives in rust/src/data/; the two generators are
+*distributionally* identical (same shape programs, same parameter ranges) —
+parity is asserted statistically in tests on both sides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from . import common
+from .common import IMG_SIZE, NUM_CLASS, DatasetConfig
+
+# ---------------------------------------------------------------------------
+# Shape programs: each returns a list of cuboid parts
+# (cx, cy, cz, sx, sy, sz) in the object canonical frame (z up, resting on
+# z=0, footprint centered on the origin). Sizes (w, d, h) are the overall
+# bounding dims of the object.
+# ---------------------------------------------------------------------------
+
+
+def _legs(w: float, d: float, h: float, t: float = 0.05) -> List[Tuple[float, ...]]:
+    """Four legs of thickness t under a top at height h."""
+    dx, dy = w / 2 - t / 2, d / 2 - t / 2
+    return [(sx * dx, sy * dy, h / 2, t, t, h) for sx in (-1, 1) for sy in (-1, 1)]
+
+
+def _parts_bed(w, d, h):
+    # mattress + headboard at -y end
+    return [(0, 0, h * 0.35, w, d, h * 0.7), (0, -d / 2 + 0.05, h * 0.85, w, 0.1, h * 1.7)]
+
+
+def _parts_table(w, d, h):
+    top_t = 0.06
+    return [(0, 0, h - top_t / 2, w, d, top_t)] + _legs(w, d, h - top_t)
+
+
+def _parts_sofa(w, d, h):
+    seat_h = h * 0.55
+    parts = [(0, 0, seat_h / 2, w, d, seat_h)]
+    parts.append((0, -d / 2 + 0.08, h / 2 + seat_h * 0.2, w, 0.16, h))  # back
+    arm_w = 0.12
+    for s in (-1, 1):
+        parts.append((s * (w / 2 - arm_w / 2), 0, h * 0.4, arm_w, d, h * 0.8))
+    return parts
+
+
+def _parts_chair(w, d, h):
+    seat_h = h * 0.55
+    seat_t = 0.05
+    parts = [(0, 0, seat_h - seat_t / 2, w, d, seat_t)]
+    parts += _legs(w, d, seat_h - seat_t)
+    parts.append((0, -d / 2 + 0.025, seat_h + (h - seat_h) / 2, w, 0.05, h - seat_h))
+    return parts
+
+
+def _parts_toilet(w, d, h):
+    bowl_h = h * 0.55
+    return [
+        (0, d * 0.1, bowl_h / 2, w, d * 0.8, bowl_h),
+        (0, -d / 2 + 0.07, bowl_h + (h - bowl_h) / 2, w, 0.14, h - bowl_h),
+    ]
+
+
+def _parts_desk(w, d, h):
+    top_t = 0.05
+    parts = [(0, 0, h - top_t / 2, w, d, top_t)]
+    parts += _legs(w, d, h - top_t)
+    # side panel (drawer column)
+    parts.append((w / 2 - 0.15, 0, (h - top_t) / 2, 0.3, d * 0.9, h - top_t))
+    return parts
+
+
+def _parts_box(w, d, h):
+    return [(0, 0, h / 2, w, d, h)]
+
+
+# size ranges per class: ((w_lo, w_hi), (d_lo, d_hi), (h_lo, h_hi))
+_CLASS_SPECS = [
+    ("bed", _parts_bed, (1.6, 2.1), (1.4, 1.9), (0.4, 0.6)),
+    ("table", _parts_table, (1.0, 1.8), (0.6, 1.1), (0.65, 0.78)),
+    ("sofa", _parts_sofa, (1.5, 2.2), (0.8, 1.0), (0.7, 0.8)),
+    ("chair", _parts_chair, (0.4, 0.55), (0.4, 0.55), (0.75, 0.95)),
+    ("toilet", _parts_toilet, (0.35, 0.45), (0.5, 0.6), (0.7, 0.8)),
+    ("desk", _parts_desk, (1.1, 1.5), (0.6, 0.8), (0.7, 0.78)),
+    ("dresser", _parts_box, (0.8, 1.2), (0.4, 0.6), (0.8, 1.1)),
+    ("nightstand", _parts_box, (0.4, 0.6), (0.4, 0.6), (0.5, 0.7)),
+    ("bookshelf", _parts_box, (0.6, 1.0), (0.25, 0.35), (1.5, 2.0)),
+    ("bathtub", _parts_box, (1.4, 1.8), (0.7, 0.9), (0.5, 0.6)),
+]
+assert [s[0] for s in _CLASS_SPECS] == common.CLASSES
+
+# Base RGB color per class for the render (plus background gray).
+_CLASS_COLORS = np.array(
+    [
+        [0.85, 0.30, 0.30],  # bed
+        [0.55, 0.35, 0.20],  # table
+        [0.30, 0.55, 0.85],  # sofa
+        [0.90, 0.65, 0.20],  # chair
+        [0.90, 0.90, 0.95],  # toilet
+        [0.45, 0.30, 0.55],  # desk
+        [0.35, 0.60, 0.35],  # dresser
+        [0.70, 0.55, 0.35],  # nightstand
+        [0.60, 0.20, 0.45],  # bookshelf
+        [0.25, 0.75, 0.75],  # bathtub
+    ],
+    dtype=np.float32,
+)
+_BG_COLOR = np.array([0.55, 0.55, 0.58], dtype=np.float32)
+
+
+@dataclasses.dataclass
+class SceneObject:
+    cls: int
+    center: np.ndarray  # (3,) bbox center
+    size: np.ndarray  # (3,) full extents (w, d, h)
+    heading: float  # yaw, radians in [0, 2pi)
+    parts: np.ndarray  # (P, 6) canonical cuboids
+
+
+@dataclasses.dataclass
+class Scene:
+    """One synthetic RGB-D scene with full ground truth."""
+
+    points: np.ndarray  # (N, 3) float32
+    point_obj: np.ndarray  # (N,) int32 index into objects, -1 for background
+    image: np.ndarray  # (H, W, 3) float32 RGB in [0,1]
+    seg_mask: np.ndarray  # (H, W) int32, 0 = background, 1+cls otherwise
+    objects: List[SceneObject]
+    cam_pos: np.ndarray  # (3,)
+    cam_rot: np.ndarray  # (3, 3) world->camera
+    fx: float
+
+    def boxes(self) -> np.ndarray:
+        """(num_obj, 8): cx cy cz w d h heading cls."""
+        if not self.objects:
+            return np.zeros((0, 8), dtype=np.float32)
+        return np.stack(
+            [
+                np.concatenate([o.center, o.size, [o.heading, float(o.cls)]]).astype(np.float32)
+                for o in self.objects
+            ]
+        )
+
+
+def _rot_z(theta: float) -> np.ndarray:
+    c, s = np.cos(theta), np.sin(theta)
+    return np.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]], dtype=np.float64)
+
+
+def _sample_cuboid_surface(rng: np.random.Generator, part, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Sample n points on the surface of an axis-aligned cuboid part.
+
+    Returns (points (n,3), normals (n,3)). Faces are chosen proportionally to
+    area; the bottom face is skipped (never visible indoors).
+    """
+    cx, cy, cz, sx, sy, sz = part
+    # faces: +x -x +y -y +z  (skip -z)
+    areas = np.array([sy * sz, sy * sz, sx * sz, sx * sz, sx * sy], dtype=np.float64)
+    face = rng.choice(5, size=n, p=areas / areas.sum())
+    u = rng.uniform(-0.5, 0.5, size=n)
+    v = rng.uniform(-0.5, 0.5, size=n)
+    pts = np.empty((n, 3), dtype=np.float64)
+    nrm = np.zeros((n, 3), dtype=np.float64)
+    for f, (axis, sign) in enumerate([(0, 1), (0, -1), (1, 1), (1, -1), (2, 1)]):
+        m = face == f
+        if not m.any():
+            continue
+        p = np.empty((m.sum(), 3))
+        if axis == 0:
+            p[:, 0] = sign * sx / 2
+            p[:, 1] = u[m] * sy
+            p[:, 2] = v[m] * sz
+        elif axis == 1:
+            p[:, 0] = u[m] * sx
+            p[:, 1] = sign * sy / 2
+            p[:, 2] = v[m] * sz
+        else:
+            p[:, 0] = u[m] * sx
+            p[:, 1] = v[m] * sy
+            p[:, 2] = sign * sz / 2
+        pts[m] = p + np.array([cx, cy, cz])
+        nrm[m, axis] = sign
+    return pts, nrm
+
+
+def _place_objects(rng: np.random.Generator, cfg: DatasetConfig, room: float) -> List[SceneObject]:
+    n_obj = int(rng.integers(cfg.min_objects, cfg.max_objects + 1))
+    objects: List[SceneObject] = []
+    tries = 0
+    while len(objects) < n_obj and tries < 80:
+        tries += 1
+        cls = int(rng.integers(0, NUM_CLASS))
+        _, prog, wr, dr, hr = _CLASS_SPECS[cls]
+        w = float(rng.uniform(*wr))
+        d = float(rng.uniform(*dr))
+        h = float(rng.uniform(*hr))
+        heading = float(rng.uniform(0.0, 2 * np.pi))
+        # keep footprint inside the room with margin
+        rad = 0.5 * np.hypot(w, d)
+        if room / 2 - rad - 0.1 <= 0.3:
+            continue
+        cx = float(rng.uniform(-(room / 2 - rad - 0.1), room / 2 - rad - 0.1))
+        cy = float(rng.uniform(-(room / 2 - rad - 0.1), room / 2 - rad - 0.1))
+        # overlap rejection on circumscribed circles
+        ok = True
+        for o in objects:
+            orad = 0.5 * np.hypot(o.size[0], o.size[1])
+            if np.hypot(cx - o.center[0], cy - o.center[1]) < rad + orad + 0.05:
+                ok = False
+                break
+        if not ok:
+            continue
+        parts = np.array(prog(w, d, h), dtype=np.float64)
+        objects.append(
+            SceneObject(
+                cls=cls,
+                center=np.array([cx, cy, h / 2], dtype=np.float32),
+                size=np.array([w, d, h], dtype=np.float32),
+                heading=heading,
+                parts=parts,
+            )
+        )
+    return objects
+
+
+def _camera(rng: np.random.Generator, room: float) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Camera on the room boundary at eye height looking at the center."""
+    ang = float(rng.uniform(0, 2 * np.pi))
+    cam = np.array(
+        [np.cos(ang) * room * 0.55, np.sin(ang) * room * 0.55, float(rng.uniform(1.2, 1.7))]
+    )
+    target = np.array([0.0, 0.0, 0.8])
+    fwd = target - cam
+    fwd /= np.linalg.norm(fwd)
+    right = np.cross(fwd, np.array([0.0, 0.0, 1.0]))
+    right /= np.linalg.norm(right)
+    up = np.cross(right, fwd)
+    # world->camera rows: x=right, y=down(-up), z=forward
+    rot = np.stack([right, -up, fwd])
+    fx = IMG_SIZE * 0.9  # ~58 deg horizontal FoV
+    return cam, rot, fx
+
+
+def generate_scene(seed: int, cfg: DatasetConfig) -> Scene:
+    """Generate one deterministic scene."""
+    rng = np.random.default_rng(seed)
+    room = float(rng.uniform(cfg.room_min, cfg.room_max))
+    objects = _place_objects(rng, cfg, room)
+    cam, rot, fx = _camera(rng, room)
+
+    n_target = cfg.num_points
+    raw = 6 * n_target  # candidate pool before culling/subsampling
+    # budget: 55% objects, 45% background (floor + 2 walls)
+    pts_list, nrm_list, obj_list = [], [], []
+
+    total_area = sum(
+        float(np.sum(2 * (p[:, 3] * p[:, 4] + p[:, 4] * p[:, 5] + p[:, 3] * p[:, 5])))
+        for o in objects
+        for p in [o.parts]
+    )
+    n_obj_pts = int(raw * 0.55)
+    for oi, o in enumerate(objects):
+        area = float(np.sum(2 * (o.parts[:, 3] * o.parts[:, 4] + o.parts[:, 4] * o.parts[:, 5] + o.parts[:, 3] * o.parts[:, 5])))
+        n_o = max(32, int(n_obj_pts * area / max(total_area, 1e-6)))
+        part_areas = 2 * (o.parts[:, 3] * o.parts[:, 4] + o.parts[:, 4] * o.parts[:, 5] + o.parts[:, 3] * o.parts[:, 5])
+        counts = rng.multinomial(n_o, part_areas / part_areas.sum())
+        R = _rot_z(o.heading)
+        for part, c in zip(o.parts, counts):
+            if c == 0:
+                continue
+            p, nr = _sample_cuboid_surface(rng, part, int(c))
+            p = p @ R.T + np.array([o.center[0], o.center[1], 0.0])
+            nr = nr @ R.T
+            pts_list.append(p)
+            nrm_list.append(nr)
+            obj_list.append(np.full(int(c), oi, dtype=np.int32))
+
+    # background: floor + two walls behind the scene (opposite the camera)
+    n_bg = raw - sum(len(p) for p in pts_list)
+    n_floor = int(n_bg * 0.6)
+    floor = np.stack(
+        [
+            rng.uniform(-room / 2, room / 2, n_floor),
+            rng.uniform(-room / 2, room / 2, n_floor),
+            np.zeros(n_floor),
+        ],
+        axis=1,
+    )
+    pts_list.append(floor)
+    nrm_list.append(np.tile([0.0, 0.0, 1.0], (n_floor, 1)))
+    obj_list.append(np.full(n_floor, -1, dtype=np.int32))
+    n_wall = n_bg - n_floor
+    # wall planes on the far side from the camera
+    wx = -np.sign(cam[0]) * room / 2
+    wy = -np.sign(cam[1]) * room / 2
+    half = n_wall // 2
+    wall1 = np.stack(
+        [np.full(half, wx), rng.uniform(-room / 2, room / 2, half), rng.uniform(0, 2.2, half)],
+        axis=1,
+    )
+    wall2 = np.stack(
+        [
+            rng.uniform(-room / 2, room / 2, n_wall - half),
+            np.full(n_wall - half, wy),
+            rng.uniform(0, 2.2, n_wall - half),
+        ],
+        axis=1,
+    )
+    pts_list += [wall1, wall2]
+    nrm_list += [
+        np.tile([np.sign(cam[0]), 0.0, 0.0], (half, 1)),
+        np.tile([0.0, np.sign(cam[1]), 0.0], (n_wall - half, 1)),
+    ]
+    obj_list += [np.full(half, -1, dtype=np.int32), np.full(n_wall - half, -1, dtype=np.int32)]
+
+    pts = np.concatenate(pts_list)
+    nrm = np.concatenate(nrm_list)
+    obj = np.concatenate(obj_list)
+
+    if cfg.single_view:
+        # visibility: surface must face the camera and be in front of it
+        to_cam = cam[None, :] - pts
+        facing = np.einsum("nd,nd->n", to_cam, nrm) > 0
+        in_front = (pts - cam[None, :]) @ rot[2] > 0.3
+        keep = facing & in_front
+        pts, obj = pts[keep], obj[keep]
+
+    # render BEFORE subsampling so the image has dense coverage
+    image, seg = _render(rng, pts, obj, objects, cam, rot, fx, cfg)
+
+    # subsample to the dataset budget
+    if len(pts) >= cfg.num_points:
+        sel = rng.choice(len(pts), cfg.num_points, replace=False)
+    else:
+        sel = rng.choice(max(len(pts), 1), cfg.num_points, replace=True)
+    pts, obj = pts[sel], obj[sel]
+    pts = pts + rng.normal(0, cfg.depth_noise, pts.shape)
+
+    return Scene(
+        points=pts.astype(np.float32),
+        point_obj=obj,
+        image=image,
+        seg_mask=seg,
+        objects=objects,
+        cam_pos=cam.astype(np.float32),
+        cam_rot=rot.astype(np.float32),
+        fx=fx,
+    )
+
+
+def project(points: np.ndarray, cam: np.ndarray, rot: np.ndarray, fx: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pinhole projection. Returns (u, v, depth) as float arrays."""
+    pc = (points - cam[None, :]) @ rot.T
+    z = np.maximum(pc[:, 2], 1e-6)
+    u = fx * pc[:, 0] / z + IMG_SIZE / 2
+    v = fx * pc[:, 1] / z + IMG_SIZE / 2
+    return u, v, pc[:, 2]
+
+
+def _render(rng, pts, obj, objects, cam, rot, fx, cfg):
+    """Z-buffered point splat -> RGB image + GT segmentation mask."""
+    u, v, z = project(pts, cam, rot, fx)
+    ui = np.floor(u).astype(np.int64)
+    vi = np.floor(v).astype(np.int64)
+    ok = (ui >= 0) & (ui < IMG_SIZE) & (vi >= 0) & (vi < IMG_SIZE) & (z > 0.05)
+    ui, vi, zi, oi = ui[ok], vi[ok], z[ok], obj[ok]
+    flat = vi * IMG_SIZE + ui
+    order = np.argsort(-zi)  # far first so near points overwrite
+    flat, oi, zi = flat[order], oi[order], zi[order]
+    seg = np.zeros(IMG_SIZE * IMG_SIZE, dtype=np.int32)
+    img = np.tile(_BG_COLOR, (IMG_SIZE * IMG_SIZE, 1)).copy()
+    # background shading gradient
+    yy = np.repeat(np.linspace(0.9, 1.1, IMG_SIZE), IMG_SIZE)
+    img *= yy[:, None]
+    cls_of = np.array([o.cls for o in objects] + [-1], dtype=np.int32)
+    lab = np.where(oi >= 0, cls_of[oi], -1)
+    seg[flat] = lab + 1
+    shade = np.clip(1.0 - zi / 12.0, 0.45, 1.0)
+    color = np.where(
+        (lab >= 0)[:, None],
+        _CLASS_COLORS[np.clip(lab, 0, NUM_CLASS - 1)] * shade[:, None],
+        img[flat],
+    )
+    img[flat] = color
+    img += rng.normal(0, 0.03, img.shape)
+    # label-noise: corrupt a fraction of mask pixels (sensor/annotation noise)
+    n_noise = int(cfg.seg_noise * IMG_SIZE * IMG_SIZE)
+    idx = rng.integers(0, IMG_SIZE * IMG_SIZE, n_noise)
+    seg[idx] = rng.integers(0, NUM_CLASS + 1, n_noise)
+    return (
+        np.clip(img, 0, 1).astype(np.float32).reshape(IMG_SIZE, IMG_SIZE, 3),
+        seg.reshape(IMG_SIZE, IMG_SIZE),
+    )
+
+
+def paint_points(points: np.ndarray, seg_scores: np.ndarray, cam, rot, fx) -> np.ndarray:
+    """PointPainting: append per-pixel segmentation scores to each 3D point.
+
+    seg_scores: (H, W, NUM_SEG_CLASSES) softmax scores. Points projecting
+    outside the image get a one-hot background vector.
+    """
+    u, v, z = project(points, cam, rot, fx)
+    ui = np.clip(np.floor(u).astype(np.int64), 0, IMG_SIZE - 1)
+    vi = np.clip(np.floor(v).astype(np.int64), 0, IMG_SIZE - 1)
+    inside = (u >= 0) & (u < IMG_SIZE) & (v >= 0) & (v < IMG_SIZE) & (z > 0)
+    out = seg_scores[vi, ui].astype(np.float32)
+    bg = np.zeros_like(out)
+    bg[:, 0] = 1.0
+    return np.where(inside[:, None], out, bg)
+
+
+def point_fg_mask(scores: np.ndarray, thresh: float = 0.5) -> np.ndarray:
+    """Foreground mask from painted scores: P(not background) > thresh."""
+    return (1.0 - scores[:, 0]) > thresh
+
+
+def vote_targets(points: np.ndarray, scene: Scene) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-point vote supervision: (mask (N,), offset to owning box center (N,3)).
+
+    A point votes if it belongs to an object (is inside any GT box, using the
+    generator's point->object assignment transferred by proximity).
+    """
+    n = len(points)
+    mask = np.zeros(n, dtype=np.float32)
+    off = np.zeros((n, 3), dtype=np.float32)
+    for o in scene.objects:
+        R = _rot_z(o.heading)[:2, :2]
+        local = (points[:, :2] - o.center[None, :2]) @ R  # rotate into box frame
+        inside = (
+            (np.abs(local[:, 0]) < o.size[0] / 2 + 0.05)
+            & (np.abs(local[:, 1]) < o.size[1] / 2 + 0.05)
+            & (points[:, 2] > -0.05)
+            & (points[:, 2] < o.size[2] + 0.05)
+        )
+        new = inside & (mask < 0.5)
+        mask[new] = 1.0
+        off[new] = o.center[None, :] - points[new]
+    return mask, off

@@ -1,0 +1,321 @@
+"""Build-time training for the PointSplit reproduction (CPU, minutes).
+
+Trains, per dataset: the 2D segmenter, then the detector variants (VoteNet
+plain / painted-full / painted-split) on a pool of procedural scenes. A
+hand-rolled Adam (optax is not available in this environment) and vmapped
+per-scene losses keep this self-contained. ``aot.py`` caches the resulting
+weights under ``artifacts/weights/``; training only reruns when those caches
+are deleted.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, losses, model, scene
+from .common import DatasetConfig, IMG_SIZE, MEAN_SIZES, NUM_SEG_CLASSES
+from .losses import MAX_OBJ
+
+# Tunable via env for quick smoke runs (tests set these small).
+SEG_STEPS = int(os.environ.get("POINTSPLIT_SEG_STEPS", 240))
+DET_STEPS = int(os.environ.get("POINTSPLIT_DET_STEPS", 420))
+BATCH = int(os.environ.get("POINTSPLIT_BATCH", 4))
+POOL_SIZE = int(os.environ.get("POINTSPLIT_POOL", 384))
+TRAIN_POINTS = int(os.environ.get("POINTSPLIT_TRAIN_POINTS", 2048))
+
+MEAN_SIZES_J = jnp.array(MEAN_SIZES, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Scene pool -> padded numpy batches
+# ---------------------------------------------------------------------------
+
+
+def pad_gt(sc: scene.Scene) -> Dict[str, np.ndarray]:
+    boxes = sc.boxes()
+    k = min(len(boxes), MAX_OBJ)
+    out = {
+        "centers": np.zeros((MAX_OBJ, 3), np.float32),
+        "sizes": np.ones((MAX_OBJ, 3), np.float32),
+        "headings": np.zeros((MAX_OBJ,), np.float32),
+        "classes": np.zeros((MAX_OBJ,), np.int32),
+        "mask": np.zeros((MAX_OBJ,), np.float32),
+    }
+    if k:
+        out["centers"][:k] = boxes[:k, 0:3]
+        out["sizes"][:k] = boxes[:k, 3:6]
+        out["headings"][:k] = boxes[:k, 6]
+        out["classes"][:k] = boxes[:k, 7].astype(np.int32)
+        out["mask"][:k] = 1.0
+    return out
+
+
+class ScenePool:
+    """Pre-generated training scenes with painted features."""
+
+    def __init__(self, cfg: DatasetConfig, seg_params, size=None, seed0: int = 10_000):
+        size = POOL_SIZE if size is None else size
+        self.cfg = cfg
+        self.scenes: List[scene.Scene] = [
+            scene.generate_scene(seed0 + i, cfg) for i in range(size)
+        ]
+        self.gts = [pad_gt(s) for s in self.scenes]
+        # paint once with the trained segmenter
+        seg_batch = jax.jit(jax.vmap(lambda im: model.segmenter_scores(seg_params, im)))
+        self.scores: List[np.ndarray] = []
+        imgs = np.stack([s.image for s in self.scenes])
+        bs = 32
+        outs = []
+        for i in range(0, len(imgs), bs):
+            outs.append(np.asarray(seg_batch(jnp.asarray(imgs[i : i + bs]))))
+        seg_scores = np.concatenate(outs)
+        for s, sc_ in zip(self.scenes, seg_scores):
+            self.scores.append(scene.paint_points(s.points, sc_, s.cam_pos, s.cam_rot, s.fx))
+
+    def batch(self, rng: np.random.Generator, painted: bool, n_points: int = TRAIN_POINTS):
+        idx = rng.integers(0, len(self.scenes), BATCH)
+        xyz, feats, fg, gts = [], [], [], []
+        for i in idx:
+            s = self.scenes[i]
+            n = len(s.points)
+            sel = rng.choice(n, n_points, replace=n < n_points)
+            p = s.points[sel]
+            xyz.append(p)
+            h = p[:, 2:3]  # height above floor
+            if painted:
+                sc_ = self.scores[i][sel]
+                feats.append(np.concatenate([h, sc_], axis=1))
+                fg.append((1.0 - sc_[:, 0] > 0.5).astype(np.float32))
+            else:
+                feats.append(h)
+                fg.append(np.zeros(n_points, np.float32))
+            gts.append(self.gts[i])
+        stack = lambda key: jnp.asarray(np.stack([g[key] for g in gts]))
+        return (
+            jnp.asarray(np.stack(xyz)),
+            jnp.asarray(np.stack(feats).astype(np.float32)),
+            jnp.asarray(np.stack(fg)),
+            {k: stack(k) for k in gts[0]},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Segmenter training
+# ---------------------------------------------------------------------------
+
+
+def train_segmenter(cfg: DatasetConfig, steps=None, log=print):
+    steps = SEG_STEPS if steps is None else steps
+    key = jax.random.PRNGKey(7)
+    params = model.segmenter_init(key)
+    opt = adam_init(params)
+
+    def loss_fn(p, imgs, masks):
+        logits = jax.vmap(lambda im: model.segmenter_forward(p, im))(imgs)
+        return jax.vmap(losses.seg_loss)(logits, masks).mean()
+
+    @jax.jit
+    def step(p, o, imgs, masks):
+        l, g = jax.value_and_grad(loss_fn)(p, imgs, masks)
+        p, o = adam_step(p, g, o, lr=2e-3)
+        return p, o, l
+
+    rng = np.random.default_rng(1)
+    pool = [scene.generate_scene(50_000 + i, cfg) for i in range(min(POOL_SIZE, 256))]
+    imgs = np.stack([s.image for s in pool])
+    masks = np.stack([s.seg_mask for s in pool])
+    t0 = time.time()
+    for it in range(steps):
+        sel = rng.integers(0, len(pool), 8)
+        params, opt, l = step(params, opt, jnp.asarray(imgs[sel]), jnp.asarray(masks[sel]))
+        if it % 60 == 0 or it == steps - 1:
+            log(f"  [seg/{cfg.name}] step {it:4d} loss {float(l):.4f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Detector training
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(variant: str, w0: float, bias_layers: int):
+    def loss_fn(params, xyz, feats, fg, gt, keys):
+        def one(x, f, g, c, s, h, cl, m, k):
+            ep = model.detector_forward(
+                params,
+                x,
+                f if feats.shape[-1] > 0 else None,
+                variant=variant,
+                fg=g,
+                w0=w0,
+                bias_layers=bias_layers,
+                split_key=k,
+            )
+            gt_one = {"centers": c, "sizes": s, "headings": h, "classes": cl, "mask": m}
+            return losses.scene_loss(ep, gt_one, MEAN_SIZES_J)["total"]
+
+        ls = jax.vmap(one)(
+            xyz, feats, fg, gt["centers"], gt["sizes"], gt["headings"], gt["classes"],
+            gt["mask"], keys,
+        )
+        return ls.mean()
+
+    return loss_fn
+
+
+def train_detector(
+    pool: ScenePool,
+    painted: bool,
+    variant: str,
+    w0: float = common.DEFAULT_W0,
+    bias_layers: int = common.DEFAULT_BIAS_LAYERS,
+    steps=None,
+    seed: int = 3,
+    log=print,
+    init_params=None,
+    head: str = "vote",
+):
+    """Train one detector configuration. head: 'vote' | 'attn'."""
+    steps = DET_STEPS if steps is None else steps
+    key = jax.random.PRNGKey(seed)
+    params = init_params if init_params is not None else model.detector_init(key, painted)
+    attn_params = model.attn_head_init(jax.random.PRNGKey(seed + 100)) if head == "attn" else None
+
+    if head == "vote":
+        loss_core = make_loss_fn(variant, w0, bias_layers)
+
+        def full_loss(p, *args):
+            return loss_core(p, *args)
+
+        trainable = params
+    else:
+        def full_loss(p, xyz, feats, fg, gt, keys):
+            det, attn = p
+
+            def one(x, f, g, c, s, h, cl, m, k):
+                ep = model.attn_detector_forward(
+                    det, attn, x, f if feats.shape[-1] > 0 else None, variant=variant,
+                    fg=g, w0=w0, bias_layers=bias_layers, split_key=k,
+                )
+                gt_one = {"centers": c, "sizes": s, "headings": h, "classes": cl, "mask": m}
+                return losses.scene_loss(ep, gt_one, MEAN_SIZES_J)["total"]
+
+            return jax.vmap(one)(
+                xyz, feats, fg, gt["centers"], gt["sizes"], gt["headings"],
+                gt["classes"], gt["mask"], keys,
+            ).mean()
+
+        trainable = (params, attn_params)
+
+    opt = adam_init(trainable)
+
+    @jax.jit
+    def step(p, o, xyz, feats, fg, gt, keys, lr):
+        l, g = jax.value_and_grad(full_loss)(p, xyz, feats, fg, gt, keys)
+        p, o = adam_step(p, g, o, lr=lr)
+        return p, o, l
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    name = f"{variant}{'_attn' if head == 'attn' else ''}{'_painted' if painted else ''}"
+    for it in range(steps):
+        # step-decay schedule (the paper decays 10x at epochs 80/120 of 180)
+        frac = it / max(steps, 1)
+        lr = 1.5e-3 if frac < 0.45 else (4e-4 if frac < 0.8 else 1e-4)
+        xyz, feats, fg, gt = pool.batch(rng, painted)
+        keys = jax.random.split(jax.random.PRNGKey(seed * 100_000 + it), BATCH)
+        trainable, opt, l = step(trainable, opt, xyz, feats, fg, gt, keys, jnp.float32(lr))
+        if it % 60 == 0 or it == steps - 1:
+            log(f"  [det/{name}] step {it:4d} loss {float(l):.4f} ({time.time()-t0:.0f}s)")
+    if head == "attn":
+        return trainable  # (det_params, attn_params)
+    return trainable
+
+
+# ---------------------------------------------------------------------------
+# Weight (de)serialization — flat npz with path-encoded keys
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if k == "painted":
+                out[f"{prefix}{k}"] = np.array(1 if v else 0)
+            else:
+                out.update(flatten_params(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten_params(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_params(path: str, tree):
+    np.savez(path, **flatten_params(tree))
+
+
+def _set_path(d, keys, val):
+    k = keys[0]
+    if len(keys) == 1:
+        d[k] = val
+        return
+    d.setdefault(k, {})
+    _set_path(d[k], keys[1:], val)
+
+
+def load_params(path: str):
+    """Inverse of save_params: rebuilds dicts; integer-keyed dicts -> lists
+    of (w, b) tuples (matching _mlp_init / _dense_init layout)."""
+    raw = np.load(path)
+    nest: Dict = {}
+    for k in raw.files:
+        if k == "painted":
+            nest["painted"] = bool(raw[k])
+            continue
+        _set_path(nest, k.split("/"), jnp.asarray(raw[k]))
+
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node.keys())
+            if keys and all(k.isdigit() for k in keys):
+                items = [fix(node[str(i)]) for i in range(len(keys))]
+                # (w, b) pairs are dicts {0: w, 1: b} -> tuples
+                if len(items) == 2 and all(not isinstance(x, (list, tuple)) for x in items):
+                    return (items[0], items[1])
+                return items
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(nest)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# make `compile` importable regardless of pytest invocation directory
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# keep any in-test training tiny
+os.environ.setdefault("POINTSPLIT_SEG_STEPS", "6")
+os.environ.setdefault("POINTSPLIT_DET_STEPS", "6")
+os.environ.setdefault("POINTSPLIT_POOL", "12")

@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes; every kernel must match its ref to float tolerance
+under interpret=True (the same lowering the AOT artifacts embed).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pairwise import pairwise_dist2_pallas
+from compile.kernels.pointnet import (
+    mxu_utilization_estimate,
+    pointnet_pallas,
+    vmem_footprint_bytes,
+)
+from compile.kernels.qmlp import qmlp_pallas
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def mk_weights(key, widths):
+    ws = []
+    for i in range(len(widths) - 1):
+        key, k1, k2 = jax.random.split(key, 3)
+        ws.append(
+            (
+                jax.random.normal(k1, (widths[i], widths[i + 1])) * 0.3,
+                jax.random.normal(k2, (widths[i + 1],)) * 0.1,
+            )
+        )
+    return ws
+
+
+@given(
+    b=st.sampled_from([8, 32, 64, 96]),
+    k=st.sampled_from([4, 8, 16, 32]),
+    cin=st.sampled_from([4, 15, 67]),
+    seed=st.integers(0, 2**16),
+)
+def test_pointnet_matches_ref(b, k, cin, seed):
+    key = jax.random.PRNGKey(seed)
+    widths = [cin, 16, 16, 24]
+    ws = mk_weights(key, widths)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (b, k, cin))
+    out = pointnet_pallas(g, ws)
+    expect = ref.pointnet_ref(g, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+def test_pointnet_block_not_dividing_b():
+    # b=40 with default block 32 -> falls back to a divisor
+    key = jax.random.PRNGKey(0)
+    ws = mk_weights(key, [6, 8, 8])
+    g = jax.random.normal(key, (40, 4, 6))
+    out = pointnet_pallas(g, ws)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.pointnet_ref(g, ws)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pointnet_under_jit():
+    key = jax.random.PRNGKey(1)
+    ws = mk_weights(key, [15, 32, 32, 64])
+    g = jax.random.normal(key, (128, 32, 15))
+    f = jax.jit(lambda x: pointnet_pallas(x, ws))
+    np.testing.assert_allclose(
+        np.asarray(f(g)), np.asarray(ref.pointnet_ref(g, ws)), rtol=1e-5, atol=1e-5
+    )
+
+
+@given(
+    n=st.sampled_from([16, 64, 128]),
+    cin=st.sampled_from([16, 64]),
+    cout=st.sampled_from([8, 79, 131]),
+    seed=st.integers(0, 2**16),
+)
+def test_qmlp_matches_ref(n, cin, cout, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, cin))
+    w = jax.random.normal(k2, (cin, cout)) * 0.2
+    b = jax.random.normal(k3, (cout,)) * 0.1
+    ws = jnp.abs(jax.random.normal(k1, (cout,))) * 0.01 + 1e-4
+    a_scale = jnp.abs(jax.random.normal(k2, (cout,))) * 0.05 + 1e-4
+    a_zero = jnp.round(jax.random.normal(k3, (cout,)) * 10)
+    out = np.asarray(qmlp_pallas(x, w, b, ws, a_scale, a_zero))
+    expect = np.asarray(ref.qmlp_ref(x, w, b, ws, a_scale, a_zero))
+    # rounding at a .5 boundary may flip a rare element by exactly one
+    # quantization step (fp summation-order difference between the pallas
+    # grid and the fused ref); bound by one step and require near-exactness
+    step = np.asarray(a_scale)[None, :]
+    diff = np.abs(out - expect)
+    assert (diff <= step + 1e-5).all(), f"off-grid deviation {diff.max()}"
+    frac_exact = (diff < 1e-5).mean()
+    assert frac_exact > 0.99, f"too many boundary flips: {1 - frac_exact:.4f}"
+
+
+def test_qmlp_output_on_quantization_grid():
+    """Outputs must land on the affine int8 grid: (q - z) * s for integer q."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (32, 16))
+    w = jax.random.normal(key, (16, 8)) * 0.3
+    b = jnp.zeros(8)
+    s = jnp.full((8,), 0.05)
+    z = jnp.zeros(8)
+    out = np.asarray(qmlp_pallas(x, w, b, jnp.full((8,), 0.01), s, z))
+    q = out / 0.05
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+    assert out.min() >= -128 * 0.05 - 1e-6 and out.max() <= 127 * 0.05 + 1e-6
+
+
+@given(
+    n=st.sampled_from([64, 256, 1000]),
+    m=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_pairwise_matches_ref(n, m, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (n, 3)) * 3
+    b = jax.random.normal(jax.random.fold_in(key, 1), (m, 3)) * 3
+    out = pairwise_dist2_pallas(a, b)
+    expect = ref.pairwise_dist2_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_nonnegative():
+    key = jax.random.PRNGKey(7)
+    a = jax.random.normal(key, (128, 3)) * 10
+    out = np.asarray(pairwise_dist2_pallas(a, a))
+    assert (out >= 0).all()
+    # |x|^2-form suffers f32 cancellation on the diagonal: bound relative
+    # to the squared magnitudes, not absolutely
+    np.testing.assert_allclose(np.diag(out), 0.0, atol=1e-2)
+
+
+def test_vmem_footprint_within_budget():
+    """§Perf structural check: SA1's tile fits VMEM with double-buffer room."""
+    for widths, k in [([15, 32, 32, 64], 32), ([67, 64, 64, 128], 16), ([131, 128, 128, 128], 8)]:
+        assert vmem_footprint_bytes(256, k, widths) < 1 << 20, (widths, k)
+
+
+def test_mxu_utilization_monotone_in_width():
+    narrow = mxu_utilization_estimate(32, [15, 32, 32, 64])
+    wide = mxu_utilization_estimate(8, [131, 128, 128, 128])
+    assert 0.0 < narrow < wide <= 1.0

@@ -1,0 +1,114 @@
+"""VoteNet loss components: supervised signals behave as specified."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import common, losses
+
+MEAN = jnp.asarray(common.MEAN_SIZES)
+
+
+def fake_gt(centers, classes=None):
+    k = losses.MAX_OBJ
+    n = len(centers)
+    gt = {
+        "centers": jnp.zeros((k, 3)).at[:n].set(jnp.asarray(centers, jnp.float32)),
+        "sizes": jnp.ones((k, 3)).at[:n].set(jnp.asarray([[1.0, 1.0, 1.0]] * n)),
+        "headings": jnp.zeros((k,)),
+        "classes": jnp.zeros((k,), jnp.int32).at[:n].set(
+            jnp.asarray(classes if classes is not None else [0] * n, jnp.int32)
+        ),
+        "mask": jnp.zeros((k,)).at[:n].set(1.0),
+    }
+    return gt
+
+
+def fake_endpoints(cluster_centers, prop=None):
+    p = len(cluster_centers)
+    return {
+        "seed_xyz": jnp.asarray(cluster_centers, jnp.float32),
+        "vote_xyz": jnp.asarray(cluster_centers, jnp.float32),
+        "cluster_xyz": jnp.asarray(cluster_centers, jnp.float32),
+        "proposal": prop if prop is not None else jnp.zeros((p, common.PROPOSAL_CH)),
+    }
+
+
+def test_perfect_votes_zero_vote_loss():
+    centers = [[0.0, 0.0, 0.5]]
+    ep = fake_endpoints([[0.0, 0.0, 0.5]])
+    out = losses.scene_loss(ep, fake_gt(centers), MEAN)
+    assert float(out["vote"]) < 1e-6
+
+
+def test_bad_votes_penalized():
+    centers = [[0.0, 0.0, 0.5]]
+    ep = fake_endpoints([[0.0, 0.0, 0.5]])
+    ep["vote_xyz"] = jnp.asarray([[3.0, 3.0, 0.5]])  # vote far away
+    out = losses.scene_loss(ep, fake_gt(centers), MEAN)
+    assert float(out["vote"]) > 1.0
+
+
+def test_objectness_ce_direction():
+    """Raising the positive logit on a near-GT proposal lowers the loss."""
+    centers = [[0.0, 0.0, 0.5]]
+    gt = fake_gt(centers)
+    prop_bad = jnp.zeros((1, common.PROPOSAL_CH)).at[0, 3].set(5.0)  # 'no object'
+    prop_good = jnp.zeros((1, common.PROPOSAL_CH)).at[0, 4].set(5.0)  # 'object'
+    l_bad = losses.scene_loss(fake_endpoints(centers, prop_bad), gt, MEAN)
+    l_good = losses.scene_loss(fake_endpoints(centers, prop_good), gt, MEAN)
+    assert float(l_good["objectness"]) < float(l_bad["objectness"])
+
+
+def test_far_proposal_is_negative():
+    gt = fake_gt([[0.0, 0.0, 0.5]])
+    far = [[5.0, 5.0, 0.5]]
+    prop_obj = jnp.zeros((1, common.PROPOSAL_CH)).at[0, 4].set(5.0)  # claims object
+    prop_no = jnp.zeros((1, common.PROPOSAL_CH)).at[0, 3].set(5.0)
+    l_claim = losses.scene_loss(fake_endpoints(far, prop_obj), gt, MEAN)
+    l_deny = losses.scene_loss(fake_endpoints(far, prop_no), gt, MEAN)
+    assert float(l_deny["objectness"]) < float(l_claim["objectness"])
+
+
+def test_heading_targets_in_unit_interval():
+    for h in np.linspace(0, 2 * np.pi - 1e-3, 20):
+        per = 2 * np.pi / common.NUM_HEADING_BIN
+        hbin = int(h // per)
+        hres = (h - (hbin * per + per / 2)) / (per / 2)
+        assert -1.0 - 1e-6 <= hres <= 1.0 + 1e-6
+
+
+def test_total_is_weighted_sum():
+    gt = fake_gt([[0.0, 0.0, 0.5]])
+    ep = fake_endpoints([[0.1, 0.0, 0.5]])
+    out = losses.scene_loss(ep, gt, MEAN)
+    expect = (
+        losses.W_VOTE * out["vote"]
+        + losses.W_OBJ * out["objectness"]
+        + losses.W_CENTER * out["center"]
+        + losses.W_HEAD_CLS * out["heading_cls"]
+        + losses.W_HEAD_REG * out["heading_reg"]
+        + losses.W_SIZE_CLS * out["size_cls"]
+        + losses.W_SIZE_REG * out["size_reg"]
+        + losses.W_SEM * out["sem"]
+    )
+    np.testing.assert_allclose(float(out["total"]), float(expect), rtol=1e-6)
+
+
+def test_seg_loss_prefers_correct_mask():
+    rng = np.random.default_rng(0)
+    mask = jnp.asarray(rng.integers(0, common.NUM_SEG_CLASSES, (16, 16)), jnp.int32)
+    good = jax.nn.one_hot(mask, common.NUM_SEG_CLASSES) * 10.0
+    bad = jnp.zeros_like(good)
+    assert float(losses.seg_loss(good, mask)) < float(losses.seg_loss(bad, mask))
+
+
+def test_loss_differentiable():
+    gt = fake_gt([[0.0, 0.0, 0.5]])
+
+    def f(prop):
+        return losses.scene_loss(fake_endpoints([[0.1, 0.0, 0.5]], prop), gt, MEAN)["total"]
+
+    g = jax.grad(f)(jnp.zeros((1, common.PROPOSAL_CH)))
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).sum() > 0

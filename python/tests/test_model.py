@@ -1,0 +1,142 @@
+"""VoteNet-mini model: shapes, variants, decode, attention head."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def painted_params():
+    return model.detector_init(KEY, painted=True)
+
+
+@pytest.fixture(scope="module")
+def plain_params():
+    return model.detector_init(KEY, painted=False)
+
+
+def scene_inputs(painted, n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    xyz = jnp.asarray(rng.uniform(-2, 2, (n, 3)).astype(np.float32))
+    c = common.FEAT_DIM if painted else common.FEAT_DIM_PLAIN
+    feats = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    fg = jnp.asarray((rng.uniform(size=n) < 0.3).astype(np.float32))
+    return xyz, feats, fg
+
+
+@pytest.mark.parametrize("variant", ["full", "split", "randsplit"])
+def test_forward_shapes(painted_params, variant):
+    xyz, feats, fg = scene_inputs(True)
+    ep = model.detector_forward(
+        painted_params,
+        xyz,
+        feats,
+        variant=variant,
+        fg=fg,
+        split_key=jax.random.PRNGKey(1),
+    )
+    assert ep["seed_xyz"].shape == (common.NUM_SEEDS, 3)
+    assert ep["vote_xyz"].shape == (common.NUM_SEEDS, 3)
+    assert ep["cluster_xyz"].shape == (common.NUM_PROPOSALS, 3)
+    assert ep["proposal"].shape == (common.NUM_PROPOSALS, common.PROPOSAL_CH)
+
+
+def test_plain_variant_narrow_features(plain_params):
+    xyz, feats, _ = scene_inputs(False)
+    ep = model.detector_forward(plain_params, xyz, feats, variant="full")
+    assert ep["proposal"].shape == (common.NUM_PROPOSALS, common.PROPOSAL_CH)
+
+
+def test_forward_deterministic(painted_params):
+    xyz, feats, fg = scene_inputs(True, seed=3)
+    a = model.detector_forward(painted_params, xyz, feats, variant="split", fg=fg)
+    b = model.detector_forward(painted_params, xyz, feats, variant="split", fg=fg)
+    np.testing.assert_array_equal(np.asarray(a["proposal"]), np.asarray(b["proposal"]))
+
+
+def test_split_uses_bias_weight(painted_params):
+    """w0 != 1 must change which points the bias pipeline samples."""
+    xyz, feats, fg = scene_inputs(True, seed=4)
+    a = model.detector_forward(painted_params, xyz, feats, variant="split", fg=fg, w0=1.0)
+    b = model.detector_forward(painted_params, xyz, feats, variant="split", fg=fg, w0=3.0)
+    assert not np.allclose(np.asarray(a["seed_xyz"]), np.asarray(b["seed_xyz"]))
+
+
+def test_pallas_and_ref_paths_agree(painted_params):
+    xyz, feats, fg = scene_inputs(True, seed=5, n=256)
+    a = model.detector_forward(painted_params, xyz, feats, variant="full", fg=fg, use_pallas=False)
+    b = model.detector_forward(painted_params, xyz, feats, variant="full", fg=fg, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(a["proposal"]), np.asarray(b["proposal"]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_decode_shapes_and_ranges(painted_params):
+    xyz, feats, fg = scene_inputs(True, seed=6)
+    ep = model.detector_forward(painted_params, xyz, feats, variant="full", fg=fg)
+    dec = model.decode_proposals(
+        ep["cluster_xyz"], ep["proposal"], jnp.asarray(common.MEAN_SIZES)
+    )
+    assert dec["center"].shape == (common.NUM_PROPOSALS, 3)
+    obj = np.asarray(dec["objectness"])
+    assert (obj >= 0).all() and (obj <= 1).all()
+    size = np.asarray(dec["size"])
+    assert (size > 0).all()
+    h = np.asarray(dec["heading"])
+    assert (h >= 0).all() and (h < 2 * np.pi + 1e-5).all()
+
+
+def test_segmenter_shapes():
+    p = model.segmenter_init(KEY)
+    img = jnp.zeros((common.IMG_SIZE, common.IMG_SIZE, 3))
+    logits = model.segmenter_forward(p, img)
+    assert logits.shape == (common.IMG_SIZE, common.IMG_SIZE, common.NUM_SEG_CLASSES)
+    scores = np.asarray(model.segmenter_scores(p, img))
+    np.testing.assert_allclose(scores.sum(-1), 1.0, atol=1e-5)
+
+
+def test_attn_head_shapes(painted_params):
+    ap = model.attn_head_init(jax.random.PRNGKey(2))
+    xyz, feats, fg = scene_inputs(True, seed=7)
+    ep = model.attn_detector_forward(painted_params, ap, xyz, feats, variant="full", fg=fg)
+    assert ep["proposal"].shape == (common.NUM_PROPOSALS, common.PROPOSAL_CH)
+    assert ep["cluster_xyz"].shape == (common.NUM_PROPOSALS, 3)
+
+
+def test_attn_apply_matches_full_forward(painted_params):
+    """The exported network-only subgraphs must compose to the full head."""
+    ap = model.attn_head_init(jax.random.PRNGKey(2))
+    seed_xyz = jnp.asarray(np.random.default_rng(0).normal(size=(common.NUM_SEEDS, 3)).astype(np.float32))
+    seed_feats = jnp.asarray(
+        np.random.default_rng(1).normal(size=(common.NUM_SEEDS, common.SEED_FEAT)).astype(np.float32)
+    )
+    centers, out = model.attn_head_forward(ap, seed_xyz, seed_feats)
+    from compile import sampling
+
+    proj = model.attn_proj(ap, seed_feats)
+    idx = sampling.fps(seed_xyz, common.NUM_PROPOSALS)
+    out2 = model.attn_apply(ap, proj[idx], proj)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), rtol=1e-5, atol=1e-5)
+
+
+def test_role_groups_partition_head():
+    groups = common.proposal_role_groups()
+    assert sorted(c for g in groups for c in g) == list(range(common.PROPOSAL_CH))
+    assert len(groups) == 3
+    vgroups = common.vote_role_groups()
+    assert sorted(c for g in vgroups for c in g) == list(range(common.VOTE_CH))
+
+
+def test_fp_layer_cost_table1_shape():
+    """Table 1: PointSplit FP must halve params and cut MAdds by ~1/3."""
+    (p_orig, m_orig), (p_ps, m_ps) = model.fp_layer_cost(paper_scale=True)
+    assert p_ps < 0.55 * p_orig
+    assert m_ps < 0.75 * m_orig
+    # paper-scale absolute numbers (Table 1: 398,336 params / 304 MAdd)
+    assert abs(p_orig - 398_336) / 398_336 < 0.05
+    assert abs(m_orig - 304e6) / 304e6 < 0.1

@@ -1,0 +1,129 @@
+"""Role-based group-wise quantization (paper §4.3): the Table 11 mechanics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, model, quantize
+from compile.kernels import ref
+
+
+def head_like_activations(n=512, seed=0):
+    """Heterogeneous channels mimicking the proposal head: tight xyz,
+    wide logits, medium regression — the distribution split of Fig. 6."""
+    rng = np.random.default_rng(seed)
+    cout = common.PROPOSAL_CH
+    acts = np.zeros((n, cout), np.float32)
+    g1, g2, g3 = common.proposal_role_groups()
+    acts[:, g1] = rng.normal(0, 0.05, (n, len(g1)))
+    acts[:, g2] = rng.normal(0, 6.0, (n, len(g2)))
+    acts[:, g3] = rng.normal(0, 0.6, (n, len(g3)))
+    return acts
+
+
+def qdq_with(acts, scheme):
+    roles = common.proposal_role_groups()
+    groups = quantize.channel_groups(scheme, acts.shape[1], roles)
+    s, z = quantize.act_qparams(acts.min(0), acts.max(0), groups)
+    q = ref.qdq_act(jnp.asarray(acts), jnp.asarray(s), jnp.asarray(z))
+    return np.asarray(q)
+
+
+@pytest.mark.parametrize("scheme", quantize.SCHEMES)
+def test_qdq_bounded_error(scheme):
+    acts = head_like_activations()
+    q = qdq_with(acts, scheme)
+    # error can never exceed one quantization step of the widest group
+    assert np.abs(q - acts).max() < (acts.max() - acts.min()) / 255.0 + 1e-5
+
+
+def rel_group_error(acts, scheme):
+    """Scale-normalized quantization error: mean over role groups of
+    MSE_g / Var_g — what actually predicts mAP damage (a 0.04 absolute
+    error is fatal for xyz offsets yet invisible for +-20 logits)."""
+    q = qdq_with(acts, scheme)
+    errs = []
+    for g in common.proposal_role_groups():
+        mse = np.mean((q[:, g] - acts[:, g]) ** 2)
+        errs.append(mse / np.var(acts[:, g]))
+    return float(np.mean(errs))
+
+
+def test_role_vs_layer_error_ordering():
+    """The paper core claim: layer >> group >> role ~ channel (when errors
+    are normalized per role group, i.e. weighted by task relevance)."""
+    acts = head_like_activations()
+    err = {s: rel_group_error(acts, s) for s in quantize.SCHEMES}
+    assert err["layer"] > 10 * err["role"], err
+    assert err["group"] > err["role"], err
+    assert err["channel"] <= err["role"] * 1.2, err
+
+
+def test_xyz_channels_destroyed_by_layer_scale():
+    acts = head_like_activations()
+    q = qdq_with(acts, "layer")
+    g1 = common.proposal_role_groups()[0]
+    rel = np.sum((q[:, g1] - acts[:, g1]) ** 2) / np.sum(acts[:, g1] ** 2)
+    assert rel > 0.3, f"xyz relative error {rel} should be catastrophic under layer-wise"
+
+
+def test_param_counts_match_paper_shape():
+    counts = {s: quantize.quant_param_count(s) for s in quantize.SCHEMES}
+    assert counts["layer"] < counts["role"] == counts["group"] < counts["channel"]
+    # channel/role ratio ~ the paper's 67x (ours: 210 channels vs 5 groups = 42x)
+    assert counts["channel"] / counts["role"] > 30
+
+
+def test_channel_groups_partition():
+    roles = common.proposal_role_groups()
+    for scheme in quantize.SCHEMES:
+        groups = quantize.channel_groups(scheme, common.PROPOSAL_CH, roles)
+        flat = sorted(c for g in groups for c in g)
+        assert flat == list(range(common.PROPOSAL_CH)), scheme
+
+
+def test_build_qconfig_covers_backbone_and_heads():
+    params = model.detector_init(jax.random.PRNGKey(0), painted=True)
+    calib = {
+        "vote_out_min": np.full(common.VOTE_CH, -1.0, np.float32),
+        "vote_out_max": np.full(common.VOTE_CH, 1.0, np.float32),
+        "prop_out_min": np.full(common.PROPOSAL_CH, -1.0, np.float32),
+        "prop_out_max": np.full(common.PROPOSAL_CH, 1.0, np.float32),
+    }
+    qc = quantize.build_qconfig(params, calib, "role")
+    assert "vote_out" in qc.act_q and "prop_out" in qc.act_q
+    assert "sa1.0" in qc.weight_scales and "fp_fc.0" in qc.weight_scales
+    # role granularity: vote scales take exactly 2 distinct values
+    vs = np.asarray(qc.act_q["vote_out"][0])
+    assert len(np.unique(vs)) <= 2
+
+
+def test_weight_qdq_error_small():
+    params = model.detector_init(jax.random.PRNGKey(1), painted=True)
+    w = np.asarray(params["prop_out"][0])
+    roles = common.proposal_role_groups()
+    sv = quantize.weight_scale_vector(w, quantize.channel_groups("role", w.shape[1], roles))
+    wq = np.asarray(ref.qdq_weight(jnp.asarray(w), jnp.asarray(sv)))
+    rel = np.abs(wq - w).max() / (np.abs(w).max() + 1e-9)
+    assert rel < 0.02
+
+
+def test_head_stats_structure():
+    params = model.detector_init(jax.random.PRNGKey(2), painted=True)
+    acts_v = np.random.default_rng(0).normal(size=(64, common.VOTE_CH)).astype(np.float32)
+    acts_p = head_like_activations(64)
+    calib = {
+        "vote_out_min": acts_v.min(0),
+        "vote_out_max": acts_v.max(0),
+        "prop_out_min": acts_p.min(0),
+        "prop_out_max": acts_p.max(0),
+        "vote_acts": acts_v,
+        "prop_acts": acts_p,
+    }
+    stats = quantize.head_stats(params, calib)
+    assert set(stats) == {"vote_out", "prop_out"}
+    s = stats["prop_out"]
+    assert len(s["channel_order"]) == common.PROPOSAL_CH
+    assert len(s["act_hist"]) == common.PROPOSAL_CH
+    np.testing.assert_allclose(np.sum(s["act_hist"][0]), 1.0, atol=1e-6)

@@ -1,0 +1,125 @@
+"""L2 point-manipulation ops: FPS / biased FPS / ball query / 3-NN interp."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import sampling
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def cloud(seed, n=400, scale=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, scale, (n, 3)).astype(np.float32))
+
+
+def fps_numpy(xyz, m):
+    """Independent numpy re-implementation as oracle."""
+    xyz = np.asarray(xyz)
+    n = len(xyz)
+    out = [0]
+    mind = np.full(n, np.inf)
+    for _ in range(1, m):
+        d = np.sum((xyz - xyz[out[-1]]) ** 2, axis=1)
+        mind = np.minimum(mind, d)
+        out.append(int(np.argmax(mind)))
+    return np.array(out)
+
+
+@given(seed=st.integers(0, 1000), m=st.sampled_from([2, 16, 64]))
+def test_fps_matches_numpy_oracle(seed, m):
+    xyz = cloud(seed)
+    got = np.asarray(sampling.fps(xyz, m))
+    expect = fps_numpy(xyz, m)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_fps_indices_distinct():
+    xyz = cloud(1, n=300)
+    idx = np.asarray(sampling.fps(xyz, 100))
+    assert len(set(idx.tolist())) == 100
+
+
+def test_biased_fps_prefers_foreground():
+    xyz = cloud(2, n=600)
+    fg = jnp.asarray((np.asarray(xyz)[:, 0] < 1.0).astype(np.float32))
+    base = np.asarray(sampling.fps(xyz, 128))
+    biased = np.asarray(sampling.fps(xyz, 128, fg, w0=3.0))
+    fgn = np.asarray(fg)
+    assert fgn[biased].mean() > fgn[base].mean()
+
+
+def test_biased_fps_w0_one_is_regular():
+    xyz = cloud(3)
+    fg = jnp.ones(xyz.shape[0])
+    a = np.asarray(sampling.fps(xyz, 50))
+    b = np.asarray(sampling.fps(xyz, 50, fg, w0=1.0))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(seed=st.integers(0, 1000), r=st.sampled_from([0.3, 0.8]), k=st.sampled_from([4, 16]))
+def test_ball_query_within_radius_or_fill(seed, r, k):
+    xyz = cloud(seed, n=300, scale=2.0)
+    centers_idx = sampling.fps(xyz, 16)
+    centers = xyz[centers_idx]
+    groups = np.asarray(sampling.ball_query(centers, xyz, r, k, use_pallas=False))
+    x = np.asarray(xyz)
+    c = np.asarray(centers)
+    for i in range(16):
+        first = groups[i, 0]
+        for j in groups[i]:
+            d = np.linalg.norm(x[j] - c[i])
+            assert d <= r + 1e-5 or j == first
+
+
+def test_ball_query_pallas_path_matches_ref_path():
+    xyz = cloud(5, n=256)
+    centers = xyz[sampling.fps(xyz, 32)]
+    a = np.asarray(sampling.ball_query(centers, xyz, 0.5, 8, use_pallas=True))
+    b = np.asarray(sampling.ball_query(centers, xyz, 0.5, 8, use_pallas=False))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_group_features_relative_coords():
+    xyz = jnp.asarray([[0.0, 0, 0], [1, 0, 0], [0, 2, 0]], jnp.float32)
+    feats = jnp.asarray([[5.0], [6.0], [7.0]])
+    g = sampling.group_features(xyz, feats, jnp.asarray([1]), jnp.asarray([[0, 2]]))
+    assert g.shape == (1, 2, 4)
+    np.testing.assert_allclose(np.asarray(g)[0, 0], [-1, 0, 0, 5])
+    np.testing.assert_allclose(np.asarray(g)[0, 1], [-1, 2, 0, 7])
+
+
+def test_three_nn_interpolate_exact_at_sources():
+    src = cloud(6, n=32)
+    feats = jnp.asarray(np.random.default_rng(0).normal(size=(32, 5)).astype(np.float32))
+    out = np.asarray(sampling.three_nn_interpolate(src, src, feats))
+    np.testing.assert_allclose(out, np.asarray(feats), rtol=1e-3, atol=1e-3)
+
+
+def test_random_split_partitions():
+    ia, ib = sampling.random_split(100, jax.random.PRNGKey(0))
+    merged = sorted(np.concatenate([np.asarray(ia), np.asarray(ib)]).tolist())
+    assert merged == list(range(100))
+    assert len(np.asarray(ia)) == 50
+
+
+def test_fps_start_parameter():
+    xyz = cloud(7)
+    idx = np.asarray(sampling.fps(xyz, 16, start=123))
+    assert idx[0] == 123
+    # different starts decorrelate the sampled views (the PointSplit fix)
+    a = set(np.asarray(sampling.fps(xyz, 64, start=0)).tolist())
+    b = set(np.asarray(sampling.fps(xyz, 64, start=200)).tolist())
+    assert len(a & b) < 60
+
+
+def test_fps_start_matches_rust_convention():
+    """start index becomes out[0]; remaining selection is standard FPS."""
+    xyz = cloud(8, n=100)
+    idx = np.asarray(sampling.fps(xyz, 3, start=50))
+    x = np.asarray(xyz)
+    d = np.linalg.norm(x - x[50], axis=1)
+    assert idx[1] == int(np.argmax(d))

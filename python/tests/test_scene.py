@@ -1,0 +1,80 @@
+"""Synthetic scene generator invariants (python side of the parity pair)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import common, scene
+
+settings.register_profile("ci", max_examples=8, deadline=None)
+settings.load_profile("ci")
+
+
+def test_shapes_and_determinism():
+    a = scene.generate_scene(7, common.SYNRGBD)
+    b = scene.generate_scene(7, common.SYNRGBD)
+    assert a.points.shape == (common.SYNRGBD.num_points, 3)
+    assert a.image.shape == (common.IMG_SIZE, common.IMG_SIZE, 3)
+    assert a.seg_mask.shape == (common.IMG_SIZE, common.IMG_SIZE)
+    np.testing.assert_array_equal(a.points, b.points)
+    np.testing.assert_array_equal(a.seg_mask, b.seg_mask)
+
+
+@given(seed=st.integers(0, 500))
+def test_object_count_in_range(seed):
+    s = scene.generate_scene(seed, common.SYNRGBD)
+    assert 1 <= len(s.objects) <= common.SYNRGBD.max_objects
+
+
+@given(seed=st.integers(0, 200))
+def test_boxes_well_formed(seed):
+    s = scene.generate_scene(seed, common.SYNSCAN)
+    boxes = s.boxes()
+    if len(boxes):
+        assert (boxes[:, 3:6] > 0.05).all()
+        assert (boxes[:, 6] >= 0).all() and (boxes[:, 6] < 2 * np.pi + 1e-5).all()
+        assert (boxes[:, 7] >= 0).all() and (boxes[:, 7] < common.NUM_CLASS).all()
+
+
+def test_seg_mask_label_range_and_fg_presence():
+    s = scene.generate_scene(11, common.SYNRGBD)
+    assert s.seg_mask.min() >= 0 and s.seg_mask.max() <= common.NUM_CLASS
+    assert (s.seg_mask > 0).sum() > 20
+
+
+def test_image_in_unit_range():
+    s = scene.generate_scene(12, common.SYNRGBD)
+    assert s.image.min() >= 0.0 and s.image.max() <= 1.0
+
+
+def test_paint_with_oracle_mask_marks_objects():
+    s = scene.generate_scene(13, common.SYNRGBD)
+    # one-hot oracle scores from the GT mask
+    scores = np.zeros((common.IMG_SIZE, common.IMG_SIZE, common.NUM_SEG_CLASSES), np.float32)
+    ys, xs = np.mgrid[0 : common.IMG_SIZE, 0 : common.IMG_SIZE]
+    scores[ys, xs, s.seg_mask] = 1.0
+    painted = scene.paint_points(s.points, scores, s.cam_pos, s.cam_rot, s.fx)
+    assert painted.shape == (len(s.points), common.NUM_SEG_CLASSES)
+    np.testing.assert_allclose(painted.sum(1), 1.0, atol=1e-5)
+    fg = scene.point_fg_mask(painted)
+    obj_pts = s.point_obj >= 0
+    # oracle painting should label most visible object points as foreground
+    assert fg[obj_pts].mean() > 0.45
+
+
+def test_vote_targets_point_to_centers():
+    s = scene.generate_scene(14, common.SYNRGBD)
+    mask, off = scene.vote_targets(s.points, s)
+    assert mask.shape == (len(s.points),)
+    assert 0.0 < mask.mean() < 0.9
+    voted = s.points[mask > 0.5] + off[mask > 0.5]
+    centers = np.stack([o.center for o in s.objects])
+    d = np.linalg.norm(voted[:, None, :] - centers[None], axis=2).min(1)
+    assert np.quantile(d, 0.9) < 0.1, "votes must land on some GT center"
+
+
+def test_synscan_denser_and_larger():
+    a = scene.generate_scene(15, common.SYNRGBD)
+    b = scene.generate_scene(15, common.SYNSCAN)
+    assert len(b.points) == 2 * len(a.points)
+    # synscan rooms are larger -> larger coordinate spread
+    assert np.ptp(b.points[:, 0]) > np.ptp(a.points[:, 0])

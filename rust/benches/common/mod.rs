@@ -1,0 +1,36 @@
+//! Shared helpers for the paper-table bench binaries.
+
+use pointsplit::coordinator::serve::{serve, ServeReport};
+use pointsplit::coordinator::DetectorConfig;
+use pointsplit::data;
+use pointsplit::runtime::Runtime;
+
+/// Scene budget per configuration (override: POINTSPLIT_BENCH_SCENES).
+pub fn scene_budget(default: usize) -> usize {
+    std::env::var("POINTSPLIT_BENCH_SCENES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get().min(6)).unwrap_or(4)
+}
+
+/// Evaluate one detector configuration over the shared validation seed range.
+pub fn eval_config(rt: &Runtime, cfg: &DetectorConfig, scenes: usize) -> ServeReport {
+    let ds = data::dataset(&cfg.dataset).expect("dataset");
+    serve(rt, cfg, ds, scenes, workers(), 500_000).expect("serve")
+}
+
+pub fn open_runtime() -> Runtime {
+    Runtime::open("artifacts").expect("run `make artifacts` first")
+}
+
+/// Format an Option<f64> AP as the paper does (x100, '-' when absent).
+pub fn ap_cell(ap: Option<f64>) -> String {
+    match ap {
+        Some(v) => format!("{:.1}", v * 100.0),
+        None => "-".to_string(),
+    }
+}

@@ -1,0 +1,63 @@
+//! Paper Fig. 10: PointPainting(INT8) vs PointSplit(INT8) across the four
+//! processor pairings (CPU-CPU, CPU-EdgeTPU, GPU-CPU, GPU-EdgeTPU).
+//!
+//! Expected shape: PointSplit reduces latency on EVERY pairing; largest
+//! relative gains where the "first" processor is the bottleneck (paper:
+//! 1.7x on CPU-CPU, 1.8x on CPU-EdgeTPU).
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{generate_scene, SYNRGBD};
+use pointsplit::sim::DeviceKind;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scenes = common::scene_budget(4);
+    let pairs = [
+        ("CPU-CPU", DeviceKind::Cpu, DeviceKind::Cpu),
+        ("CPU-EdgeTPU", DeviceKind::Cpu, DeviceKind::EdgeTpu),
+        ("GPU-CPU", DeviceKind::Gpu, DeviceKind::Cpu),
+        ("GPU-EdgeTPU", DeviceKind::Gpu, DeviceKind::EdgeTpu),
+    ];
+    let paper = [(8545.0, 5016.0), (4243.0, 2407.0), (4341.0, 3563.0), (1224.0, 1113.0)];
+    let mut t = Table::new(&[
+        "config",
+        "PointPainting (ms)",
+        "PointSplit (ms)",
+        "speedup",
+        "paper speedup",
+    ]);
+    for ((name, pd, nd), (ppp, pps)) in pairs.iter().zip(paper.iter()) {
+        let mut pp = 0.0;
+        let mut ps = 0.0;
+        for seed in 0..scenes as u64 {
+            let scene = generate_scene(70_000 + seed, &SYNRGBD);
+            let cfg_pp = DetectorConfig::new(
+                "synrgbd",
+                Variant::PointPainting,
+                true,
+                Schedule::Sequential { point_dev: *pd, nn_dev: *nd },
+            );
+            let cfg_ps = DetectorConfig::new(
+                "synrgbd",
+                Variant::PointSplit,
+                true,
+                Schedule::Pipelined { point_dev: *pd, nn_dev: *nd },
+            );
+            pp += ScenePipeline::new(&rt, cfg_pp).run(&scene, seed).unwrap().timeline.total_ms;
+            ps += ScenePipeline::new(&rt, cfg_ps).run(&scene, seed).unwrap().timeline.total_ms;
+        }
+        pp /= scenes as f64;
+        ps /= scenes as f64;
+        t.row(vec![
+            name.to_string(),
+            format!("{pp:.0}"),
+            format!("{ps:.0}"),
+            format!("{:.2}x", pp / ps),
+            format!("{:.2}x", ppp / pps),
+        ]);
+    }
+    t.print(&format!("Fig. 10 — latency across processor pairings, INT8 ({scenes} scenes)"));
+}

@@ -1,0 +1,71 @@
+//! Paper Fig. 9: per-scene latency and peak memory of the six schemes on
+//! both datasets.
+//!
+//! Expected shape: PointPainting(FP32, GPU-only/TF) is the slowest and most
+//! memory-hungry by far; INT8/TFLite schemes cluster low; PointSplit(INT8)
+//! is fastest overall — 11.4x (synrgbd) / 24.7x (synscan) vs the FP32
+//! GPU-only fusion baseline.
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data;
+use pointsplit::runtime::Runtime;
+use pointsplit::sim::DeviceKind;
+
+fn schemes() -> Vec<(&'static str, Variant, bool, Schedule)> {
+    let gpu = Schedule::SingleDevice(DeviceKind::Gpu);
+    let gpu_cpu = Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::Cpu };
+    let seq = Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let split = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    vec![
+        ("VoteNet (FP32, GPU)", Variant::VoteNet, false, gpu),
+        ("PointPainting (FP32, GPU)", Variant::PointPainting, false, gpu),
+        ("PointPainting (INT8, GPU-CPU)", Variant::PointPainting, true, gpu_cpu),
+        ("VoteNet (INT8, GPU-TPU)", Variant::VoteNet, true, seq),
+        ("PointPainting (INT8, GPU-TPU)", Variant::PointPainting, true, seq),
+        ("PointSplit (INT8, GPU-TPU)", Variant::PointSplit, true, split),
+    ]
+}
+
+fn run_dataset(rt: &Runtime, ds_name: &str, scenes: usize) {
+    let ds = data::dataset(ds_name).unwrap();
+    let mut t = Table::new(&["scheme", "latency (ms)", "peak mem (MB)"]);
+    let mut baseline = 0.0;
+    let mut best = f64::INFINITY;
+    for (name, variant, int8, sched) in schemes() {
+        let cfg = DetectorConfig::new(ds_name, variant, int8, sched);
+        let pipe = ScenePipeline::new(rt, cfg);
+        let mut lat = 0.0;
+        let mut mem: f64 = 0.0;
+        for seed in 0..scenes as u64 {
+            let scene = data::generate_scene(60_000 + seed, ds);
+            let out = pipe.run(&scene, seed).expect("pipeline");
+            lat += out.timeline.total_ms;
+            mem = mem.max(out.peak_memory_mb);
+        }
+        lat /= scenes as f64;
+        if name.starts_with("PointPainting (FP32") {
+            baseline = lat;
+        }
+        if name.starts_with("PointSplit") {
+            best = lat;
+        }
+        t.row(vec![name.into(), format!("{lat:.0}"), format!("{mem:.0}")]);
+    }
+    t.print(&format!("Fig. 9 — per-scene latency + peak memory on {ds_name} ({scenes} scenes)"));
+    println!(
+        "speedup PointSplit(INT8) vs PointPainting(FP32, GPU-only): {:.1}x (paper: {})",
+        baseline / best,
+        if ds_name == "synrgbd" { "11.4x" } else { "24.7x" }
+    );
+}
+
+fn main() {
+    let rt = common::open_runtime();
+    let scenes = common::scene_budget(4);
+    for ds in ["synrgbd", "synscan"] {
+        run_dataset(&rt, ds, scenes);
+    }
+}

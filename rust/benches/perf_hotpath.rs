@@ -1,0 +1,78 @@
+//! §Perf: wall-clock micro-benchmarks of the L3 hot path on this host.
+//!
+//! These numbers feed EXPERIMENTS.md §Perf (before/after optimization log).
+//! Covered: FPS, biased FPS, ball query, grouping, 3-NN interpolation, scene
+//! generation, full functional pipeline, and PJRT executable dispatch.
+
+mod common;
+
+use pointsplit::bench::bench_fn;
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{generate_scene, SYNRGBD};
+use pointsplit::pointops;
+use pointsplit::sim::DeviceKind;
+use pointsplit::util::tensor::Tensor;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scene = generate_scene(3, &SYNRGBD);
+    let fg: Vec<f32> =
+        scene.point_obj.iter().map(|&o| if o >= 0 { 1.0 } else { 0.0 }).collect();
+
+    println!("=== §Perf hot-path micro-benchmarks (host wall-clock) ===\n");
+    bench_fn("fps 2048->256", 3, 30, || {
+        std::hint::black_box(pointops::fps(&scene.points, 256));
+    })
+    .print();
+    bench_fn("biased_fps 2048->256 (w0=2)", 3, 30, || {
+        std::hint::black_box(pointops::biased_fps(&scene.points, 256, &fg, 2.0));
+    })
+    .print();
+    let centers = pointops::fps(&scene.points, 256);
+    bench_fn("ball_query 2048x256 k=32", 3, 30, || {
+        std::hint::black_box(pointops::ball_query(&scene.points, &centers, 0.3, 32));
+    })
+    .print();
+    let groups = pointops::ball_query(&scene.points, &centers, 0.3, 32);
+    let feats = pointops::build_features(&scene, None);
+    bench_fn("group_features 256x32", 3, 50, || {
+        std::hint::black_box(pointops::group_features(&scene.points, Some(&feats), &centers, &groups));
+    })
+    .print();
+    let coarse: Vec<[f32; 3]> = centers.iter().map(|&i| scene.points[i]).collect();
+    let cfeats = Tensor::zeros(vec![256, 128]);
+    bench_fn("three_nn_interp 2048<-256 c=128", 3, 20, || {
+        std::hint::black_box(pointops::three_nn_interpolate(&scene.points, &coarse, &cfeats));
+    })
+    .print();
+    bench_fn("scene generation (synrgbd)", 2, 20, || {
+        std::hint::black_box(generate_scene(11, &SYNRGBD));
+    })
+    .print();
+
+    // PJRT dispatch cost: the smallest artifact round-trip
+    let seeds = Tensor::zeros(vec![rt.manifest.num_seeds, rt.manifest.seed_feat]);
+    bench_fn("pjrt dispatch (vote fp32)", 3, 30, || {
+        std::hint::black_box(rt.run("synrgbd_pointsplit_vote_fp32", &[&seeds]).unwrap());
+    })
+    .print();
+
+    // full functional pipelines
+    for (name, variant, int8) in [
+        ("pipeline votenet fp32", Variant::VoteNet, false),
+        ("pipeline pointsplit fp32", Variant::PointSplit, false),
+        ("pipeline pointsplit int8", Variant::PointSplit, true),
+    ] {
+        let cfg = DetectorConfig::new(
+            "synrgbd",
+            variant,
+            int8,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        );
+        let pipe = ScenePipeline::new(&rt, cfg);
+        bench_fn(name, 1, 8, || {
+            std::hint::black_box(pipe.run(&scene, 3).unwrap());
+        })
+        .print();
+    }
+}

@@ -1,0 +1,33 @@
+//! Paper Table 10: which SA layers get biased FPS in the SA-bias pipeline.
+//! Expected shape: SA1-2 best (the trained configuration); biasing deeper
+//! layers compounds the bias and hurts.
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::sim::DeviceKind;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scenes = common::scene_budget(40);
+    let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let mut t = Table::new(&["biased layers", "mAP@0.25", "paper"]);
+    for (layers, label, paper_map) in [
+        (1usize, "SA1 only", 60.4),
+        (2, "SA1 and SA2", 61.4),
+        (3, "SA1, SA2 and SA3", 60.1),
+        (4, "All SA layers", 60.8),
+    ] {
+        let mut cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, false, sched);
+        cfg.bias_layers = layers;
+        let rep = common::eval_config(&rt, &cfg, scenes);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", rep.map_25 * 100.0),
+            format!("{paper_map}"),
+        ]);
+        eprintln!("  [{label}] mAP {:.1}", rep.map_25 * 100.0);
+    }
+    t.print(&format!("Table 10 — biased FPS layer ablation on synrgbd ({scenes} scenes)"));
+}

@@ -1,0 +1,55 @@
+//! Paper Table 11: quantization granularity — mAP, quantization error
+//! (FP32 mAP minus INT8 mAP) and quantization-parameter count for
+//! layer / even-group / channel / role-based schemes on both datasets.
+//!
+//! Expected shape: layer & naive-group collapse; channel ~ fp32 but needs
+//! 40-70x more parameters; role-based matches channel at group-wise cost.
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::sim::DeviceKind;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scenes = common::scene_budget(40);
+    let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let schemes = [
+        ("No quant.", "fp32", "fp32"),
+        ("Layer-wise", "int8", "int8_layer"),
+        ("Group-wise", "int8", "int8_group"),
+        ("Channel-wise", "int8", "int8_channel"),
+        ("Role-based (ours)", "int8", "int8_role"),
+    ];
+    for ds in ["synrgbd", "synscan"] {
+        let mut fp32_map = 0.0;
+        let mut t = Table::new(&["quant. method", "mAP@0.25", "quant. error", "# quant. params"]);
+        for (name, backbone, head) in schemes {
+            let mut cfg = DetectorConfig::new(ds, Variant::PointSplit, false, sched);
+            cfg.precision_backbone = backbone.to_string();
+            cfg.precision_head = head.to_string();
+            let rep = common::eval_config(&rt, &cfg, scenes);
+            let map = rep.map_25 * 100.0;
+            if head == "fp32" {
+                fp32_map = map;
+            }
+            let params = match head {
+                "fp32" => "-".to_string(),
+                h => rt.manifest.quant_param_count[h.trim_start_matches("int8_")].to_string(),
+            };
+            t.row(vec![
+                name.to_string(),
+                format!("{map:.1}"),
+                if head == "fp32" { "-".into() } else { format!("{:.1}", fp32_map - map) },
+                params,
+            ]);
+            eprintln!("  [{ds} {name}] mAP {map:.1}");
+        }
+        t.print(&format!(
+            "Table 11 — quantization granularity on {ds} ({scenes} scenes; paper {}: layer collapses, role ~= channel with {}x fewer params)",
+            ds,
+            rt.manifest.quant_param_count["channel"] / rt.manifest.quant_param_count["role"]
+        ));
+    }
+}

@@ -1,0 +1,53 @@
+//! Paper Table 12: per-layer latency of the sequential INT8 pipeline —
+//! point manipulation on GPU vs PointNet on EdgeTPU, layer by layer.
+//!
+//! Expected shape: GPU cost decreases monotonically (fewer points per
+//! layer); EdgeTPU cost peaks mid-network (input-size vs channel-count
+//! trade-off); 2D-3D fusion is the single largest NPU stage.
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{generate_scene, SYNRGBD};
+use pointsplit::sim::DeviceKind;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scene = generate_scene(9, &SYNRGBD);
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointPainting,
+        true,
+        Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let out = ScenePipeline::new(&rt, cfg).run(&scene, 9).expect("pipeline");
+    let tl = &out.timeline;
+    let stage_ms = |name: &str| {
+        tl.stage(name).map(|s| s.end_ms - s.compute_start_ms + s.comm_ms).unwrap_or(0.0)
+    };
+    let mut t = Table::new(&["layer", "GPU (ms)", "EdgeTPU (ms)", "paper GPU", "paper TPU"]);
+    t.row(vec![
+        "2D-3D fusion".into(),
+        format!("{:.0}", stage_ms("paint")),
+        format!("{:.0}", stage_ms("seg")),
+        "-".into(),
+        "222".into(),
+    ]);
+    for (l, pg, pt) in [(1, 199, 47), (2, 52, 71), (3, 25, 84), (4, 20, 21)] {
+        let (pm, nn) = if l < 4 {
+            (format!("sa{l}_full_pm"), format!("sa{l}_full_nn"))
+        } else {
+            ("sa4_pm".to_string(), "sa4_nn".to_string())
+        };
+        t.row(vec![
+            format!("SA{l}"),
+            format!("{:.0}", stage_ms(&pm)),
+            format!("{:.0}", stage_ms(&nn)),
+            format!("{pg}"),
+            format!("{pt}"),
+        ]);
+    }
+    t.print("Table 12 — per-layer latency, sequential INT8 PointPainting (simulated vs paper)");
+    println!("\n(total sequential: {:.0} ms)", tl.total_ms);
+}

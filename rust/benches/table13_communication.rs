@@ -1,0 +1,52 @@
+//! Paper Table 13: communication vs computation split per processor when
+//! PointSplit processes one scene (sequential SA pipelines, no segmenter —
+//! matching the paper's measurement protocol).
+//!
+//! Expected shape: EdgeTPU communication dominates its computation (PCIe
+//! Gen2 x1 per-transfer setup), making comm >50% of total — the paper's
+//! argument that better interconnects nearly double PointSplit's speed.
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{generate_scene, SYNRGBD};
+use pointsplit::sim::DeviceKind;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scene = generate_scene(17, &SYNRGBD);
+    // sequential (no multithreading), as in the paper's Table 13 protocol
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let out = ScenePipeline::new(&rt, cfg).run(&scene, 17).expect("pipeline");
+    let tl = &out.timeline;
+    // exclude the segmenter stage, as the paper does
+    let seg_ms = tl.stage("seg").map(|s| s.end_ms - s.compute_start_ms).unwrap_or(0.0);
+    let mut t = Table::new(&["processor", "comm (ms)", "comp (ms)", "total", "paper"]);
+    for (kind, paper) in [(DeviceKind::Gpu, "80 / 248 / 328"), (DeviceKind::EdgeTpu, "360 / 121 / 481")] {
+        let comm = tl.comm_ms.get(&kind).copied().unwrap_or(0.0);
+        let mut comp = tl.busy_ms.get(&kind).copied().unwrap_or(0.0);
+        if kind == DeviceKind::EdgeTpu {
+            comp -= seg_ms;
+        }
+        t.row(vec![
+            kind.name().into(),
+            format!("{comm:.0}"),
+            format!("{comp:.0}"),
+            format!("{:.0}", comm + comp),
+            paper.into(),
+        ]);
+    }
+    t.print("Table 13 — communication vs computation, PointSplit single scene (simulated)");
+    let comm_total: f64 = tl.comm_ms.values().sum();
+    let comp_total: f64 = tl.busy_ms.values().sum::<f64>() - seg_ms;
+    println!(
+        "\ncommunication share: {:.1}% (paper: 54.4%)",
+        100.0 * comm_total / (comm_total + comp_total)
+    );
+}

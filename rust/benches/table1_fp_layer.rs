@@ -1,0 +1,45 @@
+//! Paper Table 1: feature-propagation (FP) stage cost — PointNet++'s two FP
+//! PointNets vs PointSplit's single modified PointNet (shared FC).
+//!
+//! Reported at two scales: the original VoteNet widths (the paper's absolute
+//! numbers: 398,336 params / 304 MAdd vs 197,888 / 202 M) and this repo's
+//! VoteNet-mini widths.
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::arch::fp_layer_cost;
+
+fn main() {
+    let rt = common::open_runtime();
+    let mut t = Table::new(&["scale", "variant", "# params", "MAdd", "paper"]);
+    for (scale, paper_p, paper_m) in
+        [("paper (VoteNet widths)", "398,336 / 197,888", "304M / 202M"), ("mini (this repo)", "-", "-")]
+    {
+        let c = fp_layer_cost(&rt.manifest, scale.starts_with("paper"));
+        t.row(vec![
+            scale.into(),
+            "PointNet++ (two PointNets)".into(),
+            format!("{}", c.orig_params),
+            format!("{:.0}M", c.orig_madds as f64 / 1e6),
+            paper_p.into(),
+        ]);
+        t.row(vec![
+            scale.into(),
+            "PointSplit (one shared FC)".into(),
+            format!("{}", c.ps_params),
+            format!("{:.0}M", c.ps_madds as f64 / 1e6),
+            paper_m.into(),
+        ]);
+        let dp = 100.0 * (1.0 - c.ps_params as f64 / c.orig_params as f64);
+        let dm = 100.0 * (1.0 - c.ps_madds as f64 / c.orig_madds as f64);
+        t.row(vec![
+            scale.into(),
+            "reduction".into(),
+            format!("{dp:.1}%"),
+            format!("{dm:.1}%"),
+            "50.3% / 33.6%".into(),
+        ]);
+    }
+    t.print("Table 1 — FP layer cost: PointNet++ vs PointSplit");
+}

@@ -1,0 +1,48 @@
+//! Paper Tables 4/5: 2D semantic segmentation per-class mIoU on both
+//! datasets (Deeplabv3+ in the paper; the encoder-decoder stand-in here).
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::data::{self, CLASS_NAMES, NUM_CLASS};
+use pointsplit::eval::miou::ConfusionMiou;
+use pointsplit::util::tensor::Tensor;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scenes = common::scene_budget(48);
+    for (ds_name, paper_overall) in [("synrgbd", 40.7), ("synscan", 47.8)] {
+        let ds = data::dataset(ds_name).unwrap();
+        let mut conf = ConfusionMiou::new(NUM_CLASS + 1);
+        for seed in 0..scenes as u64 {
+            let scene = data::generate_scene(700_000 + seed, ds);
+            let img = Tensor::new(vec![64, 64, 3], scene.image.clone());
+            let scores = rt.run(&format!("{ds_name}_seg_fp32"), &[&img]).unwrap().remove(0);
+            // argmax prediction per pixel
+            let c = scores.shape[2];
+            let pred: Vec<u8> = (0..64 * 64)
+                .map(|p| {
+                    let row = &scores.data[p * c..(p + 1) * c];
+                    let mut best = 0;
+                    for (i, &v) in row.iter().enumerate() {
+                        if v > row[best] {
+                            best = i;
+                        }
+                    }
+                    best as u8
+                })
+                .collect();
+            conf.add(&scene.seg_mask, &pred);
+        }
+        let ious = conf.per_class_iou();
+        let mut t = Table::new(&["class", "mIoU"]);
+        for (i, name) in CLASS_NAMES.iter().enumerate() {
+            t.row(vec![name.to_string(), common::ap_cell(ious[i + 1])]);
+        }
+        t.row(vec!["Overall".into(), format!("{:.1}", conf.miou_foreground() * 100.0)]);
+        t.print(&format!(
+            "Table {} — segmenter per-class mIoU on {ds_name} ({scenes} scenes; paper overall: {paper_overall})",
+            if ds_name == "synrgbd" { "4" } else { "5" }
+        ));
+    }
+}

@@ -1,0 +1,29 @@
+//! Paper Table 9: PointSplit accuracy vs the biased-FPS weight w0.
+//! Expected shape: peak at moderate bias (paper: w0 = 2.0), degradation when
+//! the background is starved (w0 >= 2.5).
+
+mod common;
+
+use pointsplit::bench::Table;
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::sim::DeviceKind;
+
+fn main() {
+    let rt = common::open_runtime();
+    let scenes = common::scene_budget(40);
+    let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let mut t = Table::new(&["w0", "mAP@0.25", "paper"]);
+    let paper = [(0.5, 60.3), (1.0, 60.4), (1.5, 61.3), (2.0, 61.4), (2.5, 59.6), (3.5, 59.4)];
+    for (w0, paper_map) in paper {
+        let mut cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, false, sched);
+        cfg.w0 = w0 as f32;
+        let rep = common::eval_config(&rt, &cfg, scenes);
+        t.row(vec![
+            format!("{w0}"),
+            format!("{:.1}", rep.map_25 * 100.0),
+            format!("{paper_map}"),
+        ]);
+        eprintln!("  [w0={w0}] mAP {:.1}", rep.map_25 * 100.0);
+    }
+    t.print(&format!("Table 9 — biased-FPS weight sweep on synrgbd ({scenes} scenes)"));
+}

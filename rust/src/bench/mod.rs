@@ -1,0 +1,124 @@
+//! Micro-benchmark harness + table printer (criterion is not vendored).
+//!
+//! `bench_fn` runs warmup + timed iterations and reports mean/p50/p99.
+//! `Table` prints paper-style rows used by every `rust/benches/*` target.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: samples.iter().sum::<f64>() / n as f64,
+        p50_us: samples[n / 2],
+        p99_us: samples[(n * 99 / 100).min(n - 1)],
+    }
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:40} {:>10.1} us/iter  (p50 {:>9.1}, p99 {:>9.1}, n={})",
+            self.name, self.mean_us, self.p50_us, self.p99_us, self.iters
+        );
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    s.push_str(&format!("{:<w$}", c, w = widths[i]));
+                } else {
+                    s.push_str(&format!("  {:>w$}", c, w = widths[i]));
+                }
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+/// `f(x)` formatted with fixed decimals, convenience for table cells.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// mAP values are conventionally reported x100.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_percentiles() {
+        let r = bench_fn("spin", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.p50_us <= r.p99_us);
+        assert!(r.mean_us > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

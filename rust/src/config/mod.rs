@@ -1,0 +1,152 @@
+//! Layered configuration system + CLI argument parser (clap is not
+//! vendored). Config values resolve as: defaults < JSON config file <
+//! `--key value` command-line overrides.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Schedule, Variant};
+use crate::sim::DeviceKind;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl Iterator<Item = String>) -> Result<Cli> {
+        let mut out = Cli::default();
+        let mut args = args.peekable();
+        if let Some(cmd) = args.next() {
+            if cmd.starts_with("--") {
+                return Err(anyhow!("expected subcommand before flags, got '{cmd}'"));
+            }
+            out.command = cmd;
+        }
+        while let Some(a) = args.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or boolean --key
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if args.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(key.to_string(), args.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub fn parse_variant(s: &str) -> Result<Variant> {
+    match s.to_ascii_lowercase().as_str() {
+        "votenet" => Ok(Variant::VoteNet),
+        "pointpainting" | "painted" => Ok(Variant::PointPainting),
+        "randomsplit" | "randsplit" => Ok(Variant::RandomSplit),
+        "pointsplit" => Ok(Variant::PointSplit),
+        _ => Err(anyhow!(
+            "unknown variant '{s}' (votenet|pointpainting|randomsplit|pointsplit)"
+        )),
+    }
+}
+
+pub fn parse_device(s: &str) -> Result<DeviceKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "cpu" => Ok(DeviceKind::Cpu),
+        "gpu" => Ok(DeviceKind::Gpu),
+        "edgetpu" | "tpu" | "npu" => Ok(DeviceKind::EdgeTpu),
+        _ => Err(anyhow!("unknown device '{s}' (cpu|gpu|edgetpu)")),
+    }
+}
+
+/// Schedule spec grammar: `gpu` (single device), `gpu+edgetpu` (pipelined),
+/// `gpu>edgetpu` (sequential split).
+pub fn parse_schedule(s: &str) -> Result<Schedule> {
+    if let Some((a, b)) = s.split_once('+') {
+        Ok(Schedule::Pipelined { point_dev: parse_device(a)?, nn_dev: parse_device(b)? })
+    } else if let Some((a, b)) = s.split_once('>') {
+        Ok(Schedule::Sequential { point_dev: parse_device(a)?, nn_dev: parse_device(b)? })
+    } else {
+        Ok(Schedule::SingleDevice(parse_device(s)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // note: a bare flag directly followed by a positional is ambiguous;
+        // booleans use `--flag` at the end or `--flag=true`
+        let c = cli("serve --dataset synrgbd --scenes 32 pos1 --quick");
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.get("dataset"), Some("synrgbd"));
+        assert_eq!(c.get_usize("scenes", 0).unwrap(), 32);
+        assert!(c.get_bool("quick"));
+        assert_eq!(c.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let c = cli("run --w0=2.5");
+        assert_eq!(c.get_f64("w0", 1.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn schedule_grammar() {
+        assert!(matches!(parse_schedule("gpu").unwrap(), Schedule::SingleDevice(DeviceKind::Gpu)));
+        assert!(matches!(
+            parse_schedule("gpu+edgetpu").unwrap(),
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu }
+        ));
+        assert!(matches!(
+            parse_schedule("cpu>edgetpu").unwrap(),
+            Schedule::Sequential { point_dev: DeviceKind::Cpu, nn_dev: DeviceKind::EdgeTpu }
+        ));
+        assert!(parse_schedule("quantum").is_err());
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(parse_variant("PointSplit").unwrap(), Variant::PointSplit);
+        assert!(parse_variant("yolo").is_err());
+    }
+}

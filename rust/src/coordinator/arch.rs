@@ -1,0 +1,122 @@
+//! Architecture accounting: per-stage workload descriptors for the device
+//! simulator, model parameter counts (Fig. 9 memory model), and the Table 1
+//! FP-layer comparison.
+
+use crate::pointops::{ball_query_flops, fps_flops};
+use crate::runtime::Manifest;
+use crate::sim::{Precision, Workload, WorkloadKind};
+
+/// Point-manipulation workload of one SA layer: FPS + ball query + gather.
+pub fn sa_pointmanip_workload(n_in: usize, m_out: usize, k: usize, c_in: usize) -> Workload {
+    Workload {
+        kind: WorkloadKind::PointOp,
+        precision: Precision::Fp32,
+        flops: fps_flops(n_in, m_out) + ball_query_flops(n_in, m_out),
+        mem_bytes: (m_out * k * (3 + c_in) * 4) as u64,
+        // grouped tensor that must reach the NN device
+        wire_bytes: (m_out * k * (3 + c_in)) as u64 * 4,
+    }
+}
+
+/// NN workload from a manifest artifact entry (wire bytes follow precision).
+pub fn nn_workload(manifest: &Manifest, artifact: &str) -> Workload {
+    let meta = manifest
+        .artifact(artifact)
+        .unwrap_or_else(|| panic!("artifact '{artifact}' missing from manifest"));
+    let out_elems: u64 = 4096; // head outputs are small; dominated by input wire
+    let precision =
+        if meta.precision.contains("int8") { Precision::Int8 } else { Precision::Fp32 };
+    let per_elem = meta.wire_bytes_per_elem;
+    Workload {
+        kind: WorkloadKind::NeuralNet,
+        precision,
+        flops: meta.flops,
+        mem_bytes: meta.bytes_in,
+        wire_bytes: (meta.bytes_in / 4 + out_elems) * per_elem,
+    }
+}
+
+/// Small fixed-cost point op (painting, FP interpolation, decode).
+pub fn small_pointop(flops: u64, wire_bytes: u64) -> Workload {
+    Workload {
+        kind: WorkloadKind::PointOp,
+        precision: Precision::Fp32,
+        flops,
+        mem_bytes: wire_bytes,
+        wire_bytes,
+    }
+}
+
+/// Total trainable parameters of the detector (from manifest widths).
+pub fn detector_params(manifest: &Manifest, painted: bool) -> u64 {
+    let feat = if painted { manifest.feat_dim_painted } else { manifest.feat_dim_plain };
+    let mut total = 0u64;
+    let mut prev = feat;
+    for sa in &manifest.sa_configs {
+        let mut cin = 3 + prev;
+        for &cout in &sa.mlp {
+            total += (cin * cout + cout) as u64;
+            cin = cout;
+        }
+        prev = *sa.mlp.last().unwrap();
+    }
+    // fp_fc + vote mlp/out + proposal pointnet/mlp/out (fixed widths)
+    let sf = manifest.seed_feat;
+    total += (manifest.fp_in * sf + sf) as u64;
+    total += (sf * 128 + 128 + 128 * 128 + 128) as u64;
+    total += (128 * (3 + sf) + (3 + sf)) as u64; // vote_out (131 ch)
+    total += ((3 + sf) * 128 + 128 + 128 * 64 + 64) as u64; // prop pointnet
+    total += (64 * 64 + 64) as u64;
+    let ch = manifest.head_layout.sem_cls.1;
+    total += (64 * ch + ch) as u64; // prop_out
+    total
+}
+
+/// Segmenter parameter count (encoder-decoder stand-in).
+pub fn segmenter_params(manifest: &Manifest) -> u64 {
+    let c = [16u64, 32, 48, 64];
+    let nseg = manifest.num_seg_classes as u64;
+    9 * 3 * c[0]
+        + 9 * c[0] * c[1]
+        + 9 * c[1] * c[2]
+        + 9 * c[2] * c[3]
+        + 9 * c[3] * c[1]
+        + 9 * (c[1] + c[1]) * c[0]
+        + (c[0] + c[0]) * nseg
+        + c.iter().sum::<u64>()
+        + nseg
+}
+
+/// Fig. 9 peak-memory model (MB): framework base + weights + activations.
+///
+/// The paper's numbers separate TensorFlow (GPU fp32, ~2.2 GB) from
+/// TensorFlow Lite (quantized, ~100s MB); we use the same two-regime model
+/// with the measured bases from Fig. 9 and our (much smaller) weights.
+pub fn peak_memory_mb(
+    manifest: &Manifest,
+    painted: bool,
+    fp32_framework: bool,
+    num_points: usize,
+) -> f64 {
+    let weight_bytes = (detector_params(manifest, painted)
+        + if painted { segmenter_params(manifest) } else { 0 }) as f64
+        * if fp32_framework { 4.0 } else { 1.0 };
+    let act_bytes = (num_points * 16 * 4) as f64; // cloud + painted feats + groups
+    let base_mb = if fp32_framework { 1900.0 } else { 95.0 };
+    base_mb + (weight_bytes + act_bytes) / 1e6
+}
+
+/// Table 1: (params, MAdd) of the FP stage — PointNet++'s two PointNets vs
+/// PointSplit's single shared FC, at mini and paper scale (from manifest).
+pub struct FpLayerCost {
+    pub orig_params: u64,
+    pub orig_madds: u64,
+    pub ps_params: u64,
+    pub ps_madds: u64,
+}
+
+pub fn fp_layer_cost(manifest: &Manifest, paper_scale: bool) -> FpLayerCost {
+    let ((op, om), (pp, pm)) =
+        if paper_scale { manifest.fp_layer_cost_paper } else { manifest.fp_layer_cost_mini };
+    FpLayerCost { orig_params: op, orig_madds: om, ps_params: pp, ps_madds: pm }
+}

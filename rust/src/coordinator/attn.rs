@@ -1,0 +1,188 @@
+//! GroupFree3D-mini execution path (Table 8): PointNet++ backbone +
+//! transformer decoder head. Accuracy-focused (no timeline) — the paper's
+//! Table 8 evaluates mAP only, explicitly excluding the efficiency
+//! machinery (two FP PointNets are restored, no quantization).
+
+use anyhow::Result;
+
+use crate::data::{Box3, Scene};
+use crate::pointops;
+use crate::runtime::Runtime;
+use crate::util::tensor::Tensor;
+
+use super::decode::decode_detections;
+
+/// Table 8 configurations for the attention detector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnVariant {
+    /// GroupFree3D-mini baseline (no 2D fusion)
+    Baseline,
+    /// + PointPainting (painted, full sampling)
+    Painted,
+    /// + RandomSplit (painted weights, random halves)
+    RandomSplit,
+    /// + PointSplit (split sampling with biased FPS)
+    Split,
+}
+
+impl AttnVariant {
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            AttnVariant::Baseline => "attn_plain",
+            AttnVariant::Painted | AttnVariant::RandomSplit => "attn_painted",
+            AttnVariant::Split => "attn_split",
+        }
+    }
+
+    pub fn painted(&self) -> bool {
+        !matches!(self, AttnVariant::Baseline)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttnVariant::Baseline => "GroupFree3D-mini",
+            AttnVariant::Painted => "+ PointPainting",
+            AttnVariant::RandomSplit => "+ RandomSplit",
+            AttnVariant::Split => "+ PointSplit",
+        }
+    }
+}
+
+/// Run one scene through the attention detector. Only exists for the
+/// primary dataset's attn artifacts.
+pub fn run_attn(
+    rt: &Runtime,
+    variant: AttnVariant,
+    scene: &Scene,
+    w0: f32,
+    seed: u64,
+) -> Result<Vec<Box3>> {
+    let m = &rt.manifest;
+    let model = variant.model_name();
+    let art = |net: &str| format!("synrgbd_{model}_{net}_fp32");
+
+    // paint
+    let (paint, fg) = if variant.painted() {
+        let img = Tensor::new(vec![m.img_size, m.img_size, 3], scene.image.clone());
+        let scores2d = rt.run(&format!("synrgbd_seg_fp32"), &[&img])?.remove(0);
+        let paint = pointops::paint_points(scene, &scores2d);
+        let fg = pointops::fg_mask(&paint, 0.5);
+        (Some(paint), fg)
+    } else {
+        (None, vec![0.0; scene.points.len()])
+    };
+    let feats = pointops::build_features(scene, paint.as_ref());
+
+    // backbone (split only for the Split/RandomSplit variants)
+    let split = matches!(variant, AttnVariant::Split | AttnVariant::RandomSplit);
+    let run_chain = |xyz0: Vec<[f32; 3]>, feats0: Tensor, fg0: Vec<f32>, biased: bool| -> Result<_> {
+        let mut xyz = xyz0;
+        let mut f = feats0;
+        let mut fgv = fg0;
+        let mut levels = Vec::new();
+        for l in 0..3 {
+            let sac = &m.sa_configs[l];
+            let mm = if split { sac.m / 2 } else { sac.m };
+            let start = if biased && l == 0 { xyz.len() / 2 } else { 0 };
+            let idx = if biased && l < 2 {
+                pointops::biased_fps_from(&xyz, mm, &fgv, w0, start)
+            } else {
+                pointops::fps_from(&xyz, mm, start)
+            };
+            let groups = pointops::ball_query(&xyz, &idx, sac.radius, sac.k);
+            let g = pointops::group_features(&xyz, Some(&f), &idx, &groups);
+            let shape = if split { "half" } else { "full" };
+            // attn models exported half shapes only for the split variant
+            let name = art(&format!("sa{}_{}", l + 1, shape));
+            let name = if rt.manifest.artifact(&name).is_some() {
+                name
+            } else {
+                art(&format!("sa{}_full", l + 1))
+            };
+            let meta = rt.manifest.artifact(&name).unwrap();
+            let want = meta.input_shapes[0][0];
+            let out = if want == g.shape[0] {
+                rt.run(&name, &[&g])?.remove(0)
+            } else {
+                let mut padded = Tensor::zeros(vec![want, g.shape[1], g.shape[2]]);
+                padded.data[..g.data.len()].copy_from_slice(&g.data);
+                let o = rt.run(&name, &[&padded])?.remove(0);
+                o.gather_rows(&(0..g.shape[0]).collect::<Vec<_>>())
+            };
+            xyz = idx.iter().map(|&i| xyz[i]).collect();
+            fgv = idx.iter().map(|&i| fgv[i]).collect();
+            f = out;
+            levels.push((xyz.clone(), f.clone()));
+        }
+        Ok(levels)
+    };
+
+    let (sa2, sa3) = if split {
+        let (xa, fa, ga, xb, fb, gb) = if variant == AttnVariant::RandomSplit {
+            let mut rng = crate::util::rng::Rng::new(seed ^ 0xB5);
+            let perm = rng.choice_no_replace(scene.points.len(), scene.points.len());
+            let half = scene.points.len() / 2;
+            let pick = |idx: &[usize]| {
+                (
+                    idx.iter().map(|&i| scene.points[i]).collect::<Vec<_>>(),
+                    feats.gather_rows(idx),
+                    idx.iter().map(|&i| fg[i]).collect::<Vec<_>>(),
+                )
+            };
+            let a = pick(&perm[..half]);
+            let b = pick(&perm[half..]);
+            (a.0, a.1, a.2, b.0, b.1, b.2)
+        } else {
+            (
+                scene.points.clone(),
+                feats.clone(),
+                fg.clone(),
+                scene.points.clone(),
+                feats.clone(),
+                fg.clone(),
+            )
+        };
+        let la = run_chain(xa, fa, ga, false)?;
+        let lb = run_chain(xb, fb, gb, variant == AttnVariant::Split)?;
+        let cat = |i: usize| {
+            let mut xyz = la[i].0.clone();
+            xyz.extend_from_slice(&lb[i].0);
+            (xyz, Tensor::concat0(&[&la[i].1, &lb[i].1]))
+        };
+        (cat(1), cat(2))
+    } else {
+        let levels = run_chain(scene.points.clone(), feats, fg, false)?;
+        (levels[1].clone(), levels[2].clone())
+    };
+
+    // SA4 + FP + attention head
+    let sac4 = &m.sa_configs[3];
+    let idx4 = pointops::fps(&sa3.0, sac4.m);
+    let groups4 = pointops::ball_query(&sa3.0, &idx4, sac4.radius, sac4.k);
+    let g4 = pointops::group_features(&sa3.0, Some(&sa3.1), &idx4, &groups4);
+    let sa4_feats = rt.run(&art("sa4_full"), &[&g4])?.remove(0);
+    let sa4_xyz: Vec<[f32; 3]> = idx4.iter().map(|&i| sa3.0[i]).collect();
+
+    let f3up = pointops::three_nn_interpolate(&sa3.0, &sa4_xyz, &sa4_feats);
+    let f3 = hcat(&sa3.1, &f3up);
+    let f2up = pointops::three_nn_interpolate(&sa2.0, &sa3.0, &f3);
+    let f2 = hcat(&sa2.1, &f2up);
+    let seeds = rt.run(&art("fp_fc"), &[&f2])?.remove(0);
+
+    let proj = rt.run(&art("attn_proj"), &[&seeds])?.remove(0);
+    let cand_idx = pointops::fps(&sa2.0, m.num_proposals);
+    let cand = proj.gather_rows(&cand_idx);
+    let out = rt.run(&art("attn_decode"), &[&cand, &proj])?.remove(0);
+    let centers: Vec<[f32; 3]> = cand_idx.iter().map(|&i| sa2.0[i]).collect();
+    Ok(decode_detections(m, &centers, &out, 0.01, 0.25))
+}
+
+fn hcat(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ca, cb) = (a.row_len(), b.row_len());
+    let mut data = Vec::with_capacity(a.rows() * (ca + cb));
+    for i in 0..a.rows() {
+        data.extend_from_slice(a.row(i));
+        data.extend_from_slice(b.row(i));
+    }
+    Tensor::new(vec![a.rows(), ca + cb], data)
+}

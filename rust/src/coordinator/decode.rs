@@ -1,0 +1,87 @@
+//! Proposal decoding (mirror of model.decode_proposals) + NMS into [`Box3`].
+
+use crate::data::Box3;
+use crate::eval::nms3d;
+use crate::runtime::Manifest;
+use crate::util::tensor::Tensor;
+
+fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    // first-max tie-break (matches jnp.argmax)
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Decode raw head channels into per-class detections.
+///
+/// cluster_xyz: (P, 3) proposal base centers; prop: (P, 79) raw channels.
+/// Emits one detection per (proposal, argmax class) with
+/// score = P(object) * P(class), then class-agnostic NMS.
+pub fn decode_detections(
+    manifest: &Manifest,
+    cluster_xyz: &[[f32; 3]],
+    prop: &Tensor,
+    obj_thresh: f32,
+    nms_iou: f64,
+) -> Vec<Box3> {
+    let hl = &manifest.head_layout;
+    let nh = manifest.num_heading_bin;
+    let nc = manifest.num_class();
+    let per = 2.0 * std::f32::consts::PI / nh as f32;
+    let mut boxes = Vec::new();
+    for p in 0..prop.rows() {
+        let row = prop.row(p);
+        let obj = softmax(&row[hl.objectness.0..hl.objectness.1])[1];
+        if obj < obj_thresh {
+            continue;
+        }
+        let center = [
+            cluster_xyz[p][0] + row[hl.center.0],
+            cluster_xyz[p][1] + row[hl.center.0 + 1],
+            cluster_xyz[p][2] + row[hl.center.0 + 2],
+        ];
+        let hbin = argmax(&row[hl.heading_cls.0..hl.heading_cls.1]);
+        let hres = row[hl.heading_reg.0 + hbin] * (per / 2.0);
+        let heading = (hbin as f32 * per + hres).rem_euclid(2.0 * std::f32::consts::PI);
+        let sbin = argmax(&row[hl.size_cls.0..hl.size_cls.1]);
+        let mean = manifest.mean_sizes[sbin];
+        let mut size = [0.0f32; 3];
+        for d in 0..3 {
+            let res = row[hl.size_reg.0 + sbin * 3 + d].clamp(-0.9, 2.0);
+            size[d] = mean[d] * (1.0 + res);
+        }
+        let sem = softmax(&row[hl.sem_cls.0..hl.sem_cls.1]);
+        let cls = argmax(&sem[..nc]);
+        boxes.push(Box3 { center, size, heading, class: cls, score: obj * sem[cls] });
+    }
+    let keep = nms3d(&boxes, nms_iou);
+    keep.into_iter().map(|i| boxes[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let s = softmax(&[1.0, 2.0, 3.0]);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Owns the request path: for each RGB-D scene it executes the 2D-3D fusion
+//! detector *functionally* (Rust pointops + PJRT executables) while building
+//! the two-lane stage DAG that the calibrated device simulator times. The
+//! three schedules of the paper are all expressible:
+//!
+//! - `Schedule::GpuOnly`     — Fig. 9 baseline: everything on one device
+//! - `Schedule::Sequential`  — Fig. 2: naive GPU+NPU split, no overlap
+//! - `Schedule::Pipelined`   — Fig. 3: PointSplit two-pipeline overlap with
+//!                             jump-started SA-normal
+//!
+//! Submodules: `arch` (workload descriptors, Table 1), `decode` (box
+//! decoding + NMS), `pipeline` (per-scene executor), `serve` (multi-scene
+//! request loop on std threads).
+
+pub mod arch;
+pub mod attn;
+pub mod decode;
+pub mod pipeline;
+pub mod serve;
+
+pub use pipeline::{DetectorConfig, PipelineOutput, ScenePipeline};
+
+use crate::sim::DeviceKind;
+
+/// Detector variants evaluated in Tables 6/7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// point-cloud-only VoteNet (no 2D fusion)
+    VoteNet,
+    /// PointPainting: sequential 2D-3D fusion, single full pipeline
+    PointPainting,
+    /// ablation: random halves, regular FPS both
+    RandomSplit,
+    /// the paper's system: SA-normal + SA-bias pipelines
+    PointSplit,
+}
+
+impl Variant {
+    /// Which trained model's artifacts this variant executes.
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            Variant::VoteNet => "votenet",
+            Variant::PointPainting | Variant::RandomSplit => "painted",
+            Variant::PointSplit => "pointsplit",
+        }
+    }
+
+    pub fn painted(&self) -> bool {
+        !matches!(self, Variant::VoteNet)
+    }
+
+    pub fn split(&self) -> bool {
+        matches!(self, Variant::RandomSplit | Variant::PointSplit)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::VoteNet => "VoteNet",
+            Variant::PointPainting => "PointPainting",
+            Variant::RandomSplit => "RandomSplit",
+            Variant::PointSplit => "PointSplit",
+        }
+    }
+}
+
+/// Device placement + overlap policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// single device runs everything (paper's GPU-only TF baseline)
+    SingleDevice(DeviceKind),
+    /// point ops on `point_dev`, NNs on `nn_dev`, strictly sequential (Fig. 2)
+    Sequential { point_dev: DeviceKind, nn_dev: DeviceKind },
+    /// PointSplit overlap (Fig. 3); falls back to Sequential when the
+    /// variant has a single pipeline
+    Pipelined { point_dev: DeviceKind, nn_dev: DeviceKind },
+}
+
+impl Schedule {
+    pub fn point_dev(&self) -> DeviceKind {
+        match self {
+            Schedule::SingleDevice(d) => *d,
+            Schedule::Sequential { point_dev, .. } | Schedule::Pipelined { point_dev, .. } => {
+                *point_dev
+            }
+        }
+    }
+
+    pub fn nn_dev(&self) -> DeviceKind {
+        match self {
+            Schedule::SingleDevice(d) => *d,
+            Schedule::Sequential { nn_dev, .. } | Schedule::Pipelined { nn_dev, .. } => *nn_dev,
+        }
+    }
+
+    pub fn overlapped(&self) -> bool {
+        matches!(self, Schedule::Pipelined { .. })
+    }
+}

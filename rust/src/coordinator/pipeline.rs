@@ -1,0 +1,528 @@
+//! Per-scene detection pipeline: functional execution + simulated timeline.
+//!
+//! Every stage is executed for real (Rust point ops / PJRT executables) and
+//! simultaneously recorded as a [`StageSpec`] so the calibrated device model
+//! can replay the schedule. The PointSplit schedule reproduces Fig. 3:
+//! SA-normal point manipulation jump-starts concurrently with 2D
+//! segmentation; afterwards the GPU lane (point manip) and NPU lane
+//! (PointNet) alternate between the two half-pipelines.
+
+use anyhow::{anyhow, Result};
+
+use super::arch::{nn_workload, peak_memory_mb, sa_pointmanip_workload, small_pointop};
+use super::decode::decode_detections;
+use super::{Schedule, Variant};
+use crate::data::{Box3, Scene};
+use crate::pointops;
+use crate::runtime::Runtime;
+use crate::sim::{DeviceKind, ScheduleSim, StageSpec, Timeline};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Full configuration of one detector instantiation.
+#[derive(Debug, Clone)]
+pub struct DetectorConfig {
+    pub dataset: String,
+    pub variant: Variant,
+    /// "fp32" or "int8" (backbone / segmenter artifacts)
+    pub precision_backbone: String,
+    /// "fp32", "int8_layer", "int8_group", "int8_channel", "int8_role"
+    pub precision_head: String,
+    pub schedule: Schedule,
+    pub w0: f32,
+    pub bias_layers: usize,
+    pub obj_thresh: f32,
+    pub nms_iou: f64,
+    /// number of segmentation passes per scene (paper: 3 for ScanNet)
+    pub seg_passes: usize,
+}
+
+impl DetectorConfig {
+    pub fn new(dataset: &str, variant: Variant, int8: bool, schedule: Schedule) -> Self {
+        DetectorConfig {
+            dataset: dataset.to_string(),
+            variant,
+            precision_backbone: if int8 { "int8" } else { "fp32" }.to_string(),
+            precision_head: if int8 {
+                // paper Table 7: role-based for PointSplit, layer-wise others
+                if variant == Variant::PointSplit { "int8_role" } else { "int8_layer" }
+            } else {
+                "fp32"
+            }
+            .to_string(),
+            schedule,
+            w0: 2.0,
+            bias_layers: 2,
+            obj_thresh: 0.02,
+            nms_iou: 0.25,
+            seg_passes: if dataset == "synscan" { 3 } else { 1 },
+        }
+    }
+
+    fn art(&self, net: &str) -> String {
+        let prec = match net {
+            "vote" | "prop" => self.precision_head.as_str(),
+            _ => self.precision_backbone.as_str(),
+        };
+        format!("{}_{}_{}_{}", self.dataset, self.variant.model_name(), net, prec)
+    }
+
+    fn seg_art(&self) -> String {
+        format!("{}_seg_{}", self.dataset, self.precision_backbone)
+    }
+
+    pub fn int8(&self) -> bool {
+        self.precision_backbone == "int8"
+    }
+}
+
+/// Result of running one scene through the pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineOutput {
+    pub detections: Vec<Box3>,
+    pub timeline: Timeline,
+    pub peak_memory_mb: f64,
+    /// wall-clock of the functional execution on this host (for §Perf)
+    pub host_ms: f64,
+}
+
+/// One SA pipeline's rolling state.
+struct PipeState {
+    xyz: Vec<[f32; 3]>,
+    feats: Option<Tensor>,
+    fg: Vec<f32>,
+    /// simulator stage index of the last NN stage in this pipeline
+    last_nn: Option<usize>,
+}
+
+pub struct ScenePipeline<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: DetectorConfig,
+    sim: ScheduleSim,
+}
+
+impl<'a> ScenePipeline<'a> {
+    pub fn new(rt: &'a Runtime, cfg: DetectorConfig) -> Self {
+        ScenePipeline { rt, cfg, sim: ScheduleSim::new() }
+    }
+
+    /// Run one scene. `seed` feeds the RandomSplit permutation.
+    pub fn run(&self, scene: &Scene, seed: u64) -> Result<PipelineOutput> {
+        self.run_with_scores(scene, seed, None).map(|(out, _)| out)
+    }
+
+    /// Run one scene, optionally reusing 2D segmentation scores from a
+    /// previous frame ("consecutive matching", paper §3.2): when
+    /// `prev_scores` is given, the segmenter stage is skipped entirely —
+    /// zero NPU time for 2D — at the cost of stale semantics. Returns the
+    /// pipeline output plus the scores used (for the caller to carry
+    /// forward to the next frame).
+    pub fn run_with_scores(
+        &self,
+        scene: &Scene,
+        seed: u64,
+        prev_scores: Option<&Tensor>,
+    ) -> Result<(PipelineOutput, Option<Tensor>)> {
+        let t_host = std::time::Instant::now();
+        let cfg = &self.cfg;
+        let m = &self.rt.manifest;
+        let point_dev = cfg.schedule.point_dev();
+        // the EdgeTPU executes int8 only (the paper's motivation for full
+        // quantization); fp32 configurations fall back to the point device
+        let mut nn_dev = cfg.schedule.nn_dev();
+        if !cfg.int8() && nn_dev == DeviceKind::EdgeTpu {
+            nn_dev = point_dev;
+        }
+        let mut stages: Vec<StageSpec> = Vec::new();
+        let mut prev_any: Option<usize> = None; // strict chaining when sequential
+        let sequential = !cfg.schedule.overlapped();
+
+        let mut push = |stages: &mut Vec<StageSpec>,
+                        name: String,
+                        device: DeviceKind,
+                        workload: crate::sim::Workload,
+                        mut deps: Vec<usize>|
+         -> usize {
+            if sequential {
+                if let Some(p) = prev_any {
+                    if !deps.contains(&p) {
+                        deps.push(p);
+                    }
+                }
+            }
+            stages.push(StageSpec { name, device, workload, deps });
+            prev_any = Some(stages.len() - 1);
+            stages.len() - 1
+        };
+
+        // ------------------------------------------------------ 2D segment
+        let mut used_scores: Option<Tensor> = None;
+        let (paint, fg, seg_stage) = if cfg.variant.painted() {
+            let scores2d = match prev_scores {
+                // consecutive matching: reuse the previous frame's scores
+                Some(prev) => prev.clone(),
+                None => {
+                    let img =
+                        Tensor::new(vec![m.img_size, m.img_size, 3], scene.image.clone());
+                    self.rt.run(&cfg.seg_art(), &[&img])?.remove(0)
+                }
+            };
+            let deps_paint = if prev_scores.is_none() {
+                let mut wl = nn_workload(m, &cfg.seg_art());
+                wl.flops *= cfg.seg_passes as u64;
+                vec![push(&mut stages, "seg".into(), nn_dev, wl, vec![])]
+            } else {
+                Vec::new() // no 2D work this frame
+            };
+            let paint = pointops::paint_points(scene, &scores2d);
+            let fg = pointops::fg_mask(&paint, 0.5);
+            let p = push(
+                &mut stages,
+                "paint".into(),
+                point_dev,
+                small_pointop(
+                    (scene.points.len() * 8) as u64,
+                    (scene.points.len() * m.num_seg_classes) as u64,
+                ),
+                deps_paint,
+            );
+            used_scores = Some(scores2d);
+            (Some(paint), fg, Some(p))
+        } else {
+            (None, vec![0.0; scene.points.len()], None)
+        };
+        let feats = pointops::build_features(scene, paint.as_ref());
+
+        // ------------------------------------------------------ backbone
+        let (sa2, sa3) = match cfg.variant {
+            Variant::VoteNet | Variant::PointPainting => {
+                let init = PipeState {
+                    xyz: scene.points.clone(),
+                    feats: Some(feats),
+                    fg,
+                    last_nn: seg_stage,
+                };
+                let levels = self.run_sa_chain(
+                    &mut stages,
+                    &mut push,
+                    init,
+                    "full",
+                    false,
+                    1.0,
+                    point_dev,
+                    nn_dev,
+                    seg_stage,
+                )?;
+                (levels.0, levels.1)
+            }
+            Variant::PointSplit => {
+                // SA-normal jump-starts (its point manip does not need seg);
+                // SA-bias waits for painting (biased FPS needs fg)
+                let sn = PipeState {
+                    xyz: scene.points.clone(),
+                    feats: Some(feats.clone()),
+                    fg: fg.clone(),
+                    last_nn: seg_stage,
+                };
+                let sb = PipeState {
+                    xyz: scene.points.clone(),
+                    feats: Some(feats),
+                    fg,
+                    last_nn: seg_stage,
+                };
+                let ln = self.run_sa_chain(
+                    &mut stages, &mut push, sn, "normal", false, 1.0, point_dev, nn_dev, seg_stage,
+                )?;
+                let lb = self.run_sa_chain(
+                    &mut stages, &mut push, sb, "bias", true, cfg.w0, point_dev, nn_dev, seg_stage,
+                )?;
+                (merge(ln.0, lb.0), merge(ln.1, lb.1))
+            }
+            Variant::RandomSplit => {
+                let mut rng = Rng::new(seed ^ 0xB5);
+                let perm = rng.choice_no_replace(scene.points.len(), scene.points.len());
+                let half = scene.points.len() / 2;
+                let mk = |idx: &[usize]| PipeState {
+                    xyz: idx.iter().map(|&i| scene.points[i]).collect(),
+                    feats: Some(feats.gather_rows(idx)),
+                    fg: idx.iter().map(|&i| fg[i]).collect(),
+                    last_nn: seg_stage,
+                };
+                let la = self.run_sa_chain(
+                    &mut stages, &mut push, mk(&perm[..half]), "randA", false, 1.0, point_dev,
+                    nn_dev, seg_stage,
+                )?;
+                let lb = self.run_sa_chain(
+                    &mut stages, &mut push, mk(&perm[half..]), "randB", false, 1.0, point_dev,
+                    nn_dev, seg_stage,
+                )?;
+                (merge(la.0, lb.0), merge(la.1, lb.1))
+            }
+        };
+
+        // SA4 over the fused SA3 set (biased only in the Table 10 "all SA
+        // layers" ablation: bias_layers >= 4)
+        let sa4cfg = &m.sa_configs[3];
+        let deps4 = sa3.last_nn.into_iter().collect::<Vec<_>>();
+        let idx4 = if cfg.bias_layers >= 4 && cfg.variant == Variant::PointSplit {
+            pointops::biased_fps(&sa3.xyz, sa4cfg.m, &sa3.fg, cfg.w0)
+        } else {
+            pointops::fps(&sa3.xyz, sa4cfg.m)
+        };
+        let groups4 = pointops::ball_query(&sa3.xyz, &idx4, sa4cfg.radius, sa4cfg.k);
+        let g4 = pointops::group_features(&sa3.xyz, sa3.feats.as_ref(), &idx4, &groups4);
+        let pm4 = push(
+            &mut stages,
+            "sa4_pm".into(),
+            point_dev,
+            sa_pointmanip_workload(sa3.xyz.len(), sa4cfg.m, sa4cfg.k, sa3.feats.as_ref().unwrap().row_len()),
+            deps4,
+        );
+        let sa4_feats = self.rt.run(&cfg.art("sa4_full"), &[&g4])?.remove(0);
+        let nn4 = push(
+            &mut stages,
+            "sa4_nn".into(),
+            nn_dev,
+            nn_workload(m, &cfg.art("sa4_full")),
+            vec![pm4],
+        );
+        let sa4_xyz: Vec<[f32; 3]> = idx4.iter().map(|&i| sa3.xyz[i]).collect();
+
+        // ------------------------------------------------------ FP + heads
+        let f3up = pointops::three_nn_interpolate(&sa3.xyz, &sa4_xyz, &sa4_feats);
+        let f3 = hconcat(sa3.feats.as_ref().unwrap(), &f3up);
+        let f2up = pointops::three_nn_interpolate(&sa2.xyz, &sa3.xyz, &f3);
+        let f2 = hconcat(sa2.feats.as_ref().unwrap(), &f2up);
+        let fp_pm = push(
+            &mut stages,
+            "fp_interp".into(),
+            point_dev,
+            small_pointop(
+                (sa2.xyz.len() * sa3.xyz.len() * 4) as u64,
+                (f2.len() * 4) as u64,
+            ),
+            vec![nn4],
+        );
+        let seeds = self.rt.run(&cfg.art("fp_fc"), &[&f2])?.remove(0);
+        let fp_nn = push(
+            &mut stages,
+            "fp_fc".into(),
+            nn_dev,
+            nn_workload(m, &cfg.art("fp_fc")),
+            vec![fp_pm],
+        );
+
+        let vote_out = self.rt.run(&cfg.art("vote"), &[&seeds])?.remove(0);
+        let vote_nn = push(
+            &mut stages,
+            "vote".into(),
+            nn_dev,
+            nn_workload(m, &cfg.art("vote")),
+            vec![fp_nn],
+        );
+        let seed_xyz = &sa2.xyz;
+        let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
+        let cfeat = seeds.row_len();
+        let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
+        for i in 0..seed_xyz.len() {
+            let row = vote_out.row(i);
+            vote_xyz.push([
+                seed_xyz[i][0] + row[0],
+                seed_xyz[i][1] + row[1],
+                seed_xyz[i][2] + row[2],
+            ]);
+            for c in 0..cfeat {
+                vote_feats.row_mut(i)[c] = seeds.row(i)[c] + row[3 + c];
+            }
+        }
+
+        // proposal: cluster votes (point manip) then PointNet+head (NN)
+        let pidx = pointops::fps(&vote_xyz, m.num_proposals);
+        let pgroups = pointops::ball_query(&vote_xyz, &pidx, m.proposal_radius, m.proposal_k);
+        let pg = pointops::group_features(&vote_xyz, Some(&vote_feats), &pidx, &pgroups);
+        let prop_pm = push(
+            &mut stages,
+            "prop_pm".into(),
+            point_dev,
+            sa_pointmanip_workload(vote_xyz.len(), m.num_proposals, m.proposal_k, cfeat),
+            vec![vote_nn],
+        );
+        let prop = self.rt.run(&cfg.art("prop"), &[&pg])?.remove(0);
+        let prop_nn = push(
+            &mut stages,
+            "prop".into(),
+            nn_dev,
+            nn_workload(m, &cfg.art("prop")),
+            vec![prop_pm],
+        );
+        let cluster_xyz: Vec<[f32; 3]> = pidx.iter().map(|&i| vote_xyz[i]).collect();
+
+        // decode + NMS on the host CPU
+        push(
+            &mut stages,
+            "decode".into(),
+            DeviceKind::Cpu,
+            small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
+            vec![prop_nn],
+        );
+
+        let detections =
+            decode_detections(m, &cluster_xyz, &prop, cfg.obj_thresh, cfg.nms_iou);
+        let timeline = self.sim.run(&stages);
+        let fp32_framework = !cfg.int8() && matches!(cfg.schedule, Schedule::SingleDevice(_));
+        let peak = peak_memory_mb(m, cfg.variant.painted(), fp32_framework, scene.points.len());
+        Ok((
+            PipelineOutput {
+                detections,
+                timeline,
+                peak_memory_mb: peak,
+                host_ms: t_host.elapsed().as_secs_f64() * 1000.0,
+            },
+            used_scores,
+        ))
+    }
+
+    /// SA1..SA3 of one pipeline (full or half centroid budget).
+    #[allow(clippy::too_many_arguments)]
+    fn run_sa_chain(
+        &self,
+        stages: &mut Vec<StageSpec>,
+        push: &mut dyn FnMut(
+            &mut Vec<StageSpec>,
+            String,
+            DeviceKind,
+            crate::sim::Workload,
+            Vec<usize>,
+        ) -> usize,
+        mut state: PipeState,
+        tag: &str,
+        biased: bool,
+        w0: f32,
+        point_dev: DeviceKind,
+        nn_dev: DeviceKind,
+        seg_stage: Option<usize>,
+    ) -> Result<(PipeState, PipeState)> {
+        let cfg = &self.cfg;
+        let m = &self.rt.manifest;
+        let halves = cfg.variant.split();
+        let shape = if halves { "half" } else { "full" };
+        let mut sa2_state = None;
+        for l in 0..3 {
+            let sac = &m.sa_configs[l];
+            let mm = if halves { sac.m / 2 } else { sac.m };
+            let use_bias = biased && l < cfg.bias_layers && w0 != 1.0;
+            // the SA-bias pipeline's SA1 starts FPS at n/2 so the two views
+            // decorrelate even where the bias weight has no effect (mirrors
+            // model.backbone_forward's run_pipeline)
+            let start = if biased && l == 0 { state.xyz.len() / 2 } else { 0 };
+            let idx = if use_bias {
+                pointops::biased_fps_from(&state.xyz, mm, &state.fg, w0, start)
+            } else {
+                pointops::fps_from(&state.xyz, mm, start)
+            };
+            let groups = pointops::ball_query(&state.xyz, &idx, sac.radius, sac.k);
+            let g = pointops::group_features(&state.xyz, state.feats.as_ref(), &idx, &groups);
+            // point-manip deps: previous NN of this pipeline produced the
+            // features we gather; biased FPS additionally needs the painted
+            // fg mask (jump-start rule, Fig. 3)
+            let mut deps: Vec<usize> = state.last_nn.into_iter().collect();
+            if use_bias {
+                if let Some(s) = seg_stage {
+                    if !deps.contains(&s) {
+                        deps.push(s);
+                    }
+                }
+            }
+            // SA1-normal point manip of a painted pipeline needs nothing: it
+            // jump-starts before segmentation finishes (gather happens in the
+            // NN stage's transfer) — but its PointNet needs the paint.
+            let deps_pm = if l == 0 && !use_bias { Vec::new() } else { deps.clone() };
+            let cin = state.feats.as_ref().map_or(0, |f| f.row_len());
+            let pm = push(
+                stages,
+                format!("sa{}_{}_pm", l + 1, tag),
+                point_dev,
+                sa_pointmanip_workload(state.xyz.len(), mm, sac.k, cin),
+                deps_pm,
+            );
+            let art = cfg.art(&format!("sa{}_{}", l + 1, shape));
+            let feats_new = self.run_maybe_padded(&art, &g, mm)?;
+            let mut deps_nn = vec![pm];
+            if l == 0 {
+                if let Some(s) = seg_stage {
+                    deps_nn.push(s); // painted features required
+                }
+            }
+            let nn = push(
+                stages,
+                format!("sa{}_{}_nn", l + 1, tag),
+                nn_dev,
+                nn_workload(m, &art),
+                deps_nn,
+            );
+            state = PipeState {
+                xyz: idx.iter().map(|&i| state.xyz[i]).collect(),
+                feats: Some(feats_new),
+                fg: idx.iter().map(|&i| state.fg[i]).collect(),
+                last_nn: Some(nn),
+            };
+            if l == 1 {
+                sa2_state = Some(PipeState {
+                    xyz: state.xyz.clone(),
+                    feats: state.feats.clone(),
+                    fg: state.fg.clone(),
+                    last_nn: state.last_nn,
+                });
+            }
+        }
+        Ok((sa2_state.unwrap(), state))
+    }
+
+    /// Execute an SA artifact whose ball-batch dimension may exceed ours
+    /// (RandomSplit halves reuse the `half` artifacts of matching size; the
+    /// padding path covers residual mismatches defensively).
+    fn run_maybe_padded(&self, art: &str, g: &Tensor, b: usize) -> Result<Tensor> {
+        let meta = self
+            .rt
+            .manifest
+            .artifact(art)
+            .ok_or_else(|| anyhow!("artifact '{art}' missing"))?;
+        let want = meta.input_shapes[0][0];
+        if want == b {
+            return Ok(self.rt.run(art, &[g])?.remove(0));
+        }
+        assert!(want > b, "artifact {art} smaller than workload");
+        let mut padded = Tensor::zeros(vec![want, g.shape[1], g.shape[2]]);
+        padded.data[..g.data.len()].copy_from_slice(&g.data);
+        let out = self.rt.run(art, &[&padded])?.remove(0);
+        let rows: Vec<usize> = (0..b).collect();
+        Ok(out.gather_rows(&rows))
+    }
+}
+
+/// Concatenate two pipeline states (fusion before SA4).
+fn merge(a: PipeState, b: PipeState) -> PipeState {
+    let mut xyz = a.xyz;
+    xyz.extend_from_slice(&b.xyz);
+    let feats = Tensor::concat0(&[a.feats.as_ref().unwrap(), b.feats.as_ref().unwrap()]);
+    let mut fg = a.fg;
+    fg.extend_from_slice(&b.fg);
+    // the merged set is ready when the later of the two pipelines is done
+    let last_nn = match (a.last_nn, b.last_nn) {
+        (Some(x), Some(y)) => Some(x.max(y)),
+        (x, y) => x.or(y),
+    };
+    PipeState { xyz, feats: Some(feats), fg, last_nn }
+}
+
+/// Horizontal concat of two (N, C) tensors.
+fn hconcat(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rows(), b.rows());
+    let (ca, cb) = (a.row_len(), b.row_len());
+    let mut data = Vec::with_capacity(a.rows() * (ca + cb));
+    for i in 0..a.rows() {
+        data.extend_from_slice(a.row(i));
+        data.extend_from_slice(b.row(i));
+    }
+    Tensor::new(vec![a.rows(), ca + cb], data)
+}

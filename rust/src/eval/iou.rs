@@ -1,0 +1,183 @@
+//! Oriented 3D IoU: exact rotated-rectangle intersection in bird's-eye view
+//! (Sutherland–Hodgman polygon clipping) times vertical overlap.
+
+use crate::data::Box3;
+
+/// BEV corners of a box (counter-clockwise).
+fn bev_corners(b: &Box3) -> [[f64; 2]; 4] {
+    let (s, c) = (b.heading as f64).sin_cos();
+    let hw = b.size[0] as f64 / 2.0;
+    let hd = b.size[1] as f64 / 2.0;
+    let cx = b.center[0] as f64;
+    let cy = b.center[1] as f64;
+    let rot = |x: f64, y: f64| [cx + c * x - s * y, cy + s * x + c * y];
+    [rot(hw, hd), rot(-hw, hd), rot(-hw, -hd), rot(hw, -hd)]
+}
+
+fn polygon_area(poly: &[[f64; 2]]) -> f64 {
+    let n = poly.len();
+    if n < 3 {
+        return 0.0;
+    }
+    let mut a = 0.0;
+    for i in 0..n {
+        let j = (i + 1) % n;
+        a += poly[i][0] * poly[j][1] - poly[j][0] * poly[i][1];
+    }
+    a.abs() / 2.0
+}
+
+/// Clip polygon `subject` against the half-plane left of edge (a -> b).
+fn clip_edge(subject: &[[f64; 2]], a: [f64; 2], b: [f64; 2]) -> Vec<[f64; 2]> {
+    let inside = |p: [f64; 2]| (b[0] - a[0]) * (p[1] - a[1]) - (b[1] - a[1]) * (p[0] - a[0]) >= 0.0;
+    let mut out = Vec::with_capacity(subject.len() + 2);
+    let n = subject.len();
+    for i in 0..n {
+        let cur = subject[i];
+        let prev = subject[(i + n - 1) % n];
+        let (ci, pi) = (inside(cur), inside(prev));
+        if ci != pi {
+            // intersection of (prev, cur) with edge line
+            let d1 = [cur[0] - prev[0], cur[1] - prev[1]];
+            let d2 = [b[0] - a[0], b[1] - a[1]];
+            let denom = d1[0] * d2[1] - d1[1] * d2[0];
+            if denom.abs() > 1e-12 {
+                let t = ((a[0] - prev[0]) * d2[1] - (a[1] - prev[1]) * d2[0]) / denom;
+                out.push([prev[0] + t * d1[0], prev[1] + t * d1[1]]);
+            }
+        }
+        if ci {
+            out.push(cur);
+        }
+    }
+    out
+}
+
+/// Intersection area of two convex BEV rectangles.
+fn bev_intersection(a: &Box3, b: &Box3) -> f64 {
+    let ca = bev_corners(a);
+    let cb = bev_corners(b);
+    // ensure clip polygon is counter-clockwise (it is, by construction)
+    let mut poly: Vec<[f64; 2]> = ca.to_vec();
+    for i in 0..4 {
+        if poly.is_empty() {
+            return 0.0;
+        }
+        poly = clip_edge(&poly, cb[i], cb[(i + 1) % 4]);
+    }
+    polygon_area(&poly)
+}
+
+/// Oriented 3D IoU of two boxes.
+pub fn iou3d(a: &Box3, b: &Box3) -> f64 {
+    let inter_bev = bev_intersection(a, b);
+    if inter_bev <= 0.0 {
+        return 0.0;
+    }
+    let az = (a.center[2] as f64 - a.size[2] as f64 / 2.0, a.center[2] as f64 + a.size[2] as f64 / 2.0);
+    let bz = (b.center[2] as f64 - b.size[2] as f64 / 2.0, b.center[2] as f64 + b.size[2] as f64 / 2.0);
+    let zi = (az.1.min(bz.1) - az.0.max(bz.0)).max(0.0);
+    if zi <= 0.0 {
+        return 0.0;
+    }
+    let inter = inter_bev * zi;
+    let va = a.size.iter().map(|&x| x as f64).product::<f64>();
+    let vb = b.size.iter().map(|&x| x as f64).product::<f64>();
+    (inter / (va + vb - inter)).clamp(0.0, 1.0)
+}
+
+/// Axis-aligned 3D IoU (ignores heading) — used to quantify how much the
+/// oriented evaluation matters (and by quick sanity tests).
+pub fn iou3d_axis_aligned(a: &Box3, b: &Box3) -> f64 {
+    let mut inter = 1.0f64;
+    for d in 0..3 {
+        let al = a.center[d] as f64 - a.size[d] as f64 / 2.0;
+        let ah = a.center[d] as f64 + a.size[d] as f64 / 2.0;
+        let bl = b.center[d] as f64 - b.size[d] as f64 / 2.0;
+        let bh = b.center[d] as f64 + b.size[d] as f64 / 2.0;
+        let o = (ah.min(bh) - al.max(bl)).max(0.0);
+        inter *= o;
+    }
+    let va = a.size.iter().map(|&x| x as f64).product::<f64>();
+    let vb = b.size.iter().map(|&x| x as f64).product::<f64>();
+    if inter <= 0.0 {
+        0.0
+    } else {
+        inter / (va + vb - inter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(center: [f32; 3], size: [f32; 3], heading: f32) -> Box3 {
+        Box3 { center, size, heading, class: 0, score: 1.0 }
+    }
+
+    #[test]
+    fn identical_boxes_iou_one() {
+        let b = mk([1.0, 2.0, 0.5], [2.0, 1.0, 1.0], 0.7);
+        assert!((iou3d(&b, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disjoint_boxes_iou_zero() {
+        let a = mk([0.0, 0.0, 0.5], [1.0, 1.0, 1.0], 0.0);
+        let b = mk([5.0, 0.0, 0.5], [1.0, 1.0, 1.0], 1.0);
+        assert_eq!(iou3d(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = mk([0.0, 0.0, 0.5], [2.0, 1.0, 1.0], 0.3);
+        let b = mk([0.5, 0.2, 0.6], [1.5, 1.2, 0.8], 1.1);
+        assert!((iou3d(&a, &b) - iou3d(&b, &a)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn half_overlap_axis_aligned() {
+        let a = mk([0.0, 0.0, 0.5], [2.0, 2.0, 1.0], 0.0);
+        let b = mk([1.0, 0.0, 0.5], [2.0, 2.0, 1.0], 0.0);
+        // intersection 1x2x1=2, union 4+4-2=6
+        assert!((iou3d(&a, &b) - 2.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rotation_invariance_of_self_pair() {
+        // rotating BOTH boxes by the same angle must not change IoU
+        let a0 = mk([0.0, 0.0, 0.5], [2.0, 1.0, 1.0], 0.0);
+        let b0 = mk([0.5, 0.3, 0.5], [1.0, 1.5, 1.0], 0.4);
+        let base = iou3d(&a0, &b0);
+        for rot in [0.3f32, 1.2, 2.9] {
+            let (s, c) = rot.sin_cos();
+            let rotp = |p: [f32; 3]| [c * p[0] - s * p[1], s * p[0] + c * p[1], p[2]];
+            let a = mk(rotp(a0.center), a0.size, a0.heading + rot);
+            let b = mk(rotp(b0.center), b0.size, b0.heading + rot);
+            assert!((iou3d(&a, &b) - base).abs() < 1e-6, "rot={rot}");
+        }
+    }
+
+    #[test]
+    fn rotated_cross_overlap() {
+        // two long boxes crossed at 90 deg: intersection = 1x1 square x height
+        let a = mk([0.0, 0.0, 0.5], [4.0, 1.0, 1.0], 0.0);
+        let b = mk([0.0, 0.0, 0.5], [4.0, 1.0, 1.0], std::f32::consts::FRAC_PI_2);
+        let expect = 1.0 / (4.0 + 4.0 - 1.0);
+        assert!((iou3d(&a, &b) - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn oriented_differs_from_axis_aligned() {
+        let a = mk([0.0, 0.0, 0.5], [3.0, 0.5, 1.0], 0.6);
+        let b = mk([0.0, 0.0, 0.5], [3.0, 0.5, 1.0], 0.0);
+        assert!(iou3d(&a, &b) < iou3d_axis_aligned(&a, &b) + 1e-9);
+    }
+
+    #[test]
+    fn heading_two_pi_periodic() {
+        let a = mk([0.0, 0.0, 0.5], [2.0, 1.0, 1.0], 0.4);
+        let b = mk([0.0, 0.0, 0.5], [2.0, 1.0, 1.0], 0.4 + 2.0 * std::f32::consts::PI);
+        assert!((iou3d(&a, &b) - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,163 @@
+//! mAP@IoU evaluation (VoteNet / PASCAL-style 11-point-free AP).
+//!
+//! Detections across scenes are pooled per class, sorted by confidence,
+//! greedily matched to unmatched GT boxes with IoU >= threshold, and AP is
+//! the area under the interpolated precision-recall curve.
+
+use std::collections::HashMap;
+
+use crate::data::Box3;
+use crate::eval::iou::iou3d;
+
+/// One detection attributed to a scene.
+#[derive(Debug, Clone)]
+pub struct Detection {
+    pub scene: usize,
+    pub b: Box3, // class + score inside
+}
+
+#[derive(Debug, Clone)]
+pub struct MapResult {
+    /// per-class AP (None when the class has no GT instances)
+    pub ap: Vec<Option<f64>>,
+    pub map: f64,
+}
+
+/// Compute per-class AP and mAP at the given IoU threshold.
+///
+/// `gts[s]` are the ground-truth boxes of scene s.
+pub fn eval_map(
+    detections: &[Detection],
+    gts: &[Vec<Box3>],
+    num_class: usize,
+    iou_thresh: f64,
+) -> MapResult {
+    let mut ap = vec![None; num_class];
+    for cls in 0..num_class {
+        // GT per scene for this class
+        let mut gt_count = 0usize;
+        let mut gt_by_scene: HashMap<usize, Vec<&Box3>> = HashMap::new();
+        for (s, boxes) in gts.iter().enumerate() {
+            let v: Vec<&Box3> = boxes.iter().filter(|b| b.class == cls).collect();
+            gt_count += v.len();
+            if !v.is_empty() {
+                gt_by_scene.insert(s, v);
+            }
+        }
+        if gt_count == 0 {
+            continue;
+        }
+        let mut dets: Vec<&Detection> = detections.iter().filter(|d| d.b.class == cls).collect();
+        dets.sort_by(|a, b| b.b.score.partial_cmp(&a.b.score).unwrap());
+        let mut matched: HashMap<(usize, usize), bool> = HashMap::new();
+        let mut tp = Vec::with_capacity(dets.len());
+        for d in &dets {
+            let mut best = (0.0f64, usize::MAX);
+            if let Some(gt) = gt_by_scene.get(&d.scene) {
+                for (gi, g) in gt.iter().enumerate() {
+                    let iou = iou3d(&d.b, g);
+                    if iou > best.0 {
+                        best = (iou, gi);
+                    }
+                }
+            }
+            let hit = best.0 >= iou_thresh
+                && !matched.get(&(d.scene, best.1)).copied().unwrap_or(false);
+            if hit {
+                matched.insert((d.scene, best.1), true);
+            }
+            tp.push(hit);
+        }
+        // precision-recall with monotone interpolation
+        let mut cum_tp = 0usize;
+        let mut prec = Vec::with_capacity(tp.len());
+        let mut rec = Vec::with_capacity(tp.len());
+        for (i, &hit) in tp.iter().enumerate() {
+            if hit {
+                cum_tp += 1;
+            }
+            prec.push(cum_tp as f64 / (i + 1) as f64);
+            rec.push(cum_tp as f64 / gt_count as f64);
+        }
+        // interpolate precision to be monotone non-increasing
+        for i in (0..prec.len().saturating_sub(1)).rev() {
+            if prec[i] < prec[i + 1] {
+                prec[i] = prec[i + 1];
+            }
+        }
+        let mut auc = 0.0;
+        let mut prev_r = 0.0;
+        for i in 0..prec.len() {
+            auc += (rec[i] - prev_r).max(0.0) * prec[i];
+            prev_r = rec[i];
+        }
+        ap[cls] = Some(auc);
+    }
+    let present: Vec<f64> = ap.iter().flatten().copied().collect();
+    let map = if present.is_empty() { 0.0 } else { present.iter().sum::<f64>() / present.len() as f64 };
+    MapResult { ap, map }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(c: [f32; 3], class: usize, score: f32) -> Box3 {
+        Box3 { center: c, size: [1.0, 1.0, 1.0], heading: 0.0, class, score }
+    }
+
+    #[test]
+    fn perfect_detections_give_map_one() {
+        let gts = vec![vec![mk([0.0; 3], 0, 1.0), mk([3.0, 0.0, 0.0], 1, 1.0)]];
+        let dets = vec![
+            Detection { scene: 0, b: mk([0.0; 3], 0, 0.9) },
+            Detection { scene: 0, b: mk([3.0, 0.0, 0.0], 1, 0.8) },
+        ];
+        let r = eval_map(&dets, &gts, 2, 0.25);
+        assert!((r.map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn misses_reduce_ap() {
+        let gts = vec![vec![mk([0.0; 3], 0, 1.0), mk([5.0, 0.0, 0.0], 0, 1.0)]];
+        let dets = vec![Detection { scene: 0, b: mk([0.0; 3], 0, 0.9) }];
+        let r = eval_map(&dets, &gts, 1, 0.25);
+        assert!((r.ap[0].unwrap() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_detections_count_once() {
+        let gts = vec![vec![mk([0.0; 3], 0, 1.0)]];
+        let dets = vec![
+            Detection { scene: 0, b: mk([0.0; 3], 0, 0.9) },
+            Detection { scene: 0, b: mk([0.02, 0.0, 0.0], 0, 0.8) },
+        ];
+        let r = eval_map(&dets, &gts, 1, 0.25);
+        // second det is a false positive at full recall -> AP stays 1.0
+        assert!((r.ap[0].unwrap() - 1.0).abs() < 1e-9);
+        // but a lower-scored miss then a hit gives AP < 1
+        let dets2 = vec![
+            Detection { scene: 0, b: mk([4.0, 0.0, 0.0], 0, 0.95) },
+            Detection { scene: 0, b: mk([0.0; 3], 0, 0.8) },
+        ];
+        let r2 = eval_map(&dets2, &gts, 1, 0.25);
+        assert!((r2.ap[0].unwrap() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_without_gt_is_skipped() {
+        let gts = vec![vec![mk([0.0; 3], 0, 1.0)]];
+        let dets = vec![Detection { scene: 0, b: mk([0.0; 3], 0, 0.9) }];
+        let r = eval_map(&dets, &gts, 3, 0.25);
+        assert!(r.ap[1].is_none() && r.ap[2].is_none());
+        assert!((r.map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wrong_scene_does_not_match() {
+        let gts = vec![vec![mk([0.0; 3], 0, 1.0)], vec![]];
+        let dets = vec![Detection { scene: 1, b: mk([0.0; 3], 0, 0.9) }];
+        let r = eval_map(&dets, &gts, 1, 0.25);
+        assert_eq!(r.ap[0].unwrap(), 0.0);
+    }
+}

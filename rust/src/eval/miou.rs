@@ -1,0 +1,92 @@
+//! Semantic-segmentation mIoU (paper Tables 4/5).
+
+/// Accumulates a confusion matrix over (prediction, ground-truth) label
+/// pairs and reports per-class IoU.
+pub struct ConfusionMiou {
+    num_classes: usize,
+    /// confusion[gt * C + pred]
+    confusion: Vec<u64>,
+}
+
+impl ConfusionMiou {
+    pub fn new(num_classes: usize) -> Self {
+        ConfusionMiou { num_classes, confusion: vec![0; num_classes * num_classes] }
+    }
+
+    pub fn add(&mut self, gt: &[u8], pred: &[u8]) {
+        assert_eq!(gt.len(), pred.len());
+        for (&g, &p) in gt.iter().zip(pred.iter()) {
+            self.confusion[g as usize * self.num_classes + p as usize] += 1;
+        }
+    }
+
+    /// Per-class IoU = TP / (TP + FP + FN). Classes with no presence -> None.
+    pub fn per_class_iou(&self) -> Vec<Option<f64>> {
+        let c = self.num_classes;
+        (0..c)
+            .map(|k| {
+                let tp = self.confusion[k * c + k];
+                let fn_: u64 = (0..c).map(|j| self.confusion[k * c + j]).sum::<u64>() - tp;
+                let fp: u64 = (0..c).map(|j| self.confusion[j * c + k]).sum::<u64>() - tp;
+                let denom = tp + fp + fn_;
+                if denom == 0 {
+                    None
+                } else {
+                    Some(tp as f64 / denom as f64)
+                }
+            })
+            .collect()
+    }
+
+    /// Mean IoU over foreground classes (index 0 = background excluded),
+    /// matching the paper's per-object-class mIoU tables.
+    pub fn miou_foreground(&self) -> f64 {
+        let ious = self.per_class_iou();
+        let present: Vec<f64> = ious.iter().skip(1).flatten().copied().collect();
+        if present.is_empty() {
+            0.0
+        } else {
+            present.iter().sum::<f64>() / present.len() as f64
+        }
+    }
+}
+
+/// One-shot helper.
+pub fn confusion_miou(gt: &[u8], pred: &[u8], num_classes: usize) -> f64 {
+    let mut m = ConfusionMiou::new(num_classes);
+    m.add(gt, pred);
+    m.miou_foreground()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_iou_one() {
+        let gt = vec![0u8, 1, 2, 1, 0, 2];
+        let m = confusion_miou(&gt, &gt, 3);
+        assert!((m - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn half_wrong_class() {
+        // class1: gt {1,1}, pred {1,2} -> IoU(1) = 1/2; class2: gt {2}, pred {2,2}...
+        let gt = vec![1u8, 1, 2];
+        let pred = vec![1u8, 2, 2];
+        let m = ConfusionMiou::new(3);
+        let mut m = m;
+        m.add(&gt, &pred);
+        let ious = m.per_class_iou();
+        assert!((ious[1].unwrap() - 0.5).abs() < 1e-9);
+        assert!((ious[2].unwrap() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn background_excluded_from_miou() {
+        let gt = vec![0u8, 0, 0, 1];
+        let pred = vec![0u8, 0, 0, 1];
+        let m = confusion_miou(&gt, &pred, 2);
+        assert!((m - 1.0).abs() < 1e-9);
+    }
+}

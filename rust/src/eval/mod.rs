@@ -1,0 +1,11 @@
+//! Detection evaluation: oriented 3D IoU, NMS, mAP@IoU, segmentation mIoU.
+
+pub mod iou;
+pub mod map;
+pub mod miou;
+pub mod nms;
+
+pub use iou::iou3d;
+pub use map::{eval_map, Detection, MapResult};
+pub use miou::confusion_miou;
+pub use nms::nms3d;

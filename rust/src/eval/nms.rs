@@ -1,0 +1,57 @@
+//! Class-agnostic 3D non-maximum suppression over decoded proposals.
+
+use crate::data::Box3;
+use crate::eval::iou::iou3d;
+
+/// Greedy NMS: keep highest-score boxes, drop overlaps above `iou_thresh`.
+/// Returns indices into `boxes` in descending score order.
+pub fn nms3d(boxes: &[Box3], iou_thresh: f64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..boxes.len()).collect();
+    order.sort_by(|&a, &b| boxes[b].score.partial_cmp(&boxes[a].score).unwrap());
+    let mut keep = Vec::new();
+    let mut suppressed = vec![false; boxes.len()];
+    for &i in &order {
+        if suppressed[i] {
+            continue;
+        }
+        keep.push(i);
+        for &j in &order {
+            if !suppressed[j] && j != i && iou3d(&boxes[i], &boxes[j]) > iou_thresh {
+                suppressed[j] = true;
+            }
+        }
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(c: [f32; 3], score: f32) -> Box3 {
+        Box3 { center: c, size: [1.0, 1.0, 1.0], heading: 0.0, class: 0, score }
+    }
+
+    #[test]
+    fn suppresses_duplicates_keeps_best() {
+        let boxes = vec![mk([0.0, 0.0, 0.0], 0.5), mk([0.05, 0.0, 0.0], 0.9), mk([5.0, 0.0, 0.0], 0.3)];
+        let keep = nms3d(&boxes, 0.25);
+        assert_eq!(keep, vec![1, 2]);
+    }
+
+    #[test]
+    fn no_overlap_keeps_all() {
+        let boxes: Vec<Box3> = (0..5).map(|i| mk([3.0 * i as f32, 0.0, 0.0], 0.1 * i as f32)).collect();
+        let keep = nms3d(&boxes, 0.25);
+        assert_eq!(keep.len(), 5);
+        // descending score
+        for w in keep.windows(2) {
+            assert!(boxes[w[0]].score >= boxes[w[1]].score);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(nms3d(&[], 0.5).is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! PointSplit: on-device 3D object detection with heterogeneous low-power
+//! accelerators — Rust + JAX + Pallas reproduction (see DESIGN.md).
+//!
+//! Layer 3 (this crate) owns the request path: synthetic RGB-D scenes flow
+//! through the coordinator's two-lane (GPU/NPU) schedule; dense networks
+//! execute as AOT-compiled HLO via PJRT (`runtime`), point manipulation runs
+//! in `pointops`, and a calibrated device model (`sim`) provides
+//! paper-comparable timing.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod pointops;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,238 @@
+//! PointSplit launcher CLI.
+//!
+//! ```text
+//! pointsplit check    [--artifacts DIR]
+//!     compile every HLO artifact through PJRT and report failures
+//! pointsplit detect   [--artifacts DIR] [--dataset synrgbd] [--variant pointsplit]
+//!                     [--int8] [--schedule gpu+edgetpu] [--seed N]
+//!     run one scene end-to-end; print detections + simulated timeline
+//! pointsplit serve    [--scenes 32] [--workers 4] [... detect flags]
+//!     multi-scene request loop; print mAP + latency/memory report
+//! pointsplit devices
+//!     print the calibrated device models
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use pointsplit::config::{parse_schedule, parse_variant, Cli};
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data;
+use pointsplit::runtime::Runtime;
+use pointsplit::sim::{Device, DeviceKind};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1))?;
+    match cli.command.as_str() {
+        "check" => cmd_check(&cli),
+        "detect" => cmd_detect(&cli),
+        "serve" => cmd_serve(&cli),
+        "devices" => cmd_devices(),
+        "probe" => cmd_probe(&cli),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' (try: check|detect|serve|devices)")),
+    }
+}
+
+fn print_help() {
+    println!("pointsplit — on-device 3D detection with heterogeneous accelerators");
+    println!("commands: check | detect | serve | devices   (see rust/src/main.rs docs)");
+}
+
+fn open_runtime(cli: &Cli) -> Result<Runtime> {
+    Runtime::open(cli.get_or("artifacts", "artifacts"))
+}
+
+fn detector_config(cli: &Cli) -> Result<(DetectorConfig, &'static data::DatasetCfg)> {
+    let dataset = cli.get_or("dataset", "synrgbd");
+    let ds = data::dataset(&dataset).ok_or_else(|| anyhow!("unknown dataset '{dataset}'"))?;
+    let variant = parse_variant(&cli.get_or("variant", "pointsplit"))?;
+    let schedule = parse_schedule(&cli.get_or("schedule", "gpu+edgetpu"))?;
+    let mut cfg = DetectorConfig::new(&dataset, variant, cli.get_bool("int8"), schedule);
+    cfg.w0 = cli.get_f64("w0", cfg.w0 as f64)? as f32;
+    cfg.bias_layers = cli.get_usize("bias-layers", cfg.bias_layers)?;
+    if let Some(h) = cli.get("head-precision") {
+        cfg.precision_head = h.to_string();
+    }
+    Ok((cfg, ds))
+}
+
+fn cmd_check(cli: &Cli) -> Result<()> {
+    let rt = open_runtime(cli)?;
+    println!("platform: {}", rt.platform());
+    let (ok, failures) = rt.check_all();
+    println!("compiled {ok}/{} artifacts", rt.manifest.artifacts.len());
+    for (n, e) in &failures {
+        println!("  FAIL {n}: {e}");
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("{} artifacts failed to compile", failures.len()))
+    }
+}
+
+fn cmd_detect(cli: &Cli) -> Result<()> {
+    let rt = open_runtime(cli)?;
+    let (cfg, ds) = detector_config(cli)?;
+    let seed = cli.get_usize("seed", 1)? as u64;
+    let scene = data::generate_scene(seed, ds);
+    println!(
+        "scene seed={seed}: {} points, {} objects",
+        scene.points.len(),
+        scene.objects.len()
+    );
+    let pipe = ScenePipeline::new(&rt, cfg.clone());
+    let out = pipe.run(&scene, seed)?;
+    println!("\nvariant={} schedule={:?} int8={}", cfg.variant.name(), cfg.schedule, cfg.int8());
+    println!("detections ({}):", out.detections.len());
+    for d in out.detections.iter().take(12) {
+        println!(
+            "  {:<11} score {:.2}  c=({:+.2},{:+.2},{:.2}) s=({:.2},{:.2},{:.2}) yaw={:.2}",
+            rt.manifest.classes[d.class],
+            d.score,
+            d.center[0],
+            d.center[1],
+            d.center[2],
+            d.size[0],
+            d.size[1],
+            d.size[2],
+            d.heading
+        );
+    }
+    println!("\nground truth ({}):", scene.objects.len());
+    for o in &scene.objects {
+        println!(
+            "  {:<11}            c=({:+.2},{:+.2},{:.2}) s=({:.2},{:.2},{:.2}) yaw={:.2}",
+            rt.manifest.classes[o.class],
+            o.center[0],
+            o.center[1],
+            o.center[2],
+            o.size[0],
+            o.size[1],
+            o.size[2],
+            o.heading
+        );
+    }
+    println!("\nsimulated timeline ({:.1} ms total):", out.timeline.total_ms);
+    for s in &out.timeline.stages {
+        println!(
+            "  {:>8.1} -> {:>8.1} ms  [{}] {}{}",
+            s.start_ms,
+            s.end_ms,
+            s.device.name(),
+            s.name,
+            if s.comm_ms > 0.0 { format!("  (+{:.1} ms xfer)", s.comm_ms) } else { String::new() }
+        );
+    }
+    for k in [DeviceKind::Gpu, DeviceKind::EdgeTpu, DeviceKind::Cpu] {
+        if let Some(busy) = out.timeline.busy_ms.get(&k) {
+            println!(
+                "  {}: busy {:.1} ms, idle {:.1} ms",
+                k.name(),
+                busy,
+                out.timeline.idle_ms(k)
+            );
+        }
+    }
+    println!("peak memory (modeled): {:.0} MB", out.peak_memory_mb);
+    println!("host functional time: {:.1} ms", out.host_ms);
+    if cli.get_bool("viz") {
+        println!("\n{}", pointsplit::metrics::viz::bev_ascii(&scene, &out.detections, 0.35, 72));
+        println!("{}", pointsplit::metrics::viz::gantt_ascii(&out.timeline, 72));
+    }
+    if let Some(path) = cli.get("trace") {
+        std::fs::write(path, pointsplit::metrics::trace::to_chrome_trace(&out.timeline))?;
+        println!("chrome trace written to {path} (open in chrome://tracing)");
+    }
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let rt = open_runtime(cli)?;
+    let (cfg, ds) = detector_config(cli)?;
+    let scenes = cli.get_usize("scenes", 32)?;
+    let workers = cli.get_usize("workers", 4)?;
+    let seed0 = cli.get_usize("seed", 100_000)? as u64;
+    println!(
+        "serving {scenes} {} scenes, variant={}, schedule={:?}, int8={}, workers={workers}",
+        ds.name,
+        cfg.variant.name(),
+        cfg.schedule,
+        cfg.int8()
+    );
+    let rep = pointsplit::coordinator::serve::serve(&rt, &cfg, ds, scenes, workers, seed0)?;
+    println!("\nmAP@0.25 = {:.1}   mAP@0.5 = {:.1}", rep.map_25 * 100.0, rep.map_50 * 100.0);
+    println!(
+        "simulated latency: mean {:.0} ms  p50 {:.0}  p95 {:.0}",
+        rep.sim_latency_ms.mean, rep.sim_latency_ms.p50, rep.sim_latency_ms.p95
+    );
+    println!(
+        "host latency:      mean {:.0} ms  p50 {:.0}  p95 {:.0}  ({:.1} scenes/s wall)",
+        rep.host_latency_ms.mean,
+        rep.host_latency_ms.p50,
+        rep.host_latency_ms.p95,
+        rep.scenes as f64 / rep.wall_s
+    );
+    println!("peak memory (modeled): {:.0} MB", rep.peak_memory_mb);
+    println!(
+        "device busy: GPU {:.0} ms  NPU {:.0} ms  comm {:.0} ms (totals)",
+        rep.busy_gpu_ms, rep.busy_npu_ms, rep.comm_ms
+    );
+    println!("\nper-class AP@0.25:");
+    for (c, ap) in rt.manifest.classes.iter().zip(rep.per_class_ap25.iter()) {
+        match ap {
+            Some(v) => println!("  {:<11} {:.1}", c, v * 100.0),
+            None => println!("  {:<11} -", c),
+        }
+    }
+    Ok(())
+}
+
+/// Execute one artifact at the deterministic probe input and print output
+/// stats (debugging aid for JAX<->Rust parity).
+fn cmd_probe(cli: &Cli) -> Result<()> {
+    let rt = open_runtime(cli)?;
+    let name = cli.positional.first().ok_or_else(|| anyhow!("usage: probe <artifact>"))?;
+    let meta = rt.manifest.artifact(name).ok_or_else(|| anyhow!("unknown artifact"))?;
+    let inputs: Vec<pointsplit::util::tensor::Tensor> = meta
+        .input_shapes
+        .iter()
+        .map(|shape| {
+            let n: usize = shape.iter().product();
+            pointsplit::util::tensor::Tensor::new(
+                shape.clone(),
+                (0..n).map(|i| (0.1 + 0.001 * i as f64).sin() as f32).collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<&pointsplit::util::tensor::Tensor> = inputs.iter().collect();
+    let outs = rt.run(name, &refs)?;
+    for (i, o) in outs.iter().enumerate() {
+        let mean = o.data.iter().map(|&x| x as f64).sum::<f64>() / o.data.len() as f64;
+        let std = (o.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+            / o.data.len() as f64)
+            .sqrt();
+        println!("out[{i}] shape {:?} mean {mean:.6} std {std:.6} first {:?}", o.shape, &o.data[..6.min(o.data.len())]);
+    }
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    for d in [Device::cpu(), Device::gpu(), Device::edgetpu()] {
+        println!("{:?}", d);
+    }
+    println!("\nschedules: gpu | gpu>edgetpu (sequential) | gpu+edgetpu (pipelined)");
+    let _ = Schedule::SingleDevice(DeviceKind::Gpu);
+    let _ = Variant::PointSplit;
+    Ok(())
+}

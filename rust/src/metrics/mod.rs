@@ -1,0 +1,145 @@
+//! Runtime metrics: counters, latency histograms, allocation tracking.
+pub mod trace;
+pub mod viz;
+
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Log-bucketed latency histogram (microseconds).
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) us
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64) as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen > target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 31
+    }
+}
+
+/// Named monotonically-increasing counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    inner: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        *self.inner.lock().unwrap().entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Coarse allocation tracker for the Fig. 9 peak-memory accounting of
+/// request-path buffers (framework bases are modeled in arch.rs).
+#[derive(Debug, Default)]
+pub struct MemTracker {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl MemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, bytes: u64) {
+        let cur = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, bytes: u64) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 100, 1000, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::new();
+        c.add("scenes", 2);
+        c.add("scenes", 3);
+        assert_eq!(c.get("scenes"), 5);
+    }
+
+    #[test]
+    fn mem_tracker_peak() {
+        let m = MemTracker::new();
+        m.alloc(100);
+        m.alloc(200);
+        m.free(150);
+        m.alloc(50);
+        assert_eq!(m.peak_bytes(), 300);
+    }
+}

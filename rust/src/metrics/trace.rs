@@ -1,0 +1,107 @@
+//! Chrome-trace (chrome://tracing / Perfetto) export of simulated timelines.
+//!
+//! `pointsplit detect --trace out.json` writes the two-lane schedule as a
+//! trace-event file: one "thread" per device, compute slices and transfer
+//! slices separated — the Fig. 2/3 diagrams, but interactive.
+
+use crate::sim::{DeviceKind, Timeline};
+use crate::util::json::Json;
+
+fn device_tid(kind: DeviceKind) -> (u64, &'static str) {
+    match kind {
+        DeviceKind::Gpu => (1, "GPU (point manipulation)"),
+        DeviceKind::EdgeTpu => (2, "EdgeTPU (neural nets)"),
+        DeviceKind::Cpu => (3, "CPU"),
+    }
+}
+
+/// Serialize a [`Timeline`] to the Chrome trace-event JSON format.
+pub fn to_chrome_trace(tl: &Timeline) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    // thread names
+    for kind in [DeviceKind::Gpu, DeviceKind::EdgeTpu, DeviceKind::Cpu] {
+        let (tid, name) = device_tid(kind);
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("name", Json::Str("thread_name".into())),
+            (
+                "args",
+                Json::obj(vec![("name", Json::Str(name.into()))]),
+            ),
+        ]));
+    }
+    for s in &tl.stages {
+        let (tid, _) = device_tid(s.device);
+        if s.comm_ms > 0.0 {
+            events.push(Json::obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("name", Json::Str(format!("xfer:{}", s.name))),
+                ("cat", Json::Str("transfer".into())),
+                ("ts", Json::Num(s.start_ms * 1000.0)),
+                ("dur", Json::Num(s.comm_ms * 1000.0)),
+            ]));
+        }
+        events.push(Json::obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("name", Json::Str(s.name.clone())),
+            ("cat", Json::Str("compute".into())),
+            ("ts", Json::Num(s.compute_start_ms * 1000.0)),
+            ("dur", Json::Num((s.end_ms - s.compute_start_ms) * 1000.0)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Precision, ScheduleSim, StageSpec, Workload, WorkloadKind};
+
+    #[test]
+    fn trace_roundtrips_as_json() {
+        let stages = vec![
+            StageSpec {
+                name: "a".into(),
+                device: DeviceKind::Gpu,
+                workload: Workload {
+                    kind: WorkloadKind::PointOp,
+                    precision: Precision::Fp32,
+                    flops: 1_000_000,
+                    mem_bytes: 0,
+                    wire_bytes: 100,
+                },
+                deps: vec![],
+            },
+            StageSpec {
+                name: "b".into(),
+                device: DeviceKind::EdgeTpu,
+                workload: Workload {
+                    kind: WorkloadKind::NeuralNet,
+                    precision: Precision::Int8,
+                    flops: 10_000_000,
+                    mem_bytes: 0,
+                    wire_bytes: 100,
+                },
+                deps: vec![0],
+            },
+        ];
+        let tl = ScheduleSim::new().run(&stages);
+        let trace = to_chrome_trace(&tl);
+        let parsed = Json::parse(&trace).unwrap();
+        let events = parsed.req("traceEvents").as_arr().unwrap();
+        // 3 thread metas + 2 compute + 1 transfer (b crosses devices)
+        assert!(events.len() >= 6, "{}", events.len());
+        assert!(events.iter().any(|e| e.req("name").as_str() == Some("b")));
+        assert!(events.iter().any(|e| e.get("cat").and_then(|c| c.as_str()) == Some("transfer")));
+    }
+}

@@ -1,0 +1,125 @@
+//! Terminal visualization: bird's-eye-view scene renderer and timeline
+//! Gantt strips. Used by `pointsplit detect --viz` and the quickstart.
+
+use crate::data::{Box3, Scene};
+use crate::sim::{DeviceKind, Timeline};
+
+/// Render a BEV ASCII map: ground-truth boxes as lowercase class initials,
+/// detections (score > thresh) as uppercase, '.' background points.
+pub fn bev_ascii(scene: &Scene, detections: &[Box3], thresh: f32, width: usize) -> String {
+    let height = width / 2;
+    let mut lo = [f32::INFINITY; 2];
+    let mut hi = [f32::NEG_INFINITY; 2];
+    for p in &scene.points {
+        for d in 0..2 {
+            lo[d] = lo[d].min(p[d]);
+            hi[d] = hi[d].max(p[d]);
+        }
+    }
+    let span = [(hi[0] - lo[0]).max(1e-3), (hi[1] - lo[1]).max(1e-3)];
+    let mut grid = vec![vec![' '; width]; height];
+    let to_cell = |x: f32, y: f32| -> (usize, usize) {
+        let cx = (((x - lo[0]) / span[0]) * (width - 1) as f32) as usize;
+        let cy = (((y - lo[1]) / span[1]) * (height - 1) as f32) as usize;
+        (cx.min(width - 1), cy.min(height - 1))
+    };
+    for p in &scene.points {
+        let (cx, cy) = to_cell(p[0], p[1]);
+        if grid[cy][cx] == ' ' {
+            grid[cy][cx] = '.';
+        }
+    }
+    let initial = |class: usize| crate::data::CLASS_NAMES[class].chars().next().unwrap();
+    for o in &scene.objects {
+        let (cx, cy) = to_cell(o.center[0], o.center[1]);
+        grid[cy][cx] = initial(o.class);
+    }
+    for d in detections.iter().filter(|d| d.score > thresh) {
+        let (cx, cy) = to_cell(d.center[0], d.center[1]);
+        grid[cy][cx] = initial(d.class).to_ascii_uppercase();
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "BEV {}x{} (lowercase = GT center, UPPERCASE = detection > {thresh}):\n",
+        width, height
+    ));
+    for row in grid {
+        out.push_str(&row.into_iter().collect::<String>());
+        out.push('\n');
+    }
+    out
+}
+
+/// One-line-per-device Gantt strip of a simulated timeline.
+pub fn gantt_ascii(tl: &Timeline, width: usize) -> String {
+    let scale = width as f64 / tl.total_ms.max(1e-9);
+    let mut out = String::new();
+    for kind in [DeviceKind::Gpu, DeviceKind::EdgeTpu, DeviceKind::Cpu] {
+        let stages: Vec<_> = tl.stages.iter().filter(|s| s.device == kind).collect();
+        if stages.is_empty() {
+            continue;
+        }
+        let mut row = vec![' '; width];
+        for s in &stages {
+            let a = (s.compute_start_ms * scale) as usize;
+            let b = ((s.end_ms * scale) as usize).min(width.saturating_sub(1));
+            let c = s.name.chars().next().unwrap_or('#');
+            for cell in row.iter_mut().take(b + 1).skip(a.min(width - 1)) {
+                *cell = c;
+            }
+            // transfer prefix
+            let ta = (s.start_ms * scale) as usize;
+            for cell in row.iter_mut().take(a.min(width)).skip(ta.min(width - 1)) {
+                if *cell == ' ' {
+                    *cell = '~';
+                }
+            }
+        }
+        out.push_str(&format!(
+            "{:<8} |{}| {:.0} ms busy\n",
+            kind.name(),
+            row.into_iter().collect::<String>(),
+            tl.busy_ms.get(&kind).copied().unwrap_or(0.0)
+        ));
+    }
+    out.push_str(&format!("total: {:.0} ms ('~' = PCIe transfer)\n", tl.total_ms));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_scene, SYNRGBD};
+    use crate::sim::{Precision, ScheduleSim, StageSpec, Workload, WorkloadKind};
+
+    #[test]
+    fn bev_contains_gt_markers() {
+        let scene = generate_scene(3, &SYNRGBD);
+        let s = bev_ascii(&scene, &[], 0.5, 60);
+        assert!(s.lines().count() > 20);
+        // at least one lowercase class initial appears
+        let initials: Vec<char> =
+            crate::data::CLASS_NAMES.iter().map(|n| n.chars().next().unwrap()).collect();
+        assert!(s.chars().any(|c| initials.contains(&c)));
+    }
+
+    #[test]
+    fn gantt_has_device_rows() {
+        let stages = vec![StageSpec {
+            name: "x".into(),
+            device: DeviceKind::Gpu,
+            workload: Workload {
+                kind: WorkloadKind::PointOp,
+                precision: Precision::Fp32,
+                flops: 1_000_000,
+                mem_bytes: 0,
+                wire_bytes: 0,
+            },
+            deps: vec![],
+        }];
+        let tl = ScheduleSim::new().run(&stages);
+        let g = gantt_ascii(&tl, 40);
+        assert!(g.contains("GPU"));
+        assert!(g.contains("total:"));
+    }
+}

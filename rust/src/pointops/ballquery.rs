@@ -1,0 +1,222 @@
+//! Ball query: nearest-K-within-radius grouping (PointNet++ convention).
+//!
+//! Mirrors python/compile/sampling.py `ball_query`: for each center, take the
+//! K nearest points within `radius`; unfilled slots repeat the nearest valid
+//! member; an empty ball falls back to the globally nearest point.
+//!
+//! §Perf: a uniform grid (cell size = radius) prunes the candidate set from
+//! N to the 27 neighboring cells, turning the O(M*N) scan into ~O(M*K) for
+//! indoor point densities (see EXPERIMENTS.md §Perf for the before/after).
+
+use std::collections::HashMap;
+
+/// Uniform hash grid over the cloud, cell size = radius.
+struct Grid {
+    cell: f32,
+    cells: HashMap<(i32, i32, i32), Vec<u32>>,
+}
+
+impl Grid {
+    fn build(xyz: &[[f32; 3]], cell: f32) -> Grid {
+        let mut cells: HashMap<(i32, i32, i32), Vec<u32>> =
+            HashMap::with_capacity(xyz.len() / 2);
+        for (i, p) in xyz.iter().enumerate() {
+            cells
+                .entry(Self::key(p, cell))
+                .or_default()
+                .push(i as u32);
+        }
+        Grid { cell, cells }
+    }
+
+    #[inline]
+    fn key(p: &[f32; 3], cell: f32) -> (i32, i32, i32) {
+        (
+            (p[0] / cell).floor() as i32,
+            (p[1] / cell).floor() as i32,
+            (p[2] / cell).floor() as i32,
+        )
+    }
+
+    /// Visit all points in the 27 cells around `c`.
+    #[inline]
+    fn neighbors(&self, c: &[f32; 3], mut f: impl FnMut(u32)) {
+        let (kx, ky, kz) = Self::key(c, self.cell);
+        for dx in -1..=1 {
+            for dy in -1..=1 {
+                for dz in -1..=1 {
+                    if let Some(v) = self.cells.get(&(kx + dx, ky + dy, kz + dz)) {
+                        for &i in v {
+                            f(i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Returns (M, K) neighbor indices for each center index.
+pub fn ball_query(
+    xyz: &[[f32; 3]],
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+) -> Vec<Vec<usize>> {
+    let r2 = radius * radius;
+    let grid = Grid::build(xyz, radius);
+    let mut hits: Vec<(f32, usize)> = Vec::with_capacity(64);
+    centers
+        .iter()
+        .map(|&ci| {
+            let c = xyz[ci];
+            hits.clear();
+            grid.neighbors(&c, |j| {
+                let p = xyz[j as usize];
+                let dx = p[0] - c[0];
+                let dy = p[1] - c[1];
+                let dz = p[2] - c[2];
+                let d2 = dx * dx + dy * dy + dz * dz;
+                if d2 <= r2 {
+                    hits.push((d2, j as usize));
+                }
+            });
+            hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let mut out: Vec<usize> = hits.iter().take(k).map(|&(_, j)| j).collect();
+            let fill = out.first().copied().unwrap_or_else(|| {
+                // empty ball (rare): brute-force global nearest
+                let mut nearest = (f32::INFINITY, ci);
+                for (j, p) in xyz.iter().enumerate() {
+                    let dx = p[0] - c[0];
+                    let dy = p[1] - c[1];
+                    let dz = p[2] - c[2];
+                    let d2 = dx * dx + dy * dy + dz * dz;
+                    if d2 < nearest.0 {
+                        nearest = (d2, j);
+                    }
+                }
+                nearest.1
+            });
+            out.resize(k, fill);
+            out
+        })
+        .collect()
+}
+
+/// Reference O(M*N) implementation kept for tests and the §Perf comparison.
+pub fn ball_query_bruteforce(
+    xyz: &[[f32; 3]],
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+) -> Vec<Vec<usize>> {
+    let r2 = radius * radius;
+    centers
+        .iter()
+        .map(|&ci| {
+            let c = xyz[ci];
+            let mut hits: Vec<(f32, usize)> = Vec::with_capacity(k * 2);
+            let mut nearest = (f32::INFINITY, ci);
+            for (j, p) in xyz.iter().enumerate() {
+                let dx = p[0] - c[0];
+                let dy = p[1] - c[1];
+                let dz = p[2] - c[2];
+                let d2 = dx * dx + dy * dy + dz * dz;
+                if d2 < nearest.0 {
+                    nearest = (d2, j);
+                }
+                if d2 <= r2 {
+                    hits.push((d2, j));
+                }
+            }
+            hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            hits.truncate(k);
+            let mut out: Vec<usize> = hits.iter().map(|&(_, j)| j).collect();
+            let fill = out.first().copied().unwrap_or(nearest.1);
+            out.resize(k, fill);
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cloud(n: usize, seed: u64) -> Vec<[f32; 3]> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| [r.f32() * 2.0, r.f32() * 2.0, r.f32()]).collect()
+    }
+
+    fn d2(a: [f32; 3], b: [f32; 3]) -> f32 {
+        (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+    }
+
+    #[test]
+    fn grid_matches_bruteforce() {
+        for seed in 0..6 {
+            let pts = cloud(500, seed);
+            let centers: Vec<usize> = (0..32).map(|i| i * 15).collect();
+            for (r, k) in [(0.15, 8), (0.4, 16), (0.9, 4)] {
+                let a = ball_query(&pts, &centers, r, k);
+                let b = ball_query_bruteforce(&pts, &centers, r, k);
+                assert_eq!(a, b, "seed {seed} r {r} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_members_within_radius_or_fill() {
+        let pts = cloud(400, 1);
+        let centers = vec![0, 5, 100];
+        let r = 0.4;
+        let groups = ball_query(&pts, &centers, r, 16);
+        for (g, &ci) in groups.iter().zip(centers.iter()) {
+            assert_eq!(g.len(), 16);
+            let first = g[0];
+            for &j in g {
+                assert!(d2(pts[j], pts[ci]) <= r * r + 1e-6 || j == first);
+            }
+        }
+    }
+
+    #[test]
+    fn center_is_own_nearest_member() {
+        let pts = cloud(200, 2);
+        let groups = ball_query(&pts, &[7], 1.0, 8);
+        assert_eq!(groups[0][0], 7, "nearest in-radius point is the center itself");
+    }
+
+    #[test]
+    fn empty_ball_falls_back_to_nearest() {
+        let mut pts = cloud(50, 3);
+        pts.push([100.0, 100.0, 100.0]); // isolated center
+        let groups = ball_query(&pts, &[50], 0.1, 4);
+        assert!(groups[0].iter().all(|&j| j == 50));
+    }
+
+    #[test]
+    fn members_sorted_by_distance() {
+        let pts = cloud(300, 4);
+        let groups = ball_query(&pts, &[3], 0.8, 12);
+        let g = &groups[0];
+        for w in g.windows(2) {
+            let (a, b) = (d2(pts[w[0]], pts[3]), d2(pts[w[1]], pts[3]));
+            assert!(a <= b + 1e-6 || w[1] == g[0]);
+        }
+    }
+
+    #[test]
+    fn negative_coordinates_handled() {
+        let mut r = Rng::new(9);
+        let pts: Vec<[f32; 3]> = (0..300)
+            .map(|_| [r.f32() * 4.0 - 2.0, r.f32() * 4.0 - 2.0, r.f32() - 0.5])
+            .collect();
+        let centers = vec![0, 10, 200];
+        assert_eq!(
+            ball_query(&pts, &centers, 0.5, 8),
+            ball_query_bruteforce(&pts, &centers, 0.5, 8)
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Density-based biased sampling — the paper's §7.1 generalization.
+//!
+//! "A point sampling technique has its own metric (e.g., distance or
+//! density) and our technique is applied ... by slightly modifying the
+//! metric with point semantics. In case of a density-based sampling
+//! technique we can simply boost a point's density-based metric value if
+//! the point is in a specific group."
+//!
+//! Implementation: each point's base score is its inverse local density
+//! (sparse regions first, as in density-aware completion samplers);
+//! foreground points get their score multiplied by `w0`. Selection is
+//! greedy with neighborhood suppression so samples stay spread out.
+
+use std::collections::HashMap;
+
+/// Local density: neighbor count within `radius` (grid-accelerated).
+pub fn local_density(xyz: &[[f32; 3]], radius: f32) -> Vec<u32> {
+    let cell = radius;
+    let key = |p: &[f32; 3]| {
+        (
+            (p[0] / cell).floor() as i32,
+            (p[1] / cell).floor() as i32,
+            (p[2] / cell).floor() as i32,
+        )
+    };
+    let mut cells: HashMap<(i32, i32, i32), Vec<u32>> = HashMap::new();
+    for (i, p) in xyz.iter().enumerate() {
+        cells.entry(key(p)).or_default().push(i as u32);
+    }
+    let r2 = radius * radius;
+    xyz.iter()
+        .map(|p| {
+            let (kx, ky, kz) = key(p);
+            let mut count = 0u32;
+            for dx in -1..=1 {
+                for dy in -1..=1 {
+                    for dz in -1..=1 {
+                        if let Some(v) = cells.get(&(kx + dx, ky + dy, kz + dz)) {
+                            for &j in v {
+                                let q = xyz[j as usize];
+                                let d2 = (q[0] - p[0]).powi(2)
+                                    + (q[1] - p[1]).powi(2)
+                                    + (q[2] - p[2]).powi(2);
+                                if d2 <= r2 {
+                                    count += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            count
+        })
+        .collect()
+}
+
+/// Density-based biased sampling: pick `m` points maximizing
+/// `w(fg) / density`, suppressing already-covered neighborhoods.
+pub fn density_biased_sample(
+    xyz: &[[f32; 3]],
+    m: usize,
+    fg: &[f32],
+    w0: f32,
+    radius: f32,
+) -> Vec<usize> {
+    assert!(m <= xyz.len());
+    let density = local_density(xyz, radius);
+    let mut score: Vec<f32> = density
+        .iter()
+        .zip(fg.iter())
+        .map(|(&d, &f)| {
+            let w = 1.0 + (w0 - 1.0) * f;
+            w / (d as f32).max(1.0)
+        })
+        .collect();
+    let r2 = radius * radius;
+    let mut out = Vec::with_capacity(m);
+    for _ in 0..m {
+        // first-max tie break for determinism
+        let mut best = 0;
+        for (i, &s) in score.iter().enumerate() {
+            if s > score[best] {
+                best = i;
+            }
+        }
+        if score[best] <= f32::NEG_INFINITY {
+            break;
+        }
+        out.push(best);
+        let bp = xyz[best];
+        // suppress the picked point and damp its neighborhood so selection
+        // spreads (the density analog of FPS's min-distance update)
+        score[best] = f32::NEG_INFINITY;
+        for (i, p) in xyz.iter().enumerate() {
+            let d2 =
+                (p[0] - bp[0]).powi(2) + (p[1] - bp[1]).powi(2) + (p[2] - bp[2]).powi(2);
+            if d2 <= r2 && score[i].is_finite() {
+                score[i] *= 0.25;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cloud(n: usize, seed: u64) -> Vec<[f32; 3]> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| [r.f32() * 4.0, r.f32() * 4.0, r.f32()]).collect()
+    }
+
+    #[test]
+    fn density_counts_self() {
+        let pts = vec![[0.0f32; 3], [10.0, 0.0, 0.0]];
+        let d = local_density(&pts, 0.5);
+        assert_eq!(d, vec![1, 1]);
+    }
+
+    #[test]
+    fn denser_regions_have_higher_density() {
+        let mut pts = cloud(200, 1);
+        // add a tight cluster
+        for i in 0..50 {
+            pts.push([2.0 + 0.001 * i as f32, 2.0, 0.5]);
+        }
+        let d = local_density(&pts, 0.3);
+        let cluster_mean: f32 = d[200..].iter().map(|&x| x as f32).sum::<f32>() / 50.0;
+        let spread_mean: f32 = d[..200].iter().map(|&x| x as f32).sum::<f32>() / 200.0;
+        assert!(cluster_mean > 2.0 * spread_mean);
+    }
+
+    #[test]
+    fn indices_distinct() {
+        let pts = cloud(300, 2);
+        let fg = vec![0.0; 300];
+        let idx = density_biased_sample(&pts, 64, &fg, 1.0, 0.4);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 64);
+    }
+
+    #[test]
+    fn fg_boost_increases_fg_share() {
+        let pts = cloud(600, 3);
+        let fg: Vec<f32> =
+            pts.iter().map(|p| if p[0] < 1.5 { 1.0 } else { 0.0 }).collect();
+        let share = |idx: &[usize]| {
+            idx.iter().map(|&i| fg[i]).sum::<f32>() / idx.len() as f32
+        };
+        let base = share(&density_biased_sample(&pts, 96, &fg, 1.0, 0.4));
+        let boosted = share(&density_biased_sample(&pts, 96, &fg, 4.0, 0.4));
+        assert!(boosted > base, "boosted {boosted} <= base {base}");
+    }
+
+    #[test]
+    fn prefers_sparse_regions_at_w0_one() {
+        let mut pts = cloud(100, 4);
+        for i in 0..100 {
+            pts.push([2.0 + 0.002 * (i % 10) as f32, 2.0 + 0.002 * (i / 10) as f32, 0.5]);
+        }
+        let fg = vec![0.0; 200];
+        let idx = density_biased_sample(&pts, 40, &fg, 1.0, 0.4);
+        let sparse_hits = idx.iter().filter(|&&i| i < 100).count();
+        assert!(sparse_hits > 20, "sparse region undersampled: {sparse_hits}/40");
+    }
+}

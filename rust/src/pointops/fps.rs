@@ -1,0 +1,221 @@
+//! Farthest point sampling — regular and 2D-semantics-biased (paper Eq. 1).
+//!
+//! Mirrors python/compile/sampling.py `fps` exactly: configurable deterministic start (default
+//! index 0), incremental min-distance update, first-max tie-breaking. The
+//! biased variant scales each pairwise distance by `w0` when *either*
+//! endpoint is foreground, so foreground points look "farther" and are
+//! selected more often (w0 > 1) or less often (w0 < 1).
+
+/// Regular FPS: returns `m` indices into `xyz`.
+pub fn fps(xyz: &[[f32; 3]], m: usize) -> Vec<usize> {
+    fps_impl(xyz, m, None, 1.0, 0)
+}
+
+/// FPS from an explicit start index (the SA-bias pipeline starts at n/2 so
+/// the two pipeline views stay decorrelated; mirrors sampling.fps(start=)).
+pub fn fps_from(xyz: &[[f32; 3]], m: usize, start: usize) -> Vec<usize> {
+    fps_impl(xyz, m, None, 1.0, start)
+}
+
+/// Biased FPS (paper Eq. 1): `fg[i]` in {0,1}; `w0` weights pairs touching
+/// the foreground set A.
+pub fn biased_fps(xyz: &[[f32; 3]], m: usize, fg: &[f32], w0: f32) -> Vec<usize> {
+    fps_impl(xyz, m, Some(fg), w0, 0)
+}
+
+/// Biased FPS from an explicit start index.
+pub fn biased_fps_from(
+    xyz: &[[f32; 3]],
+    m: usize,
+    fg: &[f32],
+    w0: f32,
+    start: usize,
+) -> Vec<usize> {
+    fps_impl(xyz, m, Some(fg), w0, start)
+}
+
+fn fps_impl(xyz: &[[f32; 3]], m: usize, fg: Option<&[f32]>, w0: f32, start: usize) -> Vec<usize> {
+    let n = xyz.len();
+    assert!(m >= 1 && m <= n, "fps: m={m} out of range for n={n}");
+    if let Some(f) = fg {
+        assert_eq!(f.len(), n);
+    }
+    let mut out = Vec::with_capacity(m);
+    let mut min_d2 = vec![f32::INFINITY; n];
+    let mut last = start.min(n - 1);
+    out.push(last);
+    // §Perf: the per-pair bias branch is hoisted out of the inner loop by
+    // specializing the unbiased path (the common case: every SA layer of
+    // SA-normal plus SA3+ of SA-bias).
+    if w0 == 1.0 || fg.is_none() {
+        for _ in 1..m {
+            let lp = xyz[last];
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (j, (p, md)) in xyz.iter().zip(min_d2.iter_mut()).enumerate() {
+                let dx = p[0] - lp[0];
+                let dy = p[1] - lp[1];
+                let dz = p[2] - lp[2];
+                let d2 = dx * dx + dy * dy + dz * dz;
+                if d2 < *md {
+                    *md = d2;
+                }
+                // first-max tie break, matching jnp.argmax
+                if *md > best_v {
+                    best_v = *md;
+                    best = j;
+                }
+            }
+            out.push(best);
+            last = best;
+        }
+        return out;
+    }
+    let fg = fg.unwrap();
+    for _ in 1..m {
+        let lp = xyz[last];
+        let fg_last = fg[last];
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (j, (p, md)) in xyz.iter().zip(min_d2.iter_mut()).enumerate() {
+            let dx = p[0] - lp[0];
+            let dy = p[1] - lp[1];
+            let dz = p[2] - lp[2];
+            let mut d2 = dx * dx + dy * dy + dz * dz;
+            // either-endpoint-foreground indicator (Eq. 1)
+            let fg_j = fg[j];
+            let either = fg_j + fg_last - fg_j * fg_last;
+            let f = 1.0 + (w0 - 1.0) * either;
+            d2 *= f * f;
+            if d2 < *md {
+                *md = d2;
+            }
+            if *md > best_v {
+                best_v = *md;
+                best = j;
+            }
+        }
+        out.push(best);
+        last = best;
+    }
+    out
+}
+
+/// Fraction of sampled points that are foreground (Fig. 4 statistic).
+pub fn fg_fraction(idx: &[usize], fg: &[f32]) -> f32 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    idx.iter().map(|&i| fg[i]).sum::<f32>() / idx.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cloud(n: usize, seed: u64) -> Vec<[f32; 3]> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| [r.f32() * 4.0, r.f32() * 4.0, r.f32()]).collect()
+    }
+
+    #[test]
+    fn indices_distinct_and_start_at_zero() {
+        let pts = cloud(500, 1);
+        let idx = fps(&pts, 64);
+        assert_eq!(idx[0], 0);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 64, "fps must not repeat points");
+    }
+
+    #[test]
+    fn second_point_is_farthest_from_first() {
+        let pts = cloud(300, 2);
+        let idx = fps(&pts, 2);
+        let p0 = pts[0];
+        let d2 = |p: [f32; 3]| {
+            (p[0] - p0[0]).powi(2) + (p[1] - p0[1]).powi(2) + (p[2] - p0[2]).powi(2)
+        };
+        let max = pts.iter().map(|&p| d2(p)).fold(0.0f32, f32::max);
+        assert!((d2(pts[idx[1]]) - max).abs() < 1e-6);
+    }
+
+    #[test]
+    fn coverage_beats_random() {
+        // FPS should cover space: max distance from any point to nearest
+        // sample is smaller than for the first-m prefix.
+        let pts = cloud(1000, 3);
+        let idx = fps(&pts, 32);
+        let gap = |sel: &[usize]| {
+            pts.iter()
+                .map(|p| {
+                    sel.iter()
+                        .map(|&i| {
+                            let q = pts[i];
+                            (p[0] - q[0]).powi(2) + (p[1] - q[1]).powi(2) + (p[2] - q[2]).powi(2)
+                        })
+                        .fold(f32::INFINITY, f32::min)
+                })
+                .fold(0.0f32, f32::max)
+        };
+        let prefix: Vec<usize> = (0..32).collect();
+        assert!(gap(&idx) < gap(&prefix));
+    }
+
+    #[test]
+    fn bias_increases_fg_fraction() {
+        let pts = cloud(800, 4);
+        // mark a small cluster as foreground
+        let fg: Vec<f32> =
+            pts.iter().map(|p| if p[0] < 1.0 && p[1] < 1.0 { 1.0 } else { 0.0 }).collect();
+        let base = fg_fraction(&fps(&pts, 128), &fg);
+        let biased = fg_fraction(&biased_fps(&pts, 128, &fg, 2.0), &fg);
+        let heavy = fg_fraction(&biased_fps(&pts, 128, &fg, 10.0), &fg);
+        assert!(biased > base, "w0=2 should sample more fg ({biased} vs {base})");
+        assert!(heavy > biased, "w0=10 should sample even more fg");
+    }
+
+    #[test]
+    fn w0_below_one_deprioritizes_fg() {
+        let pts = cloud(800, 5);
+        let fg: Vec<f32> = pts.iter().map(|p| if p[0] < 2.0 { 1.0 } else { 0.0 }).collect();
+        let base = fg_fraction(&fps(&pts, 128), &fg);
+        let depri = fg_fraction(&biased_fps(&pts, 128, &fg, 0.5), &fg);
+        assert!(depri < base);
+    }
+
+    #[test]
+    fn w0_one_equals_regular() {
+        let pts = cloud(300, 6);
+        let fg = vec![1.0; 300];
+        assert_eq!(fps(&pts, 50), biased_fps(&pts, 50, &fg, 1.0));
+    }
+}
+
+#[cfg(test)]
+mod start_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fps_from_starts_at_given_index() {
+        let mut r = Rng::new(8);
+        let pts: Vec<[f32; 3]> = (0..200).map(|_| [r.f32(), r.f32(), r.f32()]).collect();
+        let idx = fps_from(&pts, 16, 100);
+        assert_eq!(idx[0], 100);
+    }
+
+    #[test]
+    fn different_starts_decorrelate_views() {
+        // the PointSplit fix: two regular-FPS pipelines from different
+        // starts must not sample identical sets
+        let mut r = Rng::new(9);
+        let pts: Vec<[f32; 3]> = (0..500).map(|_| [r.f32() * 4.0, r.f32() * 4.0, r.f32()]).collect();
+        let a = fps_from(&pts, 64, 0);
+        let b = fps_from(&pts, 64, 250);
+        let overlap = a.iter().filter(|i| b.contains(i)).count();
+        assert!(overlap < 60, "views nearly identical: {overlap}/64 shared");
+    }
+}

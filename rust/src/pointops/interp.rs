@@ -1,0 +1,70 @@
+//! Feature propagation: inverse-distance-weighted 3-NN interpolation
+//! (mirror of sampling.three_nn_interpolate).
+
+use crate::util::tensor::Tensor;
+
+/// Interpolate `src_feats` (Ns, C) at `dst_xyz` from `src_xyz` -> (Nd, C).
+pub fn three_nn_interpolate(
+    dst_xyz: &[[f32; 3]],
+    src_xyz: &[[f32; 3]],
+    src_feats: &Tensor,
+) -> Tensor {
+    assert_eq!(src_xyz.len(), src_feats.rows());
+    let c = src_feats.row_len();
+    let mut out = Vec::with_capacity(dst_xyz.len() * c);
+    for d in dst_xyz {
+        // 3 nearest sources
+        let mut best = [(f32::INFINITY, 0usize); 3];
+        for (j, s) in src_xyz.iter().enumerate() {
+            let dx = d[0] - s[0];
+            let dy = d[1] - s[1];
+            let dz = d[2] - s[2];
+            let d2 = dx * dx + dy * dy + dz * dz;
+            if d2 < best[2].0 {
+                best[2] = (d2, j);
+                if best[2].0 < best[1].0 {
+                    best.swap(1, 2);
+                }
+                if best[1].0 < best[0].0 {
+                    best.swap(0, 1);
+                }
+            }
+        }
+        let w: Vec<f32> = best.iter().map(|&(d2, _)| 1.0 / d2.max(1e-8)).collect();
+        let wsum: f32 = w.iter().sum();
+        let start = out.len();
+        out.resize(start + c, 0.0);
+        for (wi, &(_, j)) in w.iter().zip(best.iter()) {
+            let row = src_feats.row(j);
+            let wn = wi / wsum;
+            for (o, v) in out[start..].iter_mut().zip(row.iter()) {
+                *o += wn * v;
+            }
+        }
+    }
+    Tensor::new(vec![dst_xyz.len(), c], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_at_source_points() {
+        let src = vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [1.0, 1.0, 0.0]];
+        let feats = Tensor::new(vec![4, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let out = three_nn_interpolate(&src, &src, &feats);
+        // at a source point the nearest neighbor has d2~0 -> dominates
+        assert!((out.row(2)[0] - 3.0).abs() < 1e-3);
+        assert!((out.row(2)[1] - 30.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn interpolation_is_convex_combination() {
+        let src = vec![[0.0, 0.0, 0.0], [2.0, 0.0, 0.0], [0.0, 2.0, 0.0]];
+        let feats = Tensor::new(vec![3, 1], vec![0.0, 6.0, 12.0]);
+        let out = three_nn_interpolate(&[[0.5, 0.5, 0.0]], &src, &feats);
+        let v = out.data[0];
+        assert!(v > 0.0 && v < 12.0);
+    }
+}

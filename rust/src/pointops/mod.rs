@@ -1,0 +1,77 @@
+//! Point-manipulation operations — the paper's "GPU" workload.
+//!
+//! The paper's key system observation: set abstraction interleaves point
+//! manipulation (FPS, ball query — *not* executable on the NPU) with neural
+//! nets (PointNet — NPU-friendly). Everything in this module is the former;
+//! it runs on the Rust side of the split and is numerics-mirrored by
+//! python/compile/sampling.py (parity checked by the Table 3 bench).
+
+pub mod fps;
+pub mod ballquery;
+pub mod density;
+pub mod interp;
+pub mod paint;
+
+pub use ballquery::ball_query;
+pub use density::{density_biased_sample, local_density};
+pub use fps::{biased_fps, biased_fps_from, fps, fps_from};
+pub use interp::three_nn_interpolate;
+pub use paint::{build_features, fg_mask, paint_points};
+
+use crate::util::tensor::Tensor;
+
+/// Gather grouped features: relative xyz ++ point features.
+///
+/// xyz: (N,3), feats: optional (N,C), centers: indices (M,),
+/// groups: (M,K) indices -> (M, K, 3+C).
+pub fn group_features(
+    xyz: &[[f32; 3]],
+    feats: Option<&Tensor>,
+    centers: &[usize],
+    groups: &[Vec<usize>],
+) -> Tensor {
+    let m = centers.len();
+    let k = groups.first().map_or(0, |g| g.len());
+    let c = feats.map_or(0, |f| f.row_len());
+    let mut data = Vec::with_capacity(m * k * (3 + c));
+    for (ci, group) in centers.iter().zip(groups.iter()) {
+        let center = xyz[*ci];
+        for &pi in group {
+            let p = xyz[pi];
+            data.push(p[0] - center[0]);
+            data.push(p[1] - center[1]);
+            data.push(p[2] - center[2]);
+            if let Some(f) = feats {
+                data.extend_from_slice(f.row(pi));
+            }
+        }
+    }
+    Tensor::new(vec![m, k, 3 + c], data)
+}
+
+/// Estimated FLOPs of one FPS call (the simulator's workload descriptor).
+pub fn fps_flops(n: usize, m: usize) -> u64 {
+    // each of m iterations: n distance evaluations (3 sub, 3 mul, 2 add) + min
+    (m as u64) * (n as u64) * 9
+}
+
+/// Estimated FLOPs of one ball-query call.
+pub fn ball_query_flops(n: usize, m: usize) -> u64 {
+    (m as u64) * (n as u64) * 9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_features_layout() {
+        let xyz = vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [0.0, 2.0, 0.0]];
+        let feats = Tensor::new(vec![3, 2], vec![10., 11., 20., 21., 30., 31.]);
+        let g = group_features(&xyz, Some(&feats), &[1], &[vec![0, 2]]);
+        assert_eq!(g.shape, vec![1, 2, 5]);
+        // first neighbor: p0 - p1 = (-1,0,0) ++ feats[0]
+        assert_eq!(&g.data[0..5], &[-1.0, 0.0, 0.0, 10.0, 11.0]);
+        assert_eq!(&g.data[5..10], &[-1.0, 2.0, 0.0, 30.0, 31.0]);
+    }
+}

@@ -1,0 +1,105 @@
+//! PointPainting: project 3D points into the 2D segmentation output and
+//! append per-pixel class scores to each point (mirror of scene.paint_points).
+
+use crate::data::Scene;
+use crate::util::tensor::Tensor;
+
+/// seg_scores: (H, W, C) softmax scores from the segmenter artifact.
+/// Returns (N, C) painted scores; out-of-view points get one-hot background.
+pub fn paint_points(scene: &Scene, seg_scores: &Tensor) -> Tensor {
+    let (h, w, c) = (seg_scores.shape[0], seg_scores.shape[1], seg_scores.shape[2]);
+    let mut out = Vec::with_capacity(scene.points.len() * c);
+    for p in &scene.points {
+        let (u, v, z) = scene.project(*p);
+        let inside = u >= 0.0 && u < w as f64 && v >= 0.0 && v < h as f64 && z > 0.0;
+        if inside {
+            let ui = (u.floor() as usize).min(w - 1);
+            let vi = (v.floor() as usize).min(h - 1);
+            let base = (vi * w + ui) * c;
+            out.extend_from_slice(&seg_scores.data[base..base + c]);
+        } else {
+            out.push(1.0);
+            out.extend(std::iter::repeat(0.0).take(c - 1));
+        }
+    }
+    Tensor::new(vec![scene.points.len(), c], out)
+}
+
+/// Foreground mask from painted scores: P(not background) > thresh.
+pub fn fg_mask(scores: &Tensor, thresh: f32) -> Vec<f32> {
+    (0..scores.rows())
+        .map(|i| if 1.0 - scores.row(i)[0] > thresh { 1.0 } else { 0.0 })
+        .collect()
+}
+
+/// Build the detector input features: height ++ (optionally) painted scores.
+pub fn build_features(scene: &Scene, painted: Option<&Tensor>) -> Tensor {
+    let n = scene.points.len();
+    let c = 1 + painted.map_or(0, |p| p.row_len());
+    let mut data = Vec::with_capacity(n * c);
+    for (i, p) in scene.points.iter().enumerate() {
+        data.push(p[2]); // height above floor (z=0)
+        if let Some(paint) = painted {
+            data.extend_from_slice(paint.row(i));
+        }
+    }
+    Tensor::new(vec![n, c], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_scene, IMG_SIZE, SYNRGBD};
+
+    fn gt_scores(scene: &Scene) -> Tensor {
+        // one-hot scores straight from the GT mask (an oracle segmenter)
+        let c = crate::data::NUM_CLASS + 1;
+        let mut data = vec![0.0f32; IMG_SIZE * IMG_SIZE * c];
+        for (i, &m) in scene.seg_mask.iter().enumerate() {
+            data[i * c + m as usize] = 1.0;
+        }
+        Tensor::new(vec![IMG_SIZE, IMG_SIZE, c], data)
+    }
+
+    #[test]
+    fn painted_scores_are_distributions() {
+        let s = generate_scene(1, &SYNRGBD);
+        let paint = paint_points(&s, &gt_scores(&s));
+        assert_eq!(paint.shape, vec![s.points.len(), crate::data::NUM_CLASS + 1]);
+        for i in 0..paint.rows() {
+            let sum: f32 = paint.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn oracle_paint_marks_object_points_foreground() {
+        let s = generate_scene(2, &SYNRGBD);
+        let paint = paint_points(&s, &gt_scores(&s));
+        let fg = fg_mask(&paint, 0.5);
+        // most object points should paint as foreground with an oracle mask
+        let mut hit = 0;
+        let mut tot = 0;
+        for (i, &oi) in s.point_obj.iter().enumerate() {
+            if oi >= 0 {
+                tot += 1;
+                if fg[i] > 0.5 {
+                    hit += 1;
+                }
+            }
+        }
+        assert!(tot > 0);
+        assert!(
+            hit as f32 / tot as f32 > 0.5,
+            "oracle painting should label most object points fg ({hit}/{tot})"
+        );
+    }
+
+    #[test]
+    fn features_have_height_first() {
+        let s = generate_scene(3, &SYNRGBD);
+        let f = build_features(&s, None);
+        assert_eq!(f.shape, vec![s.points.len(), 1]);
+        assert!((f.row(0)[0] - s.points[0][2]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,216 @@
+//! INT8 quantization substrate (paper §4.3) — Rust side.
+//!
+//! The QDQ numerics are baked into the INT8 HLO artifacts at build time;
+//! this module provides (a) a standalone quantizer mirroring those numerics
+//! for tests and the Table 11 parameter-count/error analysis, and (b) the
+//! distribution statistics (KL divergence matrix) behind Fig. 6/7.
+
+pub mod stats;
+
+use crate::util::tensor::Tensor;
+
+/// Quantization granularity over a layer's output channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    Layer,
+    /// naive even contiguous groups
+    Group(usize),
+    Channel,
+    /// paper's role-based groups (explicit channel partition)
+    Role,
+}
+
+impl Granularity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Granularity::Layer => "layer",
+            Granularity::Group(_) => "group",
+            Granularity::Channel => "channel",
+            Granularity::Role => "role",
+        }
+    }
+}
+
+/// Channel partition for a granularity (role partition supplied by caller).
+pub fn partition(g: Granularity, cout: usize, roles: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    match g {
+        Granularity::Layer => vec![(0..cout).collect()],
+        Granularity::Channel => (0..cout).map(|c| vec![c]).collect(),
+        Granularity::Role => roles.to_vec(),
+        Granularity::Group(n) => {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let lo = i * cout / n;
+                let hi = (i + 1) * cout / n;
+                out.push((lo..hi).collect());
+            }
+            out
+        }
+    }
+}
+
+/// Affine activation quantization parameters per channel group.
+#[derive(Debug, Clone)]
+pub struct ActQuant {
+    /// per-channel (expanded) scale / zero-point
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    pub num_groups: usize,
+}
+
+impl ActQuant {
+    /// Calibrate from per-channel min/max (the same rule as quantize.py).
+    pub fn calibrate(lo: &[f32], hi: &[f32], groups: &[Vec<usize>]) -> ActQuant {
+        let cout = lo.len();
+        let mut scale = vec![0.0f32; cout];
+        let mut zero = vec![0.0f32; cout];
+        for g in groups {
+            let glo = g.iter().map(|&c| lo[c]).fold(0.0f32, f32::min);
+            let ghi = g.iter().map(|&c| hi[c]).fold(0.0f32, f32::max);
+            let s = ((ghi - glo) / 255.0).max(1e-8);
+            let z = (-128.0 - glo / s).round().clamp(-128.0, 127.0);
+            for &c in g {
+                scale[c] = s;
+                zero[c] = z;
+            }
+        }
+        ActQuant { scale, zero, num_groups: groups.len() }
+    }
+
+    /// Quantize-dequantize a (N, C) activation tensor in place.
+    pub fn qdq(&self, t: &mut Tensor) {
+        let c = self.scale.len();
+        assert_eq!(t.row_len(), c);
+        for row in 0..t.rows() {
+            let r = t.row_mut(row);
+            for (i, v) in r.iter_mut().enumerate() {
+                let q = (*v / self.scale[i] + self.zero[i]).round().clamp(-128.0, 127.0);
+                *v = (q - self.zero[i]) * self.scale[i];
+            }
+        }
+    }
+
+    /// Number of quantization parameters this scheme stores for the layer:
+    /// per group, one weight scale + activation (scale, zero) — matching
+    /// quantize.quant_param_count on the python side.
+    pub fn param_count(&self) -> usize {
+        3 * self.num_groups
+    }
+}
+
+/// QDQ error (mean squared) introduced on a tensor by an ActQuant.
+pub fn qdq_mse(t: &Tensor, q: &ActQuant) -> f64 {
+    let mut copy = t.clone();
+    q.qdq(&mut copy);
+    let mut acc = 0.0f64;
+    for (a, b) in t.data.iter().zip(copy.data.iter()) {
+        let d = (*a - *b) as f64;
+        acc += d * d;
+    }
+    acc / t.data.len() as f64
+}
+
+/// Per-channel min/max of a (N, C) tensor.
+pub fn channel_minmax(t: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let c = t.row_len();
+    let mut lo = vec![f32::INFINITY; c];
+    let mut hi = vec![f32::NEG_INFINITY; c];
+    for row in 0..t.rows() {
+        for (i, &v) in t.row(row).iter().enumerate() {
+            lo[i] = lo[i].min(v);
+            hi[i] = hi[i].max(v);
+        }
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Head-shaped test tensor: channel 0..3 small-range (xyz), 3..40
+    /// wide-range logits, 40..80 medium-range regression.
+    fn head_tensor(n: usize, seed: u64) -> (Tensor, Vec<Vec<usize>>) {
+        let mut r = Rng::new(seed);
+        let c = 80;
+        let mut data = Vec::with_capacity(n * c);
+        for _ in 0..n {
+            for ch in 0..c {
+                let sigma = if ch < 3 {
+                    0.05
+                } else if ch < 40 {
+                    8.0
+                } else {
+                    0.8
+                };
+                data.push(r.normal_scaled(0.0, sigma) as f32);
+            }
+        }
+        let roles =
+            vec![(0..3).collect::<Vec<_>>(), (3..40).collect::<Vec<_>>(), (40..80).collect::<Vec<_>>()];
+        (Tensor::new(vec![n, c], data), roles)
+    }
+
+    #[test]
+    fn role_beats_layer_on_heterogeneous_channels() {
+        let (t, roles) = head_tensor(256, 1);
+        let (lo, hi) = channel_minmax(&t);
+        let q_layer = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Layer, 80, &roles));
+        let q_role = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Role, 80, &roles));
+        let q_chan = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Channel, 80, &roles));
+        let e_layer = qdq_mse(&t, &q_layer);
+        let e_role = qdq_mse(&t, &q_role);
+        let e_chan = qdq_mse(&t, &q_chan);
+        assert!(e_role < e_layer / 2.0, "role {e_role} should beat layer {e_layer}");
+        assert!(e_chan <= e_role * 1.5, "channel {e_chan} ~<= role {e_role}");
+    }
+
+    #[test]
+    fn xyz_channels_destroyed_by_layer_scale() {
+        // the collapse mechanism behind Table 7: a single layer scale is set
+        // by the +-20 logits, so 0.05-magnitude xyz offsets round to ~0
+        let (t, roles) = head_tensor(256, 2);
+        let (lo, hi) = channel_minmax(&t);
+        let q_layer = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Layer, 80, &roles));
+        let mut q = t.clone();
+        q_layer.qdq(&mut q);
+        // relative error on xyz channels
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for row in 0..t.rows() {
+            for ch in 0..3 {
+                let a = t.row(row)[ch] as f64;
+                let b = q.row(row)[ch] as f64;
+                num += (a - b) * (a - b);
+                den += a * a;
+            }
+        }
+        assert!(num / den > 0.3, "xyz relative sq-error {} should be large", num / den);
+    }
+
+    #[test]
+    fn param_counts_ordering() {
+        let roles = vec![vec![0, 1, 2], (3..40).collect(), (40..80).collect()];
+        let mk = |g| {
+            let p = partition(g, 80, &roles);
+            ActQuant::calibrate(&vec![0.0; 80], &vec![1.0; 80], &p).param_count()
+        };
+        assert_eq!(mk(Granularity::Layer), 3);
+        assert_eq!(mk(Granularity::Role), 9);
+        assert_eq!(mk(Granularity::Group(3)), 9);
+        assert_eq!(mk(Granularity::Channel), 240);
+    }
+
+    #[test]
+    fn qdq_idempotent() {
+        let (t, roles) = head_tensor(64, 3);
+        let (lo, hi) = channel_minmax(&t);
+        let q = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Role, 80, &roles));
+        let mut once = t.clone();
+        q.qdq(&mut once);
+        let mut twice = once.clone();
+        q.qdq(&mut twice);
+        assert_eq!(once, twice);
+    }
+}

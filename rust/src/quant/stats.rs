@@ -1,0 +1,106 @@
+//! Distribution statistics behind paper Fig. 6 (per-channel weight/activation
+//! ranges, grouped by role) and Fig. 7 (pairwise KL divergence of channel
+//! activation distributions in the proposal module).
+
+/// Normalized histogram of a sample over fixed edges.
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<f64> {
+    let mut h = vec![0.0f64; bins];
+    let w = (hi - lo).max(1e-12) / bins as f32;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1.0;
+    }
+    let total: f64 = h.iter().sum();
+    if total > 0.0 {
+        for v in h.iter_mut() {
+            *v /= total;
+        }
+    }
+    h
+}
+
+/// KL(p || q) with epsilon smoothing (distributions must share support/edges).
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    const EPS: f64 = 1e-6;
+    p.iter()
+        .zip(q.iter())
+        .map(|(&pi, &qi)| {
+            let pi = pi + EPS;
+            let qi = qi + EPS;
+            pi * (pi / qi).ln()
+        })
+        .sum()
+}
+
+/// Pairwise KL matrix across per-channel histograms (Fig. 7).
+pub fn kl_matrix(hists: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    hists
+        .iter()
+        .map(|p| hists.iter().map(|q| kl_divergence(p, q)).collect())
+        .collect()
+}
+
+/// Mean KL within vs across role groups — the Fig. 7 takeaway as a number.
+pub fn within_across_kl(hists: &[Vec<f64>], group_of: &[usize]) -> (f64, f64) {
+    let m = kl_matrix(hists);
+    let (mut win, mut wn) = (0.0, 0u64);
+    let (mut acc, mut an) = (0.0, 0u64);
+    for i in 0..m.len() {
+        for j in 0..m.len() {
+            if i == j {
+                continue;
+            }
+            if group_of[i] == group_of[j] {
+                win += m[i][j];
+                wn += 1;
+            } else {
+                acc += m[i][j];
+                an += 1;
+            }
+        }
+    }
+    (win / wn.max(1) as f64, acc / an.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn histogram_sums_to_one() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f32> = (0..1000).map(|_| r.f32()).collect();
+        let h = histogram(&xs, 0.0, 1.0, 16);
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_self_is_zero() {
+        let p = vec![0.25; 4];
+        assert!(kl_divergence(&p, &p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_grows_with_divergence() {
+        let p = vec![0.9, 0.1, 0.0, 0.0];
+        let q_near = vec![0.8, 0.2, 0.0, 0.0];
+        let q_far = vec![0.0, 0.0, 0.1, 0.9];
+        assert!(kl_divergence(&p, &q_far) > kl_divergence(&p, &q_near));
+    }
+
+    #[test]
+    fn within_group_kl_smaller_for_role_clustered_channels() {
+        let mut r = Rng::new(2);
+        // 6 channels: 3 narrow-gauss, 3 wide-gauss
+        let mut hists = Vec::new();
+        for ch in 0..6 {
+            let sigma = if ch < 3 { 0.2 } else { 3.0 };
+            let xs: Vec<f32> = (0..4000).map(|_| r.normal_scaled(0.0, sigma) as f32).collect();
+            hists.push(histogram(&xs, -10.0, 10.0, 32));
+        }
+        let groups = [0, 0, 0, 1, 1, 1];
+        let (win, across) = within_across_kl(&hists, &groups);
+        assert!(win < across, "within {win} should be < across {across}");
+    }
+}

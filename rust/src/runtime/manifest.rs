@@ -1,0 +1,242 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the single contract between the build-time Python stack
+//! and the Rust request path: artifact shapes + workload descriptors for the
+//! device simulator, plus every model constant the coordinator needs
+//! (SA configs, head layout, role groups, dataset parameters).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub dataset: String,
+    pub model: String,
+    pub net: String,
+    pub precision: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub flops: u64,
+    pub bytes_in: u64,
+    /// bytes per element on the interconnect (1 for int8 executables)
+    pub wire_bytes_per_elem: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SaConfig {
+    pub m: usize,
+    pub radius: f32,
+    pub k: usize,
+    pub mlp: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetMeta {
+    pub num_points: usize,
+    pub room_min: f64,
+    pub room_max: f64,
+    pub min_objects: usize,
+    pub max_objects: usize,
+    pub single_view: bool,
+    pub depth_noise: f64,
+    pub seg_noise: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct HeadLayout {
+    pub center: (usize, usize),
+    pub objectness: (usize, usize),
+    pub heading_cls: (usize, usize),
+    pub heading_reg: (usize, usize),
+    pub size_cls: (usize, usize),
+    pub size_reg: (usize, usize),
+    pub sem_cls: (usize, usize),
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub classes: Vec<String>,
+    pub mean_sizes: Vec<[f32; 3]>,
+    pub num_heading_bin: usize,
+    pub num_seg_classes: usize,
+    pub img_size: usize,
+    pub sa_configs: Vec<SaConfig>,
+    pub num_seeds: usize,
+    pub num_proposals: usize,
+    pub proposal_radius: f32,
+    pub proposal_k: usize,
+    pub seed_feat: usize,
+    pub fp_in: usize,
+    pub feat_dim_painted: usize,
+    pub feat_dim_plain: usize,
+    pub head_layout: HeadLayout,
+    pub role_groups_vote: Vec<Vec<usize>>,
+    pub role_groups_prop: Vec<Vec<usize>>,
+    pub quant_param_count: HashMap<String, usize>,
+    /// (params, madds) for orig / pointsplit FP stage at mini & paper scale
+    pub fp_layer_cost_mini: ((u64, u64), (u64, u64)),
+    pub fp_layer_cost_paper: ((u64, u64), (u64, u64)),
+    pub datasets: HashMap<String, DatasetMeta>,
+    pub default_w0: f32,
+    pub default_bias_layers: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+    by_name: HashMap<String, usize>,
+}
+
+fn pair(j: &Json) -> (usize, usize) {
+    let v = j.usize_vec();
+    (v[0], v[1])
+}
+
+fn cost_pair(j: &Json) -> ((u64, u64), (u64, u64)) {
+    let o = j.req("orig").f64_vec();
+    let p = j.req("pointsplit").f64_vec();
+    ((o[0] as u64, o[1] as u64), (p[0] as u64, p[1] as u64))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let classes = j
+            .req("classes")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_str().unwrap().to_string())
+            .collect();
+        let mean_sizes = j
+            .req("mean_sizes")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                let v = s.f64_vec();
+                [v[0] as f32, v[1] as f32, v[2] as f32]
+            })
+            .collect();
+        let sa_configs = j
+            .req("sa_configs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| SaConfig {
+                m: s.req("m").as_usize().unwrap(),
+                radius: s.req("radius").as_f64().unwrap() as f32,
+                k: s.req("k").as_usize().unwrap(),
+                mlp: s.req("mlp").usize_vec(),
+            })
+            .collect();
+        let hl = j.req("head_layout");
+        let head_layout = HeadLayout {
+            center: pair(hl.req("center")),
+            objectness: pair(hl.req("objectness")),
+            heading_cls: pair(hl.req("heading_cls")),
+            heading_reg: pair(hl.req("heading_reg")),
+            size_cls: pair(hl.req("size_cls")),
+            size_reg: pair(hl.req("size_reg")),
+            sem_cls: pair(hl.req("sem_cls")),
+        };
+        let rg = j.req("role_groups");
+        let groups = |key: &str| -> Vec<Vec<usize>> {
+            rg.req(key).as_arr().unwrap().iter().map(|g| g.usize_vec()).collect()
+        };
+        let quant_param_count = j
+            .req("quant_param_count")
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_usize().unwrap()))
+            .collect();
+        let datasets = j
+            .req("datasets")
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.clone(),
+                    DatasetMeta {
+                        num_points: v.req("num_points").as_usize().unwrap(),
+                        room_min: v.req("room_min").as_f64().unwrap(),
+                        room_max: v.req("room_max").as_f64().unwrap(),
+                        min_objects: v.req("min_objects").as_usize().unwrap(),
+                        max_objects: v.req("max_objects").as_usize().unwrap(),
+                        single_view: v.req("single_view").as_bool().unwrap(),
+                        depth_noise: v.req("depth_noise").as_f64().unwrap(),
+                        seg_noise: v.req("seg_noise").as_f64().unwrap(),
+                    },
+                )
+            })
+            .collect();
+        let artifacts: Vec<ArtifactMeta> = j
+            .req("artifacts")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|a| ArtifactMeta {
+                name: a.req("name").as_str().unwrap().to_string(),
+                file: a.req("file").as_str().unwrap().to_string(),
+                dataset: a.req("dataset").as_str().unwrap().to_string(),
+                model: a.req("model").as_str().unwrap().to_string(),
+                net: a.req("net").as_str().unwrap().to_string(),
+                precision: a.req("precision").as_str().unwrap().to_string(),
+                input_shapes: a
+                    .req("inputs")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|i| i.req("shape").usize_vec())
+                    .collect(),
+                flops: a.req("flops").as_f64().unwrap() as u64,
+                bytes_in: a.req("bytes_in").as_f64().unwrap() as u64,
+                wire_bytes_per_elem: a.req("wire_bytes_per_elem").as_f64().unwrap() as u64,
+            })
+            .collect();
+        let by_name = artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
+        let fpc = j.req("fp_layer_cost");
+        Ok(Manifest {
+            classes,
+            mean_sizes,
+            num_heading_bin: j.req("num_heading_bin").as_usize().unwrap(),
+            num_seg_classes: j.req("num_seg_classes").as_usize().unwrap(),
+            img_size: j.req("img_size").as_usize().unwrap(),
+            sa_configs,
+            num_seeds: j.req("num_seeds").as_usize().unwrap(),
+            num_proposals: j.req("num_proposals").as_usize().unwrap(),
+            proposal_radius: j.req("proposal_radius").as_f64().unwrap() as f32,
+            proposal_k: j.req("proposal_k").as_usize().unwrap(),
+            seed_feat: j.req("seed_feat").as_usize().unwrap(),
+            fp_in: j.req("fp_in").as_usize().unwrap(),
+            feat_dim_painted: j.req("feat_dim_painted").as_usize().unwrap(),
+            feat_dim_plain: j.req("feat_dim_plain").as_usize().unwrap(),
+            head_layout,
+            role_groups_vote: groups("vote"),
+            role_groups_prop: groups("prop"),
+            quant_param_count,
+            fp_layer_cost_mini: cost_pair(fpc.req("mini")),
+            fp_layer_cost_paper: cost_pair(fpc.req("paper_scale")),
+            datasets,
+            default_w0: j.req("default_w0").as_f64().unwrap() as f32,
+            default_bias_layers: j.req("default_bias_layers").as_usize().unwrap(),
+            artifacts,
+            by_name,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    /// Resolve an artifact by (dataset, model, net, precision).
+    pub fn find(&self, dataset: &str, model: &str, net: &str, precision: &str) -> Option<&ArtifactMeta> {
+        self.artifact(&format!("{dataset}_{model}_{net}_{precision}"))
+    }
+
+    pub fn num_class(&self) -> usize {
+        self.classes.len()
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! This is the only place the `xla` crate is touched. The interchange format
+//! is HLO **text** (see python/compile/export_utils.py and DESIGN.md): jax
+//! ≥ 0.5 serializes protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The [`Runtime`] owns one PJRT CPU client plus a lazily-compiled executable
+//! cache keyed by artifact name; [`Manifest`] mirrors
+//! `artifacts/manifest.json` (shapes, workload descriptors, model constants).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::tensor::Tensor;
+
+/// PJRT-backed executor for the AOT artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (must contain manifest.json) on the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifacts directory this runtime loads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling artifact '{name}': {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for metrics/tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute an artifact on f32 tensors. Inputs are validated against the
+    /// manifest shapes; outputs come back as a tuple of tensors.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        if inputs.len() != meta.input_shapes.len() {
+            return Err(anyhow!(
+                "artifact '{name}': expected {} inputs, got {}",
+                meta.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, s)) in inputs.iter().zip(meta.input_shapes.iter()).enumerate() {
+            if &t.shape != s {
+                return Err(anyhow!(
+                    "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+                    t.shape,
+                    s
+                ));
+            }
+        }
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("literal reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
+        // exports lower with return_tuple=True
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = match shape {
+                    xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                    _ => return Err(anyhow!("non-array output")),
+                };
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                Ok(Tensor::new(dims, data))
+            })
+            .collect()
+    }
+
+    /// Compile every artifact in the manifest; returns (ok, failures).
+    pub fn check_all(&self) -> (usize, Vec<(String, String)>) {
+        let mut ok = 0;
+        let mut failures = Vec::new();
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for name in names {
+            match self.executable(&name) {
+                Ok(_) => ok += 1,
+                Err(e) => failures.push((name, format!("{e:#}"))),
+            }
+        }
+        (ok, failures)
+    }
+}

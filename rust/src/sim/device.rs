@@ -1,0 +1,232 @@
+//! Per-device roofline cost model.
+
+/// Processor classes available on the paper's platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    /// 128-core Maxwell mobile GPU (512 GFLOPS fp32)
+    Gpu,
+    /// Coral EdgeTPU (4 TOPS int8, PCIe Gen2 x1)
+    EdgeTpu,
+}
+
+impl DeviceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "CPU",
+            DeviceKind::Gpu => "GPU",
+            DeviceKind::EdgeTpu => "EdgeTPU",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Int8,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// FPS / ball query / gather — irregular, branchy
+    PointOp,
+    /// dense NN inference (PointNet, segmenter, heads)
+    NeuralNet,
+}
+
+/// One stage's computational footprint.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub kind: WorkloadKind,
+    pub precision: Precision,
+    pub flops: u64,
+    /// bytes streamed through memory during compute
+    pub mem_bytes: u64,
+    /// bytes that must cross the interconnect if the consumer sits on
+    /// another device (activation sizes; int8 artifacts move 1B/elem)
+    pub wire_bytes: u64,
+}
+
+/// Calibrated device parameters. All times in milliseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub kind: DeviceKind,
+    /// fixed per-dispatch cost
+    pub overhead_ms: f64,
+    /// effective FLOP/ms for point ops (None = cannot run them)
+    pub pointop_flops_per_ms: Option<f64>,
+    /// effective FLOP/ms for NN by precision (None = unsupported)
+    pub nn_fp32_flops_per_ms: Option<f64>,
+    pub nn_int8_flops_per_ms: Option<f64>,
+    /// memory bandwidth bytes/ms for the irregular point-op traffic
+    pub mem_bytes_per_ms: f64,
+    /// interconnect: bytes/ms and per-transfer setup cost to reach this
+    /// device from the host side
+    pub link_bytes_per_ms: f64,
+    pub link_overhead_ms: f64,
+}
+
+impl Device {
+    /// ARM A57 quad-core: both op kinds, slowly.
+    pub fn cpu() -> Device {
+        Device {
+            kind: DeviceKind::Cpu,
+            overhead_ms: 1.0,
+            pointop_flops_per_ms: Some(18_000.0),       // ~18 MFLOP/s eff (irregular)
+            nn_fp32_flops_per_ms: Some(600_000.0),      // 0.6 GFLOP/s
+            nn_int8_flops_per_ms: Some(1_000_000.0),    // 1 GOP/s
+            mem_bytes_per_ms: 18_000.0,
+            link_bytes_per_ms: f64::INFINITY,           // shares DRAM
+            link_overhead_ms: 0.0,
+        }
+    }
+
+    /// 128-core Maxwell (Jetson Nano). Point ops are irregular and batch-1,
+    /// so effective throughput is far below the 512 GFLOPS peak — constants
+    /// fitted to Table 12's GPU column (199/52/25/20 ms).
+    pub fn gpu() -> Device {
+        Device {
+            kind: DeviceKind::Gpu,
+            overhead_ms: 14.0,
+            pointop_flops_per_ms: Some(55_000.0),       // 55 MFLOP/s eff
+            // TensorFlow fp32 on the Nano GPU is the paper's slow regime
+            // (Fig. 9: 8.5 s PointPainting); calibrated to our mini
+            // workload's FLOP count so the end-to-end ratios transfer
+            nn_fp32_flops_per_ms: Some(50_000.0),       // 50 MFLOP/s eff (TF)
+            nn_int8_flops_per_ms: Some(50_000.0),       // Maxwell: no int8 gain
+            mem_bytes_per_ms: 35_000.0,                 // 35 MB/s eff for gathers
+            link_bytes_per_ms: f64::INFINITY,           // unified memory
+            link_overhead_ms: 0.0,
+        }
+    }
+
+    /// Coral EdgeTPU over PCIe Gen2 x1 (0.5 GB/s). Int8 NN only; per-call
+    /// transaction overhead dominates small tensors (paper Table 13: 360 ms
+    /// of communication across ~10 invocations).
+    pub fn edgetpu() -> Device {
+        Device {
+            kind: DeviceKind::EdgeTpu,
+            overhead_ms: 3.0,
+            pointop_flops_per_ms: None,
+            nn_fp32_flops_per_ms: None,
+            nn_int8_flops_per_ms: Some(1_800_000.0),    // 1.8 GOP/s eff on tiny nets
+            mem_bytes_per_ms: 500_000.0,
+            link_bytes_per_ms: 500_000.0,               // 0.5 GB/s PCIe Gen2 x1
+            link_overhead_ms: 20.0,                     // per-transfer setup
+        }
+    }
+
+    pub fn by_kind(kind: DeviceKind) -> Device {
+        match kind {
+            DeviceKind::Cpu => Device::cpu(),
+            DeviceKind::Gpu => Device::gpu(),
+            DeviceKind::EdgeTpu => Device::edgetpu(),
+        }
+    }
+
+    /// Can this device execute the workload at all?
+    pub fn supports(&self, w: &Workload) -> bool {
+        match w.kind {
+            WorkloadKind::PointOp => self.pointop_flops_per_ms.is_some(),
+            WorkloadKind::NeuralNet => match w.precision {
+                Precision::Fp32 => self.nn_fp32_flops_per_ms.is_some(),
+                Precision::Int8 => self.nn_int8_flops_per_ms.is_some(),
+            },
+        }
+    }
+
+    /// Compute time (ms), excluding interconnect transfers.
+    pub fn compute_ms(&self, w: &Workload) -> f64 {
+        let thr = match w.kind {
+            WorkloadKind::PointOp => self
+                .pointop_flops_per_ms
+                .unwrap_or_else(|| panic!("{:?} cannot run point ops", self.kind)),
+            WorkloadKind::NeuralNet => match w.precision {
+                Precision::Fp32 => self
+                    .nn_fp32_flops_per_ms
+                    .unwrap_or_else(|| panic!("{:?} cannot run fp32 NN", self.kind)),
+                Precision::Int8 => self
+                    .nn_int8_flops_per_ms
+                    .unwrap_or_else(|| panic!("{:?} cannot run int8 NN", self.kind)),
+            },
+        };
+        let t_flops = w.flops as f64 / thr;
+        let t_mem = w.mem_bytes as f64 / self.mem_bytes_per_ms;
+        self.overhead_ms + t_flops.max(t_mem)
+    }
+
+    /// Interconnect cost of moving `bytes` onto/off this device.
+    pub fn transfer_ms(&self, bytes: u64) -> f64 {
+        if bytes == 0 || self.link_bytes_per_ms.is_infinite() {
+            return 0.0;
+        }
+        self.link_overhead_ms + bytes as f64 / self.link_bytes_per_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pointop(flops: u64, mem: u64) -> Workload {
+        Workload {
+            kind: WorkloadKind::PointOp,
+            precision: Precision::Fp32,
+            flops,
+            mem_bytes: mem,
+            wire_bytes: 0,
+        }
+    }
+
+    fn nn(flops: u64, prec: Precision) -> Workload {
+        Workload { kind: WorkloadKind::NeuralNet, precision: prec, flops, mem_bytes: 0, wire_bytes: 0 }
+    }
+
+    #[test]
+    fn edgetpu_rejects_pointops_and_fp32() {
+        let t = Device::edgetpu();
+        assert!(!t.supports(&pointop(1000, 0)));
+        assert!(!t.supports(&nn(1000, Precision::Fp32)));
+        assert!(t.supports(&nn(1000, Precision::Int8)));
+    }
+
+    #[test]
+    fn gpu_faster_than_cpu_on_pointops() {
+        let w = pointop(5_000_000, 500_000);
+        assert!(Device::gpu().compute_ms(&w) < Device::cpu().compute_ms(&w));
+    }
+
+    #[test]
+    fn edgetpu_faster_than_cpu_on_int8_nn() {
+        let w = nn(60_000_000, Precision::Int8);
+        assert!(Device::edgetpu().compute_ms(&w) < Device::cpu().compute_ms(&w));
+    }
+
+    #[test]
+    fn table12_sa1_calibration() {
+        // paper: SA1 point manipulation on GPU = 199 ms (INT8 pipeline)
+        // our SA1 workload: FPS + ball query on 2048 pts -> 256 centroids,
+        // grouping moves 256*32*15 f32
+        let flops = crate::pointops::fps_flops(2048, 256) + crate::pointops::ball_query_flops(2048, 256);
+        let mem = (256 * 32 * 15 * 4) as u64;
+        let t = Device::gpu().compute_ms(&pointop(flops, mem));
+        assert!((t - 199.0).abs() < 30.0, "SA1 GPU ~199ms (paper Table 12), got {t:.0}");
+    }
+
+    #[test]
+    fn table12_sa1_pointnet_calibration() {
+        // paper: SA1 PointNet on EdgeTPU = 47 ms incl. transfer
+        let flops = 58_000_000u64; // mini SA1 PointNet
+        let wire = (2048 * 15) as u64; // int8 painted cloud in
+        let t = Device::edgetpu().compute_ms(&nn(flops, Precision::Int8))
+            + Device::edgetpu().transfer_ms(wire);
+        assert!((t - 47.0).abs() < 15.0, "SA1 EdgeTPU ~47ms (paper Table 12), got {t:.0}");
+    }
+
+    #[test]
+    fn transfer_dominated_by_setup_for_small_tensors() {
+        let t = Device::edgetpu();
+        let small = t.transfer_ms(1000);
+        assert!(small > 19.0 && small < 23.0);
+    }
+}

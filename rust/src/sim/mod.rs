@@ -1,0 +1,17 @@
+//! Heterogeneous-accelerator timing model (Jetson Nano GPU + Coral EdgeTPU
+//! + ARM CPU + PCIe Gen2 x1), calibrated against the paper's own measured
+//! per-layer latencies (Tables 12/13).
+//!
+//! **Substitution note (DESIGN.md §2):** we have no Jetson/EdgeTPU. Every
+//! stage still executes *functionally* (PJRT CPU / Rust pointops); this
+//! module supplies the paper-comparable *timing* via an analytical roofline
+//! model: `t = dispatch_overhead + flops/throughput + bytes/mem_bw`, plus a
+//! per-transfer interconnect cost when a stage consumes data produced on a
+//! different device. Constants are fitted so the sequential INT8 per-layer
+//! latencies reproduce paper Table 12 within the mini-model's workload shape.
+
+pub mod device;
+pub mod schedule;
+
+pub use device::{Device, DeviceKind, Precision, Workload, WorkloadKind};
+pub use schedule::{ScheduleSim, StageSpec, Timeline};

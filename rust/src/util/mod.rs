@@ -1,0 +1,7 @@
+//! Substrate utilities built from scratch (no crates vendored for these):
+//! JSON codec, deterministic PRNG, dense tensors, CLI args, property tests.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor;

@@ -1,0 +1,103 @@
+//! Property-based testing harness (proptest is not vendored).
+//!
+//! `check` runs a property over N randomly generated cases; on failure it
+//! attempts a bounded greedy shrink (halving sizes) and reports the minimal
+//! failing seed so the case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases with growing size. The
+/// property returns `Err(description)` to signal failure; panics inside the
+/// property are NOT caught (use Result style).
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64 * 0x9E3779B9);
+        // size grows with the case index: small cases first
+        let size = 4 + case * 4;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // greedy shrink: retry with smaller sizes, same seed
+            let mut min_size = size;
+            let mut min_msg = msg;
+            let mut s = size / 2;
+            while s >= 2 {
+                let mut r2 = Rng::new(seed);
+                match prop(&mut r2, s) {
+                    Err(m) => {
+                        min_size = s;
+                        min_msg = m;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {min_size}): {min_msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random point cloud of `n` points in a `scale`-sized box.
+pub fn gen_cloud(rng: &mut Rng, n: usize, scale: f32) -> Vec<[f32; 3]> {
+    (0..n)
+        .map(|_| [rng.f32() * scale, rng.f32() * scale, rng.f32() * scale * 0.4])
+        .collect()
+}
+
+/// Generate a random oriented box whose center lies in the cloud's range.
+pub fn gen_box(rng: &mut Rng, scale: f32) -> crate::data::Box3 {
+    crate::data::Box3 {
+        center: [rng.f32() * scale, rng.f32() * scale, rng.f32() * 1.2],
+        size: [
+            0.2 + rng.f32() * 2.0,
+            0.2 + rng.f32() * 2.0,
+            0.2 + rng.f32() * 1.5,
+        ],
+        heading: rng.f32() * std::f32::consts::TAU,
+        class: rng.below(10),
+        score: rng.f32(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", PropConfig { cases: 10, seed: 1 }, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails-on-big'")]
+    fn failing_property_reports_seed() {
+        check("fails-on-big", PropConfig::default(), |_, size| {
+            if size > 20 {
+                Err(format!("size {size} too big"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Tiny dense tensor type used on the request path.
+//!
+//! Row-major f32 storage with just the operations the coordinator needs
+//! (shape bookkeeping, slicing helpers). Heavy math lives in the PJRT
+//! executables; this type exists to move data between point ops and the
+//! runtime without pulling in an external ndarray crate.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of rows when viewed as (rows, cols) — requires ndim >= 1.
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Row stride for 2-D views: product of trailing dims.
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_len();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.row_len();
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather rows by index into a new tensor.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let w = self.row_len();
+        let mut data = Vec::with_capacity(idx.len() * w);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        Tensor::new(shape, data)
+    }
+
+    /// Concatenate along axis 0 (all trailing dims must match).
+    pub fn concat0(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let w = parts[0].row_len();
+        let mut shape = parts[0].shape.clone();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(p.row_len(), w, "concat0 trailing dims mismatch");
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        shape[0] = rows;
+        Tensor::new(shape, data)
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_and_concat() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+        let c = Tensor::concat0(&[&t, &g]);
+        assert_eq!(c.shape, vec![5, 2]);
+        assert_eq!(c.row(4), &[1., 2.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

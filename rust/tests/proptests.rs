@@ -1,0 +1,282 @@
+//! Property-based tests over the coordinator substrates (custom harness in
+//! util::prop — proptest is not vendored).
+
+use pointsplit::data::Box3;
+use pointsplit::eval::{eval_map, iou3d, nms3d, Detection};
+use pointsplit::pointops::{ball_query, biased_fps, fps};
+use pointsplit::quant::{channel_minmax, partition, qdq_mse, ActQuant, Granularity};
+use pointsplit::sim::{DeviceKind, Precision, ScheduleSim, StageSpec, Workload, WorkloadKind};
+use pointsplit::util::prop::{check, gen_box, gen_cloud, PropConfig};
+use pointsplit::util::tensor::Tensor;
+
+#[test]
+fn prop_fps_distinct_indices_and_coverage() {
+    check("fps-distinct", PropConfig::default(), |rng, size| {
+        let n = (size * 4).max(8);
+        let m = (n / 2).max(2);
+        let cloud = gen_cloud(rng, n, 4.0);
+        let idx = fps(&cloud, m);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        if s.len() != m {
+            return Err(format!("duplicate indices: {} of {m}", s.len()));
+        }
+        if idx.iter().any(|&i| i >= n) {
+            return Err("index out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_biased_fps_monotone_in_w0() {
+    check("biased-fps-monotone", PropConfig { cases: 32, seed: 11 }, |rng, size| {
+        let n = (size * 8).max(64);
+        let cloud = gen_cloud(rng, n, 4.0);
+        let fg: Vec<f32> = cloud.iter().map(|p| if p[0] < 2.0 { 1.0 } else { 0.0 }).collect();
+        let nfg = fg.iter().sum::<f32>();
+        if nfg < 4.0 || nfg > n as f32 - 4.0 {
+            return Ok(()); // degenerate foreground, skip
+        }
+        let m = (n / 4).max(4);
+        let frac = |idx: &[usize]| idx.iter().map(|&i| fg[i]).sum::<f32>() / m as f32;
+        let lo = frac(&biased_fps(&cloud, m, &fg, 1.0));
+        let hi = frac(&biased_fps(&cloud, m, &fg, 8.0));
+        if hi + 1e-6 < lo {
+            return Err(format!("w0=8 sampled less fg ({hi}) than w0=1 ({lo})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ball_query_members_valid() {
+    check("ball-query-valid", PropConfig::default(), |rng, size| {
+        let n = (size * 4).max(16);
+        let cloud = gen_cloud(rng, n, 2.0);
+        let m = (n / 4).max(1);
+        let centers = fps(&cloud, m);
+        let r = 0.2 + rng.f32() * 0.8;
+        let k = 1 + rng.below(16);
+        let groups = ball_query(&cloud, &centers, r, k);
+        for (g, &c) in groups.iter().zip(centers.iter()) {
+            if g.len() != k {
+                return Err("wrong group size".into());
+            }
+            let first = g[0];
+            for &j in g {
+                let d2: f32 = (0..3).map(|d| (cloud[j][d] - cloud[c][d]).powi(2)).sum();
+                if d2 > r * r + 1e-5 && j != first {
+                    return Err(format!("member outside radius: {} > {}", d2.sqrt(), r));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_iou_bounds_and_symmetry() {
+    check("iou-bounds", PropConfig { cases: 128, seed: 5 }, |rng, _| {
+        let a = gen_box(rng, 4.0);
+        let b = gen_box(rng, 4.0);
+        let ab = iou3d(&a, &b);
+        let ba = iou3d(&b, &a);
+        if !(0.0..=1.0).contains(&ab) {
+            return Err(format!("iou out of range: {ab}"));
+        }
+        if (ab - ba).abs() > 1e-6 {
+            return Err(format!("asymmetric: {ab} vs {ba}"));
+        }
+        if (iou3d(&a, &a) - 1.0).abs() > 1e-6 {
+            return Err("self-iou != 1".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_iou_shrinking_box_reduces_iou() {
+    check("iou-monotone", PropConfig { cases: 64, seed: 9 }, |rng, _| {
+        let a = gen_box(rng, 2.0);
+        let mut small = a;
+        small.size = [a.size[0] * 0.5, a.size[1] * 0.5, a.size[2] * 0.5];
+        let iou = iou3d(&a, &small);
+        // volume ratio 1/8 -> IoU exactly 0.125 (nested boxes)
+        if (iou - 0.125).abs() > 1e-3 {
+            return Err(format!("nested iou {iou} != 0.125"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nms_output_sorted_and_non_overlapping() {
+    check("nms-invariants", PropConfig { cases: 48, seed: 21 }, |rng, size| {
+        let boxes: Vec<Box3> = (0..size.max(2)).map(|_| gen_box(rng, 3.0)).collect();
+        let keep = nms3d(&boxes, 0.25);
+        for w in keep.windows(2) {
+            if boxes[w[0]].score < boxes[w[1]].score {
+                return Err("not sorted by score".into());
+            }
+        }
+        for (i, &a) in keep.iter().enumerate() {
+            for &b in keep.iter().skip(i + 1) {
+                if iou3d(&boxes[a], &boxes[b]) > 0.25 + 1e-9 {
+                    return Err("kept overlapping pair".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_map_perfect_detections_score_one() {
+    check("map-perfect", PropConfig { cases: 32, seed: 31 }, |rng, size| {
+        let n = size.max(1).min(20);
+        let mut gts = vec![Vec::new()];
+        let mut dets = Vec::new();
+        for i in 0..n {
+            let mut b = gen_box(rng, 3.0);
+            b.center[0] += 10.0 * i as f32; // keep disjoint
+            b.score = 1.0;
+            gts[0].push(b);
+            let mut d = b;
+            d.score = rng.f32();
+            dets.push(Detection { scene: 0, b: d });
+        }
+        let r = eval_map(&dets, &gts, 10, 0.25);
+        if (r.map - 1.0).abs() > 1e-9 {
+            return Err(format!("perfect detections mAP {} != 1", r.map));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_finer_granularity_never_worse() {
+    check("quant-monotone", PropConfig { cases: 24, seed: 41 }, |rng, size| {
+        let n = (size * 4).max(32);
+        let c = 24;
+        let mut data = Vec::with_capacity(n * c);
+        for _ in 0..n {
+            for ch in 0..c {
+                let sigma = 0.05 + 2.0 * (ch % 3) as f64;
+                data.push(rng.normal_scaled(0.0, sigma) as f32);
+            }
+        }
+        let t = Tensor::new(vec![n, c], data);
+        let roles = vec![(0..8).collect::<Vec<_>>(), (8..16).collect(), (16..24).collect()];
+        let (lo, hi) = channel_minmax(&t);
+        let mk = |g| ActQuant::calibrate(&lo, &hi, &partition(g, c, &roles));
+        let e_layer = qdq_mse(&t, &mk(Granularity::Layer));
+        let e_chan = qdq_mse(&t, &mk(Granularity::Channel));
+        if e_chan > e_layer + 1e-12 {
+            return Err(format!("channel-wise worse than layer-wise: {e_chan} > {e_layer}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_respects_deps_and_devices() {
+    check("schedule-valid", PropConfig { cases: 48, seed: 51 }, |rng, size| {
+        // random DAG of point ops (GPU) and int8 NNs (EdgeTPU)
+        let n = size.max(2).min(30);
+        let mut stages = Vec::new();
+        for i in 0..n {
+            let nn = rng.f32() < 0.5;
+            let deps: Vec<usize> =
+                (0..i).filter(|_| rng.f32() < 0.25).collect();
+            stages.push(StageSpec {
+                name: format!("s{i}"),
+                device: if nn { DeviceKind::EdgeTpu } else { DeviceKind::Gpu },
+                workload: Workload {
+                    kind: if nn { WorkloadKind::NeuralNet } else { WorkloadKind::PointOp },
+                    precision: Precision::Int8,
+                    flops: 1_000 + rng.below(5_000_000) as u64,
+                    mem_bytes: rng.below(100_000) as u64,
+                    wire_bytes: rng.below(50_000) as u64,
+                },
+                deps,
+            });
+        }
+        let tl = ScheduleSim::new().run(&stages);
+        // rebuild name -> interval
+        let find = |i: usize| tl.stages.iter().find(|s| s.name == format!("s{i}")).unwrap();
+        for (i, s) in stages.iter().enumerate() {
+            let si = find(i);
+            for &d in &s.deps {
+                if si.end_ms < find(d).end_ms {
+                    // starting is allowed (transfer), but completion order must
+                    // respect the dep's completion
+                    return Err(format!("s{i} ends before its dep s{d}"));
+                }
+                if si.compute_start_ms + 1e-9 < find(d).end_ms {
+                    return Err(format!("s{i} computes before dep s{d} finished"));
+                }
+            }
+        }
+        // single occupancy per device
+        for k in [DeviceKind::Gpu, DeviceKind::EdgeTpu] {
+            let mut ivs: Vec<(f64, f64)> = tl
+                .stages
+                .iter()
+                .filter(|s| s.device == k)
+                .map(|s| (s.compute_start_ms, s.end_ms))
+                .collect();
+            ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in ivs.windows(2) {
+                if w[1].0 + 1e-9 < w[0].1 {
+                    return Err(format!("{:?} double-booked: {:?}", k, w));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelined_never_slower_than_chained() {
+    check("overlap-helps", PropConfig { cases: 24, seed: 61 }, |rng, size| {
+        // two independent chains must not be slower than one serialized chain
+        let n = (size % 6).max(1);
+        let mut mk = |i: usize, deps: Vec<usize>, nn: bool| StageSpec {
+            name: format!("s{i}"),
+            device: if nn { DeviceKind::EdgeTpu } else { DeviceKind::Gpu },
+            workload: Workload {
+                kind: if nn { WorkloadKind::NeuralNet } else { WorkloadKind::PointOp },
+                precision: Precision::Int8,
+                flops: 500_000 + rng.below(2_000_000) as u64,
+                mem_bytes: 0,
+                wire_bytes: 1000,
+            },
+            deps,
+        };
+        // parallel: chains (0..n) and (n..2n) independent
+        let mut par = Vec::new();
+        for c in 0..2 {
+            for i in 0..n {
+                let gi = c * n + i;
+                let deps = if i == 0 { vec![] } else { vec![gi - 1] };
+                par.push(mk(gi, deps, i % 2 == 1));
+            }
+        }
+        // serialized: same stages, each depends on the previous globally
+        let mut ser = par.clone();
+        for (i, s) in ser.iter_mut().enumerate() {
+            if i > 0 {
+                s.deps = vec![i - 1];
+            }
+        }
+        let sim = ScheduleSim::new();
+        let tp = sim.run(&par).total_ms;
+        let ts = sim.run(&ser).total_ms;
+        if tp > ts + 1e-6 {
+            return Err(format!("parallel {tp} slower than serialized {ts}"));
+        }
+        Ok(())
+    });
+}
