@@ -1,0 +1,75 @@
+//! Traffic-gateway walkthrough: the same detector box under calm Poisson
+//! traffic, a bursty overload, and a diurnal ramp — with and without the
+//! SLO-degradation policy.
+//!
+//! Runs entirely on the simulated clock (synthetic manifest), so it needs no
+//! artifacts:
+//!
+//! ```bash
+//! cargo run --release --example serve_traffic
+//! ```
+
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::serving::{
+    run_traffic, ArrivalPattern, BatchPolicy, LoadGen, ServicePlanner, SloPolicy, TrafficScenario,
+};
+use pointsplit::sim::DeviceKind;
+
+fn main() {
+    let planner = ServicePlanner::synthetic();
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
+    let cap = planner.capacity_rps(&cfg, 2048, batch.max_batch);
+    println!("PointSplit INT8 on GPU+EdgeTPU: steady-state capacity {cap:.2} rps at batch 4\n");
+
+    let cases: Vec<(&str, ArrivalPattern, SloPolicy)> = vec![
+        ("calm poisson 0.6x", ArrivalPattern::Poisson { rate_rps: cap * 0.6 }, SloPolicy::Degrade),
+        (
+            "bursty 1.0x mean, 2.5x bursts — no policy",
+            ArrivalPattern::Bursty {
+                base_rps: cap * 0.4,
+                burst_rps: cap * 2.5,
+                mean_burst_ms: 2_000.0,
+                mean_calm_ms: 6_000.0,
+            },
+            SloPolicy::None,
+        ),
+        (
+            "bursty 1.0x mean, 2.5x bursts — degrade policy",
+            ArrivalPattern::Bursty {
+                base_rps: cap * 0.4,
+                burst_rps: cap * 2.5,
+                mean_burst_ms: 2_000.0,
+                mean_calm_ms: 6_000.0,
+            },
+            SloPolicy::Degrade,
+        ),
+        (
+            "diurnal ramp peaking at 1.6x",
+            ArrivalPattern::Diurnal { base_rps: cap * 0.4, peak_rps: cap * 1.6, period_s: 60.0 },
+            SloPolicy::Degrade,
+        ),
+    ];
+    for (name, pattern, policy) in cases {
+        let sc = TrafficScenario {
+            name: name.to_string(),
+            configs: vec![cfg.clone()],
+            num_points: 2048,
+            load: LoadGen::simple(pattern, 60_000.0, 1_000.0, 7),
+            queue_capacity: 64,
+            batch,
+            policy,
+        };
+        run_traffic(&sc, &planner, None).print();
+        println!();
+    }
+    println!(
+        "takeaway: same arrival trace, same hardware — the degrade policy converts\n\
+         burst-time deadline misses into on-time (slightly lower-fidelity) answers."
+    );
+}

@@ -32,7 +32,7 @@ impl Cli {
                 // --key=value or --key value or boolean --key
                 if let Some((k, v)) = key.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if args.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if args.peek().is_some_and(|n| !n.starts_with("--")) {
                     out.flags.insert(key.to_string(), args.next().unwrap());
                 } else {
                     out.flags.insert(key.to_string(), "true".to_string());

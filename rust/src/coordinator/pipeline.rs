@@ -59,7 +59,9 @@ impl DetectorConfig {
         }
     }
 
-    fn art(&self, net: &str) -> String {
+    /// Artifact name for one of this configuration's networks (shared with
+    /// the serving planner, which builds the same DAG without executing it).
+    pub(crate) fn art(&self, net: &str) -> String {
         let prec = match net {
             "vote" | "prop" => self.precision_head.as_str(),
             _ => self.precision_backbone.as_str(),
@@ -67,7 +69,7 @@ impl DetectorConfig {
         format!("{}_{}_{}_{}", self.dataset, self.variant.model_name(), net, prec)
     }
 
-    fn seg_art(&self) -> String {
+    pub(crate) fn seg_art(&self) -> String {
         format!("{}_seg_{}", self.dataset, self.precision_backbone)
     }
 

@@ -37,31 +37,7 @@ pub struct ServeReport {
     pub wall_s: f64,
 }
 
-#[derive(Debug, Clone, Default)]
-pub struct Stats {
-    pub mean: f64,
-    pub p50: f64,
-    pub p95: f64,
-    pub min: f64,
-    pub max: f64,
-}
-
-impl Stats {
-    pub fn from(mut xs: Vec<f64>) -> Stats {
-        if xs.is_empty() {
-            return Stats::default();
-        }
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = xs.len();
-        Stats {
-            mean: xs.iter().sum::<f64>() / n as f64,
-            p50: xs[n / 2],
-            p95: xs[(n * 95 / 100).min(n - 1)],
-            min: xs[0],
-            max: xs[n - 1],
-        }
-    }
-}
+pub use crate::util::stats::Stats;
 
 /// Serve `num_scenes` synthetic scenes through `workers` threads and report
 /// accuracy + latency. Scene seeds start at `seed0` (use the same seed range

@@ -6,6 +6,21 @@
 //! execute as AOT-compiled HLO via PJRT (`runtime`), point manipulation runs
 //! in `pointops`, and a calibrated device model (`sim`) provides
 //! paper-comparable timing.
+//!
+//! # Serving
+//!
+//! On top of the per-scene pipeline sits the open-loop traffic gateway
+//! (`serving`): arrival generators (Poisson / bursty MMPP / diurnal), a
+//! bounded admission queue with priority classes, a dynamic batcher that
+//! coalesces compatible requests, and SLO-aware policies that degrade to the
+//! INT8 fast path or shed doomed work under overload. The gateway runs on
+//! **simulated time**: queueing and batching delay compose with the
+//! calibrated `sim::ScheduleSim` device timeline, so overload behaviour
+//! (p99 blow-up, goodput collapse, the win from degradation) reflects the
+//! paper's GPU+EdgeTPU box rather than the build host. Entry points:
+//! `serving::run_traffic` from code, `pointsplit serve-traffic` from the
+//! CLI, and `benches/serving_overload.rs` for the load sweep. Architecture
+//! notes live in `docs/SERVING.md`.
 
 pub mod bench;
 pub mod config;
@@ -16,5 +31,6 @@ pub mod metrics;
 pub mod pointops;
 pub mod quant;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod util;

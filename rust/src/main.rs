@@ -8,6 +8,12 @@
 //!     run one scene end-to-end; print detections + simulated timeline
 //! pointsplit serve    [--scenes 32] [--workers 4] [... detect flags]
 //!     multi-scene request loop; print mAP + latency/memory report
+//! pointsplit serve-traffic [--pattern poisson|bursty|diurnal|all] [--load 0.8 | --rate RPS]
+//!                     [--duration-s 30] [--deadline-ms 1000] [--policy degrade|shed|none]
+//!                     [--queue-cap 64] [--batch-max 4] [--batch-wait-ms 25] [--hi-frac 0]
+//!                     [--functional] [... detect flags]
+//!     open-loop traffic gateway on the simulated clock; print a
+//!     ServeTrafficReport per arrival pattern (see docs/SERVING.md)
 //! pointsplit devices
 //!     print the calibrated device models
 //! ```
@@ -17,7 +23,11 @@ use anyhow::{anyhow, Result};
 use pointsplit::config::{parse_schedule, parse_variant, Cli};
 use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
 use pointsplit::data;
-use pointsplit::runtime::Runtime;
+use pointsplit::runtime::{Manifest, Runtime};
+use pointsplit::serving::{
+    dispatch::PipelineExecutor, run_traffic, ArrivalPattern, BatchPolicy, LoadGen, ServicePlanner,
+    SloPolicy, TrafficScenario,
+};
 use pointsplit::sim::{Device, DeviceKind};
 
 fn main() {
@@ -33,19 +43,22 @@ fn run() -> Result<()> {
         "check" => cmd_check(&cli),
         "detect" => cmd_detect(&cli),
         "serve" => cmd_serve(&cli),
+        "serve-traffic" => cmd_serve_traffic(&cli),
         "devices" => cmd_devices(),
         "probe" => cmd_probe(&cli),
         "" | "help" => {
             print_help();
             Ok(())
         }
-        other => Err(anyhow!("unknown command '{other}' (try: check|detect|serve|devices)")),
+        other => {
+            Err(anyhow!("unknown command '{other}' (try: check|detect|serve|serve-traffic|devices)"))
+        }
     }
 }
 
 fn print_help() {
     println!("pointsplit — on-device 3D detection with heterogeneous accelerators");
-    println!("commands: check | detect | serve | devices   (see rust/src/main.rs docs)");
+    println!("commands: check | detect | serve | serve-traffic | devices   (see rust/src/main.rs docs)");
 }
 
 fn open_runtime(cli: &Cli) -> Result<Runtime> {
@@ -194,6 +207,103 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             Some(v) => println!("  {:<11} {:.1}", c, v * 100.0),
             None => println!("  {:<11} -", c),
         }
+    }
+    Ok(())
+}
+
+/// Open-loop traffic gateway: generate arrivals against the simulated
+/// clock, run them through admission/batching/SLO policies, and report
+/// latency percentiles, drops, and goodput. Needs no artifacts — the
+/// planner falls back to the synthetic manifest; pass `--functional` (with
+/// artifacts and a real PJRT backend) to also execute scenes and report mAP.
+fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
+    let (cfg, ds) = detector_config(cli)?;
+    let manifest_path =
+        std::path::Path::new(&cli.get_or("artifacts", "artifacts")).join("manifest.json");
+    let planner = match std::fs::read_to_string(&manifest_path)
+        .ok()
+        .and_then(|t| Manifest::parse(&t).ok())
+    {
+        Some(m) => {
+            println!("planner manifest: {}", manifest_path.display());
+            ServicePlanner::new(m)
+        }
+        None => {
+            println!("planner manifest: synthetic (no exported artifacts found)");
+            ServicePlanner::synthetic()
+        }
+    };
+    let batch = BatchPolicy {
+        max_batch: cli.get_usize("batch-max", 4)?,
+        max_wait_ms: cli.get_f64("batch-wait-ms", 25.0)?,
+    };
+    let capacity = planner.capacity_rps(&cfg, ds.num_points, batch.max_batch);
+    let rate = if cli.get("rate").is_some() {
+        cli.get_f64("rate", capacity)?
+    } else {
+        capacity * cli.get_f64("load", 0.8)?
+    };
+    let policy_name = cli.get_or("policy", "degrade");
+    let policy = SloPolicy::parse(&policy_name)
+        .ok_or_else(|| anyhow!("unknown policy '{policy_name}' (degrade|shed|none)"))?;
+    let duration_ms = cli.get_f64("duration-s", 30.0)? * 1000.0;
+    let deadline_ms = cli.get_f64("deadline-ms", 1000.0)?;
+    let seed = cli.get_usize("seed", 1)? as u64;
+    let pattern_arg = cli.get_or("pattern", "all");
+    let poisson = ArrivalPattern::Poisson { rate_rps: rate };
+    let bursty = ArrivalPattern::Bursty {
+        base_rps: rate * 0.4,
+        burst_rps: rate * 2.5,
+        mean_burst_ms: 2_000.0,
+        mean_calm_ms: 6_000.0,
+    };
+    let diurnal = ArrivalPattern::Diurnal {
+        base_rps: rate * 0.4,
+        peak_rps: rate * 1.6,
+        period_s: duration_ms / 1000.0,
+    };
+    let patterns: Vec<ArrivalPattern> = match pattern_arg.as_str() {
+        "poisson" => vec![poisson],
+        "bursty" => vec![bursty],
+        "diurnal" => vec![diurnal],
+        "all" => vec![poisson, bursty, diurnal],
+        other => return Err(anyhow!("unknown pattern '{other}' (poisson|bursty|diurnal|all)")),
+    };
+    println!(
+        "serve-traffic: {} {} int8={} — capacity {:.1} rps at batch {}, target {:.1} rps, \
+         deadline {:.0} ms, policy {}\n",
+        ds.name,
+        cfg.variant.name(),
+        cfg.int8(),
+        capacity,
+        batch.max_batch,
+        rate,
+        deadline_ms,
+        policy.name()
+    );
+    let rt_holder = if cli.get_bool("functional") { Some(open_runtime(cli)?) } else { None };
+    for pattern in patterns {
+        let load = LoadGen {
+            pattern,
+            duration_ms,
+            deadline_ms,
+            hi_frac: cli.get_f64("hi-frac", 0.0)?,
+            mix: vec![1.0],
+            seed,
+        };
+        let sc = TrafficScenario {
+            name: format!("{}/{}/{}", ds.name, cfg.variant.name(), pattern.name()),
+            configs: vec![cfg.clone()],
+            num_points: ds.num_points,
+            load,
+            queue_capacity: cli.get_usize("queue-cap", 64)?,
+            batch,
+            policy,
+        };
+        let exec = rt_holder.as_ref().map(|rt| PipelineExecutor::new(rt, ds));
+        let rep = run_traffic(&sc, &planner, exec.as_ref());
+        rep.print();
+        println!();
     }
     Ok(())
 }

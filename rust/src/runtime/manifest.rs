@@ -227,6 +227,259 @@ impl Manifest {
         })
     }
 
+    /// Build a fully synthetic manifest mirroring the python/compile
+    /// constants (common.py SA_CONFIGS, head layout, aot.py FLOP formulas).
+    ///
+    /// This is the contract the serving gateway's analytic planner runs on
+    /// when `artifacts/manifest.json` has not been exported: every artifact
+    /// name the coordinator can reference resolves, with the same workload
+    /// descriptors `aot.py` would write. Functional execution still requires
+    /// the real exported artifacts — the synthetic manifest only feeds the
+    /// calibrated device simulator.
+    pub fn synthetic() -> Manifest {
+        // VoteNet-mini architecture (python/compile/common.py)
+        let sa_m = [256usize, 128, 64, 32];
+        let sa_r = [0.3f32, 0.6, 1.2, 2.4];
+        let sa_k = [32usize, 16, 8, 8];
+        let sa_mlp: [&[usize]; 4] = [&[32, 32, 64], &[64, 64, 128], &[96, 96, 128], &[128, 128, 128]];
+        let num_class = crate::data::NUM_CLASS;
+        let num_seg_classes = num_class + 1;
+        let num_heading_bin = 12usize;
+        let (num_seeds, num_proposals, proposal_k) = (128usize, 32usize, 8usize);
+        let seed_feat = 128usize;
+        let fp_in = sa_mlp[1][2] + sa_mlp[2][2] + sa_mlp[3][2]; // 384
+        let feat_dim_painted = 1 + num_seg_classes;
+        let feat_dim_plain = 1usize;
+        let vote_ch = 3 + seed_feat; // 131
+        let proposal_ch = 3 + 2 + 2 * num_heading_bin + num_class + 3 * num_class + num_class; // 79
+
+        // head channel layout (common.py SLICE_*)
+        let head_layout = HeadLayout {
+            center: (0, 3),
+            objectness: (3, 5),
+            heading_cls: (5, 5 + num_heading_bin),
+            heading_reg: (17, 17 + num_heading_bin),
+            size_cls: (29, 29 + num_class),
+            size_reg: (39, 39 + 3 * num_class),
+            sem_cls: (69, 69 + num_class),
+        };
+        let role_groups_vote = vec![(0..3).collect::<Vec<_>>(), (3..vote_ch).collect()];
+        let role_groups_prop = vec![
+            (0..3).collect::<Vec<_>>(),
+            (3..5).chain(5..17).chain(29..39).chain(69..79).collect(),
+            (17..29).chain(39..69).collect::<Vec<_>>(),
+        ];
+        // quantize.quant_param_count: 3 params per channel group, heads only
+        let quant_param_count: HashMap<String, usize> = [
+            ("layer".to_string(), 3 * 2),
+            ("group".to_string(), 3 * (2 + 3)),
+            ("channel".to_string(), 3 * (vote_ch + proposal_ch)),
+            ("role".to_string(), 3 * (2 + 3)),
+        ]
+        .into_iter()
+        .collect();
+
+        // model.fp_layer_cost at both scales
+        let fp_cost = |fps: &[&[(usize, usize)]], ns: &[usize], ps: &[(usize, usize)], n_ps: usize| {
+            let mut p_orig = 0u64;
+            let mut m_orig = 0u64;
+            for (layers, &n) in fps.iter().zip(ns) {
+                for &(ci, co) in *layers {
+                    p_orig += (ci * co + co) as u64;
+                    m_orig += (ci * co * n) as u64;
+                }
+            }
+            let p_ps: u64 = ps.iter().map(|&(ci, co)| (ci * co + co) as u64).sum();
+            let m_ps: u64 = ps.iter().map(|&(ci, co)| (ci * co * n_ps) as u64).sum();
+            ((p_orig, m_orig), (p_ps, m_ps))
+        };
+        let mini_fp: [&[(usize, usize)]; 2] =
+            [&[(fp_in - sa_mlp[1][2], 128), (128, 128)], &[(128 + 128, 128), (128, 128)]];
+        let fp_layer_cost_mini = fp_cost(&mini_fp, &[64, num_seeds], &[(fp_in, seed_feat)], num_seeds);
+        let paper_fp: [&[(usize, usize)]; 2] = [&[(512, 256), (256, 256)], &[(512, 256), (256, 256)]];
+        let fp_layer_cost_paper = fp_cost(&paper_fp, &[512, 1024], &[(512, 384)], 1024);
+
+        let datasets: HashMap<String, DatasetMeta> = ["synrgbd", "synscan"]
+            .iter()
+            .map(|name| {
+                let d = crate::data::dataset(name).expect("builtin dataset");
+                (
+                    name.to_string(),
+                    DatasetMeta {
+                        num_points: d.num_points,
+                        room_min: d.room_min,
+                        room_max: d.room_max,
+                        min_objects: d.min_objects,
+                        max_objects: d.max_objects,
+                        single_view: d.single_view,
+                        depth_noise: d.depth_noise,
+                        seg_noise: d.seg_noise,
+                    },
+                )
+            })
+            .collect();
+
+        // aot.py mlp_flops: n rows through a dense chain
+        let mlp_flops = |n: usize, widths: &[usize]| -> u64 {
+            widths.windows(2).map(|w| 2 * n as u64 * (w[0] * w[1]) as u64).sum()
+        };
+        // aot.py conv_flops: encoder-decoder segmenter at 64x64
+        let seg_flops = {
+            let c = [16u64, 32, 48, 64];
+            let hw = (crate::data::IMG_SIZE * crate::data::IMG_SIZE) as u64;
+            2 * hw * 9 * 3 * c[0]
+                + 2 * (hw / 4) * 9 * c[0] * c[1]
+                + 2 * (hw / 16) * 9 * c[1] * c[2]
+                + 2 * (hw / 16) * 9 * c[2] * c[3]
+                + 2 * (hw / 4) * 9 * c[3] * c[1]
+                + 2 * hw * 9 * (c[1] + c[1]) * c[0]
+                + 2 * hw * (c[0] + c[0]) * num_seg_classes as u64
+        };
+
+        let mut artifacts: Vec<ArtifactMeta> = Vec::new();
+        let mut add = |name: String,
+                       dataset: &str,
+                       model: &str,
+                       net: &str,
+                       precision: &str,
+                       shape: Vec<usize>,
+                       flops: u64| {
+            let bytes_in = shape.iter().product::<usize>() as u64 * 4;
+            artifacts.push(ArtifactMeta {
+                file: format!("{name}.hlo.txt"),
+                name,
+                dataset: dataset.to_string(),
+                model: model.to_string(),
+                net: net.to_string(),
+                precision: precision.to_string(),
+                input_shapes: vec![shape],
+                flops,
+                bytes_in,
+                wire_bytes_per_elem: if precision.contains("int8") { 1 } else { 4 },
+            });
+        };
+
+        let backbone_precs = ["fp32", "int8"];
+        let head_precs = ["fp32", "int8_layer", "int8_group", "int8_channel", "int8_role"];
+        for ds in ["synrgbd", "synscan"] {
+            for prec in backbone_precs {
+                add(
+                    format!("{ds}_seg_{prec}"),
+                    ds,
+                    "seg",
+                    "seg",
+                    prec,
+                    vec![crate::data::IMG_SIZE, crate::data::IMG_SIZE, 3],
+                    seg_flops,
+                );
+            }
+            for model in ["votenet", "painted", "pointsplit"] {
+                let feat = if model == "votenet" { feat_dim_plain } else { feat_dim_painted };
+                let cin_per_level = [feat, sa_mlp[0][2], sa_mlp[1][2], sa_mlp[2][2]];
+                for prec in backbone_precs {
+                    for l in 0..4 {
+                        let cin = 3 + cin_per_level[l];
+                        let mut widths = vec![cin];
+                        widths.extend_from_slice(sa_mlp[l]);
+                        for shape in ["full", "half"] {
+                            if l == 3 && shape == "half" {
+                                continue; // SA4 runs on the fused set only
+                            }
+                            let b = if shape == "half" { sa_m[l] / 2 } else { sa_m[l] };
+                            let net = format!("sa{}_{shape}", l + 1);
+                            add(
+                                format!("{ds}_{model}_{net}_{prec}"),
+                                ds,
+                                model,
+                                &net,
+                                prec,
+                                vec![b, sa_k[l], cin],
+                                mlp_flops(b * sa_k[l], &widths),
+                            );
+                        }
+                    }
+                    add(
+                        format!("{ds}_{model}_fp_fc_{prec}"),
+                        ds,
+                        model,
+                        "fp_fc",
+                        prec,
+                        vec![num_seeds, fp_in],
+                        mlp_flops(num_seeds, &[fp_in, seed_feat]),
+                    );
+                }
+                for prec in head_precs {
+                    add(
+                        format!("{ds}_{model}_vote_{prec}"),
+                        ds,
+                        model,
+                        "vote",
+                        prec,
+                        vec![num_seeds, seed_feat],
+                        mlp_flops(num_seeds, &[seed_feat, 128, 128, vote_ch]),
+                    );
+                    add(
+                        format!("{ds}_{model}_prop_{prec}"),
+                        ds,
+                        model,
+                        "prop",
+                        prec,
+                        vec![num_proposals, proposal_k, 3 + seed_feat],
+                        mlp_flops(num_proposals * proposal_k, &[3 + seed_feat, 128, 64])
+                            + mlp_flops(num_proposals, &[64, 64, proposal_ch]),
+                    );
+                }
+            }
+        }
+
+        let by_name = artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
+        Manifest {
+            classes: crate::data::CLASS_NAMES.iter().map(|c| c.to_string()).collect(),
+            mean_sizes: vec![
+                [1.85, 1.65, 0.50],
+                [1.40, 0.85, 0.72],
+                [1.85, 0.90, 0.75],
+                [0.48, 0.48, 0.85],
+                [0.40, 0.55, 0.75],
+                [1.30, 0.70, 0.74],
+                [1.00, 0.50, 0.95],
+                [0.50, 0.50, 0.60],
+                [0.80, 0.30, 1.75],
+                [1.60, 0.80, 0.55],
+            ],
+            num_heading_bin,
+            num_seg_classes,
+            img_size: crate::data::IMG_SIZE,
+            sa_configs: (0..4)
+                .map(|l| SaConfig {
+                    m: sa_m[l],
+                    radius: sa_r[l],
+                    k: sa_k[l],
+                    mlp: sa_mlp[l].to_vec(),
+                })
+                .collect(),
+            num_seeds,
+            num_proposals,
+            proposal_radius: 0.6,
+            proposal_k,
+            seed_feat,
+            fp_in,
+            feat_dim_painted,
+            feat_dim_plain,
+            head_layout,
+            role_groups_vote,
+            role_groups_prop,
+            quant_param_count,
+            fp_layer_cost_mini,
+            fp_layer_cost_paper,
+            datasets,
+            default_w0: 2.0,
+            default_bias_layers: 2,
+            artifacts,
+            by_name,
+        }
+    }
+
     pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
         self.by_name.get(name).map(|&i| &self.artifacts[i])
     }
@@ -238,5 +491,56 @@ impl Manifest {
 
     pub fn num_class(&self) -> usize {
         self.classes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_is_complete() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.num_class(), 10);
+        assert_eq!(m.num_seg_classes, 11);
+        assert_eq!(m.sa_configs.len(), 4);
+        assert_eq!(m.fp_in, 384);
+        assert_eq!(m.head_layout.sem_cls, (69, 79));
+        assert_eq!(m.mean_sizes.len(), 10);
+        assert_eq!(m.quant_param_count["channel"], 3 * (131 + 79));
+        // every artifact name the coordinator can form must resolve
+        for ds in ["synrgbd", "synscan"] {
+            for prec in ["fp32", "int8"] {
+                assert!(m.artifact(&format!("{ds}_seg_{prec}")).is_some());
+            }
+            for model in ["votenet", "painted", "pointsplit"] {
+                for prec in ["fp32", "int8"] {
+                    for net in ["sa1_full", "sa1_half", "sa2_half", "sa3_full", "sa4_full", "fp_fc"]
+                    {
+                        assert!(
+                            m.find(ds, model, net, prec).is_some(),
+                            "missing {ds}_{model}_{net}_{prec}"
+                        );
+                    }
+                }
+                for prec in ["fp32", "int8_layer", "int8_group", "int8_channel", "int8_role"] {
+                    assert!(m.find(ds, model, "vote", prec).is_some());
+                    assert!(m.find(ds, model, "prop", prec).is_some());
+                }
+            }
+        }
+        // aot.py formulas: fp_fc = 2 * 128 * 384 * 128 flops
+        let fp = m.artifact("synrgbd_pointsplit_fp_fc_int8").unwrap();
+        assert_eq!(fp.flops, 2 * 128 * 384 * 128);
+        assert_eq!(fp.wire_bytes_per_elem, 1);
+        let seg = m.artifact("synrgbd_seg_fp32").unwrap();
+        assert_eq!(seg.input_shapes[0], vec![64, 64, 3]);
+        assert_eq!(seg.wire_bytes_per_elem, 4);
+        // no duplicate names
+        let mut names: Vec<&str> = m.artifacts.iter().map(|a| a.name.as_str()).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate artifact names");
     }
 }

@@ -1,0 +1,171 @@
+//! Dynamic batcher: coalesce compatible queued requests up to a size /
+//! timeout window before dispatch.
+//!
+//! Requests are compatible when they share a batch key (same dataset +
+//! precision variant — one artifact set, one schedule). The batcher itself
+//! holds no requests: it is a pure decision function over the admission
+//! queue, invoked whenever the dispatch lane is free. That keeps admission
+//! control honest (everything waiting is in the bounded queue) and makes the
+//! policy trivially testable.
+//!
+//! Decision rule for the head-of-line key: dispatch now if the batch is full
+//! or its oldest member has waited `max_wait_ms`; otherwise wait until one of
+//! those becomes true. A partial batch therefore rides with whatever showed
+//! up inside the window — the classic latency/throughput trade.
+
+use super::loadgen::Request;
+use super::queue::AdmissionQueue;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests coalesced into one dispatch.
+    pub max_batch: usize,
+    /// Maximum time the oldest compatible request may wait before the batch
+    /// is forced out, ms.
+    pub max_wait_ms: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4, max_wait_ms: 25.0 }
+    }
+}
+
+/// A formed batch ready for dispatch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub key: usize,
+    pub reqs: Vec<Request>,
+    /// When the batch left the queue (dispatch decision time), ms.
+    pub formed_ms: f64,
+}
+
+impl Batch {
+    /// Earliest absolute deadline across members (drives SLO decisions).
+    pub fn earliest_deadline_ms(&self) -> f64 {
+        self.reqs.iter().map(|r| r.deadline_ms).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Queueing delay of the oldest member at formation time.
+    pub fn oldest_wait_ms(&self) -> f64 {
+        self.reqs.iter().map(|r| self.formed_ms - r.arrival_ms).fold(0.0, f64::max)
+    }
+}
+
+/// What the dispatcher should do right now.
+#[derive(Debug, Clone)]
+pub enum BatchDecision {
+    /// Dispatch this batch immediately.
+    Dispatch(Batch),
+    /// Work is queued but still inside its coalescing window: re-evaluate at
+    /// the given absolute time (or earlier, if an arrival lands first).
+    WaitUntil(f64),
+    /// Nothing queued.
+    Idle,
+}
+
+/// Evaluate the batching rule against the queue at time `now_ms`.
+///
+/// The head-of-line request (priority order) picks the key; its cohort is
+/// everything queued with the same key. `Dispatch` pops the cohort (up to
+/// `max_batch`) off the queue; `WaitUntil` leaves the queue untouched.
+pub fn decide(queue: &mut AdmissionQueue, policy: &BatchPolicy, now_ms: f64) -> BatchDecision {
+    let Some(head) = queue.peek() else {
+        return BatchDecision::Idle;
+    };
+    let key = head.key;
+    let ready = queue.count_key(key) >= policy.max_batch.max(1);
+    let oldest = queue.oldest_arrival_for_key(key).expect("head key present");
+    let deadline_to_form = oldest + policy.max_wait_ms;
+    if ready || now_ms >= deadline_to_form {
+        let reqs = queue.pop_key(key, policy.max_batch.max(1));
+        debug_assert!(!reqs.is_empty());
+        BatchDecision::Dispatch(Batch { key, reqs, formed_ms: now_ms })
+    } else {
+        BatchDecision::WaitUntil(deadline_to_form)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, key: usize, arrival: f64) -> Request {
+        Request {
+            id,
+            arrival_ms: arrival,
+            deadline_ms: arrival + 500.0,
+            seed: id,
+            class: 0,
+            key,
+        }
+    }
+
+    fn queue_with(reqs: Vec<Request>) -> AdmissionQueue {
+        let mut q = AdmissionQueue::new(64, 1);
+        for r in reqs {
+            q.offer(r);
+        }
+        q
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut q = queue_with((0..4).map(|i| req(i, 0, i as f64)).collect());
+        let policy = BatchPolicy { max_batch: 4, max_wait_ms: 100.0 };
+        match decide(&mut q, &policy, 3.5) {
+            BatchDecision::Dispatch(b) => {
+                assert_eq!(b.reqs.len(), 4);
+                assert_eq!(b.key, 0);
+                assert!(q.is_empty());
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_batch_waits_then_flushes() {
+        let mut q = queue_with(vec![req(0, 0, 10.0), req(1, 0, 12.0)]);
+        let policy = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
+        match decide(&mut q, &policy, 14.0) {
+            BatchDecision::WaitUntil(t) => assert!((t - 35.0).abs() < 1e-9),
+            other => panic!("expected wait, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2, "waiting must not consume the queue");
+        match decide(&mut q, &policy, 35.0) {
+            BatchDecision::Dispatch(b) => {
+                assert_eq!(b.reqs.len(), 2);
+                assert!((b.oldest_wait_ms() - 25.0).abs() < 1e-9);
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cohort_limited_to_head_key() {
+        let mut q = queue_with(vec![req(0, 1, 0.0), req(1, 0, 1.0), req(2, 1, 2.0)]);
+        let policy = BatchPolicy { max_batch: 2, max_wait_ms: 5.0 };
+        match decide(&mut q, &policy, 10.0) {
+            BatchDecision::Dispatch(b) => {
+                assert_eq!(b.key, 1, "head-of-line request picks the key");
+                assert_eq!(b.reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn idle_on_empty() {
+        let mut q = AdmissionQueue::new(4, 1);
+        assert!(matches!(decide(&mut q, &BatchPolicy::default(), 0.0), BatchDecision::Idle));
+    }
+
+    #[test]
+    fn earliest_deadline_is_min() {
+        let b = Batch { key: 0, reqs: vec![req(0, 0, 5.0), req(1, 0, 1.0)], formed_ms: 20.0 };
+        assert!((b.earliest_deadline_ms() - 501.0).abs() < 1e-9);
+        assert!((b.oldest_wait_ms() - 19.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,480 @@
+//! Virtual-time dispatcher: drains the admission queue through the batcher
+//! and SLO policy, charging every batch into the calibrated device timeline.
+//!
+//! The loop runs on the **simulated clock**. Each dispatched batch is costed
+//! by the [`ServicePlanner`] (the same stage DAG `ScenePipeline` records,
+//! scaled by batch size); its critical path sets request latency and its
+//! bottleneck-device occupancy sets when the *next* batch may enter. That
+//! second number is the two-lane overlap: while a batch's NPU tail is still
+//! draining, the following batch's GPU point-manipulation front has already
+//! started — exactly the Fig. 3 pipelining, applied across requests instead
+//! of within one scene.
+//!
+//! A request's life ends in exactly one of four ways — completed, rejected
+//! at admission, expired in queue, or shed by the SLO policy — and the
+//! dispatcher emits one [`RequestOutcome`] per arrival (property-tested in
+//! `rust/tests/proptests.rs`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::{DetectorConfig, ScenePipeline};
+use crate::data::{generate_scene, Box3, DatasetCfg};
+use crate::eval::{eval_map, Detection};
+use crate::runtime::Runtime;
+use crate::util::stats::Stats;
+
+use super::batcher::{self, BatchPolicy};
+use super::loadgen::{LoadGen, Request};
+use super::plan::ServicePlanner;
+use super::queue::{AdmissionQueue, AdmitResult};
+use super::slo::{self, SloPolicy};
+
+/// One open-loop serving experiment.
+#[derive(Debug, Clone)]
+pub struct TrafficScenario {
+    pub name: String,
+    /// Detector configurations addressable by `Request::key`.
+    pub configs: Vec<DetectorConfig>,
+    /// Points per scene (from the dataset config).
+    pub num_points: usize,
+    pub load: LoadGen,
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+    pub policy: SloPolicy,
+}
+
+/// How a single request left the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutcomeKind {
+    Completed,
+    RejectedFull,
+    Expired,
+    ShedSlo,
+}
+
+/// Terminal record for one arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub kind: OutcomeKind,
+    /// Completed within its deadline (always false for non-completions).
+    pub on_time: bool,
+}
+
+/// Aggregated result of one scenario run.
+#[derive(Debug, Clone)]
+pub struct ServeTrafficReport {
+    pub scenario: String,
+    pub pattern: &'static str,
+    pub policy: &'static str,
+    pub offered_rps: f64,
+    /// Steady-state capacity of config 0 at the full batch size.
+    pub capacity_rps: f64,
+    /// Arrival-window length, seconds (simulated).
+    pub duration_s: f64,
+    /// Time the last batch finished, seconds (simulated).
+    pub makespan_s: f64,
+    pub arrivals: usize,
+    pub completed: usize,
+    pub on_time: usize,
+    pub rejected_full: usize,
+    pub expired: usize,
+    pub shed_slo: usize,
+    /// Requests served on the degraded fast path.
+    pub degraded: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    /// End-to-end (arrival -> batch completion) simulated latency.
+    pub latency_ms: Stats,
+    /// Arrival -> dispatch delay (queueing + batching).
+    pub queue_wait_ms: Stats,
+    /// On-time completions / arrivals.
+    pub slo_attainment: f64,
+    /// On-time completions per simulated second.
+    pub goodput_rps: f64,
+    pub util_gpu: f64,
+    pub util_npu: f64,
+    pub max_queue_depth: usize,
+    /// mAP@0.25 over functionally executed scenes (None without a real
+    /// PJRT backend + artifacts).
+    pub map_25: Option<f64>,
+}
+
+impl ServeTrafficReport {
+    /// Human-readable block (mirrors `cmd_serve`'s style).
+    pub fn print(&self) {
+        println!(
+            "--- {} [{} arrivals, pattern={}, policy={}] ---",
+            self.scenario, self.arrivals, self.pattern, self.policy
+        );
+        println!(
+            "offered {:.1} rps vs capacity {:.1} rps ({:.0}% load), {:.1}s window, {:.1}s makespan",
+            self.offered_rps,
+            self.capacity_rps,
+            100.0 * self.offered_rps / self.capacity_rps.max(1e-9),
+            self.duration_s,
+            self.makespan_s
+        );
+        println!(
+            "completed {} ({} on time)  rejected {}  expired {}  shed {}  degraded {}",
+            self.completed, self.on_time, self.rejected_full, self.expired, self.shed_slo,
+            self.degraded
+        );
+        println!(
+            "latency: p50 {:.0} ms  p95 {:.0}  p99 {:.0}  (queue wait p95 {:.0} ms)",
+            self.latency_ms.p50, self.latency_ms.p95, self.latency_ms.p99, self.queue_wait_ms.p95
+        );
+        println!(
+            "SLO attainment {:.1}%  goodput {:.1} rps  mean batch {:.2} over {} batches",
+            100.0 * self.slo_attainment,
+            self.goodput_rps,
+            self.mean_batch,
+            self.batches
+        );
+        println!(
+            "device util: GPU {:.0}%  NPU {:.0}%  peak queue depth {}",
+            100.0 * self.util_gpu,
+            100.0 * self.util_npu,
+            self.max_queue_depth
+        );
+        match self.map_25 {
+            Some(m) => println!("mAP@0.25 (functional) = {:.1}", m * 100.0),
+            None => println!("mAP: n/a (simulated-time run; needs artifacts + PJRT)"),
+        }
+    }
+}
+
+/// Functional batch executor: runs dispatched scenes through the real
+/// [`ScenePipeline`] so reports carry accuracy next to simulated latency.
+/// Requires exported artifacts and a real PJRT backend (the vendored `xla`
+/// stub makes every execution fail, in which case the dispatcher falls back
+/// to simulation-only and reports `map_25 = None`).
+pub struct PipelineExecutor<'a> {
+    rt: &'a Runtime,
+    ds: &'static DatasetCfg,
+    pipes: RefCell<HashMap<String, ScenePipeline<'a>>>,
+}
+
+impl<'a> PipelineExecutor<'a> {
+    pub fn new(rt: &'a Runtime, ds: &'static DatasetCfg) -> PipelineExecutor<'a> {
+        PipelineExecutor { rt, ds, pipes: RefCell::new(HashMap::new()) }
+    }
+
+    /// Execute each request's scene; returns (detections, ground truth) per
+    /// request in order.
+    ///
+    /// Fidelity caveat: degraded batches run with the degraded *precisions*
+    /// (the dispatcher passes the fast config), but at the full point budget
+    /// and with fresh 2D segmentation — the accuracy reported for degraded
+    /// traffic is therefore an upper bound on the fast path's true mAP.
+    #[allow(clippy::type_complexity)]
+    pub fn execute(
+        &self,
+        cfg: &DetectorConfig,
+        reqs: &[Request],
+    ) -> Result<Vec<(Vec<Box3>, Vec<Box3>)>> {
+        // must discriminate every field that changes pipeline behaviour
+        // (mirrors ServicePlanner::cost's cache key)
+        let key = format!(
+            "{}|{}|{}|{}|{:?}|{}|{}|{}",
+            cfg.dataset,
+            cfg.variant.name(),
+            cfg.precision_backbone,
+            cfg.precision_head,
+            cfg.schedule,
+            cfg.w0,
+            cfg.bias_layers,
+            cfg.seg_passes
+        );
+        let mut pipes = self.pipes.borrow_mut();
+        let pipe = pipes
+            .entry(key)
+            .or_insert_with(|| ScenePipeline::new(self.rt, cfg.clone()));
+        let mut out = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let scene = generate_scene(r.seed, self.ds);
+            let gt = scene.gt_boxes();
+            let res = pipe.run(&scene, r.seed)?;
+            out.push((res.detections, gt));
+        }
+        Ok(out)
+    }
+}
+
+/// Run a scenario to completion on the simulated clock. Returns the report
+/// plus one terminal outcome per arrival (in resolution order).
+pub fn run_traffic_trace(
+    sc: &TrafficScenario,
+    planner: &ServicePlanner,
+    exec: Option<&PipelineExecutor>,
+) -> (ServeTrafficReport, Vec<RequestOutcome>) {
+    assert!(!sc.configs.is_empty(), "scenario needs at least one detector config");
+    let arrivals = sc.load.generate();
+    let total = arrivals.len();
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(total);
+    let mut queue = AdmissionQueue::new(sc.queue_capacity, 2);
+    let mut now = 0.0f64;
+    let mut lane_free = 0.0f64;
+    let mut i = 0usize;
+
+    let mut makespan_ms = 0.0f64;
+    let mut busy_gpu = 0.0f64;
+    let mut busy_npu = 0.0f64;
+    let mut lat: Vec<f64> = Vec::new();
+    let mut qwait: Vec<f64> = Vec::new();
+    let (mut completed, mut on_time, mut shed_slo, mut degraded) = (0usize, 0usize, 0usize, 0usize);
+    let (mut batches, mut batched_reqs) = (0usize, 0usize);
+
+    // functional-accuracy accumulators (only with a working executor)
+    let mut exec_ok = exec.is_some();
+    let mut gts: Vec<Vec<Box3>> = Vec::new();
+    let mut dets: Vec<Detection> = Vec::new();
+
+    loop {
+        // 1) ingest every arrival due at or before `now`
+        while i < total && arrivals[i].arrival_ms <= now {
+            let r = arrivals[i].clone();
+            i += 1;
+            if queue.offer(r) == AdmitResult::RejectedFull {
+                outcomes.push(RequestOutcome {
+                    id: arrivals[i - 1].id,
+                    kind: OutcomeKind::RejectedFull,
+                    on_time: false,
+                });
+            }
+        }
+        // 2) expire requests whose deadline passed while queued
+        for r in queue.expire(now) {
+            outcomes.push(RequestOutcome { id: r.id, kind: OutcomeKind::Expired, on_time: false });
+        }
+        // 3) dispatch while the lane is open
+        let mut wait_hint: Option<f64> = None;
+        while lane_free <= now {
+            match batcher::decide(&mut queue, &sc.batch, now) {
+                batcher::BatchDecision::Dispatch(batch) => {
+                    let cfg = &sc.configs[batch.key.min(sc.configs.len() - 1)];
+                    let k0 = batch.reqs.len();
+                    let fast_pts = slo::degraded_points(sc.num_points);
+                    let full = planner.cost(cfg, sc.num_points, k0, false);
+                    let fast_cfg = slo::degraded_config(cfg);
+                    let fast = planner.cost(&fast_cfg, fast_pts, k0, true);
+                    let dec = slo::apply(sc.policy, batch.reqs, now, full.total_ms, fast.total_ms);
+                    for r in &dec.shed {
+                        shed_slo += 1;
+                        outcomes.push(RequestOutcome {
+                            id: r.id,
+                            kind: OutcomeKind::ShedSlo,
+                            on_time: false,
+                        });
+                    }
+                    if dec.dispatch.is_empty() {
+                        continue; // whole batch shed; lane still open
+                    }
+                    let k = dec.dispatch.len();
+                    let (run_cfg, cost) = if dec.degraded {
+                        (&fast_cfg, planner.cost(&fast_cfg, fast_pts, k, true))
+                    } else {
+                        (cfg, planner.cost(cfg, sc.num_points, k, false))
+                    };
+                    let done = now + cost.total_ms;
+                    lane_free = now + cost.bottleneck_ms;
+                    makespan_ms = makespan_ms.max(done);
+                    busy_gpu += cost.busy_gpu_ms;
+                    busy_npu += cost.busy_npu_ms;
+                    batches += 1;
+                    batched_reqs += k;
+                    if exec_ok {
+                        match exec.expect("exec_ok implies executor").execute(run_cfg, &dec.dispatch)
+                        {
+                            Ok(pairs) => {
+                                for (d, gt) in pairs {
+                                    let scene_idx = gts.len();
+                                    gts.push(gt);
+                                    dets.extend(
+                                        d.into_iter().map(|b| Detection { scene: scene_idx, b }),
+                                    );
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "functional execution disabled ({e:#}); continuing simulated-only"
+                                );
+                                exec_ok = false;
+                            }
+                        }
+                    }
+                    for r in &dec.dispatch {
+                        lat.push(done - r.arrival_ms);
+                        qwait.push(now - r.arrival_ms);
+                        completed += 1;
+                        let met = done <= r.deadline_ms;
+                        if met {
+                            on_time += 1;
+                        }
+                        if dec.degraded {
+                            degraded += 1;
+                        }
+                        outcomes.push(RequestOutcome {
+                            id: r.id,
+                            kind: OutcomeKind::Completed,
+                            on_time: met,
+                        });
+                    }
+                }
+                batcher::BatchDecision::WaitUntil(t) => {
+                    wait_hint = Some(t);
+                    break;
+                }
+                batcher::BatchDecision::Idle => break,
+            }
+        }
+        // 4) advance the clock to the next event
+        let mut t_next = f64::INFINITY;
+        if let Some(r) = arrivals.get(i) {
+            t_next = t_next.min(r.arrival_ms);
+        }
+        if !queue.is_empty() {
+            if lane_free > now {
+                t_next = t_next.min(lane_free);
+            }
+            if let Some(t) = wait_hint {
+                t_next = t_next.min(t);
+            }
+        }
+        if !t_next.is_finite() {
+            break;
+        }
+        debug_assert!(t_next > now, "virtual clock must advance ({t_next} vs {now})");
+        now = t_next;
+    }
+
+    let map_25 = if exec_ok && !gts.is_empty() {
+        Some(eval_map(&dets, &gts, planner.manifest().num_class(), 0.25).map)
+    } else {
+        None
+    };
+    let makespan_s = (makespan_ms / 1000.0).max(sc.load.duration_ms / 1000.0).max(1e-9);
+    let report = ServeTrafficReport {
+        scenario: sc.name.clone(),
+        pattern: sc.load.pattern.name(),
+        policy: sc.policy.name(),
+        offered_rps: sc.load.pattern.mean_rps(),
+        capacity_rps: planner.capacity_rps(&sc.configs[0], sc.num_points, sc.batch.max_batch),
+        duration_s: sc.load.duration_ms / 1000.0,
+        makespan_s,
+        arrivals: total,
+        completed,
+        on_time,
+        rejected_full: queue.stats.rejected_full as usize,
+        expired: queue.stats.expired as usize,
+        shed_slo,
+        degraded,
+        batches,
+        mean_batch: if batches > 0 { batched_reqs as f64 / batches as f64 } else { 0.0 },
+        latency_ms: Stats::from(lat),
+        queue_wait_ms: Stats::from(qwait),
+        slo_attainment: if total > 0 { on_time as f64 / total as f64 } else { 1.0 },
+        goodput_rps: on_time as f64 / makespan_s,
+        util_gpu: busy_gpu / 1000.0 / makespan_s,
+        util_npu: busy_npu / 1000.0 / makespan_s,
+        max_queue_depth: queue.stats.max_depth,
+        map_25,
+    };
+    (report, outcomes)
+}
+
+/// Run a scenario and return just the report.
+pub fn run_traffic(
+    sc: &TrafficScenario,
+    planner: &ServicePlanner,
+    exec: Option<&PipelineExecutor>,
+) -> ServeTrafficReport {
+    run_traffic_trace(sc, planner, exec).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Schedule, Variant};
+    use crate::serving::loadgen::ArrivalPattern;
+    use crate::sim::DeviceKind;
+
+    fn scenario(rate_mult: f64, policy: SloPolicy, seed: u64) -> TrafficScenario {
+        let cfg = DetectorConfig::new(
+            "synrgbd",
+            Variant::PointSplit,
+            true,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        );
+        let planner = ServicePlanner::synthetic();
+        let cap = planner.capacity_rps(&cfg, 2048, 4);
+        TrafficScenario {
+            name: format!("test-{rate_mult}x"),
+            configs: vec![cfg],
+            num_points: 2048,
+            load: LoadGen::simple(
+                ArrivalPattern::Poisson { rate_rps: cap * rate_mult },
+                20_000.0,
+                2_000.0,
+                seed,
+            ),
+            queue_capacity: 32,
+            batch: BatchPolicy { max_batch: 4, max_wait_ms: 25.0 },
+            policy,
+        }
+    }
+
+    #[test]
+    fn underload_meets_slo() {
+        let planner = ServicePlanner::synthetic();
+        let sc = scenario(0.25, SloPolicy::None, 3);
+        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+        assert_eq!(outcomes.len(), rep.arrivals);
+        assert!(rep.arrivals > 0);
+        assert!(rep.slo_attainment > 0.9, "underload attainment {}", rep.slo_attainment);
+        assert_eq!(rep.completed + rep.rejected_full + rep.expired + rep.shed_slo, rep.arrivals);
+        assert!(rep.map_25.is_none());
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let planner = ServicePlanner::synthetic();
+        let sc = scenario(1.2, SloPolicy::Degrade, 9);
+        let a = run_traffic(&sc, &planner, None);
+        let b = run_traffic(&sc, &planner, None);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.on_time, b.on_time);
+        assert_eq!(a.latency_ms.p99, b.latency_ms.p99);
+    }
+
+    #[test]
+    fn overload_policy_beats_none() {
+        let planner = ServicePlanner::synthetic();
+        let none = run_traffic(&scenario(2.0, SloPolicy::None, 17), &planner, None);
+        let deg = run_traffic(&scenario(2.0, SloPolicy::Degrade, 17), &planner, None);
+        assert!(
+            deg.goodput_rps > none.goodput_rps,
+            "degradation must raise goodput under 2x overload: {} vs {}",
+            deg.goodput_rps,
+            none.goodput_rps
+        );
+        assert!(deg.degraded > 0, "2x overload must trigger degradation");
+    }
+
+    #[test]
+    fn overload_batches_grow() {
+        let planner = ServicePlanner::synthetic();
+        let under = run_traffic(&scenario(0.3, SloPolicy::None, 21), &planner, None);
+        let over = run_traffic(&scenario(1.8, SloPolicy::None, 21), &planner, None);
+        assert!(
+            over.mean_batch > under.mean_batch,
+            "queueing pressure should fill batches: {} vs {}",
+            over.mean_batch,
+            under.mean_batch
+        );
+    }
+}

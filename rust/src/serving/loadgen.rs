@@ -1,0 +1,335 @@
+//! Open-loop arrival generators: Poisson, bursty (2-state MMPP), and a
+//! diurnal ramp, emitting timestamped scene requests with deadlines.
+//!
+//! Open-loop means arrivals do not wait for completions — exactly the regime
+//! where queueing delay and overload behaviour appear (a closed loop can
+//! never drive the system past 100% utilization). Everything is generated
+//! from the deterministic [`Rng`], so a scenario is a pure function of its
+//! seed: reports are reproducible and policies can be A/B-compared on the
+//! *identical* arrival trace.
+
+use crate::util::rng::Rng;
+
+/// One inbound detection request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Monotonically increasing arrival index (ids order arrivals).
+    pub id: u64,
+    /// Arrival timestamp on the simulated clock, ms.
+    pub arrival_ms: f64,
+    /// Absolute deadline on the simulated clock, ms.
+    pub deadline_ms: f64,
+    /// Scene seed (which synthetic scene this request asks about).
+    pub seed: u64,
+    /// Priority class: 0 is served first; FIFO within a class.
+    pub class: usize,
+    /// Index into the scenario's detector-config list — the batching
+    /// compatibility key (same dataset + precision variant batch together).
+    pub key: usize,
+}
+
+/// Arrival process shapes. Rates are requests per second of simulated time.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalPattern {
+    /// Memoryless arrivals at a constant rate.
+    Poisson { rate_rps: f64 },
+    /// Two-state Markov-modulated Poisson process: calm at `base_rps`,
+    /// bursts at `burst_rps`; exponential dwell times in each state.
+    Bursty { base_rps: f64, burst_rps: f64, mean_burst_ms: f64, mean_calm_ms: f64 },
+    /// Sinusoidal rate ramp between `base_rps` and `peak_rps` with the given
+    /// period (a day compressed to seconds), sampled by thinning.
+    Diurnal { base_rps: f64, peak_rps: f64, period_s: f64 },
+}
+
+impl ArrivalPattern {
+    /// Long-run average arrival rate (for load accounting / reports).
+    pub fn mean_rps(&self) -> f64 {
+        match *self {
+            ArrivalPattern::Poisson { rate_rps } => rate_rps,
+            ArrivalPattern::Bursty { base_rps, burst_rps, mean_burst_ms, mean_calm_ms } => {
+                (base_rps * mean_calm_ms + burst_rps * mean_burst_ms)
+                    / (mean_calm_ms + mean_burst_ms)
+            }
+            ArrivalPattern::Diurnal { base_rps, peak_rps, .. } => (base_rps + peak_rps) / 2.0,
+        }
+    }
+
+    /// Scale every rate by `f` (offered-load sweeps).
+    pub fn scaled(&self, f: f64) -> ArrivalPattern {
+        match *self {
+            ArrivalPattern::Poisson { rate_rps } => {
+                ArrivalPattern::Poisson { rate_rps: rate_rps * f }
+            }
+            ArrivalPattern::Bursty { base_rps, burst_rps, mean_burst_ms, mean_calm_ms } => {
+                ArrivalPattern::Bursty {
+                    base_rps: base_rps * f,
+                    burst_rps: burst_rps * f,
+                    mean_burst_ms,
+                    mean_calm_ms,
+                }
+            }
+            ArrivalPattern::Diurnal { base_rps, peak_rps, period_s } => {
+                ArrivalPattern::Diurnal { base_rps: base_rps * f, peak_rps: peak_rps * f, period_s }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Poisson { .. } => "poisson",
+            ArrivalPattern::Bursty { .. } => "bursty",
+            ArrivalPattern::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// Traffic generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    pub pattern: ArrivalPattern,
+    /// Length of the arrival window, ms (completions may run past it).
+    pub duration_ms: f64,
+    /// Relative deadline granted to every request, ms after arrival.
+    pub deadline_ms: f64,
+    /// Fraction of requests in the high-priority class 0 (rest class 1).
+    pub hi_frac: f64,
+    /// Mix weights over the scenario's detector configs (batch keys).
+    pub mix: Vec<f64>,
+    /// Base seed: both the arrival trace and the per-request scene seeds.
+    pub seed: u64,
+}
+
+impl LoadGen {
+    /// Single-config, single-class trace (the common case).
+    pub fn simple(pattern: ArrivalPattern, duration_ms: f64, deadline_ms: f64, seed: u64) -> LoadGen {
+        LoadGen { pattern, duration_ms, deadline_ms, hi_frac: 0.0, mix: vec![1.0], seed }
+    }
+
+    /// Generate the arrival trace, sorted by arrival time.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed ^ 0x5EED_7AFF);
+        let times = match self.pattern {
+            ArrivalPattern::Poisson { rate_rps } => {
+                poisson_times(&mut rng, rate_rps, self.duration_ms)
+            }
+            ArrivalPattern::Bursty { base_rps, burst_rps, mean_burst_ms, mean_calm_ms } => {
+                mmpp_times(&mut rng, base_rps, burst_rps, mean_burst_ms, mean_calm_ms, self.duration_ms)
+            }
+            ArrivalPattern::Diurnal { base_rps, peak_rps, period_s } => {
+                diurnal_times(&mut rng, base_rps, peak_rps, period_s * 1000.0, self.duration_ms)
+            }
+        };
+        times
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| Request {
+                id: i as u64,
+                arrival_ms: t,
+                deadline_ms: t + self.deadline_ms,
+                seed: self.seed.wrapping_mul(0x9E37).wrapping_add(i as u64),
+                class: if rng.f64() < self.hi_frac { 0 } else { 1 },
+                key: if self.mix.len() > 1 { rng.weighted(&self.mix) } else { 0 },
+            })
+            .collect()
+    }
+}
+
+/// Exponential inter-arrival sample for a rate in events/sec, returned in ms.
+fn exp_gap_ms(rng: &mut Rng, rate_rps: f64) -> f64 {
+    debug_assert!(rate_rps > 0.0);
+    -(1.0 - rng.f64()).ln() / rate_rps * 1000.0
+}
+
+fn poisson_times(rng: &mut Rng, rate_rps: f64, duration_ms: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    if rate_rps <= 0.0 {
+        return out;
+    }
+    let mut t = exp_gap_ms(rng, rate_rps);
+    while t < duration_ms {
+        out.push(t);
+        t += exp_gap_ms(rng, rate_rps);
+    }
+    out
+}
+
+fn mmpp_times(
+    rng: &mut Rng,
+    base_rps: f64,
+    burst_rps: f64,
+    mean_burst_ms: f64,
+    mean_calm_ms: f64,
+    duration_ms: f64,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    let mut bursting = false;
+    // exponential dwell in the current state, then switch
+    let mut state_end = exp_gap_ms(rng, 1000.0 / mean_calm_ms);
+    while t < duration_ms {
+        let rate = if bursting { burst_rps } else { base_rps };
+        let next = if rate > 0.0 { t + exp_gap_ms(rng, rate) } else { f64::INFINITY };
+        if next < state_end {
+            t = next;
+            if t < duration_ms {
+                out.push(t);
+            }
+        } else {
+            t = state_end;
+            bursting = !bursting;
+            let mean = if bursting { mean_burst_ms } else { mean_calm_ms };
+            state_end = t + exp_gap_ms(rng, 1000.0 / mean);
+        }
+    }
+    out
+}
+
+/// Lewis–Shedler thinning against the peak rate.
+fn diurnal_times(
+    rng: &mut Rng,
+    base_rps: f64,
+    peak_rps: f64,
+    period_ms: f64,
+    duration_ms: f64,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    let lambda_max = peak_rps.max(base_rps);
+    if lambda_max <= 0.0 {
+        return out;
+    }
+    let rate_at = |t_ms: f64| -> f64 {
+        let phase = (t_ms / period_ms) * std::f64::consts::TAU;
+        base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos())
+    };
+    let mut t = 0.0f64;
+    loop {
+        t += exp_gap_ms(rng, lambda_max);
+        if t >= duration_ms {
+            break;
+        }
+        if rng.f64() * lambda_max < rate_at(t) {
+            out.push(t);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_of(pattern: ArrivalPattern, duration_ms: f64, seed: u64) -> usize {
+        LoadGen::simple(pattern, duration_ms, 500.0, seed).generate().len()
+    }
+
+    #[test]
+    fn poisson_rate_matches() {
+        // 20 rps over 50 simulated seconds -> ~1000 arrivals
+        let n = count_of(ArrivalPattern::Poisson { rate_rps: 20.0 }, 50_000.0, 1);
+        assert!((800..1200).contains(&n), "got {n}");
+    }
+
+    #[test]
+    fn arrivals_sorted_with_deadlines() {
+        let reqs = LoadGen::simple(ArrivalPattern::Poisson { rate_rps: 50.0 }, 5_000.0, 300.0, 7)
+            .generate();
+        assert!(!reqs.is_empty());
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+            assert!(w[0].id < w[1].id);
+        }
+        for r in &reqs {
+            assert!((r.deadline_ms - r.arrival_ms - 300.0).abs() < 1e-9);
+            assert!(r.arrival_ms < 5_000.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mk = || {
+            LoadGen::simple(ArrivalPattern::Bursty {
+                base_rps: 5.0,
+                burst_rps: 50.0,
+                mean_burst_ms: 400.0,
+                mean_calm_ms: 1600.0,
+            }, 20_000.0, 500.0, 42)
+            .generate()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.seed, y.seed);
+        }
+    }
+
+    #[test]
+    fn bursty_mean_rate_near_nominal() {
+        let p = ArrivalPattern::Bursty {
+            base_rps: 5.0,
+            burst_rps: 45.0,
+            mean_burst_ms: 500.0,
+            mean_calm_ms: 1500.0,
+        };
+        // mean = (5*1500 + 45*500) / 2000 = 15 rps
+        assert!((p.mean_rps() - 15.0).abs() < 1e-9);
+        let n = count_of(p, 100_000.0, 3);
+        let measured = n as f64 / 100.0;
+        assert!((measured - 15.0).abs() < 4.0, "measured {measured} rps");
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // dispersion of per-second counts: MMPP must exceed Poisson
+        let disp = |pattern: ArrivalPattern| {
+            let reqs = LoadGen::simple(pattern, 100_000.0, 500.0, 11).generate();
+            let mut counts = vec![0.0f64; 100];
+            for r in &reqs {
+                counts[(r.arrival_ms / 1000.0) as usize % 100] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / 100.0;
+            let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / 100.0;
+            var / mean.max(1e-9)
+        };
+        let poisson = disp(ArrivalPattern::Poisson { rate_rps: 15.0 });
+        let bursty = disp(ArrivalPattern::Bursty {
+            base_rps: 5.0,
+            burst_rps: 45.0,
+            mean_burst_ms: 500.0,
+            mean_calm_ms: 1500.0,
+        });
+        assert!(bursty > poisson * 1.5, "bursty {bursty:.2} vs poisson {poisson:.2}");
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_period() {
+        let reqs = LoadGen::simple(
+            ArrivalPattern::Diurnal { base_rps: 2.0, peak_rps: 40.0, period_s: 100.0 },
+            100_000.0,
+            500.0,
+            5,
+        )
+        .generate();
+        let mid = reqs.iter().filter(|r| (25_000.0..75_000.0).contains(&r.arrival_ms)).count();
+        let edge = reqs.len() - mid;
+        assert!(mid > 2 * edge, "mid {mid} vs edge {edge}");
+    }
+
+    #[test]
+    fn mix_and_priority_assignment() {
+        let mut lg = LoadGen::simple(ArrivalPattern::Poisson { rate_rps: 40.0 }, 30_000.0, 500.0, 9);
+        lg.hi_frac = 0.3;
+        lg.mix = vec![3.0, 1.0];
+        let reqs = lg.generate();
+        let hi = reqs.iter().filter(|r| r.class == 0).count() as f64 / reqs.len() as f64;
+        let k0 = reqs.iter().filter(|r| r.key == 0).count() as f64 / reqs.len() as f64;
+        assert!((hi - 0.3).abs() < 0.08, "hi frac {hi}");
+        assert!((k0 - 0.75).abs() < 0.08, "key0 frac {k0}");
+    }
+
+    #[test]
+    fn scaled_scales_mean() {
+        let p = ArrivalPattern::Poisson { rate_rps: 10.0 };
+        assert!((p.scaled(1.7).mean_rps() - 17.0).abs() < 1e-12);
+    }
+}

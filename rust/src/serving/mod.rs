@@ -1,0 +1,37 @@
+//! Open-loop traffic gateway: admission control, dynamic batching, and
+//! SLO-aware degradation on top of the per-scene pipeline.
+//!
+//! The closed-loop `coordinator::serve` answers "how fast can this box chew
+//! through N scenes"; this subsystem answers the serving question the
+//! ROADMAP's north star actually poses: requests *arrive on their own
+//! clock*, queues build, deadlines pass, and the system must decide what to
+//! run, what to coalesce, and what to drop. The pieces compose left to
+//! right:
+//!
+//! ```text
+//!  loadgen ─▶ queue ─▶ batcher ─▶ slo ─▶ dispatch ─▶ plan/ScheduleSim
+//!  (Poisson,  (bounded  (size/age  (degrade (virtual-   (calibrated
+//!   MMPP,      +prio,    window,    /shed)   time two-    GPU/NPU
+//!   diurnal)   drops)    per key)            lane loop)   timeline)
+//! ```
+//!
+//! All time in the gateway is **simulated milliseconds** on the calibrated
+//! device model: a request's end-to-end latency is its queueing delay plus
+//! batch-formation delay plus the `sim::ScheduleSim` makespan of the batch
+//! it rode in. That means overload behaviour (p99 blow-up, goodput
+//! collapse, the win from degradation) reflects the paper's hardware, not
+//! the host this binary happens to run on. See `docs/SERVING.md`.
+
+pub mod batcher;
+pub mod dispatch;
+pub mod loadgen;
+pub mod plan;
+pub mod queue;
+pub mod slo;
+
+pub use batcher::{Batch, BatchPolicy};
+pub use dispatch::{run_traffic, ServeTrafficReport, TrafficScenario};
+pub use loadgen::{ArrivalPattern, LoadGen, Request};
+pub use plan::{PlanCost, ServicePlanner};
+pub use queue::{AdmissionQueue, AdmitResult, QueueStats};
+pub use slo::SloPolicy;

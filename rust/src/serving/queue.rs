@@ -1,0 +1,224 @@
+//! Bounded admission queue with priority classes, deadline expiry, and
+//! drop/timeout accounting.
+//!
+//! This is the gateway's only waiting room: a request is either in here, in
+//! flight on the accelerators, or already resolved (completed / rejected /
+//! expired / shed). Admission is a hard bound — when the queue is full the
+//! request is rejected immediately (fail fast beats unbounded latency).
+//! Within a priority class, order is strictly FIFO; across classes, lower
+//! class index pops first. Both invariants are property-tested in
+//! `rust/tests/proptests.rs`.
+
+use std::collections::VecDeque;
+
+use super::loadgen::Request;
+
+/// Outcome of an admission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitResult {
+    Admitted,
+    /// Queue at capacity — request dropped at the door.
+    RejectedFull,
+}
+
+/// Counters accumulated over the queue's lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueStats {
+    pub admitted: u64,
+    pub rejected_full: u64,
+    /// Admitted but removed unserved because the deadline passed in queue.
+    pub expired: u64,
+    /// High-water mark of instantaneous depth.
+    pub max_depth: usize,
+}
+
+/// Bounded multi-class FIFO.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    capacity: usize,
+    classes: Vec<VecDeque<Request>>,
+    len: usize,
+    pub stats: QueueStats,
+}
+
+impl AdmissionQueue {
+    /// A queue holding at most `capacity` requests across `num_classes`
+    /// priority classes (class 0 pops first).
+    pub fn new(capacity: usize, num_classes: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            capacity,
+            classes: (0..num_classes.max(1)).map(|_| VecDeque::new()).collect(),
+            len: 0,
+            stats: QueueStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit or reject a request. Out-of-range classes clamp to the lowest
+    /// priority rather than panicking (the load generator owns class ids).
+    pub fn offer(&mut self, req: Request) -> AdmitResult {
+        if self.len >= self.capacity {
+            self.stats.rejected_full += 1;
+            return AdmitResult::RejectedFull;
+        }
+        let class = req.class.min(self.classes.len() - 1);
+        self.classes[class].push_back(req);
+        self.len += 1;
+        self.stats.admitted += 1;
+        self.stats.max_depth = self.stats.max_depth.max(self.len);
+        AdmitResult::Admitted
+    }
+
+    /// Remove and return every queued request whose deadline is already
+    /// behind `now_ms` (they could not possibly be served on time).
+    pub fn expire(&mut self, now_ms: f64) -> Vec<Request> {
+        let mut dead = Vec::new();
+        for q in &mut self.classes {
+            let mut keep = VecDeque::with_capacity(q.len());
+            for r in q.drain(..) {
+                if r.deadline_ms <= now_ms {
+                    dead.push(r);
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            *q = keep;
+        }
+        self.len -= dead.len();
+        self.stats.expired += dead.len() as u64;
+        dead
+    }
+
+    /// Pop the head request: highest priority class first, FIFO within.
+    pub fn pop(&mut self) -> Option<Request> {
+        for q in &mut self.classes {
+            if let Some(r) = q.pop_front() {
+                self.len -= 1;
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// The request that [`pop`](Self::pop) would return, without removing it.
+    pub fn peek(&self) -> Option<&Request> {
+        self.classes.iter().find_map(|q| q.front())
+    }
+
+    /// Earliest arrival time among queued requests with the given batch key
+    /// (how long the oldest compatible request has been waiting).
+    pub fn oldest_arrival_for_key(&self, key: usize) -> Option<f64> {
+        self.classes
+            .iter()
+            .flat_map(|q| q.iter())
+            .filter(|r| r.key == key)
+            .map(|r| r.arrival_ms)
+            .reduce(f64::min)
+    }
+
+    /// Number of queued requests with the given batch key.
+    pub fn count_key(&self, key: usize) -> usize {
+        self.classes.iter().flat_map(|q| q.iter()).filter(|r| r.key == key).count()
+    }
+
+    /// Pop up to `max` requests with the given key, preserving class
+    /// priority and per-class FIFO order.
+    pub fn pop_key(&mut self, key: usize, max: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        for q in &mut self.classes {
+            while out.len() < max {
+                // find the first entry of this key in the class
+                let Some(pos) = q.iter().position(|r| r.key == key) else { break };
+                // everything before `pos` has a different key; removing at
+                // pos keeps the remaining same-key entries in FIFO order
+                out.push(q.remove(pos).expect("position just found"));
+            }
+            if out.len() >= max {
+                break;
+            }
+        }
+        self.len -= out.len();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, class: usize, key: usize, arrival: f64, deadline: f64) -> Request {
+        Request { id, arrival_ms: arrival, deadline_ms: deadline, seed: id, class, key }
+    }
+
+    #[test]
+    fn rejects_at_capacity() {
+        let mut q = AdmissionQueue::new(2, 2);
+        assert_eq!(q.offer(req(0, 0, 0, 0.0, 10.0)), AdmitResult::Admitted);
+        assert_eq!(q.offer(req(1, 1, 0, 1.0, 10.0)), AdmitResult::Admitted);
+        assert_eq!(q.offer(req(2, 0, 0, 2.0, 10.0)), AdmitResult::RejectedFull);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.stats.rejected_full, 1);
+        assert_eq!(q.stats.max_depth, 2);
+    }
+
+    #[test]
+    fn priority_then_fifo() {
+        let mut q = AdmissionQueue::new(8, 2);
+        q.offer(req(0, 1, 0, 0.0, 99.0));
+        q.offer(req(1, 0, 0, 1.0, 99.0));
+        q.offer(req(2, 1, 0, 2.0, 99.0));
+        q.offer(req(3, 0, 0, 3.0, 99.0));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn expiry_removes_stale() {
+        let mut q = AdmissionQueue::new(8, 1);
+        q.offer(req(0, 0, 0, 0.0, 5.0));
+        q.offer(req(1, 0, 0, 0.0, 50.0));
+        let dead = q.expire(10.0);
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].id, 0);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.stats.expired, 1);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn pop_key_skips_other_keys_in_order() {
+        let mut q = AdmissionQueue::new(8, 1);
+        q.offer(req(0, 0, 1, 0.0, 99.0));
+        q.offer(req(1, 0, 0, 1.0, 99.0));
+        q.offer(req(2, 0, 1, 2.0, 99.0));
+        q.offer(req(3, 0, 1, 3.0, 99.0));
+        let got: Vec<u64> = q.pop_key(1, 2).into_iter().map(|r| r.id).collect();
+        assert_eq!(got, vec![0, 2]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.count_key(1), 1);
+        assert_eq!(q.oldest_arrival_for_key(0), Some(1.0));
+        // remaining entries intact and ordered
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 3);
+    }
+
+    #[test]
+    fn pop_key_respects_class_priority() {
+        let mut q = AdmissionQueue::new(8, 2);
+        q.offer(req(0, 1, 0, 0.0, 99.0));
+        q.offer(req(1, 0, 0, 1.0, 99.0));
+        let got: Vec<u64> = q.pop_key(0, 2).into_iter().map(|r| r.id).collect();
+        assert_eq!(got, vec![1, 0], "class 0 first even though it arrived later");
+    }
+}

@@ -1,0 +1,188 @@
+//! Deadline-aware dispatch policies: degrade gracefully under pressure,
+//! shed what cannot be saved.
+//!
+//! At dispatch time the gateway knows (from the [`plan`](super::plan)
+//! cache) what a batch will cost on the full configuration and on the
+//! degraded fast path. The policy compares predicted completion against the
+//! batch's deadlines and picks one of three moves:
+//!
+//! - run **full** quality when it still makes every deadline it can make,
+//! - **degrade** — int8 backbone + role-quantized heads, consecutive
+//!   matching (2D segmentation reused, paper §3.2), and a halved point
+//!   budget (attacks the GPU point-manipulation lane, which dominates the
+//!   critical path) — when full quality would blow deadlines the fast path
+//!   can still meet,
+//! - **shed** requests that even the fast path cannot save, so the
+//!   accelerators never burn time on work that is already dead (doing so is
+//!   what collapses goodput in the no-policy baseline).
+
+use crate::coordinator::DetectorConfig;
+
+use super::loadgen::Request;
+
+/// Overload-response policy of the gateway.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloPolicy {
+    /// Dispatch everything at full quality, deadlines be damned (baseline).
+    None,
+    /// Drop requests whose deadline the full-quality path would miss; never
+    /// change quality.
+    Shed,
+    /// Prefer the degraded fast path when it saves deadlines; shed only what
+    /// even degradation cannot save.
+    Degrade,
+}
+
+impl SloPolicy {
+    pub fn parse(s: &str) -> Option<SloPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(SloPolicy::None),
+            "shed" => Some(SloPolicy::Shed),
+            "degrade" | "slo" => Some(SloPolicy::Degrade),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloPolicy::None => "none",
+            SloPolicy::Shed => "shed",
+            SloPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// The degraded fast path for a configuration: full INT8 (EdgeTPU-eligible),
+/// role-quantized heads (the paper's accuracy-preserving scheme), and 2D
+/// segmentation reuse. The planner is additionally given `skip_seg = true`
+/// and the reduced [`degraded_points`] budget.
+pub fn degraded_config(cfg: &DetectorConfig) -> DetectorConfig {
+    let mut fast = cfg.clone();
+    fast.precision_backbone = "int8".to_string();
+    fast.precision_head = "int8_role".to_string();
+    fast
+}
+
+/// Point budget of the degraded fast path: half the cloud, floored so the
+/// SA hierarchy (SA1 samples 256 centroids) stays well-posed.
+pub fn degraded_points(num_points: usize) -> usize {
+    (num_points / 2).max(512)
+}
+
+/// Outcome of the policy decision for one batch.
+#[derive(Debug)]
+pub struct SloDecision {
+    /// Requests to dispatch now (empty means the whole batch was shed).
+    pub dispatch: Vec<Request>,
+    /// Whether the dispatched work runs on the degraded fast path.
+    pub degraded: bool,
+    /// Requests dropped because no available path meets their deadline.
+    pub shed: Vec<Request>,
+}
+
+/// Apply `policy` to a batch at time `now_ms`, given the predicted service
+/// times of the full and degraded paths.
+///
+/// Predictions are for the batch as formed; after shedding, the remaining
+/// smaller batch can only finish sooner, so decisions err conservative.
+pub fn apply(
+    policy: SloPolicy,
+    reqs: Vec<Request>,
+    now_ms: f64,
+    full_ms: f64,
+    fast_ms: f64,
+) -> SloDecision {
+    match policy {
+        SloPolicy::None => SloDecision { dispatch: reqs, degraded: false, shed: Vec::new() },
+        SloPolicy::Shed => {
+            let done = now_ms + full_ms;
+            let (keep, shed) = reqs.into_iter().partition(|r| r.deadline_ms >= done);
+            SloDecision { dispatch: keep, degraded: false, shed }
+        }
+        SloPolicy::Degrade => {
+            let full_done = now_ms + full_ms;
+            let all_make_full = reqs.iter().all(|r| r.deadline_ms >= full_done);
+            if all_make_full {
+                return SloDecision { dispatch: reqs, degraded: false, shed: Vec::new() };
+            }
+            // full quality would miss someone: try the fast path
+            let fast_done = now_ms + fast_ms;
+            let (keep, shed): (Vec<Request>, Vec<Request>) =
+                reqs.into_iter().partition(|r| r.deadline_ms >= fast_done);
+            SloDecision { dispatch: keep, degraded: true, shed }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Schedule, Variant};
+    use crate::sim::DeviceKind;
+
+    fn req(id: u64, deadline: f64) -> Request {
+        Request { id, arrival_ms: 0.0, deadline_ms: deadline, seed: id, class: 0, key: 0 }
+    }
+
+    #[test]
+    fn none_dispatches_everything() {
+        let d = apply(SloPolicy::None, vec![req(0, 1.0), req(1, 2.0)], 100.0, 50.0, 20.0);
+        assert_eq!(d.dispatch.len(), 2);
+        assert!(!d.degraded);
+        assert!(d.shed.is_empty());
+    }
+
+    #[test]
+    fn shed_drops_doomed_only() {
+        let d = apply(SloPolicy::Shed, vec![req(0, 120.0), req(1, 200.0)], 100.0, 50.0, 20.0);
+        assert_eq!(d.dispatch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(d.shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert!(!d.degraded);
+    }
+
+    #[test]
+    fn degrade_prefers_full_when_safe() {
+        let d = apply(SloPolicy::Degrade, vec![req(0, 200.0)], 100.0, 50.0, 20.0);
+        assert!(!d.degraded);
+        assert_eq!(d.dispatch.len(), 1);
+    }
+
+    #[test]
+    fn degrade_switches_when_full_misses() {
+        let d = apply(SloPolicy::Degrade, vec![req(0, 130.0), req(1, 300.0)], 100.0, 50.0, 20.0);
+        assert!(d.degraded, "req 0 misses full (150) but makes fast (120)");
+        assert_eq!(d.dispatch.len(), 2);
+        assert!(d.shed.is_empty());
+    }
+
+    #[test]
+    fn degrade_sheds_the_unsavable() {
+        let d = apply(SloPolicy::Degrade, vec![req(0, 110.0), req(1, 300.0)], 100.0, 50.0, 20.0);
+        assert!(d.degraded);
+        assert_eq!(d.dispatch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(d.shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn degraded_config_is_int8_role_fast_path() {
+        let cfg = DetectorConfig::new(
+            "synrgbd",
+            Variant::PointSplit,
+            false,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        );
+        let fast = degraded_config(&cfg);
+        assert_eq!(fast.precision_backbone, "int8");
+        assert_eq!(fast.precision_head, "int8_role");
+        assert!(fast.int8());
+        assert_eq!(fast.dataset, cfg.dataset);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [SloPolicy::None, SloPolicy::Shed, SloPolicy::Degrade] {
+            assert_eq!(SloPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SloPolicy::parse("bogus"), None);
+    }
+}

@@ -154,7 +154,7 @@ impl ScheduleSim {
                 let t_comm = link_dev.transfer_ms(xfer_bytes);
                 let free = dev_free.get(&res_key(s)).copied().unwrap_or(0.0);
                 let start = deps_ready.max(free);
-                if best.map_or(true, |(bs, _, bi, _)| start < bs || (start == bs && i < bi)) {
+                if best.is_none_or(|(bs, _, bi, _)| start < bs || (start == bs && i < bi)) {
                     best = Some((start, t_comm, i, xfer_bytes));
                 }
             }

@@ -4,4 +4,5 @@
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod stats;
 pub mod tensor;

@@ -1,0 +1,88 @@
+//! Latency summary statistics shared by the closed-loop serve report and the
+//! open-loop traffic gateway (single source of the percentile convention).
+
+/// Summary of a latency (or any scalar) sample set, in the sample's unit.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Index-based percentile over an ascending-sorted slice: `xs[n*q/100]`,
+/// clamped to the last element (the seed convention — nearest-rank, no
+/// interpolation). Returns 0 for an empty slice.
+pub fn percentile(sorted: &[f64], q: usize) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    sorted[(n * q / 100).min(n - 1)]
+}
+
+impl Stats {
+    /// Summarize a sample set (consumes and sorts it).
+    // the seed crate established `Stats::from(samples)` as the call-site
+    // idiom; keep it rather than a `From` impl
+    #[allow(clippy::should_implement_trait)]
+    pub fn from(mut xs: Vec<f64>) -> Stats {
+        if xs.is_empty() {
+            return Stats::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        Stats {
+            mean: xs.iter().sum::<f64>() / n as f64,
+            p50: percentile(&xs, 50),
+            p95: percentile(&xs, 95),
+            p99: percentile(&xs, 99),
+            min: xs[0],
+            max: xs[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroed() {
+        let s = Stats::from(Vec::new());
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Stats::from(xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1000.0);
+        assert_eq!(s.p50, 501.0); // index n/2 of 1..=1000
+        assert_eq!(s.p95, 951.0);
+        assert_eq!(s.p99, 991.0);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.mean - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_seed_indexing_convention() {
+        // seed code used xs[n/2] and xs[(n*95/100).min(n-1)]
+        let xs = vec![3.0, 1.0, 2.0];
+        let s = Stats::from(xs);
+        assert_eq!(s.p50, 2.0); // sorted [1,2,3], index 3/2 = 1
+        assert_eq!(s.p95, 3.0); // index min(2,2)
+    }
+
+    #[test]
+    fn singleton() {
+        let s = Stats::from(vec![7.5]);
+        assert_eq!(s.mean, 7.5);
+        assert_eq!(s.p50, 7.5);
+        assert_eq!(s.p99, 7.5);
+    }
+}

@@ -1,10 +1,16 @@
 //! Property-based tests over the coordinator substrates (custom harness in
 //! util::prop — proptest is not vendored).
 
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
 use pointsplit::data::Box3;
 use pointsplit::eval::{eval_map, iou3d, nms3d, Detection};
 use pointsplit::pointops::{ball_query, biased_fps, fps};
 use pointsplit::quant::{channel_minmax, partition, qdq_mse, ActQuant, Granularity};
+use pointsplit::serving::dispatch::{run_traffic_trace, OutcomeKind, TrafficScenario};
+use pointsplit::serving::{
+    AdmissionQueue, AdmitResult, ArrivalPattern, BatchPolicy, LoadGen, Request, ServicePlanner,
+    SloPolicy,
+};
 use pointsplit::sim::{DeviceKind, Precision, ScheduleSim, StageSpec, Workload, WorkloadKind};
 use pointsplit::util::prop::{check, gen_box, gen_cloud, PropConfig};
 use pointsplit::util::tensor::Tensor;
@@ -276,6 +282,147 @@ fn prop_pipelined_never_slower_than_chained() {
         let ts = sim.run(&ser).total_ms;
         if tp > ts + 1e-6 {
             return Err(format!("parallel {tp} slower than serialized {ts}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// serving: admission queue + dispatcher invariants (ISSUE 1 satellite)
+// ---------------------------------------------------------------------------
+
+fn mk_req(id: u64, arrival: f64, deadline: f64, class: usize, key: usize) -> Request {
+    Request { id, arrival_ms: arrival, deadline_ms: deadline, seed: id, class, key }
+}
+
+#[test]
+fn prop_admission_queue_never_exceeds_capacity() {
+    check("queue-capacity", PropConfig { cases: 48, seed: 71 }, |rng, size| {
+        let cap = 1 + rng.below(size.max(2));
+        let mut q = AdmissionQueue::new(cap, 2);
+        let mut t = 0.0f64;
+        let (mut offered, mut accepted, mut rejected) = (0u64, 0u64, 0u64);
+        let (mut popped, mut expired) = (0u64, 0u64);
+        for _ in 0..size * 3 {
+            t += rng.f64() * 2.0;
+            match rng.below(4) {
+                0 | 1 => {
+                    let r = mk_req(offered, t, t + rng.f64() * 6.0, rng.below(2), rng.below(2));
+                    offered += 1;
+                    match q.offer(r) {
+                        AdmitResult::Admitted => accepted += 1,
+                        AdmitResult::RejectedFull => rejected += 1,
+                    }
+                }
+                2 => {
+                    if q.pop().is_some() {
+                        popped += 1;
+                    }
+                }
+                _ => expired += q.expire(t).len() as u64,
+            }
+            if q.len() > cap {
+                return Err(format!("depth {} exceeds capacity {cap}", q.len()));
+            }
+        }
+        if accepted + rejected != offered {
+            return Err("admission accounting leak".into());
+        }
+        if accepted != q.len() as u64 + popped + expired {
+            return Err(format!(
+                "conservation: accepted {accepted} != queued {} + popped {popped} + expired {expired}",
+                q.len()
+            ));
+        }
+        if q.stats.max_depth > cap {
+            return Err("max_depth exceeds capacity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_admission_queue_fifo_within_class() {
+    check("queue-fifo-per-class", PropConfig { cases: 48, seed: 73 }, |rng, size| {
+        let mut q = AdmissionQueue::new(size.max(4), 3);
+        let mut next_id = 0u64;
+        let mut popped: Vec<(usize, u64)> = Vec::new();
+        for step in 0..size * 2 {
+            if rng.f64() < 0.6 {
+                let r = mk_req(next_id, step as f64, 1e9, rng.below(3), 0);
+                next_id += 1;
+                q.offer(r);
+            } else if let Some(r) = q.pop() {
+                popped.push((r.class, r.id));
+            }
+        }
+        while let Some(r) = q.pop() {
+            popped.push((r.class, r.id));
+        }
+        // within each priority class, pop order must equal arrival (id) order
+        for class in 0..3 {
+            let ids: Vec<u64> = popped.iter().filter(|(c, _)| *c == class).map(|&(_, i)| i).collect();
+            for w in ids.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("class {class} popped out of order: {w:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatch_exactly_once() {
+    // every admitted request is exactly once dispatched or shed; every
+    // arrival resolves to exactly one terminal outcome
+    let planner = ServicePlanner::synthetic();
+    let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let cfg_a = DetectorConfig::new("synrgbd", Variant::PointSplit, true, sched);
+    let cfg_b = DetectorConfig::new("synrgbd", Variant::VoteNet, true, sched);
+    let base_cap = planner.capacity_rps(&cfg_a, 2048, 4);
+    check("dispatch-exactly-once", PropConfig { cases: 12, seed: 77 }, |rng, size| {
+        let policy = [SloPolicy::None, SloPolicy::Shed, SloPolicy::Degrade][rng.below(3)];
+        let mut load = LoadGen::simple(
+            ArrivalPattern::Poisson { rate_rps: base_cap * (0.3 + rng.f64() * 1.9) },
+            4_000.0 + (size as f64) * 100.0,
+            200.0 + rng.f64() * 1200.0,
+            rng.below(1 << 30) as u64,
+        );
+        load.hi_frac = rng.f64() * 0.5;
+        load.mix = vec![2.0, 1.0];
+        let sc = TrafficScenario {
+            name: "prop".into(),
+            configs: vec![cfg_a.clone(), cfg_b.clone()],
+            num_points: 2048,
+            load,
+            queue_capacity: 4 + rng.below(40),
+            batch: BatchPolicy { max_batch: 1 + rng.below(6), max_wait_ms: rng.f64() * 60.0 },
+            policy,
+        };
+        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+        if outcomes.len() != rep.arrivals {
+            return Err(format!("{} outcomes for {} arrivals", outcomes.len(), rep.arrivals));
+        }
+        let mut ids: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        for (expect, got) in ids.iter().enumerate() {
+            if expect as u64 != *got {
+                return Err(format!("outcome ids not exactly 0..n: saw {got} at {expect}"));
+            }
+        }
+        let completed = outcomes.iter().filter(|o| o.kind == OutcomeKind::Completed).count();
+        if completed != rep.completed {
+            return Err("report.completed disagrees with outcomes".into());
+        }
+        if rep.completed + rep.rejected_full + rep.expired + rep.shed_slo != rep.arrivals {
+            return Err(format!(
+                "terminal accounting: {} + {} + {} + {} != {}",
+                rep.completed, rep.rejected_full, rep.expired, rep.shed_slo, rep.arrivals
+            ));
+        }
+        if policy == SloPolicy::None && rep.shed_slo != 0 {
+            return Err("no-policy run must not shed".into());
         }
         Ok(())
     });

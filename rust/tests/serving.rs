@@ -1,0 +1,204 @@
+//! Integration tests for the open-loop traffic gateway: scenario plumbing,
+//! policy behaviour under load, and composition of queueing delay with the
+//! calibrated device timeline. Everything here runs on the synthetic
+//! manifest — no artifacts or PJRT backend required.
+
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::serving::dispatch::run_traffic_trace;
+use pointsplit::serving::{
+    run_traffic, ArrivalPattern, BatchPolicy, LoadGen, ServicePlanner, SloPolicy, TrafficScenario,
+};
+use pointsplit::sim::DeviceKind;
+
+fn split_cfg() -> DetectorConfig {
+    DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    )
+}
+
+fn scenario(
+    planner: &ServicePlanner,
+    pattern_of: impl Fn(f64) -> ArrivalPattern,
+    load_mult: f64,
+    policy: SloPolicy,
+    seed: u64,
+) -> TrafficScenario {
+    let cfg = split_cfg();
+    let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
+    let cap = planner.capacity_rps(&cfg, 2048, batch.max_batch);
+    TrafficScenario {
+        name: format!("it-{load_mult}x"),
+        configs: vec![cfg],
+        num_points: 2048,
+        load: LoadGen::simple(pattern_of(cap * load_mult), 30_000.0, 1_200.0, seed),
+        queue_capacity: 48,
+        batch,
+        policy,
+    }
+}
+
+fn poisson(rate: f64) -> ArrivalPattern {
+    ArrivalPattern::Poisson { rate_rps: rate }
+}
+
+fn bursty(rate: f64) -> ArrivalPattern {
+    // mean = (0.4r*6000 + 2.5r*2000) / 8000 = 0.925r
+    ArrivalPattern::Bursty {
+        base_rps: rate * 0.4,
+        burst_rps: rate * 2.5,
+        mean_burst_ms: 2_000.0,
+        mean_calm_ms: 6_000.0,
+    }
+}
+
+#[test]
+fn poisson_and_bursty_run_end_to_end() {
+    let planner = ServicePlanner::synthetic();
+    for pattern_of in [poisson as fn(f64) -> ArrivalPattern, bursty] {
+        let sc = scenario(&planner, pattern_of, 0.8, SloPolicy::Degrade, 5);
+        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+        assert!(rep.arrivals > 10, "{}: no traffic generated", rep.pattern);
+        assert_eq!(outcomes.len(), rep.arrivals);
+        assert!(rep.completed > 0);
+        assert!(rep.latency_ms.p50 > 0.0);
+        assert!(rep.latency_ms.p50 <= rep.latency_ms.p95);
+        assert!(rep.latency_ms.p95 <= rep.latency_ms.p99);
+        assert!(rep.makespan_s >= rep.duration_s);
+        assert!((0.0..=1.0).contains(&rep.slo_attainment));
+        assert!(rep.util_gpu >= 0.0 && rep.util_gpu <= 1.05, "GPU util {}", rep.util_gpu);
+        assert!(rep.util_npu >= 0.0 && rep.util_npu <= 1.05, "NPU util {}", rep.util_npu);
+        assert!(rep.map_25.is_none(), "no functional executor attached");
+    }
+}
+
+#[test]
+fn latency_includes_queueing_delay() {
+    // under heavy load, end-to-end latency must exceed pure service time:
+    // queueing + batching delay is charged into the simulated clock
+    let planner = ServicePlanner::synthetic();
+    let service = planner.cost(&split_cfg(), 2048, 4, false).total_ms;
+    let calm = run_traffic(&scenario(&planner, poisson, 0.2, SloPolicy::None, 11), &planner, None);
+    let busy = run_traffic(&scenario(&planner, poisson, 1.6, SloPolicy::None, 11), &planner, None);
+    assert!(
+        busy.latency_ms.p95 > calm.latency_ms.p95 + 0.25 * service,
+        "overload p95 ({:.0} ms) must reflect queueing beyond calm p95 ({:.0} ms)",
+        busy.latency_ms.p95,
+        calm.latency_ms.p95
+    );
+    assert!(busy.queue_wait_ms.p95 > calm.queue_wait_ms.p95);
+}
+
+#[test]
+fn overload_drops_are_accounted() {
+    let planner = ServicePlanner::synthetic();
+    let rep = run_traffic(&scenario(&planner, poisson, 2.0, SloPolicy::None, 23), &planner, None);
+    assert!(
+        rep.rejected_full + rep.expired > 0,
+        "2x overload with a bounded queue must drop something"
+    );
+    assert_eq!(rep.completed + rep.rejected_full + rep.expired + rep.shed_slo, rep.arrivals);
+}
+
+#[test]
+fn degrade_policy_wins_under_overload_both_patterns() {
+    let planner = ServicePlanner::synthetic();
+    for pattern_of in [poisson as fn(f64) -> ArrivalPattern, bursty] {
+        let none = run_traffic(&scenario(&planner, pattern_of, 2.0, SloPolicy::None, 31), &planner, None);
+        let deg =
+            run_traffic(&scenario(&planner, pattern_of, 2.0, SloPolicy::Degrade, 31), &planner, None);
+        assert!(
+            deg.goodput_rps > none.goodput_rps,
+            "{}: degrade goodput {:.2} must beat none {:.2}",
+            none.pattern,
+            deg.goodput_rps,
+            none.goodput_rps
+        );
+        assert!(
+            deg.slo_attainment > none.slo_attainment,
+            "{}: degrade attainment {:.2} must beat none {:.2}",
+            none.pattern,
+            deg.slo_attainment,
+            none.slo_attainment
+        );
+        assert!(deg.degraded > 0);
+    }
+}
+
+#[test]
+fn shed_policy_never_dispatches_doomed_work() {
+    let planner = ServicePlanner::synthetic();
+    let rep = run_traffic(&scenario(&planner, poisson, 2.0, SloPolicy::Shed, 37), &planner, None);
+    // everything dispatched was predicted on time; lateness can only come
+    // from the (conservative) prediction itself, so on-time must dominate
+    assert!(rep.shed_slo > 0, "2x overload must shed");
+    assert!(
+        rep.on_time as f64 >= 0.9 * rep.completed as f64,
+        "shed policy completed {} but only {} on time",
+        rep.completed,
+        rep.on_time
+    );
+}
+
+#[test]
+fn high_priority_class_served_first() {
+    let planner = ServicePlanner::synthetic();
+    let mut sc = scenario(&planner, poisson, 1.5, SloPolicy::None, 41);
+    sc.load.hi_frac = 0.3;
+    let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+    assert!(rep.arrivals > 20);
+    // regenerate the (deterministic) trace to recover each id's class
+    let arrivals = sc.load.generate();
+    let rate = |class: usize| {
+        let total = arrivals.iter().filter(|r| r.class == class).count();
+        let ok = outcomes
+            .iter()
+            .filter(|o| o.on_time && arrivals[o.id as usize].class == class)
+            .count();
+        (ok as f64, total.max(1) as f64)
+    };
+    let (hi_ok, hi_n) = rate(0);
+    let (lo_ok, lo_n) = rate(1);
+    assert!(
+        hi_ok / hi_n >= lo_ok / lo_n - 1e-9,
+        "high priority on-time rate {:.2} below low priority {:.2}",
+        hi_ok / hi_n,
+        lo_ok / lo_n
+    );
+}
+
+#[test]
+fn mixed_keys_batch_separately() {
+    let planner = ServicePlanner::synthetic();
+    let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let cfg_a = DetectorConfig::new("synrgbd", Variant::PointSplit, true, sched);
+    let cfg_b = DetectorConfig::new("synrgbd", Variant::VoteNet, true, sched);
+    let cap = planner.capacity_rps(&cfg_a, 2048, 4);
+    let mut load = LoadGen::simple(ArrivalPattern::Poisson { rate_rps: cap }, 20_000.0, 1_500.0, 47);
+    load.mix = vec![1.0, 1.0];
+    let sc = TrafficScenario {
+        name: "mixed".into(),
+        configs: vec![cfg_a, cfg_b],
+        num_points: 2048,
+        load,
+        queue_capacity: 48,
+        batch: BatchPolicy { max_batch: 4, max_wait_ms: 25.0 },
+        policy: SloPolicy::Degrade,
+        };
+    let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+    assert_eq!(outcomes.len(), rep.arrivals);
+    assert!(rep.completed > 0);
+    assert_eq!(rep.completed + rep.rejected_full + rep.expired + rep.shed_slo, rep.arrivals);
+}
+
+#[test]
+fn report_capacity_consistent_with_planner() {
+    let planner = ServicePlanner::synthetic();
+    let sc = scenario(&planner, poisson, 1.0, SloPolicy::None, 53);
+    let rep = run_traffic(&sc, &planner, None);
+    let cap = planner.capacity_rps(&split_cfg(), 2048, 4);
+    assert!((rep.capacity_rps - cap).abs() < 1e-9);
+    assert!((rep.offered_rps - cap).abs() / cap < 1e-9);
+}

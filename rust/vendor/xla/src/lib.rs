@@ -1,0 +1,180 @@
+//! Stub of the `xla-rs` PJRT surface used by `pointsplit::runtime`.
+//!
+//! The real backend (LaurentMazare's `xla` crate + an XLA/PJRT install)
+//! cannot be vendored offline, so this crate mirrors exactly the types and
+//! signatures the runtime calls and fails *late*: clients open and literals
+//! construct fine, but anything that would compile or execute an HLO module
+//! returns [`Error::Unavailable`]. That keeps `Runtime::open` + manifest
+//! introspection working (and lets the rest of the crate — device simulator,
+//! coordinator planning, serving gateway — run end-to-end) while making
+//! functional NN execution an explicit opt-in: swap the `xla` path
+//! dependency in `rust/Cargo.toml` for the real crate to enable it.
+//!
+//! Everything here is intentionally minimal; see `rust/src/runtime/mod.rs`
+//! for the only call sites.
+
+use std::fmt;
+
+/// Errors surfaced by the stub (mirrors xla-rs's error enum shape).
+pub enum Error {
+    /// The operation needs a real PJRT backend.
+    Unavailable(String),
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => {
+                write!(f, "PJRT unavailable ({what}): the vendored `xla` crate is a stub; \
+                        point rust/Cargo.toml at a real xla-rs build to execute artifacts")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error::Unavailable(what.to_string()))
+}
+
+/// Stub PJRT client. Opens successfully so manifest-only workflows run.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compile")
+    }
+}
+
+/// Parsed HLO module handle (never actually constructed by the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation wrapper accepted by [`PjRtClient::compile`].
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle (never actually constructed by the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execute")
+    }
+}
+
+/// Device buffer handle returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("to_literal_sync")
+    }
+}
+
+/// Host tensor literal. Construction and reshape work (pure metadata); any
+/// data readback requires the real backend.
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = self.dims.iter().product();
+        let m: i64 = dims.iter().product();
+        if n != m {
+            return unavailable("reshape: element count mismatch");
+        }
+        Ok(Literal { dims: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone() }))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("to_vec")
+    }
+}
+
+/// Shape of a literal.
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Dense array shape.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_opens_but_compile_fails() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "pjrt-stub");
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        assert!(client.compile(&comp).is_err());
+    }
+
+    #[test]
+    fn literal_metadata_roundtrip() {
+        let lit = Literal::vec1(&[0.0; 12]);
+        let lit = lit.reshape(&[3, 4]).unwrap();
+        match lit.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[3, 4]),
+            Shape::Tuple(_) => panic!("expected array shape"),
+        }
+        assert!(lit.reshape(&[5, 5]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn error_message_mentions_stub() {
+        let e = PjRtClient.compile(&XlaComputation);
+        let msg = format!("{:?}", e.unwrap_err());
+        assert!(msg.contains("stub"));
+    }
+}
