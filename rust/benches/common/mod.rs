@@ -24,7 +24,12 @@ pub fn eval_config(rt: &Runtime, cfg: &DetectorConfig, scenes: usize) -> ServeRe
 }
 
 pub fn open_runtime() -> Runtime {
-    Runtime::open("artifacts").expect("run `make artifacts` first")
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Runtime::open("artifacts").expect("artifacts present but unreadable")
+    } else {
+        eprintln!("note: no artifacts — benching on the synthetic manifest + host surrogate");
+        Runtime::synthetic()
+    }
 }
 
 /// Format an Option<f64> AP as the paper does (x100, '-' when absent).

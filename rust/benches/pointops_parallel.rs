@@ -1,0 +1,160 @@
+//! §Perf: sequential vs parallel host execution of 3D feature extraction.
+//!
+//! Pillar (2) of the paper is *parallelized 3D feature extraction*; this
+//! bench records what the host-side analogue buys us, at two levels:
+//!
+//! 1. op level — chunked-scan FPS, per-center ball query, grid-accelerated
+//!    3-NN interpolation on a large synthetic cloud;
+//! 2. pipeline level — the full PointSplit scene pipeline run sequentially
+//!    vs DAG-parallel (`host_ms`, the acceptance metric).
+//!
+//! Runs offline on the synthetic runtime (deterministic host surrogate for
+//! NN stages). Knobs:
+//!   POINTSPLIT_BENCH_SCENES   pipeline iterations   (default 4, CI: 1)
+//!   POINTSPLIT_BENCH_POINTS   cloud size            (default 32768)
+//!   POINTSPLIT_BENCH_THREADS  thread budget         (default: host cores)
+//!   POINTSPLIT_BENCH_ASSERT   if set, fail below 1.5x pipeline speedup
+
+mod common;
+
+use std::time::Instant;
+
+use pointsplit::bench::{bench_fn, f1, f2, Table};
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{generate_scene, DatasetCfg, SYNRGBD};
+use pointsplit::exec::HostExec;
+use pointsplit::pointops;
+use pointsplit::runtime::Runtime;
+use pointsplit::sim::DeviceKind;
+use pointsplit::util::rng::Rng;
+use pointsplit::util::tensor::Tensor;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let threads = env_usize("POINTSPLIT_BENCH_THREADS", cores);
+    let n = env_usize("POINTSPLIT_BENCH_POINTS", 32_768);
+    let scenes = common::scene_budget(4);
+    println!(
+        "=== pointops_parallel: host parallelism ({cores} cores, {threads} threads, \
+         n={n}) ===\n"
+    );
+
+    // ------------------------------------------------------------ op level
+    let mut rng = Rng::new(7);
+    let cloud: Vec<[f32; 3]> = (0..n)
+        .map(|_| [rng.f32() * 8.0, rng.f32() * 8.0, rng.f32() * 2.5])
+        .collect();
+    let fg: Vec<f32> = cloud.iter().map(|p| if p[0] < 2.0 { 1.0 } else { 0.0 }).collect();
+    let m = (n / 4).clamp(1, 512);
+
+    let fps_seq = bench_fn(&format!("fps {n}->{m} seq"), 1, 3, || {
+        std::hint::black_box(pointops::fps(&cloud, m));
+    });
+    fps_seq.print();
+    let fps_par = bench_fn(&format!("fps {n}->{m} par x{threads}"), 1, 3, || {
+        std::hint::black_box(pointops::fps_par(&cloud, m, threads));
+    });
+    fps_par.print();
+    let bfps_seq = bench_fn(&format!("biased_fps {n}->{m} seq"), 1, 3, || {
+        std::hint::black_box(pointops::biased_fps(&cloud, m, &fg, 2.0));
+    });
+    bfps_seq.print();
+    let bfps_par = bench_fn(&format!("biased_fps {n}->{m} par x{threads}"), 1, 3, || {
+        std::hint::black_box(pointops::biased_fps_par(&cloud, m, &fg, 2.0, threads));
+    });
+    bfps_par.print();
+
+    let centers = pointops::fps_par(&cloud, m, threads);
+    let bq_seq = bench_fn(&format!("ball_query {n}x{m} k=32 seq"), 1, 5, || {
+        std::hint::black_box(pointops::ball_query(&cloud, &centers, 0.4, 32));
+    });
+    bq_seq.print();
+    let bq_par = bench_fn(&format!("ball_query {n}x{m} k=32 par x{threads}"), 1, 5, || {
+        std::hint::black_box(pointops::ball_query_par(&cloud, &centers, 0.4, 32, threads));
+    });
+    bq_par.print();
+
+    let src: Vec<[f32; 3]> = centers.iter().map(|&i| cloud[i]).collect();
+    let feats = Tensor::zeros(vec![src.len(), 128]);
+    let in_brute = bench_fn(&format!("three_nn {n}<-{m} brute"), 1, 3, || {
+        std::hint::black_box(pointops::interp::three_nn_interpolate_bruteforce(
+            &cloud, &src, &feats,
+        ));
+    });
+    in_brute.print();
+    let in_grid = bench_fn(&format!("three_nn {n}<-{m} grid seq"), 1, 5, || {
+        std::hint::black_box(pointops::three_nn_interpolate(&cloud, &src, &feats));
+    });
+    in_grid.print();
+    let in_par = bench_fn(&format!("three_nn {n}<-{m} grid par x{threads}"), 1, 5, || {
+        std::hint::black_box(pointops::three_nn_interpolate_par(&cloud, &src, &feats, threads));
+    });
+    in_par.print();
+
+    let mut ops = Table::new(&["op", "seq ms", "par ms", "speedup"]);
+    for (name, a, b) in [
+        ("fps", &fps_seq, &fps_par),
+        ("biased_fps", &bfps_seq, &bfps_par),
+        ("ball_query", &bq_seq, &bq_par),
+        ("three_nn (vs brute)", &in_brute, &in_par),
+        ("three_nn (vs grid seq)", &in_grid, &in_par),
+    ] {
+        ops.row(vec![
+            name.to_string(),
+            f2(a.mean_us / 1e3),
+            f2(b.mean_us / 1e3),
+            f2(a.mean_us / b.mean_us),
+        ]);
+    }
+    ops.print("op-level: sequential vs parallel");
+
+    // ------------------------------------------------------ pipeline level
+    let ds = DatasetCfg { name: "bench", num_points: n, ..SYNRGBD };
+    let rt = Runtime::synthetic();
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let seq_pipe =
+        ScenePipeline::new(&rt, cfg.clone()).with_host_exec(HostExec::Sequential);
+    let par_pipe = ScenePipeline::new(&rt, cfg)
+        .with_host_exec(HostExec::Parallel { threads });
+
+    let run_ms = |pipe: &ScenePipeline, label: &str| -> f64 {
+        let mut total = 0.0;
+        for s in 0..scenes {
+            let scene = generate_scene(100 + s as u64, &ds);
+            let t = Instant::now();
+            let out = pipe.run(&scene, 100 + s as u64).expect("pipeline");
+            let wall = t.elapsed().as_secs_f64() * 1e3;
+            total += out.host_ms;
+            println!(
+                "  {label} scene {s}: host {:>8.1} ms (wall {wall:.1} ms, {} dets)",
+                out.host_ms,
+                out.detections.len()
+            );
+        }
+        total / scenes as f64
+    };
+    println!("\npipeline PointSplit int8, {scenes} scenes of {n} points:");
+    let seq_ms = run_ms(&seq_pipe, "seq");
+    let par_ms = run_ms(&par_pipe, "par");
+    let speedup = seq_ms / par_ms.max(1e-9);
+
+    let mut t = Table::new(&["pipeline", "host_ms seq", "host_ms par", "speedup"]);
+    t.row(vec!["pointsplit int8".into(), f1(seq_ms), f1(par_ms), f2(speedup)]);
+    t.print("pipeline host_ms: sequential vs DAG-parallel");
+    println!(
+        "\nacceptance: >= 1.5x on a >= 4-core runner -> {}",
+        if speedup >= 1.5 { "PASS" } else { "below (small host or smoke settings)" }
+    );
+    if std::env::var("POINTSPLIT_BENCH_ASSERT").is_ok() {
+        assert!(speedup >= 1.5, "pipeline parallel speedup {speedup:.2} < 1.5x");
+    }
+}

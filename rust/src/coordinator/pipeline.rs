@@ -1,11 +1,26 @@
 //! Per-scene detection pipeline: functional execution + simulated timeline.
 //!
-//! Every stage is executed for real (Rust point ops / PJRT executables) and
-//! simultaneously recorded as a [`StageSpec`] so the calibrated device model
-//! can replay the schedule. The PointSplit schedule reproduces Fig. 3:
-//! SA-normal point manipulation jump-starts concurrently with 2D
-//! segmentation; afterwards the GPU lane (point manip) and NPU lane
-//! (PointNet) alternate between the two half-pipelines.
+//! Every stage is declared exactly **once** as a [`StageDecl`] — (name,
+//! device, workload, deps, compute closure) — and that single declaration
+//! feeds both sides:
+//!
+//! - the [`exec::DagExecutor`] runs the closures on the host, in parallel
+//!   when dependencies allow (the SA-normal / SA-bias chains of PointSplit
+//!   and the two RandomSplit halves overlap on host threads, mirroring the
+//!   paper's two-lane GPU/NPU overlap, Fig. 3);
+//! - the embedded [`StageSpec`]s replay through the calibrated
+//!   [`ScheduleSim`] device model.
+//!
+//! Because the simulated DAG and the executed DAG are the same object,
+//! dependency drift between them is impossible by construction (the class
+//! of bug where `merge()` collapsed two pipelines' last NN stages into
+//! `max(a, b)` and let `sa4_pm` start before the slower pipeline finished).
+//!
+//! Stage closures exchange data through single-producer [`Slot`]s, so
+//! parallel execution is bit-identical to sequential execution (see
+//! `rust/tests/parallelism.rs`).
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -13,9 +28,10 @@ use super::arch::{nn_workload, peak_memory_mb, sa_pointmanip_workload, small_poi
 use super::decode::decode_detections;
 use super::{Schedule, Variant};
 use crate::data::{Box3, Scene};
+use crate::exec::{Compute, DagExecutor, HostExec, Slot, StageDecl};
 use crate::pointops;
 use crate::runtime::Runtime;
-use crate::sim::{DeviceKind, ScheduleSim, StageSpec, Timeline};
+use crate::sim::{DeviceKind, ScheduleSim, StageSpec, Timeline, Workload};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -83,29 +99,101 @@ impl DetectorConfig {
 pub struct PipelineOutput {
     pub detections: Vec<Box3>,
     pub timeline: Timeline,
+    /// The stage DAG as declared (same object the executor ran and the
+    /// simulator timed) — for tests, tracing, and the serving planner's
+    /// drift check.
+    pub stage_specs: Vec<StageSpec>,
     pub peak_memory_mb: f64,
     /// wall-clock of the functional execution on this host (for §Perf)
     pub host_ms: f64,
 }
 
-/// One SA pipeline's rolling state.
-struct PipeState {
+/// Chain-local geometry after a sampling step: positions plus the composed
+/// index of every point back into the original cloud (so any stage can look
+/// up per-point metadata like the painted fg mask without carrying it).
+#[derive(Clone)]
+struct Geo {
     xyz: Vec<[f32; 3]>,
-    feats: Option<Tensor>,
-    fg: Vec<f32>,
-    /// simulator stage index of the last NN stage in this pipeline
-    last_nn: Option<usize>,
+    src: Vec<usize>,
+}
+
+/// Where an SA chain's level-0 points come from.
+#[derive(Clone)]
+enum ChainInput {
+    /// the full original cloud
+    Full,
+    /// a fixed subset of the original cloud (RandomSplit halves)
+    Subset(Arc<Vec<usize>>),
+}
+
+/// One declared SA level of a chain, as seen by downstream stages.
+#[derive(Clone)]
+struct ChainLevel {
+    geo: Slot<Geo>,
+    feats: Slot<Tensor>,
+    /// sim index of this level's NN stage
+    nn: usize,
+    /// points after this level's sampling (static)
+    n: usize,
+    /// feature width after this level's PointNet (static)
+    c: usize,
+}
+
+/// Stage-list accumulator with the sequential-schedule chaining rule.
+struct StageBuilder<'s> {
+    decls: Vec<StageDecl<'s>>,
+    sequential: bool,
+    prev_any: Option<usize>,
+}
+
+impl<'s> StageBuilder<'s> {
+    fn stage(
+        &mut self,
+        name: String,
+        device: DeviceKind,
+        workload: Workload,
+        mut deps: Vec<usize>,
+        extra_deps: Vec<usize>,
+        compute: Compute<'s>,
+    ) -> usize {
+        if self.sequential {
+            if let Some(p) = self.prev_any {
+                if !deps.contains(&p) {
+                    deps.push(p);
+                }
+            }
+        }
+        let idx = self.decls.len();
+        self.decls.push(StageDecl {
+            spec: StageSpec { name, device, workload, deps },
+            extra_deps,
+            compute,
+        });
+        self.prev_any = Some(idx);
+        idx
+    }
 }
 
 pub struct ScenePipeline<'a> {
     pub rt: &'a Runtime,
     pub cfg: DetectorConfig,
     sim: ScheduleSim,
+    host_exec: HostExec,
 }
 
 impl<'a> ScenePipeline<'a> {
     pub fn new(rt: &'a Runtime, cfg: DetectorConfig) -> Self {
-        ScenePipeline { rt, cfg, sim: ScheduleSim::new() }
+        ScenePipeline { rt, cfg, sim: ScheduleSim::new(), host_exec: HostExec::auto() }
+    }
+
+    /// Override the host execution policy (sequential / parallel).
+    pub fn with_host_exec(mut self, host_exec: HostExec) -> Self {
+        self.host_exec = host_exec;
+        self
+    }
+
+    pub fn host_exec(&self) -> HostExec {
+        self.host_exec
     }
 
     /// Run one scene. `seed` feeds the RandomSplit permutation.
@@ -128,6 +216,7 @@ impl<'a> ScenePipeline<'a> {
         let t_host = std::time::Instant::now();
         let cfg = &self.cfg;
         let m = &self.rt.manifest;
+        let threads = self.host_exec.threads();
         let point_dev = cfg.schedule.point_dev();
         // the EdgeTPU executes int8 only (the paper's motivation for full
         // quantization); fp32 configurations fall back to the point device
@@ -135,248 +224,371 @@ impl<'a> ScenePipeline<'a> {
         if !cfg.int8() && nn_dev == DeviceKind::EdgeTpu {
             nn_dev = point_dev;
         }
-        let mut stages: Vec<StageSpec> = Vec::new();
-        let mut prev_any: Option<usize> = None; // strict chaining when sequential
-        let sequential = !cfg.schedule.overlapped();
-
-        let mut push = |stages: &mut Vec<StageSpec>,
-                        name: String,
-                        device: DeviceKind,
-                        workload: crate::sim::Workload,
-                        mut deps: Vec<usize>|
-         -> usize {
-            if sequential {
-                if let Some(p) = prev_any {
-                    if !deps.contains(&p) {
-                        deps.push(p);
-                    }
-                }
-            }
-            stages.push(StageSpec { name, device, workload, deps });
-            prev_any = Some(stages.len() - 1);
-            stages.len() - 1
+        let n = scene.points.len();
+        let mut b = StageBuilder {
+            decls: Vec::new(),
+            sequential: !cfg.schedule.overlapped(),
+            prev_any: None,
         };
 
         // ------------------------------------------------------ 2D segment
-        let mut used_scores: Option<Tensor> = None;
-        let (paint, fg, seg_stage) = if cfg.variant.painted() {
-            let scores2d = match prev_scores {
+        // scores_slot: segmenter output (or the previous frame's scores);
+        // feat_slot: per-point detector features + fg mask of the full cloud
+        let scores_slot: Slot<Tensor> = Slot::new("seg scores");
+        let feat_slot: Slot<(Tensor, Vec<f32>)> = Slot::new("point features");
+        let painted = cfg.variant.painted();
+        let (seg_stage, paint_stage, c0) = if painted {
+            let seg_stage = match prev_scores {
                 // consecutive matching: reuse the previous frame's scores
-                Some(prev) => prev.clone(),
+                Some(prev) => {
+                    scores_slot.set(prev.clone());
+                    None
+                }
                 None => {
-                    let img =
-                        Tensor::new(vec![m.img_size, m.img_size, 3], scene.image.clone());
-                    self.rt.run(&cfg.seg_art(), &[&img])?.remove(0)
+                    let mut wl = nn_workload(m, &cfg.seg_art());
+                    wl.flops *= cfg.seg_passes as u64;
+                    let art = cfg.seg_art();
+                    let sl = scores_slot.clone();
+                    let img_size = m.img_size;
+                    Some(b.stage(
+                        "seg".into(),
+                        nn_dev,
+                        wl,
+                        vec![],
+                        vec![],
+                        Compute::Host(Box::new(move || {
+                            let img =
+                                Tensor::new(vec![img_size, img_size, 3], scene.image.clone());
+                            sl.set(self.rt.run(&art, &[&img])?.remove(0));
+                            Ok(())
+                        })),
+                    ))
                 }
             };
-            let deps_paint = if prev_scores.is_none() {
-                let mut wl = nn_workload(m, &cfg.seg_art());
-                wl.flops *= cfg.seg_passes as u64;
-                vec![push(&mut stages, "seg".into(), nn_dev, wl, vec![])]
-            } else {
-                Vec::new() // no 2D work this frame
-            };
-            let paint = pointops::paint_points(scene, &scores2d);
-            let fg = pointops::fg_mask(&paint, 0.5);
-            let p = push(
-                &mut stages,
+            let sl = scores_slot.clone();
+            let fs = feat_slot.clone();
+            let paint_stage = b.stage(
                 "paint".into(),
                 point_dev,
-                small_pointop(
-                    (scene.points.len() * 8) as u64,
-                    (scene.points.len() * m.num_seg_classes) as u64,
-                ),
-                deps_paint,
+                small_pointop((n * 8) as u64, (n * m.num_seg_classes) as u64),
+                seg_stage.into_iter().collect(),
+                vec![],
+                Compute::Pool(Box::new(move || {
+                    sl.with(|scores| {
+                        let paint = pointops::paint_points(scene, scores);
+                        let fg = pointops::fg_mask(&paint, 0.5);
+                        fs.set((pointops::build_features(scene, Some(&paint)), fg));
+                    });
+                    Ok(())
+                })),
             );
-            used_scores = Some(scores2d);
-            (Some(paint), fg, Some(p))
+            (seg_stage, Some(paint_stage), 1 + m.num_seg_classes)
         } else {
-            (None, vec![0.0; scene.points.len()], None)
+            feat_slot.set((pointops::build_features(scene, None), vec![0.0; n]));
+            (None, None, 1)
         };
-        let feats = pointops::build_features(scene, paint.as_ref());
 
         // ------------------------------------------------------ backbone
-        let (sa2, sa3) = match cfg.variant {
+        let (sa2s, sa3s): (Vec<ChainLevel>, Vec<ChainLevel>) = match cfg.variant {
             Variant::VoteNet | Variant::PointPainting => {
-                let init = PipeState {
-                    xyz: scene.points.clone(),
-                    feats: Some(feats),
-                    fg,
-                    last_nn: seg_stage,
-                };
-                let levels = self.run_sa_chain(
-                    &mut stages,
-                    &mut push,
-                    init,
-                    "full",
-                    false,
-                    1.0,
-                    point_dev,
-                    nn_dev,
-                    seg_stage,
-                )?;
-                (levels.0, levels.1)
+                let (s2, s3) = self.declare_sa_chain(
+                    &mut b, scene, ChainInput::Full, n, &feat_slot, c0, "full", false, point_dev,
+                    nn_dev, seg_stage, paint_stage, threads,
+                );
+                (vec![s2], vec![s3])
             }
             Variant::PointSplit => {
                 // SA-normal jump-starts (its point manip does not need seg);
                 // SA-bias waits for painting (biased FPS needs fg)
-                let sn = PipeState {
-                    xyz: scene.points.clone(),
-                    feats: Some(feats.clone()),
-                    fg: fg.clone(),
-                    last_nn: seg_stage,
-                };
-                let sb = PipeState {
-                    xyz: scene.points.clone(),
-                    feats: Some(feats),
-                    fg,
-                    last_nn: seg_stage,
-                };
-                let ln = self.run_sa_chain(
-                    &mut stages, &mut push, sn, "normal", false, 1.0, point_dev, nn_dev, seg_stage,
-                )?;
-                let lb = self.run_sa_chain(
-                    &mut stages, &mut push, sb, "bias", true, cfg.w0, point_dev, nn_dev, seg_stage,
-                )?;
-                (merge(ln.0, lb.0), merge(ln.1, lb.1))
+                let (n2, n3) = self.declare_sa_chain(
+                    &mut b, scene, ChainInput::Full, n, &feat_slot, c0, "normal", false,
+                    point_dev, nn_dev, seg_stage, paint_stage, threads,
+                );
+                let (b2, b3) = self.declare_sa_chain(
+                    &mut b, scene, ChainInput::Full, n, &feat_slot, c0, "bias", true, point_dev,
+                    nn_dev, seg_stage, paint_stage, threads,
+                );
+                (vec![n2, b2], vec![n3, b3])
             }
             Variant::RandomSplit => {
                 let mut rng = Rng::new(seed ^ 0xB5);
-                let perm = rng.choice_no_replace(scene.points.len(), scene.points.len());
-                let half = scene.points.len() / 2;
-                let mk = |idx: &[usize]| PipeState {
-                    xyz: idx.iter().map(|&i| scene.points[i]).collect(),
-                    feats: Some(feats.gather_rows(idx)),
-                    fg: idx.iter().map(|&i| fg[i]).collect(),
-                    last_nn: seg_stage,
-                };
-                let la = self.run_sa_chain(
-                    &mut stages, &mut push, mk(&perm[..half]), "randA", false, 1.0, point_dev,
-                    nn_dev, seg_stage,
-                )?;
-                let lb = self.run_sa_chain(
-                    &mut stages, &mut push, mk(&perm[half..]), "randB", false, 1.0, point_dev,
-                    nn_dev, seg_stage,
-                )?;
-                (merge(la.0, lb.0), merge(la.1, lb.1))
+                let perm = rng.choice_no_replace(n, n);
+                let half = n / 2;
+                let ia = Arc::new(perm[..half].to_vec());
+                let ib = Arc::new(perm[half..].to_vec());
+                let (a2, a3) = self.declare_sa_chain(
+                    &mut b, scene, ChainInput::Subset(ia), half, &feat_slot, c0, "randA", false,
+                    point_dev, nn_dev, seg_stage, paint_stage, threads,
+                );
+                let (b2, b3) = self.declare_sa_chain(
+                    &mut b, scene, ChainInput::Subset(ib), n - half, &feat_slot, c0, "randB",
+                    false, point_dev, nn_dev, seg_stage, paint_stage, threads,
+                );
+                (vec![a2, b2], vec![a3, b3])
             }
         };
+        let sa2_n: usize = sa2s.iter().map(|l| l.n).sum();
+        let sa3_n: usize = sa3s.iter().map(|l| l.n).sum();
+        let sa3_c = sa3s[0].c;
 
         // SA4 over the fused SA3 set (biased only in the Table 10 "all SA
-        // layers" ablation: bias_layers >= 4)
+        // layers" ablation: bias_layers >= 4). The merged set is ready when
+        // **every** contributing pipeline's SA3 PointNet is done — both
+        // deps are recorded, which is exactly the fix for the old
+        // `max(a.last_nn, b.last_nn)` merge bug.
         let sa4cfg = &m.sa_configs[3];
-        let deps4 = sa3.last_nn.into_iter().collect::<Vec<_>>();
-        let idx4 = if cfg.bias_layers >= 4 && cfg.variant == Variant::PointSplit {
-            pointops::biased_fps(&sa3.xyz, sa4cfg.m, &sa3.fg, cfg.w0)
-        } else {
-            pointops::fps(&sa3.xyz, sa4cfg.m)
+        let mut deps4: Vec<usize> = sa3s.iter().map(|l| l.nn).collect();
+        deps4.sort_unstable();
+        let use_bias4 = cfg.bias_layers >= 4 && cfg.variant == Variant::PointSplit;
+        let sa3_fused: Slot<Geo> = Slot::new("sa3 fused geo");
+        let grp4: Slot<(Vec<usize>, Vec<Vec<usize>>)> = Slot::new("sa4 groups");
+        let geo4: Slot<Geo> = Slot::new("sa4 geo");
+        let pm4 = {
+            let sa3_geos: Vec<Slot<Geo>> = sa3s.iter().map(|l| l.geo.clone()).collect();
+            let (sa3_fused, grp4, geo4) = (sa3_fused.clone(), grp4.clone(), geo4.clone());
+            let fgsrc = if use_bias4 { Some(feat_slot.clone()) } else { None };
+            let (m4, r4, k4, w0) = (sa4cfg.m, sa4cfg.radius, sa4cfg.k, cfg.w0);
+            b.stage(
+                "sa4_pm".into(),
+                point_dev,
+                sa_pointmanip_workload(sa3_n, sa4cfg.m, sa4cfg.k, sa3_c),
+                deps4,
+                if use_bias4 && painted { paint_stage.into_iter().collect() } else { vec![] },
+                Compute::Pool(Box::new(move || {
+                    let mut xyz = Vec::new();
+                    let mut src = Vec::new();
+                    for g in &sa3_geos {
+                        g.with(|geo| {
+                            xyz.extend_from_slice(&geo.xyz);
+                            src.extend_from_slice(&geo.src);
+                        });
+                    }
+                    let idx4 = match &fgsrc {
+                        Some(fs) => {
+                            let fg: Vec<f32> =
+                                fs.with(|(_, fg)| src.iter().map(|&i| fg[i]).collect());
+                            pointops::biased_fps_par(&xyz, m4, &fg, w0, threads)
+                        }
+                        None => pointops::fps_par(&xyz, m4, threads),
+                    };
+                    let groups4 = pointops::ball_query_par(&xyz, &idx4, r4, k4, threads);
+                    geo4.set(Geo {
+                        xyz: idx4.iter().map(|&i| xyz[i]).collect(),
+                        src: idx4.iter().map(|&i| src[i]).collect(),
+                    });
+                    grp4.set((idx4, groups4));
+                    sa3_fused.set(Geo { xyz, src });
+                    Ok(())
+                })),
+            )
         };
-        let groups4 = pointops::ball_query(&sa3.xyz, &idx4, sa4cfg.radius, sa4cfg.k);
-        let g4 = pointops::group_features(&sa3.xyz, sa3.feats.as_ref(), &idx4, &groups4);
-        let pm4 = push(
-            &mut stages,
-            "sa4_pm".into(),
-            point_dev,
-            sa_pointmanip_workload(sa3.xyz.len(), sa4cfg.m, sa4cfg.k, sa3.feats.as_ref().unwrap().row_len()),
-            deps4,
-        );
-        let sa4_feats = self.rt.run(&cfg.art("sa4_full"), &[&g4])?.remove(0);
-        let nn4 = push(
-            &mut stages,
-            "sa4_nn".into(),
-            nn_dev,
-            nn_workload(m, &cfg.art("sa4_full")),
-            vec![pm4],
-        );
-        let sa4_xyz: Vec<[f32; 3]> = idx4.iter().map(|&i| sa3.xyz[i]).collect();
+        let sa3_feats_fused: Slot<Tensor> = Slot::new("sa3 fused feats");
+        let sa4_feats: Slot<Tensor> = Slot::new("sa4 feats");
+        let nn4 = {
+            let sa3_fs: Vec<Slot<Tensor>> = sa3s.iter().map(|l| l.feats.clone()).collect();
+            let (sa3_fused, sa3_feats_fused, grp4, sa4_feats) = (
+                sa3_fused.clone(),
+                sa3_feats_fused.clone(),
+                grp4.clone(),
+                sa4_feats.clone(),
+            );
+            let art = cfg.art("sa4_full");
+            b.stage(
+                "sa4_nn".into(),
+                nn_dev,
+                nn_workload(m, &art),
+                vec![pm4],
+                vec![],
+                Compute::Host(Box::new(move || {
+                    let parts: Vec<Tensor> = sa3_fs.iter().map(|f| f.cloned()).collect();
+                    let refs: Vec<&Tensor> = parts.iter().collect();
+                    let fused = Tensor::concat0(&refs);
+                    let (idx4, groups4) = grp4.take();
+                    let g4 = sa3_fused.with(|geo| {
+                        pointops::group_features(&geo.xyz, Some(&fused), &idx4, &groups4)
+                    });
+                    sa4_feats.set(self.rt.run(&art, &[&g4])?.remove(0));
+                    sa3_feats_fused.set(fused);
+                    Ok(())
+                })),
+            )
+        };
 
         // ------------------------------------------------------ FP + heads
-        let f3up = pointops::three_nn_interpolate(&sa3.xyz, &sa4_xyz, &sa4_feats);
-        let f3 = hconcat(sa3.feats.as_ref().unwrap(), &f3up);
-        let f2up = pointops::three_nn_interpolate(&sa2.xyz, &sa3.xyz, &f3);
-        let f2 = hconcat(sa2.feats.as_ref().unwrap(), &f2up);
-        let fp_pm = push(
-            &mut stages,
-            "fp_interp".into(),
-            point_dev,
-            small_pointop(
-                (sa2.xyz.len() * sa3.xyz.len() * 4) as u64,
-                (f2.len() * 4) as u64,
-            ),
-            vec![nn4],
-        );
-        let seeds = self.rt.run(&cfg.art("fp_fc"), &[&f2])?.remove(0);
-        let fp_nn = push(
-            &mut stages,
-            "fp_fc".into(),
-            nn_dev,
-            nn_workload(m, &cfg.art("fp_fc")),
-            vec![fp_pm],
-        );
-
-        let vote_out = self.rt.run(&cfg.art("vote"), &[&seeds])?.remove(0);
-        let vote_nn = push(
-            &mut stages,
-            "vote".into(),
-            nn_dev,
-            nn_workload(m, &cfg.art("vote")),
-            vec![fp_nn],
-        );
-        let seed_xyz = &sa2.xyz;
-        let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
-        let cfeat = seeds.row_len();
-        let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
-        for i in 0..seed_xyz.len() {
-            let row = vote_out.row(i);
-            vote_xyz.push([
-                seed_xyz[i][0] + row[0],
-                seed_xyz[i][1] + row[1],
-                seed_xyz[i][2] + row[2],
-            ]);
-            for c in 0..cfeat {
-                vote_feats.row_mut(i)[c] = seeds.row(i)[c] + row[3 + c];
-            }
-        }
+        let f2_slot: Slot<Tensor> = Slot::new("fp features");
+        let seed_xyz_slot: Slot<Vec<[f32; 3]>> = Slot::new("seed xyz");
+        let fp_pm = {
+            let sa2s_c = sa2s.clone();
+            let (sa3_fused, sa3_feats_fused, geo4, sa4_feats) = (
+                sa3_fused.clone(),
+                sa3_feats_fused.clone(),
+                geo4.clone(),
+                sa4_feats.clone(),
+            );
+            let (f2_slot, seed_xyz_slot) = (f2_slot.clone(), seed_xyz_slot.clone());
+            b.stage(
+                "fp_interp".into(),
+                point_dev,
+                small_pointop((sa2_n * sa3_n * 4) as u64, (sa2_n * m.fp_in * 4) as u64),
+                vec![nn4],
+                vec![],
+                Compute::Pool(Box::new(move || {
+                    let sa4_f = sa4_feats.take();
+                    let sa4_xyz = geo4.with(|g| g.xyz.clone());
+                    let sa3_f = sa3_feats_fused.take();
+                    let f3 = sa3_fused.with(|sa3| {
+                        let f3up = pointops::three_nn_interpolate_par(
+                            &sa3.xyz, &sa4_xyz, &sa4_f, threads,
+                        );
+                        hconcat(&sa3_f, &f3up)
+                    });
+                    let mut sa2_xyz = Vec::new();
+                    for l in &sa2s_c {
+                        l.geo.with(|g| sa2_xyz.extend_from_slice(&g.xyz));
+                    }
+                    let f2up = sa3_fused.with(|sa3| {
+                        pointops::three_nn_interpolate_par(&sa2_xyz, &sa3.xyz, &f3, threads)
+                    });
+                    let parts: Vec<Tensor> = sa2s_c.iter().map(|l| l.feats.cloned()).collect();
+                    let refs: Vec<&Tensor> = parts.iter().collect();
+                    let sa2_f = Tensor::concat0(&refs);
+                    f2_slot.set(hconcat(&sa2_f, &f2up));
+                    seed_xyz_slot.set(sa2_xyz);
+                    Ok(())
+                })),
+            )
+        };
+        let seeds_slot: Slot<Tensor> = Slot::new("seeds");
+        let fp_nn = {
+            let art = cfg.art("fp_fc");
+            let (f2_slot, seeds_slot) = (f2_slot.clone(), seeds_slot.clone());
+            b.stage(
+                "fp_fc".into(),
+                nn_dev,
+                nn_workload(m, &art),
+                vec![fp_pm],
+                vec![],
+                Compute::Host(Box::new(move || {
+                    let f2 = f2_slot.take();
+                    seeds_slot.set(self.rt.run(&art, &[&f2])?.remove(0));
+                    Ok(())
+                })),
+            )
+        };
+        let vote_slot: Slot<(Vec<[f32; 3]>, Tensor)> = Slot::new("votes");
+        let vote_nn = {
+            let art = cfg.art("vote");
+            let (seeds_slot, seed_xyz_slot, vote_slot) =
+                (seeds_slot.clone(), seed_xyz_slot.clone(), vote_slot.clone());
+            b.stage(
+                "vote".into(),
+                nn_dev,
+                nn_workload(m, &art),
+                vec![fp_nn],
+                vec![],
+                Compute::Host(Box::new(move || {
+                    let seeds = seeds_slot.take();
+                    let vote_out = self.rt.run(&art, &[&seeds])?.remove(0);
+                    let seed_xyz = seed_xyz_slot.take();
+                    let cfeat = seeds.row_len();
+                    let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
+                    let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
+                    for i in 0..seed_xyz.len() {
+                        let row = vote_out.row(i);
+                        vote_xyz.push([
+                            seed_xyz[i][0] + row[0],
+                            seed_xyz[i][1] + row[1],
+                            seed_xyz[i][2] + row[2],
+                        ]);
+                        for c in 0..cfeat {
+                            vote_feats.row_mut(i)[c] = seeds.row(i)[c] + row[3 + c];
+                        }
+                    }
+                    vote_slot.set((vote_xyz, vote_feats));
+                    Ok(())
+                })),
+            )
+        };
 
         // proposal: cluster votes (point manip) then PointNet+head (NN)
-        let pidx = pointops::fps(&vote_xyz, m.num_proposals);
-        let pgroups = pointops::ball_query(&vote_xyz, &pidx, m.proposal_radius, m.proposal_k);
-        let pg = pointops::group_features(&vote_xyz, Some(&vote_feats), &pidx, &pgroups);
-        let prop_pm = push(
-            &mut stages,
-            "prop_pm".into(),
-            point_dev,
-            sa_pointmanip_workload(vote_xyz.len(), m.num_proposals, m.proposal_k, cfeat),
-            vec![vote_nn],
-        );
-        let prop = self.rt.run(&cfg.art("prop"), &[&pg])?.remove(0);
-        let prop_nn = push(
-            &mut stages,
-            "prop".into(),
-            nn_dev,
-            nn_workload(m, &cfg.art("prop")),
-            vec![prop_pm],
-        );
-        let cluster_xyz: Vec<[f32; 3]> = pidx.iter().map(|&i| vote_xyz[i]).collect();
+        let pgrp_slot: Slot<(Vec<usize>, Vec<Vec<usize>>)> = Slot::new("proposal groups");
+        let cluster_slot: Slot<Vec<[f32; 3]>> = Slot::new("cluster xyz");
+        let prop_pm = {
+            let (vote_slot, pgrp_slot, cluster_slot) =
+                (vote_slot.clone(), pgrp_slot.clone(), cluster_slot.clone());
+            let (np, pr, pk) = (m.num_proposals, m.proposal_radius, m.proposal_k);
+            b.stage(
+                "prop_pm".into(),
+                point_dev,
+                sa_pointmanip_workload(sa2_n, m.num_proposals, m.proposal_k, m.seed_feat),
+                vec![vote_nn],
+                vec![],
+                Compute::Pool(Box::new(move || {
+                    vote_slot.with(|(vote_xyz, _)| {
+                        let pidx = pointops::fps_par(vote_xyz, np, threads);
+                        let pgroups = pointops::ball_query_par(vote_xyz, &pidx, pr, pk, threads);
+                        cluster_slot.set(pidx.iter().map(|&i| vote_xyz[i]).collect());
+                        pgrp_slot.set((pidx, pgroups));
+                    });
+                    Ok(())
+                })),
+            )
+        };
+        let prop_slot: Slot<Tensor> = Slot::new("proposals");
+        let prop_nn = {
+            let art = cfg.art("prop");
+            let (vote_slot, pgrp_slot, prop_slot) =
+                (vote_slot.clone(), pgrp_slot.clone(), prop_slot.clone());
+            b.stage(
+                "prop".into(),
+                nn_dev,
+                nn_workload(m, &art),
+                vec![prop_pm],
+                vec![],
+                Compute::Host(Box::new(move || {
+                    let (pidx, pgroups) = pgrp_slot.take();
+                    let pg = vote_slot.with(|(vote_xyz, vote_feats)| {
+                        pointops::group_features(vote_xyz, Some(vote_feats), &pidx, &pgroups)
+                    });
+                    prop_slot.set(self.rt.run(&art, &[&pg])?.remove(0));
+                    Ok(())
+                })),
+            )
+        };
 
         // decode + NMS on the host CPU
-        push(
-            &mut stages,
-            "decode".into(),
-            DeviceKind::Cpu,
-            small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
-            vec![prop_nn],
-        );
+        let det_slot: Slot<Vec<Box3>> = Slot::new("detections");
+        {
+            let (cluster_slot, prop_slot, det_slot) =
+                (cluster_slot.clone(), prop_slot.clone(), det_slot.clone());
+            let (obj_thresh, nms_iou) = (cfg.obj_thresh, cfg.nms_iou);
+            b.stage(
+                "decode".into(),
+                DeviceKind::Cpu,
+                small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
+                vec![prop_nn],
+                vec![],
+                Compute::Pool(Box::new(move || {
+                    let cluster_xyz = cluster_slot.take();
+                    let prop = prop_slot.take();
+                    det_slot.set(decode_detections(m, &cluster_xyz, &prop, obj_thresh, nms_iou));
+                    Ok(())
+                })),
+            );
+        }
 
-        let detections =
-            decode_detections(m, &cluster_xyz, &prop, cfg.obj_thresh, cfg.nms_iou);
-        let timeline = self.sim.run(&stages);
+        // ---------------------------------------------- execute + simulate
+        let specs = DagExecutor::new(self.host_exec).run(b.decls)?;
+        let detections = det_slot.take();
+        let used_scores = if painted { Some(scores_slot.take()) } else { None };
+        let timeline = self.sim.run(&specs);
         let fp32_framework = !cfg.int8() && matches!(cfg.schedule, Schedule::SingleDevice(_));
-        let peak = peak_memory_mb(m, cfg.variant.painted(), fp32_framework, scene.points.len());
+        let peak = peak_memory_mb(m, painted, fp32_framework, n);
         Ok((
             PipelineOutput {
                 detections,
                 timeline,
+                stage_specs: specs,
                 peak_memory_mb: peak,
                 host_ms: t_host.elapsed().as_secs_f64() * 1000.0,
             },
@@ -384,50 +596,48 @@ impl<'a> ScenePipeline<'a> {
         ))
     }
 
-    /// SA1..SA3 of one pipeline (full or half centroid budget).
+    /// Declare SA1..SA3 of one pipeline (full or half centroid budget).
+    /// Returns the SA2 and SA3 level handles for the FP stage.
     #[allow(clippy::too_many_arguments)]
-    fn run_sa_chain(
-        &self,
-        stages: &mut Vec<StageSpec>,
-        push: &mut dyn FnMut(
-            &mut Vec<StageSpec>,
-            String,
-            DeviceKind,
-            crate::sim::Workload,
-            Vec<usize>,
-        ) -> usize,
-        mut state: PipeState,
+    fn declare_sa_chain<'s>(
+        &'s self,
+        b: &mut StageBuilder<'s>,
+        scene: &'s Scene,
+        input: ChainInput,
+        n0: usize,
+        feat_slot: &Slot<(Tensor, Vec<f32>)>,
+        c0: usize,
         tag: &str,
         biased: bool,
-        w0: f32,
         point_dev: DeviceKind,
         nn_dev: DeviceKind,
         seg_stage: Option<usize>,
-    ) -> Result<(PipeState, PipeState)> {
+        paint_stage: Option<usize>,
+        threads: usize,
+    ) -> (ChainLevel, ChainLevel) {
         let cfg = &self.cfg;
         let m = &self.rt.manifest;
         let halves = cfg.variant.split();
         let shape = if halves { "half" } else { "full" };
-        let mut sa2_state = None;
+        let painted = cfg.variant.painted();
+        let mut prev: Option<ChainLevel> = None;
+        let mut sa2 = None;
+        let (mut n_in, mut c_in) = (n0, c0);
         for l in 0..3 {
             let sac = &m.sa_configs[l];
             let mm = if halves { sac.m / 2 } else { sac.m };
-            let use_bias = biased && l < cfg.bias_layers && w0 != 1.0;
+            let use_bias = biased && l < cfg.bias_layers && cfg.w0 != 1.0;
             // the SA-bias pipeline's SA1 starts FPS at n/2 so the two views
             // decorrelate even where the bias weight has no effect (mirrors
             // model.backbone_forward's run_pipeline)
-            let start = if biased && l == 0 { state.xyz.len() / 2 } else { 0 };
-            let idx = if use_bias {
-                pointops::biased_fps_from(&state.xyz, mm, &state.fg, w0, start)
-            } else {
-                pointops::fps_from(&state.xyz, mm, start)
-            };
-            let groups = pointops::ball_query(&state.xyz, &idx, sac.radius, sac.k);
-            let g = pointops::group_features(&state.xyz, state.feats.as_ref(), &idx, &groups);
+            let start = if biased && l == 0 { n_in / 2 } else { 0 };
             // point-manip deps: previous NN of this pipeline produced the
             // features we gather; biased FPS additionally needs the painted
             // fg mask (jump-start rule, Fig. 3)
-            let mut deps: Vec<usize> = state.last_nn.into_iter().collect();
+            let mut deps: Vec<usize> = match &prev {
+                Some(p) => vec![p.nn],
+                None => seg_stage.into_iter().collect(),
+            };
             if use_bias {
                 if let Some(s) = seg_stage {
                     if !deps.contains(&s) {
@@ -439,50 +649,132 @@ impl<'a> ScenePipeline<'a> {
             // jump-starts before segmentation finishes (gather happens in the
             // NN stage's transfer) — but its PointNet needs the paint.
             let deps_pm = if l == 0 && !use_bias { Vec::new() } else { deps.clone() };
-            let cin = state.feats.as_ref().map_or(0, |f| f.row_len());
-            let pm = push(
-                stages,
-                format!("sa{}_{}_pm", l + 1, tag),
-                point_dev,
-                sa_pointmanip_workload(state.xyz.len(), mm, sac.k, cin),
-                deps_pm,
-            );
-            let art = cfg.art(&format!("sa{}_{}", l + 1, shape));
-            let feats_new = self.run_maybe_padded(&art, &g, mm)?;
+            // host-ordering: biased FPS reads the fg mask produced by paint
+            let extra_pm = if use_bias && painted {
+                paint_stage.into_iter().collect()
+            } else {
+                Vec::new()
+            };
+            let geo_out: Slot<Geo> = Slot::new("chain geo");
+            let grp_out: Slot<(Vec<usize>, Vec<Vec<usize>>)> = Slot::new("chain groups");
+            let pm = {
+                let geo_out = geo_out.clone();
+                let grp_out = grp_out.clone();
+                let prev_geo = prev.as_ref().map(|p| p.geo.clone());
+                let input = input.clone();
+                let fgsrc = if use_bias { Some(feat_slot.clone()) } else { None };
+                let (radius, k, w0) = (sac.radius, sac.k, cfg.w0);
+                b.stage(
+                    format!("sa{}_{}_pm", l + 1, tag),
+                    point_dev,
+                    sa_pointmanip_workload(n_in, mm, sac.k, c_in),
+                    deps_pm,
+                    extra_pm,
+                    Compute::Pool(Box::new(move || {
+                        let geo = resolve_geo(&prev_geo, &input, scene);
+                        let idx = match &fgsrc {
+                            Some(fs) => {
+                                let fg: Vec<f32> = fs
+                                    .with(|(_, fg)| geo.src.iter().map(|&i| fg[i]).collect());
+                                pointops::biased_fps_from_par(
+                                    &geo.xyz, mm, &fg, w0, start, threads,
+                                )
+                            }
+                            None => pointops::fps_from_par(&geo.xyz, mm, start, threads),
+                        };
+                        let groups = pointops::ball_query_par(&geo.xyz, &idx, radius, k, threads);
+                        geo_out.set(Geo {
+                            xyz: idx.iter().map(|&i| geo.xyz[i]).collect(),
+                            src: idx.iter().map(|&i| geo.src[i]).collect(),
+                        });
+                        grp_out.set((idx, groups));
+                        Ok(())
+                    })),
+                )
+            };
             let mut deps_nn = vec![pm];
             if l == 0 {
                 if let Some(s) = seg_stage {
                     deps_nn.push(s); // painted features required
                 }
             }
-            let nn = push(
-                stages,
-                format!("sa{}_{}_nn", l + 1, tag),
-                nn_dev,
-                nn_workload(m, &art),
-                deps_nn,
-            );
-            state = PipeState {
-                xyz: idx.iter().map(|&i| state.xyz[i]).collect(),
-                feats: Some(feats_new),
-                fg: idx.iter().map(|&i| state.fg[i]).collect(),
-                last_nn: Some(nn),
+            // host-ordering: the level-0 gather reads features built by the
+            // paint stage (seg alone finishing is not enough)
+            let extra_nn = if l == 0 && painted {
+                paint_stage.into_iter().collect()
+            } else {
+                Vec::new()
+            };
+            let art = cfg.art(&format!("sa{}_{shape}", l + 1));
+            let feats_out: Slot<Tensor> = Slot::new("chain feats");
+            let nn = {
+                let feats_out = feats_out.clone();
+                let grp_out = grp_out.clone();
+                let prev_level = prev.clone();
+                let input = input.clone();
+                let feat_src = feat_slot.clone();
+                b.stage(
+                    format!("sa{}_{}_nn", l + 1, tag),
+                    nn_dev,
+                    nn_workload(m, &art),
+                    deps_nn,
+                    extra_nn,
+                    Compute::Host(Box::new(move || {
+                        let (idx, groups) = grp_out.take();
+                        let g = match &prev_level {
+                            // level > 0: gather from the previous level's
+                            // chain-local geometry and features
+                            Some(p) => p.geo.with(|geo| {
+                                p.feats.with(|f| {
+                                    pointops::group_features(&geo.xyz, Some(f), &idx, &groups)
+                                })
+                            }),
+                            // level 0: gather straight from the (possibly
+                            // subsetted) original cloud
+                            None => match &input {
+                                ChainInput::Full => feat_src.with(|(f, _)| {
+                                    pointops::group_features(
+                                        &scene.points,
+                                        Some(f),
+                                        &idx,
+                                        &groups,
+                                    )
+                                }),
+                                ChainInput::Subset(sub) => {
+                                    let xyz: Vec<[f32; 3]> =
+                                        sub.iter().map(|&i| scene.points[i]).collect();
+                                    let f = feat_src.with(|(f, _)| f.gather_rows(sub));
+                                    pointops::group_features(&xyz, Some(&f), &idx, &groups)
+                                }
+                            },
+                        };
+                        feats_out.set(self.run_maybe_padded(&art, &g, mm)?);
+                        Ok(())
+                    })),
+                )
+            };
+            let level = ChainLevel {
+                geo: geo_out,
+                feats: feats_out,
+                nn,
+                n: mm,
+                c: *sac.mlp.last().expect("sa mlp widths"),
             };
             if l == 1 {
-                sa2_state = Some(PipeState {
-                    xyz: state.xyz.clone(),
-                    feats: state.feats.clone(),
-                    fg: state.fg.clone(),
-                    last_nn: state.last_nn,
-                });
+                sa2 = Some(level.clone());
             }
+            n_in = mm;
+            c_in = level.c;
+            prev = Some(level);
         }
-        Ok((sa2_state.unwrap(), state))
+        (sa2.expect("three SA levels declared"), prev.expect("three SA levels declared"))
     }
 
     /// Execute an SA artifact whose ball-batch dimension may exceed ours
     /// (RandomSplit halves reuse the `half` artifacts of matching size; the
-    /// padding path covers residual mismatches defensively).
+    /// padding path covers residual mismatches defensively). A *smaller*
+    /// artifact is a malformed export — reported as an error, not a panic,
+    /// so the serving path degrades instead of dying.
     fn run_maybe_padded(&self, art: &str, g: &Tensor, b: usize) -> Result<Tensor> {
         let meta = self
             .rt
@@ -493,7 +785,12 @@ impl<'a> ScenePipeline<'a> {
         if want == b {
             return Ok(self.rt.run(art, &[g])?.remove(0));
         }
-        assert!(want > b, "artifact {art} smaller than workload");
+        if want < b {
+            return Err(anyhow!(
+                "artifact '{art}' ball dimension {want} smaller than workload {b} \
+                 (malformed export?)"
+            ));
+        }
         let mut padded = Tensor::zeros(vec![want, g.shape[1], g.shape[2]]);
         padded.data[..g.data.len()].copy_from_slice(&g.data);
         let out = self.rt.run(art, &[&padded])?.remove(0);
@@ -502,19 +799,22 @@ impl<'a> ScenePipeline<'a> {
     }
 }
 
-/// Concatenate two pipeline states (fusion before SA4).
-fn merge(a: PipeState, b: PipeState) -> PipeState {
-    let mut xyz = a.xyz;
-    xyz.extend_from_slice(&b.xyz);
-    let feats = Tensor::concat0(&[a.feats.as_ref().unwrap(), b.feats.as_ref().unwrap()]);
-    let mut fg = a.fg;
-    fg.extend_from_slice(&b.fg);
-    // the merged set is ready when the later of the two pipelines is done
-    let last_nn = match (a.last_nn, b.last_nn) {
-        (Some(x), Some(y)) => Some(x.max(y)),
-        (x, y) => x.or(y),
-    };
-    PipeState { xyz, feats: Some(feats), fg, last_nn }
+/// Resolve a level's input geometry: the previous level's output, or the
+/// (possibly subsetted) original cloud for level 0.
+fn resolve_geo(prev: &Option<Slot<Geo>>, input: &ChainInput, scene: &Scene) -> Geo {
+    match prev {
+        Some(s) => s.cloned(),
+        None => match input {
+            ChainInput::Full => Geo {
+                xyz: scene.points.clone(),
+                src: (0..scene.points.len()).collect(),
+            },
+            ChainInput::Subset(idx) => Geo {
+                xyz: idx.iter().map(|&i| scene.points[i]).collect(),
+                src: idx.as_ref().clone(),
+            },
+        },
+    }
 }
 
 /// Horizontal concat of two (N, C) tensors.
@@ -527,4 +827,41 @@ fn hconcat(a: &Tensor, b: &Tensor) -> Tensor {
         data.extend_from_slice(b.row(i));
     }
     Tensor::new(vec![a.rows(), ca + cb], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pipeline(rt: &Runtime) -> ScenePipeline<'_> {
+        let cfg = DetectorConfig::new(
+            "synrgbd",
+            Variant::PointSplit,
+            true,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        );
+        ScenePipeline::new(rt, cfg)
+    }
+
+    #[test]
+    fn run_maybe_padded_pads_smaller_workloads() {
+        let rt = Runtime::synthetic();
+        let p = pipeline(&rt);
+        // sa1_full expects 256 balls of (32, 15); feed 200
+        let g = Tensor::zeros(vec![200, 32, 15]);
+        let out = p.run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 200).unwrap();
+        assert_eq!(out.rows(), 200);
+    }
+
+    #[test]
+    fn run_maybe_padded_rejects_oversized_workloads_gracefully() {
+        let rt = Runtime::synthetic();
+        let p = pipeline(&rt);
+        let g = Tensor::zeros(vec![300, 32, 15]);
+        let err = p
+            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 300)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("smaller than workload"), "unexpected error: {msg}");
+    }
 }

@@ -7,7 +7,6 @@
 //! [`Runtime`] — executable compilation is per-worker but cached for the
 //! worker's lifetime.
 
-use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -51,7 +50,16 @@ pub fn serve(
     workers: usize,
     seed0: u64,
 ) -> Result<ServeReport> {
-    let dir: PathBuf = rt.dir().to_path_buf();
+    let source = rt.source();
+    // split the host's threads between scene-level workers and each
+    // pipeline's stage-level parallelism so a full pool doesn't oversubscribe
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let per_worker = (cores / workers.max(1)).clamp(1, 4);
+    let host_exec = if per_worker > 1 {
+        crate::exec::HostExec::Parallel { threads: per_worker }
+    } else {
+        crate::exec::HostExec::Sequential
+    };
     let t0 = std::time::Instant::now();
     let (tx_scene, rx_scene) = mpsc::channel::<(usize, Scene)>();
     let rx_scene = Arc::new(Mutex::new(rx_scene));
@@ -77,17 +85,17 @@ pub fn serve(
             let rx = rx_scene.clone();
             let tx = tx_out.clone();
             let cfg = cfg.clone();
-            let dir = dir.clone();
+            let source = source.clone();
             scope.spawn(move || {
                 // private PJRT client per worker (xla handles are !Send)
-                let rt = match Runtime::open(&dir) {
+                let rt = match source.open() {
                     Ok(rt) => rt,
                     Err(e) => {
                         eprintln!("worker failed to open runtime: {e:#}");
                         return;
                     }
                 };
-                let pipe = ScenePipeline::new(&rt, cfg);
+                let pipe = ScenePipeline::new(&rt, cfg).with_host_exec(host_exec);
                 loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {

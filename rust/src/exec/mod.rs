@@ -1,0 +1,561 @@
+//! Scoped-thread DAG executor for the per-scene pipeline (std only).
+//!
+//! The paper's pillar (2) is *parallelized 3D feature extraction*: the
+//! SA-normal and SA-bias half-pipelines run concurrently on GPU and EdgeTPU.
+//! This module gives the **host** execution the same shape. A pipeline is a
+//! list of [`StageDecl`]s — each stage declared exactly once as
+//! (name, device, workload, deps, compute closure) — and the executor runs
+//! the closures respecting the dependency edges, so independent stages (the
+//! two SA chains of PointSplit, the two halves of RandomSplit) overlap on
+//! host threads instead of running back-to-back.
+//!
+//! The same declarations feed [`crate::sim::ScheduleSim`] (via the embedded
+//! [`StageSpec`]s), which structurally rules out the class of drift bugs
+//! where the simulated DAG and the functional execution disagree about
+//! dependencies.
+//!
+//! Two lanes:
+//! - [`Compute::Pool`] — pure point-op work; may run on any worker thread.
+//! - [`Compute::Host`] — work that must stay on the invoking thread (PJRT
+//!   executable handles are `Rc`-based and `!Send` with the real `xla`
+//!   backend), i.e. every NN stage.
+//!
+//! Determinism: closures communicate only through [`Slot`]s they own, every
+//! slot has exactly one producer, and a consumer only runs after all its
+//! producers completed — so the parallel execution computes bit-identical
+//! values to the sequential one regardless of thread interleaving
+//! (property-tested in `rust/tests/parallelism.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::sim::StageSpec;
+
+/// Single-producer, multi-consumer value cell connecting stage closures.
+///
+/// The executor guarantees a consumer's closure only runs after its
+/// producers completed, so reads never block — a missing value is a wiring
+/// bug and panics with the slot's debug name.
+pub struct Slot<T> {
+    inner: Arc<Mutex<Option<T>>>,
+    name: &'static str,
+}
+
+impl<T> Clone for Slot<T> {
+    fn clone(&self) -> Self {
+        Slot { inner: self.inner.clone(), name: self.name }
+    }
+}
+
+impl<T> Slot<T> {
+    pub fn new(name: &'static str) -> Slot<T> {
+        Slot { inner: Arc::new(Mutex::new(None)), name }
+    }
+
+    /// Publish the value (producer side).
+    pub fn set(&self, v: T) {
+        *self.inner.lock().unwrap() = Some(v);
+    }
+
+    /// Move the value out (single/last consumer).
+    pub fn take(&self) -> T {
+        self.inner
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| panic!("slot '{}' read before its producer ran", self.name))
+    }
+
+    /// Borrow the value through a closure (shared consumers).
+    pub fn with<R>(&self, f: impl FnOnce(&T) -> R) -> R {
+        let guard = self.inner.lock().unwrap();
+        let v = guard
+            .as_ref()
+            .unwrap_or_else(|| panic!("slot '{}' read before its producer ran", self.name));
+        f(v)
+    }
+}
+
+impl<T: Clone> Slot<T> {
+    /// Clone the value out (shared consumers of cheap data).
+    pub fn cloned(&self) -> T {
+        self.with(|v| v.clone())
+    }
+}
+
+/// Host execution policy of a pipeline run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostExec {
+    /// Run every stage closure on the calling thread in submission order.
+    Sequential,
+    /// DAG-parallel: pool stages spread over `threads` total threads
+    /// (including the calling thread, which also owns the host lane).
+    Parallel { threads: usize },
+}
+
+impl HostExec {
+    /// Default policy: parallel over the machine's cores (capped at 8),
+    /// overridable with `POINTSPLIT_HOST_THREADS` (1 forces sequential).
+    pub fn auto() -> HostExec {
+        let t = std::env::var("POINTSPLIT_HOST_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+            });
+        if t <= 1 {
+            HostExec::Sequential
+        } else {
+            HostExec::Parallel { threads: t }
+        }
+    }
+
+    /// Total thread budget (1 = sequential).
+    pub fn threads(self) -> usize {
+        match self {
+            HostExec::Sequential => 1,
+            HostExec::Parallel { threads } => threads.max(1),
+        }
+    }
+}
+
+/// A stage's functional work.
+pub enum Compute<'s> {
+    /// Pure host computation; may run on any pool thread.
+    Pool(Box<dyn FnOnce() -> Result<()> + Send + 's>),
+    /// Must run on the invoking thread (e.g. touches PJRT handles).
+    Host(Box<dyn FnOnce() -> Result<()> + 's>),
+}
+
+/// One pipeline stage: the simulator spec plus the host closure computing it.
+pub struct StageDecl<'s> {
+    /// What the calibrated device model simulates — name, device, workload,
+    /// and the *timeline* dependencies.
+    pub spec: StageSpec,
+    /// Host-ordering dependencies beyond `spec.deps` (data produced by a
+    /// stage the simulated timeline does not wait for, e.g. painted features
+    /// gathered during an NN stage's transfer window).
+    pub extra_deps: Vec<usize>,
+    pub compute: Compute<'s>,
+}
+
+/// Dependency-respecting executor over a list of [`StageDecl`]s.
+pub struct DagExecutor {
+    mode: HostExec,
+}
+
+/// Shared scheduler state for the parallel path.
+struct SchedState<'s> {
+    pool_jobs: Vec<Option<Box<dyn FnOnce() -> Result<()> + Send + 's>>>,
+    ready_pool: VecDeque<usize>,
+    ready_host: VecDeque<usize>,
+    /// stages unlocked by each stage's completion
+    dependents: Vec<Vec<usize>>,
+    indegree: Vec<usize>,
+    remaining: usize,
+    failed: Option<anyhow::Error>,
+}
+
+struct Shared<'s> {
+    state: Mutex<SchedState<'s>>,
+    cv: Condvar,
+    is_host: Vec<bool>,
+}
+
+impl DagExecutor {
+    pub fn new(mode: HostExec) -> DagExecutor {
+        DagExecutor { mode }
+    }
+
+    /// Execute all stage closures respecting `spec.deps ∪ extra_deps`;
+    /// returns the [`StageSpec`]s for the schedule simulator. Fails fast on
+    /// the first stage error (remaining stages are skipped).
+    pub fn run(&self, decls: Vec<StageDecl<'_>>) -> Result<Vec<StageSpec>> {
+        let n = decls.len();
+        let mut specs = Vec::with_capacity(n);
+        let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut computes = Vec::with_capacity(n);
+        for (i, d) in decls.into_iter().enumerate() {
+            let mut all: Vec<usize> = d.spec.deps.clone();
+            all.extend_from_slice(&d.extra_deps);
+            all.sort_unstable();
+            all.dedup();
+            if all.iter().any(|&p| p >= i) {
+                return Err(anyhow!(
+                    "stage {i} ('{}') depends on itself or a later stage",
+                    d.spec.name
+                ));
+            }
+            deps.push(all);
+            specs.push(d.spec);
+            computes.push(d.compute);
+        }
+        if self.mode.threads() <= 1 {
+            // submission order is a topological order (deps point backwards)
+            for c in computes {
+                match c {
+                    Compute::Pool(f) => f()?,
+                    Compute::Host(f) => f()?,
+                }
+            }
+            return Ok(specs);
+        }
+        self.run_parallel(&deps, computes)?;
+        Ok(specs)
+    }
+
+    fn run_parallel<'s>(&self, deps: &[Vec<usize>], computes: Vec<Compute<'s>>) -> Result<()> {
+        let n = computes.len();
+        let mut is_host = vec![false; n];
+        let mut pool_jobs: Vec<Option<Box<dyn FnOnce() -> Result<()> + Send + 's>>> =
+            (0..n).map(|_| None).collect();
+        let mut host_jobs: Vec<Option<Box<dyn FnOnce() -> Result<()> + 's>>> =
+            (0..n).map(|_| None).collect();
+        for (i, c) in computes.into_iter().enumerate() {
+            match c {
+                Compute::Pool(f) => pool_jobs[i] = Some(f),
+                Compute::Host(f) => {
+                    is_host[i] = true;
+                    host_jobs[i] = Some(f);
+                }
+            }
+        }
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indegree = vec![0usize; n];
+        let mut ready_pool = VecDeque::new();
+        let mut ready_host = VecDeque::new();
+        for (i, ds) in deps.iter().enumerate() {
+            indegree[i] = ds.len();
+            for &p in ds {
+                dependents[p].push(i);
+            }
+            if ds.is_empty() {
+                if is_host[i] {
+                    ready_host.push_back(i);
+                } else {
+                    ready_pool.push_back(i);
+                }
+            }
+        }
+        let shared = Shared {
+            state: Mutex::new(SchedState {
+                pool_jobs,
+                ready_pool,
+                ready_host,
+                dependents,
+                indegree,
+                remaining: n,
+                failed: None,
+            }),
+            cv: Condvar::new(),
+            is_host,
+        };
+        let workers = self.mode.threads().saturating_sub(1).min(n.max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let job = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            if st.remaining == 0 || st.failed.is_some() {
+                                return;
+                            }
+                            if let Some(i) = st.ready_pool.pop_front() {
+                                let f = st.pool_jobs[i].take().expect("pool job present");
+                                break (i, f);
+                            }
+                            st = shared.cv.wait(st).unwrap();
+                        }
+                    };
+                    let res = (job.1)();
+                    finish(&shared, job.0, res);
+                });
+            }
+            // The calling thread owns the host lane and helps with pool
+            // work when the host lane is idle (work-conserving).
+            loop {
+                let job = {
+                    let mut st = shared.state.lock().unwrap();
+                    loop {
+                        if st.remaining == 0 || st.failed.is_some() {
+                            shared.cv.notify_all();
+                            return;
+                        }
+                        if let Some(i) = st.ready_host.pop_front() {
+                            break HostJob::Host(i);
+                        }
+                        if let Some(i) = st.ready_pool.pop_front() {
+                            let f = st.pool_jobs[i].take().expect("pool job present");
+                            break HostJob::Pool(i, f);
+                        }
+                        st = shared.cv.wait(st).unwrap();
+                    }
+                };
+                match job {
+                    HostJob::Host(i) => {
+                        let f = host_jobs[i].take().expect("host job present");
+                        let res = f();
+                        finish(&shared, i, res);
+                    }
+                    HostJob::Pool(i, f) => {
+                        let res = f();
+                        finish(&shared, i, res);
+                    }
+                }
+            }
+        });
+        let mut st = shared.state.lock().unwrap();
+        match st.failed.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+enum HostJob<'s> {
+    Host(usize),
+    Pool(usize, Box<dyn FnOnce() -> Result<()> + Send + 's>),
+}
+
+fn finish(shared: &Shared<'_>, i: usize, res: Result<()>) {
+    let mut st = shared.state.lock().unwrap();
+    st.remaining -= 1;
+    match res {
+        Ok(()) => {
+            let unlocked = std::mem::take(&mut st.dependents[i]);
+            for j in unlocked {
+                st.indegree[j] -= 1;
+                if st.indegree[j] == 0 {
+                    if shared.is_host[j] {
+                        st.ready_host.push_back(j);
+                    } else {
+                        st.ready_pool.push_back(j);
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            if st.failed.is_none() {
+                st.failed = Some(e);
+            }
+        }
+    }
+    shared.cv.notify_all();
+}
+
+/// Deterministic parallel map: applies `f` to every item on up to `threads`
+/// scoped threads, preserving input order. Falls back to a plain loop for
+/// tiny inputs or `threads <= 1`. `f` receives `(index, item)`.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n < 2 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let nt = threads.min(n);
+    let chunk = n.div_ceil(nt);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (ci, (ochunk, ichunk)) in out.chunks_mut(chunk).zip(items.chunks(chunk)).enumerate() {
+            scope.spawn(move || {
+                for (j, (o, it)) in ochunk.iter_mut().zip(ichunk.iter()).enumerate() {
+                    *o = Some(f(ci * chunk + j, it));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn decl<'s>(name: &str, deps: Vec<usize>, compute: Compute<'s>) -> StageDecl<'s> {
+        use crate::sim::{DeviceKind, Precision, Workload, WorkloadKind};
+        StageDecl {
+            spec: StageSpec {
+                name: name.to_string(),
+                device: DeviceKind::Cpu,
+                workload: Workload {
+                    kind: WorkloadKind::PointOp,
+                    precision: Precision::Fp32,
+                    flops: 1,
+                    mem_bytes: 0,
+                    wire_bytes: 0,
+                },
+                deps,
+            },
+            extra_deps: Vec::new(),
+            compute,
+        }
+    }
+
+    fn modes() -> [HostExec; 3] {
+        [
+            HostExec::Sequential,
+            HostExec::Parallel { threads: 2 },
+            HostExec::Parallel { threads: 8 },
+        ]
+    }
+
+    #[test]
+    fn diamond_dag_respects_order() {
+        for mode in modes() {
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let push = |tag: &'static str| {
+                let log = log.clone();
+                Compute::Pool(Box::new(move || {
+                    log.lock().unwrap().push(tag);
+                    Ok(())
+                }))
+            };
+            let decls = vec![
+                decl("a", vec![], push("a")),
+                decl("b", vec![0], push("b")),
+                decl("c", vec![0], push("c")),
+                decl("d", vec![1, 2], push("d")),
+            ];
+            let specs = DagExecutor::new(mode).run(decls).unwrap();
+            assert_eq!(specs.len(), 4);
+            let order = log.lock().unwrap().clone();
+            assert_eq!(order.len(), 4);
+            assert_eq!(order[0], "a");
+            assert_eq!(order[3], "d");
+        }
+    }
+
+    #[test]
+    fn host_stages_run_on_calling_thread() {
+        let main_id = std::thread::current().id();
+        for mode in modes() {
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            let decls = (0..6)
+                .map(|i| {
+                    let seen = seen.clone();
+                    decl(
+                        "h",
+                        if i == 0 { vec![] } else { vec![i - 1] },
+                        Compute::Host(Box::new(move || {
+                            seen.lock().unwrap().push(std::thread::current().id());
+                            Ok(())
+                        })),
+                    )
+                })
+                .collect();
+            DagExecutor::new(mode).run(decls).unwrap();
+            assert!(
+                seen.lock().unwrap().iter().all(|&id| id == main_id),
+                "host-lane stage escaped the calling thread ({mode:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn independent_pool_stages_overlap() {
+        // two stages that each wait for the other to start can only finish
+        // if they truly run concurrently
+        let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let enter = |gate: Arc<(Mutex<usize>, Condvar)>| {
+            Compute::Pool(Box::new(move || {
+                let (m, cv) = &*gate;
+                let mut count = m.lock().unwrap();
+                *count += 1;
+                cv.notify_all();
+                let deadline = std::time::Duration::from_secs(10);
+                while *count < 2 {
+                    let (c, timeout) = cv.wait_timeout(count, deadline).unwrap();
+                    count = c;
+                    if timeout.timed_out() {
+                        return Err(anyhow!("peer stage never started: no overlap"));
+                    }
+                }
+                Ok(())
+            }))
+        };
+        let decls = vec![
+            decl("x", vec![], enter(gate.clone())),
+            decl("y", vec![], enter(gate.clone())),
+        ];
+        DagExecutor::new(HostExec::Parallel { threads: 4 }).run(decls).unwrap();
+    }
+
+    #[test]
+    fn error_propagates_and_skips_dependents() {
+        for mode in modes() {
+            let ran = Arc::new(AtomicUsize::new(0));
+            let ran2 = ran.clone();
+            let decls = vec![
+                decl("bad", vec![], Compute::Pool(Box::new(|| Err(anyhow!("boom"))))),
+                decl(
+                    "after",
+                    vec![0],
+                    Compute::Pool(Box::new(move || {
+                        ran2.fetch_add(1, Ordering::SeqCst);
+                        Ok(())
+                    })),
+                ),
+            ];
+            let err = DagExecutor::new(mode).run(decls).unwrap_err();
+            assert!(format!("{err:#}").contains("boom"));
+            assert_eq!(ran.load(Ordering::SeqCst), 0, "dependent of failed stage ran");
+        }
+    }
+
+    #[test]
+    fn forward_dep_rejected() {
+        let decls = vec![
+            decl("a", vec![1], Compute::Pool(Box::new(|| Ok(())))),
+            decl("b", vec![], Compute::Pool(Box::new(|| Ok(())))),
+        ];
+        assert!(DagExecutor::new(HostExec::Sequential).run(decls).is_err());
+    }
+
+    #[test]
+    fn slots_move_values_between_stages() {
+        for mode in modes() {
+            let a: Slot<Vec<u32>> = Slot::new("a");
+            let b: Slot<u32> = Slot::new("b");
+            let (a1, a2, b1) = (a.clone(), a.clone(), b.clone());
+            let decls = vec![
+                decl(
+                    "produce",
+                    vec![],
+                    Compute::Pool(Box::new(move || {
+                        a1.set(vec![1, 2, 3]);
+                        Ok(())
+                    })),
+                ),
+                decl(
+                    "consume",
+                    vec![0],
+                    Compute::Host(Box::new(move || {
+                        b1.set(a2.with(|v| v.iter().sum()));
+                        Ok(())
+                    })),
+                ),
+            ];
+            DagExecutor::new(mode).run(decls).unwrap();
+            assert_eq!(b.take(), 6);
+        }
+    }
+
+    #[test]
+    fn par_map_matches_sequential_in_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let seq: Vec<u64> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [1, 2, 3, 8] {
+            assert_eq!(par_map(&items, threads, |_, &x| x * x + 1), seq);
+        }
+        let empty: Vec<u64> = Vec::new();
+        assert!(par_map(&empty, 4, |_, &x: &u64| x).is_empty());
+    }
+}

@@ -27,6 +27,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod exec;
 pub mod metrics;
 pub mod pointops;
 pub mod quant;

@@ -11,7 +11,7 @@
 //! pointsplit serve-traffic [--pattern poisson|bursty|diurnal|all] [--load 0.8 | --rate RPS]
 //!                     [--duration-s 30] [--deadline-ms 1000] [--policy degrade|shed|none]
 //!                     [--queue-cap 64] [--batch-max 4] [--batch-wait-ms 25] [--hi-frac 0]
-//!                     [--functional] [... detect flags]
+//!                     [--functional] [--exec-workers N] [... detect flags]
 //!     open-loop traffic gateway on the simulated clock; print a
 //!     ServeTrafficReport per arrival pattern (see docs/SERVING.md)
 //! pointsplit devices
@@ -61,8 +61,20 @@ fn print_help() {
     println!("commands: check | detect | serve | serve-traffic | devices   (see rust/src/main.rs docs)");
 }
 
+/// Open the artifacts runtime, falling back to the synthetic manifest +
+/// deterministic host surrogate when no artifacts have been exported (so
+/// `detect` / `serve` / `serve-traffic --functional` work out of the box).
 fn open_runtime(cli: &Cli) -> Result<Runtime> {
-    Runtime::open(cli.get_or("artifacts", "artifacts"))
+    let dir = cli.get_or("artifacts", "artifacts");
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Runtime::open(dir)
+    } else {
+        eprintln!(
+            "note: no artifacts at '{dir}' — using the synthetic manifest and the \
+             deterministic host surrogate (run `make artifacts` for the real models)"
+        );
+        Ok(Runtime::synthetic())
+    }
 }
 
 fn detector_config(cli: &Cli) -> Result<(DetectorConfig, &'static data::DatasetCfg)> {
@@ -80,7 +92,8 @@ fn detector_config(cli: &Cli) -> Result<(DetectorConfig, &'static data::DatasetC
 }
 
 fn cmd_check(cli: &Cli) -> Result<()> {
-    let rt = open_runtime(cli)?;
+    // `check` is explicitly about the exported artifacts: no fallback
+    let rt = Runtime::open(cli.get_or("artifacts", "artifacts"))?;
     println!("platform: {}", rt.platform());
     let (ok, failures) = rt.check_all();
     println!("compiled {ok}/{} artifacts", rt.manifest.artifacts.len());
@@ -282,6 +295,16 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
         policy.name()
     );
     let rt_holder = if cli.get_bool("functional") { Some(open_runtime(cli)?) } else { None };
+    // one long-lived per-scene worker pool shared across all patterns
+    let exec = match (&rt_holder, cli.get("exec-workers")) {
+        (Some(rt), Some(_)) => Some(PipelineExecutor::with_workers(
+            rt,
+            ds,
+            cli.get_usize("exec-workers", 4)?,
+        )),
+        (Some(rt), None) => Some(PipelineExecutor::new(rt, ds)),
+        (None, _) => None,
+    };
     for pattern in patterns {
         let load = LoadGen {
             pattern,
@@ -300,7 +323,6 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
             batch,
             policy,
         };
-        let exec = rt_holder.as_ref().map(|rt| PipelineExecutor::new(rt, ds));
         let rep = run_traffic(&sc, &planner, exec.as_ref());
         rep.print();
         println!();

@@ -7,17 +7,23 @@
 //! §Perf: a uniform grid (cell size = radius) prunes the candidate set from
 //! N to the 27 neighboring cells, turning the O(M*N) scan into ~O(M*K) for
 //! indoor point densities (see EXPERIMENTS.md §Perf for the before/after).
+//! `ball_query_par` additionally spreads the per-center loop over scoped
+//! threads — every center's result is independent, so the output is
+//! identical for any thread count. The [`Grid`] is shared with
+//! `pointops::interp`'s 3-NN search.
 
 use std::collections::HashMap;
 
-/// Uniform hash grid over the cloud, cell size = radius.
-struct Grid {
+use crate::exec::par_map;
+
+/// Uniform hash grid over a point cloud.
+pub(crate) struct Grid {
     cell: f32,
     cells: HashMap<(i32, i32, i32), Vec<u32>>,
 }
 
 impl Grid {
-    fn build(xyz: &[[f32; 3]], cell: f32) -> Grid {
+    pub(crate) fn build(xyz: &[[f32; 3]], cell: f32) -> Grid {
         let mut cells: HashMap<(i32, i32, i32), Vec<u32>> =
             HashMap::with_capacity(xyz.len() / 2);
         for (i, p) in xyz.iter().enumerate() {
@@ -29,8 +35,12 @@ impl Grid {
         Grid { cell, cells }
     }
 
+    pub(crate) fn cell_size(&self) -> f32 {
+        self.cell
+    }
+
     #[inline]
-    fn key(p: &[f32; 3], cell: f32) -> (i32, i32, i32) {
+    pub(crate) fn key(p: &[f32; 3], cell: f32) -> (i32, i32, i32) {
         (
             (p[0] / cell).floor() as i32,
             (p[1] / cell).floor() as i32,
@@ -40,7 +50,7 @@ impl Grid {
 
     /// Visit all points in the 27 cells around `c`.
     #[inline]
-    fn neighbors(&self, c: &[f32; 3], mut f: impl FnMut(u32)) {
+    pub(crate) fn neighbors(&self, c: &[f32; 3], mut f: impl FnMut(u32)) {
         let (kx, ky, kz) = Self::key(c, self.cell);
         for dx in -1..=1 {
             for dy in -1..=1 {
@@ -54,6 +64,85 @@ impl Grid {
             }
         }
     }
+
+    /// Visit all points in cells at Chebyshev distance exactly `ring` from
+    /// the cell containing `c` (ring 0 = the center cell itself). Used by
+    /// the expanding 3-NN search in `interp`. Enumerates only the shell's
+    /// six faces — O(ring²) cells, not O(ring³).
+    pub(crate) fn ring(&self, c: &[f32; 3], ring: i32, mut f: impl FnMut(u32)) {
+        let (kx, ky, kz) = Self::key(c, self.cell);
+        let mut cell = |dx: i32, dy: i32, dz: i32| {
+            if let Some(v) = self.cells.get(&(kx + dx, ky + dy, kz + dz)) {
+                for &i in v {
+                    f(i);
+                }
+            }
+        };
+        if ring == 0 {
+            cell(0, 0, 0);
+            return;
+        }
+        // z = ±ring full faces; y = ±ring minus the z edges; x = ±ring core
+        for dx in -ring..=ring {
+            for dy in -ring..=ring {
+                cell(dx, dy, -ring);
+                cell(dx, dy, ring);
+            }
+        }
+        for dx in -ring..=ring {
+            for dz in -(ring - 1)..=(ring - 1) {
+                cell(dx, -ring, dz);
+                cell(dx, ring, dz);
+            }
+        }
+        for dy in -(ring - 1)..=(ring - 1) {
+            for dz in -(ring - 1)..=(ring - 1) {
+                cell(-ring, dy, dz);
+                cell(ring, dy, dz);
+            }
+        }
+    }
+}
+
+/// One center's group: K nearest in-radius members (grid-pruned candidates).
+fn query_one(
+    grid: &Grid,
+    xyz: &[[f32; 3]],
+    ci: usize,
+    r2: f32,
+    k: usize,
+    hits: &mut Vec<(f32, usize)>,
+) -> Vec<usize> {
+    let c = xyz[ci];
+    hits.clear();
+    grid.neighbors(&c, |j| {
+        let p = xyz[j as usize];
+        let dx = p[0] - c[0];
+        let dy = p[1] - c[1];
+        let dz = p[2] - c[2];
+        let d2 = dx * dx + dy * dy + dz * dz;
+        if d2 <= r2 {
+            hits.push((d2, j as usize));
+        }
+    });
+    hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut out: Vec<usize> = hits.iter().take(k).map(|&(_, j)| j).collect();
+    let fill = out.first().copied().unwrap_or_else(|| {
+        // empty ball (rare): brute-force global nearest
+        let mut nearest = (f32::INFINITY, ci);
+        for (j, p) in xyz.iter().enumerate() {
+            let dx = p[0] - c[0];
+            let dy = p[1] - c[1];
+            let dz = p[2] - c[2];
+            let d2 = dx * dx + dy * dy + dz * dz;
+            if d2 < nearest.0 {
+                nearest = (d2, j);
+            }
+        }
+        nearest.1
+    });
+    out.resize(k, fill);
+    out
 }
 
 /// Returns (M, K) neighbor indices for each center index.
@@ -63,44 +152,31 @@ pub fn ball_query(
     radius: f32,
     k: usize,
 ) -> Vec<Vec<usize>> {
+    ball_query_par(xyz, centers, radius, k, 1)
+}
+
+/// `ball_query` with the per-center loop spread over up to `threads`
+/// scoped threads. Identical output for any thread count.
+pub fn ball_query_par(
+    xyz: &[[f32; 3]],
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+    threads: usize,
+) -> Vec<Vec<usize>> {
     let r2 = radius * radius;
     let grid = Grid::build(xyz, radius);
-    let mut hits: Vec<(f32, usize)> = Vec::with_capacity(64);
-    centers
-        .iter()
-        .map(|&ci| {
-            let c = xyz[ci];
-            hits.clear();
-            grid.neighbors(&c, |j| {
-                let p = xyz[j as usize];
-                let dx = p[0] - c[0];
-                let dy = p[1] - c[1];
-                let dz = p[2] - c[2];
-                let d2 = dx * dx + dy * dy + dz * dz;
-                if d2 <= r2 {
-                    hits.push((d2, j as usize));
-                }
-            });
-            hits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-            let mut out: Vec<usize> = hits.iter().take(k).map(|&(_, j)| j).collect();
-            let fill = out.first().copied().unwrap_or_else(|| {
-                // empty ball (rare): brute-force global nearest
-                let mut nearest = (f32::INFINITY, ci);
-                for (j, p) in xyz.iter().enumerate() {
-                    let dx = p[0] - c[0];
-                    let dy = p[1] - c[1];
-                    let dz = p[2] - c[2];
-                    let d2 = dx * dx + dy * dy + dz * dz;
-                    if d2 < nearest.0 {
-                        nearest = (d2, j);
-                    }
-                }
-                nearest.1
-            });
-            out.resize(k, fill);
-            out
-        })
-        .collect()
+    if threads <= 1 || centers.len() < 64 {
+        let mut hits: Vec<(f32, usize)> = Vec::with_capacity(64);
+        return centers
+            .iter()
+            .map(|&ci| query_one(&grid, xyz, ci, r2, k, &mut hits))
+            .collect();
+    }
+    par_map(centers, threads, |_, &ci| {
+        let mut hits: Vec<(f32, usize)> = Vec::with_capacity(64);
+        query_one(&grid, xyz, ci, r2, k, &mut hits)
+    })
 }
 
 /// Reference O(M*N) implementation kept for tests and the §Perf comparison.
@@ -167,6 +243,16 @@ mod tests {
     }
 
     #[test]
+    fn parallel_matches_sequential() {
+        let pts = cloud(2000, 11);
+        let centers: Vec<usize> = (0..200).map(|i| i * 10).collect();
+        let seq = ball_query(&pts, &centers, 0.35, 12);
+        for threads in [2, 3, 8] {
+            assert_eq!(ball_query_par(&pts, &centers, 0.35, 12, threads), seq);
+        }
+    }
+
+    #[test]
     fn all_members_within_radius_or_fill() {
         let pts = cloud(400, 1);
         let centers = vec![0, 5, 100];
@@ -218,5 +304,19 @@ mod tests {
             ball_query(&pts, &centers, 0.5, 8),
             ball_query_bruteforce(&pts, &centers, 0.5, 8)
         );
+    }
+
+    #[test]
+    fn ring_zero_is_center_cell_and_rings_partition() {
+        // visiting rings 0..=R must hit every point exactly once once R
+        // spans the cloud
+        let pts = cloud(300, 12);
+        let grid = Grid::build(&pts, 0.5);
+        let c = [1.0f32, 1.0, 0.5];
+        let mut seen = vec![0usize; pts.len()];
+        for ring in 0..8 {
+            grid.ring(&c, ring, |j| seen[j as usize] += 1);
+        }
+        assert!(seen.iter().all(|&s| s == 1), "rings must partition the grid");
     }
 }

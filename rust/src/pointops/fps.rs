@@ -5,22 +5,60 @@
 //! biased variant scales each pairwise distance by `w0` when *either*
 //! endpoint is foreground, so foreground points look "farther" and are
 //! selected more often (w0 > 1) or less often (w0 < 1).
+//!
+//! §Perf: the `_par` entry points run the per-iteration min-distance scan
+//! chunked over scoped threads. Each thread owns a contiguous slice of the
+//! rolling `min_d2` array and reports its chunk's first-max; the reduction
+//! combines chunks in index order with a strict `>`, so the result is
+//! **bit-identical** to the sequential scan for any thread count (the
+//! determinism contract of `exec::DagExecutor`). Small clouds fall back to
+//! the sequential path — the scan is memory-bound and thread handoff only
+//! pays off past a few thousand points.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// Below this cloud size the parallel scan is not worth the barriers.
+const PAR_MIN_POINTS: usize = 4096;
+/// Minimum chunk a scan thread is worth spawning for.
+const PAR_MIN_CHUNK: usize = 1024;
 
 /// Regular FPS: returns `m` indices into `xyz`.
 pub fn fps(xyz: &[[f32; 3]], m: usize) -> Vec<usize> {
-    fps_impl(xyz, m, None, 1.0, 0)
+    fps_impl(xyz, m, None, 1.0, 0, 1)
+}
+
+/// Regular FPS with an inner-loop thread budget.
+pub fn fps_par(xyz: &[[f32; 3]], m: usize, threads: usize) -> Vec<usize> {
+    fps_impl(xyz, m, None, 1.0, 0, threads)
 }
 
 /// FPS from an explicit start index (the SA-bias pipeline starts at n/2 so
 /// the two pipeline views stay decorrelated; mirrors sampling.fps(start=)).
 pub fn fps_from(xyz: &[[f32; 3]], m: usize, start: usize) -> Vec<usize> {
-    fps_impl(xyz, m, None, 1.0, start)
+    fps_impl(xyz, m, None, 1.0, start, 1)
+}
+
+/// `fps_from` with an inner-loop thread budget.
+pub fn fps_from_par(xyz: &[[f32; 3]], m: usize, start: usize, threads: usize) -> Vec<usize> {
+    fps_impl(xyz, m, None, 1.0, start, threads)
 }
 
 /// Biased FPS (paper Eq. 1): `fg[i]` in {0,1}; `w0` weights pairs touching
 /// the foreground set A.
 pub fn biased_fps(xyz: &[[f32; 3]], m: usize, fg: &[f32], w0: f32) -> Vec<usize> {
-    fps_impl(xyz, m, Some(fg), w0, 0)
+    fps_impl(xyz, m, Some(fg), w0, 0, 1)
+}
+
+/// `biased_fps` with an inner-loop thread budget.
+pub fn biased_fps_par(
+    xyz: &[[f32; 3]],
+    m: usize,
+    fg: &[f32],
+    w0: f32,
+    threads: usize,
+) -> Vec<usize> {
+    fps_impl(xyz, m, Some(fg), w0, 0, threads)
 }
 
 /// Biased FPS from an explicit start index.
@@ -31,28 +69,41 @@ pub fn biased_fps_from(
     w0: f32,
     start: usize,
 ) -> Vec<usize> {
-    fps_impl(xyz, m, Some(fg), w0, start)
+    fps_impl(xyz, m, Some(fg), w0, start, 1)
 }
 
-fn fps_impl(xyz: &[[f32; 3]], m: usize, fg: Option<&[f32]>, w0: f32, start: usize) -> Vec<usize> {
-    let n = xyz.len();
-    assert!(m >= 1 && m <= n, "fps: m={m} out of range for n={n}");
-    if let Some(f) = fg {
-        assert_eq!(f.len(), n);
-    }
-    let mut out = Vec::with_capacity(m);
-    let mut min_d2 = vec![f32::INFINITY; n];
-    let mut last = start.min(n - 1);
-    out.push(last);
-    // §Perf: the per-pair bias branch is hoisted out of the inner loop by
-    // specializing the unbiased path (the common case: every SA layer of
-    // SA-normal plus SA3+ of SA-bias).
-    if w0 == 1.0 || fg.is_none() {
-        for _ in 1..m {
-            let lp = xyz[last];
-            let mut best = 0usize;
-            let mut best_v = f32::NEG_INFINITY;
-            for (j, (p, md)) in xyz.iter().zip(min_d2.iter_mut()).enumerate() {
+/// `biased_fps_from` with an inner-loop thread budget.
+pub fn biased_fps_from_par(
+    xyz: &[[f32; 3]],
+    m: usize,
+    fg: &[f32],
+    w0: f32,
+    start: usize,
+    threads: usize,
+) -> Vec<usize> {
+    fps_impl(xyz, m, Some(fg), w0, start, threads)
+}
+
+/// Scan one chunk of the cloud: update its `min_d2` slice against the last
+/// selected point and return the chunk's running first-max `(value, index)`.
+/// `off` is the chunk's offset into the full cloud.
+#[inline]
+fn scan_chunk(
+    xyz: &[[f32; 3]],
+    min_d2: &mut [f32],
+    off: usize,
+    lp: [f32; 3],
+    bias: Option<(&[f32], f32, f32)>, // (fg, fg_last, w0)
+) -> (f32, usize) {
+    let mut best = off;
+    let mut best_v = f32::NEG_INFINITY;
+    match bias {
+        None => {
+            for (j, (p, md)) in xyz[off..off + min_d2.len()]
+                .iter()
+                .zip(min_d2.iter_mut())
+                .enumerate()
+            {
                 let dx = p[0] - lp[0];
                 let dy = p[1] - lp[1];
                 let dz = p[2] - lp[2];
@@ -63,41 +114,135 @@ fn fps_impl(xyz: &[[f32; 3]], m: usize, fg: Option<&[f32]>, w0: f32, start: usiz
                 // first-max tie break, matching jnp.argmax
                 if *md > best_v {
                     best_v = *md;
-                    best = j;
+                    best = off + j;
                 }
             }
-            out.push(best);
-            last = best;
         }
-        return out;
+        Some((fg, fg_last, w0)) => {
+            for (j, (p, md)) in xyz[off..off + min_d2.len()]
+                .iter()
+                .zip(min_d2.iter_mut())
+                .enumerate()
+            {
+                let dx = p[0] - lp[0];
+                let dy = p[1] - lp[1];
+                let dz = p[2] - lp[2];
+                let mut d2 = dx * dx + dy * dy + dz * dz;
+                // either-endpoint-foreground indicator (Eq. 1)
+                let fg_j = fg[off + j];
+                let either = fg_j + fg_last - fg_j * fg_last;
+                let f = 1.0 + (w0 - 1.0) * either;
+                d2 *= f * f;
+                if d2 < *md {
+                    *md = d2;
+                }
+                if *md > best_v {
+                    best_v = *md;
+                    best = off + j;
+                }
+            }
+        }
     }
-    let fg = fg.unwrap();
+    (best_v, best)
+}
+
+fn fps_impl(
+    xyz: &[[f32; 3]],
+    m: usize,
+    fg: Option<&[f32]>,
+    w0: f32,
+    start: usize,
+    threads: usize,
+) -> Vec<usize> {
+    let n = xyz.len();
+    assert!(m >= 1 && m <= n, "fps: m={m} out of range for n={n}");
+    // reject — don't silently clamp — a start index outside the cloud
+    assert!(start < n, "fps: start={start} out of range for n={n}");
+    if let Some(f) = fg {
+        assert_eq!(f.len(), n);
+    }
+    // hoist the per-pair bias branch by specializing the unbiased path (the
+    // common case: every SA layer of SA-normal plus SA3+ of SA-bias)
+    let bias = match fg {
+        Some(f) if w0 != 1.0 => Some((f, w0)),
+        _ => None,
+    };
+    let nt = if threads > 1 && n >= PAR_MIN_POINTS {
+        threads.min(n / PAR_MIN_CHUNK).max(1)
+    } else {
+        1
+    };
+    if nt > 1 {
+        return fps_parallel(xyz, m, bias, start, nt);
+    }
+    let mut out = Vec::with_capacity(m);
+    let mut min_d2 = vec![f32::INFINITY; n];
+    let mut last = start;
+    out.push(last);
     for _ in 1..m {
-        let lp = xyz[last];
-        let fg_last = fg[last];
-        let mut best = 0usize;
-        let mut best_v = f32::NEG_INFINITY;
-        for (j, (p, md)) in xyz.iter().zip(min_d2.iter_mut()).enumerate() {
-            let dx = p[0] - lp[0];
-            let dy = p[1] - lp[1];
-            let dz = p[2] - lp[2];
-            let mut d2 = dx * dx + dy * dy + dz * dz;
-            // either-endpoint-foreground indicator (Eq. 1)
-            let fg_j = fg[j];
-            let either = fg_j + fg_last - fg_j * fg_last;
-            let f = 1.0 + (w0 - 1.0) * either;
-            d2 *= f * f;
-            if d2 < *md {
-                *md = d2;
-            }
-            if *md > best_v {
-                best_v = *md;
-                best = j;
-            }
-        }
+        let chunk_bias = bias.map(|(f, w)| (f, f[last], w));
+        let (_, best) = scan_chunk(xyz, &mut min_d2, 0, xyz[last], chunk_bias);
         out.push(best);
         last = best;
     }
+    out
+}
+
+/// Chunked-parallel scan: `nt` scoped threads each own one contiguous slice
+/// of `min_d2`; the caller reduces the per-chunk first-maxima in chunk order
+/// between two barriers per iteration.
+fn fps_parallel(
+    xyz: &[[f32; 3]],
+    m: usize,
+    bias: Option<(&[f32], f32)>,
+    start: usize,
+    nt: usize,
+) -> Vec<usize> {
+    let n = xyz.len();
+    let mut out = Vec::with_capacity(m);
+    out.push(start);
+    if m == 1 {
+        return out;
+    }
+    let chunk_len = n.div_ceil(nt);
+    let mut min_d2 = vec![f32::INFINITY; n];
+    let chunks: Vec<&mut [f32]> = min_d2.chunks_mut(chunk_len).collect();
+    let nt = chunks.len(); // may be fewer than requested
+    let last = AtomicUsize::new(start);
+    let results: Vec<Mutex<(f32, usize)>> =
+        (0..nt).map(|_| Mutex::new((f32::NEG_INFINITY, 0))).collect();
+    let barrier = Barrier::new(nt + 1);
+    std::thread::scope(|scope| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let (results, barrier, last) = (&results, &barrier, &last);
+            scope.spawn(move || {
+                let off = t * chunk_len;
+                for _ in 1..m {
+                    let cur = last.load(Ordering::Acquire);
+                    let chunk_bias = bias.map(|(f, w)| (f, f[cur], w));
+                    let r = scan_chunk(xyz, chunk, off, xyz[cur], chunk_bias);
+                    *results[t].lock().unwrap() = r;
+                    barrier.wait(); // results posted
+                    barrier.wait(); // reduction done, `last` updated
+                }
+            });
+        }
+        for _ in 1..m {
+            barrier.wait();
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for r in &results {
+                let v = *r.lock().unwrap();
+                // strict > keeps the earliest chunk on ties — the same
+                // first-max rule as the sequential scan
+                if v.0 > best.0 {
+                    best = v;
+                }
+            }
+            out.push(best.1);
+            last.store(best.1, Ordering::Release);
+            barrier.wait();
+        }
+    });
     out
 }
 
@@ -191,6 +336,40 @@ mod tests {
         let pts = cloud(300, 6);
         let fg = vec![1.0; 300];
         assert_eq!(fps(&pts, 50), biased_fps(&pts, 50, &fg, 1.0));
+    }
+
+    #[test]
+    fn parallel_scan_is_bit_identical_to_sequential() {
+        // large enough to clear PAR_MIN_POINTS; try several thread counts,
+        // with and without bias, with odd/even chunk splits
+        for (n, seed) in [(PAR_MIN_POINTS, 7u64), (PAR_MIN_POINTS + 533, 8u64)] {
+            let pts = cloud(n, seed);
+            let fg: Vec<f32> =
+                pts.iter().map(|p| if p[0] < 1.5 { 1.0 } else { 0.0 }).collect();
+            let seq = fps(&pts, 96);
+            let seq_b = biased_fps(&pts, 96, &fg, 2.0);
+            let seq_s = fps_from(&pts, 96, n / 2);
+            for threads in [2, 3, 4, 7] {
+                assert_eq!(fps_par(&pts, 96, threads), seq, "threads={threads}");
+                assert_eq!(
+                    biased_fps_par(&pts, 96, &fg, 2.0, threads),
+                    seq_b,
+                    "biased threads={threads}"
+                );
+                assert_eq!(
+                    fps_from_par(&pts, 96, n / 2, threads),
+                    seq_s,
+                    "start threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "start=300 out of range")]
+    fn out_of_range_start_rejected() {
+        let pts = cloud(300, 9);
+        fps_from(&pts, 8, 300);
     }
 }
 

@@ -1,7 +1,110 @@
 //! Feature propagation: inverse-distance-weighted 3-NN interpolation
 //! (mirror of sampling.three_nn_interpolate).
+//!
+//! §Perf: the production path reuses the uniform hash [`Grid`] from
+//! `ballquery` with an expanding-ring search, replacing the O(Nd*Ns)
+//! brute-force scan, and `three_nn_interpolate_par` spreads destination
+//! points over scoped threads. Candidates are ranked by `(d2, index)` so the
+//! grid search, the brute-force reference, and every thread count produce
+//! identical neighbor sets (exact-tie handling included).
+//!
+//! Degenerate sources are well-defined: zero source points interpolate to
+//! zeros, and 1 or 2 sources use all of them with IDW weights — no
+//! `(INFINITY, 0)` sentinel ever reaches the weighting (the seed code
+//! panicked on `row(0)` for empty sources and could emit NaN for Ns < 3).
 
+use super::ballquery::Grid;
+use crate::exec::par_map;
 use crate::util::tensor::Tensor;
+
+/// Below this source count a brute-force scan beats building a grid.
+const GRID_MIN_SRC: usize = 64;
+/// A destination this many empty rings away from the source bounding box
+/// falls back to the O(Ns) scan — bounded work for destinations far
+/// outside the cloud, where even the face-only shell walk adds up.
+const FAR_BRUTE_RINGS: i32 = 64;
+
+#[inline]
+fn lex_lt(a: (f32, usize), b: (f32, usize)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+/// Insert a candidate into the sorted best-`kk` array (ranked by (d2, j)).
+#[inline]
+fn insert(best: &mut [(f32, usize); 3], kk: usize, d2: f32, j: usize) {
+    if !lex_lt((d2, j), best[kk - 1]) {
+        return;
+    }
+    best[kk - 1] = (d2, j);
+    let mut i = kk - 1;
+    while i > 0 && lex_lt(best[i], best[i - 1]) {
+        best.swap(i, i - 1);
+        i -= 1;
+    }
+}
+
+#[inline]
+fn dist2(a: &[f32; 3], b: &[f32; 3]) -> f32 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    dx * dx + dy * dy + dz * dz
+}
+
+/// `kk` nearest sources to `d` via expanding grid rings. After finishing
+/// ring R every unvisited point is farther than `R * cell`, so the search
+/// stops as soon as the current `kk`-th best is within that bound.
+/// `start_ring` skips rings that provably contain no source point (queries
+/// far outside the source bounding box); `max_ring` bounds the search once
+/// every populated cell has been visited.
+fn knn_grid(
+    d: &[f32; 3],
+    src: &[[f32; 3]],
+    grid: &Grid,
+    kk: usize,
+    start_ring: i32,
+    max_ring: i32,
+) -> [(f32, usize); 3] {
+    let cell = grid.cell_size();
+    let mut best = [(f32::INFINITY, usize::MAX); 3];
+    let mut ring = start_ring.max(0);
+    loop {
+        grid.ring(d, ring, |j| {
+            let j = j as usize;
+            insert(&mut best, kk, dist2(d, &src[j]), j);
+        });
+        let covered = (ring as f32) * cell;
+        // strict <: on an exact f32 tie at the ring boundary an unvisited
+        // lower-index point could still win the (d2, index) ranking, so
+        // search one more ring — keeps grid == brute force even then
+        if best[kk - 1].0.is_finite() && best[kk - 1].0 < covered * covered {
+            break;
+        }
+        ring += 1;
+        if ring > max_ring {
+            break; // every populated cell visited
+        }
+    }
+    best
+}
+
+/// IDW-weighted feature row for one destination point.
+#[inline]
+fn idw_row(best: &[(f32, usize); 3], kk: usize, src_feats: &Tensor, out: &mut [f32]) {
+    let mut w = [0.0f32; 3];
+    let mut wsum = 0.0f32;
+    for i in 0..kk {
+        w[i] = 1.0 / best[i].0.max(1e-8);
+        wsum += w[i];
+    }
+    for i in 0..kk {
+        let row = src_feats.row(best[i].1);
+        let wn = w[i] / wsum;
+        for (o, v) in out.iter_mut().zip(row.iter()) {
+            *o += wn * v;
+        }
+    }
+}
 
 /// Interpolate `src_feats` (Ns, C) at `dst_xyz` from `src_xyz` -> (Nd, C).
 pub fn three_nn_interpolate(
@@ -9,38 +112,99 @@ pub fn three_nn_interpolate(
     src_xyz: &[[f32; 3]],
     src_feats: &Tensor,
 ) -> Tensor {
+    three_nn_interpolate_par(dst_xyz, src_xyz, src_feats, 1)
+}
+
+/// `three_nn_interpolate` with destination points spread over up to
+/// `threads` scoped threads. Identical output for any thread count.
+pub fn three_nn_interpolate_par(
+    dst_xyz: &[[f32; 3]],
+    src_xyz: &[[f32; 3]],
+    src_feats: &Tensor,
+    threads: usize,
+) -> Tensor {
     assert_eq!(src_xyz.len(), src_feats.rows());
     let c = src_feats.row_len();
+    let ns = src_xyz.len();
+    if ns < GRID_MIN_SRC {
+        // small sources (incl. the degenerate Ns < 3 cases): the reference
+        // scan is cheaper than building a grid and shares the ranking rule
+        return three_nn_interpolate_bruteforce(dst_xyz, src_xyz, src_feats);
+    }
+    let kk = ns.min(3);
+    // grid cell sized for ~1 source point per cell
+    let mut lo = src_xyz[0];
+    let mut hi = src_xyz[0];
+    for p in src_xyz {
+        for a in 0..3 {
+            lo[a] = lo[a].min(p[a]);
+            hi[a] = hi[a].max(p[a]);
+        }
+    }
+    let extent = (hi[0] - lo[0]).max(hi[1] - lo[1]).max(hi[2] - lo[2]);
+    let cell = extent / (ns as f32).cbrt();
+    if cell < 1e-4 {
+        // near-coincident cloud: grid cells would degenerate and ring
+        // searches crawl; the plain scan is bounded and exact
+        return three_nn_interpolate_bruteforce(dst_xyz, src_xyz, src_feats);
+    }
+    let grid = Grid::build(src_xyz, cell);
+    // past this ring the search has seen every populated cell no matter
+    // where the query sits relative to the source bounding box
+    let span = ((extent / cell).ceil() as i32).saturating_add(1);
+    let rows = par_map(dst_xyz, threads, |_, d| {
+        // Chebyshev distance from the query to the source bounding box:
+        // rings below floor(r/cell) - 1 cannot contain a source point, and
+        // rings beyond span + ceil(r/cell) + 1 have all been visited
+        let mut r = 0f32;
+        for a in 0..3 {
+            r = r.max((lo[a] - d[a]).max(d[a] - hi[a]).max(0.0));
+        }
+        let start_ring = ((r / cell).floor() as i32).saturating_sub(1);
+        let mut row = vec![0.0f32; c];
+        if start_ring > FAR_BRUTE_RINGS {
+            // far outside the cloud: a plain scan is bounded and exact
+            let mut best = [(f32::INFINITY, usize::MAX); 3];
+            for (j, s) in src_xyz.iter().enumerate() {
+                insert(&mut best, kk, dist2(d, s), j);
+            }
+            idw_row(&best, kk, src_feats, &mut row);
+        } else {
+            let max_ring = span
+                .saturating_add((r / cell).ceil() as i32)
+                .saturating_add(1);
+            let best = knn_grid(d, src_xyz, &grid, kk, start_ring, max_ring);
+            idw_row(&best, kk, src_feats, &mut row);
+        }
+        row
+    });
     let mut out = Vec::with_capacity(dst_xyz.len() * c);
-    for d in dst_xyz {
-        // 3 nearest sources
-        let mut best = [(f32::INFINITY, 0usize); 3];
+    for r in rows {
+        out.extend_from_slice(&r);
+    }
+    Tensor::new(vec![dst_xyz.len(), c], out)
+}
+
+/// Reference O(Nd*Ns) scan kept for tests and the §Perf comparison.
+pub fn three_nn_interpolate_bruteforce(
+    dst_xyz: &[[f32; 3]],
+    src_xyz: &[[f32; 3]],
+    src_feats: &Tensor,
+) -> Tensor {
+    assert_eq!(src_xyz.len(), src_feats.rows());
+    let c = src_feats.row_len();
+    let ns = src_xyz.len();
+    if ns == 0 {
+        return Tensor::zeros(vec![dst_xyz.len(), c]);
+    }
+    let kk = ns.min(3);
+    let mut out = vec![0.0f32; dst_xyz.len() * c];
+    for (d, orow) in dst_xyz.iter().zip(out.chunks_mut(c.max(1))) {
+        let mut best = [(f32::INFINITY, usize::MAX); 3];
         for (j, s) in src_xyz.iter().enumerate() {
-            let dx = d[0] - s[0];
-            let dy = d[1] - s[1];
-            let dz = d[2] - s[2];
-            let d2 = dx * dx + dy * dy + dz * dz;
-            if d2 < best[2].0 {
-                best[2] = (d2, j);
-                if best[2].0 < best[1].0 {
-                    best.swap(1, 2);
-                }
-                if best[1].0 < best[0].0 {
-                    best.swap(0, 1);
-                }
-            }
+            insert(&mut best, kk, dist2(d, s), j);
         }
-        let w: Vec<f32> = best.iter().map(|&(d2, _)| 1.0 / d2.max(1e-8)).collect();
-        let wsum: f32 = w.iter().sum();
-        let start = out.len();
-        out.resize(start + c, 0.0);
-        for (wi, &(_, j)) in w.iter().zip(best.iter()) {
-            let row = src_feats.row(j);
-            let wn = wi / wsum;
-            for (o, v) in out[start..].iter_mut().zip(row.iter()) {
-                *o += wn * v;
-            }
-        }
+        idw_row(&best, kk, src_feats, orow);
     }
     Tensor::new(vec![dst_xyz.len(), c], out)
 }
@@ -48,12 +212,23 @@ pub fn three_nn_interpolate(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    fn cloud(n: usize, seed: u64) -> Vec<[f32; 3]> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| [r.f32() * 3.0, r.f32() * 3.0, r.f32()]).collect()
+    }
+
+    fn feats(n: usize, c: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::new(vec![n, c], (0..n * c).map(|_| r.f32() * 4.0 - 2.0).collect())
+    }
 
     #[test]
     fn exact_at_source_points() {
         let src = vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [1.0, 1.0, 0.0]];
-        let feats = Tensor::new(vec![4, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]);
-        let out = three_nn_interpolate(&src, &src, &feats);
+        let f = Tensor::new(vec![4, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let out = three_nn_interpolate(&src, &src, &f);
         // at a source point the nearest neighbor has d2~0 -> dominates
         assert!((out.row(2)[0] - 3.0).abs() < 1e-3);
         assert!((out.row(2)[1] - 30.0).abs() < 1e-2);
@@ -62,9 +237,88 @@ mod tests {
     #[test]
     fn interpolation_is_convex_combination() {
         let src = vec![[0.0, 0.0, 0.0], [2.0, 0.0, 0.0], [0.0, 2.0, 0.0]];
-        let feats = Tensor::new(vec![3, 1], vec![0.0, 6.0, 12.0]);
-        let out = three_nn_interpolate(&[[0.5, 0.5, 0.0]], &src, &feats);
+        let f = Tensor::new(vec![3, 1], vec![0.0, 6.0, 12.0]);
+        let out = three_nn_interpolate(&[[0.5, 0.5, 0.0]], &src, &f);
         let v = out.data[0];
         assert!(v > 0.0 && v < 12.0);
+    }
+
+    #[test]
+    fn grid_matches_bruteforce() {
+        for seed in 0..4 {
+            let src = cloud(400, seed); // > GRID_MIN_SRC -> grid path
+            let f = feats(400, 7, seed + 100);
+            let dst = cloud(150, seed + 200);
+            let a = three_nn_interpolate(&dst, &src, &f);
+            let b = three_nn_interpolate_bruteforce(&dst, &src, &f);
+            assert_eq!(a, b, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let src = cloud(500, 21);
+        let f = feats(500, 5, 22);
+        let dst = cloud(300, 23);
+        let seq = three_nn_interpolate(&dst, &src, &f);
+        for threads in [2, 3, 8] {
+            assert_eq!(three_nn_interpolate_par(&dst, &src, &f, threads), seq);
+        }
+    }
+
+    #[test]
+    fn faraway_destinations_still_find_sources() {
+        // dst far outside the src bounding box exercises the ring cap
+        let src = cloud(200, 31);
+        let f = feats(200, 3, 32);
+        let dst = vec![[50.0, -40.0, 10.0], [-9.0, 0.0, 0.0]];
+        let a = three_nn_interpolate(&dst, &src, &f);
+        let b = three_nn_interpolate_bruteforce(&dst, &src, &f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn degenerate_extent_far_destination_terminates() {
+        // >= GRID_MIN_SRC near-coincident sources clamp the cell size to
+        // 1e-4; a far destination must take the bounded fallback scan, not
+        // an astronomically long ring search
+        let src: Vec<[f32; 3]> = (0..80).map(|i| [1.0 + i as f32 * 1e-7, 2.0, 0.5]).collect();
+        let f = feats(80, 2, 40);
+        let dst = vec![[60.0, -10.0, 3.0], [1.0, 2.0, 0.5]];
+        let a = three_nn_interpolate(&dst, &src, &f);
+        let b = three_nn_interpolate_bruteforce(&dst, &src, &f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_source_interpolates_to_zeros() {
+        let src: Vec<[f32; 3]> = Vec::new();
+        let f = Tensor::zeros(vec![0, 4]);
+        let out = three_nn_interpolate(&[[0.0, 0.0, 0.0], [1.0, 1.0, 1.0]], &src, &f);
+        assert_eq!(out.shape, vec![2, 4]);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn single_source_copies_features() {
+        let src = vec![[1.0, 2.0, 3.0]];
+        let f = Tensor::new(vec![1, 3], vec![7.0, -1.0, 0.5]);
+        let out = three_nn_interpolate(&[[0.0, 0.0, 0.0], [9.0, 9.0, 9.0]], &src, &f);
+        for i in 0..2 {
+            assert_eq!(out.row(i), &[7.0, -1.0, 0.5], "dst {i}");
+        }
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn two_sources_interpolate_without_nan() {
+        let src = vec![[0.0, 0.0, 0.0], [2.0, 0.0, 0.0]];
+        let f = Tensor::new(vec![2, 1], vec![0.0, 10.0]);
+        let out = three_nn_interpolate(&[[1.0, 0.0, 0.0], [0.0, 0.0, 0.0]], &src, &f);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        // midpoint: equal weights
+        assert!((out.data[0] - 5.0).abs() < 1e-4);
+        // at src 0 the near point dominates
+        assert!(out.data[1] < 1.0);
     }
 }

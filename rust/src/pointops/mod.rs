@@ -12,10 +12,13 @@ pub mod density;
 pub mod interp;
 pub mod paint;
 
-pub use ballquery::ball_query;
+pub use ballquery::{ball_query, ball_query_par};
 pub use density::{density_biased_sample, local_density};
-pub use fps::{biased_fps, biased_fps_from, fps, fps_from};
-pub use interp::three_nn_interpolate;
+pub use fps::{
+    biased_fps, biased_fps_from, biased_fps_from_par, biased_fps_par, fps, fps_from, fps_from_par,
+    fps_par,
+};
+pub use interp::{three_nn_interpolate, three_nn_interpolate_par};
 pub use paint::{build_features, fg_mask, paint_points};
 
 use crate::util::tensor::Tensor;

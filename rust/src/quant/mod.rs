@@ -65,8 +65,11 @@ impl ActQuant {
         let mut scale = vec![0.0f32; cout];
         let mut zero = vec![0.0f32; cout];
         for g in groups {
-            let glo = g.iter().map(|&c| lo[c]).fold(0.0f32, f32::min);
-            let ghi = g.iter().map(|&c| hi[c]).fold(0.0f32, f32::max);
+            // fold with ±INFINITY identities: a 0.0 identity silently
+            // widened every all-positive (post-ReLU) or all-negative
+            // group's range to include zero, wasting INT8 codes
+            let glo = g.iter().map(|&c| lo[c]).fold(f32::INFINITY, f32::min);
+            let ghi = g.iter().map(|&c| hi[c]).fold(f32::NEG_INFINITY, f32::max);
             let s = ((ghi - glo) / 255.0).max(1e-8);
             let z = (-128.0 - glo / s).round().clamp(-128.0, 127.0);
             for &c in g {
@@ -200,6 +203,37 @@ mod tests {
         assert_eq!(mk(Granularity::Role), 9);
         assert_eq!(mk(Granularity::Group(3)), 9);
         assert_eq!(mk(Granularity::Channel), 240);
+    }
+
+    #[test]
+    fn all_positive_group_keeps_full_range() {
+        // regression: the old 0.0 fold identity stretched an all-positive
+        // group's range down to zero, wasting codes below the true minimum
+        let lo = vec![2.0f32, 3.0];
+        let hi = vec![4.0f32, 6.0];
+        let q = ActQuant::calibrate(&lo, &hi, &[vec![0, 1]]);
+        let expect = (6.0 - 2.0) / 255.0; // true group range, not [0, 6]
+        assert!(
+            (q.scale[0] - expect).abs() < 1e-7,
+            "scale {} should cover [2, 6] only, not [0, 6]",
+            q.scale[0]
+        );
+        // and the tighter scale must quantize an in-range tensor better
+        let t = Tensor::new(vec![2, 2], vec![2.5, 3.5, 3.9, 5.5]);
+        let loose = ActQuant {
+            scale: vec![6.0 / 255.0; 2],
+            zero: vec![(-128.0f32).round(); 2],
+            num_groups: 1,
+        };
+        assert!(qdq_mse(&t, &q) < qdq_mse(&t, &loose));
+    }
+
+    #[test]
+    fn all_negative_group_keeps_full_range() {
+        let lo = vec![-6.0f32];
+        let hi = vec![-2.0f32];
+        let q = ActQuant::calibrate(&lo, &hi, &[vec![0]]);
+        assert!(((q.scale[0]) - (4.0 / 255.0)).abs() < 1e-7, "scale {}", q.scale[0]);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Deterministic host surrogate for the AOT PJRT executables.
+//!
+//! The vendored `xla` crate is a stub — it cannot compile or execute HLO —
+//! so on machines without a real PJRT backend the functional pipeline used
+//! to die at its first NN call. This module stands in for the executables
+//! with small fixed-function networks whose weights are derived from a hash
+//! of the artifact name: fully deterministic (same artifact + same input →
+//! bit-identical output, on any thread), shape-correct per the manifest, and
+//! cheap enough that the host hot path stays dominated by point ops.
+//!
+//! This is a *reference executor*, not the trained model: detections are
+//! internally consistent (stable across runs, usable for determinism tests,
+//! scheduling studies, and serving experiments) but their accuracy is
+//! meaningless. Swapping `rust/Cargo.toml` to a real `xla-rs` build restores
+//! execution of the exported artifacts; the surrogate then never runs.
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::util::tensor::Tensor;
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+fn hash_str(s: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Pseudo-random weight in [-1, 1] for (artifact key, out channel, in channel).
+#[inline]
+fn weight(key: u64, j: u64, c: u64) -> f32 {
+    let h = mix(
+        key ^ j.wrapping_mul(0x9E3779B97F4A7C15) ^ c.wrapping_mul(0xD1B54A32D192ED03),
+    );
+    ((h >> 11) as f64 * (2.0 / (1u64 << 53) as f64) - 1.0) as f32
+}
+
+/// Deterministic dense layer: rows (n, cin) -> tanh(rows @ W + b) (n, cout).
+fn dense(x_rows: impl Iterator<Item = Vec<f32>>, n: usize, cin: usize, cout: usize, key: u64) -> Tensor {
+    // materialize W once per call (cout x cin + bias)
+    let mut w = Vec::with_capacity(cout * cin);
+    for j in 0..cout {
+        for c in 0..cin {
+            w.push(weight(key, j as u64, c as u64));
+        }
+    }
+    let bias: Vec<f32> = (0..cout).map(|j| 0.1 * weight(key ^ 0xB1A5, j as u64, 0)).collect();
+    let scale = 1.0 / (cin.max(1) as f32).sqrt();
+    let mut out = Vec::with_capacity(n * cout);
+    for row in x_rows {
+        debug_assert_eq!(row.len(), cin);
+        for j in 0..cout {
+            let wrow = &w[j * cin..(j + 1) * cin];
+            let mut acc = 0.0f32;
+            for (wv, xv) in wrow.iter().zip(row.iter()) {
+                acc += wv * xv;
+            }
+            out.push((acc * scale + bias[j]).tanh());
+        }
+    }
+    Tensor::new(vec![n, cout], out)
+}
+
+/// Mean-pool the ball dimension of a (b, k, c) tensor into (b, c) rows.
+fn pooled_rows(x: &Tensor) -> impl Iterator<Item = Vec<f32>> + '_ {
+    let (b, k, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    (0..b).map(move |i| {
+        let mut pool = vec![0.0f32; c];
+        let base = i * k * c;
+        for kk in 0..k {
+            for (p, v) in pool.iter_mut().zip(x.data[base + kk * c..base + (kk + 1) * c].iter()) {
+                *p += v;
+            }
+        }
+        let inv = 1.0 / k.max(1) as f32;
+        for p in pool.iter_mut() {
+            *p *= inv;
+        }
+        pool
+    })
+}
+
+/// Execute one artifact on the surrogate. Output shapes follow the manifest
+/// contract for the artifact's `net` role.
+pub fn run(manifest: &Manifest, meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let x = inputs
+        .first()
+        .ok_or_else(|| anyhow!("surrogate '{}': no input", meta.name))?;
+    let key = hash_str(&meta.name);
+    match meta.net.as_str() {
+        // (H, W, 3) RGB -> (H, W, num_seg_classes) softmax scores
+        "seg" => {
+            let (h, w, cin) = (x.shape[0], x.shape[1], x.shape[2]);
+            let nseg = manifest.num_seg_classes;
+            let logits = dense(
+                (0..h * w).map(|p| x.data[p * cin..(p + 1) * cin].to_vec()),
+                h * w,
+                cin,
+                nseg,
+                key,
+            );
+            let mut out = logits.data;
+            for p in 0..h * w {
+                let row = &mut out[p * nseg..(p + 1) * nseg];
+                let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let mut s = 0.0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - m).exp();
+                    s += *v;
+                }
+                for v in row.iter_mut() {
+                    *v /= s;
+                }
+            }
+            Ok(vec![Tensor::new(vec![h, w, nseg], out)])
+        }
+        // (n, fp_in) -> (n, seed_feat)
+        "fp_fc" => {
+            let (n, cin) = (x.shape[0], x.shape[1]);
+            Ok(vec![dense(
+                (0..n).map(|i| x.row(i).to_vec()),
+                n,
+                cin,
+                manifest.seed_feat,
+                key,
+            )])
+        }
+        // (n, seed_feat) -> (n, 3 + seed_feat) vote offsets + residuals
+        "vote" => {
+            let (n, cin) = (x.shape[0], x.shape[1]);
+            Ok(vec![dense(
+                (0..n).map(|i| x.row(i).to_vec()),
+                n,
+                cin,
+                3 + manifest.seed_feat,
+                key,
+            )])
+        }
+        // (p, k, c) proposal groups -> (p, head channels)
+        "prop" => {
+            let b = x.shape[0];
+            let cin = x.shape[2];
+            let head_ch = manifest.head_layout.sem_cls.1;
+            Ok(vec![dense(pooled_rows(x), b, cin, head_ch, key)])
+        }
+        // saN_full / saN_half: (b, k, cin) -> (b, mlp.last)
+        net if net.starts_with("sa") => {
+            let level: usize = net[2..3]
+                .parse()
+                .map_err(|_| anyhow!("surrogate: bad SA net name '{net}'"))?;
+            let sac = manifest
+                .sa_configs
+                .get(level - 1)
+                .ok_or_else(|| anyhow!("surrogate: SA level {level} out of range"))?;
+            let cout = *sac.mlp.last().expect("sa mlp widths");
+            let b = x.shape[0];
+            let cin = x.shape[2];
+            Ok(vec![dense(pooled_rows(x), b, cin, cout, key)])
+        }
+        other => Err(anyhow!("surrogate: unknown net role '{other}' ({})", meta.name)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::synthetic()
+    }
+
+    fn probe(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(
+            shape.to_vec(),
+            (0..n).map(|i| (0.1 + 0.001 * i as f64).sin() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn deterministic_and_shape_correct() {
+        let m = manifest();
+        for name in [
+            "synrgbd_seg_fp32",
+            "synrgbd_pointsplit_sa1_half_int8",
+            "synrgbd_pointsplit_sa4_full_int8",
+            "synrgbd_pointsplit_fp_fc_int8",
+            "synrgbd_pointsplit_vote_int8_role",
+            "synrgbd_pointsplit_prop_int8_role",
+        ] {
+            let meta = m.artifact(name).expect(name).clone();
+            let x = probe(&meta.input_shapes[0]);
+            let a = run(&m, &meta, &[&x]).expect(name);
+            let b = run(&m, &meta, &[&x]).expect(name);
+            assert_eq!(a.len(), 1);
+            assert_eq!(a[0], b[0], "{name} must be deterministic");
+            assert!(a[0].data.iter().all(|v| v.is_finite()), "{name} non-finite");
+        }
+    }
+
+    #[test]
+    fn seg_rows_are_distributions() {
+        let m = manifest();
+        let meta = m.artifact("synrgbd_seg_fp32").unwrap().clone();
+        let x = probe(&meta.input_shapes[0]);
+        let out = run(&m, &meta, &[&x]).unwrap().remove(0);
+        assert_eq!(out.shape, vec![m.img_size, m.img_size, m.num_seg_classes]);
+        for p in 0..m.img_size * m.img_size {
+            let s: f32 = out.data[p * m.num_seg_classes..(p + 1) * m.num_seg_classes]
+                .iter()
+                .sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn different_artifacts_give_different_outputs() {
+        let m = manifest();
+        let a = m.artifact("synrgbd_pointsplit_vote_int8_role").unwrap().clone();
+        let b = m.artifact("synrgbd_pointsplit_vote_fp32").unwrap().clone();
+        let x = probe(&a.input_shapes[0]);
+        let ya = run(&m, &a, &[&x]).unwrap().remove(0);
+        let yb = run(&m, &b, &[&x]).unwrap().remove(0);
+        assert_ne!(ya, yb, "precision variants must not alias");
+    }
+
+    #[test]
+    fn sa_output_width_follows_mlp() {
+        let m = manifest();
+        let meta = m.artifact("synrgbd_pointsplit_sa2_half_int8").unwrap().clone();
+        let x = probe(&meta.input_shapes[0]);
+        let out = run(&m, &meta, &[&x]).unwrap().remove(0);
+        assert_eq!(out.shape, vec![meta.input_shapes[0][0], *m.sa_configs[1].mlp.last().unwrap()]);
+    }
+}

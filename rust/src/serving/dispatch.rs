@@ -15,15 +15,16 @@
 //! dispatcher emits one [`RequestOutcome`] per arrival (property-tested in
 //! `rust/tests/proptests.rs`).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::{DetectorConfig, ScenePipeline};
 use crate::data::{generate_scene, Box3, DatasetCfg};
 use crate::eval::{eval_map, Detection};
-use crate::runtime::Runtime;
+use crate::exec::HostExec;
+use crate::runtime::{Runtime, RuntimeSource};
 use crate::util::stats::Stats;
 
 use super::batcher::{self, BatchPolicy};
@@ -147,24 +148,86 @@ impl ServeTrafficReport {
     }
 }
 
-/// Functional batch executor: runs dispatched scenes through the real
-/// [`ScenePipeline`] so reports carry accuracy next to simulated latency.
-/// Requires exported artifacts and a real PJRT backend (the vendored `xla`
-/// stub makes every execution fail, in which case the dispatcher falls back
-/// to simulation-only and reports `map_25 = None`).
-pub struct PipelineExecutor<'a> {
-    rt: &'a Runtime,
-    ds: &'static DatasetCfg,
-    pipes: RefCell<HashMap<String, ScenePipeline<'a>>>,
+/// One scene execution request handed to the worker pool.
+struct ExecJob {
+    cfg: DetectorConfig,
+    seed: u64,
+    slot: usize,
 }
 
-impl<'a> PipelineExecutor<'a> {
-    pub fn new(rt: &'a Runtime, ds: &'static DatasetCfg) -> PipelineExecutor<'a> {
-        PipelineExecutor { rt, ds, pipes: RefCell::new(HashMap::new()) }
+type ExecResult = (usize, Result<(Vec<Box3>, Vec<Box3>)>);
+
+/// Cache key discriminating every config field that changes pipeline
+/// behaviour (mirrors `ServicePlanner::cost`'s cache key).
+fn pipe_key(cfg: &DetectorConfig) -> String {
+    format!(
+        "{}|{}|{}|{}|{:?}|{}|{}|{}",
+        cfg.dataset,
+        cfg.variant.name(),
+        cfg.precision_backbone,
+        cfg.precision_head,
+        cfg.schedule,
+        cfg.w0,
+        cfg.bias_layers,
+        cfg.seg_passes
+    )
+}
+
+/// Functional batch executor: runs dispatched scenes through the real
+/// [`ScenePipeline`] on a pool of long-lived worker threads, so serving
+/// throughput scales with host cores (each worker owns a private runtime —
+/// PJRT handles are not `Send` with a real `xla` backend — and a pipeline
+/// cache keyed by config). Reports then carry accuracy next to simulated
+/// latency. Without a real PJRT backend the runtime's deterministic host
+/// surrogate executes the NN stages, so this works offline too; if a worker
+/// cannot open a runtime at all, execution errors surface on the first
+/// batch and the dispatcher falls back to simulation-only (`map_25 = None`).
+pub struct PipelineExecutor {
+    job_tx: Option<mpsc::Sender<ExecJob>>,
+    res_rx: mpsc::Receiver<ExecResult>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PipelineExecutor {
+    /// Pool sized to the host (capped at 4 workers).
+    pub fn new(rt: &Runtime, ds: &'static DatasetCfg) -> PipelineExecutor {
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        PipelineExecutor::with_workers(rt, ds, cores.min(4))
+    }
+
+    /// Pool with an explicit per-scene worker count.
+    pub fn with_workers(
+        rt: &Runtime,
+        ds: &'static DatasetCfg,
+        workers: usize,
+    ) -> PipelineExecutor {
+        let workers = workers.max(1);
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        // split the host's threads between scene-level and stage-level
+        // parallelism so a full batch doesn't oversubscribe
+        let per_worker = (cores / workers).clamp(1, 4);
+        let host_exec = if per_worker > 1 {
+            HostExec::Parallel { threads: per_worker }
+        } else {
+            HostExec::Sequential
+        };
+        let (job_tx, job_rx) = mpsc::channel::<ExecJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = mpsc::channel::<ExecResult>();
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = job_rx.clone();
+                let tx = res_tx.clone();
+                let source: RuntimeSource = rt.source();
+                std::thread::spawn(move || worker_loop(source, ds, host_exec, &rx, &tx))
+            })
+            .collect();
+        PipelineExecutor { job_tx: Some(job_tx), res_rx, workers: handles }
     }
 
     /// Execute each request's scene; returns (detections, ground truth) per
-    /// request in order.
+    /// request in order. Scenes of one batch run concurrently across the
+    /// worker pool.
     ///
     /// Fidelity caveat: degraded batches run with the degraded *precisions*
     /// (the dispatcher passes the fast config), but at the full point budget
@@ -176,31 +239,84 @@ impl<'a> PipelineExecutor<'a> {
         cfg: &DetectorConfig,
         reqs: &[Request],
     ) -> Result<Vec<(Vec<Box3>, Vec<Box3>)>> {
-        // must discriminate every field that changes pipeline behaviour
-        // (mirrors ServicePlanner::cost's cache key)
-        let key = format!(
-            "{}|{}|{}|{}|{:?}|{}|{}|{}",
-            cfg.dataset,
-            cfg.variant.name(),
-            cfg.precision_backbone,
-            cfg.precision_head,
-            cfg.schedule,
-            cfg.w0,
-            cfg.bias_layers,
-            cfg.seg_passes
-        );
-        let mut pipes = self.pipes.borrow_mut();
-        let pipe = pipes
-            .entry(key)
-            .or_insert_with(|| ScenePipeline::new(self.rt, cfg.clone()));
-        let mut out = Vec::with_capacity(reqs.len());
-        for r in reqs {
-            let scene = generate_scene(r.seed, self.ds);
-            let gt = scene.gt_boxes();
-            let res = pipe.run(&scene, r.seed)?;
-            out.push((res.detections, gt));
+        let tx = self.job_tx.as_ref().expect("executor pool alive");
+        for (slot, r) in reqs.iter().enumerate() {
+            tx.send(ExecJob { cfg: cfg.clone(), seed: r.seed, slot })
+                .map_err(|_| anyhow!("pipeline executor workers exited"))?;
         }
-        Ok(out)
+        let mut out: Vec<Option<(Vec<Box3>, Vec<Box3>)>> =
+            (0..reqs.len()).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        // drain exactly one result per job even on error, so a failed batch
+        // cannot leak stale results into the next one
+        for _ in 0..reqs.len() {
+            match self.res_rx.recv() {
+                Ok((slot, Ok(pair))) => out[slot] = Some(pair),
+                Ok((_, Err(e))) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => return Err(anyhow!("pipeline executor workers exited")),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(out.into_iter().map(|o| o.expect("every slot filled")).collect())
+    }
+}
+
+impl Drop for PipelineExecutor {
+    fn drop(&mut self) {
+        self.job_tx.take(); // close the channel; workers drain and exit
+        for h in self.workers.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+fn worker_loop(
+    source: RuntimeSource,
+    ds: &'static DatasetCfg,
+    host_exec: HostExec,
+    rx: &Mutex<mpsc::Receiver<ExecJob>>,
+    tx: &mpsc::Sender<ExecResult>,
+) {
+    let rt = match source.open() {
+        Ok(rt) => rt,
+        Err(e) => {
+            // still answer every job so the dispatcher never blocks
+            let msg = format!("{e:#}");
+            loop {
+                let job = { rx.lock().unwrap().recv() };
+                let Ok(job) = job else { return };
+                let err = anyhow!("worker runtime unavailable: {msg}");
+                if tx.send((job.slot, Err(err))).is_err() {
+                    return;
+                }
+            }
+        }
+    };
+    let mut pipes: HashMap<String, ScenePipeline<'_>> = HashMap::new();
+    loop {
+        let job = { rx.lock().unwrap().recv() };
+        let Ok(job) = job else { return };
+        let pipe = pipes.entry(pipe_key(&job.cfg)).or_insert_with(|| {
+            ScenePipeline::new(&rt, job.cfg.clone()).with_host_exec(host_exec)
+        });
+        let scene = generate_scene(job.seed, ds);
+        let gt = scene.gt_boxes();
+        // a panic inside the pipeline must still produce a result, or the
+        // dispatcher's recv() for this slot would block forever
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pipe.run(&scene, job.seed)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("worker panicked executing scene {}", job.seed)))
+        .map(|out| (out.detections, gt));
+        if tx.send((job.slot, res)).is_err() {
+            return;
+        }
     }
 }
 

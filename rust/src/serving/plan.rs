@@ -46,11 +46,13 @@ pub struct ServicePlanner {
     cache: RefCell<HashMap<String, PlanCost>>,
 }
 
-/// Rolling per-pipeline planning state (mirrors `pipeline::PipeState`).
+/// Rolling per-pipeline planning state (mirrors `pipeline::ChainLevel`).
 struct PlanLevel {
     n: usize,
     cin: usize,
-    last_nn: Option<usize>,
+    /// sim indices of the NN stages that must finish before the next
+    /// point-manip may consume this level (one per contributing pipeline)
+    last_nn: Vec<usize>,
 }
 
 /// Stage-DAG accumulator with the sequential-schedule chaining rule.
@@ -201,13 +203,17 @@ impl ServicePlanner {
             }
         };
 
-        // SA4 over the fused SA3 set
+        // SA4 over the fused SA3 set: it must wait for **both** pipelines'
+        // SA3 PointNets (the old single `max(a, b)` dependency let sa4_pm
+        // start before the slower pipeline finished)
         let sa4cfg = &m.sa_configs[3];
+        let mut deps4 = sa3.last_nn.clone();
+        deps4.sort_unstable();
         let pm4 = dag.push(
             "sa4_pm".into(),
             point_dev,
             sa_pointmanip_workload(sa3.n, sa4cfg.m, sa4cfg.k, sa3.cin),
-            sa3.last_nn.into_iter().collect(),
+            deps4,
         );
         let nn4 = dag.push(
             "sa4_nn".into(),
@@ -274,13 +280,14 @@ impl ServicePlanner {
         let m = &self.manifest;
         let halves = cfg.variant.split();
         let shape = if halves { "half" } else { "full" };
-        let mut state = PlanLevel { n: n0, cin: feat, last_nn: seg_stage };
+        let mut state =
+            PlanLevel { n: n0, cin: feat, last_nn: seg_stage.into_iter().collect() };
         let mut sa2 = None;
         for l in 0..3 {
             let sac = &m.sa_configs[l];
             let mm = if halves { sac.m / 2 } else { sac.m };
             let use_bias = biased && l < cfg.bias_layers && cfg.w0 != 1.0;
-            let mut deps: Vec<usize> = state.last_nn.into_iter().collect();
+            let mut deps: Vec<usize> = state.last_nn.clone();
             if use_bias {
                 if let Some(s) = seg_stage {
                     if !deps.contains(&s) {
@@ -308,21 +315,29 @@ impl ServicePlanner {
                 nn_workload(m, &cfg.art(&format!("sa{}_{shape}", l + 1))),
                 deps_nn,
             );
-            state = PlanLevel { n: mm, cin: *sac.mlp.last().unwrap(), last_nn: Some(nn) };
+            state = PlanLevel { n: mm, cin: *sac.mlp.last().unwrap(), last_nn: vec![nn] };
             if l == 1 {
-                sa2 = Some(PlanLevel { n: state.n, cin: state.cin, last_nn: state.last_nn });
+                sa2 = Some(PlanLevel {
+                    n: state.n,
+                    cin: state.cin,
+                    last_nn: state.last_nn.clone(),
+                });
             }
         }
         (sa2.expect("three SA levels planned"), state)
     }
 }
 
-/// Fuse two pipelines' levels (mirror of `pipeline::merge`).
+/// Fuse two pipelines' levels: the merged set depends on **every**
+/// contributing pipeline's last NN stage. (The old code kept only
+/// `max(a, b)`, so a downstream stage could be scheduled before the slower
+/// pipeline's SA3 finished — the regression is pinned by
+/// `tests/parallelism.rs::sa4_waits_for_both_pipelines`.)
 fn merge(a: PlanLevel, b: PlanLevel) -> PlanLevel {
-    let last_nn = match (a.last_nn, b.last_nn) {
-        (Some(x), Some(y)) => Some(x.max(y)),
-        (x, y) => x.or(y),
-    };
+    let mut last_nn = a.last_nn;
+    last_nn.extend_from_slice(&b.last_nn);
+    last_nn.sort_unstable();
+    last_nn.dedup();
     PlanLevel { n: a.n + b.n, cin: a.cin, last_nn }
 }
 

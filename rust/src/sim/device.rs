@@ -35,7 +35,7 @@ pub enum WorkloadKind {
 }
 
 /// One stage's computational footprint.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Workload {
     pub kind: WorkloadKind,
     pub precision: Precision,

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 use super::device::{Device, DeviceKind, Workload};
 
 /// One schedulable stage.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageSpec {
     pub name: String,
     pub device: DeviceKind,

@@ -1,0 +1,208 @@
+//! Integration tests for the host-parallel stage executor.
+//!
+//! Everything here runs offline: the synthetic runtime executes NN stages on
+//! the deterministic host surrogate, so the full functional pipeline —
+//! detections included — is exercised without artifacts or a PJRT backend.
+//!
+//! The two core contracts:
+//! 1. **Determinism** — parallel execution produces bit-identical detections
+//!    and identical `StageSpec` DAGs to sequential execution, for every
+//!    variant (property over seeds).
+//! 2. **The merge() dependency fix** — `sa4_pm` depends on *both*
+//!    pipelines' SA3 NN stages and never starts before either finishes in
+//!    the simulated timeline. (On the pre-fix code the dep list held only
+//!    the max stage index, so the structural assertion below fails there.)
+
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{self, generate_scene, SYNRGBD};
+use pointsplit::exec::HostExec;
+use pointsplit::runtime::Runtime;
+use pointsplit::serving::dispatch::PipelineExecutor;
+use pointsplit::serving::{
+    run_traffic, ArrivalPattern, BatchPolicy, LoadGen, ServicePlanner, SloPolicy, TrafficScenario,
+};
+use pointsplit::sim::DeviceKind;
+
+const VARIANTS: [Variant; 4] =
+    [Variant::VoteNet, Variant::PointPainting, Variant::RandomSplit, Variant::PointSplit];
+
+fn pipelined() -> Schedule {
+    Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu }
+}
+
+fn cfg(variant: Variant, schedule: Schedule) -> DetectorConfig {
+    DetectorConfig::new("synrgbd", variant, true, schedule)
+}
+
+#[test]
+fn parallel_execution_bit_identical_to_sequential_all_variants() {
+    let rt = Runtime::synthetic();
+    for variant in VARIANTS {
+        for seed in [1u64, 42, 1234] {
+            let scene = generate_scene(seed, &SYNRGBD);
+            let seq = ScenePipeline::new(&rt, cfg(variant, pipelined()))
+                .with_host_exec(HostExec::Sequential)
+                .run(&scene, seed)
+                .expect("sequential run");
+            assert!(
+                !seq.stage_specs.is_empty(),
+                "{variant:?}: pipeline must declare stages"
+            );
+            for threads in [2usize, 4, 8] {
+                let par = ScenePipeline::new(&rt, cfg(variant, pipelined()))
+                    .with_host_exec(HostExec::Parallel { threads })
+                    .run(&scene, seed)
+                    .expect("parallel run");
+                assert_eq!(
+                    seq.detections, par.detections,
+                    "{variant:?} seed {seed} threads {threads}: detections diverged"
+                );
+                assert_eq!(
+                    seq.stage_specs, par.stage_specs,
+                    "{variant:?} seed {seed} threads {threads}: stage DAG diverged"
+                );
+                assert_eq!(
+                    seq.timeline.total_ms.to_bits(),
+                    par.timeline.total_ms.to_bits(),
+                    "{variant:?} seed {seed} threads {threads}: simulated timeline diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_execution_bit_identical_across_schedules() {
+    let rt = Runtime::synthetic();
+    for schedule in [
+        pipelined(),
+        Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        Schedule::SingleDevice(DeviceKind::Gpu),
+    ] {
+        let scene = generate_scene(7, &SYNRGBD);
+        let seq = ScenePipeline::new(&rt, cfg(Variant::PointSplit, schedule))
+            .with_host_exec(HostExec::Sequential)
+            .run(&scene, 7)
+            .unwrap();
+        let par = ScenePipeline::new(&rt, cfg(Variant::PointSplit, schedule))
+            .with_host_exec(HostExec::Parallel { threads: 4 })
+            .run(&scene, 7)
+            .unwrap();
+        assert_eq!(seq.detections, par.detections, "{schedule:?}");
+        assert_eq!(seq.stage_specs, par.stage_specs, "{schedule:?}");
+    }
+}
+
+/// The merge() dependency regression: `sa4_pm` must wait for **both**
+/// pipelines' SA3 NN stages — structurally (dep edges) and in the simulated
+/// timeline. The old code kept only `max(a.last_nn, b.last_nn)`.
+#[test]
+fn sa4_waits_for_both_pipelines() {
+    let rt = Runtime::synthetic();
+    let scene = generate_scene(3, &SYNRGBD);
+    let out = ScenePipeline::new(&rt, cfg(Variant::PointSplit, pipelined()))
+        .run(&scene, 3)
+        .unwrap();
+    let idx = |name: &str| {
+        out.stage_specs
+            .iter()
+            .position(|s| s.name == name)
+            .unwrap_or_else(|| panic!("stage '{name}' missing"))
+    };
+    let (nn_a, nn_b, pm4) = (idx("sa3_normal_nn"), idx("sa3_bias_nn"), idx("sa4_pm"));
+    let deps = &out.stage_specs[pm4].deps;
+    assert!(
+        deps.contains(&nn_a) && deps.contains(&nn_b),
+        "sa4_pm deps {deps:?} must include both sa3 NN stages ({nn_a}, {nn_b})"
+    );
+    // and the simulated timeline must respect it
+    let t = |name: &str| out.timeline.stage(name).unwrap_or_else(|| panic!("{name} interval"));
+    let pm4_start = t("sa4_pm").compute_start_ms;
+    assert!(
+        pm4_start >= t("sa3_normal_nn").end_ms - 1e-9
+            && pm4_start >= t("sa3_bias_nn").end_ms - 1e-9,
+        "sa4_pm at {pm4_start} started before an SA3 NN finished ({} / {})",
+        t("sa3_normal_nn").end_ms,
+        t("sa3_bias_nn").end_ms
+    );
+}
+
+/// Same property on the serving planner's mirrored DAG.
+#[test]
+fn planner_sa4_waits_for_both_pipelines() {
+    let planner = ServicePlanner::synthetic();
+    let stages = planner.stages(&cfg(Variant::PointSplit, pipelined()), 2048, false);
+    let idx = |name: &str| stages.iter().position(|s| s.name == name).unwrap();
+    let deps = &stages[idx("sa4_pm")].deps;
+    assert!(
+        deps.contains(&idx("sa3_normal_nn")) && deps.contains(&idx("sa3_bias_nn")),
+        "planner sa4_pm deps {deps:?}"
+    );
+}
+
+/// The pipeline's recorded DAG and the serving planner's analytic DAG are
+/// the same object — any drift between them is a bug (this is the class the
+/// merge() bug belonged to).
+#[test]
+fn pipeline_dag_matches_serving_planner() {
+    let rt = Runtime::synthetic();
+    let planner = ServicePlanner::synthetic();
+    for variant in VARIANTS {
+        let c = cfg(variant, pipelined());
+        let scene = generate_scene(11, &SYNRGBD);
+        let out = ScenePipeline::new(&rt, c.clone()).run(&scene, 11).unwrap();
+        let planned = planner.stages(&c, SYNRGBD.num_points, false);
+        assert_eq!(planned, out.stage_specs, "{variant:?}: planner DAG drifted from pipeline");
+    }
+}
+
+#[test]
+fn consecutive_matching_skips_seg_stage() {
+    let rt = Runtime::synthetic();
+    let pipe = ScenePipeline::new(&rt, cfg(Variant::PointSplit, pipelined()));
+    let scene = generate_scene(5, &SYNRGBD);
+    let (first, scores) = pipe.run_with_scores(&scene, 5, None).unwrap();
+    assert!(first.stage_specs.iter().any(|s| s.name == "seg"));
+    let scores = scores.expect("painted run returns scores");
+    let (second, _) = pipe.run_with_scores(&scene, 5, Some(&scores)).unwrap();
+    assert!(
+        !second.stage_specs.iter().any(|s| s.name == "seg"),
+        "consecutive matching must skip the segmenter"
+    );
+    assert!(second.timeline.total_ms < first.timeline.total_ms + 1e-9);
+    // determinism holds on the skip path too
+    let (second_par, _) = pipe.run_with_scores(&scene, 5, Some(&scores)).unwrap();
+    assert_eq!(second.detections, second_par.detections);
+}
+
+/// End-to-end functional serving on the synthetic runtime: the per-scene
+/// worker pool executes dispatched batches and the report carries mAP.
+#[test]
+fn traffic_gateway_executes_functionally_offline() {
+    let planner = ServicePlanner::synthetic();
+    let c = cfg(Variant::PointSplit, pipelined());
+    let ds = data::dataset("synrgbd").unwrap();
+    let cap = planner.capacity_rps(&c, ds.num_points, 2);
+    let sc = TrafficScenario {
+        name: "functional-offline".into(),
+        configs: vec![c],
+        num_points: ds.num_points,
+        load: LoadGen::simple(
+            ArrivalPattern::Poisson { rate_rps: cap * 0.5 },
+            4_000.0,
+            2_000.0,
+            13,
+        ),
+        queue_capacity: 16,
+        batch: BatchPolicy { max_batch: 2, max_wait_ms: 25.0 },
+        policy: SloPolicy::None,
+    };
+    let rt = Runtime::synthetic();
+    let exec = PipelineExecutor::with_workers(&rt, ds, 2);
+    let rep = run_traffic(&sc, &planner, Some(&exec));
+    assert!(rep.completed > 0, "no requests completed");
+    assert!(
+        rep.map_25.is_some(),
+        "functional execution must report mAP on the surrogate backend"
+    );
+}
