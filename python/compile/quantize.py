@@ -74,15 +74,24 @@ def weight_scale_vector(w: np.ndarray, groups: List[List[int]]) -> np.ndarray:
 
 
 def act_qparams(lo: np.ndarray, hi: np.ndarray, groups: List[List[int]]):
-    """Affine per-group activation qparams from per-channel min/max."""
+    """Affine per-group activation qparams from per-channel min/max.
+
+    Mirrors rust/src/quant/mod.rs ``ActQuant::calibrate``: the range is NOT
+    widened to include zero (that wasted INT8 codes on every post-ReLU
+    group), and the zero point is NOT clamped to [-128, 127] — it is a
+    shift, not a stored i8 code, and for a group whose range excludes zero
+    the true zero point lies outside i8; clamping it shifted the
+    representable window off the calibrated range, clipping extremes with
+    error up to ``|glo|``.
+    """
     cout = len(lo)
     scales = np.zeros(cout, np.float32)
     zeros = np.zeros(cout, np.float32)
     for g in groups:
-        glo = float(min(lo[g].min(), 0.0))
-        ghi = float(max(hi[g].max(), 0.0))
+        glo = float(lo[g].min())
+        ghi = float(hi[g].max())
         s = max((ghi - glo) / 255.0, 1e-8)
-        z = np.clip(round(-128 - glo / s), -128, 127)
+        z = float(round(-128 - glo / s))
         scales[g] = s
         zeros[g] = z
     return scales, zeros

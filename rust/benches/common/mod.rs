@@ -1,5 +1,8 @@
 //! Shared helpers for the paper-table bench binaries.
 
+// each bench target compiles this module and uses a different subset
+#![allow(dead_code)]
+
 use pointsplit::coordinator::serve::{serve, ServeReport};
 use pointsplit::coordinator::DetectorConfig;
 use pointsplit::data;

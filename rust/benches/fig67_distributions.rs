@@ -43,7 +43,7 @@ fn main() {
             let amaxv = idx.iter().map(|&i| amax[i].abs().max(amin[i].abs())).fold(0.0, f64::max);
             t.row(vec![
                 format!("group {}", g + 1),
-                format!("{}", idx.len()),
+                idx.len().to_string(),
                 format!("{wrange:.3}"),
                 format!("{arange:.3}"),
                 format!("{amaxv:.2}"),

@@ -9,6 +9,7 @@ mod common;
 
 use pointsplit::bench::Table;
 use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::quant::QuantScheme;
 use pointsplit::sim::DeviceKind;
 
 fn main() {
@@ -27,8 +28,7 @@ fn main() {
         let mut t = Table::new(&["quant. method", "mAP@0.25", "quant. error", "# quant. params"]);
         for (name, backbone, head) in schemes {
             let mut cfg = DetectorConfig::new(ds, Variant::PointSplit, false, sched);
-            cfg.precision_backbone = backbone.to_string();
-            cfg.precision_head = head.to_string();
+            cfg.scheme = QuantScheme::from_names(backbone, head).expect("quant scheme");
             let rep = common::eval_config(&rt, &cfg, scenes);
             let map = rep.map_25 * 100.0;
             if head == "fp32" {

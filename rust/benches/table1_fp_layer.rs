@@ -20,14 +20,14 @@ fn main() {
         t.row(vec![
             scale.into(),
             "PointNet++ (two PointNets)".into(),
-            format!("{}", c.orig_params),
+            c.orig_params.to_string(),
             format!("{:.0}M", c.orig_madds as f64 / 1e6),
             paper_p.into(),
         ]);
         t.row(vec![
             scale.into(),
             "PointSplit (one shared FC)".into(),
-            format!("{}", c.ps_params),
+            c.ps_params.to_string(),
             format!("{:.0}M", c.ps_madds as f64 / 1e6),
             paper_m.into(),
         ]);

@@ -3,6 +3,7 @@
 //! FP-layer comparison.
 
 use crate::pointops::{ball_query_flops, fps_flops};
+use crate::quant::StagePrecision;
 use crate::runtime::Manifest;
 use crate::sim::{Precision, Workload, WorkloadKind};
 
@@ -10,7 +11,6 @@ use crate::sim::{Precision, Workload, WorkloadKind};
 pub fn sa_pointmanip_workload(n_in: usize, m_out: usize, k: usize, c_in: usize) -> Workload {
     Workload {
         kind: WorkloadKind::PointOp,
-        precision: Precision::Fp32,
         flops: fps_flops(n_in, m_out) + ball_query_flops(n_in, m_out),
         mem_bytes: (m_out * k * (3 + c_in) * 4) as u64,
         // grouped tensor that must reach the NN device
@@ -18,33 +18,35 @@ pub fn sa_pointmanip_workload(n_in: usize, m_out: usize, k: usize, c_in: usize) 
     }
 }
 
-/// NN workload from a manifest artifact entry (wire bytes follow precision).
+/// Precision an artifact executes at (from its manifest label, through the
+/// same parser `Manifest::stage_quant` uses — one source of truth).
+pub fn nn_precision(manifest: &Manifest, artifact: &str) -> Precision {
+    let meta = manifest
+        .artifact(artifact)
+        .unwrap_or_else(|| panic!("artifact '{artifact}' missing from manifest"));
+    StagePrecision::parse(&meta.precision).map_or(Precision::Fp32, StagePrecision::sim)
+}
+
+/// NN workload from a manifest artifact entry. Memory and wire traffic
+/// follow the artifact's precision: int8 stages stream and ship one byte
+/// per element where fp32 moves four.
 pub fn nn_workload(manifest: &Manifest, artifact: &str) -> Workload {
     let meta = manifest
         .artifact(artifact)
         .unwrap_or_else(|| panic!("artifact '{artifact}' missing from manifest"));
     let out_elems: u64 = 4096; // head outputs are small; dominated by input wire
-    let precision =
-        if meta.precision.contains("int8") { Precision::Int8 } else { Precision::Fp32 };
     let per_elem = meta.wire_bytes_per_elem;
     Workload {
         kind: WorkloadKind::NeuralNet,
-        precision,
         flops: meta.flops,
-        mem_bytes: meta.bytes_in,
+        mem_bytes: (meta.bytes_in / 4) * per_elem,
         wire_bytes: (meta.bytes_in / 4 + out_elems) * per_elem,
     }
 }
 
 /// Small fixed-cost point op (painting, FP interpolation, decode).
 pub fn small_pointop(flops: u64, wire_bytes: u64) -> Workload {
-    Workload {
-        kind: WorkloadKind::PointOp,
-        precision: Precision::Fp32,
-        flops,
-        mem_bytes: wire_bytes,
-        wire_bytes,
-    }
+    Workload { kind: WorkloadKind::PointOp, flops, mem_bytes: wire_bytes, wire_bytes }
 }
 
 /// Total trainable parameters of the detector (from manifest widths).

@@ -24,14 +24,15 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::arch::{nn_workload, peak_memory_mb, sa_pointmanip_workload, small_pointop};
+use super::arch::{nn_precision, nn_workload, peak_memory_mb, sa_pointmanip_workload, small_pointop};
 use super::decode::decode_detections;
 use super::{Schedule, Variant};
 use crate::data::{Box3, Scene};
 use crate::exec::{Compute, DagExecutor, HostExec, Slot, StageDecl};
 use crate::pointops;
+use crate::quant::{Granularity, QuantScheme, QuantSpec, StagePrecision};
 use crate::runtime::Runtime;
-use crate::sim::{DeviceKind, ScheduleSim, StageSpec, Timeline, Workload};
+use crate::sim::{DeviceKind, Precision, ScheduleSim, StageSpec, Timeline, Workload};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -40,10 +41,9 @@ use crate::util::tensor::Tensor;
 pub struct DetectorConfig {
     pub dataset: String,
     pub variant: Variant,
-    /// "fp32" or "int8" (backbone / segmenter artifacts)
-    pub precision_backbone: String,
-    /// "fp32", "int8_layer", "int8_group", "int8_channel", "int8_role"
-    pub precision_head: String,
+    /// Per-stage-class precision assignment (paper §4.3 as an execution
+    /// property, not a config flag): backbone, vote head, proposal head.
+    pub scheme: QuantScheme,
     pub schedule: Schedule,
     pub w0: f32,
     pub bias_layers: usize,
@@ -58,14 +58,16 @@ impl DetectorConfig {
         DetectorConfig {
             dataset: dataset.to_string(),
             variant,
-            precision_backbone: if int8 { "int8" } else { "fp32" }.to_string(),
-            precision_head: if int8 {
+            scheme: if int8 {
                 // paper Table 7: role-based for PointSplit, layer-wise others
-                if variant == Variant::PointSplit { "int8_role" } else { "int8_layer" }
+                QuantScheme::int8(if variant == Variant::PointSplit {
+                    Granularity::Role
+                } else {
+                    Granularity::Layer
+                })
             } else {
-                "fp32"
-            }
-            .to_string(),
+                QuantScheme::fp32()
+            },
             schedule,
             w0: 2.0,
             bias_layers: 2,
@@ -79,18 +81,27 @@ impl DetectorConfig {
     /// the serving planner, which builds the same DAG without executing it).
     pub(crate) fn art(&self, net: &str) -> String {
         let prec = match net {
-            "vote" | "prop" => self.precision_head.as_str(),
-            _ => self.precision_backbone.as_str(),
+            "vote" | "prop" => self.scheme.for_net(net).head_name(),
+            _ => self.scheme.backbone.backbone_name(),
         };
         format!("{}_{}_{}_{}", self.dataset, self.variant.model_name(), net, prec)
     }
 
     pub(crate) fn seg_art(&self) -> String {
-        format!("{}_seg_{}", self.dataset, self.precision_backbone)
+        format!("{}_seg_{}", self.dataset, self.scheme.backbone.backbone_name())
     }
 
     pub fn int8(&self) -> bool {
-        self.precision_backbone == "int8"
+        self.scheme.backbone.is_int8()
+    }
+
+    /// Set both head stages' precision from an artifact label
+    /// ("fp32", "int8_layer", "int8_group", "int8_channel", "int8_role").
+    pub fn set_head_precision(&mut self, name: &str) -> Result<()> {
+        let p = StagePrecision::parse(name)
+            .ok_or_else(|| anyhow!("unknown head precision '{name}'"))?;
+        self.scheme = self.scheme.with_head(p);
+        Ok(())
     }
 }
 
@@ -147,10 +158,12 @@ struct StageBuilder<'s> {
 }
 
 impl<'s> StageBuilder<'s> {
+    #[allow(clippy::too_many_arguments)]
     fn stage(
         &mut self,
         name: String,
         device: DeviceKind,
+        precision: Precision,
         workload: Workload,
         mut deps: Vec<usize>,
         extra_deps: Vec<usize>,
@@ -165,7 +178,7 @@ impl<'s> StageBuilder<'s> {
         }
         let idx = self.decls.len();
         self.decls.push(StageDecl {
-            spec: StageSpec { name, device, workload, deps },
+            spec: StageSpec { name, device, precision, workload, deps },
             extra_deps,
             compute,
         });
@@ -219,11 +232,23 @@ impl<'a> ScenePipeline<'a> {
         let threads = self.host_exec.threads();
         let point_dev = cfg.schedule.point_dev();
         // the EdgeTPU executes int8 only (the paper's motivation for full
-        // quantization); fp32 configurations fall back to the point device
-        let mut nn_dev = cfg.schedule.nn_dev();
-        if !cfg.int8() && nn_dev == DeviceKind::EdgeTpu {
-            nn_dev = point_dev;
-        }
+        // quantization); placement is decided *per stage* from its
+        // precision, so a mixed scheme keeps int8 stages on the NPU while
+        // fp32 ones fall back to the point device
+        let nn_dev_raw = cfg.schedule.nn_dev();
+        let nn_dev_for = |p: Precision| {
+            if p == Precision::Fp32 && nn_dev_raw == DeviceKind::EdgeTpu {
+                point_dev
+            } else {
+                nn_dev_raw
+            }
+        };
+        let nn_dev = nn_dev_for(cfg.scheme.backbone.sim());
+        // explicit per-stage quant spec handed to the runtime (the scheme's
+        // granularity may refine what the artifact name encodes)
+        let qspec_for = |art: &str, p: StagePrecision| -> Option<QuantSpec> {
+            m.artifact(art).map(|a| m.stage_quant_for(a, p))
+        };
         let n = scene.points.len();
         let mut b = StageBuilder {
             decls: Vec::new(),
@@ -248,18 +273,22 @@ impl<'a> ScenePipeline<'a> {
                     let mut wl = nn_workload(m, &cfg.seg_art());
                     wl.flops *= cfg.seg_passes as u64;
                     let art = cfg.seg_art();
+                    let qspec = qspec_for(&art, cfg.scheme.backbone);
                     let sl = scores_slot.clone();
                     let img_size = m.img_size;
                     Some(b.stage(
                         "seg".into(),
                         nn_dev,
+                        nn_precision(m, &art),
                         wl,
                         vec![],
                         vec![],
                         Compute::Host(Box::new(move || {
                             let img =
                                 Tensor::new(vec![img_size, img_size, 3], scene.image.clone());
-                            sl.set(self.rt.run(&art, &[&img])?.remove(0));
+                            sl.set(
+                                self.rt.run_with_spec(&art, &[&img], qspec.as_ref())?.remove(0),
+                            );
                             Ok(())
                         })),
                     ))
@@ -270,6 +299,7 @@ impl<'a> ScenePipeline<'a> {
             let paint_stage = b.stage(
                 "paint".into(),
                 point_dev,
+                Precision::Fp32,
                 small_pointop((n * 8) as u64, (n * m.num_seg_classes) as u64),
                 seg_stage.into_iter().collect(),
                 vec![],
@@ -351,6 +381,7 @@ impl<'a> ScenePipeline<'a> {
             b.stage(
                 "sa4_pm".into(),
                 point_dev,
+                Precision::Fp32,
                 sa_pointmanip_workload(sa3_n, sa4cfg.m, sa4cfg.k, sa3_c),
                 deps4,
                 if use_bias4 && painted { paint_stage.into_iter().collect() } else { vec![] },
@@ -393,9 +424,11 @@ impl<'a> ScenePipeline<'a> {
                 sa4_feats.clone(),
             );
             let art = cfg.art("sa4_full");
+            let qspec = qspec_for(&art, cfg.scheme.backbone);
             b.stage(
                 "sa4_nn".into(),
                 nn_dev,
+                nn_precision(m, &art),
                 nn_workload(m, &art),
                 vec![pm4],
                 vec![],
@@ -407,7 +440,7 @@ impl<'a> ScenePipeline<'a> {
                     let g4 = sa3_fused.with(|geo| {
                         pointops::group_features(&geo.xyz, Some(&fused), &idx4, &groups4)
                     });
-                    sa4_feats.set(self.rt.run(&art, &[&g4])?.remove(0));
+                    sa4_feats.set(self.rt.run_with_spec(&art, &[&g4], qspec.as_ref())?.remove(0));
                     sa3_feats_fused.set(fused);
                     Ok(())
                 })),
@@ -429,6 +462,7 @@ impl<'a> ScenePipeline<'a> {
             b.stage(
                 "fp_interp".into(),
                 point_dev,
+                Precision::Fp32,
                 small_pointop((sa2_n * sa3_n * 4) as u64, (sa2_n * m.fp_in * 4) as u64),
                 vec![nn4],
                 vec![],
@@ -461,16 +495,18 @@ impl<'a> ScenePipeline<'a> {
         let seeds_slot: Slot<Tensor> = Slot::new("seeds");
         let fp_nn = {
             let art = cfg.art("fp_fc");
+            let qspec = qspec_for(&art, cfg.scheme.backbone);
             let (f2_slot, seeds_slot) = (f2_slot.clone(), seeds_slot.clone());
             b.stage(
                 "fp_fc".into(),
                 nn_dev,
+                nn_precision(m, &art),
                 nn_workload(m, &art),
                 vec![fp_pm],
                 vec![],
                 Compute::Host(Box::new(move || {
                     let f2 = f2_slot.take();
-                    seeds_slot.set(self.rt.run(&art, &[&f2])?.remove(0));
+                    seeds_slot.set(self.rt.run_with_spec(&art, &[&f2], qspec.as_ref())?.remove(0));
                     Ok(())
                 })),
             )
@@ -478,17 +514,21 @@ impl<'a> ScenePipeline<'a> {
         let vote_slot: Slot<(Vec<[f32; 3]>, Tensor)> = Slot::new("votes");
         let vote_nn = {
             let art = cfg.art("vote");
+            let qspec = qspec_for(&art, cfg.scheme.vote);
+            let vote_prec = nn_precision(m, &art);
             let (seeds_slot, seed_xyz_slot, vote_slot) =
                 (seeds_slot.clone(), seed_xyz_slot.clone(), vote_slot.clone());
             b.stage(
                 "vote".into(),
-                nn_dev,
+                nn_dev_for(vote_prec),
+                vote_prec,
                 nn_workload(m, &art),
                 vec![fp_nn],
                 vec![],
                 Compute::Host(Box::new(move || {
                     let seeds = seeds_slot.take();
-                    let vote_out = self.rt.run(&art, &[&seeds])?.remove(0);
+                    let vote_out =
+                        self.rt.run_with_spec(&art, &[&seeds], qspec.as_ref())?.remove(0);
                     let seed_xyz = seed_xyz_slot.take();
                     let cfeat = seeds.row_len();
                     let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
@@ -520,6 +560,7 @@ impl<'a> ScenePipeline<'a> {
             b.stage(
                 "prop_pm".into(),
                 point_dev,
+                Precision::Fp32,
                 sa_pointmanip_workload(sa2_n, m.num_proposals, m.proposal_k, m.seed_feat),
                 vec![vote_nn],
                 vec![],
@@ -537,11 +578,14 @@ impl<'a> ScenePipeline<'a> {
         let prop_slot: Slot<Tensor> = Slot::new("proposals");
         let prop_nn = {
             let art = cfg.art("prop");
+            let qspec = qspec_for(&art, cfg.scheme.prop);
+            let prop_prec = nn_precision(m, &art);
             let (vote_slot, pgrp_slot, prop_slot) =
                 (vote_slot.clone(), pgrp_slot.clone(), prop_slot.clone());
             b.stage(
                 "prop".into(),
-                nn_dev,
+                nn_dev_for(prop_prec),
+                prop_prec,
                 nn_workload(m, &art),
                 vec![prop_pm],
                 vec![],
@@ -550,7 +594,7 @@ impl<'a> ScenePipeline<'a> {
                     let pg = vote_slot.with(|(vote_xyz, vote_feats)| {
                         pointops::group_features(vote_xyz, Some(vote_feats), &pidx, &pgroups)
                     });
-                    prop_slot.set(self.rt.run(&art, &[&pg])?.remove(0));
+                    prop_slot.set(self.rt.run_with_spec(&art, &[&pg], qspec.as_ref())?.remove(0));
                     Ok(())
                 })),
             )
@@ -565,6 +609,7 @@ impl<'a> ScenePipeline<'a> {
             b.stage(
                 "decode".into(),
                 DeviceKind::Cpu,
+                Precision::Fp32,
                 small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
                 vec![prop_nn],
                 vec![],
@@ -667,6 +712,7 @@ impl<'a> ScenePipeline<'a> {
                 b.stage(
                     format!("sa{}_{}_pm", l + 1, tag),
                     point_dev,
+                    Precision::Fp32,
                     sa_pointmanip_workload(n_in, mm, sac.k, c_in),
                     deps_pm,
                     extra_pm,
@@ -706,6 +752,9 @@ impl<'a> ScenePipeline<'a> {
                 Vec::new()
             };
             let art = cfg.art(&format!("sa{}_{shape}", l + 1));
+            let qspec = m
+                .artifact(&art)
+                .map(|a| m.stage_quant_for(a, cfg.scheme.backbone));
             let feats_out: Slot<Tensor> = Slot::new("chain feats");
             let nn = {
                 let feats_out = feats_out.clone();
@@ -716,6 +765,7 @@ impl<'a> ScenePipeline<'a> {
                 b.stage(
                     format!("sa{}_{}_nn", l + 1, tag),
                     nn_dev,
+                    nn_precision(m, &art),
                     nn_workload(m, &art),
                     deps_nn,
                     extra_nn,
@@ -748,7 +798,7 @@ impl<'a> ScenePipeline<'a> {
                                 }
                             },
                         };
-                        feats_out.set(self.run_maybe_padded(&art, &g, mm)?);
+                        feats_out.set(self.run_maybe_padded(&art, &g, mm, qspec.as_ref())?);
                         Ok(())
                     })),
                 )
@@ -775,7 +825,13 @@ impl<'a> ScenePipeline<'a> {
     /// padding path covers residual mismatches defensively). A *smaller*
     /// artifact is a malformed export — reported as an error, not a panic,
     /// so the serving path degrades instead of dying.
-    fn run_maybe_padded(&self, art: &str, g: &Tensor, b: usize) -> Result<Tensor> {
+    fn run_maybe_padded(
+        &self,
+        art: &str,
+        g: &Tensor,
+        b: usize,
+        spec: Option<&QuantSpec>,
+    ) -> Result<Tensor> {
         let meta = self
             .rt
             .manifest
@@ -783,7 +839,7 @@ impl<'a> ScenePipeline<'a> {
             .ok_or_else(|| anyhow!("artifact '{art}' missing"))?;
         let want = meta.input_shapes[0][0];
         if want == b {
-            return Ok(self.rt.run(art, &[g])?.remove(0));
+            return Ok(self.rt.run_with_spec(art, &[g], spec)?.remove(0));
         }
         if want < b {
             return Err(anyhow!(
@@ -793,7 +849,7 @@ impl<'a> ScenePipeline<'a> {
         }
         let mut padded = Tensor::zeros(vec![want, g.shape[1], g.shape[2]]);
         padded.data[..g.data.len()].copy_from_slice(&g.data);
-        let out = self.rt.run(art, &[&padded])?.remove(0);
+        let out = self.rt.run_with_spec(art, &[&padded], spec)?.remove(0);
         let rows: Vec<usize> = (0..b).collect();
         Ok(out.gather_rows(&rows))
     }
@@ -849,7 +905,9 @@ mod tests {
         let p = pipeline(&rt);
         // sa1_full expects 256 balls of (32, 15); feed 200
         let g = Tensor::zeros(vec![200, 32, 15]);
-        let out = p.run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 200).unwrap();
+        let out = p
+            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 200, None)
+            .unwrap();
         assert_eq!(out.rows(), 200);
     }
 
@@ -859,7 +917,7 @@ mod tests {
         let p = pipeline(&rt);
         let g = Tensor::zeros(vec![300, 32, 15]);
         let err = p
-            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 300)
+            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 300, None)
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("smaller than workload"), "unexpected error: {msg}");

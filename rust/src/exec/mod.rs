@@ -131,8 +131,9 @@ pub enum Compute<'s> {
 
 /// One pipeline stage: the simulator spec plus the host closure computing it.
 pub struct StageDecl<'s> {
-    /// What the calibrated device model simulates — name, device, workload,
-    /// and the *timeline* dependencies.
+    /// What the calibrated device model simulates — name, device, the
+    /// stage's numeric precision (the QuantScheme property pricing it),
+    /// workload, and the *timeline* dependencies.
     pub spec: StageSpec,
     /// Host-ordering dependencies beyond `spec.deps` (data produced by a
     /// stage the simulated timeline does not wait for, e.g. painted features
@@ -385,9 +386,9 @@ mod tests {
             spec: StageSpec {
                 name: name.to_string(),
                 device: DeviceKind::Cpu,
+                precision: Precision::Fp32,
                 workload: Workload {
                     kind: WorkloadKind::PointOp,
-                    precision: Precision::Fp32,
                     flops: 1,
                     mem_bytes: 0,
                     wire_bytes: 0,

@@ -14,6 +14,10 @@
 //!                     [--functional] [--exec-workers N] [... detect flags]
 //!     open-loop traffic gateway on the simulated clock; print a
 //!     ServeTrafficReport per arrival pattern (see docs/SERVING.md)
+//! pointsplit quant-report [--artifacts DIR] [--dataset synrgbd] [--seed N]
+//!     per-stage QuantScheme report: derived role partitions, QDQ error and
+//!     parameter count per granularity, and the full-vs-degraded plan
+//!     latencies (see docs/QUANTIZATION.md)
 //! pointsplit devices
 //!     print the calibrated device models
 //! ```
@@ -44,21 +48,25 @@ fn run() -> Result<()> {
         "detect" => cmd_detect(&cli),
         "serve" => cmd_serve(&cli),
         "serve-traffic" => cmd_serve_traffic(&cli),
+        "quant-report" => cmd_quant_report(&cli),
         "devices" => cmd_devices(),
         "probe" => cmd_probe(&cli),
         "" | "help" => {
             print_help();
             Ok(())
         }
-        other => {
-            Err(anyhow!("unknown command '{other}' (try: check|detect|serve|serve-traffic|devices)"))
-        }
+        other => Err(anyhow!(
+            "unknown command '{other}' (try: check|detect|serve|serve-traffic|quant-report|devices)"
+        )),
     }
 }
 
 fn print_help() {
     println!("pointsplit — on-device 3D detection with heterogeneous accelerators");
-    println!("commands: check | detect | serve | serve-traffic | devices   (see rust/src/main.rs docs)");
+    println!(
+        "commands: check | detect | serve | serve-traffic | quant-report | devices   \
+         (see rust/src/main.rs docs)"
+    );
 }
 
 /// Open the artifacts runtime, falling back to the synthetic manifest +
@@ -86,7 +94,7 @@ fn detector_config(cli: &Cli) -> Result<(DetectorConfig, &'static data::DatasetC
     cfg.w0 = cli.get_f64("w0", cfg.w0 as f64)? as f32;
     cfg.bias_layers = cli.get_usize("bias-layers", cfg.bias_layers)?;
     if let Some(h) = cli.get("head-precision") {
-        cfg.precision_head = h.to_string();
+        cfg.set_head_precision(h)?;
     }
     Ok((cfg, ds))
 }
@@ -327,6 +335,106 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
         rep.print();
         println!();
     }
+    Ok(())
+}
+
+/// Per-stage quantization report: for each head network, run the fp32
+/// reference at a probe input, derive the role partition from its output
+/// channels, and compare QDQ error + parameter count across granularities;
+/// then show how the SLO degrade path re-assigns stage precisions and what
+/// the calibrated device model says each scheme costs.
+fn cmd_quant_report(cli: &Cli) -> Result<()> {
+    use pointsplit::quant::{self, derive_roles, Granularity, StagePrecision};
+    use pointsplit::util::tensor::Tensor;
+
+    let rt = open_runtime(cli)?;
+    let m = &rt.manifest;
+    let dataset = cli.get_or("dataset", "synrgbd");
+    if !m.datasets.contains_key(&dataset) {
+        return Err(anyhow!("unknown dataset '{dataset}'"));
+    }
+    let seed = cli.get_usize("seed", 1)? as u64;
+
+    for net in ["vote", "prop"] {
+        let art = format!("{dataset}_pointsplit_{net}_fp32");
+        let meta = rt
+            .manifest
+            .artifact(&art)
+            .ok_or_else(|| anyhow!("artifact '{art}' missing"))?
+            .clone();
+        // deterministic probe activations through the fp32 reference
+        let shape = meta.input_shapes[0].clone();
+        let n: usize = shape.iter().product();
+        let x = Tensor::new(
+            shape,
+            (0..n)
+                .map(|i| (0.1 + 0.001 * (i as u64 + seed) as f64).sin() as f32)
+                .collect(),
+        );
+        let out = rt.run(&art, &[&x])?.remove(0);
+        let (lo, hi) = quant::channel_minmax(&out);
+        let derived = derive_roles(&lo, &hi, 4);
+        let (cout, declared) = m.stage_channels(net);
+        println!(
+            "\n{net}: {cout} output channels — declared roles {:?}, derived {:?} (sizes)",
+            declared.iter().map(|g| g.len()).collect::<Vec<_>>(),
+            derived.iter().map(|g| g.len()).collect::<Vec<_>>()
+        );
+        let mut t = pointsplit::bench::Table::new(&[
+            "granularity",
+            "groups",
+            "# params",
+            "qdq mse",
+        ]);
+        for g in [
+            Granularity::Layer,
+            Granularity::Group(declared.len().max(2)),
+            Granularity::Channel,
+            Granularity::Role,
+        ] {
+            let spec = m.stage_quant_for(&meta, StagePrecision::Int8(g));
+            let act = spec.calibrate(&out);
+            let mse = quant::qdq_mse(&out, &act)?;
+            t.row(vec![
+                StagePrecision::Int8(g).head_name().to_string(),
+                act.num_groups.to_string(),
+                act.param_count().to_string(),
+                format!("{mse:.2e}"),
+            ]);
+        }
+        t.print(&format!("{dataset} {net} head — QDQ error per granularity"));
+    }
+
+    // the SLO degrade move, priced by the calibrated device model
+    let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let full = DetectorConfig::new(&dataset, Variant::PointSplit, true, sched);
+    let fast = pointsplit::serving::slo::degraded_config(&full);
+    let fp32 = DetectorConfig::new(&dataset, Variant::PointSplit, false, sched);
+    let planner = ServicePlanner::new(rt.manifest.clone());
+    let num_points = m.datasets[&dataset].num_points;
+    let fast_points = pointsplit::serving::slo::degraded_points(num_points);
+    let mut t = pointsplit::bench::Table::new(&[
+        "scheme",
+        "stage precisions",
+        "latency ms",
+        "capacity rps",
+    ]);
+    for (name, cfg, pts, skip_seg) in [
+        ("fp32", &fp32, num_points, false),
+        ("int8 role (full)", &full, num_points, false),
+        ("degraded fast path", &fast, fast_points, true),
+    ] {
+        let cost = planner.cost(cfg, pts, 1, skip_seg);
+        t.row(vec![
+            name.to_string(),
+            cfg.scheme.key(),
+            format!("{:.0}", cost.total_ms),
+            format!("{:.1}", planner.capacity_rps(cfg, pts, 4)),
+        ]);
+    }
+    t.print(&format!(
+        "{dataset} — how SLO degrade re-assigns stage precisions (batch-1 latency, batch-4 capacity)"
+    ));
     Ok(())
 }
 

@@ -73,9 +73,9 @@ mod tests {
             StageSpec {
                 name: "a".into(),
                 device: DeviceKind::Gpu,
+                precision: Precision::Fp32,
                 workload: Workload {
                     kind: WorkloadKind::PointOp,
-                    precision: Precision::Fp32,
                     flops: 1_000_000,
                     mem_bytes: 0,
                     wire_bytes: 100,
@@ -85,9 +85,9 @@ mod tests {
             StageSpec {
                 name: "b".into(),
                 device: DeviceKind::EdgeTpu,
+                precision: Precision::Int8,
                 workload: Workload {
                     kind: WorkloadKind::NeuralNet,
-                    precision: Precision::Int8,
                     flops: 10_000_000,
                     mem_bytes: 0,
                     wire_bytes: 100,

@@ -108,9 +108,9 @@ mod tests {
         let stages = vec![StageSpec {
             name: "x".into(),
             device: DeviceKind::Gpu,
+            precision: Precision::Fp32,
             workload: Workload {
                 kind: WorkloadKind::PointOp,
-                precision: Precision::Fp32,
                 flops: 1_000_000,
                 mem_bytes: 0,
                 wire_bytes: 0,

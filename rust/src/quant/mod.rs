@@ -5,7 +5,12 @@
 //! for tests and the Table 11 parameter-count/error analysis, and (b) the
 //! distribution statistics (KL divergence matrix) behind Fig. 6/7.
 
+pub mod scheme;
 pub mod stats;
+
+pub use scheme::{derive_roles, QTensor, QuantScheme, QuantSpec, StagePrecision};
+
+use anyhow::{anyhow, Result};
 
 use crate::util::tensor::Tensor;
 
@@ -38,11 +43,17 @@ pub fn partition(g: Granularity, cout: usize, roles: &[Vec<usize>]) -> Vec<Vec<u
         Granularity::Channel => (0..cout).map(|c| vec![c]).collect(),
         Granularity::Role => roles.to_vec(),
         Granularity::Group(n) => {
-            let mut out = Vec::with_capacity(n);
+            // more groups than channels used to emit empty tail groups,
+            // silently inflating param_count() and calibrating degenerate
+            // 1e-8 scales; only non-empty groups are returned
+            let n = n.max(1);
+            let mut out = Vec::with_capacity(n.min(cout));
             for i in 0..n {
                 let lo = i * cout / n;
                 let hi = (i + 1) * cout / n;
-                out.push((lo..hi).collect());
+                if lo < hi {
+                    out.push((lo..hi).collect());
+                }
             }
             out
         }
@@ -59,7 +70,8 @@ pub struct ActQuant {
 }
 
 impl ActQuant {
-    /// Calibrate from per-channel min/max (the same rule as quantize.py).
+    /// Calibrate from per-channel min/max (quantize.py's rule, with the
+    /// zero point left unclamped — see the comment below).
     pub fn calibrate(lo: &[f32], hi: &[f32], groups: &[Vec<usize>]) -> ActQuant {
         let cout = lo.len();
         let mut scale = vec![0.0f32; cout];
@@ -71,7 +83,13 @@ impl ActQuant {
             let glo = g.iter().map(|&c| lo[c]).fold(f32::INFINITY, f32::min);
             let ghi = g.iter().map(|&c| hi[c]).fold(f32::NEG_INFINITY, f32::max);
             let s = ((ghi - glo) / 255.0).max(1e-8);
-            let z = (-128.0 - glo / s).round().clamp(-128.0, 127.0);
+            // the zero point is a shift, not a stored i8 code, so it must
+            // NOT be clamped to [-128, 127]: for a group whose range
+            // excludes zero (post-ReLU positives, all-negative residuals)
+            // the true zero point lies outside i8, and clamping it used to
+            // shift the representable window off the calibrated range,
+            // clipping extreme values with error up to |glo|
+            let z = (-128.0 - glo / s).round();
             for &c in g {
                 scale[c] = s;
                 zero[c] = z;
@@ -80,10 +98,18 @@ impl ActQuant {
         ActQuant { scale, zero, num_groups: groups.len() }
     }
 
-    /// Quantize-dequantize a (N, C) activation tensor in place.
-    pub fn qdq(&self, t: &mut Tensor) {
+    /// Quantize-dequantize a (N, C) activation tensor in place. A malformed
+    /// activation (width != calibrated channels) is an error, not a panic,
+    /// so a serving worker survives it (same treatment as
+    /// `run_maybe_padded`).
+    pub fn qdq(&self, t: &mut Tensor) -> Result<()> {
         let c = self.scale.len();
-        assert_eq!(t.row_len(), c);
+        if t.row_len() != c {
+            return Err(anyhow!(
+                "qdq: activation width {} != calibrated channels {c}",
+                t.row_len()
+            ));
+        }
         for row in 0..t.rows() {
             let r = t.row_mut(row);
             for (i, v) in r.iter_mut().enumerate() {
@@ -91,6 +117,7 @@ impl ActQuant {
                 *v = (q - self.zero[i]) * self.scale[i];
             }
         }
+        Ok(())
     }
 
     /// Number of quantization parameters this scheme stores for the layer:
@@ -102,15 +129,15 @@ impl ActQuant {
 }
 
 /// QDQ error (mean squared) introduced on a tensor by an ActQuant.
-pub fn qdq_mse(t: &Tensor, q: &ActQuant) -> f64 {
+pub fn qdq_mse(t: &Tensor, q: &ActQuant) -> Result<f64> {
     let mut copy = t.clone();
-    q.qdq(&mut copy);
+    q.qdq(&mut copy)?;
     let mut acc = 0.0f64;
     for (a, b) in t.data.iter().zip(copy.data.iter()) {
         let d = (*a - *b) as f64;
         acc += d * d;
     }
-    acc / t.data.len() as f64
+    Ok(acc / t.data.len() as f64)
 }
 
 /// Per-channel min/max of a (N, C) tensor.
@@ -162,9 +189,9 @@ mod tests {
         let q_layer = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Layer, 80, &roles));
         let q_role = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Role, 80, &roles));
         let q_chan = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Channel, 80, &roles));
-        let e_layer = qdq_mse(&t, &q_layer);
-        let e_role = qdq_mse(&t, &q_role);
-        let e_chan = qdq_mse(&t, &q_chan);
+        let e_layer = qdq_mse(&t, &q_layer).unwrap();
+        let e_role = qdq_mse(&t, &q_role).unwrap();
+        let e_chan = qdq_mse(&t, &q_chan).unwrap();
         assert!(e_role < e_layer / 2.0, "role {e_role} should beat layer {e_layer}");
         assert!(e_chan <= e_role * 1.5, "channel {e_chan} ~<= role {e_role}");
     }
@@ -177,7 +204,7 @@ mod tests {
         let (lo, hi) = channel_minmax(&t);
         let q_layer = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Layer, 80, &roles));
         let mut q = t.clone();
-        q_layer.qdq(&mut q);
+        q_layer.qdq(&mut q).unwrap();
         // relative error on xyz channels
         let mut num = 0.0f64;
         let mut den = 0.0f64;
@@ -197,7 +224,7 @@ mod tests {
         let roles = vec![vec![0, 1, 2], (3..40).collect(), (40..80).collect()];
         let mk = |g| {
             let p = partition(g, 80, &roles);
-            ActQuant::calibrate(&vec![0.0; 80], &vec![1.0; 80], &p).param_count()
+            ActQuant::calibrate(&[0.0; 80], &[1.0; 80], &p).param_count()
         };
         assert_eq!(mk(Granularity::Layer), 3);
         assert_eq!(mk(Granularity::Role), 9);
@@ -218,6 +245,16 @@ mod tests {
             "scale {} should cover [2, 6] only, not [0, 6]",
             q.scale[0]
         );
+        // the zero point lies outside i8 here (a shift, not a stored code);
+        // clamping it used to make the top of the range unrepresentable
+        // (qdq(5.5) came back as 4.0 — a 1.5 clip on a 4-wide range)
+        let mut top = Tensor::new(vec![1, 2], vec![5.5, 5.9]);
+        q.qdq(&mut top).unwrap();
+        assert!(
+            (top.data[0] - 5.5).abs() <= q.scale[0] / 2.0 + 1e-6,
+            "qdq(5.5) = {} must stay within scale/2 of 5.5",
+            top.data[0]
+        );
         // and the tighter scale must quantize an in-range tensor better
         let t = Tensor::new(vec![2, 2], vec![2.5, 3.5, 3.9, 5.5]);
         let loose = ActQuant {
@@ -225,7 +262,7 @@ mod tests {
             zero: vec![(-128.0f32).round(); 2],
             num_groups: 1,
         };
-        assert!(qdq_mse(&t, &q) < qdq_mse(&t, &loose));
+        assert!(qdq_mse(&t, &q).unwrap() < qdq_mse(&t, &loose).unwrap());
     }
 
     #[test]
@@ -234,6 +271,10 @@ mod tests {
         let hi = vec![-2.0f32];
         let q = ActQuant::calibrate(&lo, &hi, &[vec![0]]);
         assert!(((q.scale[0]) - (4.0 / 255.0)).abs() < 1e-7, "scale {}", q.scale[0]);
+        // mirror of the all-positive zero-point fix: -6 must round-trip
+        let mut t = Tensor::new(vec![1, 1], vec![-6.0]);
+        q.qdq(&mut t).unwrap();
+        assert!((t.data[0] + 6.0).abs() <= q.scale[0] / 2.0 + 1e-6, "qdq(-6) = {}", t.data[0]);
     }
 
     #[test]
@@ -242,9 +283,39 @@ mod tests {
         let (lo, hi) = channel_minmax(&t);
         let q = ActQuant::calibrate(&lo, &hi, &partition(Granularity::Role, 80, &roles));
         let mut once = t.clone();
-        q.qdq(&mut once);
+        q.qdq(&mut once).unwrap();
         let mut twice = once.clone();
-        q.qdq(&mut twice);
+        q.qdq(&mut twice).unwrap();
         assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn group_partition_never_produces_empty_groups() {
+        // regression: Group(n) with n > cout emitted empty tail groups,
+        // inflating param_count and calibrating degenerate 1e-8 scales
+        for (n, cout) in [(8usize, 3usize), (3, 3), (2, 5), (16, 1), (5, 12)] {
+            let groups = partition(Granularity::Group(n), cout, &[]);
+            assert_eq!(groups.len(), n.min(cout), "Group({n}) over {cout} channels");
+            let mut covered: Vec<usize> = groups.iter().flatten().copied().collect();
+            covered.sort_unstable();
+            assert_eq!(covered, (0..cout).collect::<Vec<_>>(), "partition must cover 0..{cout}");
+            assert!(groups.iter().all(|g| !g.is_empty()), "empty group in {groups:?}");
+        }
+        // param_count no longer inflated past one triple per channel
+        let q = ActQuant::calibrate(
+            &[0.0; 3],
+            &[1.0; 3],
+            &partition(Granularity::Group(8), 3, &[]),
+        );
+        assert_eq!(q.param_count(), 9);
+        assert!(q.scale.iter().all(|&s| s > 1e-6), "degenerate scale calibrated");
+    }
+
+    #[test]
+    fn qdq_width_mismatch_is_an_error_not_a_panic() {
+        let q = ActQuant::calibrate(&[0.0, 0.0], &[1.0, 1.0], &[vec![0, 1]]);
+        let mut bad = Tensor::zeros(vec![4, 3]);
+        assert!(q.qdq(&mut bad).is_err());
+        assert!(qdq_mse(&Tensor::zeros(vec![4, 3]), &q).is_err());
     }
 }

@@ -1,0 +1,452 @@
+//! QuantScheme: precision as a typed, schedulable property of every stage.
+//!
+//! The paper's role-based group-wise quantization (§4.3, Tables 7/11) used
+//! to live only in the QDQ mirror of `quant::mod` while the live pipeline
+//! reduced INT8 to a boolean that swapped artifact names. This module makes
+//! the scheme a first-class execution layer:
+//!
+//! - [`StagePrecision`] — what one stage class executes at (fp32, or INT8 at
+//!   a [`Granularity`]); the property the scheduler prices (an fp32 stage
+//!   cannot sit on the EdgeTPU) and the serving SLO policy swaps per batch.
+//! - [`QuantScheme`] — the per-stage-class assignment a [`DetectorConfig`]
+//!   carries: backbone / vote head / proposal head, independently settable,
+//!   so degradation keeps the accuracy-critical head at role fidelity while
+//!   dropping backbone groups to plain INT8.
+//! - [`QuantSpec`] — one stage's calibratable spec: precision + declared
+//!   output-channel role partition ([`crate::runtime::Manifest::stage_quant`]
+//!   declares these per artifact).
+//! - [`QTensor`] — real `i8` storage with per-channel affine parameters;
+//!   `quantize -> dequantize` is bit-consistent with [`ActQuant::qdq`].
+//! - [`derive_roles`] — the calibration pass: clusters a stage's output
+//!   channels by dynamic range into role groups (the Fig. 6 structure,
+//!   recovered from data instead of hand-declared).
+//!
+//! [`DetectorConfig`]: crate::coordinator::DetectorConfig
+
+use anyhow::{anyhow, Result};
+
+use super::{channel_minmax, partition, ActQuant, Granularity};
+use crate::sim::Precision;
+use crate::util::tensor::Tensor;
+
+/// Even-group count the degraded backbone drops to (see
+/// [`QuantScheme::degraded`]).
+pub const DEGRADED_BACKBONE_GROUPS: usize = 4;
+
+/// Numeric execution mode of one stage class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StagePrecision {
+    Fp32,
+    /// INT8 with an activation-quantization granularity over channels.
+    Int8(Granularity),
+}
+
+impl StagePrecision {
+    pub fn is_int8(self) -> bool {
+        matches!(self, StagePrecision::Int8(_))
+    }
+
+    /// The device simulator's two-regime precision.
+    pub fn sim(self) -> Precision {
+        if self.is_int8() {
+            Precision::Int8
+        } else {
+            Precision::Fp32
+        }
+    }
+
+    /// Artifact-name suffix for head networks (vote/prop export one
+    /// executable per granularity).
+    pub fn head_name(self) -> &'static str {
+        match self {
+            StagePrecision::Fp32 => "fp32",
+            StagePrecision::Int8(g) => match g {
+                Granularity::Layer => "int8_layer",
+                Granularity::Group(_) => "int8_group",
+                Granularity::Channel => "int8_channel",
+                Granularity::Role => "int8_role",
+            },
+        }
+    }
+
+    /// Artifact-name suffix for backbone/segmenter networks (exported at a
+    /// single INT8 granularity).
+    pub fn backbone_name(self) -> &'static str {
+        if self.is_int8() {
+            "int8"
+        } else {
+            "fp32"
+        }
+    }
+
+    /// Cache-key name: like [`Self::head_name`] but discriminating the
+    /// even-group count.
+    pub fn key_name(self) -> String {
+        match self {
+            StagePrecision::Int8(Granularity::Group(n)) => format!("int8_group{n}"),
+            p => p.head_name().to_string(),
+        }
+    }
+
+    /// Parse an artifact precision label ("fp32", "int8", "int8_role", ...).
+    pub fn parse(s: &str) -> Option<StagePrecision> {
+        Some(match s {
+            "fp32" => StagePrecision::Fp32,
+            "int8" | "int8_layer" => StagePrecision::Int8(Granularity::Layer),
+            "int8_group" => StagePrecision::Int8(Granularity::Group(DEGRADED_BACKBONE_GROUPS)),
+            "int8_channel" => StagePrecision::Int8(Granularity::Channel),
+            "int8_role" => StagePrecision::Int8(Granularity::Role),
+            _ => return None,
+        })
+    }
+}
+
+/// Per-stage-class precision assignment of one detector configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantScheme {
+    /// 2D segmenter, SA backbone, and FP layer.
+    pub backbone: StagePrecision,
+    /// Vote head.
+    pub vote: StagePrecision,
+    /// Proposal head.
+    pub prop: StagePrecision,
+}
+
+impl QuantScheme {
+    pub fn fp32() -> QuantScheme {
+        QuantScheme {
+            backbone: StagePrecision::Fp32,
+            vote: StagePrecision::Fp32,
+            prop: StagePrecision::Fp32,
+        }
+    }
+
+    /// Fully-INT8 scheme: layer-wise backbone, `head` granularity heads.
+    pub fn int8(head: Granularity) -> QuantScheme {
+        QuantScheme {
+            backbone: StagePrecision::Int8(Granularity::Layer),
+            vote: StagePrecision::Int8(head),
+            prop: StagePrecision::Int8(head),
+        }
+    }
+
+    /// Build from the artifact precision labels used across benches/CLI.
+    pub fn from_names(backbone: &str, head: &str) -> Option<QuantScheme> {
+        let b = StagePrecision::parse(backbone)?;
+        let h = StagePrecision::parse(head)?;
+        Some(QuantScheme { backbone: b, vote: h, prop: h })
+    }
+
+    /// Same scheme with both head stages at `head`.
+    pub fn with_head(self, head: StagePrecision) -> QuantScheme {
+        QuantScheme { vote: head, prop: head, ..self }
+    }
+
+    /// Precision of the stage executing artifact network `net`.
+    pub fn for_net(self, net: &str) -> StagePrecision {
+        match net {
+            "vote" => self.vote,
+            "prop" => self.prop,
+            _ => self.backbone,
+        }
+    }
+
+    /// The SLO fast path: backbone groups dropped to plain INT8 (even
+    /// groups — cheap, EdgeTPU-eligible) while the accuracy-critical heads
+    /// are kept at (or raised to) role-based fidelity. This is the
+    /// "swap a stage subset's QuantSpec" move — not a config flag.
+    pub fn degraded(self) -> QuantScheme {
+        QuantScheme {
+            backbone: StagePrecision::Int8(Granularity::Group(DEGRADED_BACKBONE_GROUPS)),
+            vote: StagePrecision::Int8(Granularity::Role),
+            prop: StagePrecision::Int8(Granularity::Role),
+        }
+    }
+
+    /// Discriminating key for plan/pipeline caches.
+    pub fn key(self) -> String {
+        format!(
+            "{}/{}/{}",
+            self.backbone.key_name(),
+            self.vote.key_name(),
+            self.prop.key_name()
+        )
+    }
+}
+
+/// Quantization spec of one stage: precision plus the declared
+/// output-channel role partition. [`QuantSpec::calibrate`] turns observed
+/// activations into an [`ActQuant`]; when the granularity is `Role` and no
+/// (matching) partition was declared, the roles are derived from the data
+/// ([`derive_roles`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    pub precision: StagePrecision,
+    /// Output channel count of the stage.
+    pub cout: usize,
+    /// Declared role partition (empty -> derived at calibration time).
+    pub roles: Vec<Vec<usize>>,
+}
+
+impl QuantSpec {
+    pub fn new(precision: StagePrecision, cout: usize, roles: Vec<Vec<usize>>) -> QuantSpec {
+        QuantSpec { precision, cout, roles }
+    }
+
+    pub fn fp32(cout: usize) -> QuantSpec {
+        QuantSpec::new(StagePrecision::Fp32, cout, Vec::new())
+    }
+
+    /// Channel partition for an observed activation range (`lo`/`hi` are
+    /// per-channel minima/maxima; their length wins over `self.cout` so a
+    /// spec never panics on an unexpected width).
+    pub fn groups_for(&self, lo: &[f32], hi: &[f32]) -> Vec<Vec<usize>> {
+        let c = lo.len();
+        match self.precision {
+            StagePrecision::Fp32 => vec![(0..c).collect()],
+            StagePrecision::Int8(Granularity::Role) => {
+                let covered: usize = self.roles.iter().map(|g| g.len()).sum();
+                if !self.roles.is_empty() && covered == c {
+                    self.roles.clone()
+                } else {
+                    derive_roles(lo, hi, 4)
+                }
+            }
+            StagePrecision::Int8(g) => partition(g, c, &self.roles),
+        }
+    }
+
+    /// Calibrate an activation quantizer for an observed `(N, C)` tensor.
+    pub fn calibrate(&self, t: &Tensor) -> ActQuant {
+        let (lo, hi) = channel_minmax(t);
+        let groups = self.groups_for(&lo, &hi);
+        ActQuant::calibrate(&lo, &hi, &groups)
+    }
+
+    /// Quantization parameters this spec stores for the stage (3 per
+    /// channel group, matching `quantize.quant_param_count`).
+    pub fn param_count(&self) -> usize {
+        let groups = match self.precision {
+            StagePrecision::Fp32 => return 0,
+            StagePrecision::Int8(Granularity::Layer) => 1,
+            StagePrecision::Int8(Granularity::Channel) => self.cout.max(1),
+            StagePrecision::Int8(Granularity::Group(n)) => n.clamp(1, self.cout.max(1)),
+            StagePrecision::Int8(Granularity::Role) => self.roles.len().max(1),
+        };
+        3 * groups
+    }
+}
+
+/// Genuinely quantized activation tensor: `i8` codes plus the per-channel
+/// affine parameters that produced them. The `quantize -> dequantize`
+/// round trip is bit-consistent with [`ActQuant::qdq`] (every code is an
+/// integer in `[-128, 127]`, exactly representable in f32, and the
+/// dequantization expression is identical).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    /// Per-channel (expanded) scale / zero-point, as calibrated.
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+}
+
+impl QTensor {
+    /// Quantize a `(N, C)` tensor with a calibrated quantizer.
+    pub fn quantize(t: &Tensor, q: &ActQuant) -> Result<QTensor> {
+        let c = q.scale.len();
+        if t.row_len() != c {
+            return Err(anyhow!(
+                "quantize: activation width {} != calibrated channels {c}",
+                t.row_len()
+            ));
+        }
+        let mut data = Vec::with_capacity(t.data.len());
+        for row in 0..t.rows() {
+            for (i, &v) in t.row(row).iter().enumerate() {
+                let code = (v / q.scale[i] + q.zero[i]).round().clamp(-128.0, 127.0);
+                data.push(code as i8);
+            }
+        }
+        Ok(QTensor {
+            shape: t.shape.clone(),
+            data,
+            scale: q.scale.clone(),
+            zero: q.zero.clone(),
+        })
+    }
+
+    /// Recover the f32 view (bit-consistent with [`ActQuant::qdq`]).
+    pub fn dequantize(&self) -> Tensor {
+        let c = self.scale.len().max(1);
+        let data = self
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| (q as f32 - self.zero[i % c]) * self.scale[i % c])
+            .collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    /// Bytes this tensor occupies on the wire (1 per element).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Calibration pass: derive a role partition from a stage's observed
+/// output-channel ranges. Channels cluster by dynamic-range magnitude on a
+/// log scale; a new group opens where consecutive (sorted) channels differ
+/// by more than 4x in range. This recovers the paper's Fig. 6 structure —
+/// tight xyz offsets vs wide classification logits vs medium regression
+/// residuals — without a hand-declared partition.
+pub fn derive_roles(lo: &[f32], hi: &[f32], max_groups: usize) -> Vec<Vec<usize>> {
+    let c = lo.len();
+    if c == 0 {
+        return Vec::new();
+    }
+    let max_groups = max_groups.max(1);
+    let logr: Vec<f64> = (0..c)
+        .map(|i| ((hi[i] - lo[i]).max(1e-12) as f64).log10())
+        .collect();
+    let mut order: Vec<usize> = (0..c).collect();
+    order.sort_by(|&a, &b| logr[a].partial_cmp(&logr[b]).unwrap().then(a.cmp(&b)));
+    // candidate cut before sorted position i, weighted by the range gap
+    let mut gaps: Vec<(f64, usize)> = order
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| (logr[w[1]] - logr[w[0]], i + 1))
+        .collect();
+    gaps.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let threshold = 4.0f64.log10();
+    let mut cuts: Vec<usize> = gaps
+        .iter()
+        .take(max_groups - 1)
+        .filter(|&&(g, _)| g > threshold)
+        .map(|&(_, i)| i)
+        .collect();
+    cuts.sort_unstable();
+    let mut groups = Vec::with_capacity(cuts.len() + 1);
+    let mut start = 0usize;
+    for cut in cuts.into_iter().chain(std::iter::once(c)) {
+        let mut g: Vec<usize> = order[start..cut].to_vec();
+        g.sort_unstable();
+        groups.push(g);
+        start = cut;
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn head_like(n: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let c = 80;
+        let mut data = Vec::with_capacity(n * c);
+        for _ in 0..n {
+            for ch in 0..c {
+                let sigma = if ch < 3 {
+                    0.05
+                } else if ch < 40 {
+                    8.0
+                } else {
+                    0.8
+                };
+                data.push(r.normal_scaled(0.0, sigma) as f32);
+            }
+        }
+        Tensor::new(vec![n, c], data)
+    }
+
+    #[test]
+    fn qtensor_roundtrip_bit_consistent_with_qdq() {
+        let t = head_like(128, 7);
+        let spec = QuantSpec::new(StagePrecision::Int8(Granularity::Role), 80, Vec::new());
+        let act = spec.calibrate(&t);
+        let q = QTensor::quantize(&t, &act).expect("quantize");
+        let deq = q.dequantize();
+        let mut reference = t.clone();
+        act.qdq(&mut reference).expect("qdq");
+        assert_eq!(deq.shape, reference.shape);
+        for (a, b) in deq.data.iter().zip(reference.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "QTensor drifted from QDQ reference");
+        }
+        assert_eq!(q.size_bytes(), t.len());
+    }
+
+    #[test]
+    fn qtensor_rejects_width_mismatch() {
+        let t = head_like(4, 1);
+        let act = ActQuant::calibrate(&[0.0; 3], &[1.0; 3], &[vec![0, 1, 2]]);
+        assert!(QTensor::quantize(&t, &act).is_err());
+    }
+
+    #[test]
+    fn derive_roles_recovers_head_clusters() {
+        let t = head_like(256, 9);
+        let (lo, hi) = channel_minmax(&t);
+        let roles = derive_roles(&lo, &hi, 4);
+        assert_eq!(roles.len(), 3, "expected 3 role clusters, got {roles:?}");
+        let covered: usize = roles.iter().map(|g| g.len()).sum();
+        assert_eq!(covered, 80);
+        let xyz = roles
+            .iter()
+            .find(|g| g.contains(&0))
+            .expect("group containing channel 0");
+        assert_eq!(xyz[..], [0usize, 1, 2], "xyz channels must cluster alone");
+    }
+
+    #[test]
+    fn derive_roles_degenerate_inputs() {
+        assert!(derive_roles(&[], &[], 4).is_empty());
+        let one = derive_roles(&[0.0], &[1.0], 4);
+        assert_eq!(one, vec![vec![0]]);
+        // homogeneous channels collapse to a single group
+        let hom = derive_roles(&[0.0; 16], &[1.0; 16], 4);
+        assert_eq!(hom.len(), 1);
+    }
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for (b, h) in [
+            ("fp32", "fp32"),
+            ("int8", "int8_layer"),
+            ("int8", "int8_group"),
+            ("int8", "int8_channel"),
+            ("int8", "int8_role"),
+        ] {
+            let s = QuantScheme::from_names(b, h).expect("parse");
+            assert_eq!(s.backbone.backbone_name(), b);
+            assert_eq!(s.vote.head_name(), h);
+            assert_eq!(s.prop.head_name(), h);
+        }
+        assert!(QuantScheme::from_names("int4", "fp32").is_none());
+    }
+
+    #[test]
+    fn degraded_keeps_role_heads_drops_backbone_groups() {
+        let fast = QuantScheme::fp32().degraded();
+        assert_eq!(
+            fast.backbone,
+            StagePrecision::Int8(Granularity::Group(DEGRADED_BACKBONE_GROUPS))
+        );
+        assert_eq!(fast.vote, StagePrecision::Int8(Granularity::Role));
+        assert_eq!(fast.prop, StagePrecision::Int8(Granularity::Role));
+        // cache keys discriminate degraded from plain int8
+        assert_ne!(fast.key(), QuantScheme::int8(Granularity::Role).key());
+    }
+
+    #[test]
+    fn spec_param_counts_match_quantize_py() {
+        let vote_roles = vec![(0..3).collect::<Vec<_>>(), (3..131).collect()];
+        let mk = |p| QuantSpec::new(p, 131, vote_roles.clone()).param_count();
+        assert_eq!(mk(StagePrecision::Fp32), 0);
+        assert_eq!(mk(StagePrecision::Int8(Granularity::Layer)), 3);
+        assert_eq!(mk(StagePrecision::Int8(Granularity::Role)), 6);
+        assert_eq!(mk(StagePrecision::Int8(Granularity::Group(2))), 6);
+        assert_eq!(mk(StagePrecision::Int8(Granularity::Channel)), 3 * 131);
+    }
+}

@@ -90,6 +90,70 @@ mod tests {
     }
 
     #[test]
+    fn prop_qdq_error_bounded_by_half_scale() {
+        // property: for a tensor the quantizer was calibrated on, every
+        // element's QDQ error is at most scale/2 (rounding), never clipping
+        use crate::quant::{channel_minmax, ActQuant};
+        use crate::util::prop::{check, PropConfig};
+        use crate::util::tensor::Tensor;
+        check("qdq-error-half-scale", PropConfig { cases: 48, seed: 0x51AB }, |rng, size| {
+            let n = (size * 2).max(16);
+            let c = 2 + rng.below(12);
+            let mut data = Vec::with_capacity(n * c);
+            for _ in 0..n {
+                for ch in 0..c {
+                    let sigma = 0.1 + (ch % 4) as f64;
+                    data.push(rng.normal_scaled(0.0, sigma) as f32);
+                }
+            }
+            let t = Tensor::new(vec![n, c], data);
+            let (lo, hi) = channel_minmax(&t);
+            let groups: Vec<Vec<usize>> = (0..c).map(|i| vec![i]).collect();
+            let q = ActQuant::calibrate(&lo, &hi, &groups);
+            let mut deq = t.clone();
+            q.qdq(&mut deq).map_err(|e| e.to_string())?;
+            for row in 0..n {
+                for ch in 0..c {
+                    let err = (t.row(row)[ch] - deq.row(row)[ch]).abs();
+                    let bound = q.scale[ch] * 0.5 * (1.0 + 1e-3) + 1e-7;
+                    if err > bound {
+                        return Err(format!(
+                            "per-element error {err} exceeds scale/2 = {} (ch {ch})",
+                            q.scale[ch] * 0.5
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_kl_matrix_symmetric_zero_on_identical_distributions() {
+        // property: channels with the same distribution have a KL matrix
+        // that is exactly symmetric and (numerically) zero everywhere
+        use crate::util::prop::{check, PropConfig};
+        check("kl-identical-zero", PropConfig { cases: 32, seed: 0x0FF }, |rng, size| {
+            let n = (size * 16).max(64);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_scaled(0.0, 1.5) as f32).collect();
+            let h = histogram(&xs, -8.0, 8.0, 24);
+            let hists = vec![h; 4];
+            let m = kl_matrix(&hists);
+            for i in 0..m.len() {
+                for j in 0..m.len() {
+                    if m[i][j].abs() > 1e-9 {
+                        return Err(format!("KL[{i}][{j}] = {} on identical hists", m[i][j]));
+                    }
+                    if m[i][j] != m[j][i] {
+                        return Err(format!("KL matrix asymmetric at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn within_group_kl_smaller_for_role_clustered_channels() {
         let mut r = Rng::new(2);
         // 6 channels: 3 narrow-gauss, 3 wide-gauss

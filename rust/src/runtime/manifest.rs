@@ -9,6 +9,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::quant::{Granularity, QuantSpec, StagePrecision};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -492,6 +493,52 @@ impl Manifest {
     pub fn num_class(&self) -> usize {
         self.classes.len()
     }
+
+    /// Output channel count and declared role partition of a network role
+    /// (`"vote"`, `"prop"`, `"seg"`, `"fp_fc"`, `"sa1_full"`, ...). The head
+    /// partitions come from the manifest's role groups; other stages have no
+    /// declared roles (a `Role` spec derives them from data at calibration).
+    pub fn stage_channels(&self, net: &str) -> (usize, Vec<Vec<usize>>) {
+        match net {
+            "vote" => (3 + self.seed_feat, self.role_groups_vote.clone()),
+            "prop" => (self.head_layout.sem_cls.1, self.role_groups_prop.clone()),
+            "seg" => (self.num_seg_classes, Vec::new()),
+            "fp_fc" => (self.seed_feat, Vec::new()),
+            n if n.starts_with("sa") => {
+                let level = n[2..3].parse::<usize>().unwrap_or(1);
+                let cout = self
+                    .sa_configs
+                    .get(level.saturating_sub(1))
+                    .and_then(|s| s.mlp.last().copied())
+                    .unwrap_or(1);
+                (cout, Vec::new())
+            }
+            _ => (1, Vec::new()),
+        }
+    }
+
+    /// Per-stage quant spec the manifest declares for an artifact, with the
+    /// stage executed at `precision` (the QuantScheme override point — the
+    /// serving degrade path runs "int8" backbone artifacts at an even-group
+    /// granularity the artifact name does not encode).
+    pub fn stage_quant_for(&self, meta: &ArtifactMeta, precision: StagePrecision) -> QuantSpec {
+        let (cout, roles) = self.stage_channels(&meta.net);
+        // an even-group head follows its role count, matching
+        // quantize.quant_param_count's group accounting
+        let precision = match precision {
+            StagePrecision::Int8(Granularity::Group(_)) if !roles.is_empty() => {
+                StagePrecision::Int8(Granularity::Group(roles.len()))
+            }
+            p => p,
+        };
+        QuantSpec::new(precision, cout, roles)
+    }
+
+    /// Per-stage quant spec at the artifact's own precision label.
+    pub fn stage_quant(&self, meta: &ArtifactMeta) -> QuantSpec {
+        let precision = StagePrecision::parse(&meta.precision).unwrap_or(StagePrecision::Fp32);
+        self.stage_quant_for(meta, precision)
+    }
 }
 
 #[cfg(test)]
@@ -542,5 +589,39 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), before, "duplicate artifact names");
+    }
+
+    #[test]
+    fn stage_quant_declares_per_stage_specs() {
+        use crate::quant::{Granularity, StagePrecision};
+        let m = Manifest::synthetic();
+        // role heads carry the declared partitions over the right widths
+        let vote = m.artifact("synrgbd_pointsplit_vote_int8_role").unwrap();
+        let sv = m.stage_quant(vote);
+        assert_eq!(sv.precision, StagePrecision::Int8(Granularity::Role));
+        assert_eq!(sv.cout, 131);
+        assert_eq!(sv.roles, m.role_groups_vote);
+        let covered: usize = sv.roles.iter().map(|g| g.len()).sum();
+        assert_eq!(covered, sv.cout, "vote role partition must cover all channels");
+        let prop = m.artifact("synrgbd_pointsplit_prop_int8_role").unwrap();
+        let sp = m.stage_quant(prop);
+        assert_eq!(sp.cout, 79);
+        assert_eq!(sp.roles.iter().map(|g| g.len()).sum::<usize>(), 79);
+        // group heads follow their role count (param-count parity)
+        let pg = m.artifact("synrgbd_pointsplit_prop_int8_group").unwrap();
+        assert_eq!(
+            m.stage_quant(pg).precision,
+            StagePrecision::Int8(Granularity::Group(3))
+        );
+        // backbone "int8" is layer-wise by default, overridable per call
+        let sa = m.artifact("synrgbd_pointsplit_sa1_full_int8").unwrap();
+        assert_eq!(m.stage_quant(sa).precision, StagePrecision::Int8(Granularity::Layer));
+        assert_eq!(m.stage_quant(sa).cout, 64);
+        let over = m.stage_quant_for(sa, StagePrecision::Int8(Granularity::Group(4)));
+        assert_eq!(over.precision, StagePrecision::Int8(Granularity::Group(4)));
+        // fp32 artifacts quantize nothing
+        let fp = m.artifact("synrgbd_pointsplit_vote_fp32").unwrap();
+        assert_eq!(m.stage_quant(fp).precision, StagePrecision::Fp32);
+        assert_eq!(m.stage_quant(fp).param_count(), 0);
     }
 }

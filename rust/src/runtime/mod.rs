@@ -32,6 +32,7 @@ use std::sync::{Mutex, Once};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::quant::QuantSpec;
 use crate::util::tensor::Tensor;
 
 /// Where a [`Runtime`] came from — lets worker threads open their own
@@ -158,10 +159,27 @@ impl Runtime {
         self.cache.lock().unwrap().len()
     }
 
+    /// Execute an artifact on f32 tensors at its manifest-declared quant
+    /// spec. See [`Runtime::run_with_spec`].
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.run_with_spec(name, inputs, None)
+    }
+
     /// Execute an artifact on f32 tensors. Inputs are validated against the
     /// manifest shapes; outputs come back as a tuple of tensors. Falls back
     /// to the deterministic host surrogate when PJRT is the vendored stub.
-    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ///
+    /// `spec` is the QuantScheme layer's entry point: an explicit per-stage
+    /// quant spec overriding the manifest default for this call (the
+    /// serving degrade path runs backbone artifacts at granularities their
+    /// names do not encode). It only affects the surrogate — real PJRT
+    /// executables have their numerics baked in at export time.
+    pub fn run_with_spec(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        spec: Option<&QuantSpec>,
+    ) -> Result<Vec<Tensor>> {
         let meta = self
             .manifest
             .artifact(name)
@@ -195,7 +213,7 @@ impl Runtime {
                 Err(e) => return Err(e),
             }
         }
-        surrogate::run(&self.manifest, &meta, inputs)
+        surrogate::run_with_spec(&self.manifest, &meta, inputs, spec)
     }
 
     /// The real PJRT execution path (requires a working `xla-rs` backend).

@@ -4,19 +4,41 @@
 //! so on machines without a real PJRT backend the functional pipeline used
 //! to die at its first NN call. This module stands in for the executables
 //! with small fixed-function networks whose weights are derived from a hash
-//! of the artifact name: fully deterministic (same artifact + same input →
-//! bit-identical output, on any thread), shape-correct per the manifest, and
-//! cheap enough that the host hot path stays dominated by point ops.
+//! of the artifact's (dataset, model, net) identity: fully deterministic
+//! (same artifact + same input → bit-identical output, on any thread),
+//! shape-correct per the manifest, and cheap enough that the host hot path
+//! stays dominated by point ops.
+//!
+//! # INT8 execution
+//!
+//! Precision variants of an artifact share the same underlying weights —
+//! they are the *same trained network* at different numerics. An INT8
+//! artifact executes a genuine quantized path, not the fp path with a
+//! renamed artifact:
+//!
+//! 1. activations are calibrated per input-channel group (the stage's
+//!    [`QuantSpec`] granularity) and quantized to real `i8` codes
+//!    ([`QTensor`], bit-consistent with the `ActQuant` QDQ reference);
+//! 2. the matmul runs in integer arithmetic — `i8 × i8` products
+//!    accumulated in wide integers per channel group, with the zero-point
+//!    correction folded in as an integer weight-sum term;
+//! 3. the accumulator is dequantized through the group scales, and the
+//!    stage's *output* activations are quantized at the spec's granularity
+//!    over its output channels — which is exactly where the paper's
+//!    role-based partition preserves the heads' tiny xyz offsets while
+//!    layer-wise scales crush them (Table 7/11).
 //!
 //! This is a *reference executor*, not the trained model: detections are
 //! internally consistent (stable across runs, usable for determinism tests,
 //! scheduling studies, and serving experiments) but their accuracy is
-//! meaningless. Swapping `rust/Cargo.toml` to a real `xla-rs` build restores
-//! execution of the exported artifacts; the surrogate then never runs.
+//! meaningful only relative to other surrogate configurations. Swapping
+//! `rust/Cargo.toml` to a real `xla-rs` build restores execution of the
+//! exported artifacts; the surrogate then never runs.
 
 use anyhow::{anyhow, Result};
 
 use super::manifest::{ArtifactMeta, Manifest};
+use crate::quant::{QTensor, QuantSpec};
 use crate::util::tensor::Tensor;
 
 #[inline]
@@ -36,6 +58,13 @@ fn hash_str(s: &str) -> u64 {
     h
 }
 
+/// Weight key shared by every precision variant of a network: the artifact
+/// name *minus* the precision suffix, so `vote_fp32` and `vote_int8_role`
+/// execute the same weights and differ only by quantization error.
+fn weight_key(meta: &ArtifactMeta) -> u64 {
+    hash_str(&format!("{}_{}_{}", meta.dataset, meta.model, meta.net))
+}
+
 /// Pseudo-random weight in [-1, 1] for (artifact key, out channel, in channel).
 #[inline]
 fn weight(key: u64, j: u64, c: u64) -> f32 {
@@ -45,8 +74,14 @@ fn weight(key: u64, j: u64, c: u64) -> f32 {
     ((h >> 11) as f64 * (2.0 / (1u64 << 53) as f64) - 1.0) as f32
 }
 
-/// Deterministic dense layer: rows (n, cin) -> tanh(rows @ W + b) (n, cout).
-fn dense(x_rows: impl Iterator<Item = Vec<f32>>, n: usize, cin: usize, cout: usize, key: u64) -> Tensor {
+fn bias_vec(key: u64, cout: usize) -> Vec<f32> {
+    (0..cout).map(|j| 0.1 * weight(key ^ 0xB1A5, j as u64, 0)).collect()
+}
+
+/// Deterministic fp32 dense layer on a flat `(n * cin)` activation slice:
+/// rows -> tanh(rows @ W + b).
+fn dense(data: &[f32], cin: usize, cout: usize, key: u64) -> Tensor {
+    let n = data.len() / cin.max(1);
     // materialize W once per call (cout x cin + bias)
     let mut w = Vec::with_capacity(cout * cin);
     for j in 0..cout {
@@ -54,11 +89,10 @@ fn dense(x_rows: impl Iterator<Item = Vec<f32>>, n: usize, cin: usize, cout: usi
             w.push(weight(key, j as u64, c as u64));
         }
     }
-    let bias: Vec<f32> = (0..cout).map(|j| 0.1 * weight(key ^ 0xB1A5, j as u64, 0)).collect();
+    let bias = bias_vec(key, cout);
     let scale = 1.0 / (cin.max(1) as f32).sqrt();
     let mut out = Vec::with_capacity(n * cout);
-    for row in x_rows {
-        debug_assert_eq!(row.len(), cin);
+    for row in data.chunks_exact(cin.max(1)) {
         for j in 0..cout {
             let wrow = &w[j * cin..(j + 1) * cin];
             let mut acc = 0.0f32;
@@ -71,44 +105,184 @@ fn dense(x_rows: impl Iterator<Item = Vec<f32>>, n: usize, cin: usize, cout: usi
     Tensor::new(vec![n, cout], out)
 }
 
-/// Mean-pool the ball dimension of a (b, k, c) tensor into (b, c) rows.
-fn pooled_rows(x: &Tensor) -> impl Iterator<Item = Vec<f32>> + '_ {
+/// Genuine INT8 dense layer: quantize → integer matmul → dequantize.
+///
+/// Activations are calibrated over the batch at the spec's granularity on
+/// the *input* channels (a `Role` spec derives the partition from the
+/// observed ranges — the calibration pass), weights are symmetric
+/// per-output-channel `i8`. Within a channel group the scale and zero point
+/// are shared, so the matmul factors into pure integer dot products plus an
+/// integer zero-point correction.
+fn dense_q(data: &[f32], cin: usize, cout: usize, key: u64, spec: &QuantSpec) -> Result<Tensor> {
+    let cin = cin.max(1);
+    let n = data.len() / cin;
+    // same fp weights as the fp32 path, quantized symmetric per output row
+    let mut wq: Vec<i8> = Vec::with_capacity(cout * cin);
+    let mut sw = Vec::with_capacity(cout);
+    for j in 0..cout {
+        let wrow: Vec<f32> = (0..cin).map(|c| weight(key, j as u64, c as u64)).collect();
+        let amax = wrow.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let s = (amax / 127.0).max(1e-12);
+        sw.push(s);
+        wq.extend(wrow.iter().map(|&v| (v / s).round().clamp(-127.0, 127.0) as i8));
+    }
+    let bias = bias_vec(key, cout);
+
+    // dynamic activation calibration over the batch, grouped per the spec's
+    // granularity applied to the input channels
+    let flat = Tensor::new(vec![n, cin], data.to_vec());
+    let in_spec = QuantSpec::new(spec.precision, cin, Vec::new());
+    let (lo, hi) = crate::quant::channel_minmax(&flat);
+    let groups = in_spec.groups_for(&lo, &hi);
+    let act = crate::quant::ActQuant::calibrate(&lo, &hi, &groups);
+    let qx = QTensor::quantize(&flat, &act)?;
+
+    // per-(output, group) integer weight sums for the zero-point correction
+    // (i64: a degenerate constant channel far from zero calibrates a huge
+    // zero point — the f32->i64 cast saturates instead of overflowing)
+    let ng = groups.len().max(1);
+    let mut wsum = vec![0i64; cout * ng];
+    for j in 0..cout {
+        for (gi, g) in groups.iter().enumerate() {
+            wsum[j * ng + gi] = g.iter().map(|&c| wq[j * cin + c] as i64).sum();
+        }
+    }
+    let gscale: Vec<f32> = groups.iter().map(|g| act.scale[g[0]]).collect();
+    let gzero: Vec<i64> = groups.iter().map(|g| act.zero[g[0]] as i64).collect();
+
+    let scale = 1.0 / (cin.max(1) as f32).sqrt();
+    let mut out = Vec::with_capacity(n * cout);
+    for r in 0..n {
+        let x = &qx.data[r * cin..(r + 1) * cin];
+        for j in 0..cout {
+            let wrow = &wq[j * cin..(j + 1) * cin];
+            let mut acc = 0.0f32;
+            for (gi, g) in groups.iter().enumerate() {
+                let mut dot = 0i64;
+                for &c in g {
+                    dot += wrow[c] as i64 * x[c] as i64;
+                }
+                acc += gscale[gi] * (dot - gzero[gi] * wsum[j * ng + gi]) as f32;
+            }
+            out.push((sw[j] * acc * scale + bias[j]).tanh());
+        }
+    }
+    Ok(Tensor::new(vec![n, cout], out))
+}
+
+/// Per-channel output magnitudes of the head networks — the heterogeneous
+/// ranges of paper Fig. 6: tight center offsets and regression residuals
+/// next to wide classification logits. This is the structure the role
+/// partition exploits (and a single layer scale crushes, Table 7/11).
+fn head_scales(manifest: &Manifest, net: &str, cout: usize) -> Option<Vec<f32>> {
+    match net {
+        "vote" => {
+            // xyz vote offsets are small; feature residuals stay unit-scale
+            let mut s = vec![1.0f32; cout];
+            for v in s.iter_mut().take(3) {
+                *v = 0.25;
+            }
+            Some(s)
+        }
+        "prop" => {
+            let hl = manifest.head_layout;
+            let mut s = vec![1.0f32; cout];
+            let mut fill = |range: (usize, usize), v: f32| {
+                for c in range.0..range.1.min(cout) {
+                    s[c] = v;
+                }
+            };
+            fill(hl.center, 0.25);
+            fill(hl.objectness, 6.0);
+            fill(hl.heading_cls, 6.0);
+            fill(hl.heading_reg, 0.5);
+            fill(hl.size_cls, 6.0);
+            fill(hl.size_reg, 0.5);
+            fill(hl.sem_cls, 6.0);
+            Some(s)
+        }
+        _ => None,
+    }
+}
+
+/// One dense stage at the spec's precision: fp32 or the quantized integer
+/// path, optional per-channel output magnitudes, and (int8 only, `out_qdq`)
+/// output-activation quantization over the stage's output-channel partition
+/// (role groups for the heads).
+fn forward(
+    data: &[f32],
+    cin: usize,
+    cout: usize,
+    key: u64,
+    spec: &QuantSpec,
+    scales: Option<&[f32]>,
+    out_qdq: bool,
+) -> Result<Tensor> {
+    let mut t = if spec.precision.is_int8() {
+        dense_q(data, cin, cout, key, spec)?
+    } else {
+        dense(data, cin, cout, key)
+    };
+    if let Some(sc) = scales {
+        for r in 0..t.rows() {
+            for (v, s) in t.row_mut(r).iter_mut().zip(sc.iter()) {
+                *v *= s;
+            }
+        }
+    }
+    if spec.precision.is_int8() && out_qdq {
+        let act = spec.calibrate(&t);
+        act.qdq(&mut t)?;
+    }
+    Ok(t)
+}
+
+/// Mean-pool the ball dimension of a (b, k, c) tensor into a flat (b * c)
+/// row-major buffer.
+fn pooled_flat(x: &Tensor) -> Vec<f32> {
     let (b, k, c) = (x.shape[0], x.shape[1], x.shape[2]);
-    (0..b).map(move |i| {
-        let mut pool = vec![0.0f32; c];
+    let inv = 1.0 / k.max(1) as f32;
+    let mut out = vec![0.0f32; b * c];
+    for i in 0..b {
+        let pool = &mut out[i * c..(i + 1) * c];
         let base = i * k * c;
         for kk in 0..k {
             for (p, v) in pool.iter_mut().zip(x.data[base + kk * c..base + (kk + 1) * c].iter()) {
                 *p += v;
             }
         }
-        let inv = 1.0 / k.max(1) as f32;
         for p in pool.iter_mut() {
             *p *= inv;
         }
-        pool
-    })
+    }
+    out
 }
 
-/// Execute one artifact on the surrogate. Output shapes follow the manifest
-/// contract for the artifact's `net` role.
-pub fn run(manifest: &Manifest, meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+/// Execute one artifact on the surrogate with an explicit per-stage quant
+/// spec (`None` uses the manifest-declared spec for the artifact). Output
+/// shapes follow the manifest contract for the artifact's `net` role.
+pub fn run_with_spec(
+    manifest: &Manifest,
+    meta: &ArtifactMeta,
+    inputs: &[&Tensor],
+    spec: Option<&QuantSpec>,
+) -> Result<Vec<Tensor>> {
     let x = inputs
         .first()
         .ok_or_else(|| anyhow!("surrogate '{}': no input", meta.name))?;
-    let key = hash_str(&meta.name);
+    let spec = match spec {
+        Some(s) => s.clone(),
+        None => manifest.stage_quant(meta),
+    };
+    let key = weight_key(meta);
     match meta.net.as_str() {
         // (H, W, 3) RGB -> (H, W, num_seg_classes) softmax scores
         "seg" => {
             let (h, w, cin) = (x.shape[0], x.shape[1], x.shape[2]);
             let nseg = manifest.num_seg_classes;
-            let logits = dense(
-                (0..h * w).map(|p| x.data[p * cin..(p + 1) * cin].to_vec()),
-                h * w,
-                cin,
-                nseg,
-                key,
-            );
+            // logits quantize on the int8 path; softmax renormalizes, so no
+            // output QDQ after it
+            let logits = forward(&x.data, cin, nseg, key, &spec, None, false)?;
             let mut out = logits.data;
             for p in 0..h * w {
                 let row = &mut out[p * nseg..(p + 1) * nseg];
@@ -126,32 +300,22 @@ pub fn run(manifest: &Manifest, meta: &ArtifactMeta, inputs: &[&Tensor]) -> Resu
         }
         // (n, fp_in) -> (n, seed_feat)
         "fp_fc" => {
-            let (n, cin) = (x.shape[0], x.shape[1]);
-            Ok(vec![dense(
-                (0..n).map(|i| x.row(i).to_vec()),
-                n,
-                cin,
-                manifest.seed_feat,
-                key,
-            )])
+            let cin = x.shape[1];
+            Ok(vec![forward(&x.data, cin, manifest.seed_feat, key, &spec, None, true)?])
         }
         // (n, seed_feat) -> (n, 3 + seed_feat) vote offsets + residuals
         "vote" => {
-            let (n, cin) = (x.shape[0], x.shape[1]);
-            Ok(vec![dense(
-                (0..n).map(|i| x.row(i).to_vec()),
-                n,
-                cin,
-                3 + manifest.seed_feat,
-                key,
-            )])
+            let cin = x.shape[1];
+            let cout = 3 + manifest.seed_feat;
+            let sc = head_scales(manifest, "vote", cout);
+            Ok(vec![forward(&x.data, cin, cout, key, &spec, sc.as_deref(), true)?])
         }
         // (p, k, c) proposal groups -> (p, head channels)
         "prop" => {
-            let b = x.shape[0];
-            let cin = x.shape[2];
             let head_ch = manifest.head_layout.sem_cls.1;
-            Ok(vec![dense(pooled_rows(x), b, cin, head_ch, key)])
+            let sc = head_scales(manifest, "prop", head_ch);
+            let pooled = pooled_flat(x);
+            Ok(vec![forward(&pooled, x.shape[2], head_ch, key, &spec, sc.as_deref(), true)?])
         }
         // saN_full / saN_half: (b, k, cin) -> (b, mlp.last)
         net if net.starts_with("sa") => {
@@ -163,17 +327,22 @@ pub fn run(manifest: &Manifest, meta: &ArtifactMeta, inputs: &[&Tensor]) -> Resu
                 .get(level - 1)
                 .ok_or_else(|| anyhow!("surrogate: SA level {level} out of range"))?;
             let cout = *sac.mlp.last().expect("sa mlp widths");
-            let b = x.shape[0];
-            let cin = x.shape[2];
-            Ok(vec![dense(pooled_rows(x), b, cin, cout, key)])
+            let pooled = pooled_flat(x);
+            Ok(vec![forward(&pooled, x.shape[2], cout, key, &spec, None, true)?])
         }
         other => Err(anyhow!("surrogate: unknown net role '{other}' ({})", meta.name)),
     }
 }
 
+/// Execute one artifact at its manifest-declared quant spec.
+pub fn run(manifest: &Manifest, meta: &ArtifactMeta, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    run_with_spec(manifest, meta, inputs, None)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{Granularity, StagePrecision};
 
     fn manifest() -> Manifest {
         Manifest::synthetic()
@@ -192,11 +361,13 @@ mod tests {
         let m = manifest();
         for name in [
             "synrgbd_seg_fp32",
+            "synrgbd_seg_int8",
             "synrgbd_pointsplit_sa1_half_int8",
             "synrgbd_pointsplit_sa4_full_int8",
             "synrgbd_pointsplit_fp_fc_int8",
             "synrgbd_pointsplit_vote_int8_role",
             "synrgbd_pointsplit_prop_int8_role",
+            "synrgbd_pointsplit_prop_int8_layer",
         ] {
             let meta = m.artifact(name).expect(name).clone();
             let x = probe(&meta.input_shapes[0]);
@@ -224,14 +395,68 @@ mod tests {
     }
 
     #[test]
-    fn different_artifacts_give_different_outputs() {
+    fn int8_variants_share_weights_and_track_fp32() {
+        // precision variants are the same network: the int8 output must be
+        // a small perturbation of the fp32 output, not a different model
         let m = manifest();
-        let a = m.artifact("synrgbd_pointsplit_vote_int8_role").unwrap().clone();
-        let b = m.artifact("synrgbd_pointsplit_vote_fp32").unwrap().clone();
-        let x = probe(&a.input_shapes[0]);
-        let ya = run(&m, &a, &[&x]).unwrap().remove(0);
-        let yb = run(&m, &b, &[&x]).unwrap().remove(0);
-        assert_ne!(ya, yb, "precision variants must not alias");
+        let fp = m.artifact("synrgbd_pointsplit_vote_fp32").unwrap().clone();
+        let role = m.artifact("synrgbd_pointsplit_vote_int8_role").unwrap().clone();
+        let x = probe(&fp.input_shapes[0]);
+        let yf = run(&m, &fp, &[&x]).unwrap().remove(0);
+        let yr = run(&m, &role, &[&x]).unwrap().remove(0);
+        assert_ne!(yf, yr, "quantization must not be a no-op");
+        let mut err = 0.0f64;
+        let mut mag = 0.0f64;
+        for (a, b) in yf.data.iter().zip(yr.data.iter()) {
+            err += ((a - b) as f64).powi(2);
+            mag += (*a as f64).powi(2);
+        }
+        assert!(
+            err / mag.max(1e-12) < 0.05,
+            "int8_role relative error {} should be small",
+            err / mag
+        );
+    }
+
+    #[test]
+    fn role_preserves_small_channels_better_than_layer() {
+        // the Table 11 mechanism, now on the execution path: vote channels
+        // 0..3 are the xyz offsets; the role partition isolates them while
+        // a single layer scale is set by the widest feature channels
+        let m = manifest();
+        let fp = m.artifact("synrgbd_pointsplit_vote_fp32").unwrap().clone();
+        let role = m.artifact("synrgbd_pointsplit_vote_int8_role").unwrap().clone();
+        let layer = m.artifact("synrgbd_pointsplit_vote_int8_layer").unwrap().clone();
+        let x = probe(&fp.input_shapes[0]);
+        let yf = run(&m, &fp, &[&x]).unwrap().remove(0);
+        let yr = run(&m, &role, &[&x]).unwrap().remove(0);
+        let yl = run(&m, &layer, &[&x]).unwrap().remove(0);
+        let xyz_err = |y: &Tensor| {
+            let mut e = 0.0f64;
+            for r in 0..y.rows() {
+                for c in 0..3 {
+                    e += ((y.row(r)[c] - yf.row(r)[c]) as f64).powi(2);
+                }
+            }
+            e
+        };
+        assert!(
+            xyz_err(&yr) <= xyz_err(&yl),
+            "role xyz error {} must not exceed layer {}",
+            xyz_err(&yr),
+            xyz_err(&yl)
+        );
+    }
+
+    #[test]
+    fn explicit_spec_overrides_manifest_default() {
+        let m = manifest();
+        let meta = m.artifact("synrgbd_pointsplit_sa1_full_int8").unwrap().clone();
+        let x = probe(&meta.input_shapes[0]);
+        let default = run(&m, &meta, &[&x]).unwrap().remove(0);
+        let spec = m.stage_quant_for(&meta, StagePrecision::Int8(Granularity::Channel));
+        let grouped = run_with_spec(&m, &meta, &[&x], Some(&spec)).unwrap().remove(0);
+        assert_ne!(default, grouped, "granularity override must change the numerics");
     }
 
     #[test]

@@ -161,11 +161,10 @@ type ExecResult = (usize, Result<(Vec<Box3>, Vec<Box3>)>);
 /// behaviour (mirrors `ServicePlanner::cost`'s cache key).
 fn pipe_key(cfg: &DetectorConfig) -> String {
     format!(
-        "{}|{}|{}|{}|{:?}|{}|{}|{}",
+        "{}|{}|{}|{:?}|{}|{}|{}",
         cfg.dataset,
         cfg.variant.name(),
-        cfg.precision_backbone,
-        cfg.precision_head,
+        cfg.scheme.key(),
         cfg.schedule,
         cfg.w0,
         cfg.bias_layers,

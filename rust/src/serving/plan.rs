@@ -18,10 +18,10 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 
-use crate::coordinator::arch::{nn_workload, sa_pointmanip_workload, small_pointop};
+use crate::coordinator::arch::{nn_precision, nn_workload, sa_pointmanip_workload, small_pointop};
 use crate::coordinator::{DetectorConfig, Variant};
 use crate::runtime::Manifest;
-use crate::sim::{DeviceKind, ScheduleSim, StageSpec, Timeline, Workload};
+use crate::sim::{DeviceKind, Precision, ScheduleSim, StageSpec, Timeline, Workload};
 
 /// Per-batch cost summary extracted from a simulated [`Timeline`].
 #[derive(Debug, Clone, Copy)]
@@ -67,6 +67,7 @@ impl DagBuilder {
         &mut self,
         name: String,
         device: DeviceKind,
+        precision: Precision,
         workload: Workload,
         mut deps: Vec<usize>,
     ) -> usize {
@@ -77,7 +78,7 @@ impl DagBuilder {
                 }
             }
         }
-        self.stages.push(StageSpec { name, device, workload, deps });
+        self.stages.push(StageSpec { name, device, precision, workload, deps });
         self.prev = Some(self.stages.len() - 1);
         self.stages.len() - 1
     }
@@ -108,11 +109,10 @@ impl ServicePlanner {
         skip_seg: bool,
     ) -> PlanCost {
         let key = format!(
-            "{}|{}|{}|{}|{:?}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{:?}|{}|{}|{}|{}|{}|{}",
             cfg.dataset,
             cfg.variant.name(),
-            cfg.precision_backbone,
-            cfg.precision_head,
+            cfg.scheme.key(),
             cfg.schedule,
             cfg.w0,
             cfg.bias_layers,
@@ -147,11 +147,17 @@ impl ServicePlanner {
     pub fn stages(&self, cfg: &DetectorConfig, num_points: usize, skip_seg: bool) -> Vec<StageSpec> {
         let m = &self.manifest;
         let point_dev = cfg.schedule.point_dev();
-        // EdgeTPU executes int8 only; fp32 falls back to the point device
-        let mut nn_dev = cfg.schedule.nn_dev();
-        if !cfg.int8() && nn_dev == DeviceKind::EdgeTpu {
-            nn_dev = point_dev;
-        }
+        // EdgeTPU executes int8 only; placement is per stage precision
+        // (mirrors ScenePipeline exactly)
+        let nn_dev_raw = cfg.schedule.nn_dev();
+        let nn_dev_for = |p: Precision| {
+            if p == Precision::Fp32 && nn_dev_raw == DeviceKind::EdgeTpu {
+                point_dev
+            } else {
+                nn_dev_raw
+            }
+        };
+        let nn_dev = nn_dev_for(cfg.scheme.backbone.sim());
         let mut dag = DagBuilder {
             stages: Vec::new(),
             sequential: !cfg.schedule.overlapped(),
@@ -162,7 +168,7 @@ impl ServicePlanner {
         let seg_stage = if cfg.variant.painted() && !skip_seg {
             let mut wl = nn_workload(m, &cfg.seg_art());
             wl.flops *= cfg.seg_passes as u64;
-            Some(dag.push("seg".into(), nn_dev, wl, vec![]))
+            Some(dag.push("seg".into(), nn_dev, nn_precision(m, &cfg.seg_art()), wl, vec![]))
         } else {
             None
         };
@@ -171,6 +177,7 @@ impl ServicePlanner {
             dag.push(
                 "paint".into(),
                 point_dev,
+                Precision::Fp32,
                 small_pointop((num_points * 8) as u64, (num_points * m.num_seg_classes) as u64),
                 paint_deps,
             );
@@ -212,13 +219,16 @@ impl ServicePlanner {
         let pm4 = dag.push(
             "sa4_pm".into(),
             point_dev,
+            Precision::Fp32,
             sa_pointmanip_workload(sa3.n, sa4cfg.m, sa4cfg.k, sa3.cin),
             deps4,
         );
+        let sa4_art = cfg.art("sa4_full");
         let nn4 = dag.push(
             "sa4_nn".into(),
             nn_dev,
-            nn_workload(m, &cfg.art("sa4_full")),
+            nn_precision(m, &sa4_art),
+            nn_workload(m, &sa4_art),
             vec![pm4],
         );
 
@@ -226,36 +236,47 @@ impl ServicePlanner {
         let fp_pm = dag.push(
             "fp_interp".into(),
             point_dev,
+            Precision::Fp32,
             small_pointop((sa2.n * sa3.n * 4) as u64, (sa2.n * m.fp_in * 4) as u64),
             vec![nn4],
         );
+        let fp_art = cfg.art("fp_fc");
         let fp_nn = dag.push(
             "fp_fc".into(),
             nn_dev,
-            nn_workload(m, &cfg.art("fp_fc")),
+            nn_precision(m, &fp_art),
+            nn_workload(m, &fp_art),
             vec![fp_pm],
         );
+        let vote_art = cfg.art("vote");
+        let vote_prec = nn_precision(m, &vote_art);
         let vote_nn = dag.push(
             "vote".into(),
-            nn_dev,
-            nn_workload(m, &cfg.art("vote")),
+            nn_dev_for(vote_prec),
+            vote_prec,
+            nn_workload(m, &vote_art),
             vec![fp_nn],
         );
         let prop_pm = dag.push(
             "prop_pm".into(),
             point_dev,
+            Precision::Fp32,
             sa_pointmanip_workload(sa2.n, m.num_proposals, m.proposal_k, m.seed_feat),
             vec![vote_nn],
         );
+        let prop_art = cfg.art("prop");
+        let prop_prec = nn_precision(m, &prop_art);
         let prop_nn = dag.push(
             "prop".into(),
-            nn_dev,
-            nn_workload(m, &cfg.art("prop")),
+            nn_dev_for(prop_prec),
+            prop_prec,
+            nn_workload(m, &prop_art),
             vec![prop_pm],
         );
         dag.push(
             "decode".into(),
             DeviceKind::Cpu,
+            Precision::Fp32,
             small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
             vec![prop_nn],
         );
@@ -300,6 +321,7 @@ impl ServicePlanner {
             let pm = dag.push(
                 format!("sa{}_{}_pm", l + 1, tag),
                 point_dev,
+                Precision::Fp32,
                 sa_pointmanip_workload(state.n, mm, sac.k, state.cin),
                 deps_pm,
             );
@@ -309,10 +331,12 @@ impl ServicePlanner {
                     deps_nn.push(s); // painted features required
                 }
             }
+            let art = cfg.art(&format!("sa{}_{shape}", l + 1));
             let nn = dag.push(
                 format!("sa{}_{}_nn", l + 1, tag),
                 nn_dev,
-                nn_workload(m, &cfg.art(&format!("sa{}_{shape}", l + 1))),
+                nn_precision(m, &art),
+                nn_workload(m, &art),
                 deps_nn,
             );
             state = PlanLevel { n: mm, cin: *sac.mlp.last().unwrap(), last_nn: vec![nn] };

@@ -52,14 +52,14 @@ impl SloPolicy {
     }
 }
 
-/// The degraded fast path for a configuration: full INT8 (EdgeTPU-eligible),
-/// role-quantized heads (the paper's accuracy-preserving scheme), and 2D
-/// segmentation reuse. The planner is additionally given `skip_seg = true`
-/// and the reduced [`degraded_points`] budget.
+/// The degraded fast path for a configuration: swap the stage subset's
+/// quant specs — backbone groups dropped to plain INT8 (EdgeTPU-eligible),
+/// heads kept at role-based fidelity (the paper's accuracy-preserving
+/// scheme) — plus 2D segmentation reuse. The planner is additionally given
+/// `skip_seg = true` and the reduced [`degraded_points`] budget.
 pub fn degraded_config(cfg: &DetectorConfig) -> DetectorConfig {
     let mut fast = cfg.clone();
-    fast.precision_backbone = "int8".to_string();
-    fast.precision_head = "int8_role".to_string();
+    fast.scheme = cfg.scheme.degraded();
     fast
 }
 
@@ -164,7 +164,8 @@ mod tests {
     }
 
     #[test]
-    fn degraded_config_is_int8_role_fast_path() {
+    fn degraded_config_swaps_quant_specs_not_flags() {
+        use crate::quant::{Granularity, StagePrecision};
         let cfg = DetectorConfig::new(
             "synrgbd",
             Variant::PointSplit,
@@ -172,10 +173,18 @@ mod tests {
             Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
         );
         let fast = degraded_config(&cfg);
-        assert_eq!(fast.precision_backbone, "int8");
-        assert_eq!(fast.precision_head, "int8_role");
+        assert!(fast.scheme.backbone.is_int8());
+        assert!(matches!(
+            fast.scheme.backbone,
+            StagePrecision::Int8(Granularity::Group(_))
+        ));
+        assert_eq!(fast.scheme.vote, StagePrecision::Int8(Granularity::Role));
+        assert_eq!(fast.scheme.prop, StagePrecision::Int8(Granularity::Role));
         assert!(fast.int8());
         assert_eq!(fast.dataset, cfg.dataset);
+        // artifact naming still resolves (backbone granularity is a spec
+        // refinement, not a new artifact set)
+        assert_eq!(fast.seg_art(), "synrgbd_seg_int8");
     }
 
     #[test]

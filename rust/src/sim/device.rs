@@ -20,10 +20,23 @@ impl DeviceKind {
     }
 }
 
+/// Numeric regime a stage executes at. Carried per stage (not per
+/// workload): it is the schedulable property of the QuantScheme layer —
+/// the EdgeTPU accepts int8 NN stages only, and compute/memory rates
+/// differ per precision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     Fp32,
     Int8,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,11 +47,11 @@ pub enum WorkloadKind {
     NeuralNet,
 }
 
-/// One stage's computational footprint.
+/// One stage's computational footprint. The byte counts already reflect
+/// the stage's precision (int8 stages stream and ship 1 byte per element).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Workload {
     pub kind: WorkloadKind,
-    pub precision: Precision,
     pub flops: u64,
     /// bytes streamed through memory during compute
     pub mem_bytes: u64,
@@ -124,24 +137,24 @@ impl Device {
         }
     }
 
-    /// Can this device execute the workload at all?
-    pub fn supports(&self, w: &Workload) -> bool {
-        match w.kind {
+    /// Can this device execute a stage of this kind/precision at all?
+    pub fn supports(&self, kind: WorkloadKind, precision: Precision) -> bool {
+        match kind {
             WorkloadKind::PointOp => self.pointop_flops_per_ms.is_some(),
-            WorkloadKind::NeuralNet => match w.precision {
+            WorkloadKind::NeuralNet => match precision {
                 Precision::Fp32 => self.nn_fp32_flops_per_ms.is_some(),
                 Precision::Int8 => self.nn_int8_flops_per_ms.is_some(),
             },
         }
     }
 
-    /// Compute time (ms), excluding interconnect transfers.
-    pub fn compute_ms(&self, w: &Workload) -> f64 {
+    /// Compute time (ms) at a precision, excluding interconnect transfers.
+    pub fn compute_ms(&self, w: &Workload, precision: Precision) -> f64 {
         let thr = match w.kind {
             WorkloadKind::PointOp => self
                 .pointop_flops_per_ms
                 .unwrap_or_else(|| panic!("{:?} cannot run point ops", self.kind)),
-            WorkloadKind::NeuralNet => match w.precision {
+            WorkloadKind::NeuralNet => match precision {
                 Precision::Fp32 => self
                     .nn_fp32_flops_per_ms
                     .unwrap_or_else(|| panic!("{:?} cannot run fp32 NN", self.kind)),
@@ -169,37 +182,50 @@ mod tests {
     use super::*;
 
     fn pointop(flops: u64, mem: u64) -> Workload {
-        Workload {
-            kind: WorkloadKind::PointOp,
-            precision: Precision::Fp32,
-            flops,
-            mem_bytes: mem,
-            wire_bytes: 0,
-        }
+        Workload { kind: WorkloadKind::PointOp, flops, mem_bytes: mem, wire_bytes: 0 }
     }
 
-    fn nn(flops: u64, prec: Precision) -> Workload {
-        Workload { kind: WorkloadKind::NeuralNet, precision: prec, flops, mem_bytes: 0, wire_bytes: 0 }
+    fn nn(flops: u64) -> Workload {
+        Workload { kind: WorkloadKind::NeuralNet, flops, mem_bytes: 0, wire_bytes: 0 }
     }
 
     #[test]
     fn edgetpu_rejects_pointops_and_fp32() {
         let t = Device::edgetpu();
-        assert!(!t.supports(&pointop(1000, 0)));
-        assert!(!t.supports(&nn(1000, Precision::Fp32)));
-        assert!(t.supports(&nn(1000, Precision::Int8)));
+        assert!(!t.supports(WorkloadKind::PointOp, Precision::Fp32));
+        assert!(!t.supports(WorkloadKind::NeuralNet, Precision::Fp32));
+        assert!(t.supports(WorkloadKind::NeuralNet, Precision::Int8));
     }
 
     #[test]
     fn gpu_faster_than_cpu_on_pointops() {
         let w = pointop(5_000_000, 500_000);
-        assert!(Device::gpu().compute_ms(&w) < Device::cpu().compute_ms(&w));
+        assert!(
+            Device::gpu().compute_ms(&w, Precision::Fp32)
+                < Device::cpu().compute_ms(&w, Precision::Fp32)
+        );
     }
 
     #[test]
     fn edgetpu_faster_than_cpu_on_int8_nn() {
-        let w = nn(60_000_000, Precision::Int8);
-        assert!(Device::edgetpu().compute_ms(&w) < Device::cpu().compute_ms(&w));
+        let w = nn(60_000_000);
+        assert!(
+            Device::edgetpu().compute_ms(&w, Precision::Int8)
+                < Device::cpu().compute_ms(&w, Precision::Int8)
+        );
+    }
+
+    #[test]
+    fn per_precision_latency_differs_where_hardware_does() {
+        // CPU int8 beats CPU fp32 on the same workload; Maxwell sees no gain
+        let w = nn(60_000_000);
+        let cpu = Device::cpu();
+        assert!(cpu.compute_ms(&w, Precision::Int8) < cpu.compute_ms(&w, Precision::Fp32));
+        let gpu = Device::gpu();
+        assert_eq!(
+            gpu.compute_ms(&w, Precision::Int8),
+            gpu.compute_ms(&w, Precision::Fp32)
+        );
     }
 
     #[test]
@@ -209,7 +235,7 @@ mod tests {
         // grouping moves 256*32*15 f32
         let flops = crate::pointops::fps_flops(2048, 256) + crate::pointops::ball_query_flops(2048, 256);
         let mem = (256 * 32 * 15 * 4) as u64;
-        let t = Device::gpu().compute_ms(&pointop(flops, mem));
+        let t = Device::gpu().compute_ms(&pointop(flops, mem), Precision::Fp32);
         assert!((t - 199.0).abs() < 30.0, "SA1 GPU ~199ms (paper Table 12), got {t:.0}");
     }
 
@@ -218,7 +244,7 @@ mod tests {
         // paper: SA1 PointNet on EdgeTPU = 47 ms incl. transfer
         let flops = 58_000_000u64; // mini SA1 PointNet
         let wire = (2048 * 15) as u64; // int8 painted cloud in
-        let t = Device::edgetpu().compute_ms(&nn(flops, Precision::Int8))
+        let t = Device::edgetpu().compute_ms(&nn(flops), Precision::Int8)
             + Device::edgetpu().transfer_ms(wire);
         assert!((t - 47.0).abs() < 15.0, "SA1 EdgeTPU ~47ms (paper Table 12), got {t:.0}");
     }

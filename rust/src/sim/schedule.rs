@@ -10,13 +10,17 @@
 
 use std::collections::HashMap;
 
-use super::device::{Device, DeviceKind, Workload};
+use super::device::{Device, DeviceKind, Precision, Workload};
 
 /// One schedulable stage.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageSpec {
     pub name: String,
     pub device: DeviceKind,
+    /// Numeric regime of the stage — the QuantScheme property the scheduler
+    /// prices (device eligibility + per-precision throughput). Carried by
+    /// the same declaration the [`crate::exec::DagExecutor`] runs.
+    pub precision: Precision,
     pub workload: Workload,
     /// indices of stages that must finish first
     pub deps: Vec<usize>,
@@ -113,9 +117,10 @@ impl ScheduleSim {
 
         for s in stages {
             assert!(
-                self.devices[&s.device].supports(&s.workload),
-                "stage '{}' assigned to {:?} which cannot run it",
+                self.devices[&s.device].supports(s.workload.kind, s.precision),
+                "stage '{}' ({}) assigned to {:?} which cannot run it",
                 s.name,
+                s.precision.name(),
                 s.device
             );
         }
@@ -162,7 +167,7 @@ impl ScheduleSim {
             let s = &stages[i];
             let dev = &self.devices[&s.device];
             let compute_start = start + t_comm;
-            let t_comp = dev.compute_ms(&s.workload);
+            let t_comp = dev.compute_ms(&s.workload, s.precision);
             let end = compute_start + t_comp;
             dev_free.insert(res_key(s), end);
             *busy.entry(s.device).or_insert(0.0) += t_comp;
@@ -189,25 +194,37 @@ mod tests {
     use super::*;
     use crate::sim::device::{Precision, WorkloadKind};
 
-    fn wl(kind: WorkloadKind, prec: Precision, flops: u64) -> Workload {
-        Workload { kind, precision: prec, flops, mem_bytes: 0, wire_bytes: 4000 }
+    fn wl(kind: WorkloadKind, flops: u64) -> Workload {
+        Workload { kind, flops, mem_bytes: 0, wire_bytes: 4000 }
     }
 
-    fn pointop(flops: u64) -> Workload {
-        wl(WorkloadKind::PointOp, Precision::Fp32, flops)
+    fn pointop_stage(name: &str, device: DeviceKind, flops: u64, deps: Vec<usize>) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            device,
+            precision: Precision::Fp32,
+            workload: wl(WorkloadKind::PointOp, flops),
+            deps,
+        }
     }
 
-    fn nn(flops: u64) -> Workload {
-        wl(WorkloadKind::NeuralNet, Precision::Int8, flops)
+    fn nn_stage(name: &str, device: DeviceKind, flops: u64, deps: Vec<usize>) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            device,
+            precision: Precision::Int8,
+            workload: wl(WorkloadKind::NeuralNet, flops),
+            deps,
+        }
     }
 
     #[test]
     fn sequential_deps_respected() {
         let sim = ScheduleSim::new();
         let stages = vec![
-            StageSpec { name: "a".into(), device: DeviceKind::Gpu, workload: pointop(1_000_000), deps: vec![] },
-            StageSpec { name: "b".into(), device: DeviceKind::EdgeTpu, workload: nn(10_000_000), deps: vec![0] },
-            StageSpec { name: "c".into(), device: DeviceKind::Gpu, workload: pointop(1_000_000), deps: vec![1] },
+            pointop_stage("a", DeviceKind::Gpu, 1_000_000, vec![]),
+            nn_stage("b", DeviceKind::EdgeTpu, 10_000_000, vec![0]),
+            pointop_stage("c", DeviceKind::Gpu, 1_000_000, vec![1]),
         ];
         let t = sim.run(&stages);
         assert!(t.stages[1].compute_start_ms >= t.stages[0].end_ms);
@@ -219,12 +236,16 @@ mod tests {
     fn independent_stages_overlap_across_devices() {
         let sim = ScheduleSim::new();
         let stages = vec![
-            StageSpec { name: "g".into(), device: DeviceKind::Gpu, workload: pointop(5_000_000), deps: vec![] },
-            StageSpec { name: "t".into(), device: DeviceKind::EdgeTpu, workload: nn(50_000_000), deps: vec![] },
+            pointop_stage("g", DeviceKind::Gpu, 5_000_000, vec![]),
+            nn_stage("t", DeviceKind::EdgeTpu, 50_000_000, vec![]),
         ];
         let t = sim.run(&stages);
-        let seq = sim.device(DeviceKind::Gpu).compute_ms(&pointop(5_000_000))
-            + sim.device(DeviceKind::EdgeTpu).compute_ms(&nn(50_000_000));
+        let seq = sim
+            .device(DeviceKind::Gpu)
+            .compute_ms(&wl(WorkloadKind::PointOp, 5_000_000), Precision::Fp32)
+            + sim
+                .device(DeviceKind::EdgeTpu)
+                .compute_ms(&wl(WorkloadKind::NeuralNet, 50_000_000), Precision::Int8);
         assert!(t.total_ms < seq, "parallel {t:?} must beat sequential {seq}");
     }
 
@@ -232,8 +253,8 @@ mod tests {
     fn same_device_serializes() {
         let sim = ScheduleSim::new();
         let stages = vec![
-            StageSpec { name: "a".into(), device: DeviceKind::Gpu, workload: pointop(2_000_000), deps: vec![] },
-            StageSpec { name: "b".into(), device: DeviceKind::Gpu, workload: pointop(2_000_000), deps: vec![] },
+            pointop_stage("a", DeviceKind::Gpu, 2_000_000, vec![]),
+            pointop_stage("b", DeviceKind::Gpu, 2_000_000, vec![]),
         ];
         let t = sim.run(&stages);
         let (a, b) = (&t.stages[0], &t.stages[1]);
@@ -244,8 +265,8 @@ mod tests {
     fn busy_plus_idle_equals_total() {
         let sim = ScheduleSim::new();
         let stages = vec![
-            StageSpec { name: "a".into(), device: DeviceKind::Gpu, workload: pointop(3_000_000), deps: vec![] },
-            StageSpec { name: "b".into(), device: DeviceKind::EdgeTpu, workload: nn(30_000_000), deps: vec![0] },
+            pointop_stage("a", DeviceKind::Gpu, 3_000_000, vec![]),
+            nn_stage("b", DeviceKind::EdgeTpu, 30_000_000, vec![0]),
         ];
         let t = sim.run(&stages);
         let busy = t.busy_ms[&DeviceKind::Gpu];
@@ -253,14 +274,34 @@ mod tests {
     }
 
     #[test]
+    fn per_precision_latency_reflected_in_timeline() {
+        // same NN workload on the CPU: the int8 stage must finish faster
+        let sim = ScheduleSim::new();
+        let mut fp = nn_stage("nn", DeviceKind::Cpu, 60_000_000, vec![]);
+        fp.precision = Precision::Fp32;
+        let t_fp = sim.run(std::slice::from_ref(&fp));
+        let t_i8 = sim.run(&[nn_stage("nn", DeviceKind::Cpu, 60_000_000, vec![])]);
+        assert!(
+            t_i8.total_ms < t_fp.total_ms,
+            "int8 {} ms must beat fp32 {} ms on the CPU",
+            t_i8.total_ms,
+            t_fp.total_ms
+        );
+    }
+
+    #[test]
     #[should_panic(expected = "cannot run it")]
     fn pointop_on_edgetpu_panics() {
         let sim = ScheduleSim::new();
-        sim.run(&[StageSpec {
-            name: "x".into(),
-            device: DeviceKind::EdgeTpu,
-            workload: pointop(1000),
-            deps: vec![],
-        }]);
+        sim.run(&[pointop_stage("x", DeviceKind::EdgeTpu, 1000, vec![])]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot run it")]
+    fn fp32_nn_on_edgetpu_panics() {
+        let sim = ScheduleSim::new();
+        let mut s = nn_stage("x", DeviceKind::EdgeTpu, 1000, vec![]);
+        s.precision = Precision::Fp32;
+        sim.run(&[s]);
     }
 }

@@ -178,7 +178,7 @@ fn int8_head_schemes_all_execute() {
             true,
             Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
         );
-        cfg.precision_head = head.to_string();
+        cfg.set_head_precision(head).expect(head);
         let out = ScenePipeline::new(&rt, cfg).run(&scene, 9).expect(head);
         assert!(!out.detections.is_empty(), "{head}: no detections");
     }

@@ -177,8 +177,8 @@ fn prop_quant_finer_granularity_never_worse() {
         let roles = vec![(0..8).collect::<Vec<_>>(), (8..16).collect(), (16..24).collect()];
         let (lo, hi) = channel_minmax(&t);
         let mk = |g| ActQuant::calibrate(&lo, &hi, &partition(g, c, &roles));
-        let e_layer = qdq_mse(&t, &mk(Granularity::Layer));
-        let e_chan = qdq_mse(&t, &mk(Granularity::Channel));
+        let e_layer = qdq_mse(&t, &mk(Granularity::Layer)).map_err(|e| e.to_string())?;
+        let e_chan = qdq_mse(&t, &mk(Granularity::Channel)).map_err(|e| e.to_string())?;
         if e_chan > e_layer + 1e-12 {
             return Err(format!("channel-wise worse than layer-wise: {e_chan} > {e_layer}"));
         }
@@ -199,9 +199,9 @@ fn prop_schedule_respects_deps_and_devices() {
             stages.push(StageSpec {
                 name: format!("s{i}"),
                 device: if nn { DeviceKind::EdgeTpu } else { DeviceKind::Gpu },
+                precision: if nn { Precision::Int8 } else { Precision::Fp32 },
                 workload: Workload {
                     kind: if nn { WorkloadKind::NeuralNet } else { WorkloadKind::PointOp },
-                    precision: Precision::Int8,
                     flops: 1_000 + rng.below(5_000_000) as u64,
                     mem_bytes: rng.below(100_000) as u64,
                     wire_bytes: rng.below(50_000) as u64,
@@ -252,9 +252,9 @@ fn prop_pipelined_never_slower_than_chained() {
         let mut mk = |i: usize, deps: Vec<usize>, nn: bool| StageSpec {
             name: format!("s{i}"),
             device: if nn { DeviceKind::EdgeTpu } else { DeviceKind::Gpu },
+            precision: if nn { Precision::Int8 } else { Precision::Fp32 },
             workload: Workload {
                 kind: if nn { WorkloadKind::NeuralNet } else { WorkloadKind::PointOp },
-                precision: Precision::Int8,
                 flops: 500_000 + rng.below(2_000_000) as u64,
                 mem_bytes: 0,
                 wire_bytes: 1000,

@@ -1,0 +1,121 @@
+//! End-to-end tests of the QuantScheme execution layer (ISSUE 3 acceptance):
+//! the INT8 surrogate path is bit-consistent with the `ActQuant` QDQ
+//! reference, a detect run over synthetic scenes keeps the role-based
+//! scheme's mAP within tolerance of fp heads, and the simulated timeline
+//! reflects per-precision device placement and latency.
+//!
+//! Everything runs offline on the synthetic runtime (deterministic host
+//! surrogate — no artifacts, no PJRT).
+
+use pointsplit::coordinator::serve::serve;
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{self, generate_scene, SYNRGBD};
+use pointsplit::quant::{ActQuant, QTensor, StagePrecision};
+use pointsplit::runtime::Runtime;
+use pointsplit::serving::slo;
+use pointsplit::sim::{DeviceKind, Precision};
+use pointsplit::util::rng::Rng;
+use pointsplit::util::tensor::Tensor;
+
+fn pipelined() -> Schedule {
+    Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu }
+}
+
+#[test]
+fn int8_surrogate_bit_consistent_with_qdq_reference() {
+    // the manifest-declared vote spec, calibrated on a random activation:
+    // QTensor quantize -> dequantize must equal ActQuant::qdq bit-for-bit
+    let rt = Runtime::synthetic();
+    let meta = rt.manifest.artifact("synrgbd_pointsplit_vote_int8_role").unwrap().clone();
+    let spec = rt.manifest.stage_quant(&meta);
+    let mut r = Rng::new(11);
+    let c = spec.cout;
+    let data: Vec<f32> = (0..64 * c).map(|_| r.normal_scaled(0.0, 2.0) as f32).collect();
+    let t = Tensor::new(vec![64, c], data);
+    let act = spec.calibrate(&t);
+    let q = QTensor::quantize(&t, &act).expect("quantize");
+    let deq = q.dequantize();
+    let mut reference = t.clone();
+    act.qdq(&mut reference).expect("qdq");
+    for (a, b) in deq.data.iter().zip(reference.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "i8 round trip drifted from QDQ");
+    }
+    // malformed activations are a Result, not a worker-killing panic
+    let bad = ActQuant::calibrate(&[0.0; 4], &[1.0; 4], &[vec![0, 1, 2, 3]]);
+    assert!(QTensor::quantize(&t, &bad).is_err());
+}
+
+#[test]
+fn role_head_map_within_tolerance_of_fp_and_timeline_reflects_precision() {
+    // the acceptance run: same int8 backbone, fp32 heads vs role-quantized
+    // heads. Accuracy must hold; the simulated timeline must not — the
+    // fp32 heads fall back to the GPU at fp32 rates while the role heads
+    // stay on the EdgeTPU.
+    let rt = Runtime::synthetic();
+    let ds = data::dataset("synrgbd").unwrap();
+    let scenes = 8;
+    let cfg_role = DetectorConfig::new("synrgbd", Variant::PointSplit, true, pipelined());
+    let mut cfg_fp = cfg_role.clone();
+    cfg_fp.set_head_precision("fp32").unwrap();
+    assert_eq!(cfg_fp.scheme.vote, StagePrecision::Fp32);
+    assert!(cfg_fp.int8(), "backbone stays int8");
+
+    let rep_fp = serve(&rt, &cfg_fp, ds, scenes, 2, 640_000).expect("fp-head serve");
+    let rep_role = serve(&rt, &cfg_role, ds, scenes, 2, 640_000).expect("role-head serve");
+    assert!(
+        (rep_fp.map_25 - rep_role.map_25).abs() <= 0.25,
+        "role-based heads drifted from fp: {:.3} vs {:.3}",
+        rep_role.map_25,
+        rep_fp.map_25
+    );
+
+    // per-precision placement + latency in the simulated timeline
+    let scene = generate_scene(21, &SYNRGBD);
+    let out_fp = ScenePipeline::new(&rt, cfg_fp).run(&scene, 21).unwrap();
+    let out_role = ScenePipeline::new(&rt, cfg_role).run(&scene, 21).unwrap();
+    let vote_fp = out_fp.timeline.stage("vote").expect("vote interval (fp)");
+    let vote_role = out_role.timeline.stage("vote").expect("vote interval (role)");
+    assert_eq!(vote_fp.device, DeviceKind::Gpu, "fp32 head cannot sit on the EdgeTPU");
+    assert_eq!(vote_role.device, DeviceKind::EdgeTpu, "int8 head belongs on the EdgeTPU");
+    let dur = |s: &pointsplit::sim::schedule::StageInterval| s.end_ms - s.compute_start_ms;
+    assert!(
+        dur(vote_role) < dur(vote_fp),
+        "EdgeTPU int8 vote ({:.1} ms) must beat GPU fp32 vote ({:.1} ms)",
+        dur(vote_role),
+        dur(vote_fp)
+    );
+    // the declared DAG carries the precision the executor and sim consumed
+    let spec_of = |out: &pointsplit::coordinator::PipelineOutput, name: &str| {
+        out.stage_specs.iter().find(|s| s.name == name).unwrap().precision
+    };
+    assert_eq!(spec_of(&out_fp, "vote"), Precision::Fp32);
+    assert_eq!(spec_of(&out_role, "vote"), Precision::Int8);
+    assert_eq!(spec_of(&out_role, "sa1_normal_nn"), Precision::Int8);
+}
+
+#[test]
+fn degraded_scheme_executes_and_keeps_role_heads_on_npu() {
+    // the SLO fast path swaps stage specs on an fp32 config: the whole DAG
+    // must execute (backbone artifacts run at the group granularity the
+    // name does not encode) with heads at role fidelity on the NPU
+    let rt = Runtime::synthetic();
+    let slow = DetectorConfig::new("synrgbd", Variant::PointSplit, false, pipelined());
+    let fast = slo::degraded_config(&slow);
+    let scene = generate_scene(33, &SYNRGBD);
+    let out = ScenePipeline::new(&rt, fast.clone()).run(&scene, 33).expect("degraded run");
+    assert!(out.timeline.total_ms > 0.0);
+    let vote = out.stage_specs.iter().find(|s| s.name == "vote").unwrap();
+    assert_eq!(vote.precision, Precision::Int8);
+    assert_eq!(vote.device, DeviceKind::EdgeTpu);
+    // degraded must also be faster than the fp32 path it degrades from
+    let out_slow = ScenePipeline::new(&rt, slow).run(&scene, 33).expect("fp32 run");
+    assert!(
+        out.timeline.total_ms < out_slow.timeline.total_ms,
+        "degraded {:.0} ms must beat fp32 {:.0} ms",
+        out.timeline.total_ms,
+        out_slow.timeline.total_ms
+    );
+    // and its detections differ from fp32 only by quantization, not by a
+    // different model: both runs see the same scene structure
+    assert!(!out.detections.is_empty() || !out_slow.detections.is_empty());
+}
