@@ -117,6 +117,10 @@ class Exporter:
         bytes_in = int(sum(np.prod(s.shape) for s in specs) * 4)
         # int8 executables move quantized tensors over the interconnect
         wire = 1 if "int8" in meta.get("precision", "") else 4
+        # declared output element count: the device simulator accounts
+        # head-output wire/memory traffic per artifact, not via a constant
+        out_shapes = jax.eval_shape(fn, *specs)
+        out_elems = int(sum(np.prod(o.shape) for o in jax.tree_util.tree_leaves(out_shapes)))
         entry = {
             "name": name,
             "file": f"{name}.hlo.txt",
@@ -124,6 +128,7 @@ class Exporter:
             "flops": int(flops),
             "bytes_in": bytes_in,
             "wire_bytes_per_elem": wire,
+            "out_elems": out_elems,
             **meta,
         }
         self.artifacts.append(entry)

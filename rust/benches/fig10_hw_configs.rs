@@ -4,12 +4,18 @@
 //! Expected shape: PointSplit reduces latency on EVERY pairing; largest
 //! relative gains where the "first" processor is the bottleneck (paper:
 //! 1.7x on CPU-CPU, 1.8x on CPU-EdgeTPU).
+//!
+//! The pairings are hand-picked points of the placement-search space; the
+//! second half of this bench runs the search itself
+//! (`graph::place::search`) and checks it recovers the paper's
+//! GPU+EdgeTPU pipeline as optimal.
 
 mod common;
 
 use pointsplit::bench::Table;
 use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
 use pointsplit::data::{generate_scene, SYNRGBD};
+use pointsplit::graph::place::{self, Objective};
 use pointsplit::sim::DeviceKind;
 
 fn main() {
@@ -60,4 +66,41 @@ fn main() {
         ]);
     }
     t.print(&format!("Fig. 10 — latency across processor pairings, INT8 ({scenes} scenes)"));
+
+    // ------------------------------------------------ placement search
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let avail = [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::EdgeTpu];
+    let search = place::search(
+        &rt.manifest,
+        &cfg,
+        SYNRGBD.num_points,
+        1,
+        &avail,
+        Objective::Latency,
+    )
+    .expect("placement search");
+    let mut ps = Table::new(&["placement", "total ms", "bottleneck ms", "comm ms"]);
+    for (i, c) in search.candidates.iter().enumerate() {
+        ps.row(vec![
+            format!("{:?}{}", c.schedule, if i == 0 { " *" } else { "" }),
+            format!("{:.0}", c.cost.total_ms),
+            format!("{:.0}", c.cost.bottleneck_ms),
+            format!("{:.0}", c.cost.comm_ms),
+        ]);
+    }
+    ps.print("placement search over the same stage graph (best first)");
+    println!("{} assignments rejected by capability/memory constraints", search.rejected.len());
+    let best = search.best().expect("feasible placement");
+    let paper = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
+    let verdict = if best.schedule == paper {
+        "OK: matches the paper's GPU+NPU pipeline"
+    } else {
+        "REGRESSION: paper assignment not recovered"
+    };
+    println!("optimal: {:?}  [{verdict}]", best.schedule);
 }

@@ -41,7 +41,7 @@ fn run_one(
         batch: BatchPolicy { max_batch: 4, max_wait_ms: 25.0 },
         policy,
     };
-    run_traffic(&sc, planner, None)
+    run_traffic(&sc, planner, None).expect("synthetic planner costs every config")
 }
 
 fn main() {
@@ -52,7 +52,7 @@ fn main() {
         true,
         Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
     );
-    let cap = planner.capacity_rps(&cfg, 2048, 4);
+    let cap = planner.capacity_rps(&cfg, 2048, 4).expect("capacity");
     // reuse the shared bench budget knob: here it scales the traffic window
     let duration_s = common::scene_budget(40) as f64;
     println!(

@@ -24,7 +24,7 @@ fn main() {
         Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
     );
     let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
-    let cap = planner.capacity_rps(&cfg, 2048, batch.max_batch);
+    let cap = planner.capacity_rps(&cfg, 2048, batch.max_batch).expect("capacity");
     println!("PointSplit INT8 on GPU+EdgeTPU: steady-state capacity {cap:.2} rps at batch 4\n");
 
     let cases: Vec<(&str, ArrivalPattern, SloPolicy)> = vec![
@@ -65,7 +65,7 @@ fn main() {
             batch,
             policy,
         };
-        run_traffic(&sc, &planner, None).print();
+        run_traffic(&sc, &planner, None).expect("traffic run").print();
         println!();
     }
     println!(

@@ -3,9 +3,8 @@
 //! FP-layer comparison.
 
 use crate::pointops::{ball_query_flops, fps_flops};
-use crate::quant::StagePrecision;
-use crate::runtime::Manifest;
-use crate::sim::{Precision, Workload, WorkloadKind};
+use crate::runtime::{ArtifactMeta, Manifest};
+use crate::sim::{Workload, WorkloadKind};
 
 /// Point-manipulation workload of one SA layer: FPS + ball query + gather.
 pub fn sa_pointmanip_workload(n_in: usize, m_out: usize, k: usize, c_in: usize) -> Workload {
@@ -18,29 +17,21 @@ pub fn sa_pointmanip_workload(n_in: usize, m_out: usize, k: usize, c_in: usize) 
     }
 }
 
-/// Precision an artifact executes at (from its manifest label, through the
-/// same parser `Manifest::stage_quant` uses — one source of truth).
-pub fn nn_precision(manifest: &Manifest, artifact: &str) -> Precision {
-    let meta = manifest
-        .artifact(artifact)
-        .unwrap_or_else(|| panic!("artifact '{artifact}' missing from manifest"));
-    StagePrecision::parse(&meta.precision).map_or(Precision::Fp32, StagePrecision::sim)
-}
-
-/// NN workload from a manifest artifact entry. Memory and wire traffic
+/// NN workload straight from artifact metadata. Memory and wire traffic
 /// follow the artifact's precision: int8 stages stream and ship one byte
-/// per element where fp32 moves four.
-pub fn nn_workload(manifest: &Manifest, artifact: &str) -> Workload {
-    let meta = manifest
-        .artifact(artifact)
-        .unwrap_or_else(|| panic!("artifact '{artifact}' missing from manifest"));
-    let out_elems: u64 = 4096; // head outputs are small; dominated by input wire
+/// per element where fp32 moves four. Output traffic uses the artifact's
+/// declared `out_elems` (per-artifact head widths, not a magic constant).
+///
+/// Artifact *lookup* (and its missing-artifact `Result`) lives with the
+/// only consumer, `graph::StageGraph::build` — a malformed manifest is a
+/// recoverable build error there, never a worker-killing panic.
+pub fn nn_workload_of(meta: &ArtifactMeta) -> Workload {
     let per_elem = meta.wire_bytes_per_elem;
     Workload {
         kind: WorkloadKind::NeuralNet,
         flops: meta.flops,
         mem_bytes: (meta.bytes_in / 4) * per_elem,
-        wire_bytes: (meta.bytes_in / 4 + out_elems) * per_elem,
+        wire_bytes: (meta.bytes_in / 4 + meta.out_elems) * per_elem,
     }
 }
 

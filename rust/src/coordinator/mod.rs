@@ -5,10 +5,15 @@
 //! the two-lane stage DAG that the calibrated device simulator times. The
 //! three schedules of the paper are all expressible:
 //!
-//! - `Schedule::GpuOnly`     — Fig. 9 baseline: everything on one device
-//! - `Schedule::Sequential`  — Fig. 2: naive GPU+NPU split, no overlap
-//! - `Schedule::Pipelined`   — Fig. 3: PointSplit two-pipeline overlap with
-//!                             jump-started SA-normal
+//! - `Schedule::SingleDevice` — Fig. 9 baseline: everything on one device
+//! - `Schedule::Sequential`   — Fig. 2: naive GPU+NPU split, no overlap
+//! - `Schedule::Pipelined`    — Fig. 3: PointSplit two-pipeline overlap with
+//!                              jump-started SA-normal
+//!
+//! These are the *named placement policies* of the stage graph's
+//! placement-search space (`graph::place` enumerates every schedule over
+//! the available devices and recovers `Pipelined { GPU, EdgeTPU }` as
+//! optimal on the default calibration).
 //!
 //! Submodules: `arch` (workload descriptors, Table 1), `decode` (box
 //! decoding + NMS), `pipeline` (per-scene executor), `serve` (multi-scene

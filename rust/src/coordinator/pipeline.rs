@@ -1,20 +1,22 @@
 //! Per-scene detection pipeline: functional execution + simulated timeline.
 //!
-//! Every stage is declared exactly **once** as a [`StageDecl`] — (name,
-//! device, workload, deps, compute closure) — and that single declaration
-//! feeds both sides:
+//! The stage DAG itself lives in [`crate::graph::StageGraph`] — built
+//! exactly once per configuration and shared with the serving planner.
+//! This module is the **lower-to-exec pass**: it walks the graph's nodes
+//! and attaches one compute closure per [`StageClass`], producing the
+//! [`StageDecl`]s the [`exec::DagExecutor`] runs on the host (in parallel
+//! when dependencies allow — the SA-normal / SA-bias chains of PointSplit
+//! and the two RandomSplit halves overlap on host threads, mirroring the
+//! paper's two-lane GPU/NPU overlap, Fig. 3).
 //!
-//! - the [`exec::DagExecutor`] runs the closures on the host, in parallel
-//!   when dependencies allow (the SA-normal / SA-bias chains of PointSplit
-//!   and the two RandomSplit halves overlap on host threads, mirroring the
-//!   paper's two-lane GPU/NPU overlap, Fig. 3);
-//! - the embedded [`StageSpec`]s replay through the calibrated
-//!   [`ScheduleSim`] device model.
-//!
-//! Because the simulated DAG and the executed DAG are the same object,
+//! The embedded [`StageSpec`]s replay through the calibrated
+//! [`ScheduleSim`] device model. Because the executed DAG, the simulated
+//! DAG, and the serving planner's DAG are all the same [`StageGraph`],
 //! dependency drift between them is impossible by construction (the class
 //! of bug where `merge()` collapsed two pipelines' last NN stages into
-//! `max(a, b)` and let `sa4_pm` start before the slower pipeline finished).
+//! `max(a, b)` and let `sa4_pm` start before the slower pipeline finished —
+//! and the class where the planner's hand-written mirror of this file
+//! could rot).
 //!
 //! Stage closures exchange data through single-producer [`Slot`]s, so
 //! parallel execution is bit-identical to sequential execution (see
@@ -24,15 +26,16 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::arch::{nn_precision, nn_workload, peak_memory_mb, sa_pointmanip_workload, small_pointop};
+use super::arch::peak_memory_mb;
 use super::decode::decode_detections;
 use super::{Schedule, Variant};
 use crate::data::{Box3, Scene};
 use crate::exec::{Compute, DagExecutor, HostExec, Slot, StageDecl};
+use crate::graph::{StageClass, StageGraph};
 use crate::pointops;
 use crate::quant::{Granularity, QuantScheme, QuantSpec, StagePrecision};
 use crate::runtime::Runtime;
-use crate::sim::{DeviceKind, Precision, ScheduleSim, StageSpec, Timeline, Workload};
+use crate::sim::{ScheduleSim, StageSpec, Timeline};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -77,8 +80,8 @@ impl DetectorConfig {
         }
     }
 
-    /// Artifact name for one of this configuration's networks (shared with
-    /// the serving planner, which builds the same DAG without executing it).
+    /// Artifact name for one of this configuration's networks (resolved by
+    /// the shared [`StageGraph`] constructor).
     pub(crate) fn art(&self, net: &str) -> String {
         let prec = match net {
             "vote" | "prop" => self.scheme.for_net(net).head_name(),
@@ -110,9 +113,8 @@ impl DetectorConfig {
 pub struct PipelineOutput {
     pub detections: Vec<Box3>,
     pub timeline: Timeline,
-    /// The stage DAG as declared (same object the executor ran and the
-    /// simulator timed) — for tests, tracing, and the serving planner's
-    /// drift check.
+    /// The stage DAG as declared (same object the executor ran, the
+    /// simulator timed, and the serving planner costs).
     pub stage_specs: Vec<StageSpec>,
     pub peak_memory_mb: f64,
     /// wall-clock of the functional execution on this host (for §Perf)
@@ -137,54 +139,13 @@ enum ChainInput {
     Subset(Arc<Vec<usize>>),
 }
 
-/// One declared SA level of a chain, as seen by downstream stages.
-#[derive(Clone)]
-struct ChainLevel {
-    geo: Slot<Geo>,
-    feats: Slot<Tensor>,
-    /// sim index of this level's NN stage
-    nn: usize,
-    /// points after this level's sampling (static)
-    n: usize,
-    /// feature width after this level's PointNet (static)
-    c: usize,
-}
-
-/// Stage-list accumulator with the sequential-schedule chaining rule.
-struct StageBuilder<'s> {
-    decls: Vec<StageDecl<'s>>,
-    sequential: bool,
-    prev_any: Option<usize>,
-}
-
-impl<'s> StageBuilder<'s> {
-    #[allow(clippy::too_many_arguments)]
-    fn stage(
-        &mut self,
-        name: String,
-        device: DeviceKind,
-        precision: Precision,
-        workload: Workload,
-        mut deps: Vec<usize>,
-        extra_deps: Vec<usize>,
-        compute: Compute<'s>,
-    ) -> usize {
-        if self.sequential {
-            if let Some(p) = self.prev_any {
-                if !deps.contains(&p) {
-                    deps.push(p);
-                }
-            }
-        }
-        let idx = self.decls.len();
-        self.decls.push(StageDecl {
-            spec: StageSpec { name, device, precision, workload, deps },
-            extra_deps,
-            compute,
-        });
-        self.prev_any = Some(idx);
-        idx
-    }
+/// Per-chain slot set wiring the SA-level closures together (one slot per
+/// graph [`crate::graph::LevelInfo`]).
+#[allow(clippy::type_complexity)]
+struct ChainSlots {
+    geo: Vec<Slot<Geo>>,
+    grp: Vec<Slot<(Vec<usize>, Vec<Vec<usize>>)>>,
+    feats: Vec<Slot<Tensor>>,
 }
 
 pub struct ScenePipeline<'a> {
@@ -230,498 +191,114 @@ impl<'a> ScenePipeline<'a> {
         let cfg = &self.cfg;
         let m = &self.rt.manifest;
         let threads = self.host_exec.threads();
-        let point_dev = cfg.schedule.point_dev();
-        // the EdgeTPU executes int8 only (the paper's motivation for full
-        // quantization); placement is decided *per stage* from its
-        // precision, so a mixed scheme keeps int8 stages on the NPU while
-        // fp32 ones fall back to the point device
-        let nn_dev_raw = cfg.schedule.nn_dev();
-        let nn_dev_for = |p: Precision| {
-            if p == Precision::Fp32 && nn_dev_raw == DeviceKind::EdgeTpu {
-                point_dev
-            } else {
-                nn_dev_raw
-            }
-        };
-        let nn_dev = nn_dev_for(cfg.scheme.backbone.sim());
-        // explicit per-stage quant spec handed to the runtime (the scheme's
-        // granularity may refine what the artifact name encodes)
-        let qspec_for = |art: &str, p: StagePrecision| -> Option<QuantSpec> {
-            m.artifact(art).map(|a| m.stage_quant_for(a, p))
-        };
+        let painted = cfg.variant.painted();
         let n = scene.points.len();
-        let mut b = StageBuilder {
-            decls: Vec::new(),
-            sequential: !cfg.schedule.overlapped(),
-            prev_any: None,
-        };
 
-        // ------------------------------------------------------ 2D segment
+        // the one stage-graph construction: this same object is what the
+        // serving planner builds for this configuration
+        let graph = StageGraph::build(m, cfg, n, prev_scores.is_some())?;
+
+        // ---------------------------------------------------------- slots
         // scores_slot: segmenter output (or the previous frame's scores);
         // feat_slot: per-point detector features + fg mask of the full cloud
         let scores_slot: Slot<Tensor> = Slot::new("seg scores");
         let feat_slot: Slot<(Tensor, Vec<f32>)> = Slot::new("point features");
-        let painted = cfg.variant.painted();
-        let (seg_stage, paint_stage, c0) = if painted {
-            let seg_stage = match prev_scores {
+        if painted {
+            if let Some(prev) = prev_scores {
                 // consecutive matching: reuse the previous frame's scores
-                Some(prev) => {
-                    scores_slot.set(prev.clone());
-                    None
-                }
-                None => {
-                    let mut wl = nn_workload(m, &cfg.seg_art());
-                    wl.flops *= cfg.seg_passes as u64;
-                    let art = cfg.seg_art();
-                    let qspec = qspec_for(&art, cfg.scheme.backbone);
-                    let sl = scores_slot.clone();
-                    let img_size = m.img_size;
-                    Some(b.stage(
-                        "seg".into(),
-                        nn_dev,
-                        nn_precision(m, &art),
-                        wl,
-                        vec![],
-                        vec![],
-                        Compute::Host(Box::new(move || {
-                            let img =
-                                Tensor::new(vec![img_size, img_size, 3], scene.image.clone());
-                            sl.set(
-                                self.rt.run_with_spec(&art, &[&img], qspec.as_ref())?.remove(0),
-                            );
-                            Ok(())
-                        })),
-                    ))
-                }
-            };
-            let sl = scores_slot.clone();
-            let fs = feat_slot.clone();
-            let paint_stage = b.stage(
-                "paint".into(),
-                point_dev,
-                Precision::Fp32,
-                small_pointop((n * 8) as u64, (n * m.num_seg_classes) as u64),
-                seg_stage.into_iter().collect(),
-                vec![],
-                Compute::Pool(Box::new(move || {
-                    sl.with(|scores| {
-                        let paint = pointops::paint_points(scene, scores);
-                        let fg = pointops::fg_mask(&paint, 0.5);
-                        fs.set((pointops::build_features(scene, Some(&paint)), fg));
-                    });
-                    Ok(())
-                })),
-            );
-            (seg_stage, Some(paint_stage), 1 + m.num_seg_classes)
+                scores_slot.set(prev.clone());
+            }
         } else {
             feat_slot.set((pointops::build_features(scene, None), vec![0.0; n]));
-            (None, None, 1)
-        };
-
-        // ------------------------------------------------------ backbone
-        let (sa2s, sa3s): (Vec<ChainLevel>, Vec<ChainLevel>) = match cfg.variant {
-            Variant::VoteNet | Variant::PointPainting => {
-                let (s2, s3) = self.declare_sa_chain(
-                    &mut b, scene, ChainInput::Full, n, &feat_slot, c0, "full", false, point_dev,
-                    nn_dev, seg_stage, paint_stage, threads,
-                );
-                (vec![s2], vec![s3])
-            }
-            Variant::PointSplit => {
-                // SA-normal jump-starts (its point manip does not need seg);
-                // SA-bias waits for painting (biased FPS needs fg)
-                let (n2, n3) = self.declare_sa_chain(
-                    &mut b, scene, ChainInput::Full, n, &feat_slot, c0, "normal", false,
-                    point_dev, nn_dev, seg_stage, paint_stage, threads,
-                );
-                let (b2, b3) = self.declare_sa_chain(
-                    &mut b, scene, ChainInput::Full, n, &feat_slot, c0, "bias", true, point_dev,
-                    nn_dev, seg_stage, paint_stage, threads,
-                );
-                (vec![n2, b2], vec![n3, b3])
-            }
-            Variant::RandomSplit => {
+        }
+        let chain_slots: Vec<ChainSlots> = graph
+            .chains
+            .iter()
+            .map(|c| ChainSlots {
+                geo: c.levels.iter().map(|_| Slot::new("chain geo")).collect(),
+                grp: c.levels.iter().map(|_| Slot::new("chain groups")).collect(),
+                feats: c.levels.iter().map(|_| Slot::new("chain feats")).collect(),
+            })
+            .collect();
+        // RandomSplit: a fixed random partition of the cloud per seed
+        let subsets: Option<(Arc<Vec<usize>>, Arc<Vec<usize>>)> =
+            if graph.chains.iter().any(|c| c.subset.is_some()) {
                 let mut rng = Rng::new(seed ^ 0xB5);
                 let perm = rng.choice_no_replace(n, n);
                 let half = n / 2;
-                let ia = Arc::new(perm[..half].to_vec());
-                let ib = Arc::new(perm[half..].to_vec());
-                let (a2, a3) = self.declare_sa_chain(
-                    &mut b, scene, ChainInput::Subset(ia), half, &feat_slot, c0, "randA", false,
-                    point_dev, nn_dev, seg_stage, paint_stage, threads,
-                );
-                let (b2, b3) = self.declare_sa_chain(
-                    &mut b, scene, ChainInput::Subset(ib), n - half, &feat_slot, c0, "randB",
-                    false, point_dev, nn_dev, seg_stage, paint_stage, threads,
-                );
-                (vec![a2, b2], vec![a3, b3])
-            }
-        };
-        let sa2_n: usize = sa2s.iter().map(|l| l.n).sum();
-        let sa3_n: usize = sa3s.iter().map(|l| l.n).sum();
-        let sa3_c = sa3s[0].c;
-
-        // SA4 over the fused SA3 set (biased only in the Table 10 "all SA
-        // layers" ablation: bias_layers >= 4). The merged set is ready when
-        // **every** contributing pipeline's SA3 PointNet is done — both
-        // deps are recorded, which is exactly the fix for the old
-        // `max(a.last_nn, b.last_nn)` merge bug.
-        let sa4cfg = &m.sa_configs[3];
-        let mut deps4: Vec<usize> = sa3s.iter().map(|l| l.nn).collect();
-        deps4.sort_unstable();
-        let use_bias4 = cfg.bias_layers >= 4 && cfg.variant == Variant::PointSplit;
+                Some((Arc::new(perm[..half].to_vec()), Arc::new(perm[half..].to_vec())))
+            } else {
+                None
+            };
+        let inputs: Vec<ChainInput> = graph
+            .chains
+            .iter()
+            .map(|c| match c.subset {
+                None => ChainInput::Full,
+                Some(0) => ChainInput::Subset(subsets.as_ref().expect("subset perm").0.clone()),
+                Some(_) => ChainInput::Subset(subsets.as_ref().expect("subset perm").1.clone()),
+            })
+            .collect();
         let sa3_fused: Slot<Geo> = Slot::new("sa3 fused geo");
         let grp4: Slot<(Vec<usize>, Vec<Vec<usize>>)> = Slot::new("sa4 groups");
         let geo4: Slot<Geo> = Slot::new("sa4 geo");
-        let pm4 = {
-            let sa3_geos: Vec<Slot<Geo>> = sa3s.iter().map(|l| l.geo.clone()).collect();
-            let (sa3_fused, grp4, geo4) = (sa3_fused.clone(), grp4.clone(), geo4.clone());
-            let fgsrc = if use_bias4 { Some(feat_slot.clone()) } else { None };
-            let (m4, r4, k4, w0) = (sa4cfg.m, sa4cfg.radius, sa4cfg.k, cfg.w0);
-            b.stage(
-                "sa4_pm".into(),
-                point_dev,
-                Precision::Fp32,
-                sa_pointmanip_workload(sa3_n, sa4cfg.m, sa4cfg.k, sa3_c),
-                deps4,
-                if use_bias4 && painted { paint_stage.into_iter().collect() } else { vec![] },
-                Compute::Pool(Box::new(move || {
-                    let mut xyz = Vec::new();
-                    let mut src = Vec::new();
-                    for g in &sa3_geos {
-                        g.with(|geo| {
-                            xyz.extend_from_slice(&geo.xyz);
-                            src.extend_from_slice(&geo.src);
-                        });
-                    }
-                    let idx4 = match &fgsrc {
-                        Some(fs) => {
-                            let fg: Vec<f32> =
-                                fs.with(|(_, fg)| src.iter().map(|&i| fg[i]).collect());
-                            pointops::biased_fps_par(&xyz, m4, &fg, w0, threads)
-                        }
-                        None => pointops::fps_par(&xyz, m4, threads),
-                    };
-                    let groups4 = pointops::ball_query_par(&xyz, &idx4, r4, k4, threads);
-                    geo4.set(Geo {
-                        xyz: idx4.iter().map(|&i| xyz[i]).collect(),
-                        src: idx4.iter().map(|&i| src[i]).collect(),
-                    });
-                    grp4.set((idx4, groups4));
-                    sa3_fused.set(Geo { xyz, src });
-                    Ok(())
-                })),
-            )
-        };
         let sa3_feats_fused: Slot<Tensor> = Slot::new("sa3 fused feats");
         let sa4_feats: Slot<Tensor> = Slot::new("sa4 feats");
-        let nn4 = {
-            let sa3_fs: Vec<Slot<Tensor>> = sa3s.iter().map(|l| l.feats.clone()).collect();
-            let (sa3_fused, sa3_feats_fused, grp4, sa4_feats) = (
-                sa3_fused.clone(),
-                sa3_feats_fused.clone(),
-                grp4.clone(),
-                sa4_feats.clone(),
-            );
-            let art = cfg.art("sa4_full");
-            let qspec = qspec_for(&art, cfg.scheme.backbone);
-            b.stage(
-                "sa4_nn".into(),
-                nn_dev,
-                nn_precision(m, &art),
-                nn_workload(m, &art),
-                vec![pm4],
-                vec![],
-                Compute::Host(Box::new(move || {
-                    let parts: Vec<Tensor> = sa3_fs.iter().map(|f| f.cloned()).collect();
-                    let refs: Vec<&Tensor> = parts.iter().collect();
-                    let fused = Tensor::concat0(&refs);
-                    let (idx4, groups4) = grp4.take();
-                    let g4 = sa3_fused.with(|geo| {
-                        pointops::group_features(&geo.xyz, Some(&fused), &idx4, &groups4)
-                    });
-                    sa4_feats.set(self.rt.run_with_spec(&art, &[&g4], qspec.as_ref())?.remove(0));
-                    sa3_feats_fused.set(fused);
-                    Ok(())
-                })),
-            )
-        };
-
-        // ------------------------------------------------------ FP + heads
         let f2_slot: Slot<Tensor> = Slot::new("fp features");
         let seed_xyz_slot: Slot<Vec<[f32; 3]>> = Slot::new("seed xyz");
-        let fp_pm = {
-            let sa2s_c = sa2s.clone();
-            let (sa3_fused, sa3_feats_fused, geo4, sa4_feats) = (
-                sa3_fused.clone(),
-                sa3_feats_fused.clone(),
-                geo4.clone(),
-                sa4_feats.clone(),
-            );
-            let (f2_slot, seed_xyz_slot) = (f2_slot.clone(), seed_xyz_slot.clone());
-            b.stage(
-                "fp_interp".into(),
-                point_dev,
-                Precision::Fp32,
-                small_pointop((sa2_n * sa3_n * 4) as u64, (sa2_n * m.fp_in * 4) as u64),
-                vec![nn4],
-                vec![],
-                Compute::Pool(Box::new(move || {
-                    let sa4_f = sa4_feats.take();
-                    let sa4_xyz = geo4.with(|g| g.xyz.clone());
-                    let sa3_f = sa3_feats_fused.take();
-                    let f3 = sa3_fused.with(|sa3| {
-                        let f3up = pointops::three_nn_interpolate_par(
-                            &sa3.xyz, &sa4_xyz, &sa4_f, threads,
-                        );
-                        hconcat(&sa3_f, &f3up)
-                    });
-                    let mut sa2_xyz = Vec::new();
-                    for l in &sa2s_c {
-                        l.geo.with(|g| sa2_xyz.extend_from_slice(&g.xyz));
-                    }
-                    let f2up = sa3_fused.with(|sa3| {
-                        pointops::three_nn_interpolate_par(&sa2_xyz, &sa3.xyz, &f3, threads)
-                    });
-                    let parts: Vec<Tensor> = sa2s_c.iter().map(|l| l.feats.cloned()).collect();
-                    let refs: Vec<&Tensor> = parts.iter().collect();
-                    let sa2_f = Tensor::concat0(&refs);
-                    f2_slot.set(hconcat(&sa2_f, &f2up));
-                    seed_xyz_slot.set(sa2_xyz);
-                    Ok(())
-                })),
-            )
-        };
         let seeds_slot: Slot<Tensor> = Slot::new("seeds");
-        let fp_nn = {
-            let art = cfg.art("fp_fc");
-            let qspec = qspec_for(&art, cfg.scheme.backbone);
-            let (f2_slot, seeds_slot) = (f2_slot.clone(), seeds_slot.clone());
-            b.stage(
-                "fp_fc".into(),
-                nn_dev,
-                nn_precision(m, &art),
-                nn_workload(m, &art),
-                vec![fp_pm],
-                vec![],
-                Compute::Host(Box::new(move || {
-                    let f2 = f2_slot.take();
-                    seeds_slot.set(self.rt.run_with_spec(&art, &[&f2], qspec.as_ref())?.remove(0));
-                    Ok(())
-                })),
-            )
-        };
         let vote_slot: Slot<(Vec<[f32; 3]>, Tensor)> = Slot::new("votes");
-        let vote_nn = {
-            let art = cfg.art("vote");
-            let qspec = qspec_for(&art, cfg.scheme.vote);
-            let vote_prec = nn_precision(m, &art);
-            let (seeds_slot, seed_xyz_slot, vote_slot) =
-                (seeds_slot.clone(), seed_xyz_slot.clone(), vote_slot.clone());
-            b.stage(
-                "vote".into(),
-                nn_dev_for(vote_prec),
-                vote_prec,
-                nn_workload(m, &art),
-                vec![fp_nn],
-                vec![],
-                Compute::Host(Box::new(move || {
-                    let seeds = seeds_slot.take();
-                    let vote_out =
-                        self.rt.run_with_spec(&art, &[&seeds], qspec.as_ref())?.remove(0);
-                    let seed_xyz = seed_xyz_slot.take();
-                    let cfeat = seeds.row_len();
-                    let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
-                    let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
-                    for i in 0..seed_xyz.len() {
-                        let row = vote_out.row(i);
-                        vote_xyz.push([
-                            seed_xyz[i][0] + row[0],
-                            seed_xyz[i][1] + row[1],
-                            seed_xyz[i][2] + row[2],
-                        ]);
-                        for c in 0..cfeat {
-                            vote_feats.row_mut(i)[c] = seeds.row(i)[c] + row[3 + c];
-                        }
-                    }
-                    vote_slot.set((vote_xyz, vote_feats));
-                    Ok(())
-                })),
-            )
-        };
-
-        // proposal: cluster votes (point manip) then PointNet+head (NN)
         let pgrp_slot: Slot<(Vec<usize>, Vec<Vec<usize>>)> = Slot::new("proposal groups");
         let cluster_slot: Slot<Vec<[f32; 3]>> = Slot::new("cluster xyz");
-        let prop_pm = {
-            let (vote_slot, pgrp_slot, cluster_slot) =
-                (vote_slot.clone(), pgrp_slot.clone(), cluster_slot.clone());
-            let (np, pr, pk) = (m.num_proposals, m.proposal_radius, m.proposal_k);
-            b.stage(
-                "prop_pm".into(),
-                point_dev,
-                Precision::Fp32,
-                sa_pointmanip_workload(sa2_n, m.num_proposals, m.proposal_k, m.seed_feat),
-                vec![vote_nn],
-                vec![],
-                Compute::Pool(Box::new(move || {
-                    vote_slot.with(|(vote_xyz, _)| {
-                        let pidx = pointops::fps_par(vote_xyz, np, threads);
-                        let pgroups = pointops::ball_query_par(vote_xyz, &pidx, pr, pk, threads);
-                        cluster_slot.set(pidx.iter().map(|&i| vote_xyz[i]).collect());
-                        pgrp_slot.set((pidx, pgroups));
-                    });
-                    Ok(())
-                })),
-            )
-        };
         let prop_slot: Slot<Tensor> = Slot::new("proposals");
-        let prop_nn = {
-            let art = cfg.art("prop");
-            let qspec = qspec_for(&art, cfg.scheme.prop);
-            let prop_prec = nn_precision(m, &art);
-            let (vote_slot, pgrp_slot, prop_slot) =
-                (vote_slot.clone(), pgrp_slot.clone(), prop_slot.clone());
-            b.stage(
-                "prop".into(),
-                nn_dev_for(prop_prec),
-                prop_prec,
-                nn_workload(m, &art),
-                vec![prop_pm],
-                vec![],
-                Compute::Host(Box::new(move || {
-                    let (pidx, pgroups) = pgrp_slot.take();
-                    let pg = vote_slot.with(|(vote_xyz, vote_feats)| {
-                        pointops::group_features(vote_xyz, Some(vote_feats), &pidx, &pgroups)
-                    });
-                    prop_slot.set(self.rt.run_with_spec(&art, &[&pg], qspec.as_ref())?.remove(0));
-                    Ok(())
-                })),
-            )
-        };
-
-        // decode + NMS on the host CPU
         let det_slot: Slot<Vec<Box3>> = Slot::new("detections");
-        {
-            let (cluster_slot, prop_slot, det_slot) =
-                (cluster_slot.clone(), prop_slot.clone(), det_slot.clone());
-            let (obj_thresh, nms_iou) = (cfg.obj_thresh, cfg.nms_iou);
-            b.stage(
-                "decode".into(),
-                DeviceKind::Cpu,
-                Precision::Fp32,
-                small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
-                vec![prop_nn],
-                vec![],
-                Compute::Pool(Box::new(move || {
-                    let cluster_xyz = cluster_slot.take();
-                    let prop = prop_slot.take();
-                    det_slot.set(decode_detections(m, &cluster_xyz, &prop, obj_thresh, nms_iou));
-                    Ok(())
-                })),
-            );
-        }
 
-        // ---------------------------------------------- execute + simulate
-        let specs = DagExecutor::new(self.host_exec).run(b.decls)?;
-        let detections = det_slot.take();
-        let used_scores = if painted { Some(scores_slot.take()) } else { None };
-        let timeline = self.sim.run(&specs);
-        let fp32_framework = !cfg.int8() && matches!(cfg.schedule, Schedule::SingleDevice(_));
-        let peak = peak_memory_mb(m, painted, fp32_framework, n);
-        Ok((
-            PipelineOutput {
-                detections,
-                timeline,
-                stage_specs: specs,
-                peak_memory_mb: peak,
-                host_ms: t_host.elapsed().as_secs_f64() * 1000.0,
-            },
-            used_scores,
-        ))
-    }
-
-    /// Declare SA1..SA3 of one pipeline (full or half centroid budget).
-    /// Returns the SA2 and SA3 level handles for the FP stage.
-    #[allow(clippy::too_many_arguments)]
-    fn declare_sa_chain<'s>(
-        &'s self,
-        b: &mut StageBuilder<'s>,
-        scene: &'s Scene,
-        input: ChainInput,
-        n0: usize,
-        feat_slot: &Slot<(Tensor, Vec<f32>)>,
-        c0: usize,
-        tag: &str,
-        biased: bool,
-        point_dev: DeviceKind,
-        nn_dev: DeviceKind,
-        seg_stage: Option<usize>,
-        paint_stage: Option<usize>,
-        threads: usize,
-    ) -> (ChainLevel, ChainLevel) {
-        let cfg = &self.cfg;
-        let m = &self.rt.manifest;
-        let halves = cfg.variant.split();
-        let shape = if halves { "half" } else { "full" };
-        let painted = cfg.variant.painted();
-        let mut prev: Option<ChainLevel> = None;
-        let mut sa2 = None;
-        let (mut n_in, mut c_in) = (n0, c0);
-        for l in 0..3 {
-            let sac = &m.sa_configs[l];
-            let mm = if halves { sac.m / 2 } else { sac.m };
-            let use_bias = biased && l < cfg.bias_layers && cfg.w0 != 1.0;
-            // the SA-bias pipeline's SA1 starts FPS at n/2 so the two views
-            // decorrelate even where the bias weight has no effect (mirrors
-            // model.backbone_forward's run_pipeline)
-            let start = if biased && l == 0 { n_in / 2 } else { 0 };
-            // point-manip deps: previous NN of this pipeline produced the
-            // features we gather; biased FPS additionally needs the painted
-            // fg mask (jump-start rule, Fig. 3)
-            let mut deps: Vec<usize> = match &prev {
-                Some(p) => vec![p.nn],
-                None => seg_stage.into_iter().collect(),
-            };
-            if use_bias {
-                if let Some(s) = seg_stage {
-                    if !deps.contains(&s) {
-                        deps.push(s);
-                    }
+        // ------------------------------------------- lower-to-exec pass
+        let mut decls: Vec<StageDecl<'_>> = Vec::with_capacity(graph.nodes.len());
+        for node in &graph.nodes {
+            let art = node.artifact.clone();
+            let qspec = node.qspec.clone();
+            let compute: Compute<'_> = match node.class {
+                StageClass::Seg => {
+                    let art = art.expect("seg artifact");
+                    let sl = scores_slot.clone();
+                    let img_size = m.img_size;
+                    Compute::Host(Box::new(move || {
+                        let img = Tensor::new(vec![img_size, img_size, 3], scene.image.clone());
+                        sl.set(
+                            self.rt.run_with_spec(&art, &[&img], qspec.as_ref())?.remove(0),
+                        );
+                        Ok(())
+                    }))
                 }
-            }
-            // SA1-normal point manip of a painted pipeline needs nothing: it
-            // jump-starts before segmentation finishes (gather happens in the
-            // NN stage's transfer) — but its PointNet needs the paint.
-            let deps_pm = if l == 0 && !use_bias { Vec::new() } else { deps.clone() };
-            // host-ordering: biased FPS reads the fg mask produced by paint
-            let extra_pm = if use_bias && painted {
-                paint_stage.into_iter().collect()
-            } else {
-                Vec::new()
-            };
-            let geo_out: Slot<Geo> = Slot::new("chain geo");
-            let grp_out: Slot<(Vec<usize>, Vec<Vec<usize>>)> = Slot::new("chain groups");
-            let pm = {
-                let geo_out = geo_out.clone();
-                let grp_out = grp_out.clone();
-                let prev_geo = prev.as_ref().map(|p| p.geo.clone());
-                let input = input.clone();
-                let fgsrc = if use_bias { Some(feat_slot.clone()) } else { None };
-                let (radius, k, w0) = (sac.radius, sac.k, cfg.w0);
-                b.stage(
-                    format!("sa{}_{}_pm", l + 1, tag),
-                    point_dev,
-                    Precision::Fp32,
-                    sa_pointmanip_workload(n_in, mm, sac.k, c_in),
-                    deps_pm,
-                    extra_pm,
+                StageClass::Paint => {
+                    let sl = scores_slot.clone();
+                    let fs = feat_slot.clone();
+                    Compute::Pool(Box::new(move || {
+                        sl.with(|scores| {
+                            let paint = pointops::paint_points(scene, scores);
+                            let fg = pointops::fg_mask(&paint, 0.5);
+                            fs.set((pointops::build_features(scene, Some(&paint)), fg));
+                        });
+                        Ok(())
+                    }))
+                }
+                StageClass::SaPm { chain, level } => {
+                    let lvl = &graph.chains[chain].levels[level];
+                    let sac = &m.sa_configs[level];
+                    let geo_out = chain_slots[chain].geo[level].clone();
+                    let grp_out = chain_slots[chain].grp[level].clone();
+                    let prev_geo = (level > 0).then(|| chain_slots[chain].geo[level - 1].clone());
+                    let input = inputs[chain].clone();
+                    // biased FPS reads the painted fg mask (jump-start rule)
+                    let fgsrc = lvl.use_bias.then(|| feat_slot.clone());
+                    let (mm, radius, k, w0, start) = (lvl.m, sac.radius, sac.k, cfg.w0, lvl.start);
                     Compute::Pool(Box::new(move || {
                         let geo = resolve_geo(&prev_geo, &input, scene);
                         let idx = match &fgsrc {
                             Some(fs) => {
-                                let fg: Vec<f32> = fs
-                                    .with(|(_, fg)| geo.src.iter().map(|&i| fg[i]).collect());
+                                let fg: Vec<f32> =
+                                    fs.with(|(_, fg)| geo.src.iter().map(|&i| fg[i]).collect());
                                 pointops::biased_fps_from_par(
                                     &geo.xyz, mm, &fg, w0, start, threads,
                                 )
@@ -735,52 +312,32 @@ impl<'a> ScenePipeline<'a> {
                         });
                         grp_out.set((idx, groups));
                         Ok(())
-                    })),
-                )
-            };
-            let mut deps_nn = vec![pm];
-            if l == 0 {
-                if let Some(s) = seg_stage {
-                    deps_nn.push(s); // painted features required
+                    }))
                 }
-            }
-            // host-ordering: the level-0 gather reads features built by the
-            // paint stage (seg alone finishing is not enough)
-            let extra_nn = if l == 0 && painted {
-                paint_stage.into_iter().collect()
-            } else {
-                Vec::new()
-            };
-            let art = cfg.art(&format!("sa{}_{shape}", l + 1));
-            let qspec = m
-                .artifact(&art)
-                .map(|a| m.stage_quant_for(a, cfg.scheme.backbone));
-            let feats_out: Slot<Tensor> = Slot::new("chain feats");
-            let nn = {
-                let feats_out = feats_out.clone();
-                let grp_out = grp_out.clone();
-                let prev_level = prev.clone();
-                let input = input.clone();
-                let feat_src = feat_slot.clone();
-                b.stage(
-                    format!("sa{}_{}_nn", l + 1, tag),
-                    nn_dev,
-                    nn_precision(m, &art),
-                    nn_workload(m, &art),
-                    deps_nn,
-                    extra_nn,
+                StageClass::SaNn { chain, level } => {
+                    let art = art.expect("sa artifact");
+                    let feats_out = chain_slots[chain].feats[level].clone();
+                    let grp_out = chain_slots[chain].grp[level].clone();
+                    // level > 0 gathers from the previous level's chain-local
+                    // geometry and features; level 0 gathers straight from
+                    // the (possibly subsetted) original cloud
+                    let prev = (level > 0).then(|| {
+                        (
+                            chain_slots[chain].geo[level - 1].clone(),
+                            chain_slots[chain].feats[level - 1].clone(),
+                        )
+                    });
+                    let input = inputs[chain].clone();
+                    let feat_src = feat_slot.clone();
+                    let mm = graph.chains[chain].levels[level].m;
                     Compute::Host(Box::new(move || {
                         let (idx, groups) = grp_out.take();
-                        let g = match &prev_level {
-                            // level > 0: gather from the previous level's
-                            // chain-local geometry and features
-                            Some(p) => p.geo.with(|geo| {
-                                p.feats.with(|f| {
+                        let g = match &prev {
+                            Some((pgeo, pfeats)) => pgeo.with(|geo| {
+                                pfeats.with(|f| {
                                     pointops::group_features(&geo.xyz, Some(f), &idx, &groups)
                                 })
                             }),
-                            // level 0: gather straight from the (possibly
-                            // subsetted) original cloud
                             None => match &input {
                                 ChainInput::Full => feat_src.with(|(f, _)| {
                                     pointops::group_features(
@@ -800,24 +357,208 @@ impl<'a> ScenePipeline<'a> {
                         };
                         feats_out.set(self.run_maybe_padded(&art, &g, mm, qspec.as_ref())?);
                         Ok(())
-                    })),
-                )
+                    }))
+                }
+                StageClass::Sa4Pm => {
+                    let sa3_geos: Vec<Slot<Geo>> =
+                        chain_slots.iter().map(|c| c.geo[2].clone()).collect();
+                    let (sa3_fused, grp4, geo4) = (sa3_fused.clone(), grp4.clone(), geo4.clone());
+                    // the same flag that shaped the node's host-ordering
+                    // edges — never re-derived here
+                    let fgsrc = graph.sa4_bias.then(|| feat_slot.clone());
+                    let sa4cfg = &m.sa_configs[3];
+                    let (m4, r4, k4, w0) = (sa4cfg.m, sa4cfg.radius, sa4cfg.k, cfg.w0);
+                    Compute::Pool(Box::new(move || {
+                        let mut xyz = Vec::new();
+                        let mut src = Vec::new();
+                        for g in &sa3_geos {
+                            g.with(|geo| {
+                                xyz.extend_from_slice(&geo.xyz);
+                                src.extend_from_slice(&geo.src);
+                            });
+                        }
+                        let idx4 = match &fgsrc {
+                            Some(fs) => {
+                                let fg: Vec<f32> =
+                                    fs.with(|(_, fg)| src.iter().map(|&i| fg[i]).collect());
+                                pointops::biased_fps_par(&xyz, m4, &fg, w0, threads)
+                            }
+                            None => pointops::fps_par(&xyz, m4, threads),
+                        };
+                        let groups4 = pointops::ball_query_par(&xyz, &idx4, r4, k4, threads);
+                        geo4.set(Geo {
+                            xyz: idx4.iter().map(|&i| xyz[i]).collect(),
+                            src: idx4.iter().map(|&i| src[i]).collect(),
+                        });
+                        grp4.set((idx4, groups4));
+                        sa3_fused.set(Geo { xyz, src });
+                        Ok(())
+                    }))
+                }
+                StageClass::Sa4Nn => {
+                    let art = art.expect("sa4 artifact");
+                    let sa3_fs: Vec<Slot<Tensor>> =
+                        chain_slots.iter().map(|c| c.feats[2].clone()).collect();
+                    let (sa3_fused, sa3_feats_fused, grp4, sa4_feats) = (
+                        sa3_fused.clone(),
+                        sa3_feats_fused.clone(),
+                        grp4.clone(),
+                        sa4_feats.clone(),
+                    );
+                    Compute::Host(Box::new(move || {
+                        let parts: Vec<Tensor> = sa3_fs.iter().map(|f| f.cloned()).collect();
+                        let refs: Vec<&Tensor> = parts.iter().collect();
+                        let fused = Tensor::concat0(&refs);
+                        let (idx4, groups4) = grp4.take();
+                        let g4 = sa3_fused.with(|geo| {
+                            pointops::group_features(&geo.xyz, Some(&fused), &idx4, &groups4)
+                        });
+                        sa4_feats
+                            .set(self.rt.run_with_spec(&art, &[&g4], qspec.as_ref())?.remove(0));
+                        sa3_feats_fused.set(fused);
+                        Ok(())
+                    }))
+                }
+                StageClass::FpInterp => {
+                    let sa2_geos: Vec<Slot<Geo>> =
+                        chain_slots.iter().map(|c| c.geo[1].clone()).collect();
+                    let sa2_feats: Vec<Slot<Tensor>> =
+                        chain_slots.iter().map(|c| c.feats[1].clone()).collect();
+                    let (sa3_fused, sa3_feats_fused, geo4, sa4_feats) = (
+                        sa3_fused.clone(),
+                        sa3_feats_fused.clone(),
+                        geo4.clone(),
+                        sa4_feats.clone(),
+                    );
+                    let (f2_slot, seed_xyz_slot) = (f2_slot.clone(), seed_xyz_slot.clone());
+                    Compute::Pool(Box::new(move || {
+                        let sa4_f = sa4_feats.take();
+                        let sa4_xyz = geo4.with(|g| g.xyz.clone());
+                        let sa3_f = sa3_feats_fused.take();
+                        let f3 = sa3_fused.with(|sa3| {
+                            let f3up = pointops::three_nn_interpolate_par(
+                                &sa3.xyz, &sa4_xyz, &sa4_f, threads,
+                            );
+                            hconcat(&sa3_f, &f3up)
+                        });
+                        let mut sa2_xyz = Vec::new();
+                        for g in &sa2_geos {
+                            g.with(|geo| sa2_xyz.extend_from_slice(&geo.xyz));
+                        }
+                        let f2up = sa3_fused.with(|sa3| {
+                            pointops::three_nn_interpolate_par(&sa2_xyz, &sa3.xyz, &f3, threads)
+                        });
+                        let parts: Vec<Tensor> = sa2_feats.iter().map(|f| f.cloned()).collect();
+                        let refs: Vec<&Tensor> = parts.iter().collect();
+                        let sa2_f = Tensor::concat0(&refs);
+                        f2_slot.set(hconcat(&sa2_f, &f2up));
+                        seed_xyz_slot.set(sa2_xyz);
+                        Ok(())
+                    }))
+                }
+                StageClass::FpFc => {
+                    let art = art.expect("fp_fc artifact");
+                    let (f2_slot, seeds_slot) = (f2_slot.clone(), seeds_slot.clone());
+                    Compute::Host(Box::new(move || {
+                        let f2 = f2_slot.take();
+                        seeds_slot
+                            .set(self.rt.run_with_spec(&art, &[&f2], qspec.as_ref())?.remove(0));
+                        Ok(())
+                    }))
+                }
+                StageClass::Vote => {
+                    let art = art.expect("vote artifact");
+                    let (seeds_slot, seed_xyz_slot, vote_slot) =
+                        (seeds_slot.clone(), seed_xyz_slot.clone(), vote_slot.clone());
+                    Compute::Host(Box::new(move || {
+                        let seeds = seeds_slot.take();
+                        let vote_out =
+                            self.rt.run_with_spec(&art, &[&seeds], qspec.as_ref())?.remove(0);
+                        let seed_xyz = seed_xyz_slot.take();
+                        let cfeat = seeds.row_len();
+                        let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
+                        let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
+                        for i in 0..seed_xyz.len() {
+                            let row = vote_out.row(i);
+                            vote_xyz.push([
+                                seed_xyz[i][0] + row[0],
+                                seed_xyz[i][1] + row[1],
+                                seed_xyz[i][2] + row[2],
+                            ]);
+                            for c in 0..cfeat {
+                                vote_feats.row_mut(i)[c] = seeds.row(i)[c] + row[3 + c];
+                            }
+                        }
+                        vote_slot.set((vote_xyz, vote_feats));
+                        Ok(())
+                    }))
+                }
+                StageClass::PropPm => {
+                    let (vote_slot, pgrp_slot, cluster_slot) =
+                        (vote_slot.clone(), pgrp_slot.clone(), cluster_slot.clone());
+                    let (np, pr, pk) = (m.num_proposals, m.proposal_radius, m.proposal_k);
+                    Compute::Pool(Box::new(move || {
+                        vote_slot.with(|(vote_xyz, _)| {
+                            let pidx = pointops::fps_par(vote_xyz, np, threads);
+                            let pgroups =
+                                pointops::ball_query_par(vote_xyz, &pidx, pr, pk, threads);
+                            cluster_slot.set(pidx.iter().map(|&i| vote_xyz[i]).collect());
+                            pgrp_slot.set((pidx, pgroups));
+                        });
+                        Ok(())
+                    }))
+                }
+                StageClass::Prop => {
+                    let art = art.expect("prop artifact");
+                    let (vote_slot, pgrp_slot, prop_slot) =
+                        (vote_slot.clone(), pgrp_slot.clone(), prop_slot.clone());
+                    Compute::Host(Box::new(move || {
+                        let (pidx, pgroups) = pgrp_slot.take();
+                        let pg = vote_slot.with(|(vote_xyz, vote_feats)| {
+                            pointops::group_features(vote_xyz, Some(vote_feats), &pidx, &pgroups)
+                        });
+                        prop_slot
+                            .set(self.rt.run_with_spec(&art, &[&pg], qspec.as_ref())?.remove(0));
+                        Ok(())
+                    }))
+                }
+                StageClass::Decode => {
+                    let (cluster_slot, prop_slot, det_slot) =
+                        (cluster_slot.clone(), prop_slot.clone(), det_slot.clone());
+                    let (obj_thresh, nms_iou) = (cfg.obj_thresh, cfg.nms_iou);
+                    Compute::Pool(Box::new(move || {
+                        let cluster_xyz = cluster_slot.take();
+                        let prop = prop_slot.take();
+                        det_slot
+                            .set(decode_detections(m, &cluster_xyz, &prop, obj_thresh, nms_iou));
+                        Ok(())
+                    }))
+                }
             };
-            let level = ChainLevel {
-                geo: geo_out,
-                feats: feats_out,
-                nn,
-                n: mm,
-                c: *sac.mlp.last().expect("sa mlp widths"),
-            };
-            if l == 1 {
-                sa2 = Some(level.clone());
-            }
-            n_in = mm;
-            c_in = level.c;
-            prev = Some(level);
+            decls.push(StageDecl {
+                spec: node.spec.clone(),
+                extra_deps: node.extra_deps.clone(),
+                compute,
+            });
         }
-        (sa2.expect("three SA levels declared"), prev.expect("three SA levels declared"))
+
+        // ---------------------------------------------- execute + simulate
+        let specs = DagExecutor::new(self.host_exec).run(decls)?;
+        let detections = det_slot.take();
+        let used_scores = if painted { Some(scores_slot.take()) } else { None };
+        let timeline = self.sim.run(&specs);
+        let fp32_framework = !cfg.int8() && matches!(cfg.schedule, Schedule::SingleDevice(_));
+        let peak = peak_memory_mb(m, painted, fp32_framework, n);
+        Ok((
+            PipelineOutput {
+                detections,
+                timeline,
+                stage_specs: specs,
+                peak_memory_mb: peak,
+                host_ms: t_host.elapsed().as_secs_f64() * 1000.0,
+            },
+            used_scores,
+        ))
     }
 
     /// Execute an SA artifact whose ball-batch dimension may exceed ours
@@ -888,6 +629,7 @@ fn hconcat(a: &Tensor, b: &Tensor) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::DeviceKind;
 
     fn pipeline(rt: &Runtime) -> ScenePipeline<'_> {
         let cfg = DetectorConfig::new(
@@ -921,5 +663,17 @@ mod tests {
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("smaller than workload"), "unexpected error: {msg}");
+    }
+
+    /// The executed DAG is the graph's DAG, verbatim.
+    #[test]
+    fn executed_specs_equal_graph_specs() {
+        let rt = Runtime::synthetic();
+        let p = pipeline(&rt);
+        let ds = crate::data::dataset("synrgbd").unwrap();
+        let scene = crate::data::generate_scene(9, ds);
+        let out = p.run(&scene, 9).unwrap();
+        let g = StageGraph::build(&rt.manifest, &p.cfg, scene.points.len(), false).unwrap();
+        assert_eq!(out.stage_specs, g.specs());
     }
 }

@@ -1,0 +1,828 @@
+//! One stage-graph IR for execution, simulation, and serving.
+//!
+//! [`StageGraph`] is the single source of truth for the detector's stage
+//! DAG. It is built **exactly once** per ([`DetectorConfig`], [`Manifest`],
+//! point budget) by [`StageGraph::build`], and every consumer is a *pass*
+//! over the same graph instead of a parallel construction:
+//!
+//! - **lower-to-exec** — `coordinator::pipeline` walks the nodes and
+//!   attaches a compute closure per [`StageClass`], feeding
+//!   [`crate::exec::DagExecutor`];
+//! - **lower-to-sim** — [`StageGraph::specs`] hands the embedded
+//!   [`StageSpec`]s to [`crate::sim::ScheduleSim`], so the pipeline's and
+//!   the serving planner's timelines are identical *by construction*;
+//! - **batch-fold(k)** — [`StageGraph::batch_fold`] scales FLOPs/bytes by
+//!   the batch size while per-stage dispatch and transfer *setup* costs
+//!   are paid once (the dynamic-batching win on this hardware);
+//! - **quant-rewrite** — [`StageGraph::quant_rewrite`] swaps the
+//!   [`QuantScheme`] on the same topology (the SLO degrade move, see
+//!   [`crate::serving::slo`]);
+//! - **placement-search** — [`place`] enumerates per-stage-class device
+//!   assignments under capability/memory constraints and picks the best
+//!   [`crate::coordinator::Schedule`] (the paper's Fig. 10 pairings become
+//!   named points in this search space).
+//!
+//! Before this module existed the graph was encoded twice — once in
+//! `coordinator/pipeline.rs` (executed + simulated) and once hand-mirrored
+//! in `serving/plan.rs` — recreating the dependency-drift bug class the
+//! `merge()` fix closed. A second construction site can no longer drift
+//! because there is no second construction site.
+//!
+//! See `docs/ARCHITECTURE.md` for the IR's invariants and how to add a
+//! pass.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::arch::{nn_workload_of, sa_pointmanip_workload, small_pointop};
+use crate::coordinator::{DetectorConfig, Variant};
+use crate::quant::{QuantScheme, QuantSpec, StagePrecision};
+use crate::runtime::Manifest;
+use crate::sim::{DeviceKind, Precision, StageSpec, Workload};
+
+pub mod place;
+
+/// What a stage *is*, independent of where it runs: the handle passes use
+/// to rewrite specs (quant-rewrite resolves artifacts per class) and the
+/// executor uses to attach the right compute closure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageClass {
+    /// 2D semantic segmentation of the RGB frame.
+    Seg,
+    /// Point painting: append per-point class scores + build features.
+    Paint,
+    /// SA-level point manipulation (FPS + ball query + gather) of a chain.
+    SaPm { chain: usize, level: usize },
+    /// SA-level PointNet of a chain.
+    SaNn { chain: usize, level: usize },
+    /// SA4 point manipulation over the fused SA3 set.
+    Sa4Pm,
+    /// SA4 PointNet over the fused SA3 set.
+    Sa4Nn,
+    /// Feature-propagation interpolation (point op).
+    FpInterp,
+    /// Feature-propagation shared FC (the paper's Table 1 simplification).
+    FpFc,
+    /// Vote head.
+    Vote,
+    /// Proposal clustering (point op).
+    PropPm,
+    /// Proposal PointNet + head.
+    Prop,
+    /// Box decode + NMS on the host CPU.
+    Decode,
+}
+
+impl StageClass {
+    /// Manifest network label of an NN stage class (None for point ops).
+    /// `split` selects the half-budget SA artifacts of the two-pipeline
+    /// variants.
+    pub fn net(self, split: bool) -> Option<String> {
+        let shape = if split { "half" } else { "full" };
+        Some(match self {
+            StageClass::Seg => "seg".to_string(),
+            StageClass::SaNn { level, .. } => format!("sa{}_{shape}", level + 1),
+            StageClass::Sa4Nn => "sa4_full".to_string(),
+            StageClass::FpFc => "fp_fc".to_string(),
+            StageClass::Vote => "vote".to_string(),
+            StageClass::Prop => "prop".to_string(),
+            _ => return None,
+        })
+    }
+}
+
+/// One node of the IR: the simulator spec plus everything a pass needs to
+/// re-derive or execute it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageNode {
+    /// What the calibrated device model simulates — name, device,
+    /// precision, workload, and the *timeline* dependencies.
+    pub spec: StageSpec,
+    pub class: StageClass,
+    /// Manifest artifact an NN stage executes (None for point ops).
+    pub artifact: Option<String>,
+    /// Explicit quant spec handed to the runtime for NN stages (the
+    /// scheme's granularity may refine what the artifact name encodes).
+    pub qspec: Option<QuantSpec>,
+    /// Host-ordering dependencies beyond `spec.deps`: data produced by a
+    /// stage the simulated timeline does not wait for (e.g. painted
+    /// features gathered during an NN stage's transfer window).
+    pub extra_deps: Vec<usize>,
+}
+
+/// One declared SA level of a backbone chain, as the exec lowering needs
+/// it: node indices plus the static geometry budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelInfo {
+    /// node index of the point-manipulation stage
+    pub pm: usize,
+    /// node index of the PointNet stage
+    pub nn: usize,
+    /// points entering this level
+    pub n_in: usize,
+    /// centroids sampled by this level
+    pub m: usize,
+    /// feature width after this level's PointNet
+    pub c: usize,
+    /// FPS start index (SA-bias decorrelation rule)
+    pub start: usize,
+    /// whether this level's FPS is biased by the painted fg mask
+    pub use_bias: bool,
+}
+
+/// One backbone chain (SA1..SA3) of the graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainInfo {
+    pub tag: &'static str,
+    pub biased: bool,
+    /// RandomSplit half index (0/1); None = the full cloud feeds level 0.
+    pub subset: Option<usize>,
+    /// points entering the chain
+    pub n0: usize,
+    /// exactly three SA levels
+    pub levels: Vec<LevelInfo>,
+}
+
+/// The stage-graph IR. Immutable once built; passes produce new data
+/// (spec lists, rewritten graphs) rather than mutating in place.
+#[derive(Debug, Clone)]
+pub struct StageGraph {
+    pub nodes: Vec<StageNode>,
+    pub chains: Vec<ChainInfo>,
+    /// Whether SA4's fused FPS is biased by the painted fg mask (Table 10
+    /// "all SA layers" ablation) — declared here so the exec lowering
+    /// reads the same flag that shaped `sa4_pm`'s host-ordering edges.
+    pub sa4_bias: bool,
+    cfg: DetectorConfig,
+    num_points: usize,
+    skip_seg: bool,
+}
+
+/// Everything an NN node derives from the manifest for its class under a
+/// configuration's scheme: artifact name, simulated precision, workload
+/// (seg-pass scaling applied), and the runtime quant spec. `Ok(None)` for
+/// point-op classes. This is the **only** derivation path — shared by
+/// [`StageGraph::build`] and [`StageGraph::quant_rewrite`], so the rewrite
+/// pass cannot drift from the constructor.
+#[allow(clippy::type_complexity)]
+fn nn_assign(
+    m: &Manifest,
+    cfg: &DetectorConfig,
+    class: StageClass,
+) -> Result<Option<(String, Precision, Workload, QuantSpec)>> {
+    let Some(net) = class.net(cfg.variant.split()) else { return Ok(None) };
+    let art = if class == StageClass::Seg { cfg.seg_art() } else { cfg.art(&net) };
+    let sp = match class {
+        StageClass::Vote => cfg.scheme.vote,
+        StageClass::Prop => cfg.scheme.prop,
+        _ => cfg.scheme.backbone,
+    };
+    let meta = m
+        .artifact(&art)
+        .ok_or_else(|| anyhow!("artifact '{art}' missing from manifest"))?;
+    let precision =
+        StagePrecision::parse(&meta.precision).map_or(Precision::Fp32, StagePrecision::sim);
+    let mut wl = nn_workload_of(meta);
+    if class == StageClass::Seg {
+        wl.flops *= cfg.seg_passes as u64;
+    }
+    Ok(Some((art, precision, wl, m.stage_quant_for(meta, sp))))
+}
+
+/// Device an NN stage sits on. The EdgeTPU executes int8 only (the paper's
+/// motivation for full quantization), so fp32 NN work falls back to the
+/// point device; placement is decided *per stage*: head stages (vote/prop)
+/// place by their own precision, backbone-class stages by the scheme's
+/// backbone precision — a mixed scheme keeps int8 stages on the NPU while
+/// fp32 ones fall back.
+fn nn_device(cfg: &DetectorConfig, class: StageClass, precision: Precision) -> DeviceKind {
+    let point_dev = cfg.schedule.point_dev();
+    let nn_dev_raw = cfg.schedule.nn_dev();
+    let fall = |p: Precision| {
+        if p == Precision::Fp32 && nn_dev_raw == DeviceKind::EdgeTpu {
+            point_dev
+        } else {
+            nn_dev_raw
+        }
+    };
+    match class {
+        StageClass::Vote | StageClass::Prop => fall(precision),
+        _ => fall(cfg.scheme.backbone.sim()),
+    }
+}
+
+/// Node-list accumulator with the sequential-schedule chaining rule: on a
+/// non-overlapped schedule every stage also depends on the previously
+/// declared one (Fig. 2's naive split).
+struct GraphBuilder {
+    nodes: Vec<StageNode>,
+    sequential: bool,
+    prev: Option<usize>,
+}
+
+impl GraphBuilder {
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        name: String,
+        class: StageClass,
+        device: DeviceKind,
+        precision: Precision,
+        workload: Workload,
+        mut deps: Vec<usize>,
+        extra_deps: Vec<usize>,
+        artifact: Option<String>,
+        qspec: Option<QuantSpec>,
+    ) -> usize {
+        if self.sequential {
+            if let Some(p) = self.prev {
+                if !deps.contains(&p) {
+                    deps.push(p);
+                }
+            }
+        }
+        let idx = self.nodes.len();
+        self.nodes.push(StageNode {
+            spec: StageSpec { name, device, precision, workload, deps },
+            class,
+            artifact,
+            qspec,
+            extra_deps,
+        });
+        self.prev = Some(idx);
+        idx
+    }
+}
+
+impl StageGraph {
+    /// Build the graph for one configuration — the only place in the crate
+    /// where the detector's stage topology is spelled out.
+    ///
+    /// `skip_seg` models consecutive matching (2D scores reused from a
+    /// previous frame, paper §3.2): the segmenter node is omitted while the
+    /// paint node remains (it consumes the carried-over scores).
+    ///
+    /// A malformed or incomplete manifest is a recoverable error, not a
+    /// panic — serving workers degrade instead of dying.
+    pub fn build(
+        m: &Manifest,
+        cfg: &DetectorConfig,
+        num_points: usize,
+        skip_seg: bool,
+    ) -> Result<StageGraph> {
+        let point_dev = cfg.schedule.point_dev();
+        let painted = cfg.variant.painted();
+        let n = num_points;
+        let mut b = GraphBuilder {
+            nodes: Vec::new(),
+            sequential: !cfg.schedule.overlapped(),
+            prev: None,
+        };
+        // every NN node's (artifact, precision, workload, qspec) and its
+        // device come from the shared per-class derivation (`nn_assign` /
+        // `nn_device`) — the same path `quant_rewrite` re-applies
+
+        // ------------------------------------------------------ 2D segment
+        let seg = if painted && !skip_seg {
+            let (art, prec, wl, qspec) =
+                nn_assign(m, cfg, StageClass::Seg)?.expect("seg is an NN class");
+            Some(b.push(
+                "seg".into(),
+                StageClass::Seg,
+                nn_device(cfg, StageClass::Seg, prec),
+                prec,
+                wl,
+                vec![],
+                vec![],
+                Some(art),
+                Some(qspec),
+            ))
+        } else {
+            None
+        };
+        let paint = if painted {
+            Some(b.push(
+                "paint".into(),
+                StageClass::Paint,
+                point_dev,
+                Precision::Fp32,
+                small_pointop((n * 8) as u64, (n * m.num_seg_classes) as u64),
+                seg.into_iter().collect(),
+                vec![],
+                None,
+                None,
+            ))
+        } else {
+            None
+        };
+        let c0 = if painted { m.feat_dim_painted } else { m.feat_dim_plain };
+
+        // ------------------------------------------------------ backbone
+        let chain_descs: Vec<(&'static str, bool, Option<usize>, usize)> = match cfg.variant {
+            Variant::VoteNet | Variant::PointPainting => vec![("full", false, None, n)],
+            Variant::PointSplit => vec![("normal", false, None, n), ("bias", true, None, n)],
+            Variant::RandomSplit => {
+                let half = n / 2;
+                vec![("randA", false, Some(0), half), ("randB", false, Some(1), n - half)]
+            }
+        };
+        let halves = cfg.variant.split();
+        let mut chains: Vec<ChainInfo> = Vec::with_capacity(chain_descs.len());
+        for (ci, (tag, biased, subset, n0)) in chain_descs.into_iter().enumerate() {
+            let mut levels = Vec::with_capacity(3);
+            let (mut n_in, mut c_in) = (n0, c0);
+            let mut prev_nn: Option<usize> = None;
+            for l in 0..3 {
+                let sac = &m.sa_configs[l];
+                let mm = if halves { sac.m / 2 } else { sac.m };
+                let use_bias = biased && l < cfg.bias_layers && cfg.w0 != 1.0;
+                // the SA-bias pipeline's SA1 starts FPS at n/2 so the two
+                // views decorrelate even where the bias weight has no effect
+                let start = if biased && l == 0 { n_in / 2 } else { 0 };
+                // point-manip deps: previous NN of this chain produced the
+                // features we gather; biased FPS additionally needs the
+                // painted fg mask (jump-start rule, Fig. 3)
+                let mut deps: Vec<usize> = match prev_nn {
+                    Some(p) => vec![p],
+                    None => seg.into_iter().collect(),
+                };
+                if use_bias {
+                    if let Some(s) = seg {
+                        if !deps.contains(&s) {
+                            deps.push(s);
+                        }
+                    }
+                }
+                // SA1-normal point manip of a painted pipeline needs
+                // nothing: it jump-starts before segmentation finishes
+                let deps_pm = if l == 0 && !use_bias { Vec::new() } else { deps };
+                // host-ordering: biased FPS reads the fg mask built by paint
+                let extra_pm: Vec<usize> = if use_bias && painted {
+                    paint.into_iter().collect()
+                } else {
+                    Vec::new()
+                };
+                let pm = b.push(
+                    format!("sa{}_{}_pm", l + 1, tag),
+                    StageClass::SaPm { chain: ci, level: l },
+                    point_dev,
+                    Precision::Fp32,
+                    sa_pointmanip_workload(n_in, mm, sac.k, c_in),
+                    deps_pm,
+                    extra_pm,
+                    None,
+                    None,
+                );
+                let mut deps_nn = vec![pm];
+                if l == 0 {
+                    if let Some(s) = seg {
+                        deps_nn.push(s); // painted features required
+                    }
+                }
+                // host-ordering: the level-0 gather reads features built by
+                // the paint stage (seg alone finishing is not enough)
+                let extra_nn: Vec<usize> = if l == 0 && painted {
+                    paint.into_iter().collect()
+                } else {
+                    Vec::new()
+                };
+                let class = StageClass::SaNn { chain: ci, level: l };
+                let (art, prec, wl, qspec) =
+                    nn_assign(m, cfg, class)?.expect("sa levels are NN classes");
+                let nn = b.push(
+                    format!("sa{}_{}_nn", l + 1, tag),
+                    class,
+                    nn_device(cfg, class, prec),
+                    prec,
+                    wl,
+                    deps_nn,
+                    extra_nn,
+                    Some(art),
+                    Some(qspec),
+                );
+                let c_out = *sac.mlp.last().expect("sa mlp widths");
+                levels.push(LevelInfo { pm, nn, n_in, m: mm, c: c_out, start, use_bias });
+                n_in = mm;
+                c_in = c_out;
+                prev_nn = Some(nn);
+            }
+            chains.push(ChainInfo { tag, biased, subset, n0, levels });
+        }
+        let sa2_n: usize = chains.iter().map(|c| c.levels[1].m).sum();
+        let sa3_n: usize = chains.iter().map(|c| c.levels[2].m).sum();
+        let sa3_c = chains[0].levels[2].c;
+
+        // SA4 over the fused SA3 set: it must wait for **every**
+        // contributing chain's SA3 PointNet (the old single `max(a, b)`
+        // dependency let sa4_pm start before the slower pipeline finished)
+        let sa4cfg = &m.sa_configs[3];
+        let mut deps4: Vec<usize> = chains.iter().map(|c| c.levels[2].nn).collect();
+        deps4.sort_unstable();
+        let use_bias4 = cfg.bias_layers >= 4 && cfg.variant == Variant::PointSplit;
+        let extra4: Vec<usize> = if use_bias4 && painted {
+            paint.into_iter().collect()
+        } else {
+            Vec::new()
+        };
+        let pm4 = b.push(
+            "sa4_pm".into(),
+            StageClass::Sa4Pm,
+            point_dev,
+            Precision::Fp32,
+            sa_pointmanip_workload(sa3_n, sa4cfg.m, sa4cfg.k, sa3_c),
+            deps4,
+            extra4,
+            None,
+            None,
+        );
+        let (art4, prec4, wl4, q4) =
+            nn_assign(m, cfg, StageClass::Sa4Nn)?.expect("sa4_nn is an NN class");
+        let nn4 = b.push(
+            "sa4_nn".into(),
+            StageClass::Sa4Nn,
+            nn_device(cfg, StageClass::Sa4Nn, prec4),
+            prec4,
+            wl4,
+            vec![pm4],
+            vec![],
+            Some(art4),
+            Some(q4),
+        );
+
+        // ------------------------------------------------------ FP + heads
+        let fp_pm = b.push(
+            "fp_interp".into(),
+            StageClass::FpInterp,
+            point_dev,
+            Precision::Fp32,
+            small_pointop((sa2_n * sa3_n * 4) as u64, (sa2_n * m.fp_in * 4) as u64),
+            vec![nn4],
+            vec![],
+            None,
+            None,
+        );
+        let (art_fp, prec_fp, wl_fp, q_fp) =
+            nn_assign(m, cfg, StageClass::FpFc)?.expect("fp_fc is an NN class");
+        let fp_nn = b.push(
+            "fp_fc".into(),
+            StageClass::FpFc,
+            nn_device(cfg, StageClass::FpFc, prec_fp),
+            prec_fp,
+            wl_fp,
+            vec![fp_pm],
+            vec![],
+            Some(art_fp),
+            Some(q_fp),
+        );
+        let (art_vote, prec_v, wl_v, q_v) =
+            nn_assign(m, cfg, StageClass::Vote)?.expect("vote is an NN class");
+        let vote = b.push(
+            "vote".into(),
+            StageClass::Vote,
+            nn_device(cfg, StageClass::Vote, prec_v),
+            prec_v,
+            wl_v,
+            vec![fp_nn],
+            vec![],
+            Some(art_vote),
+            Some(q_v),
+        );
+        let prop_pm = b.push(
+            "prop_pm".into(),
+            StageClass::PropPm,
+            point_dev,
+            Precision::Fp32,
+            sa_pointmanip_workload(sa2_n, m.num_proposals, m.proposal_k, m.seed_feat),
+            vec![vote],
+            vec![],
+            None,
+            None,
+        );
+        let (art_prop, prec_p, wl_p, q_p) =
+            nn_assign(m, cfg, StageClass::Prop)?.expect("prop is an NN class");
+        let prop = b.push(
+            "prop".into(),
+            StageClass::Prop,
+            nn_device(cfg, StageClass::Prop, prec_p),
+            prec_p,
+            wl_p,
+            vec![prop_pm],
+            vec![],
+            Some(art_prop),
+            Some(q_p),
+        );
+        b.push(
+            "decode".into(),
+            StageClass::Decode,
+            DeviceKind::Cpu,
+            Precision::Fp32,
+            small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
+            vec![prop],
+            vec![],
+            None,
+            None,
+        );
+        Ok(StageGraph {
+            nodes: b.nodes,
+            chains,
+            sa4_bias: use_bias4,
+            cfg: cfg.clone(),
+            num_points,
+            skip_seg,
+        })
+    }
+
+    pub fn cfg(&self) -> &DetectorConfig {
+        &self.cfg
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.num_points
+    }
+
+    pub fn skip_seg(&self) -> bool {
+        self.skip_seg
+    }
+
+    /// **lower-to-sim**: the `StageSpec` sequence [`crate::sim::ScheduleSim`]
+    /// replays — the same objects the executor's declarations embed.
+    pub fn specs(&self) -> Vec<StageSpec> {
+        self.nodes.iter().map(|n| n.spec.clone()).collect()
+    }
+
+    /// **batch-fold(k)**: `k` compatible scenes folded into one DAG.
+    /// Every stage's FLOPs/bytes scale by `k`, while per-stage dispatch
+    /// (`Device::overhead_ms`) and transfer setup (`link_overhead_ms`) are
+    /// paid once per stage — precisely where dynamic batching wins on this
+    /// hardware (EdgeTPU: 20 ms per transfer, GPU: 14 ms per dispatch).
+    pub fn batch_fold(&self, batch: usize) -> Vec<StageSpec> {
+        let k = batch.max(1) as u64;
+        self.nodes
+            .iter()
+            .map(|n| {
+                let mut s = n.spec.clone();
+                s.workload.flops *= k;
+                s.workload.mem_bytes *= k;
+                s.workload.wire_bytes *= k;
+                s
+            })
+            .collect()
+    }
+
+    /// **quant-rewrite**: the same topology under a different
+    /// [`QuantScheme`]. Every NN node's artifact, precision, workload and
+    /// quant spec are re-derived from the new scheme; devices are re-placed
+    /// by the per-stage precision rule; point-op nodes and all dependency
+    /// edges are untouched. This is the SLO degrade move as a graph pass
+    /// (see [`crate::serving::slo::degraded_graph`]); it is equivalent to
+    /// rebuilding with the new scheme (pinned by
+    /// `quant_rewrite_matches_rebuild`).
+    pub fn quant_rewrite(&self, m: &Manifest, scheme: QuantScheme) -> Result<StageGraph> {
+        let mut cfg = self.cfg.clone();
+        cfg.scheme = scheme;
+        let mut nodes = self.nodes.clone();
+        for node in &mut nodes {
+            // the same per-class derivation `build` uses — not a copy of it
+            let Some((art, precision, wl, qspec)) = nn_assign(m, &cfg, node.class)? else {
+                continue;
+            };
+            node.spec.device = nn_device(&cfg, node.class, precision);
+            node.spec.precision = precision;
+            node.spec.workload = wl;
+            node.artifact = Some(art);
+            node.qspec = Some(qspec);
+        }
+        Ok(StageGraph {
+            nodes,
+            chains: self.chains.clone(),
+            sa4_bias: self.sa4_bias,
+            cfg,
+            num_points: self.num_points,
+            skip_seg: self.skip_seg,
+        })
+    }
+
+    /// Structural fingerprint of the graph: everything that changes what
+    /// the simulator or executor would do — stage names, devices,
+    /// precisions, workloads, dependency edges, artifact names and quant
+    /// specs — plus the point budget and seg-skip flag. Two configurations
+    /// differing **only** in `QuantScheme` granularity produce different
+    /// fingerprints even when their timing-visible specs coincide (the
+    /// quant specs differ), so plan caches keyed by this value can never
+    /// conflate them.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.u64(self.num_points as u64);
+        h.u64(self.skip_seg as u64);
+        h.u64(self.sa4_bias as u64);
+        for node in &self.nodes {
+            let s = &node.spec;
+            h.bytes(s.name.as_bytes());
+            h.u64(s.device as u64);
+            h.u64(s.precision as u64);
+            h.u64(s.workload.kind as u64);
+            h.u64(s.workload.flops);
+            h.u64(s.workload.mem_bytes);
+            h.u64(s.workload.wire_bytes);
+            h.u64(s.deps.len() as u64);
+            for &d in &s.deps {
+                h.u64(d as u64);
+            }
+            h.u64(node.extra_deps.len() as u64);
+            for &d in &node.extra_deps {
+                h.u64(d as u64);
+            }
+            if let Some(a) = &node.artifact {
+                h.bytes(a.as_bytes());
+            }
+            if let Some(q) = &node.qspec {
+                h.bytes(q.precision.key_name().as_bytes());
+                h.u64(q.cout as u64);
+                h.u64(q.roles.len() as u64);
+                for g in &q.roles {
+                    h.u64(g.len() as u64);
+                    for &c in g {
+                        h.u64(c as u64);
+                    }
+                }
+            }
+        }
+        h.finish()
+    }
+}
+
+/// FNV-1a 64-bit (no external deps; collision odds are negligible for the
+/// handful of configurations a planner cache ever sees).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        // length terminator so ("ab","c") != ("a","bc")
+        self.0 ^= 0xff;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Schedule;
+    use crate::quant::Granularity;
+
+    fn pipelined() -> Schedule {
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu }
+    }
+
+    fn split_cfg() -> DetectorConfig {
+        DetectorConfig::new("synrgbd", Variant::PointSplit, true, pipelined())
+    }
+
+    #[test]
+    fn build_produces_connected_dag_for_every_variant() {
+        let m = Manifest::synthetic();
+        for v in
+            [Variant::VoteNet, Variant::PointPainting, Variant::RandomSplit, Variant::PointSplit]
+        {
+            for int8 in [false, true] {
+                let cfg = DetectorConfig::new("synrgbd", v, int8, pipelined());
+                let g = StageGraph::build(&m, &cfg, 2048, false).expect("build");
+                for (i, n) in g.nodes.iter().enumerate() {
+                    for &d in n.spec.deps.iter().chain(n.extra_deps.iter()) {
+                        assert!(d < i, "{v:?}: node {i} depends forward on {d}");
+                    }
+                }
+                assert!(g.nodes.iter().any(|n| n.class == StageClass::Decode));
+                let expected_chains = if cfg.variant.split() { 2 } else { 1 };
+                assert_eq!(g.chains.len(), expected_chains, "{v:?}");
+                for c in &g.chains {
+                    assert_eq!(c.levels.len(), 3);
+                    for lvl in &c.levels {
+                        assert_eq!(g.nodes[lvl.nn].spec.deps.first(), Some(&lvl.pm));
+                    }
+                }
+                // NN nodes carry artifact + quant spec, point ops do not
+                for n in &g.nodes {
+                    let is_nn = n.class.net(cfg.variant.split()).is_some();
+                    assert_eq!(n.artifact.is_some(), is_nn, "{:?}", n.class);
+                    assert_eq!(n.qspec.is_some(), is_nn, "{:?}", n.class);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_seg_drops_only_the_segmenter() {
+        let m = Manifest::synthetic();
+        let full = StageGraph::build(&m, &split_cfg(), 2048, false).unwrap();
+        let skip = StageGraph::build(&m, &split_cfg(), 2048, true).unwrap();
+        assert!(full.nodes.iter().any(|n| n.class == StageClass::Seg));
+        assert!(!skip.nodes.iter().any(|n| n.class == StageClass::Seg));
+        assert_eq!(full.nodes.len(), skip.nodes.len() + 1);
+        assert!(skip.nodes.iter().any(|n| n.class == StageClass::Paint));
+        assert_ne!(full.fingerprint(), skip.fingerprint());
+    }
+
+    #[test]
+    fn batch_fold_scales_workloads_only() {
+        let m = Manifest::synthetic();
+        let g = StageGraph::build(&m, &split_cfg(), 2048, false).unwrap();
+        let one = g.specs();
+        let four = g.batch_fold(4);
+        assert_eq!(one.len(), four.len());
+        for (a, b) in one.iter().zip(four.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.deps, b.deps);
+            assert_eq!(a.device, b.device);
+            assert_eq!(b.workload.flops, 4 * a.workload.flops);
+            assert_eq!(b.workload.wire_bytes, 4 * a.workload.wire_bytes);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error_not_a_panic() {
+        let m = Manifest::synthetic();
+        let mut cfg = split_cfg();
+        cfg.dataset = "nosuch".to_string();
+        let err = StageGraph::build(&m, &cfg, 2048, false).unwrap_err();
+        assert!(format!("{err:#}").contains("missing from manifest"), "{err:#}");
+    }
+
+    #[test]
+    fn fingerprint_discriminates_quant_scheme_granularity() {
+        let m = Manifest::synthetic();
+        // backbone Layer vs Group(4): identical artifact names and identical
+        // timing-visible specs — only the quant spec differs
+        let a = StageGraph::build(&m, &split_cfg(), 2048, false).unwrap();
+        let mut cfg_b = split_cfg();
+        cfg_b.scheme.backbone = StagePrecision::Int8(Granularity::Group(4));
+        let b = StageGraph::build(&m, &cfg_b, 2048, false).unwrap();
+        assert_eq!(a.specs(), b.specs(), "granularity is timing-invisible by design");
+        assert_ne!(a.fingerprint(), b.fingerprint(), "fingerprint must still discriminate");
+        // and head granularity (different artifacts)
+        let mut cfg_c = split_cfg();
+        cfg_c.scheme = cfg_c.scheme.with_head(StagePrecision::Int8(Granularity::Group(2)));
+        let c = StageGraph::build(&m, &cfg_c, 2048, false).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // determinism
+        let a2 = StageGraph::build(&m, &split_cfg(), 2048, false).unwrap();
+        assert_eq!(a.fingerprint(), a2.fingerprint());
+    }
+
+    #[test]
+    fn quant_rewrite_matches_rebuild() {
+        let m = Manifest::synthetic();
+        for base_int8 in [false, true] {
+            for v in [Variant::PointSplit, Variant::PointPainting] {
+                let cfg = DetectorConfig::new("synrgbd", v, base_int8, pipelined());
+                let g = StageGraph::build(&m, &cfg, 2048, false).unwrap();
+                for scheme in [
+                    cfg.scheme.degraded(),
+                    QuantScheme::fp32(),
+                    QuantScheme::int8(Granularity::Role),
+                ] {
+                    let rewritten = g.quant_rewrite(&m, scheme).expect("rewrite");
+                    let mut cfg2 = cfg.clone();
+                    cfg2.scheme = scheme;
+                    let rebuilt = StageGraph::build(&m, &cfg2, 2048, false).unwrap();
+                    assert_eq!(
+                        rewritten.nodes, rebuilt.nodes,
+                        "{v:?} int8={base_int8}: rewrite drifted from rebuild"
+                    );
+                    assert_eq!(rewritten.fingerprint(), rebuilt.fingerprint());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_rewrite_moves_fp32_heads_back_to_the_npu() {
+        let m = Manifest::synthetic();
+        let cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, false, pipelined());
+        let g = StageGraph::build(&m, &cfg, 2048, false).unwrap();
+        let vote = |g: &StageGraph| {
+            g.nodes.iter().find(|n| n.class == StageClass::Vote).unwrap().spec.clone()
+        };
+        assert_eq!(vote(&g).device, DeviceKind::Gpu, "fp32 vote falls back to the point device");
+        let fast = g.quant_rewrite(&m, cfg.scheme.degraded()).unwrap();
+        let v = vote(&fast);
+        assert_eq!(v.device, DeviceKind::EdgeTpu, "role-int8 vote belongs on the NPU");
+        assert_eq!(v.precision, Precision::Int8);
+        let q = fast.nodes.iter().find(|n| n.class == StageClass::Vote).unwrap();
+        assert_eq!(q.qspec.as_ref().unwrap().precision, StagePrecision::Int8(Granularity::Role));
+    }
+}

@@ -7,6 +7,16 @@
 //! in `pointops`, and a calibrated device model (`sim`) provides
 //! paper-comparable timing.
 //!
+//! The detector's stage DAG is a first-class IR (`graph::StageGraph`),
+//! built exactly once per configuration and consumed by passes: the
+//! executor and the simulator lower the same graph (`coordinator`), the
+//! serving planner batch-folds it (`serving::plan`), the SLO degrade
+//! move's precision swap is a quant-rewrite over its nodes
+//! (`serving::slo`; the fast path additionally halves the point budget
+//! and reuses 2D scores), and a placement-search pass (`graph::place`)
+//! picks device assignments under capability/memory constraints. See
+//! `docs/ARCHITECTURE.md`.
+//!
 //! # Serving
 //!
 //! On top of the per-scene pipeline sits the open-loop traffic gateway
@@ -28,6 +38,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod exec;
+pub mod graph;
 pub mod metrics;
 pub mod pointops;
 pub mod quant;

@@ -18,6 +18,12 @@
 //!     per-stage QuantScheme report: derived role partitions, QDQ error and
 //!     parameter count per granularity, and the full-vs-degraded plan
 //!     latencies (see docs/QUANTIZATION.md)
+//! pointsplit plan-search [--dataset synrgbd] [--variant pointsplit] [--fp32]
+//!                     [--points N] [--batch K] [--devices cpu,gpu,edgetpu]
+//!                     [--objective latency|throughput]
+//!     placement search over the stage graph: enumerate device assignments
+//!     (every Schedule over the available devices) under capability/memory
+//!     constraints, report per-candidate PlanCost, mark the optimum
 //! pointsplit devices
 //!     print the calibrated device models
 //! ```
@@ -49,6 +55,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&cli),
         "serve-traffic" => cmd_serve_traffic(&cli),
         "quant-report" => cmd_quant_report(&cli),
+        "plan-search" => cmd_plan_search(&cli),
         "devices" => cmd_devices(),
         "probe" => cmd_probe(&cli),
         "" | "help" => {
@@ -56,7 +63,8 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => Err(anyhow!(
-            "unknown command '{other}' (try: check|detect|serve|serve-traffic|quant-report|devices)"
+            "unknown command '{other}' \
+             (try: check|detect|serve|serve-traffic|quant-report|plan-search|devices)"
         )),
     }
 }
@@ -64,8 +72,8 @@ fn run() -> Result<()> {
 fn print_help() {
     println!("pointsplit — on-device 3D detection with heterogeneous accelerators");
     println!(
-        "commands: check | detect | serve | serve-traffic | quant-report | devices   \
-         (see rust/src/main.rs docs)"
+        "commands: check | detect | serve | serve-traffic | quant-report | plan-search | \
+         devices   (see rust/src/main.rs docs)"
     );
 }
 
@@ -258,7 +266,7 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
         max_batch: cli.get_usize("batch-max", 4)?,
         max_wait_ms: cli.get_f64("batch-wait-ms", 25.0)?,
     };
-    let capacity = planner.capacity_rps(&cfg, ds.num_points, batch.max_batch);
+    let capacity = planner.capacity_rps(&cfg, ds.num_points, batch.max_batch)?;
     let rate = if cli.get("rate").is_some() {
         cli.get_f64("rate", capacity)?
     } else {
@@ -331,9 +339,98 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
             batch,
             policy,
         };
-        let rep = run_traffic(&sc, &planner, exec.as_ref());
+        let rep = run_traffic(&sc, &planner, exec.as_ref())?;
         rep.print();
         println!();
+    }
+    Ok(())
+}
+
+/// Placement search over the stage graph: every `Schedule` expressible on
+/// the available devices, constrained by per-device capability and memory,
+/// ranked by simulated cost. Recovers the paper's Pipelined GPU+EdgeTPU
+/// assignment as optimal on the default calibration.
+fn cmd_plan_search(cli: &Cli) -> Result<()> {
+    use pointsplit::config::parse_device;
+    use pointsplit::graph::place::{self, Objective};
+
+    let dataset = cli.get_or("dataset", "synrgbd");
+    let ds = data::dataset(&dataset).ok_or_else(|| anyhow!("unknown dataset '{dataset}'"))?;
+    let variant = parse_variant(&cli.get_or("variant", "pointsplit"))?;
+    let int8 = !cli.get_bool("fp32"); // the paper's search space is INT8 by default
+    let cfg = DetectorConfig::new(
+        &dataset,
+        variant,
+        int8,
+        parse_schedule(&cli.get_or("schedule", "gpu+edgetpu"))?,
+    );
+    let num_points = cli.get_usize("points", ds.num_points)?;
+    let batch = cli.get_usize("batch", 1)?;
+    let objective = Objective::parse(&cli.get_or("objective", "latency"))
+        .ok_or_else(|| anyhow!("unknown objective (latency|throughput)"))?;
+    let devices: Vec<DeviceKind> = cli
+        .get_or("devices", "cpu,gpu,edgetpu")
+        .split(',')
+        .map(parse_device)
+        .collect::<Result<_>>()?;
+    let manifest = {
+        let path =
+            std::path::Path::new(&cli.get_or("artifacts", "artifacts")).join("manifest.json");
+        match std::fs::read_to_string(&path) {
+            // a manifest that exists but cannot be read or parsed is a
+            // hard error — never silently rank placements against the
+            // wrong workloads; only a genuinely absent file falls back
+            Ok(text) => {
+                println!("manifest: {}", path.display());
+                Manifest::parse(&text)?
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                println!("manifest: synthetic (no exported artifacts found)");
+                Manifest::synthetic()
+            }
+            Err(e) => return Err(anyhow!("reading {}: {e}", path.display())),
+        }
+    };
+    let search = place::search(&manifest, &cfg, num_points, batch, &devices, objective)?;
+    println!(
+        "plan-search: {dataset} {} int8={} — {} points, batch {batch}, objective {}, \
+         devices {:?}",
+        cfg.variant.name(),
+        cfg.int8(),
+        num_points,
+        objective.name(),
+        devices.iter().map(|d| d.name()).collect::<Vec<_>>()
+    );
+    let mut t = pointsplit::bench::Table::new(&[
+        "placement",
+        "total ms",
+        "bottleneck ms",
+        "GPU busy",
+        "NPU busy",
+        "CPU busy",
+        "comm ms",
+    ]);
+    for (i, c) in search.candidates.iter().enumerate() {
+        let mark = if i == 0 { " *" } else { "" };
+        t.row(vec![
+            format!("{:?}{mark}", c.schedule),
+            format!("{:.0}", c.cost.total_ms),
+            format!("{:.0}", c.cost.bottleneck_ms),
+            format!("{:.0}", c.cost.busy_gpu_ms),
+            format!("{:.0}", c.cost.busy_npu_ms),
+            format!("{:.0}", c.cost.busy_cpu_ms),
+            format!("{:.0}", c.cost.comm_ms),
+        ]);
+    }
+    t.print("placement candidates (best first, * = optimal)");
+    for r in &search.rejected {
+        println!("  rejected {:?}: {}", r.schedule, r.reason);
+    }
+    if let Some(best) = search.best() {
+        println!(
+            "\noptimal placement: {:?}  ({:.0} ms latency, {:.0} ms bottleneck)",
+            best.schedule, best.cost.total_ms, best.cost.bottleneck_ms
+        );
     }
     Ok(())
 }
@@ -424,14 +521,26 @@ fn cmd_quant_report(cli: &Cli) -> Result<()> {
         ("int8 role (full)", &full, num_points, false),
         ("degraded fast path", &fast, fast_points, true),
     ] {
-        let cost = planner.cost(cfg, pts, 1, skip_seg);
+        let cost = planner.cost(cfg, pts, 1, skip_seg)?;
         t.row(vec![
             name.to_string(),
             cfg.scheme.key(),
             format!("{:.0}", cost.total_ms),
-            format!("{:.1}", planner.capacity_rps(cfg, pts, 4)),
+            format!("{:.1}", planner.capacity_rps(cfg, pts, 4)?),
         ]);
     }
+    // the quant-rewrite pass in isolation — same point budget, same 2D
+    // work, only the stage specs swapped — decomposes the fast path's win
+    // into the precision move vs the point-budget/seg-reuse moves
+    let full_graph = planner.graph(&full, num_points, false)?;
+    let rewrite = pointsplit::serving::slo::degraded_graph(planner.manifest(), &full_graph)?;
+    let rw1 = planner.cost_of_graph(&rewrite, 1);
+    t.row(vec![
+        "degraded (quant-rewrite only)".to_string(),
+        rewrite.cfg().scheme.key(),
+        format!("{:.0}", rw1.total_ms),
+        format!("{:.1}", planner.capacity_rps_of_graph(&rewrite, 4)),
+    ]);
     t.print(&format!(
         "{dataset} — how SLO degrade re-assigns stage precisions (batch-1 latency, batch-4 capacity)"
     ));

@@ -25,6 +25,10 @@ pub struct ArtifactMeta {
     pub bytes_in: u64,
     /// bytes per element on the interconnect (1 for int8 executables)
     pub wire_bytes_per_elem: u64,
+    /// declared output element count (head/backbone widths differ wildly;
+    /// wire/memory accounting must not use a magic constant). Older
+    /// manifests without the field fall back to the historical 4096.
+    pub out_elems: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -195,6 +199,11 @@ impl Manifest {
                 flops: a.req("flops").as_f64().unwrap() as u64,
                 bytes_in: a.req("bytes_in").as_f64().unwrap() as u64,
                 wire_bytes_per_elem: a.req("wire_bytes_per_elem").as_f64().unwrap() as u64,
+                out_elems: a
+                    .get("out_elems")
+                    .and_then(|v| v.as_f64())
+                    .map(|v| v as u64)
+                    .unwrap_or(4096),
             })
             .collect();
         let by_name = artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
@@ -344,7 +353,8 @@ impl Manifest {
                        net: &str,
                        precision: &str,
                        shape: Vec<usize>,
-                       flops: u64| {
+                       flops: u64,
+                       out_elems: u64| {
             let bytes_in = shape.iter().product::<usize>() as u64 * 4;
             artifacts.push(ArtifactMeta {
                 file: format!("{name}.hlo.txt"),
@@ -357,6 +367,7 @@ impl Manifest {
                 flops,
                 bytes_in,
                 wire_bytes_per_elem: if precision.contains("int8") { 1 } else { 4 },
+                out_elems,
             });
         };
 
@@ -372,6 +383,7 @@ impl Manifest {
                     prec,
                     vec![crate::data::IMG_SIZE, crate::data::IMG_SIZE, 3],
                     seg_flops,
+                    (crate::data::IMG_SIZE * crate::data::IMG_SIZE * num_seg_classes) as u64,
                 );
             }
             for model in ["votenet", "painted", "pointsplit"] {
@@ -396,6 +408,7 @@ impl Manifest {
                                 prec,
                                 vec![b, sa_k[l], cin],
                                 mlp_flops(b * sa_k[l], &widths),
+                                (b * sa_mlp[l][2]) as u64,
                             );
                         }
                     }
@@ -407,6 +420,7 @@ impl Manifest {
                         prec,
                         vec![num_seeds, fp_in],
                         mlp_flops(num_seeds, &[fp_in, seed_feat]),
+                        (num_seeds * seed_feat) as u64,
                     );
                 }
                 for prec in head_precs {
@@ -418,6 +432,7 @@ impl Manifest {
                         prec,
                         vec![num_seeds, seed_feat],
                         mlp_flops(num_seeds, &[seed_feat, 128, 128, vote_ch]),
+                        (num_seeds * vote_ch) as u64,
                     );
                     add(
                         format!("{ds}_{model}_prop_{prec}"),
@@ -428,6 +443,7 @@ impl Manifest {
                         vec![num_proposals, proposal_k, 3 + seed_feat],
                         mlp_flops(num_proposals * proposal_k, &[3 + seed_feat, 128, 64])
                             + mlp_flops(num_proposals, &[64, 64, proposal_ch]),
+                        (num_proposals * proposal_ch) as u64,
                     );
                 }
             }
@@ -580,9 +596,16 @@ mod tests {
         let fp = m.artifact("synrgbd_pointsplit_fp_fc_int8").unwrap();
         assert_eq!(fp.flops, 2 * 128 * 384 * 128);
         assert_eq!(fp.wire_bytes_per_elem, 1);
+        assert_eq!(fp.out_elems, 128 * 128);
         let seg = m.artifact("synrgbd_seg_fp32").unwrap();
         assert_eq!(seg.input_shapes[0], vec![64, 64, 3]);
         assert_eq!(seg.wire_bytes_per_elem, 4);
+        assert_eq!(seg.out_elems, (64 * 64 * 11) as u64);
+        // per-artifact output widths, not a shared constant
+        let vote = m.artifact("synrgbd_pointsplit_vote_int8_role").unwrap();
+        assert_eq!(vote.out_elems, (128 * 131) as u64);
+        let sa1 = m.artifact("synrgbd_pointsplit_sa1_full_int8").unwrap();
+        assert_eq!(sa1.out_elems, (256 * 64) as u64);
         // no duplicate names
         let mut names: Vec<&str> = m.artifacts.iter().map(|a| a.name.as_str()).collect();
         let before = names.len();

@@ -24,6 +24,7 @@ use crate::coordinator::{DetectorConfig, ScenePipeline};
 use crate::data::{generate_scene, Box3, DatasetCfg};
 use crate::eval::{eval_map, Detection};
 use crate::exec::HostExec;
+use crate::graph::StageGraph;
 use crate::runtime::{Runtime, RuntimeSource};
 use crate::util::stats::Stats;
 
@@ -158,7 +159,9 @@ struct ExecJob {
 type ExecResult = (usize, Result<(Vec<Box3>, Vec<Box3>)>);
 
 /// Cache key discriminating every config field that changes pipeline
-/// behaviour (mirrors `ServicePlanner::cost`'s cache key).
+/// behaviour (the planner keys its cost cache by the stage graph's
+/// fingerprint; here a config-derived string suffices — both discriminate
+/// the full QuantScheme).
 fn pipe_key(cfg: &DetectorConfig) -> String {
     format!(
         "{}|{}|{}|{:?}|{}|{}|{}",
@@ -321,12 +324,29 @@ fn worker_loop(
 
 /// Run a scenario to completion on the simulated clock. Returns the report
 /// plus one terminal outcome per arrival (in resolution order).
+///
+/// A configuration the planner cannot cost (malformed manifest, unknown
+/// dataset) surfaces as an error instead of panicking a serving worker.
 pub fn run_traffic_trace(
     sc: &TrafficScenario,
     planner: &ServicePlanner,
     exec: Option<&PipelineExecutor>,
-) -> (ServeTrafficReport, Vec<RequestOutcome>) {
+) -> Result<(ServeTrafficReport, Vec<RequestOutcome>)> {
     assert!(!sc.configs.is_empty(), "scenario needs at least one detector config");
+    // Build each config's stage graphs once, up front — full path and
+    // degraded fast path. Per-batch costing on the hot path is then a
+    // cache lookup / simulation over these; no graph construction per
+    // dispatch event, and a malformed config fails the whole run here
+    // instead of killing a worker mid-traffic.
+    let fast_pts = slo::degraded_points(sc.num_points);
+    let mut plans: Vec<(StageGraph, DetectorConfig, StageGraph)> =
+        Vec::with_capacity(sc.configs.len());
+    for cfg in &sc.configs {
+        let full = planner.graph(cfg, sc.num_points, false)?;
+        let fast_cfg = slo::degraded_config(cfg);
+        let fast = planner.graph(&fast_cfg, fast_pts, true)?;
+        plans.push((full, fast_cfg, fast));
+    }
     let arrivals = sc.load.generate();
     let total = arrivals.len();
     let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(total);
@@ -370,12 +390,12 @@ pub fn run_traffic_trace(
         while lane_free <= now {
             match batcher::decide(&mut queue, &sc.batch, now) {
                 batcher::BatchDecision::Dispatch(batch) => {
-                    let cfg = &sc.configs[batch.key.min(sc.configs.len() - 1)];
+                    let ci = batch.key.min(sc.configs.len() - 1);
+                    let cfg = &sc.configs[ci];
+                    let (full_graph, fast_cfg, fast_graph) = &plans[ci];
                     let k0 = batch.reqs.len();
-                    let fast_pts = slo::degraded_points(sc.num_points);
-                    let full = planner.cost(cfg, sc.num_points, k0, false);
-                    let fast_cfg = slo::degraded_config(cfg);
-                    let fast = planner.cost(&fast_cfg, fast_pts, k0, true);
+                    let full = planner.cost_of_graph(full_graph, k0);
+                    let fast = planner.cost_of_graph(fast_graph, k0);
                     let dec = slo::apply(sc.policy, batch.reqs, now, full.total_ms, fast.total_ms);
                     for r in &dec.shed {
                         shed_slo += 1;
@@ -390,9 +410,9 @@ pub fn run_traffic_trace(
                     }
                     let k = dec.dispatch.len();
                     let (run_cfg, cost) = if dec.degraded {
-                        (&fast_cfg, planner.cost(&fast_cfg, fast_pts, k, true))
+                        (fast_cfg, planner.cost_of_graph(fast_graph, k))
                     } else {
-                        (cfg, planner.cost(cfg, sc.num_points, k, false))
+                        (cfg, planner.cost_of_graph(full_graph, k))
                     };
                     let done = now + cost.total_ms;
                     lane_free = now + cost.bottleneck_ms;
@@ -477,7 +497,7 @@ pub fn run_traffic_trace(
         pattern: sc.load.pattern.name(),
         policy: sc.policy.name(),
         offered_rps: sc.load.pattern.mean_rps(),
-        capacity_rps: planner.capacity_rps(&sc.configs[0], sc.num_points, sc.batch.max_batch),
+        capacity_rps: planner.capacity_rps(&sc.configs[0], sc.num_points, sc.batch.max_batch)?,
         duration_s: sc.load.duration_ms / 1000.0,
         makespan_s,
         arrivals: total,
@@ -498,7 +518,7 @@ pub fn run_traffic_trace(
         max_queue_depth: queue.stats.max_depth,
         map_25,
     };
-    (report, outcomes)
+    Ok((report, outcomes))
 }
 
 /// Run a scenario and return just the report.
@@ -506,8 +526,8 @@ pub fn run_traffic(
     sc: &TrafficScenario,
     planner: &ServicePlanner,
     exec: Option<&PipelineExecutor>,
-) -> ServeTrafficReport {
-    run_traffic_trace(sc, planner, exec).0
+) -> Result<ServeTrafficReport> {
+    Ok(run_traffic_trace(sc, planner, exec)?.0)
 }
 
 #[cfg(test)]
@@ -525,7 +545,7 @@ mod tests {
             Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
         );
         let planner = ServicePlanner::synthetic();
-        let cap = planner.capacity_rps(&cfg, 2048, 4);
+        let cap = planner.capacity_rps(&cfg, 2048, 4).unwrap();
         TrafficScenario {
             name: format!("test-{rate_mult}x"),
             configs: vec![cfg],
@@ -546,7 +566,7 @@ mod tests {
     fn underload_meets_slo() {
         let planner = ServicePlanner::synthetic();
         let sc = scenario(0.25, SloPolicy::None, 3);
-        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None).unwrap();
         assert_eq!(outcomes.len(), rep.arrivals);
         assert!(rep.arrivals > 0);
         assert!(rep.slo_attainment > 0.9, "underload attainment {}", rep.slo_attainment);
@@ -558,8 +578,8 @@ mod tests {
     fn deterministic_runs() {
         let planner = ServicePlanner::synthetic();
         let sc = scenario(1.2, SloPolicy::Degrade, 9);
-        let a = run_traffic(&sc, &planner, None);
-        let b = run_traffic(&sc, &planner, None);
+        let a = run_traffic(&sc, &planner, None).unwrap();
+        let b = run_traffic(&sc, &planner, None).unwrap();
         assert_eq!(a.arrivals, b.arrivals);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.on_time, b.on_time);
@@ -569,8 +589,8 @@ mod tests {
     #[test]
     fn overload_policy_beats_none() {
         let planner = ServicePlanner::synthetic();
-        let none = run_traffic(&scenario(2.0, SloPolicy::None, 17), &planner, None);
-        let deg = run_traffic(&scenario(2.0, SloPolicy::Degrade, 17), &planner, None);
+        let none = run_traffic(&scenario(2.0, SloPolicy::None, 17), &planner, None).unwrap();
+        let deg = run_traffic(&scenario(2.0, SloPolicy::Degrade, 17), &planner, None).unwrap();
         assert!(
             deg.goodput_rps > none.goodput_rps,
             "degradation must raise goodput under 2x overload: {} vs {}",
@@ -583,8 +603,8 @@ mod tests {
     #[test]
     fn overload_batches_grow() {
         let planner = ServicePlanner::synthetic();
-        let under = run_traffic(&scenario(0.3, SloPolicy::None, 21), &planner, None);
-        let over = run_traffic(&scenario(1.8, SloPolicy::None, 21), &planner, None);
+        let under = run_traffic(&scenario(0.3, SloPolicy::None, 21), &planner, None).unwrap();
+        let over = run_traffic(&scenario(1.8, SloPolicy::None, 21), &planner, None).unwrap();
         assert!(
             over.mean_batch > under.mean_batch,
             "queueing pressure should fill batches: {} vs {}",

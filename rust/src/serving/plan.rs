@@ -1,87 +1,46 @@
-//! Analytic service model: the per-scene stage DAG of
-//! `coordinator::pipeline`, rebuilt without functional execution and timed by
-//! the calibrated [`ScheduleSim`].
+//! Analytic service model: the per-scene stage DAG, timed without
+//! functional execution by the calibrated [`ScheduleSim`].
 //!
 //! The dispatcher needs to know — *before* committing accelerator time —
-//! what a batch will cost on each device. This planner mirrors the exact
-//! stage graph `ScenePipeline::run` records (same jump-start rules, same
-//! device fallbacks, same workload descriptors from the manifest), so its
-//! timelines match what the pipeline itself would report, but it needs no
-//! PJRT artifacts: with `Manifest::synthetic()` it runs anywhere.
+//! what a batch will cost on each device. The planner obtains the stage
+//! DAG from the **same** [`StageGraph`] constructor the pipeline executes
+//! (it used to keep a hand-written mirror of `ScenePipeline::run`; that
+//! mirror and its drift-bug class are gone), so its timelines match what
+//! the pipeline itself would report *by construction* — pinned
+//! stage-for-stage by `rust/tests/graph_equivalence.rs`. It needs no PJRT
+//! artifacts: with [`Manifest::synthetic`] it runs anywhere.
 //!
-//! Batching model: a batch of `k` compatible scenes folds into one DAG with
-//! every stage's FLOPs/bytes scaled by `k` while per-stage dispatch and
-//! transfer *setup* costs are paid once. That is precisely where dynamic
-//! batching wins on this hardware — the EdgeTPU's 20 ms per-transfer setup
-//! and the GPU's 14 ms per-dispatch overhead amortize across the batch.
+//! Batching model: the graph's **batch-fold(k)** pass — `k` compatible
+//! scenes fold into one DAG with every stage's FLOPs/bytes scaled by `k`
+//! while per-stage dispatch and transfer *setup* costs are paid once. That
+//! is precisely where dynamic batching wins on this hardware — the
+//! EdgeTPU's 20 ms per-transfer setup and the GPU's 14 ms per-dispatch
+//! overhead amortize across the batch.
+//!
+//! Cost-cache keys are [`StageGraph::fingerprint`]s: whatever changes the
+//! graph changes the key, and configurations differing only in quant
+//! granularity never share an entry (pinned by
+//! `quant_scheme_never_shares_cache`).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 
-use crate::coordinator::arch::{nn_precision, nn_workload, sa_pointmanip_workload, small_pointop};
-use crate::coordinator::{DetectorConfig, Variant};
+use anyhow::Result;
+
+use crate::coordinator::DetectorConfig;
+use crate::graph::StageGraph;
 use crate::runtime::Manifest;
-use crate::sim::{DeviceKind, Precision, ScheduleSim, StageSpec, Timeline, Workload};
+use crate::sim::{ScheduleSim, StageSpec, Timeline};
 
-/// Per-batch cost summary extracted from a simulated [`Timeline`].
-#[derive(Debug, Clone, Copy)]
-pub struct PlanCost {
-    /// Critical-path latency of the batch, ms.
-    pub total_ms: f64,
-    pub busy_gpu_ms: f64,
-    pub busy_npu_ms: f64,
-    pub busy_cpu_ms: f64,
-    /// Total interconnect time charged, ms.
-    pub comm_ms: f64,
-    /// Largest per-device occupancy (compute + transfers), ms. In steady
-    /// state the pipeline admits a new batch every `bottleneck_ms`, so this
-    /// sets the gateway's service rate while `total_ms` sets its latency.
-    pub bottleneck_ms: f64,
-}
+// the cost summary is a pure Timeline reduction and lives with the
+// simulator; re-exported here for the serving-facing API surface
+pub use crate::sim::{cost_of, PlanCost};
 
-/// Stage-DAG planner with a per-configuration cost cache.
+/// Stage-graph planner with a fingerprint-keyed cost cache.
 pub struct ServicePlanner {
     manifest: Manifest,
     sim: ScheduleSim,
-    cache: RefCell<HashMap<String, PlanCost>>,
-}
-
-/// Rolling per-pipeline planning state (mirrors `pipeline::ChainLevel`).
-struct PlanLevel {
-    n: usize,
-    cin: usize,
-    /// sim indices of the NN stages that must finish before the next
-    /// point-manip may consume this level (one per contributing pipeline)
-    last_nn: Vec<usize>,
-}
-
-/// Stage-DAG accumulator with the sequential-schedule chaining rule.
-struct DagBuilder {
-    stages: Vec<StageSpec>,
-    sequential: bool,
-    prev: Option<usize>,
-}
-
-impl DagBuilder {
-    fn push(
-        &mut self,
-        name: String,
-        device: DeviceKind,
-        precision: Precision,
-        workload: Workload,
-        mut deps: Vec<usize>,
-    ) -> usize {
-        if self.sequential {
-            if let Some(p) = self.prev {
-                if !deps.contains(&p) {
-                    deps.push(p);
-                }
-            }
-        }
-        self.stages.push(StageSpec { name, device, precision, workload, deps });
-        self.prev = Some(self.stages.len() - 1);
-        self.stages.len() - 1
-    }
+    cache: RefCell<HashMap<(u64, usize), PlanCost>>,
 }
 
 impl ServicePlanner {
@@ -98,296 +57,97 @@ impl ServicePlanner {
         &self.manifest
     }
 
+    /// The configuration's stage graph — the same object
+    /// `ScenePipeline::run` lowers to execution.
+    pub fn graph(
+        &self,
+        cfg: &DetectorConfig,
+        num_points: usize,
+        skip_seg: bool,
+    ) -> Result<StageGraph> {
+        StageGraph::build(&self.manifest, cfg, num_points, skip_seg)
+    }
+
+    /// The single-scene `StageSpec` sequence (lower-to-sim pass).
+    pub fn stages(
+        &self,
+        cfg: &DetectorConfig,
+        num_points: usize,
+        skip_seg: bool,
+    ) -> Result<Vec<StageSpec>> {
+        Ok(self.graph(cfg, num_points, skip_seg)?.specs())
+    }
+
+    /// Simulated timeline of `batch` compatible scenes — for batch 1 this
+    /// is identical, stage for stage, to what the pipeline reports.
+    pub fn timeline(
+        &self,
+        cfg: &DetectorConfig,
+        num_points: usize,
+        batch: usize,
+        skip_seg: bool,
+    ) -> Result<Timeline> {
+        let graph = self.graph(cfg, num_points, skip_seg)?;
+        Ok(self.sim.run(&graph.batch_fold(batch)))
+    }
+
     /// Simulated cost of running `batch` compatible scenes of `num_points`
     /// points under `cfg`. `skip_seg` models consecutive matching (2D scores
-    /// reused from a previous frame — the degraded fast path).
+    /// reused from a previous frame — the degraded fast path). Costs are
+    /// cached by ([`StageGraph::fingerprint`], batch).
     pub fn cost(
         &self,
         cfg: &DetectorConfig,
         num_points: usize,
         batch: usize,
         skip_seg: bool,
-    ) -> PlanCost {
-        let key = format!(
-            "{}|{}|{}|{:?}|{}|{}|{}|{}|{}|{}",
-            cfg.dataset,
-            cfg.variant.name(),
-            cfg.scheme.key(),
-            cfg.schedule,
-            cfg.w0,
-            cfg.bias_layers,
-            cfg.seg_passes,
-            num_points,
-            batch,
-            skip_seg
-        );
+    ) -> Result<PlanCost> {
+        let graph = self.graph(cfg, num_points, skip_seg)?;
+        Ok(self.cost_of_graph(&graph, batch))
+    }
+
+    /// Cost of an already-built graph (callers holding a graph — e.g. a
+    /// quant-rewrite result — skip the rebuild).
+    pub fn cost_of_graph(&self, graph: &StageGraph, batch: usize) -> PlanCost {
+        let key = (graph.fingerprint(), batch.max(1));
         if let Some(c) = self.cache.borrow().get(&key) {
             return *c;
         }
-        let mut stages = self.stages(cfg, num_points, skip_seg);
-        for s in &mut stages {
-            s.workload.flops *= batch as u64;
-            s.workload.mem_bytes *= batch as u64;
-            s.workload.wire_bytes *= batch as u64;
-        }
-        let cost = cost_of(&self.sim.run(&stages));
+        let cost = cost_of(&self.sim.run(&graph.batch_fold(batch)));
         self.cache.borrow_mut().insert(key, cost);
         cost
     }
 
+    /// Number of distinct (graph, batch) cost entries computed so far
+    /// (cache observability for tests and reports).
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
     /// Steady-state service capacity (requests/sec) at a given batch size:
     /// the pipeline finishes `batch` requests every `bottleneck_ms`.
-    pub fn capacity_rps(&self, cfg: &DetectorConfig, num_points: usize, batch: usize) -> f64 {
-        let c = self.cost(cfg, num_points, batch.max(1), false);
-        batch.max(1) as f64 / c.bottleneck_ms * 1000.0
-    }
-
-    /// Build the single-scene stage DAG (mirror of `ScenePipeline::run`'s
-    /// recording side).
-    pub fn stages(&self, cfg: &DetectorConfig, num_points: usize, skip_seg: bool) -> Vec<StageSpec> {
-        let m = &self.manifest;
-        let point_dev = cfg.schedule.point_dev();
-        // EdgeTPU executes int8 only; placement is per stage precision
-        // (mirrors ScenePipeline exactly)
-        let nn_dev_raw = cfg.schedule.nn_dev();
-        let nn_dev_for = |p: Precision| {
-            if p == Precision::Fp32 && nn_dev_raw == DeviceKind::EdgeTpu {
-                point_dev
-            } else {
-                nn_dev_raw
-            }
-        };
-        let nn_dev = nn_dev_for(cfg.scheme.backbone.sim());
-        let mut dag = DagBuilder {
-            stages: Vec::new(),
-            sequential: !cfg.schedule.overlapped(),
-            prev: None,
-        };
-
-        // ---------------------------------------------------- 2D segment
-        let seg_stage = if cfg.variant.painted() && !skip_seg {
-            let mut wl = nn_workload(m, &cfg.seg_art());
-            wl.flops *= cfg.seg_passes as u64;
-            Some(dag.push("seg".into(), nn_dev, nn_precision(m, &cfg.seg_art()), wl, vec![]))
-        } else {
-            None
-        };
-        let paint_deps: Vec<usize> = seg_stage.into_iter().collect();
-        if cfg.variant.painted() {
-            dag.push(
-                "paint".into(),
-                point_dev,
-                Precision::Fp32,
-                small_pointop((num_points * 8) as u64, (num_points * m.num_seg_classes) as u64),
-                paint_deps,
-            );
-        }
-        let feat = if cfg.variant.painted() { m.feat_dim_painted } else { m.feat_dim_plain };
-
-        // ---------------------------------------------------- backbone
-        let (sa2, sa3) = match cfg.variant {
-            Variant::VoteNet | Variant::PointPainting => self.plan_sa_chain(
-                &mut dag, cfg, num_points, feat, "full", false, point_dev, nn_dev, seg_stage,
-            ),
-            Variant::PointSplit => {
-                let ln = self.plan_sa_chain(
-                    &mut dag, cfg, num_points, feat, "normal", false, point_dev, nn_dev, seg_stage,
-                );
-                let lb = self.plan_sa_chain(
-                    &mut dag, cfg, num_points, feat, "bias", true, point_dev, nn_dev, seg_stage,
-                );
-                (merge(ln.0, lb.0), merge(ln.1, lb.1))
-            }
-            Variant::RandomSplit => {
-                let half = num_points / 2;
-                let la = self.plan_sa_chain(
-                    &mut dag, cfg, half, feat, "randA", false, point_dev, nn_dev, seg_stage,
-                );
-                let lb = self.plan_sa_chain(
-                    &mut dag, cfg, half, feat, "randB", false, point_dev, nn_dev, seg_stage,
-                );
-                (merge(la.0, lb.0), merge(la.1, lb.1))
-            }
-        };
-
-        // SA4 over the fused SA3 set: it must wait for **both** pipelines'
-        // SA3 PointNets (the old single `max(a, b)` dependency let sa4_pm
-        // start before the slower pipeline finished)
-        let sa4cfg = &m.sa_configs[3];
-        let mut deps4 = sa3.last_nn.clone();
-        deps4.sort_unstable();
-        let pm4 = dag.push(
-            "sa4_pm".into(),
-            point_dev,
-            Precision::Fp32,
-            sa_pointmanip_workload(sa3.n, sa4cfg.m, sa4cfg.k, sa3.cin),
-            deps4,
-        );
-        let sa4_art = cfg.art("sa4_full");
-        let nn4 = dag.push(
-            "sa4_nn".into(),
-            nn_dev,
-            nn_precision(m, &sa4_art),
-            nn_workload(m, &sa4_art),
-            vec![pm4],
-        );
-
-        // ---------------------------------------------------- FP + heads
-        let fp_pm = dag.push(
-            "fp_interp".into(),
-            point_dev,
-            Precision::Fp32,
-            small_pointop((sa2.n * sa3.n * 4) as u64, (sa2.n * m.fp_in * 4) as u64),
-            vec![nn4],
-        );
-        let fp_art = cfg.art("fp_fc");
-        let fp_nn = dag.push(
-            "fp_fc".into(),
-            nn_dev,
-            nn_precision(m, &fp_art),
-            nn_workload(m, &fp_art),
-            vec![fp_pm],
-        );
-        let vote_art = cfg.art("vote");
-        let vote_prec = nn_precision(m, &vote_art);
-        let vote_nn = dag.push(
-            "vote".into(),
-            nn_dev_for(vote_prec),
-            vote_prec,
-            nn_workload(m, &vote_art),
-            vec![fp_nn],
-        );
-        let prop_pm = dag.push(
-            "prop_pm".into(),
-            point_dev,
-            Precision::Fp32,
-            sa_pointmanip_workload(sa2.n, m.num_proposals, m.proposal_k, m.seed_feat),
-            vec![vote_nn],
-        );
-        let prop_art = cfg.art("prop");
-        let prop_prec = nn_precision(m, &prop_art);
-        let prop_nn = dag.push(
-            "prop".into(),
-            nn_dev_for(prop_prec),
-            prop_prec,
-            nn_workload(m, &prop_art),
-            vec![prop_pm],
-        );
-        dag.push(
-            "decode".into(),
-            DeviceKind::Cpu,
-            Precision::Fp32,
-            small_pointop((m.num_proposals * m.num_proposals) as u64 * 20, 4096),
-            vec![prop_nn],
-        );
-        dag.stages
-    }
-
-    /// SA1..SA3 of one pipeline (mirror of `ScenePipeline::run_sa_chain`):
-    /// returns the SA2 and SA3 levels for the FP stage.
-    #[allow(clippy::too_many_arguments)]
-    fn plan_sa_chain(
+    pub fn capacity_rps(
         &self,
-        dag: &mut DagBuilder,
         cfg: &DetectorConfig,
-        n0: usize,
-        feat: usize,
-        tag: &str,
-        biased: bool,
-        point_dev: DeviceKind,
-        nn_dev: DeviceKind,
-        seg_stage: Option<usize>,
-    ) -> (PlanLevel, PlanLevel) {
-        let m = &self.manifest;
-        let halves = cfg.variant.split();
-        let shape = if halves { "half" } else { "full" };
-        let mut state =
-            PlanLevel { n: n0, cin: feat, last_nn: seg_stage.into_iter().collect() };
-        let mut sa2 = None;
-        for l in 0..3 {
-            let sac = &m.sa_configs[l];
-            let mm = if halves { sac.m / 2 } else { sac.m };
-            let use_bias = biased && l < cfg.bias_layers && cfg.w0 != 1.0;
-            let mut deps: Vec<usize> = state.last_nn.clone();
-            if use_bias {
-                if let Some(s) = seg_stage {
-                    if !deps.contains(&s) {
-                        deps.push(s);
-                    }
-                }
-            }
-            // SA1-normal jump-starts before segmentation finishes
-            let deps_pm = if l == 0 && !use_bias { Vec::new() } else { deps };
-            let pm = dag.push(
-                format!("sa{}_{}_pm", l + 1, tag),
-                point_dev,
-                Precision::Fp32,
-                sa_pointmanip_workload(state.n, mm, sac.k, state.cin),
-                deps_pm,
-            );
-            let mut deps_nn = vec![pm];
-            if l == 0 {
-                if let Some(s) = seg_stage {
-                    deps_nn.push(s); // painted features required
-                }
-            }
-            let art = cfg.art(&format!("sa{}_{shape}", l + 1));
-            let nn = dag.push(
-                format!("sa{}_{}_nn", l + 1, tag),
-                nn_dev,
-                nn_precision(m, &art),
-                nn_workload(m, &art),
-                deps_nn,
-            );
-            state = PlanLevel { n: mm, cin: *sac.mlp.last().unwrap(), last_nn: vec![nn] };
-            if l == 1 {
-                sa2 = Some(PlanLevel {
-                    n: state.n,
-                    cin: state.cin,
-                    last_nn: state.last_nn.clone(),
-                });
-            }
-        }
-        (sa2.expect("three SA levels planned"), state)
+        num_points: usize,
+        batch: usize,
+    ) -> Result<f64> {
+        Ok(self.capacity_rps_of_graph(&self.graph(cfg, num_points, false)?, batch))
     }
-}
 
-/// Fuse two pipelines' levels: the merged set depends on **every**
-/// contributing pipeline's last NN stage. (The old code kept only
-/// `max(a, b)`, so a downstream stage could be scheduled before the slower
-/// pipeline's SA3 finished — the regression is pinned by
-/// `tests/parallelism.rs::sa4_waits_for_both_pipelines`.)
-fn merge(a: PlanLevel, b: PlanLevel) -> PlanLevel {
-    let mut last_nn = a.last_nn;
-    last_nn.extend_from_slice(&b.last_nn);
-    last_nn.sort_unstable();
-    last_nn.dedup();
-    PlanLevel { n: a.n + b.n, cin: a.cin, last_nn }
-}
-
-/// Reduce a simulated timeline to the dispatcher's cost summary.
-pub fn cost_of(tl: &Timeline) -> PlanCost {
-    let busy = |k: DeviceKind| tl.busy_ms.get(&k).copied().unwrap_or(0.0);
-    let comm = |k: DeviceKind| tl.comm_ms.get(&k).copied().unwrap_or(0.0);
-    let occupancy = |k: DeviceKind| busy(k) + comm(k);
-    let bottleneck = [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::EdgeTpu]
-        .into_iter()
-        .map(occupancy)
-        .fold(0.0, f64::max);
-    PlanCost {
-        total_ms: tl.total_ms,
-        busy_gpu_ms: busy(DeviceKind::Gpu),
-        busy_npu_ms: busy(DeviceKind::EdgeTpu),
-        busy_cpu_ms: busy(DeviceKind::Cpu),
-        comm_ms: tl.comm_ms.values().sum(),
-        bottleneck_ms: bottleneck.max(1e-6),
+    /// Capacity of an already-built graph (the one capacity formula —
+    /// every report row goes through here or [`Self::capacity_rps`]).
+    pub fn capacity_rps_of_graph(&self, graph: &StageGraph, batch: usize) -> f64 {
+        let b = batch.max(1);
+        b as f64 / self.cost_of_graph(graph, b).bottleneck_ms * 1000.0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Schedule;
+    use crate::coordinator::{Schedule, Variant};
+    use crate::quant::{Granularity, StagePrecision};
     use crate::sim::DeviceKind;
 
     fn planner() -> ServicePlanner {
@@ -406,7 +166,7 @@ mod tests {
     #[test]
     fn plan_produces_connected_dag() {
         let p = planner();
-        let stages = p.stages(&split_cfg(), 2048, false);
+        let stages = p.stages(&split_cfg(), 2048, false).unwrap();
         assert!(stages.len() > 15, "expected a full two-pipeline DAG, got {}", stages.len());
         for (i, s) in stages.iter().enumerate() {
             for &d in &s.deps {
@@ -420,18 +180,47 @@ mod tests {
     #[test]
     fn cost_is_cached_and_deterministic() {
         let p = planner();
-        let a = p.cost(&split_cfg(), 2048, 2, false);
-        let b = p.cost(&split_cfg(), 2048, 2, false);
+        let a = p.cost(&split_cfg(), 2048, 2, false).unwrap();
+        let b = p.cost(&split_cfg(), 2048, 2, false).unwrap();
         assert_eq!(a.total_ms, b.total_ms);
         assert!(a.total_ms > 0.0 && a.bottleneck_ms > 0.0);
         assert!(a.bottleneck_ms <= a.total_ms + 1e-9);
+        assert_eq!(p.cache_len(), 1, "identical queries share one cache entry");
+    }
+
+    /// Regression (cache-key satellite): two configurations differing
+    /// **only** in QuantScheme must never share a cached PlanCost — even
+    /// when the difference (backbone granularity) is invisible to the
+    /// device model.
+    #[test]
+    fn quant_scheme_never_shares_cache() {
+        let p = planner();
+        let a = split_cfg();
+        let mut b = split_cfg();
+        b.scheme.backbone = StagePrecision::Int8(Granularity::Group(4));
+        assert_ne!(a.scheme, b.scheme);
+        let ca = p.cost(&a, 2048, 1, false).unwrap();
+        let cb = p.cost(&b, 2048, 1, false).unwrap();
+        assert_eq!(
+            p.cache_len(),
+            2,
+            "granularity-only config change must occupy its own cache entry"
+        );
+        // (their *values* may coincide — the device model does not price
+        // granularity — but the entries must be distinct)
+        let _ = (ca, cb);
+        // and a head-granularity change as well
+        let mut c = split_cfg();
+        c.scheme = c.scheme.with_head(StagePrecision::Int8(Granularity::Channel));
+        p.cost(&c, 2048, 1, false).unwrap();
+        assert_eq!(p.cache_len(), 3);
     }
 
     #[test]
     fn batching_amortizes_overheads() {
         let p = planner();
-        let one = p.cost(&split_cfg(), 2048, 1, false);
-        let four = p.cost(&split_cfg(), 2048, 4, false);
+        let one = p.cost(&split_cfg(), 2048, 1, false).unwrap();
+        let four = p.cost(&split_cfg(), 2048, 4, false).unwrap();
         assert!(four.total_ms > one.total_ms, "bigger batch cannot be faster in latency");
         assert!(
             four.total_ms < 4.0 * one.total_ms * 0.9,
@@ -440,7 +229,10 @@ mod tests {
             4.0 * one.total_ms
         );
         // throughput must improve with batch size
-        assert!(p.capacity_rps(&split_cfg(), 2048, 4) > p.capacity_rps(&split_cfg(), 2048, 1));
+        assert!(
+            p.capacity_rps(&split_cfg(), 2048, 4).unwrap()
+                > p.capacity_rps(&split_cfg(), 2048, 1).unwrap()
+        );
     }
 
     #[test]
@@ -452,8 +244,8 @@ mod tests {
         let mut cfg = split_cfg();
         cfg.schedule =
             Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
-        let full = p.cost(&cfg, 2048, 1, false);
-        let skip = p.cost(&cfg, 2048, 1, true);
+        let full = p.cost(&cfg, 2048, 1, false).unwrap();
+        let skip = p.cost(&cfg, 2048, 1, true).unwrap();
         assert!(skip.total_ms < full.total_ms, "skipping 2D work must cut latency");
     }
 
@@ -470,8 +262,8 @@ mod tests {
             // at batch 1 the serial NN tail (fixed dispatch + PCIe setup
             // costs) floors the gain; at batch 4 those amortize and the
             // halved GPU lane dominates
-            let full = p.cost(&cfg, 2048, batch, false);
-            let fast = p.cost(&fast_cfg, fast_pts, batch, true);
+            let full = p.cost(&cfg, 2048, batch, false).unwrap();
+            let fast = p.cost(&fast_cfg, fast_pts, batch, true).unwrap();
             assert!(
                 fast.total_ms < factor * full.total_ms,
                 "batch {batch}: fast {:.0} ms vs full {:.0} ms",
@@ -491,8 +283,8 @@ mod tests {
             false,
             Schedule::SingleDevice(DeviceKind::Gpu),
         );
-        let slow = p.cost(&fp32, 2048, 1, false);
-        let fast = p.cost(&split_cfg(), 2048, 1, false);
+        let slow = p.cost(&fp32, 2048, 1, false).unwrap();
+        let fast = p.cost(&split_cfg(), 2048, 1, false).unwrap();
         assert!(
             slow.total_ms > 3.0 * fast.total_ms,
             "paper direction: fp32 GPU-only ({:.0} ms) >> int8 split ({:.0} ms)",
@@ -519,10 +311,19 @@ mod tests {
                             nn_dev: DeviceKind::EdgeTpu,
                         },
                     );
-                    let c = p.cost(&cfg, n, 1, false);
+                    let c = p.cost(&cfg, n, 1, false).unwrap();
                     assert!(c.total_ms > 0.0, "{ds}/{v:?}/int8={int8}");
                 }
             }
         }
+    }
+
+    #[test]
+    fn malformed_config_is_an_error_not_a_panic() {
+        let p = planner();
+        let mut cfg = split_cfg();
+        cfg.dataset = "nosuch".to_string();
+        assert!(p.cost(&cfg, 2048, 1, false).is_err());
+        assert!(p.capacity_rps(&cfg, 2048, 4).is_err());
     }
 }

@@ -16,7 +16,11 @@
 //!   accelerators never burn time on work that is already dead (doing so is
 //!   what collapses goodput in the no-policy baseline).
 
+use anyhow::Result;
+
 use crate::coordinator::DetectorConfig;
+use crate::graph::StageGraph;
+use crate::runtime::Manifest;
 
 use super::loadgen::Request;
 
@@ -57,10 +61,23 @@ impl SloPolicy {
 /// heads kept at role-based fidelity (the paper's accuracy-preserving
 /// scheme) — plus 2D segmentation reuse. The planner is additionally given
 /// `skip_seg = true` and the reduced [`degraded_points`] budget.
+///
+/// At the graph level this is the quant-rewrite pass
+/// ([`degraded_graph`]); this function is its config-level view for
+/// callers that rebuild the graph anyway (different point budget).
 pub fn degraded_config(cfg: &DetectorConfig) -> DetectorConfig {
     let mut fast = cfg.clone();
     fast.scheme = cfg.scheme.degraded();
     fast
+}
+
+/// The degrade move as a spec rewrite over the stage graph's nodes:
+/// the same topology with every NN node's artifact, precision, workload,
+/// device and quant spec re-derived from the degraded `QuantScheme`
+/// ([`StageGraph::quant_rewrite`]). Point-op nodes and dependency edges
+/// are untouched — degradation swaps specs, it never reshapes the DAG.
+pub fn degraded_graph(m: &Manifest, full: &StageGraph) -> Result<StageGraph> {
+    full.quant_rewrite(m, full.cfg().scheme.degraded())
 }
 
 /// Point budget of the degraded fast path: half the cloud, floored so the
@@ -185,6 +202,29 @@ mod tests {
         // artifact naming still resolves (backbone granularity is a spec
         // refinement, not a new artifact set)
         assert_eq!(fast.seg_art(), "synrgbd_seg_int8");
+    }
+
+    #[test]
+    fn degraded_graph_is_the_quant_rewrite_of_the_full_graph() {
+        let cfg = DetectorConfig::new(
+            "synrgbd",
+            Variant::PointSplit,
+            false,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        );
+        let m = Manifest::synthetic();
+        let full = StageGraph::build(&m, &cfg, 2048, false).expect("full graph");
+        let fast = degraded_graph(&m, &full).expect("degraded graph");
+        // identical to rebuilding from the config-level view
+        let rebuilt = StageGraph::build(&m, &degraded_config(&cfg), 2048, false).expect("rebuild");
+        assert_eq!(fast.specs(), rebuilt.specs());
+        assert_eq!(fast.fingerprint(), rebuilt.fingerprint());
+        // same topology, swapped specs: deps match node for node
+        assert_eq!(full.nodes.len(), fast.nodes.len());
+        for (a, b) in full.nodes.iter().zip(fast.nodes.iter()) {
+            assert_eq!(a.spec.name, b.spec.name);
+            assert_eq!(a.spec.deps, b.spec.deps);
+        }
     }
 
     #[test]

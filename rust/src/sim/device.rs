@@ -73,6 +73,10 @@ pub struct Device {
     pub nn_int8_flops_per_ms: Option<f64>,
     /// memory bandwidth bytes/ms for the irregular point-op traffic
     pub mem_bytes_per_ms: f64,
+    /// working-set capacity a single stage may stream through this device
+    /// (placement-search constraint; the EdgeTPU's on-chip SRAM is the
+    /// binding one — oversized stages must stay off it)
+    pub mem_capacity_bytes: u64,
     /// interconnect: bytes/ms and per-transfer setup cost to reach this
     /// device from the host side
     pub link_bytes_per_ms: f64,
@@ -80,15 +84,20 @@ pub struct Device {
 }
 
 impl Device {
-    /// ARM A57 quad-core: both op kinds, slowly.
+    /// ARM A57 quad-core: both op kinds, slowly. NN rates are fitted to the
+    /// paper's Fig. 10 cross-pairing ratios (GPU-CPU ≈ 3.2x GPU-EdgeTPU,
+    /// CPU-CPU ≈ 2.1x CPU-EdgeTPU): the CPU lane must be slow enough that
+    /// pairing it as the NN device loses to the EdgeTPU despite the
+    /// EdgeTPU's 20 ms/transfer PCIe setup.
     pub fn cpu() -> Device {
         Device {
             kind: DeviceKind::Cpu,
             overhead_ms: 1.0,
             pointop_flops_per_ms: Some(18_000.0),       // ~18 MFLOP/s eff (irregular)
-            nn_fp32_flops_per_ms: Some(600_000.0),      // 0.6 GFLOP/s
-            nn_int8_flops_per_ms: Some(1_000_000.0),    // 1 GOP/s
+            nn_fp32_flops_per_ms: Some(160_000.0),      // 0.16 GFLOP/s eff (TF on A57)
+            nn_int8_flops_per_ms: Some(250_000.0),      // 0.25 GOP/s eff (TFLite)
             mem_bytes_per_ms: 18_000.0,
+            mem_capacity_bytes: 4_000_000_000,          // 4 GB shared LPDDR4
             link_bytes_per_ms: f64::INFINITY,           // shares DRAM
             link_overhead_ms: 0.0,
         }
@@ -108,6 +117,7 @@ impl Device {
             nn_fp32_flops_per_ms: Some(50_000.0),       // 50 MFLOP/s eff (TF)
             nn_int8_flops_per_ms: Some(50_000.0),       // Maxwell: no int8 gain
             mem_bytes_per_ms: 35_000.0,                 // 35 MB/s eff for gathers
+            mem_capacity_bytes: 4_000_000_000,          // unified 4 GB with the CPU
             link_bytes_per_ms: f64::INFINITY,           // unified memory
             link_overhead_ms: 0.0,
         }
@@ -124,6 +134,7 @@ impl Device {
             nn_fp32_flops_per_ms: None,
             nn_int8_flops_per_ms: Some(1_800_000.0),    // 1.8 GOP/s eff on tiny nets
             mem_bytes_per_ms: 500_000.0,
+            mem_capacity_bytes: 8_000_000,              // 8 MB on-chip SRAM
             link_bytes_per_ms: 500_000.0,               // 0.5 GB/s PCIe Gen2 x1
             link_overhead_ms: 20.0,                     // per-transfer setup
         }
@@ -146,6 +157,14 @@ impl Device {
                 Precision::Int8 => self.nn_int8_flops_per_ms.is_some(),
             },
         }
+    }
+
+    /// Does a stage's working set fit this device's memory capacity?
+    /// (Placement-search constraint, checked per stage: capability says
+    /// whether the device can run the op at all, `fits` whether this
+    /// particular workload's streamed bytes are admissible.)
+    pub fn fits(&self, w: &Workload) -> bool {
+        w.mem_bytes <= self.mem_capacity_bytes
     }
 
     /// Compute time (ms) at a precision, excluding interconnect transfers.
@@ -247,6 +266,21 @@ mod tests {
         let t = Device::edgetpu().compute_ms(&nn(flops), Precision::Int8)
             + Device::edgetpu().transfer_ms(wire);
         assert!((t - 47.0).abs() < 15.0, "SA1 EdgeTPU ~47ms (paper Table 12), got {t:.0}");
+    }
+
+    #[test]
+    fn memory_capacity_gates_placement() {
+        let t = Device::edgetpu();
+        let small = Workload {
+            kind: WorkloadKind::NeuralNet,
+            flops: 1_000_000,
+            mem_bytes: 1_000_000,
+            wire_bytes: 0,
+        };
+        let huge = Workload { mem_bytes: 1_000_000_000, ..small };
+        assert!(t.fits(&small), "1 MB stage fits the EdgeTPU SRAM");
+        assert!(!t.fits(&huge), "1 GB stage cannot stream through the EdgeTPU");
+        assert!(Device::gpu().fits(&huge), "unified-memory GPU takes it");
     }
 
     #[test]

@@ -14,4 +14,4 @@ pub mod device;
 pub mod schedule;
 
 pub use device::{Device, DeviceKind, Precision, Workload, WorkloadKind};
-pub use schedule::{ScheduleSim, StageSpec, Timeline};
+pub use schedule::{cost_of, PlanCost, ScheduleSim, StageSpec, Timeline};

@@ -30,6 +30,8 @@ pub struct StageSpec {
 pub struct StageInterval {
     pub name: String,
     pub device: DeviceKind,
+    /// numeric regime the stage executed at (from its [`StageSpec`])
+    pub precision: Precision,
     /// transfer start (equals compute start when no transfer needed)
     pub start_ms: f64,
     pub compute_start_ms: f64,
@@ -52,6 +54,43 @@ impl Timeline {
 
     pub fn stage(&self, name: &str) -> Option<&StageInterval> {
         self.stages.iter().find(|s| s.name == name)
+    }
+}
+
+/// Per-batch cost summary extracted from a simulated [`Timeline`] — a pure
+/// reduction, so it lives with the simulator (the serving planner and the
+/// placement search both consume it).
+#[derive(Debug, Clone, Copy)]
+pub struct PlanCost {
+    /// Critical-path latency of the batch, ms.
+    pub total_ms: f64,
+    pub busy_gpu_ms: f64,
+    pub busy_npu_ms: f64,
+    pub busy_cpu_ms: f64,
+    /// Total interconnect time charged, ms.
+    pub comm_ms: f64,
+    /// Largest per-device occupancy (compute + transfers), ms. In steady
+    /// state the pipeline admits a new batch every `bottleneck_ms`, so this
+    /// sets the gateway's service rate while `total_ms` sets its latency.
+    pub bottleneck_ms: f64,
+}
+
+/// Reduce a simulated timeline to the dispatcher's cost summary.
+pub fn cost_of(tl: &Timeline) -> PlanCost {
+    let busy = |k: DeviceKind| tl.busy_ms.get(&k).copied().unwrap_or(0.0);
+    let comm = |k: DeviceKind| tl.comm_ms.get(&k).copied().unwrap_or(0.0);
+    let occupancy = |k: DeviceKind| busy(k) + comm(k);
+    let bottleneck = [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::EdgeTpu]
+        .into_iter()
+        .map(occupancy)
+        .fold(0.0, f64::max);
+    PlanCost {
+        total_ms: tl.total_ms,
+        busy_gpu_ms: busy(DeviceKind::Gpu),
+        busy_npu_ms: busy(DeviceKind::EdgeTpu),
+        busy_cpu_ms: busy(DeviceKind::Cpu),
+        comm_ms: tl.comm_ms.values().sum(),
+        bottleneck_ms: bottleneck.max(1e-6),
     }
 }
 
@@ -176,6 +215,7 @@ impl ScheduleSim {
             done[i] = Some(StageInterval {
                 name: s.name.clone(),
                 device: s.device,
+                precision: s.precision,
                 start_ms: start,
                 compute_start_ms: compute_start,
                 end_ms: end,

@@ -1,0 +1,166 @@
+//! The property the stage-graph IR exists to guarantee: the serving
+//! planner's simulated timeline and the executing pipeline's timeline are
+//! **identical, stage for stage** — same names, same devices, same
+//! precisions, same start/end instants — across every `Schedule` ×
+//! `Variant` combination. Both sides obtain their `StageSpec` sequence
+//! from the same `StageGraph` constructor, so any divergence here means a
+//! pass mutated what it should only have lowered.
+
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::{generate_scene, SYNRGBD};
+use pointsplit::runtime::Runtime;
+use pointsplit::serving::ServicePlanner;
+use pointsplit::sim::{DeviceKind, Timeline};
+
+const VARIANTS: [Variant; 4] =
+    [Variant::VoteNet, Variant::PointPainting, Variant::RandomSplit, Variant::PointSplit];
+
+fn schedules() -> Vec<Schedule> {
+    let pairs = [
+        (DeviceKind::Gpu, DeviceKind::EdgeTpu),
+        (DeviceKind::Cpu, DeviceKind::EdgeTpu),
+        (DeviceKind::Gpu, DeviceKind::Cpu),
+    ];
+    let mut out = vec![
+        Schedule::SingleDevice(DeviceKind::Gpu),
+        Schedule::SingleDevice(DeviceKind::Cpu),
+    ];
+    for (pd, nd) in pairs {
+        out.push(Schedule::Sequential { point_dev: pd, nn_dev: nd });
+        out.push(Schedule::Pipelined { point_dev: pd, nn_dev: nd });
+    }
+    out
+}
+
+fn assert_timeline_eq(pipe: &Timeline, plan: &Timeline, ctx: &str) {
+    assert_eq!(pipe.stages.len(), plan.stages.len(), "{ctx}: stage count diverged");
+    for (a, b) in pipe.stages.iter().zip(plan.stages.iter()) {
+        assert_eq!(a.name, b.name, "{ctx}: stage order diverged");
+        assert_eq!(a.device, b.device, "{ctx}: '{}' placed differently", a.name);
+        assert_eq!(a.precision, b.precision, "{ctx}: '{}' precision diverged", a.name);
+        assert_eq!(
+            a.start_ms.to_bits(),
+            b.start_ms.to_bits(),
+            "{ctx}: '{}' start {} vs {}",
+            a.name,
+            a.start_ms,
+            b.start_ms
+        );
+        assert_eq!(
+            a.end_ms.to_bits(),
+            b.end_ms.to_bits(),
+            "{ctx}: '{}' end {} vs {}",
+            a.name,
+            a.end_ms,
+            b.end_ms
+        );
+    }
+    assert_eq!(pipe.total_ms.to_bits(), plan.total_ms.to_bits(), "{ctx}: total_ms");
+}
+
+/// The acceptance property: planner timeline == pipeline timeline,
+/// stage for stage, for every Schedule × Variant (INT8 — the paper's
+/// operating point).
+#[test]
+fn planner_timeline_matches_pipeline_every_schedule_and_variant() {
+    let rt = Runtime::synthetic();
+    let planner = ServicePlanner::synthetic();
+    let scene = generate_scene(17, &SYNRGBD);
+    for schedule in schedules() {
+        for variant in VARIANTS {
+            let cfg = DetectorConfig::new("synrgbd", variant, true, schedule);
+            let ctx = format!("{variant:?} / {schedule:?} / int8");
+            let out = ScenePipeline::new(&rt, cfg.clone())
+                .run(&scene, 17)
+                .unwrap_or_else(|e| panic!("{ctx}: pipeline failed: {e:#}"));
+            // the DAGs are the same object...
+            let planned = planner.stages(&cfg, SYNRGBD.num_points, false).unwrap();
+            assert_eq!(planned, out.stage_specs, "{ctx}: specs diverged");
+            // ...and so are the timelines, bit for bit
+            let plan_tl = planner.timeline(&cfg, SYNRGBD.num_points, 1, false).unwrap();
+            assert_timeline_eq(&out.timeline, &plan_tl, &ctx);
+        }
+    }
+}
+
+/// Same property at fp32 — exercises the per-precision device fallback
+/// (fp32 NN stages cannot sit on the EdgeTPU).
+#[test]
+fn planner_timeline_matches_pipeline_fp32() {
+    let rt = Runtime::synthetic();
+    let planner = ServicePlanner::synthetic();
+    let scene = generate_scene(23, &SYNRGBD);
+    for schedule in [
+        Schedule::SingleDevice(DeviceKind::Gpu),
+        Schedule::Sequential { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    ] {
+        for variant in VARIANTS {
+            let cfg = DetectorConfig::new("synrgbd", variant, false, schedule);
+            let ctx = format!("{variant:?} / {schedule:?} / fp32");
+            let out = ScenePipeline::new(&rt, cfg.clone())
+                .run(&scene, 23)
+                .unwrap_or_else(|e| panic!("{ctx}: pipeline failed: {e:#}"));
+            let plan_tl = planner.timeline(&cfg, SYNRGBD.num_points, 1, false).unwrap();
+            assert_timeline_eq(&out.timeline, &plan_tl, &ctx);
+            // fp32 NN stages must have fallen back off the EdgeTPU
+            for s in &out.timeline.stages {
+                if s.precision == pointsplit::sim::Precision::Fp32 {
+                    assert_ne!(s.device, DeviceKind::EdgeTpu, "{ctx}: '{}'", s.name);
+                }
+            }
+        }
+    }
+}
+
+/// Consecutive matching (skip_seg) preserves the equivalence: the pipeline
+/// run that reuses previous-frame scores matches the planner's
+/// skip_seg graph.
+#[test]
+fn skip_seg_timelines_match() {
+    let rt = Runtime::synthetic();
+    let planner = ServicePlanner::synthetic();
+    let scene = generate_scene(31, &SYNRGBD);
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let pipe = ScenePipeline::new(&rt, cfg.clone());
+    let (first, scores) = pipe.run_with_scores(&scene, 31, None).unwrap();
+    assert_timeline_eq(
+        &first.timeline,
+        &planner.timeline(&cfg, SYNRGBD.num_points, 1, false).unwrap(),
+        "full frame",
+    );
+    let scores = scores.expect("painted run returns scores");
+    let (second, _) = pipe.run_with_scores(&scene, 31, Some(&scores)).unwrap();
+    assert_timeline_eq(
+        &second.timeline,
+        &planner.timeline(&cfg, SYNRGBD.num_points, 1, true).unwrap(),
+        "consecutive-matching frame",
+    );
+}
+
+/// Mixed schemes (fp32 heads over an int8 backbone) keep the equivalence —
+/// the per-stage placement decision is part of the shared graph, not of
+/// either consumer.
+#[test]
+fn mixed_scheme_timelines_match() {
+    let rt = Runtime::synthetic();
+    let planner = ServicePlanner::synthetic();
+    let scene = generate_scene(41, &SYNRGBD);
+    let mut cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    cfg.set_head_precision("fp32").unwrap();
+    let out = ScenePipeline::new(&rt, cfg.clone()).run(&scene, 41).unwrap();
+    let plan_tl = planner.timeline(&cfg, SYNRGBD.num_points, 1, false).unwrap();
+    assert_timeline_eq(&out.timeline, &plan_tl, "mixed scheme");
+    let vote = out.timeline.stage("vote").expect("vote interval");
+    assert_eq!(vote.device, DeviceKind::Gpu, "fp32 vote falls back to the point device");
+}

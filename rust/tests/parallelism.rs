@@ -131,7 +131,7 @@ fn sa4_waits_for_both_pipelines() {
 #[test]
 fn planner_sa4_waits_for_both_pipelines() {
     let planner = ServicePlanner::synthetic();
-    let stages = planner.stages(&cfg(Variant::PointSplit, pipelined()), 2048, false);
+    let stages = planner.stages(&cfg(Variant::PointSplit, pipelined()), 2048, false).unwrap();
     let idx = |name: &str| stages.iter().position(|s| s.name == name).unwrap();
     let deps = &stages[idx("sa4_pm")].deps;
     assert!(
@@ -151,7 +151,7 @@ fn pipeline_dag_matches_serving_planner() {
         let c = cfg(variant, pipelined());
         let scene = generate_scene(11, &SYNRGBD);
         let out = ScenePipeline::new(&rt, c.clone()).run(&scene, 11).unwrap();
-        let planned = planner.stages(&c, SYNRGBD.num_points, false);
+        let planned = planner.stages(&c, SYNRGBD.num_points, false).unwrap();
         assert_eq!(planned, out.stage_specs, "{variant:?}: planner DAG drifted from pipeline");
     }
 }
@@ -182,7 +182,7 @@ fn traffic_gateway_executes_functionally_offline() {
     let planner = ServicePlanner::synthetic();
     let c = cfg(Variant::PointSplit, pipelined());
     let ds = data::dataset("synrgbd").unwrap();
-    let cap = planner.capacity_rps(&c, ds.num_points, 2);
+    let cap = planner.capacity_rps(&c, ds.num_points, 2).unwrap();
     let sc = TrafficScenario {
         name: "functional-offline".into(),
         configs: vec![c],
@@ -199,7 +199,7 @@ fn traffic_gateway_executes_functionally_offline() {
     };
     let rt = Runtime::synthetic();
     let exec = PipelineExecutor::with_workers(&rt, ds, 2);
-    let rep = run_traffic(&sc, &planner, Some(&exec));
+    let rep = run_traffic(&sc, &planner, Some(&exec)).unwrap();
     assert!(rep.completed > 0, "no requests completed");
     assert!(
         rep.map_25.is_some(),

@@ -380,7 +380,7 @@ fn prop_dispatch_exactly_once() {
     let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
     let cfg_a = DetectorConfig::new("synrgbd", Variant::PointSplit, true, sched);
     let cfg_b = DetectorConfig::new("synrgbd", Variant::VoteNet, true, sched);
-    let base_cap = planner.capacity_rps(&cfg_a, 2048, 4);
+    let base_cap = planner.capacity_rps(&cfg_a, 2048, 4).unwrap();
     check("dispatch-exactly-once", PropConfig { cases: 12, seed: 77 }, |rng, size| {
         let policy = [SloPolicy::None, SloPolicy::Shed, SloPolicy::Degrade][rng.below(3)];
         let mut load = LoadGen::simple(
@@ -400,7 +400,10 @@ fn prop_dispatch_exactly_once() {
             batch: BatchPolicy { max_batch: 1 + rng.below(6), max_wait_ms: rng.f64() * 60.0 },
             policy,
         };
-        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+        let (rep, outcomes) = match run_traffic_trace(&sc, &planner, None) {
+            Ok(v) => v,
+            Err(e) => return Err(format!("traffic run failed: {e:#}")),
+        };
         if outcomes.len() != rep.arrivals {
             return Err(format!("{} outcomes for {} arrivals", outcomes.len(), rep.arrivals));
         }

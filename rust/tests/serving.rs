@@ -28,7 +28,7 @@ fn scenario(
 ) -> TrafficScenario {
     let cfg = split_cfg();
     let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
-    let cap = planner.capacity_rps(&cfg, 2048, batch.max_batch);
+    let cap = planner.capacity_rps(&cfg, 2048, batch.max_batch).unwrap();
     TrafficScenario {
         name: format!("it-{load_mult}x"),
         configs: vec![cfg],
@@ -59,7 +59,7 @@ fn poisson_and_bursty_run_end_to_end() {
     let planner = ServicePlanner::synthetic();
     for pattern_of in [poisson as fn(f64) -> ArrivalPattern, bursty] {
         let sc = scenario(&planner, pattern_of, 0.8, SloPolicy::Degrade, 5);
-        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+        let (rep, outcomes) = run_traffic_trace(&sc, &planner, None).unwrap();
         assert!(rep.arrivals > 10, "{}: no traffic generated", rep.pattern);
         assert_eq!(outcomes.len(), rep.arrivals);
         assert!(rep.completed > 0);
@@ -79,9 +79,13 @@ fn latency_includes_queueing_delay() {
     // under heavy load, end-to-end latency must exceed pure service time:
     // queueing + batching delay is charged into the simulated clock
     let planner = ServicePlanner::synthetic();
-    let service = planner.cost(&split_cfg(), 2048, 4, false).total_ms;
-    let calm = run_traffic(&scenario(&planner, poisson, 0.2, SloPolicy::None, 11), &planner, None);
-    let busy = run_traffic(&scenario(&planner, poisson, 1.6, SloPolicy::None, 11), &planner, None);
+    let service = planner.cost(&split_cfg(), 2048, 4, false).unwrap().total_ms;
+    let calm =
+        run_traffic(&scenario(&planner, poisson, 0.2, SloPolicy::None, 11), &planner, None)
+            .unwrap();
+    let busy =
+        run_traffic(&scenario(&planner, poisson, 1.6, SloPolicy::None, 11), &planner, None)
+            .unwrap();
     assert!(
         busy.latency_ms.p95 > calm.latency_ms.p95 + 0.25 * service,
         "overload p95 ({:.0} ms) must reflect queueing beyond calm p95 ({:.0} ms)",
@@ -94,7 +98,9 @@ fn latency_includes_queueing_delay() {
 #[test]
 fn overload_drops_are_accounted() {
     let planner = ServicePlanner::synthetic();
-    let rep = run_traffic(&scenario(&planner, poisson, 2.0, SloPolicy::None, 23), &planner, None);
+    let rep =
+        run_traffic(&scenario(&planner, poisson, 2.0, SloPolicy::None, 23), &planner, None)
+            .unwrap();
     assert!(
         rep.rejected_full + rep.expired > 0,
         "2x overload with a bounded queue must drop something"
@@ -106,9 +112,15 @@ fn overload_drops_are_accounted() {
 fn degrade_policy_wins_under_overload_both_patterns() {
     let planner = ServicePlanner::synthetic();
     for pattern_of in [poisson as fn(f64) -> ArrivalPattern, bursty] {
-        let none = run_traffic(&scenario(&planner, pattern_of, 2.0, SloPolicy::None, 31), &planner, None);
-        let deg =
-            run_traffic(&scenario(&planner, pattern_of, 2.0, SloPolicy::Degrade, 31), &planner, None);
+        let none =
+            run_traffic(&scenario(&planner, pattern_of, 2.0, SloPolicy::None, 31), &planner, None)
+                .unwrap();
+        let deg = run_traffic(
+            &scenario(&planner, pattern_of, 2.0, SloPolicy::Degrade, 31),
+            &planner,
+            None,
+        )
+        .unwrap();
         assert!(
             deg.goodput_rps > none.goodput_rps,
             "{}: degrade goodput {:.2} must beat none {:.2}",
@@ -130,7 +142,9 @@ fn degrade_policy_wins_under_overload_both_patterns() {
 #[test]
 fn shed_policy_never_dispatches_doomed_work() {
     let planner = ServicePlanner::synthetic();
-    let rep = run_traffic(&scenario(&planner, poisson, 2.0, SloPolicy::Shed, 37), &planner, None);
+    let rep =
+        run_traffic(&scenario(&planner, poisson, 2.0, SloPolicy::Shed, 37), &planner, None)
+            .unwrap();
     // everything dispatched was predicted on time; lateness can only come
     // from the (conservative) prediction itself, so on-time must dominate
     assert!(rep.shed_slo > 0, "2x overload must shed");
@@ -147,7 +161,7 @@ fn high_priority_class_served_first() {
     let planner = ServicePlanner::synthetic();
     let mut sc = scenario(&planner, poisson, 1.5, SloPolicy::None, 41);
     sc.load.hi_frac = 0.3;
-    let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+    let (rep, outcomes) = run_traffic_trace(&sc, &planner, None).unwrap();
     assert!(rep.arrivals > 20);
     // regenerate the (deterministic) trace to recover each id's class
     let arrivals = sc.load.generate();
@@ -175,7 +189,7 @@ fn mixed_keys_batch_separately() {
     let sched = Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu };
     let cfg_a = DetectorConfig::new("synrgbd", Variant::PointSplit, true, sched);
     let cfg_b = DetectorConfig::new("synrgbd", Variant::VoteNet, true, sched);
-    let cap = planner.capacity_rps(&cfg_a, 2048, 4);
+    let cap = planner.capacity_rps(&cfg_a, 2048, 4).unwrap();
     let mut load = LoadGen::simple(ArrivalPattern::Poisson { rate_rps: cap }, 20_000.0, 1_500.0, 47);
     load.mix = vec![1.0, 1.0];
     let sc = TrafficScenario {
@@ -187,7 +201,7 @@ fn mixed_keys_batch_separately() {
         batch: BatchPolicy { max_batch: 4, max_wait_ms: 25.0 },
         policy: SloPolicy::Degrade,
         };
-    let (rep, outcomes) = run_traffic_trace(&sc, &planner, None);
+    let (rep, outcomes) = run_traffic_trace(&sc, &planner, None).unwrap();
     assert_eq!(outcomes.len(), rep.arrivals);
     assert!(rep.completed > 0);
     assert_eq!(rep.completed + rep.rejected_full + rep.expired + rep.shed_slo, rep.arrivals);
@@ -197,8 +211,8 @@ fn mixed_keys_batch_separately() {
 fn report_capacity_consistent_with_planner() {
     let planner = ServicePlanner::synthetic();
     let sc = scenario(&planner, poisson, 1.0, SloPolicy::None, 53);
-    let rep = run_traffic(&sc, &planner, None);
-    let cap = planner.capacity_rps(&split_cfg(), 2048, 4);
+    let rep = run_traffic(&sc, &planner, None).unwrap();
+    let cap = planner.capacity_rps(&split_cfg(), 2048, 4).unwrap();
     assert!((rep.capacity_rps - cap).abs() < 1e-9);
     assert!((rep.offered_rps - cap).abs() / cap < 1e-9);
 }
