@@ -1,0 +1,244 @@
+//! Cluster scaling sweep: goodput, SLO attainment, and cost as the fleet
+//! grows, plus the config-affinity vs random routing comparison at equal
+//! offered load (the whole point of affinity: same-config traffic lands on
+//! the same boxes, so per-box dynamic batchers still coalesce).
+//!
+//! Runs entirely on the simulated clock with the synthetic manifest.
+//!
+//! ```bash
+//! cargo bench --bench cluster_scale
+//! POINTSPLIT_BENCH_SCENES=120 cargo bench --bench cluster_scale   # longer windows
+//! ```
+
+#[allow(dead_code)]
+mod common;
+
+use pointsplit::bench::{write_bench_json, Table};
+use pointsplit::cluster::{
+    config_mix, plan_box, run_cluster, ClusterReport, ClusterScenario, ClusterSpec, RouterPolicy,
+};
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::serving::{ArrivalPattern, BatchPolicy, LoadGen, ServicePlanner, SloPolicy};
+use pointsplit::sim::DeviceKind;
+use pointsplit::util::json::Json;
+
+fn base_cfg() -> DetectorConfig {
+    DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    )
+}
+
+/// Sum of per-box planned capacities for a spec (what run_cluster reports
+/// as `capacity_rps`), computed up front so offered load can be set
+/// relative to it.
+fn fleet_capacity(
+    planner: &ServicePlanner,
+    spec: &ClusterSpec,
+    configs: &[DetectorConfig],
+    batch: &BatchPolicy,
+    mix: &[f64],
+) -> f64 {
+    spec.boxes
+        .iter()
+        .map(|bt| {
+            plan_box(planner, bt, configs, 2048, batch, mix)
+                .expect("synthetic planner plans every box type")
+                .capacity_rps
+        })
+        .sum()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    planner: &ServicePlanner,
+    spec: ClusterSpec,
+    configs: Vec<DetectorConfig>,
+    rate_rps: f64,
+    duration_s: f64,
+    deadline_ms: f64,
+    policy: SloPolicy,
+    router: RouterPolicy,
+) -> ClusterReport {
+    let n = configs.len();
+    let mut load = LoadGen::simple(
+        ArrivalPattern::Poisson { rate_rps },
+        duration_s * 1000.0,
+        deadline_ms,
+        4242,
+    );
+    load.mix = vec![1.0; n];
+    let sc = ClusterScenario {
+        name: format!("{}boxes-{}", spec.boxes.len(), router.name()),
+        spec,
+        configs,
+        num_points: 2048,
+        queue_capacity: 16,
+        load,
+        batch: BatchPolicy { max_batch: 4, max_wait_ms: 25.0 },
+        policy,
+        router,
+        router_seed: 4242,
+        faults: Vec::new(),
+        autoscale: None,
+    };
+    run_cluster(&sc, planner).expect("cluster run").report
+}
+
+fn report_row(spec_str: &str, r: &ClusterReport) -> Json {
+    Json::obj(vec![
+        ("spec", Json::Str(spec_str.to_string())),
+        ("router", Json::Str(r.router.to_string())),
+        ("boxes", Json::Num(r.boxes.len() as f64)),
+        ("capacity_rps", Json::Num(r.capacity_rps)),
+        ("offered_rps", Json::Num(r.offered_rps)),
+        ("goodput_rps", Json::Num(r.goodput_rps)),
+        ("slo_attainment", Json::Num(r.slo_attainment)),
+        ("p99_ms", Json::Num(r.latency_ms.p99)),
+        ("mean_batch", Json::Num(r.mean_batch)),
+        ("routing_imbalance", Json::Num(r.routing_imbalance)),
+        ("cost_units", Json::Num(r.cost_units)),
+    ])
+}
+
+fn main() {
+    let planner = ServicePlanner::synthetic();
+    let configs = config_mix(&base_cfg(), 4);
+    let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
+    let mix = vec![1.0; configs.len()];
+    // reuse the shared bench budget knob: here it scales the traffic window
+    let duration_s = common::scene_budget(40) as f64;
+    println!(
+        "cluster_scale: 4 detector configs, batch 4, {duration_s:.0}s simulated windows, \
+         affinity router width 2\n"
+    );
+
+    // ---- part 1: fleet scaling sweep at 0.8x offered load ----------------
+    let specs = [
+        "gpu+edgetpu",
+        "gpu+edgetpu:2,gpu:1",
+        "gpu+edgetpu:2,gpu:2,cpu+edgetpu:2",
+        "gpu+edgetpu:4,gpu:2,cpu+edgetpu:2",
+    ];
+    let mut t = Table::new(&[
+        "spec",
+        "boxes",
+        "capacity rps",
+        "offered rps",
+        "goodput rps",
+        "SLO%",
+        "p99 ms",
+        "mean batch",
+        "imbalance",
+        "cost units",
+    ]);
+    let mut scale_rows: Vec<Json> = Vec::new();
+    for spec_str in specs {
+        let spec = ClusterSpec::parse(spec_str).expect("valid bench spec");
+        let cap = fleet_capacity(&planner, &spec, &configs, &batch, &mix);
+        let r = run_one(
+            &planner,
+            spec,
+            configs.clone(),
+            cap * 0.8,
+            duration_s,
+            1_000.0,
+            SloPolicy::Degrade,
+            RouterPolicy::ConfigAffinity,
+        );
+        t.row(vec![
+            spec_str.to_string(),
+            r.boxes.len().to_string(),
+            format!("{:.1}", r.capacity_rps),
+            format!("{:.1}", r.offered_rps),
+            format!("{:.2}", r.goodput_rps),
+            format!("{:.1}", 100.0 * r.slo_attainment),
+            format!("{:.0}", r.latency_ms.p99),
+            format!("{:.2}", r.mean_batch),
+            format!("{:.2}", r.routing_imbalance),
+            format!("{:.0}", r.cost_units),
+        ]);
+        scale_rows.push(report_row(spec_str, &r));
+    }
+    t.print("cluster scaling — affinity router, degrade policy, 0.8x offered load");
+    println!();
+
+    // ---- part 2: config-affinity vs random routing at equal load ---------
+    // Identical fleet, identical arrival trace; only the router differs.
+    // Affinity should batch better (same-config traffic coalesces on the
+    // same boxes) and therefore carry more goodput.
+    let spec_str = "gpu+edgetpu:6";
+    let spec = ClusterSpec::parse(spec_str).expect("valid bench spec");
+    let cap = fleet_capacity(&planner, &spec, &configs, &batch, &mix);
+    let rate = cap * 0.9;
+    let affinity = run_one(
+        &planner,
+        spec.clone(),
+        configs.clone(),
+        rate,
+        (duration_s * 2.0).max(60.0),
+        2_500.0,
+        SloPolicy::None,
+        RouterPolicy::ConfigAffinity,
+    );
+    let random = run_one(
+        &planner,
+        spec,
+        configs.clone(),
+        rate,
+        (duration_s * 2.0).max(60.0),
+        2_500.0,
+        SloPolicy::None,
+        RouterPolicy::Random,
+    );
+    let mut t = Table::new(&[
+        "router",
+        "offered rps",
+        "goodput rps",
+        "SLO%",
+        "p99 ms",
+        "mean batch",
+        "imbalance",
+    ]);
+    for r in [&affinity, &random] {
+        t.row(vec![
+            r.router.to_string(),
+            format!("{:.1}", r.offered_rps),
+            format!("{:.2}", r.goodput_rps),
+            format!("{:.1}", 100.0 * r.slo_attainment),
+            format!("{:.0}", r.latency_ms.p99),
+            format!("{:.2}", r.mean_batch),
+            format!("{:.2}", r.routing_imbalance),
+        ]);
+    }
+    t.print(&format!(
+        "routing policy — {spec_str}, 0.9x offered load, identical arrival trace"
+    ));
+    let ok = affinity.mean_batch > random.mean_batch && affinity.goodput_rps > random.goodput_rps;
+    println!(
+        "affinity vs random: mean batch {:.2} vs {:.2}, goodput {:.2} vs {:.2} rps  [{}]",
+        affinity.mean_batch,
+        random.mean_batch,
+        affinity.goodput_rps,
+        random.goodput_rps,
+        if ok { "OK: affinity wins" } else { "REGRESSION" }
+    );
+
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("cluster_scale".to_string())),
+        ("duration_s", Json::Num(duration_s)),
+        ("num_configs", Json::Num(configs.len() as f64)),
+        ("scale", Json::Arr(scale_rows)),
+        (
+            "routing",
+            Json::obj(vec![
+                ("affinity", report_row(spec_str, &affinity)),
+                ("random", report_row(spec_str, &random)),
+                ("affinity_wins", Json::Bool(ok)),
+            ]),
+        ),
+    ]);
+    write_bench_json("BENCH_cluster.json", &payload);
+}

@@ -17,13 +17,14 @@
 #[allow(dead_code)]
 mod common;
 
-use pointsplit::bench::Table;
+use pointsplit::bench::{write_bench_json, Table};
 use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
 use pointsplit::serving::{
     run_traffic, ArrivalPattern, BatchPolicy, LoadGen, ServeTrafficReport, ServicePlanner,
     SloPolicy, TrafficScenario,
 };
 use pointsplit::sim::DeviceKind;
+use pointsplit::util::json::Json;
 
 fn run_one(
     planner: &ServicePlanner,
@@ -60,6 +61,7 @@ fn main() {
          {duration_s:.0}s simulated windows, deadline 1000 ms\n"
     );
 
+    let mut scenarios: Vec<Json> = Vec::new();
     for pattern_name in ["poisson", "bursty"] {
         let mut t = Table::new(&[
             "load",
@@ -99,6 +101,19 @@ fn main() {
                 slo.shed_slo.to_string(),
                 slo.degraded.to_string(),
             ]);
+            scenarios.push(Json::obj(vec![
+                ("pattern", Json::Str(pattern_name.to_string())),
+                ("load_mult", Json::Num(mult)),
+                ("offered_rps", Json::Num(none.offered_rps)),
+                ("p99_ms_none", Json::Num(none.latency_ms.p99)),
+                ("p99_ms_slo", Json::Num(slo.latency_ms.p99)),
+                ("goodput_rps_none", Json::Num(none.goodput_rps)),
+                ("goodput_rps_slo", Json::Num(slo.goodput_rps)),
+                ("slo_attainment_none", Json::Num(none.slo_attainment)),
+                ("slo_attainment_slo", Json::Num(slo.slo_attainment)),
+                ("shed_slo", Json::Num(slo.shed_slo as f64)),
+                ("degraded", Json::Num(slo.degraded as f64)),
+            ]));
             if mult == 2.0 {
                 worst = Some((none, slo));
             }
@@ -120,4 +135,14 @@ fn main() {
         }
         println!();
     }
+
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("serving_overload".to_string())),
+        ("capacity_rps", Json::Num(cap)),
+        ("duration_s", Json::Num(duration_s)),
+        ("deadline_ms", Json::Num(1000.0)),
+        ("batch_max", Json::Num(4.0)),
+        ("scenarios", Json::Arr(scenarios)),
+    ]);
+    write_bench_json("BENCH_serving.json", &payload);
 }

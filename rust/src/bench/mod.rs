@@ -2,8 +2,13 @@
 //!
 //! `bench_fn` runs warmup + timed iterations and reports mean/p50/p99.
 //! `Table` prints paper-style rows used by every `rust/benches/*` target.
+//! `write_bench_json` persists machine-readable `BENCH_*.json` payloads so
+//! bench trajectories survive re-anchors and regressions are diffable.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -84,6 +89,25 @@ impl Table {
         println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
         for r in &self.rows {
             println!("{}", line(r));
+        }
+    }
+}
+
+/// Write a machine-readable bench payload to `file` (e.g.
+/// `BENCH_serving.json`) in `POINTSPLIT_BENCH_DIR` (default: the current
+/// directory). Serialization failures are warned about, never fatal — a
+/// bench must still print its tables on a read-only checkout.
+pub fn write_bench_json(file: &str, payload: &Json) -> Option<PathBuf> {
+    let dir = std::env::var("POINTSPLIT_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = PathBuf::from(dir).join(file);
+    match std::fs::write(&path, format!("{payload}\n")) {
+        Ok(()) => {
+            println!("bench JSON written to {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("warning: could not write {}: {e}", path.display());
+            None
         }
     }
 }

@@ -1,0 +1,84 @@
+//! Reactive autoscaling: grow/shrink the fleet on observed queue depth.
+//!
+//! A deliberately simple threshold controller, split so the policy itself
+//! is a pure function ([`decide`]): the runner samples mean queue fill
+//! every `check_interval_ms`, and outside the cooldown window acts on the
+//! decision — scale-up provisions the box type with the best capacity per
+//! cost unit (after a `spawn_delay_ms` provisioning lag), scale-down
+//! retires the most recently added *idle* box (never one holding queued
+//! work, so scaling down cannot lose requests). The run's bill is the
+//! per-box cost-unit rate integrated over alive time.
+
+/// Autoscaler knobs — all times on the simulated clock.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalePolicy {
+    /// Sampling period for fleet queue depth.
+    pub check_interval_ms: f64,
+    /// Provisioning lag between a scale-up decision and the box joining.
+    pub spawn_delay_ms: f64,
+    /// Minimum time between consecutive scaling actions.
+    pub cooldown_ms: f64,
+    /// Scale up when mean queue fill (len/capacity) exceeds this.
+    pub up_depth_frac: f64,
+    /// Scale down when mean queue fill drops below this.
+    pub down_depth_frac: f64,
+    pub min_boxes: usize,
+    pub max_boxes: usize,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            check_interval_ms: 2_000.0,
+            spawn_delay_ms: 1_000.0,
+            cooldown_ms: 4_000.0,
+            up_depth_frac: 0.5,
+            down_depth_frac: 0.05,
+            min_boxes: 1,
+            max_boxes: 16,
+        }
+    }
+}
+
+/// Outcome of one autoscaler observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Up,
+    Down,
+    Hold,
+}
+
+/// Pure threshold policy: map (mean queue fill, provisioned box count) to
+/// a decision. `provisioned` counts alive boxes plus in-flight spawns so
+/// one burst cannot order `max_boxes` duplicates during the spawn lag.
+pub fn decide(p: &AutoscalePolicy, mean_depth_frac: f64, provisioned: usize) -> ScaleDecision {
+    if mean_depth_frac > p.up_depth_frac && provisioned < p.max_boxes {
+        ScaleDecision::Up
+    } else if mean_depth_frac < p.down_depth_frac && provisioned > p.min_boxes {
+        ScaleDecision::Down
+    } else {
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_drive_decisions() {
+        let p = AutoscalePolicy::default();
+        assert_eq!(decide(&p, 0.8, 2), ScaleDecision::Up);
+        assert_eq!(decide(&p, 0.01, 2), ScaleDecision::Down);
+        assert_eq!(decide(&p, 0.2, 2), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn bounds_are_respected() {
+        let p = AutoscalePolicy { min_boxes: 2, max_boxes: 3, ..AutoscalePolicy::default() };
+        assert_eq!(decide(&p, 0.9, 3), ScaleDecision::Hold, "at max_boxes");
+        assert_eq!(decide(&p, 0.0, 2), ScaleDecision::Hold, "at min_boxes");
+        assert_eq!(decide(&p, 0.9, 2), ScaleDecision::Up);
+        assert_eq!(decide(&p, 0.0, 3), ScaleDecision::Down);
+    }
+}

@@ -1,0 +1,155 @@
+//! Failure and straggler injection.
+//!
+//! Faults are scripted against the simulated clock. The model is
+//! deliberately simple and deterministic:
+//!
+//! - **Kill** is fail-stop at dispatch granularity: the box leaves the
+//!   fleet at `at_ms`, batches already dispatched complete (their
+//!   completion times were committed at dispatch), and everything still
+//!   queued is drained and pushed back through the router — no request is
+//!   ever lost to a fault.
+//! - **Slow** is a uniform service-time stretch (thermal throttling, a
+//!   noisy co-tenant): every batch the box dispatches during the window is
+//!   priced at `factor ×` its nominal cost ([`PlanCost::scaled`]).
+//!
+//! [`PlanCost::scaled`]: crate::sim::PlanCost::scaled
+
+use anyhow::{anyhow, Result};
+
+/// A scripted mid-run fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Fail-stop: the box leaves the fleet at `at_ms`.
+    Kill { box_id: usize, at_ms: f64 },
+    /// Straggler: service times stretch by `factor` in `[at_ms, until_ms)`.
+    Slow { box_id: usize, at_ms: f64, until_ms: f64, factor: f64 },
+}
+
+/// What the runner applies at an injection instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    Kill(usize),
+    /// Set the box's service-time multiplier (1.0 restores nominal speed).
+    SetSlow(usize, f64),
+}
+
+/// Parse a kill list `"1@15,2@20.5"`: box id `@` kill time in **seconds**.
+pub fn parse_kills(s: &str) -> Result<Vec<Fault>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (id, t) = part
+            .split_once('@')
+            .ok_or_else(|| anyhow!("bad kill spec '{part}' (want BOX@SECONDS)"))?;
+        let box_id: usize =
+            id.trim().parse().map_err(|_| anyhow!("bad box id in kill spec '{part}'"))?;
+        let at_s: f64 =
+            t.trim().parse().map_err(|_| anyhow!("bad kill time in '{part}'"))?;
+        if !at_s.is_finite() || at_s < 0.0 {
+            return Err(anyhow!("kill time must be a non-negative number of seconds: '{part}'"));
+        }
+        out.push(Fault::Kill { box_id, at_ms: at_s * 1000.0 });
+    }
+    Ok(out)
+}
+
+/// Parse a straggler list `"0@10x3:5"`: box 0, from second 10, runs 3×
+/// slower for 5 seconds. Comma-separated for multiple windows.
+pub fn parse_slows(s: &str) -> Result<Vec<Fault>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let err = || anyhow!("bad slow spec '{part}' (want BOX@SECONDSxFACTOR:DURATION)");
+        let (id, rest) = part.split_once('@').ok_or_else(err)?;
+        let (t, rest) = rest.split_once('x').ok_or_else(err)?;
+        let (factor, dur) = rest.split_once(':').ok_or_else(err)?;
+        let box_id: usize = id.trim().parse().map_err(|_| err())?;
+        let at_s: f64 = t.trim().parse().map_err(|_| err())?;
+        let factor: f64 = factor.trim().parse().map_err(|_| err())?;
+        let dur_s: f64 = dur.trim().parse().map_err(|_| err())?;
+        if !(at_s.is_finite() && factor.is_finite() && dur_s.is_finite())
+            || at_s < 0.0
+            || dur_s <= 0.0
+            || factor < 1.0
+        {
+            return Err(anyhow!(
+                "slow spec '{part}': need start >= 0s, duration > 0s, factor >= 1"
+            ));
+        }
+        out.push(Fault::Slow {
+            box_id,
+            at_ms: at_s * 1000.0,
+            until_ms: (at_s + dur_s) * 1000.0,
+            factor,
+        });
+    }
+    Ok(out)
+}
+
+/// Expand faults into a time-sorted `(at_ms, action)` schedule — each
+/// `Slow` becomes a set-factor edge plus a restore-to-nominal edge.
+pub fn schedule(faults: &[Fault]) -> Vec<(f64, FaultAction)> {
+    let mut out = Vec::new();
+    for f in faults {
+        match *f {
+            Fault::Kill { box_id, at_ms } => out.push((at_ms, FaultAction::Kill(box_id))),
+            Fault::Slow { box_id, at_ms, until_ms, factor } => {
+                out.push((at_ms, FaultAction::SetSlow(box_id, factor)));
+                out.push((until_ms, FaultAction::SetSlow(box_id, 1.0)));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.total_cmp(&b.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kills_and_slows() {
+        let kills = parse_kills("1@15, 2@20.5").unwrap();
+        assert_eq!(kills.len(), 2);
+        assert_eq!(kills[0], Fault::Kill { box_id: 1, at_ms: 15_000.0 });
+        assert_eq!(kills[1], Fault::Kill { box_id: 2, at_ms: 20_500.0 });
+        let slows = parse_slows("0@10x3:5").unwrap();
+        assert_eq!(
+            slows,
+            vec![Fault::Slow { box_id: 0, at_ms: 10_000.0, until_ms: 15_000.0, factor: 3.0 }]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_fault_specs() {
+        assert!(parse_kills("1").is_err());
+        assert!(parse_kills("x@5").is_err());
+        assert!(parse_kills("1@-5").is_err());
+        assert!(parse_slows("0@10").is_err());
+        assert!(parse_slows("0@10x0.5:5").is_err(), "factor < 1 is a speed-up, not a fault");
+        assert!(parse_slows("0@10x3:0").is_err());
+    }
+
+    #[test]
+    fn schedule_expands_and_sorts() {
+        let faults = [
+            Fault::Kill { box_id: 2, at_ms: 8_000.0 },
+            Fault::Slow { box_id: 0, at_ms: 2_000.0, until_ms: 5_000.0, factor: 3.0 },
+        ];
+        let sched = schedule(&faults);
+        assert_eq!(
+            sched,
+            vec![
+                (2_000.0, FaultAction::SetSlow(0, 3.0)),
+                (5_000.0, FaultAction::SetSlow(0, 1.0)),
+                (8_000.0, FaultAction::Kill(2)),
+            ]
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Cluster-wide metrics: the aggregate report, per-box rows, and the
+//! membership/fault event log — printable for the CLI and serializable to
+//! `BENCH_cluster.json`-style payloads via [`ClusterReport::to_json`].
+
+use crate::util::json::Json;
+use crate::util::stats::Stats;
+
+/// Per-box slice of a cluster run.
+#[derive(Debug, Clone)]
+pub struct BoxReport {
+    pub id: usize,
+    pub type_name: String,
+    /// Admission-weighted capacity of this box's plan.
+    pub capacity_rps: f64,
+    /// Still in the fleet when the run ended.
+    pub alive: bool,
+    /// Seconds of the run this box was provisioned.
+    pub alive_s: f64,
+    /// Requests the router sent here (including re-routes).
+    pub routed: usize,
+    pub completed: usize,
+    pub on_time: usize,
+    pub rejected_full: usize,
+    pub expired: usize,
+    pub shed_slo: usize,
+    pub degraded: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub util_gpu: f64,
+    pub util_npu: f64,
+    pub util_cpu: f64,
+}
+
+/// One membership or fault event on the cluster timeline.
+#[derive(Debug, Clone)]
+pub struct ClusterEvent {
+    pub at_ms: f64,
+    pub what: String,
+}
+
+/// Aggregated result of one cluster scenario.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub scenario: String,
+    pub pattern: &'static str,
+    pub policy: &'static str,
+    pub router: &'static str,
+    pub offered_rps: f64,
+    /// Sum of the initial fleet's per-box capacities.
+    pub capacity_rps: f64,
+    pub duration_s: f64,
+    pub makespan_s: f64,
+    pub arrivals: usize,
+    pub completed: usize,
+    pub on_time: usize,
+    pub rejected_full: usize,
+    pub expired: usize,
+    pub shed_slo: usize,
+    pub degraded: usize,
+    /// Requests drained from a dying box and re-offered elsewhere.
+    pub rerouted: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub latency_ms: Stats,
+    pub queue_wait_ms: Stats,
+    /// On-time completions / arrivals.
+    pub slo_attainment: f64,
+    pub goodput_rps: f64,
+    /// max/mean of per-box routed-per-alive-second (1.0 = perfectly even).
+    pub routing_imbalance: f64,
+    /// Σ box cost-units × alive seconds — the run's provisioning bill.
+    pub cost_units: f64,
+    pub boxes: Vec<BoxReport>,
+    pub events: Vec<ClusterEvent>,
+}
+
+impl ClusterReport {
+    /// Human-readable block (mirrors `ServeTrafficReport::print`).
+    pub fn print(&self) {
+        println!(
+            "=== {} [{} arrivals, pattern={}, policy={}, router={}] ===",
+            self.scenario, self.arrivals, self.pattern, self.policy, self.router
+        );
+        println!(
+            "offered {:.1} rps vs fleet capacity {:.1} rps ({:.0}% load), {:.1}s window, \
+             {:.1}s makespan",
+            self.offered_rps,
+            self.capacity_rps,
+            100.0 * self.offered_rps / self.capacity_rps.max(1e-9),
+            self.duration_s,
+            self.makespan_s
+        );
+        println!(
+            "completed {} ({} on time)  rejected {}  expired {}  shed {}  degraded {}  \
+             rerouted {}",
+            self.completed,
+            self.on_time,
+            self.rejected_full,
+            self.expired,
+            self.shed_slo,
+            self.degraded,
+            self.rerouted
+        );
+        println!(
+            "latency: p50 {:.0} ms  p95 {:.0}  p99 {:.0}  (queue wait p95 {:.0} ms)",
+            self.latency_ms.p50, self.latency_ms.p95, self.latency_ms.p99, self.queue_wait_ms.p95
+        );
+        println!(
+            "SLO attainment {:.1}%  goodput {:.1} rps  mean batch {:.2} over {} batches  \
+             imbalance {:.2}  bill {:.0} unit-s",
+            100.0 * self.slo_attainment,
+            self.goodput_rps,
+            self.mean_batch,
+            self.batches,
+            self.routing_imbalance,
+            self.cost_units
+        );
+        for b in &self.boxes {
+            println!(
+                "  box {:>2} {:<12} {}  alive {:>6.1}s  routed {:>6}  done {:>6}  \
+                 batch {:.2}  util GPU {:>3.0}% NPU {:>3.0}% CPU {:>3.0}%",
+                b.id,
+                b.type_name,
+                if b.alive { "up  " } else { "down" },
+                b.alive_s,
+                b.routed,
+                b.completed,
+                b.mean_batch,
+                100.0 * b.util_gpu,
+                100.0 * b.util_npu,
+                100.0 * b.util_cpu
+            );
+        }
+        for e in &self.events {
+            println!("  t={:>7.1}s  {}", e.at_ms / 1000.0, e.what);
+        }
+    }
+
+    /// Machine-readable payload (the `BENCH_cluster.json` row format).
+    pub fn to_json(&self) -> Json {
+        let boxes: Vec<Json> = self
+            .boxes
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("id", Json::Num(b.id as f64)),
+                    ("type", Json::Str(b.type_name.clone())),
+                    ("capacity_rps", Json::Num(b.capacity_rps)),
+                    ("alive", Json::Bool(b.alive)),
+                    ("alive_s", Json::Num(b.alive_s)),
+                    ("routed", Json::Num(b.routed as f64)),
+                    ("completed", Json::Num(b.completed as f64)),
+                    ("on_time", Json::Num(b.on_time as f64)),
+                    ("rejected_full", Json::Num(b.rejected_full as f64)),
+                    ("expired", Json::Num(b.expired as f64)),
+                    ("shed_slo", Json::Num(b.shed_slo as f64)),
+                    ("degraded", Json::Num(b.degraded as f64)),
+                    ("batches", Json::Num(b.batches as f64)),
+                    ("mean_batch", Json::Num(b.mean_batch)),
+                    ("util_gpu", Json::Num(b.util_gpu)),
+                    ("util_npu", Json::Num(b.util_npu)),
+                    ("util_cpu", Json::Num(b.util_cpu)),
+                ])
+            })
+            .collect();
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("at_s", Json::Num(e.at_ms / 1000.0)),
+                    ("what", Json::Str(e.what.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("pattern", Json::Str(self.pattern.to_string())),
+            ("policy", Json::Str(self.policy.to_string())),
+            ("router", Json::Str(self.router.to_string())),
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("capacity_rps", Json::Num(self.capacity_rps)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("on_time", Json::Num(self.on_time as f64)),
+            ("rejected_full", Json::Num(self.rejected_full as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("shed_slo", Json::Num(self.shed_slo as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
+            ("rerouted", Json::Num(self.rerouted as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("latency_p50_ms", Json::Num(self.latency_ms.p50)),
+            ("latency_p95_ms", Json::Num(self.latency_ms.p95)),
+            ("latency_p99_ms", Json::Num(self.latency_ms.p99)),
+            ("queue_wait_p95_ms", Json::Num(self.queue_wait_ms.p95)),
+            ("slo_attainment", Json::Num(self.slo_attainment)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("routing_imbalance", Json::Num(self.routing_imbalance)),
+            ("cost_units", Json::Num(self.cost_units)),
+            ("boxes", Json::Arr(boxes)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}

@@ -1,0 +1,57 @@
+//! Fleet-scale cluster serving: shard the gateway across heterogeneous
+//! edge boxes.
+//!
+//! The paper proves one GPU+EdgeTPU box runs the fused detector 24.7×
+//! faster than a GPU-only device — but one box caps out at its
+//! `capacity_rps`. This layer scales *out*: a [`ClusterSpec`] describes N
+//! boxes with different accelerator mixes (GPU-only, GPU+EdgeTPU,
+//! CPU+EdgeTPU, …), each box gets its per-config [`Schedule`] from the
+//! placement search (`graph::place::best_schedule` — the same pass behind
+//! `plan-search`), and a [`Router`] spreads admitted traffic over the
+//! fleet.
+//!
+//! ```text
+//!             arrivals (loadgen, virtual time)
+//!                  │
+//!                  ▼
+//!              ┌────────┐   config-affinity + least-loaded
+//!              │ Router │──────────────┬──────────────┐
+//!              └────────┘              │              │
+//!                  │                   │              │
+//!            ┌───────────┐      ┌───────────┐   ┌───────────┐
+//!            │ BoxEngine │      │ BoxEngine │   │ BoxEngine │
+//!            │ gpu+tpu   │      │ gpu       │   │ cpu+tpu   │
+//!            └───────────┘      └───────────┘   └───────────┘
+//!              queue+batcher+SLO per box, one shared virtual clock
+//! ```
+//!
+//! Routing is **config-affinity** by default: rendezvous hashing pins each
+//! `DetectorConfig` key to a small set of boxes so their dynamic batchers
+//! actually coalesce same-config requests (random routing scatters keys,
+//! starving every batcher — pinned by `tests/cluster.rs`), with
+//! least-loaded tie-breaking inside the affinity set. Fault injection
+//! ([`inject`]) kills or slows boxes mid-run — a killed box's queue is
+//! drained and rerouted, so no request is ever lost — and a reactive
+//! autoscaler ([`autoscale`]) grows/shrinks the fleet on queue depth,
+//! priced in per-box cost units.
+//!
+//! Everything runs on the simulated clock of `serving::dispatch`; see
+//! `docs/CLUSTER.md` for the spec grammar and knobs.
+//!
+//! [`Schedule`]: crate::coordinator::Schedule
+//! [`ClusterSpec`]: spec::ClusterSpec
+//! [`Router`]: router::Router
+
+pub mod autoscale;
+pub mod inject;
+pub mod metrics;
+pub mod router;
+pub mod run;
+pub mod spec;
+
+pub use autoscale::{AutoscalePolicy, ScaleDecision};
+pub use inject::{Fault, FaultAction};
+pub use metrics::{BoxReport, ClusterEvent, ClusterReport};
+pub use router::{RouteTarget, Router, RouterPolicy};
+pub use run::{run_cluster, ClusterScenario, ClusterTrace};
+pub use spec::{config_mix, plan_box, BoxPlan, BoxType, ClusterSpec};

@@ -1,0 +1,201 @@
+//! Request routing across the fleet.
+//!
+//! The default policy is **config-affinity**: rendezvous (highest-random-
+//! weight) hashing ranks the alive boxes per config key, each key is served
+//! by its top-`width` boxes, and the least-loaded of those wins the
+//! request. Two properties matter:
+//!
+//! - **Batcher locality** — a key's traffic concentrates on few boxes, so
+//!   each box's dynamic batcher sees enough same-config arrivals to form
+//!   full batches. Random routing scatters K keys over all N boxes and
+//!   every batcher starves (the affinity-beats-random assertion lives in
+//!   `tests/cluster.rs`).
+//! - **Failover stability** — rendezvous scores are per (key, box) and
+//!   membership-independent, so removing a dead box moves *only* the keys
+//!   it served (to their next-ranked box); every other key keeps its boxes.
+//!
+//! `Random` and pure `LeastLoaded` are kept as baselines for the bench.
+
+use crate::util::rng::Rng;
+
+/// Load-balancing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Rendezvous-hash each config key to `width` boxes, least-loaded wins.
+    ConfigAffinity,
+    /// Uniform random box per request (batcher-hostile baseline).
+    Random,
+    /// Globally least-loaded box regardless of key.
+    LeastLoaded,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "affinity" | "config-affinity" | "rendezvous" => Some(RouterPolicy::ConfigAffinity),
+            "random" | "rand" => Some(RouterPolicy::Random),
+            "least-loaded" | "leastloaded" | "ll" => Some(RouterPolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::ConfigAffinity => "affinity",
+            RouterPolicy::Random => "random",
+            RouterPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// A routable box as the router sees it at decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteTarget {
+    /// Stable box id (survives membership changes — never reused).
+    pub id: usize,
+    pub queue_len: usize,
+}
+
+/// Per-(key, box) rendezvous score: one SplitMix64 finalization over the
+/// pair. Deterministic and membership-independent — a box's score for a
+/// key never changes, so fleet changes only re-rank the affected key/box.
+fn affinity_score(key: usize, box_id: usize) -> u64 {
+    let mut z = (key as u64)
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((box_id as u64).wrapping_mul(0xD1B54A32D192ED03))
+        .wrapping_add(0x2545F4914F6CDD1D);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateful router (the RNG only feeds the `Random` baseline; affinity and
+/// least-loaded are pure functions of the targets).
+pub struct Router {
+    policy: RouterPolicy,
+    rng: Rng,
+    width: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, seed: u64) -> Router {
+        Router { policy, rng: Rng::new(seed ^ 0xC1A5_7E12_0B0E_5EED), width: 2 }
+    }
+
+    /// Affinity spread: each key may land on at most this many boxes while
+    /// membership is stable (default 2 — enough for least-loaded slack
+    /// without scattering the key).
+    pub fn with_width(mut self, width: usize) -> Router {
+        self.width = width.max(1);
+        self
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick a box for `key` among the alive targets; returns the chosen
+    /// box id, or `None` when the fleet is empty.
+    pub fn route(&mut self, key: usize, targets: &[RouteTarget]) -> Option<usize> {
+        if targets.is_empty() {
+            return None;
+        }
+        match self.policy {
+            RouterPolicy::Random => Some(targets[self.rng.below(targets.len())].id),
+            RouterPolicy::LeastLoaded => {
+                targets.iter().min_by_key(|t| (t.queue_len, t.id)).map(|t| t.id)
+            }
+            RouterPolicy::ConfigAffinity => {
+                let mut ranked: Vec<&RouteTarget> = targets.iter().collect();
+                ranked.sort_by_key(|t| std::cmp::Reverse(affinity_score(key, t.id)));
+                ranked.truncate(self.width);
+                // least-loaded within the affinity set; ties keep affinity order
+                let mut best = 0usize;
+                for i in 1..ranked.len() {
+                    if ranked[i].queue_len < ranked[best].queue_len {
+                        best = i;
+                    }
+                }
+                Some(ranked[best].id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> Vec<RouteTarget> {
+        (0..n).map(|id| RouteTarget { id, queue_len: 0 }).collect()
+    }
+
+    #[test]
+    fn affinity_pins_each_key_to_width_boxes() {
+        let mut r = Router::new(RouterPolicy::ConfigAffinity, 7);
+        let targets = fleet(8);
+        for key in 0..16 {
+            let mut seen: Vec<usize> = (0..100)
+                .map(|_| r.route(key, &targets).unwrap())
+                .collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert!(seen.len() <= 2, "key {key} spread over {} boxes", seen.len());
+        }
+    }
+
+    #[test]
+    fn affinity_failover_moves_only_the_dead_boxs_keys() {
+        let mut r = Router::new(RouterPolicy::ConfigAffinity, 7);
+        let full = fleet(6);
+        let keys: Vec<usize> = (0..32).collect();
+        let before: Vec<usize> = keys.iter().map(|&k| r.route(k, &full).unwrap()).collect();
+        let dead = before[0];
+        let survivors: Vec<RouteTarget> =
+            full.iter().copied().filter(|t| t.id != dead).collect();
+        let after: Vec<usize> = keys.iter().map(|&k| r.route(k, &survivors).unwrap()).collect();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_ne!(after[i], dead, "key {k} routed to the dead box");
+            if before[i] != dead {
+                assert_eq!(
+                    before[i], after[i],
+                    "key {k} moved although its box survived (rendezvous must be stable)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_prefers_less_loaded_box_in_set() {
+        let mut r = Router::new(RouterPolicy::ConfigAffinity, 7);
+        // find key 0's two-box affinity set on an idle fleet
+        let idle = fleet(4);
+        let first = r.route(0, &idle).unwrap();
+        // pile load onto the preferred box; the alternate must take over
+        let loaded: Vec<RouteTarget> = idle
+            .iter()
+            .map(|t| RouteTarget { id: t.id, queue_len: if t.id == first { 10 } else { 0 } })
+            .collect();
+        let second = r.route(0, &loaded).unwrap();
+        assert_ne!(second, first, "least-loaded tie-break must divert inside the set");
+    }
+
+    #[test]
+    fn empty_fleet_routes_nowhere() {
+        for p in [RouterPolicy::ConfigAffinity, RouterPolicy::Random, RouterPolicy::LeastLoaded] {
+            let mut r = Router::new(p, 1);
+            assert!(r.route(0, &[]).is_none());
+        }
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 1);
+        let targets = vec![
+            RouteTarget { id: 0, queue_len: 4 },
+            RouteTarget { id: 1, queue_len: 1 },
+            RouteTarget { id: 2, queue_len: 9 },
+        ];
+        assert_eq!(r.route(5, &targets), Some(1));
+    }
+}

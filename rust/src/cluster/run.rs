@@ -1,0 +1,506 @@
+//! The cluster event loop: one shared virtual clock driving a router, N
+//! [`BoxEngine`]s, scripted faults, and the autoscaler.
+//!
+//! Event ordering at each timestamp is fixed (faults → spawns → arrivals →
+//! dispatch → autoscale observation), which makes runs bit-deterministic
+//! for a given scenario: the only randomness is the seeded load generator
+//! and the seeded `Random` router baseline.
+//!
+//! Conservation invariant: every generated arrival resolves to exactly one
+//! [`RequestOutcome`] — admission rejections and router no-target
+//! rejections included, and a killed box's queue is drained and re-offered
+//! through the router rather than dropped. `tests/cluster.rs` pins this
+//! across fault schedules.
+
+use anyhow::Result;
+
+use crate::coordinator::DetectorConfig;
+use crate::serving::dispatch::{BoxEngine, OutcomeKind, RequestOutcome};
+use crate::serving::{BatchPolicy, LoadGen, Request, ServicePlanner, SloPolicy};
+use crate::util::stats::Stats;
+
+use super::autoscale::{self, AutoscalePolicy, ScaleDecision};
+use super::inject::{self, Fault, FaultAction};
+use super::metrics::{BoxReport, ClusterEvent, ClusterReport};
+use super::router::{RouteTarget, Router, RouterPolicy};
+use super::spec::{plan_box, BoxPlan, ClusterSpec};
+
+/// One cluster serving experiment.
+#[derive(Clone)]
+pub struct ClusterScenario {
+    pub name: String,
+    pub spec: ClusterSpec,
+    /// Base configs addressable by `Request::key`; each box re-schedules
+    /// them for its own devices via the placement search.
+    pub configs: Vec<DetectorConfig>,
+    pub num_points: usize,
+    /// Per-box admission queue bound.
+    pub queue_capacity: usize,
+    pub load: LoadGen,
+    pub batch: BatchPolicy,
+    pub policy: SloPolicy,
+    pub router: RouterPolicy,
+    pub router_seed: u64,
+    pub faults: Vec<Fault>,
+    pub autoscale: Option<AutoscalePolicy>,
+}
+
+/// Full result of a cluster run: the aggregate report, one terminal
+/// outcome per arrival, and every routing decision (request id, box id,
+/// config key) — re-routes after a drain appear as additional entries.
+pub struct ClusterTrace {
+    pub report: ClusterReport,
+    pub outcomes: Vec<RequestOutcome>,
+    pub routes: Vec<(u64, usize, usize)>,
+}
+
+/// A provisioned box instance inside the run.
+struct LiveBox {
+    id: usize,
+    plan: BoxPlan,
+    engine: BoxEngine,
+    alive: bool,
+    spawned_ms: f64,
+    died_ms: Option<f64>,
+    routed: usize,
+}
+
+/// Route one request over the currently-alive fleet; a fleet with no alive
+/// boxes rejects (the request still resolves, as `RejectedFull`).
+fn route_request(
+    r: Request,
+    boxes: &mut [LiveBox],
+    router: &mut Router,
+    routes: &mut Vec<(u64, usize, usize)>,
+    outcomes: &mut Vec<RequestOutcome>,
+) {
+    let targets: Vec<RouteTarget> = boxes
+        .iter()
+        .filter(|b| b.alive)
+        .map(|b| RouteTarget { id: b.id, queue_len: b.engine.queue_len() })
+        .collect();
+    match router.route(r.key, &targets) {
+        Some(id) => {
+            let b = boxes
+                .iter_mut()
+                .find(|b| b.id == id)
+                .expect("router only returns ids from the target list");
+            b.routed += 1;
+            routes.push((r.id, id, r.key));
+            b.engine.offer(r, outcomes);
+        }
+        None => outcomes.push(RequestOutcome {
+            id: r.id,
+            kind: OutcomeKind::RejectedFull,
+            on_time: false,
+        }),
+    }
+}
+
+/// Run a cluster scenario to completion on the simulated clock.
+pub fn run_cluster(sc: &ClusterScenario, planner: &ServicePlanner) -> Result<ClusterTrace> {
+    assert!(!sc.configs.is_empty(), "cluster scenario needs at least one detector config");
+
+    // ---- provision the initial fleet (placement search per box type) ----
+    let mut boxes: Vec<LiveBox> = Vec::new();
+    for bt in &sc.spec.boxes {
+        let plan = plan_box(planner, bt, &sc.configs, sc.num_points, &sc.batch, &sc.load.mix)?;
+        let engine = BoxEngine::new(
+            planner,
+            &plan.configs,
+            sc.num_points,
+            sc.queue_capacity,
+            sc.batch,
+            sc.policy,
+        )?;
+        boxes.push(LiveBox {
+            id: boxes.len(),
+            plan,
+            engine,
+            alive: true,
+            spawned_ms: 0.0,
+            died_ms: None,
+            routed: 0,
+        });
+    }
+    let initial_capacity: f64 = boxes.iter().map(|b| b.plan.capacity_rps).sum();
+    // what scale-up provisions: the initial type with the best capacity
+    // per cost unit
+    let scale_template: BoxPlan = boxes
+        .iter()
+        .map(|b| &b.plan)
+        .max_by(|a, b| {
+            (a.capacity_rps / a.box_type.cost_units)
+                .total_cmp(&(b.capacity_rps / b.box_type.cost_units))
+        })
+        .expect("non-empty fleet")
+        .clone();
+    let mut next_box_id = boxes.len();
+
+    let fault_sched = inject::schedule(&sc.faults);
+    let mut fi = 0usize;
+
+    let arrivals = sc.load.generate();
+    let total = arrivals.len();
+    let mut router = Router::new(sc.router, sc.router_seed);
+
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(total);
+    let mut routes: Vec<(u64, usize, usize)> = Vec::with_capacity(total);
+    let mut events: Vec<ClusterEvent> = Vec::new();
+    let mut rerouted = 0usize;
+    let mut pending_spawns: Vec<f64> = Vec::new();
+    let mut next_check = sc.autoscale.map(|p| p.check_interval_ms).unwrap_or(f64::INFINITY);
+    let mut cooldown_until = 0.0f64;
+
+    let mut now = 0.0f64;
+    let mut i = 0usize;
+    loop {
+        // 1) apply faults due at or before `now`
+        while fi < fault_sched.len() && fault_sched[fi].0 <= now {
+            let (_, action) = fault_sched[fi];
+            fi += 1;
+            match action {
+                FaultAction::Kill(id) => {
+                    let mut drained: Vec<Request> = Vec::new();
+                    if let Some(b) = boxes.iter_mut().find(|b| b.id == id && b.alive) {
+                        b.alive = false;
+                        b.died_ms = Some(now);
+                        drained = b.engine.drain();
+                        events.push(ClusterEvent {
+                            at_ms: now,
+                            what: format!(
+                                "box {id} ({}) killed; rerouting {} queued requests",
+                                b.plan.box_type.name,
+                                drained.len()
+                            ),
+                        });
+                    }
+                    rerouted += drained.len();
+                    for r in drained {
+                        route_request(r, &mut boxes, &mut router, &mut routes, &mut outcomes);
+                    }
+                }
+                FaultAction::SetSlow(id, f) => {
+                    if let Some(b) = boxes.iter_mut().find(|b| b.id == id && b.alive) {
+                        b.engine.set_slow(f);
+                        events.push(ClusterEvent {
+                            at_ms: now,
+                            what: format!("box {id} service-time factor set to {f}"),
+                        });
+                    }
+                }
+            }
+        }
+
+        // 2) boxes whose provisioning lag elapsed join the fleet
+        let due = pending_spawns.iter().filter(|t| **t <= now).count();
+        pending_spawns.retain(|t| *t > now);
+        for _ in 0..due {
+            let plan = scale_template.clone();
+            let engine = BoxEngine::new(
+                planner,
+                &plan.configs,
+                sc.num_points,
+                sc.queue_capacity,
+                sc.batch,
+                sc.policy,
+            )?;
+            let id = next_box_id;
+            next_box_id += 1;
+            events.push(ClusterEvent {
+                at_ms: now,
+                what: format!("box {id} ({}) joined (scale-up)", plan.box_type.name),
+            });
+            boxes.push(LiveBox {
+                id,
+                plan,
+                engine,
+                alive: true,
+                spawned_ms: now,
+                died_ms: None,
+                routed: 0,
+            });
+        }
+
+        // 3) route arrivals due at or before `now`
+        while i < total && arrivals[i].arrival_ms <= now {
+            route_request(
+                arrivals[i].clone(),
+                &mut boxes,
+                &mut router,
+                &mut routes,
+                &mut outcomes,
+            );
+            i += 1;
+        }
+
+        // 4) advance every alive engine (simulation-only: functional
+        //    execution stays a single-box concern)
+        let mut hints: Vec<f64> = Vec::new();
+        for b in boxes.iter_mut().filter(|b| b.alive) {
+            if let Some(h) = b.engine.advance(now, planner, None, &mut outcomes) {
+                hints.push(h);
+            }
+        }
+
+        // 5) autoscaler observation
+        if let Some(pol) = &sc.autoscale {
+            if now >= next_check {
+                while next_check <= now {
+                    next_check += pol.check_interval_ms;
+                }
+                let mut n_alive = 0usize;
+                let mut fill_sum = 0.0f64;
+                for b in boxes.iter().filter(|b| b.alive) {
+                    n_alive += 1;
+                    fill_sum +=
+                        b.engine.queue_len() as f64 / b.engine.queue_capacity().max(1) as f64;
+                }
+                let fill = if n_alive > 0 { fill_sum / n_alive as f64 } else { 0.0 };
+                let provisioned = n_alive + pending_spawns.len();
+                if now >= cooldown_until && n_alive > 0 {
+                    match autoscale::decide(pol, fill, provisioned) {
+                        ScaleDecision::Up => {
+                            pending_spawns.push(now + pol.spawn_delay_ms);
+                            cooldown_until = now + pol.cooldown_ms;
+                            events.push(ClusterEvent {
+                                at_ms: now,
+                                what: format!(
+                                    "scale-up ordered (mean queue fill {:.0}%)",
+                                    100.0 * fill
+                                ),
+                            });
+                        }
+                        ScaleDecision::Down => {
+                            // retire the most recently added idle box —
+                            // never one holding queued work
+                            if let Some(b) = boxes
+                                .iter_mut()
+                                .filter(|b| b.alive && b.engine.is_idle(now))
+                                .max_by(|a, b2| {
+                                    a.spawned_ms
+                                        .total_cmp(&b2.spawned_ms)
+                                        .then(a.id.cmp(&b2.id))
+                                })
+                            {
+                                b.alive = false;
+                                b.died_ms = Some(now);
+                                cooldown_until = now + pol.cooldown_ms;
+                                events.push(ClusterEvent {
+                                    at_ms: now,
+                                    what: format!(
+                                        "box {} ({}) retired (scale-down, idle)",
+                                        b.id, b.plan.box_type.name
+                                    ),
+                                });
+                            }
+                        }
+                        ScaleDecision::Hold => {}
+                    }
+                }
+            }
+        }
+
+        // 6) advance the clock to the next event
+        let mut t_next = f64::INFINITY;
+        if let Some(r) = arrivals.get(i) {
+            t_next = t_next.min(r.arrival_ms);
+        }
+        for h in &hints {
+            t_next = t_next.min(*h);
+        }
+        if fi < fault_sched.len() {
+            t_next = t_next.min(fault_sched[fi].0);
+        }
+        for t in &pending_spawns {
+            t_next = t_next.min(*t);
+        }
+        if sc.autoscale.is_some() {
+            // keep sampling only while there is anything left to drive
+            let work_left = i < total
+                || !pending_spawns.is_empty()
+                || boxes.iter().any(|b| b.alive && !b.engine.is_idle(now));
+            if work_left {
+                t_next = t_next.min(next_check);
+            }
+        }
+        if !t_next.is_finite() {
+            break;
+        }
+        debug_assert!(t_next > now, "virtual clock must advance ({t_next} vs {now})");
+        now = t_next;
+    }
+
+    // ---- aggregate ----
+    let makespan_ms = boxes
+        .iter()
+        .map(|b| b.engine.stats().makespan_ms)
+        .fold(0.0, f64::max);
+    let end_ms = makespan_ms.max(sc.load.duration_ms).max(now);
+    let makespan_s = (makespan_ms / 1000.0).max(sc.load.duration_ms / 1000.0).max(1e-9);
+
+    let mut lat: Vec<f64> = Vec::new();
+    let mut qwait: Vec<f64> = Vec::new();
+    let mut completed = 0usize;
+    let mut on_time = 0usize;
+    let mut rejected_full = 0usize;
+    let mut expired = 0usize;
+    let mut shed_slo = 0usize;
+    let mut degraded = 0usize;
+    let mut batches = 0usize;
+    let mut batched_reqs = 0usize;
+    let mut cost_units = 0.0f64;
+    let mut box_reports: Vec<BoxReport> = Vec::new();
+    for b in &boxes {
+        let st = b.engine.stats();
+        completed += st.completed;
+        on_time += st.on_time;
+        rejected_full += st.rejected_full;
+        expired += st.expired;
+        shed_slo += st.shed_slo;
+        degraded += st.degraded;
+        batches += st.batches;
+        batched_reqs += st.batched_reqs;
+        lat.extend_from_slice(b.engine.latencies());
+        qwait.extend_from_slice(b.engine.queue_waits());
+        let alive_s = (b.died_ms.unwrap_or(end_ms) - b.spawned_ms).max(0.0) / 1000.0;
+        cost_units += b.plan.box_type.cost_units * alive_s;
+        let denom = alive_s.max(1e-9);
+        box_reports.push(BoxReport {
+            id: b.id,
+            type_name: b.plan.box_type.name.clone(),
+            capacity_rps: b.plan.capacity_rps,
+            alive: b.alive,
+            alive_s,
+            routed: b.routed,
+            completed: st.completed,
+            on_time: st.on_time,
+            rejected_full: st.rejected_full,
+            expired: st.expired,
+            shed_slo: st.shed_slo,
+            degraded: st.degraded,
+            batches: st.batches,
+            mean_batch: st.mean_batch(),
+            util_gpu: st.busy_gpu_ms / 1000.0 / denom,
+            util_npu: st.busy_npu_ms / 1000.0 / denom,
+            util_cpu: st.busy_cpu_ms / 1000.0 / denom,
+        });
+    }
+    // router-rejected requests (no alive box) count toward rejections too
+    let router_rejected = outcomes
+        .iter()
+        .filter(|o| o.kind == OutcomeKind::RejectedFull)
+        .count()
+        .saturating_sub(rejected_full);
+    rejected_full += router_rejected;
+
+    let rates: Vec<f64> = box_reports
+        .iter()
+        .filter(|b| b.alive_s > 0.0)
+        .map(|b| b.routed as f64 / b.alive_s)
+        .collect();
+    let routing_imbalance = if rates.is_empty() {
+        1.0
+    } else {
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        if mean <= 0.0 { 1.0 } else { rates.iter().cloned().fold(0.0, f64::max) / mean }
+    };
+
+    let report = ClusterReport {
+        scenario: sc.name.clone(),
+        pattern: sc.load.pattern.name(),
+        policy: sc.policy.name(),
+        router: sc.router.name(),
+        offered_rps: sc.load.pattern.mean_rps(),
+        capacity_rps: initial_capacity,
+        duration_s: sc.load.duration_ms / 1000.0,
+        makespan_s,
+        arrivals: total,
+        completed,
+        on_time,
+        rejected_full,
+        expired,
+        shed_slo,
+        degraded,
+        rerouted,
+        batches,
+        mean_batch: if batches > 0 { batched_reqs as f64 / batches as f64 } else { 0.0 },
+        latency_ms: Stats::from(lat),
+        queue_wait_ms: Stats::from(qwait),
+        slo_attainment: if total > 0 { on_time as f64 / total as f64 } else { 1.0 },
+        goodput_rps: on_time as f64 / makespan_s,
+        routing_imbalance,
+        cost_units,
+        boxes: box_reports,
+        events,
+    };
+    Ok(ClusterTrace { report, outcomes, routes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Schedule, Variant};
+    use crate::serving::ArrivalPattern;
+    use crate::sim::DeviceKind;
+
+    fn base_cfg() -> DetectorConfig {
+        DetectorConfig::new(
+            "synrgbd",
+            Variant::PointSplit,
+            true,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        )
+    }
+
+    fn tiny_scenario(planner: &ServicePlanner) -> ClusterScenario {
+        let cap = planner.capacity_rps(&base_cfg(), 2048, 4).unwrap();
+        ClusterScenario {
+            name: "tiny".to_string(),
+            spec: ClusterSpec::parse("gpu+edgetpu,gpu,cpu+edgetpu").unwrap(),
+            configs: vec![base_cfg()],
+            num_points: 2048,
+            queue_capacity: 16,
+            load: LoadGen::simple(
+                ArrivalPattern::Poisson { rate_rps: cap },
+                10_000.0,
+                2_000.0,
+                11,
+            ),
+            batch: BatchPolicy { max_batch: 4, max_wait_ms: 25.0 },
+            policy: SloPolicy::None,
+            router: RouterPolicy::ConfigAffinity,
+            router_seed: 11,
+            faults: Vec::new(),
+            autoscale: None,
+        }
+    }
+
+    #[test]
+    fn cluster_run_conserves_requests() {
+        let planner = ServicePlanner::synthetic();
+        let sc = tiny_scenario(&planner);
+        let trace = run_cluster(&sc, &planner).unwrap();
+        let r = &trace.report;
+        assert!(r.arrivals > 0);
+        assert_eq!(trace.outcomes.len(), r.arrivals, "one outcome per arrival");
+        assert_eq!(r.completed + r.rejected_full + r.expired + r.shed_slo, r.arrivals);
+        assert_eq!(r.boxes.len(), 3);
+        // the three heterogeneous types planned differently
+        assert!(r.capacity_rps > 0.0);
+        assert!(r.boxes.iter().any(|b| b.completed > 0));
+    }
+
+    #[test]
+    fn cluster_runs_are_deterministic() {
+        let planner = ServicePlanner::synthetic();
+        let sc = tiny_scenario(&planner);
+        let a = run_cluster(&sc, &planner).unwrap();
+        let b = run_cluster(&sc, &planner).unwrap();
+        assert_eq!(a.report.arrivals, b.report.arrivals);
+        assert_eq!(a.report.completed, b.report.completed);
+        assert_eq!(a.report.on_time, b.report.on_time);
+        assert_eq!(a.routes, b.routes);
+        assert_eq!(a.report.latency_ms.p99, b.report.latency_ms.p99);
+    }
+}

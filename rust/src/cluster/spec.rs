@@ -1,0 +1,267 @@
+//! Cluster specification: heterogeneous box types and their per-box plans.
+//!
+//! Grammar (CLI `--boxes`): comma-separated `devices[:count]` groups,
+//! devices joined by `+` — `"gpu+edgetpu:2,gpu,cpu+edgetpu"` is two
+//! GPU+EdgeTPU boxes, one GPU-only box, one CPU+EdgeTPU box. Each box type
+//! is planned independently: the placement search picks the best
+//! [`Schedule`] for every detector config given exactly that box's
+//! devices, so a CPU+EdgeTPU box serves the same configs as a GPU box —
+//! just on its own optimal assignment, at its own capacity.
+//!
+//! [`Schedule`]: crate::coordinator::Schedule
+
+use anyhow::{anyhow, Result};
+
+use crate::config::parse_device;
+use crate::coordinator::DetectorConfig;
+use crate::graph::place::{self, Objective};
+use crate::quant::{Granularity, StagePrecision};
+use crate::serving::{BatchPolicy, ServicePlanner};
+use crate::sim::DeviceKind;
+
+/// Relative provisioning price of one device (arbitrary cost units; the
+/// autoscaler ranks box types by capacity per unit, and the final report
+/// bills the run in unit-seconds).
+pub fn device_cost(d: DeviceKind) -> f64 {
+    match d {
+        DeviceKind::Cpu => 0.5,
+        DeviceKind::Gpu => 3.0,
+        DeviceKind::EdgeTpu => 1.0,
+    }
+}
+
+/// One box *type*: its accelerator complement and price.
+#[derive(Debug, Clone)]
+pub struct BoxType {
+    /// Canonical name, e.g. `"gpu+edgetpu"`.
+    pub name: String,
+    pub devices: Vec<DeviceKind>,
+    pub cost_units: f64,
+}
+
+impl BoxType {
+    /// Parse a `+`-joined device list (`"gpu+edgetpu"`, `"cpu"`, …).
+    pub fn parse(s: &str) -> Result<BoxType> {
+        let mut devices: Vec<DeviceKind> = Vec::new();
+        for part in s.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(anyhow!("empty device in box type '{s}'"));
+            }
+            let d = parse_device(part)?;
+            if !devices.contains(&d) {
+                devices.push(d);
+            }
+        }
+        if devices.is_empty() {
+            return Err(anyhow!("box type '{s}' names no devices"));
+        }
+        let cost_units = devices.iter().map(|d| device_cost(*d)).sum();
+        let name = devices
+            .iter()
+            .map(|d| d.name().to_ascii_lowercase())
+            .collect::<Vec<_>>()
+            .join("+");
+        Ok(BoxType { name, devices, cost_units })
+    }
+}
+
+/// The fleet as provisioned at t=0: one [`BoxType`] entry per box instance.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub boxes: Vec<BoxType>,
+}
+
+impl ClusterSpec {
+    /// Parse `"gpu+edgetpu:2,gpu:1,cpu+edgetpu"` (count defaults to 1).
+    pub fn parse(s: &str) -> Result<ClusterSpec> {
+        let mut boxes = Vec::new();
+        for group in s.split(',') {
+            let group = group.trim();
+            if group.is_empty() {
+                continue;
+            }
+            let (ty, count) = match group.rsplit_once(':') {
+                Some((ty, n)) => {
+                    let n: usize = n
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("bad box count in '{group}' (want TYPE:N)"))?;
+                    (ty, n)
+                }
+                None => (group, 1),
+            };
+            let bt = BoxType::parse(ty)?;
+            for _ in 0..count {
+                boxes.push(bt.clone());
+            }
+        }
+        if boxes.is_empty() {
+            return Err(anyhow!("cluster spec '{s}' describes no boxes"));
+        }
+        Ok(ClusterSpec { boxes })
+    }
+
+    /// Number of distinct box types in the fleet.
+    pub fn num_box_types(&self) -> usize {
+        let mut names: Vec<&str> = self.boxes.iter().map(|b| b.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        names.len()
+    }
+}
+
+/// A provisioned box: its type, the cluster's configs re-scheduled for its
+/// devices, and its steady-state capacity at the fleet batch size.
+#[derive(Debug, Clone)]
+pub struct BoxPlan {
+    pub box_type: BoxType,
+    /// Same config list (and `Request::key` indexing) as the cluster's,
+    /// each with this box's placement-search winner as its schedule.
+    pub configs: Vec<DetectorConfig>,
+    /// Admission-weighted capacity under the load mix.
+    pub capacity_rps: f64,
+}
+
+/// Plan one box type: run the throughput-objective placement search per
+/// config over exactly this box's devices. Errors if any config has no
+/// feasible assignment (e.g. an EdgeTPU-only box — it cannot run point
+/// ops at all).
+pub fn plan_box(
+    planner: &ServicePlanner,
+    bt: &BoxType,
+    base_configs: &[DetectorConfig],
+    num_points: usize,
+    batch: &BatchPolicy,
+    mix: &[f64],
+) -> Result<BoxPlan> {
+    assert!(!base_configs.is_empty(), "planning a box with no configs");
+    let mut configs = Vec::with_capacity(base_configs.len());
+    for cfg in base_configs {
+        let schedule = place::best_schedule(
+            planner.manifest(),
+            cfg,
+            num_points,
+            batch.max_batch,
+            &bt.devices,
+            Objective::Throughput,
+        )?;
+        let mut c = cfg.clone();
+        c.schedule = schedule;
+        configs.push(c);
+    }
+    let capacity_rps =
+        planner.mixed_capacity_rps(&configs, num_points, batch.max_batch, mix)?;
+    Ok(BoxPlan { box_type: bt.clone(), configs, capacity_rps })
+}
+
+/// `n` distinguishable detector configs for affinity experiments: the base
+/// config with the head precision cycled through the granularity ladder.
+/// Each lands in its own batcher key and planner cache entry (the schemes
+/// differ), which is exactly what config-affinity routing exploits.
+pub fn config_mix(base: &DetectorConfig, n: usize) -> Vec<DetectorConfig> {
+    const LADDER: [Granularity; 6] = [
+        Granularity::Role,
+        Granularity::Channel,
+        Granularity::Layer,
+        Granularity::Group(2),
+        Granularity::Group(4),
+        Granularity::Group(8),
+    ];
+    (0..n.max(1))
+        .map(|i| {
+            let mut c = base.clone();
+            c.scheme = c.scheme.with_head(StagePrecision::Int8(LADDER[i % LADDER.len()]));
+            c
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Schedule, Variant};
+
+    fn base_cfg() -> DetectorConfig {
+        DetectorConfig::new(
+            "synrgbd",
+            Variant::PointSplit,
+            true,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+        )
+    }
+
+    #[test]
+    fn parses_heterogeneous_spec() {
+        let spec = ClusterSpec::parse("gpu+edgetpu:2, gpu:1 ,cpu+edgetpu").unwrap();
+        assert_eq!(spec.boxes.len(), 4);
+        assert_eq!(spec.num_box_types(), 3);
+        assert_eq!(spec.boxes[0].name, "gpu+edgetpu");
+        assert_eq!(spec.boxes[0].devices, vec![DeviceKind::Gpu, DeviceKind::EdgeTpu]);
+        assert_eq!(spec.boxes[2].name, "gpu");
+        assert_eq!(spec.boxes[3].devices, vec![DeviceKind::Cpu, DeviceKind::EdgeTpu]);
+        // a GPU+EdgeTPU box costs more than a CPU+EdgeTPU box
+        assert!(spec.boxes[0].cost_units > spec.boxes[3].cost_units);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(ClusterSpec::parse("").is_err());
+        assert!(ClusterSpec::parse("quantum:2").is_err());
+        assert!(ClusterSpec::parse("gpu:abc").is_err());
+        assert!(BoxType::parse("gpu++edgetpu").is_err());
+    }
+
+    #[test]
+    fn plans_pick_per_box_schedules() {
+        let planner = ServicePlanner::synthetic();
+        let cfgs = vec![base_cfg()];
+        let batch = BatchPolicy::default();
+        let split = plan_box(
+            &planner,
+            &BoxType::parse("gpu+edgetpu").unwrap(),
+            &cfgs,
+            2048,
+            &batch,
+            &[1.0],
+        )
+        .unwrap();
+        // the paper's box recovers the paper's assignment
+        assert_eq!(
+            split.configs[0].schedule,
+            Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu }
+        );
+        let gpu_only =
+            plan_box(&planner, &BoxType::parse("gpu").unwrap(), &cfgs, 2048, &batch, &[1.0])
+                .unwrap();
+        assert_eq!(gpu_only.configs[0].schedule.nn_dev(), DeviceKind::Gpu);
+        // heterogeneity is real: the split box out-serves the GPU-only box
+        assert!(
+            split.capacity_rps > gpu_only.capacity_rps,
+            "split {} rps vs gpu-only {} rps",
+            split.capacity_rps,
+            gpu_only.capacity_rps
+        );
+        // an EdgeTPU-only box is infeasible (no point ops), not a panic
+        assert!(plan_box(
+            &planner,
+            &BoxType::parse("edgetpu").unwrap(),
+            &cfgs,
+            2048,
+            &batch,
+            &[1.0]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn config_mix_yields_distinct_schemes() {
+        let mix = config_mix(&base_cfg(), 4);
+        assert_eq!(mix.len(), 4);
+        for i in 0..mix.len() {
+            for j in (i + 1)..mix.len() {
+                assert_ne!(mix[i].scheme, mix[j].scheme, "configs {i} and {j} collide");
+            }
+        }
+    }
+}

@@ -17,7 +17,7 @@
 //!
 //! Consumers: the `plan-search` CLI command and `benches/fig10_hw_configs`.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::StageGraph;
 use crate::coordinator::{DetectorConfig, Schedule};
@@ -173,6 +173,33 @@ pub fn search_with_sim(
             .expect("simulated costs are finite")
     });
     Ok(PlacementSearch { objective, candidates, rejected })
+}
+
+/// The winning schedule for a config on a box with exactly `avail` devices
+/// — the cluster planner's entry point: every box type gets its plan from
+/// the same search the `plan-search` command exposes. Errors when no
+/// assignment is feasible (e.g. an EdgeTPU-only box, which cannot run
+/// point ops at all).
+pub fn best_schedule(
+    m: &Manifest,
+    cfg: &DetectorConfig,
+    num_points: usize,
+    batch: usize,
+    avail: &[DeviceKind],
+    objective: Objective,
+) -> Result<Schedule> {
+    let s = search(m, cfg, num_points, batch, avail, objective)?;
+    s.best().map(|c| c.schedule).ok_or_else(|| {
+        anyhow!(
+            "no feasible placement for {} on [{}]: {}",
+            cfg.variant.name(),
+            avail.iter().map(|d| d.name()).collect::<Vec<_>>().join("+"),
+            s.rejected
+                .first()
+                .map(|r| r.reason.clone())
+                .unwrap_or_else(|| "no devices".to_string())
+        )
+    })
 }
 
 /// Capability + memory constraints, checked per stage at the folded batch

@@ -31,8 +31,21 @@
 //! `serving::run_traffic` from code, `pointsplit serve-traffic` from the
 //! CLI, and `benches/serving_overload.rs` for the load sweep. Architecture
 //! notes live in `docs/SERVING.md`.
+//!
+//! # Cluster
+//!
+//! One box caps out at its `capacity_rps`; the `cluster` layer shards the
+//! gateway across a fleet of heterogeneous edge boxes. A `ClusterSpec`
+//! describes N boxes by device mix (GPU-only, GPU+EdgeTPU, CPU+EdgeTPU,
+//! …), the placement search plans each box, and a config-affinity router
+//! spreads traffic so per-box batchers still coalesce. Failure/straggler
+//! injection and a reactive autoscaler complete the fleet model. Entry
+//! points: `cluster::run_cluster` from code, `pointsplit serve-cluster`
+//! from the CLI, and `benches/cluster_scale.rs` for the scaling sweep. See
+//! `docs/CLUSTER.md`.
 
 pub mod bench;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -14,6 +14,15 @@
 //!                     [--functional] [--exec-workers N] [... detect flags]
 //!     open-loop traffic gateway on the simulated clock; print a
 //!     ServeTrafficReport per arrival pattern (see docs/SERVING.md)
+//! pointsplit serve-cluster [--boxes "gpu+edgetpu:2,gpu:1,cpu+edgetpu:1"] [--configs 2]
+//!                     [--router affinity|random|least-loaded] [--pattern poisson|bursty|diurnal]
+//!                     [--load 0.8 | --rate RPS] [--duration-s 30] [--deadline-ms 1000]
+//!                     [--policy degrade|shed|none] [--queue-cap 32] [--batch-max 4]
+//!                     [--batch-wait-ms 25] [--kill "1@15"] [--slow "0@10x3:5"]
+//!                     [--autoscale] [--scale-max 16] [--json PATH] [... detect flags]
+//!     fleet-scale gateway: shard traffic across heterogeneous edge boxes,
+//!     each planned by the placement search; print a ClusterReport with
+//!     per-box rows and the fault/scaling event log (see docs/CLUSTER.md)
 //! pointsplit quant-report [--artifacts DIR] [--dataset synrgbd] [--seed N]
 //!     per-stage QuantScheme report: derived role partitions, QDQ error and
 //!     parameter count per granularity, and the full-vs-degraded plan
@@ -54,6 +63,7 @@ fn run() -> Result<()> {
         "detect" => cmd_detect(&cli),
         "serve" => cmd_serve(&cli),
         "serve-traffic" => cmd_serve_traffic(&cli),
+        "serve-cluster" => cmd_serve_cluster(&cli),
         "quant-report" => cmd_quant_report(&cli),
         "plan-search" => cmd_plan_search(&cli),
         "devices" => cmd_devices(),
@@ -64,7 +74,7 @@ fn run() -> Result<()> {
         }
         other => Err(anyhow!(
             "unknown command '{other}' \
-             (try: check|detect|serve|serve-traffic|quant-report|plan-search|devices)"
+             (try: check|detect|serve|serve-traffic|serve-cluster|quant-report|plan-search|devices)"
         )),
     }
 }
@@ -72,8 +82,8 @@ fn run() -> Result<()> {
 fn print_help() {
     println!("pointsplit — on-device 3D detection with heterogeneous accelerators");
     println!(
-        "commands: check | detect | serve | serve-traffic | quant-report | plan-search | \
-         devices   (see rust/src/main.rs docs)"
+        "commands: check | detect | serve | serve-traffic | serve-cluster | quant-report | \
+         plan-search | devices   (see rust/src/main.rs docs)"
     );
 }
 
@@ -342,6 +352,130 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
         let rep = run_traffic(&sc, &planner, exec.as_ref())?;
         rep.print();
         println!();
+    }
+    Ok(())
+}
+
+/// Fleet-scale gateway: parse a heterogeneous `ClusterSpec`, plan every
+/// box via the placement search, and drive the whole fleet — router,
+/// per-box engines, scripted faults, optional autoscaler — on one
+/// simulated clock. Like `serve-traffic`, this needs no artifacts.
+fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
+    use pointsplit::cluster::{
+        self, inject, AutoscalePolicy, ClusterScenario, ClusterSpec, Fault, RouterPolicy,
+    };
+
+    let (cfg, ds) = detector_config(cli)?;
+    let manifest_path =
+        std::path::Path::new(&cli.get_or("artifacts", "artifacts")).join("manifest.json");
+    let planner = match std::fs::read_to_string(&manifest_path)
+        .ok()
+        .and_then(|t| Manifest::parse(&t).ok())
+    {
+        Some(m) => {
+            println!("planner manifest: {}", manifest_path.display());
+            ServicePlanner::new(m)
+        }
+        None => {
+            println!("planner manifest: synthetic (no exported artifacts found)");
+            ServicePlanner::synthetic()
+        }
+    };
+    let spec = ClusterSpec::parse(&cli.get_or("boxes", "gpu+edgetpu:2,gpu:1,cpu+edgetpu:1"))?;
+    let configs = cluster::config_mix(&cfg, cli.get_usize("configs", 2)?);
+    let mix = vec![1.0; configs.len()];
+    let batch = BatchPolicy {
+        max_batch: cli.get_usize("batch-max", 4)?,
+        max_wait_ms: cli.get_f64("batch-wait-ms", 25.0)?,
+    };
+    let mut fleet_capacity = 0.0;
+    for bt in &spec.boxes {
+        fleet_capacity +=
+            cluster::plan_box(&planner, bt, &configs, ds.num_points, &batch, &mix)?.capacity_rps;
+    }
+    let rate = if cli.get("rate").is_some() {
+        cli.get_f64("rate", fleet_capacity)?
+    } else {
+        fleet_capacity * cli.get_f64("load", 0.8)?
+    };
+    let policy_name = cli.get_or("policy", "degrade");
+    let policy = SloPolicy::parse(&policy_name)
+        .ok_or_else(|| anyhow!("unknown policy '{policy_name}' (degrade|shed|none)"))?;
+    let router_name = cli.get_or("router", "affinity");
+    let router = RouterPolicy::parse(&router_name)
+        .ok_or_else(|| anyhow!("unknown router '{router_name}' (affinity|random|least-loaded)"))?;
+    let duration_ms = cli.get_f64("duration-s", 30.0)? * 1000.0;
+    let deadline_ms = cli.get_f64("deadline-ms", 1000.0)?;
+    let seed = cli.get_usize("seed", 1)? as u64;
+    let pattern_arg = cli.get_or("pattern", "poisson");
+    let pattern = match pattern_arg.as_str() {
+        "poisson" => ArrivalPattern::Poisson { rate_rps: rate },
+        "bursty" => ArrivalPattern::Bursty {
+            base_rps: rate * 0.4,
+            burst_rps: rate * 2.5,
+            mean_burst_ms: 2_000.0,
+            mean_calm_ms: 6_000.0,
+        },
+        "diurnal" => ArrivalPattern::Diurnal {
+            base_rps: rate * 0.4,
+            peak_rps: rate * 1.6,
+            period_s: duration_ms / 1000.0,
+        },
+        other => return Err(anyhow!("unknown pattern '{other}' (poisson|bursty|diurnal)")),
+    };
+    let mut faults: Vec<Fault> = Vec::new();
+    if let Some(s) = cli.get("kill") {
+        faults.extend(inject::parse_kills(s)?);
+    }
+    if let Some(s) = cli.get("slow") {
+        faults.extend(inject::parse_slows(s)?);
+    }
+    let autoscale = if cli.get_bool("autoscale") {
+        Some(AutoscalePolicy {
+            max_boxes: cli.get_usize("scale-max", 16)?,
+            ..AutoscalePolicy::default()
+        })
+    } else {
+        None
+    };
+    println!(
+        "serve-cluster: {} boxes ({} types), {} config keys, fleet capacity {:.1} rps at \
+         batch {}, target {:.1} rps, policy {}, router {}\n",
+        spec.boxes.len(),
+        spec.num_box_types(),
+        configs.len(),
+        fleet_capacity,
+        batch.max_batch,
+        rate,
+        policy.name(),
+        router.name()
+    );
+    let sc = ClusterScenario {
+        name: format!("{}/{}boxes/{}", ds.name, spec.boxes.len(), pattern.name()),
+        spec,
+        configs,
+        num_points: ds.num_points,
+        queue_capacity: cli.get_usize("queue-cap", 32)?,
+        load: LoadGen {
+            pattern,
+            duration_ms,
+            deadline_ms,
+            hi_frac: cli.get_f64("hi-frac", 0.0)?,
+            mix,
+            seed,
+        },
+        batch,
+        policy,
+        router,
+        router_seed: seed,
+        faults,
+        autoscale,
+    };
+    let trace = cluster::run_cluster(&sc, &planner)?;
+    trace.report.print();
+    if let Some(path) = cli.get("json") {
+        std::fs::write(path, trace.report.to_json().to_string())?;
+        println!("\nreport JSON written to {path}");
     }
     Ok(())
 }

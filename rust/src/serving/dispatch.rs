@@ -10,6 +10,11 @@
 //! started — exactly the Fig. 3 pipelining, applied across requests instead
 //! of within one scene.
 //!
+//! The per-box state machine is [`BoxEngine`]: queue + batcher + SLO policy
+//! + lane clock for one box, drivable event by event. [`run_traffic_trace`]
+//! wraps a single engine in an arrival loop (the one-box gateway);
+//! `cluster::run_cluster` drives one engine per box behind a router.
+//!
 //! A request's life ends in exactly one of four ways — completed, rejected
 //! at admission, expired in queue, or shed by the SLO policy — and the
 //! dispatcher emits one [`RequestOutcome`] per arrival (property-tested in
@@ -73,7 +78,9 @@ pub struct ServeTrafficReport {
     pub pattern: &'static str,
     pub policy: &'static str,
     pub offered_rps: f64,
-    /// Steady-state capacity of config 0 at the full batch size.
+    /// Admission-weighted steady-state capacity across the scenario's
+    /// configs at the full batch size (harmonic mean under the load mix —
+    /// a single-config scenario reports that config's capacity).
     pub capacity_rps: f64,
     /// Arrival-window length, seconds (simulated).
     pub duration_s: f64,
@@ -278,6 +285,14 @@ impl Drop for PipelineExecutor {
     }
 }
 
+/// Poison-tolerant job receive: a worker that panicked while holding the
+/// lock leaves the `Receiver` itself in a consistent state (panics happen
+/// in pipeline code, never mid-`recv`), so surviving workers keep serving
+/// instead of cascading the panic across the whole pool.
+fn recv_job(rx: &Mutex<mpsc::Receiver<ExecJob>>) -> Result<ExecJob, mpsc::RecvError> {
+    rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).recv()
+}
+
 fn worker_loop(
     source: RuntimeSource,
     ds: &'static DatasetCfg,
@@ -291,8 +306,7 @@ fn worker_loop(
             // still answer every job so the dispatcher never blocks
             let msg = format!("{e:#}");
             loop {
-                let job = { rx.lock().unwrap().recv() };
-                let Ok(job) = job else { return };
+                let Ok(job) = recv_job(rx) else { return };
                 let err = anyhow!("worker runtime unavailable: {msg}");
                 if tx.send((job.slot, Err(err))).is_err() {
                     return;
@@ -302,8 +316,7 @@ fn worker_loop(
     };
     let mut pipes: HashMap<String, ScenePipeline<'_>> = HashMap::new();
     loop {
-        let job = { rx.lock().unwrap().recv() };
-        let Ok(job) = job else { return };
+        let Ok(job) = recv_job(rx) else { return };
         let pipe = pipes.entry(pipe_key(&job.cfg)).or_insert_with(|| {
             ScenePipeline::new(&rt, job.cfg.clone()).with_host_exec(host_exec)
         });
@@ -322,83 +335,163 @@ fn worker_loop(
     }
 }
 
-/// Run a scenario to completion on the simulated clock. Returns the report
-/// plus one terminal outcome per arrival (in resolution order).
-///
-/// A configuration the planner cannot cost (malformed manifest, unknown
-/// dataset) surfaces as an error instead of panicking a serving worker.
-pub fn run_traffic_trace(
-    sc: &TrafficScenario,
-    planner: &ServicePlanner,
-    exec: Option<&PipelineExecutor>,
-) -> Result<(ServeTrafficReport, Vec<RequestOutcome>)> {
-    assert!(!sc.configs.is_empty(), "scenario needs at least one detector config");
-    // Build each config's stage graphs once, up front — full path and
-    // degraded fast path. Per-batch costing on the hot path is then a
-    // cache lookup / simulation over these; no graph construction per
-    // dispatch event, and a malformed config fails the whole run here
-    // instead of killing a worker mid-traffic.
-    let fast_pts = slo::degraded_points(sc.num_points);
-    let mut plans: Vec<(StageGraph, DetectorConfig, StageGraph)> =
-        Vec::with_capacity(sc.configs.len());
-    for cfg in &sc.configs {
-        let full = planner.graph(cfg, sc.num_points, false)?;
-        let fast_cfg = slo::degraded_config(cfg);
-        let fast = planner.graph(&fast_cfg, fast_pts, true)?;
-        plans.push((full, fast_cfg, fast));
+/// Per-config plan bundle a [`BoxEngine`] dispatches against: the full
+/// stage graph plus the SLO degrade fast path, built once at construction.
+struct ConfigPlan {
+    cfg: DetectorConfig,
+    full: StageGraph,
+    fast_cfg: DetectorConfig,
+    fast: StageGraph,
+}
+
+/// Lifetime counters of one [`BoxEngine`] — everything a per-box report
+/// row needs, in one `Copy` snapshot.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub completed: usize,
+    pub on_time: usize,
+    pub shed_slo: usize,
+    pub degraded: usize,
+    pub batches: usize,
+    pub batched_reqs: usize,
+    pub rejected_full: usize,
+    pub expired: usize,
+    pub max_queue_depth: usize,
+    pub busy_gpu_ms: f64,
+    pub busy_npu_ms: f64,
+    pub busy_cpu_ms: f64,
+    /// Completion time of the last batch, ms on the simulated clock.
+    pub makespan_ms: f64,
+}
+
+impl EngineStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches > 0 { self.batched_reqs as f64 / self.batches as f64 } else { 0.0 }
     }
-    let arrivals = sc.load.generate();
-    let total = arrivals.len();
-    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(total);
-    let mut queue = AdmissionQueue::new(sc.queue_capacity, 2);
-    let mut now = 0.0f64;
-    let mut lane_free = 0.0f64;
-    let mut i = 0usize;
+}
 
-    let mut makespan_ms = 0.0f64;
-    let mut busy_gpu = 0.0f64;
-    let mut busy_npu = 0.0f64;
-    let mut lat: Vec<f64> = Vec::new();
-    let mut qwait: Vec<f64> = Vec::new();
-    let (mut completed, mut on_time, mut shed_slo, mut degraded) = (0usize, 0usize, 0usize, 0usize);
-    let (mut batches, mut batched_reqs) = (0usize, 0usize);
-
+/// The per-box dispatch state machine: bounded admission queue, dynamic
+/// batcher, SLO policy, and the virtual-time lane clock, packaged so an
+/// external driver (the single-box arrival loop or the cluster router) can
+/// feed it requests and step it event by event.
+///
+/// Protocol: [`offer`](Self::offer) admits arrivals at the current time;
+/// [`advance`](Self::advance) expires stale work and dispatches while the
+/// lane is open, returning the next time this box needs attention (`None`
+/// when idle). The driver owns the clock and must call `advance` with
+/// non-decreasing `now` values.
+pub struct BoxEngine {
+    plans: Vec<ConfigPlan>,
+    batch: BatchPolicy,
+    policy: SloPolicy,
+    queue: AdmissionQueue,
+    lane_free: f64,
+    /// Straggler multiplier: every service time is stretched by this factor
+    /// (1.0 = healthy; fault injection sets it above).
+    slow: f64,
+    makespan_ms: f64,
+    busy_gpu: f64,
+    busy_npu: f64,
+    busy_cpu: f64,
+    lat: Vec<f64>,
+    qwait: Vec<f64>,
+    completed: usize,
+    on_time: usize,
+    shed_slo: usize,
+    degraded: usize,
+    batches: usize,
+    batched_reqs: usize,
     // functional-accuracy accumulators (only with a working executor)
-    let mut exec_ok = exec.is_some();
-    let mut gts: Vec<Vec<Box3>> = Vec::new();
-    let mut dets: Vec<Detection> = Vec::new();
+    exec_ok: bool,
+    gts: Vec<Vec<Box3>>,
+    dets: Vec<Detection>,
+}
 
-    loop {
-        // 1) ingest every arrival due at or before `now`
-        while i < total && arrivals[i].arrival_ms <= now {
-            let r = arrivals[i].clone();
-            i += 1;
-            if queue.offer(r) == AdmitResult::RejectedFull {
-                outcomes.push(RequestOutcome {
-                    id: arrivals[i - 1].id,
-                    kind: OutcomeKind::RejectedFull,
-                    on_time: false,
-                });
-            }
+impl BoxEngine {
+    /// Build the engine's stage graphs once, up front — full path and
+    /// degraded fast path per config. Per-batch costing on the hot path is
+    /// then a cache lookup / simulation over these; no graph construction
+    /// per dispatch event, and a malformed config fails construction here
+    /// instead of killing a worker mid-traffic.
+    pub fn new(
+        planner: &ServicePlanner,
+        configs: &[DetectorConfig],
+        num_points: usize,
+        queue_capacity: usize,
+        batch: BatchPolicy,
+        policy: SloPolicy,
+    ) -> Result<BoxEngine> {
+        assert!(!configs.is_empty(), "engine needs at least one detector config");
+        let fast_pts = slo::degraded_points(num_points);
+        let mut plans = Vec::with_capacity(configs.len());
+        for cfg in configs {
+            let full = planner.graph(cfg, num_points, false)?;
+            let fast_cfg = slo::degraded_config(cfg);
+            let fast = planner.graph(&fast_cfg, fast_pts, true)?;
+            plans.push(ConfigPlan { cfg: cfg.clone(), full, fast_cfg, fast });
         }
-        // 2) expire requests whose deadline passed while queued
-        for r in queue.expire(now) {
+        Ok(BoxEngine {
+            plans,
+            batch,
+            policy,
+            queue: AdmissionQueue::new(queue_capacity, 2),
+            lane_free: 0.0,
+            slow: 1.0,
+            makespan_ms: 0.0,
+            busy_gpu: 0.0,
+            busy_npu: 0.0,
+            busy_cpu: 0.0,
+            lat: Vec::new(),
+            qwait: Vec::new(),
+            completed: 0,
+            on_time: 0,
+            shed_slo: 0,
+            degraded: 0,
+            batches: 0,
+            batched_reqs: 0,
+            exec_ok: true,
+            gts: Vec::new(),
+            dets: Vec::new(),
+        })
+    }
+
+    /// Admit one arrival. A rejection emits its terminal outcome here so
+    /// every request resolves exactly once no matter which box it hit.
+    pub fn offer(&mut self, r: Request, outcomes: &mut Vec<RequestOutcome>) -> AdmitResult {
+        let id = r.id;
+        let res = self.queue.offer(r);
+        if res == AdmitResult::RejectedFull {
+            outcomes.push(RequestOutcome { id, kind: OutcomeKind::RejectedFull, on_time: false });
+        }
+        res
+    }
+
+    /// Expire stale queue entries, then dispatch while the lane is open.
+    /// Returns the next simulated time this box needs attention (batch
+    /// window closing or lane reopening with work queued), `None` if it is
+    /// fully idle until the next arrival.
+    pub fn advance(
+        &mut self,
+        now: f64,
+        planner: &ServicePlanner,
+        exec: Option<&PipelineExecutor>,
+        outcomes: &mut Vec<RequestOutcome>,
+    ) -> Option<f64> {
+        for r in self.queue.expire(now) {
             outcomes.push(RequestOutcome { id: r.id, kind: OutcomeKind::Expired, on_time: false });
         }
-        // 3) dispatch while the lane is open
         let mut wait_hint: Option<f64> = None;
-        while lane_free <= now {
-            match batcher::decide(&mut queue, &sc.batch, now) {
+        while self.lane_free <= now {
+            match batcher::decide(&mut self.queue, &self.batch, now) {
                 batcher::BatchDecision::Dispatch(batch) => {
-                    let ci = batch.key.min(sc.configs.len() - 1);
-                    let cfg = &sc.configs[ci];
-                    let (full_graph, fast_cfg, fast_graph) = &plans[ci];
+                    let ci = batch.key.min(self.plans.len() - 1);
                     let k0 = batch.reqs.len();
-                    let full = planner.cost_of_graph(full_graph, k0);
-                    let fast = planner.cost_of_graph(fast_graph, k0);
-                    let dec = slo::apply(sc.policy, batch.reqs, now, full.total_ms, fast.total_ms);
+                    let full = planner.cost_of_graph(&self.plans[ci].full, k0).scaled(self.slow);
+                    let fast = planner.cost_of_graph(&self.plans[ci].fast, k0).scaled(self.slow);
+                    let dec =
+                        slo::apply(self.policy, batch.reqs, now, full.total_ms, fast.total_ms);
                     for r in &dec.shed {
-                        shed_slo += 1;
+                        self.shed_slo += 1;
                         outcomes.push(RequestOutcome {
                             id: r.id,
                             kind: OutcomeKind::ShedSlo,
@@ -409,48 +502,57 @@ pub fn run_traffic_trace(
                         continue; // whole batch shed; lane still open
                     }
                     let k = dec.dispatch.len();
-                    let (run_cfg, cost) = if dec.degraded {
-                        (fast_cfg, planner.cost_of_graph(fast_graph, k))
+                    let cost = if dec.degraded {
+                        planner.cost_of_graph(&self.plans[ci].fast, k).scaled(self.slow)
                     } else {
-                        (cfg, planner.cost_of_graph(full_graph, k))
+                        planner.cost_of_graph(&self.plans[ci].full, k).scaled(self.slow)
                     };
                     let done = now + cost.total_ms;
-                    lane_free = now + cost.bottleneck_ms;
-                    makespan_ms = makespan_ms.max(done);
-                    busy_gpu += cost.busy_gpu_ms;
-                    busy_npu += cost.busy_npu_ms;
-                    batches += 1;
-                    batched_reqs += k;
-                    if exec_ok {
-                        match exec.expect("exec_ok implies executor").execute(run_cfg, &dec.dispatch)
-                        {
-                            Ok(pairs) => {
-                                for (d, gt) in pairs {
-                                    let scene_idx = gts.len();
-                                    gts.push(gt);
-                                    dets.extend(
-                                        d.into_iter().map(|b| Detection { scene: scene_idx, b }),
-                                    );
+                    self.lane_free = now + cost.bottleneck_ms;
+                    self.makespan_ms = self.makespan_ms.max(done);
+                    self.busy_gpu += cost.busy_gpu_ms;
+                    self.busy_npu += cost.busy_npu_ms;
+                    self.busy_cpu += cost.busy_cpu_ms;
+                    self.batches += 1;
+                    self.batched_reqs += k;
+                    if self.exec_ok {
+                        if let Some(pool) = exec {
+                            let run_cfg = if dec.degraded {
+                                &self.plans[ci].fast_cfg
+                            } else {
+                                &self.plans[ci].cfg
+                            };
+                            match pool.execute(run_cfg, &dec.dispatch) {
+                                Ok(pairs) => {
+                                    for (d, gt) in pairs {
+                                        let scene_idx = self.gts.len();
+                                        self.gts.push(gt);
+                                        self.dets.extend(
+                                            d.into_iter()
+                                                .map(|b| Detection { scene: scene_idx, b }),
+                                        );
+                                    }
                                 }
-                            }
-                            Err(e) => {
-                                eprintln!(
-                                    "functional execution disabled ({e:#}); continuing simulated-only"
-                                );
-                                exec_ok = false;
+                                Err(e) => {
+                                    eprintln!(
+                                        "functional execution disabled ({e:#}); continuing \
+                                         simulated-only"
+                                    );
+                                    self.exec_ok = false;
+                                }
                             }
                         }
                     }
                     for r in &dec.dispatch {
-                        lat.push(done - r.arrival_ms);
-                        qwait.push(now - r.arrival_ms);
-                        completed += 1;
+                        self.lat.push(done - r.arrival_ms);
+                        self.qwait.push(now - r.arrival_ms);
+                        self.completed += 1;
                         let met = done <= r.deadline_ms;
                         if met {
-                            on_time += 1;
+                            self.on_time += 1;
                         }
                         if dec.degraded {
-                            degraded += 1;
+                            self.degraded += 1;
                         }
                         outcomes.push(RequestOutcome {
                             id: r.id,
@@ -466,18 +568,132 @@ pub fn run_traffic_trace(
                 batcher::BatchDecision::Idle => break,
             }
         }
+        let mut hint = f64::INFINITY;
+        if !self.queue.is_empty() {
+            if self.lane_free > now {
+                hint = hint.min(self.lane_free);
+            }
+            if let Some(t) = wait_hint {
+                hint = hint.min(t);
+            }
+        }
+        if hint.is_finite() {
+            Some(hint)
+        } else {
+            None
+        }
+    }
+
+    /// Pull every queued request out (box death / decommission) so the
+    /// caller can reroute them. In-flight batches are unaffected — work
+    /// already dispatched keeps its completion times.
+    pub fn drain(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.queue.len());
+        while let Some(r) = self.queue.pop() {
+            out.push(r);
+        }
+        out
+    }
+
+    /// Set the straggler multiplier applied to every subsequent dispatch
+    /// (1.0 restores nominal speed). In-flight work is not re-priced.
+    pub fn set_slow(&mut self, factor: f64) {
+        self.slow = factor.max(1e-6);
+    }
+
+    pub fn slow(&self) -> f64 {
+        self.slow
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
+    /// Idle = nothing queued and the lane already reopened.
+    pub fn is_idle(&self, now: f64) -> bool {
+        self.queue.is_empty() && self.lane_free <= now
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            completed: self.completed,
+            on_time: self.on_time,
+            shed_slo: self.shed_slo,
+            degraded: self.degraded,
+            batches: self.batches,
+            batched_reqs: self.batched_reqs,
+            rejected_full: self.queue.stats.rejected_full as usize,
+            expired: self.queue.stats.expired as usize,
+            max_queue_depth: self.queue.stats.max_depth,
+            busy_gpu_ms: self.busy_gpu,
+            busy_npu_ms: self.busy_npu,
+            busy_cpu_ms: self.busy_cpu,
+            makespan_ms: self.makespan_ms,
+        }
+    }
+
+    pub fn latencies(&self) -> &[f64] {
+        &self.lat
+    }
+
+    pub fn queue_waits(&self) -> &[f64] {
+        &self.qwait
+    }
+
+    /// mAP@0.25 over functionally executed scenes (None without a working
+    /// executor, or if execution was disabled mid-run).
+    pub fn map_25(&self, planner: &ServicePlanner) -> Option<f64> {
+        if self.exec_ok && !self.gts.is_empty() {
+            Some(eval_map(&self.dets, &self.gts, planner.manifest().num_class(), 0.25).map)
+        } else {
+            None
+        }
+    }
+}
+
+/// Run a scenario to completion on the simulated clock. Returns the report
+/// plus one terminal outcome per arrival (in resolution order).
+///
+/// A configuration the planner cannot cost (malformed manifest, unknown
+/// dataset) surfaces as an error instead of panicking a serving worker.
+pub fn run_traffic_trace(
+    sc: &TrafficScenario,
+    planner: &ServicePlanner,
+    exec: Option<&PipelineExecutor>,
+) -> Result<(ServeTrafficReport, Vec<RequestOutcome>)> {
+    assert!(!sc.configs.is_empty(), "scenario needs at least one detector config");
+    let mut engine = BoxEngine::new(
+        planner,
+        &sc.configs,
+        sc.num_points,
+        sc.queue_capacity,
+        sc.batch,
+        sc.policy,
+    )?;
+    let arrivals = sc.load.generate();
+    let total = arrivals.len();
+    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(total);
+    let mut now = 0.0f64;
+    let mut i = 0usize;
+    loop {
+        // 1) ingest every arrival due at or before `now`
+        while i < total && arrivals[i].arrival_ms <= now {
+            engine.offer(arrivals[i].clone(), &mut outcomes);
+            i += 1;
+        }
+        // 2+3) expire, then dispatch while the lane is open
+        let hint = engine.advance(now, planner, exec, &mut outcomes);
         // 4) advance the clock to the next event
         let mut t_next = f64::INFINITY;
         if let Some(r) = arrivals.get(i) {
             t_next = t_next.min(r.arrival_ms);
         }
-        if !queue.is_empty() {
-            if lane_free > now {
-                t_next = t_next.min(lane_free);
-            }
-            if let Some(t) = wait_hint {
-                t_next = t_next.min(t);
-            }
+        if let Some(h) = hint {
+            t_next = t_next.min(h);
         }
         if !t_next.is_finite() {
             break;
@@ -486,37 +702,38 @@ pub fn run_traffic_trace(
         now = t_next;
     }
 
-    let map_25 = if exec_ok && !gts.is_empty() {
-        Some(eval_map(&dets, &gts, planner.manifest().num_class(), 0.25).map)
-    } else {
-        None
-    };
-    let makespan_s = (makespan_ms / 1000.0).max(sc.load.duration_ms / 1000.0).max(1e-9);
+    let st = engine.stats();
+    let makespan_s = (st.makespan_ms / 1000.0).max(sc.load.duration_ms / 1000.0).max(1e-9);
     let report = ServeTrafficReport {
         scenario: sc.name.clone(),
         pattern: sc.load.pattern.name(),
         policy: sc.policy.name(),
         offered_rps: sc.load.pattern.mean_rps(),
-        capacity_rps: planner.capacity_rps(&sc.configs[0], sc.num_points, sc.batch.max_batch)?,
+        capacity_rps: planner.mixed_capacity_rps(
+            &sc.configs,
+            sc.num_points,
+            sc.batch.max_batch,
+            &sc.load.mix,
+        )?,
         duration_s: sc.load.duration_ms / 1000.0,
         makespan_s,
         arrivals: total,
-        completed,
-        on_time,
-        rejected_full: queue.stats.rejected_full as usize,
-        expired: queue.stats.expired as usize,
-        shed_slo,
-        degraded,
-        batches,
-        mean_batch: if batches > 0 { batched_reqs as f64 / batches as f64 } else { 0.0 },
-        latency_ms: Stats::from(lat),
-        queue_wait_ms: Stats::from(qwait),
-        slo_attainment: if total > 0 { on_time as f64 / total as f64 } else { 1.0 },
-        goodput_rps: on_time as f64 / makespan_s,
-        util_gpu: busy_gpu / 1000.0 / makespan_s,
-        util_npu: busy_npu / 1000.0 / makespan_s,
-        max_queue_depth: queue.stats.max_depth,
-        map_25,
+        completed: st.completed,
+        on_time: st.on_time,
+        rejected_full: st.rejected_full,
+        expired: st.expired,
+        shed_slo: st.shed_slo,
+        degraded: st.degraded,
+        batches: st.batches,
+        mean_batch: st.mean_batch(),
+        latency_ms: Stats::from(engine.latencies().to_vec()),
+        queue_wait_ms: Stats::from(engine.queue_waits().to_vec()),
+        slo_attainment: if total > 0 { st.on_time as f64 / total as f64 } else { 1.0 },
+        goodput_rps: st.on_time as f64 / makespan_s,
+        util_gpu: st.busy_gpu_ms / 1000.0 / makespan_s,
+        util_npu: st.busy_npu_ms / 1000.0 / makespan_s,
+        max_queue_depth: st.max_queue_depth,
+        map_25: engine.map_25(planner),
     };
     Ok((report, outcomes))
 }
@@ -537,13 +754,17 @@ mod tests {
     use crate::serving::loadgen::ArrivalPattern;
     use crate::sim::DeviceKind;
 
-    fn scenario(rate_mult: f64, policy: SloPolicy, seed: u64) -> TrafficScenario {
-        let cfg = DetectorConfig::new(
+    fn split_cfg() -> DetectorConfig {
+        DetectorConfig::new(
             "synrgbd",
             Variant::PointSplit,
             true,
             Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
-        );
+        )
+    }
+
+    fn scenario(rate_mult: f64, policy: SloPolicy, seed: u64) -> TrafficScenario {
+        let cfg = split_cfg();
         let planner = ServicePlanner::synthetic();
         let cap = planner.capacity_rps(&cfg, 2048, 4).unwrap();
         TrafficScenario {
@@ -610,6 +831,94 @@ mod tests {
             "queueing pressure should fill batches: {} vs {}",
             over.mean_batch,
             under.mean_batch
+        );
+    }
+
+    /// Regression (capacity satellite): a single-config scenario must keep
+    /// reporting exactly that config's capacity.
+    #[test]
+    fn single_config_capacity_matches_planner() {
+        let planner = ServicePlanner::synthetic();
+        let sc = scenario(0.5, SloPolicy::None, 5);
+        let rep = run_traffic(&sc, &planner, None).unwrap();
+        let cap = planner.capacity_rps(&sc.configs[0], 2048, 4).unwrap();
+        assert!(
+            (rep.capacity_rps - cap).abs() < 1e-9 * cap,
+            "single-config capacity drifted: {} vs {}",
+            rep.capacity_rps,
+            cap
+        );
+    }
+
+    /// Regression (capacity satellite): a mixed scenario must report the
+    /// admission-weighted capacity, not config 0's — previously a scenario
+    /// mixing a fast and a slow config claimed the fast config's capacity
+    /// for the whole gateway.
+    #[test]
+    fn capacity_reports_admission_weighted_mix() {
+        let planner = ServicePlanner::synthetic();
+        let fast = split_cfg();
+        let slow = DetectorConfig::new(
+            "synrgbd",
+            Variant::PointPainting,
+            false,
+            Schedule::SingleDevice(DeviceKind::Gpu),
+        );
+        let cap_fast = planner.capacity_rps(&fast, 2048, 4).unwrap();
+        let cap_slow = planner.capacity_rps(&slow, 2048, 4).unwrap();
+        assert!(cap_fast > cap_slow, "precondition: the fp32 single-device config is slower");
+        let mut sc = scenario(0.5, SloPolicy::None, 5);
+        sc.configs = vec![fast, slow];
+        sc.load.mix = vec![1.0, 1.0];
+        let rep = run_traffic(&sc, &planner, None).unwrap();
+        let expect = 2.0 / (1.0 / cap_fast + 1.0 / cap_slow);
+        assert!(
+            (rep.capacity_rps - expect).abs() < 1e-6 * expect,
+            "mixed capacity {} vs harmonic mean {}",
+            rep.capacity_rps,
+            expect
+        );
+        // strictly between the two single-config capacities
+        assert!(rep.capacity_rps < cap_fast && rep.capacity_rps > cap_slow);
+    }
+
+    /// The straggler knob scales every charged service time uniformly.
+    #[test]
+    fn straggler_factor_stretches_service_times() {
+        let planner = ServicePlanner::synthetic();
+        let cfg = split_cfg();
+        let run_one = |slow: f64| {
+            let mut e = BoxEngine::new(
+                &planner,
+                std::slice::from_ref(&cfg),
+                2048,
+                8,
+                BatchPolicy { max_batch: 1, max_wait_ms: 0.0 },
+                SloPolicy::None,
+            )
+            .unwrap();
+            e.set_slow(slow);
+            let mut outcomes = Vec::new();
+            let r = Request {
+                id: 0,
+                arrival_ms: 0.0,
+                deadline_ms: 1e9,
+                seed: 1,
+                class: 0,
+                key: 0,
+            };
+            assert_eq!(e.offer(r, &mut outcomes), AdmitResult::Admitted);
+            let hint = e.advance(0.0, &planner, None, &mut outcomes);
+            assert!(hint.is_none(), "single request dispatches immediately");
+            assert_eq!(e.stats().completed, 1);
+            e.stats().makespan_ms
+        };
+        let base = run_one(1.0);
+        let slowed = run_one(3.0);
+        assert!(base > 0.0);
+        assert!(
+            (slowed - 3.0 * base).abs() < 1e-6 * base,
+            "3x straggler: {slowed} ms vs base {base} ms"
         );
     }
 }

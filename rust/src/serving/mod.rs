@@ -21,6 +21,11 @@
 //! it rode in. That means overload behaviour (p99 blow-up, goodput
 //! collapse, the win from degradation) reflects the paper's hardware, not
 //! the host this binary happens to run on. See `docs/SERVING.md`.
+//!
+//! The dispatch loop's per-box state machine is exported as
+//! [`BoxEngine`]: `cluster::run_cluster` drives one engine per edge box
+//! behind a router to scale the gateway out to a heterogeneous fleet (see
+//! `docs/CLUSTER.md`).
 
 pub mod batcher;
 pub mod dispatch;
@@ -30,7 +35,10 @@ pub mod queue;
 pub mod slo;
 
 pub use batcher::{Batch, BatchPolicy};
-pub use dispatch::{run_traffic, ServeTrafficReport, TrafficScenario};
+pub use dispatch::{
+    run_traffic, run_traffic_trace, BoxEngine, EngineStats, OutcomeKind, RequestOutcome,
+    ServeTrafficReport, TrafficScenario,
+};
 pub use loadgen::{ArrivalPattern, LoadGen, Request};
 pub use plan::{PlanCost, ServicePlanner};
 pub use queue::{AdmissionQueue, AdmitResult, QueueStats};

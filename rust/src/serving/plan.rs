@@ -141,6 +141,44 @@ impl ServicePlanner {
         let b = batch.max(1);
         b as f64 / self.cost_of_graph(graph, b).bottleneck_ms * 1000.0
     }
+
+    /// Admission-weighted capacity of a multi-config gateway: the weighted
+    /// *harmonic* mean of per-config capacities under the load mix — a unit
+    /// of mixed traffic occupies `sum(w_i / cap_i)` bottleneck-seconds, so
+    /// that is what the lane sustains, not config 0's rate.
+    ///
+    /// Weight folding mirrors admission exactly: with a single-entry mix
+    /// every request carries key 0 (the load generator's gate), and keys
+    /// beyond the config list clamp to the last config (the dispatcher's
+    /// clamp), so the reported number matches what the lane actually serves.
+    pub fn mixed_capacity_rps(
+        &self,
+        configs: &[DetectorConfig],
+        num_points: usize,
+        batch: usize,
+        mix: &[f64],
+    ) -> Result<f64> {
+        assert!(!configs.is_empty(), "capacity of an empty config set");
+        let mut weights = vec![0.0f64; configs.len()];
+        if mix.len() > 1 {
+            for (k, &m) in mix.iter().enumerate() {
+                weights[k.min(configs.len() - 1)] += m.max(0.0);
+            }
+        }
+        if weights.iter().sum::<f64>() <= 0.0 {
+            weights[0] = 1.0;
+        }
+        let total: f64 = weights.iter().sum();
+        let mut inv = 0.0f64;
+        for (cfg, &w) in configs.iter().zip(&weights) {
+            if w <= 0.0 {
+                continue; // never admitted under this mix; cost is irrelevant
+            }
+            let cap = self.capacity_rps(cfg, num_points, batch)?;
+            inv += (w / total) / cap.max(1e-9);
+        }
+        Ok(1.0 / inv.max(1e-12))
+    }
 }
 
 #[cfg(test)]

@@ -75,6 +75,26 @@ pub struct PlanCost {
     pub bottleneck_ms: f64,
 }
 
+impl PlanCost {
+    /// Uniform service-time stretch (straggler model: a thermally throttled
+    /// or contended box does everything `f`× slower). `f == 1.0` returns
+    /// `self` bit-for-bit, so healthy boxes stay byte-identical to the
+    /// unscaled cost and determinism tests hold.
+    pub fn scaled(&self, f: f64) -> PlanCost {
+        if f == 1.0 {
+            return *self;
+        }
+        PlanCost {
+            total_ms: self.total_ms * f,
+            busy_gpu_ms: self.busy_gpu_ms * f,
+            busy_npu_ms: self.busy_npu_ms * f,
+            busy_cpu_ms: self.busy_cpu_ms * f,
+            comm_ms: self.comm_ms * f,
+            bottleneck_ms: self.bottleneck_ms * f,
+        }
+    }
+}
+
 /// Reduce a simulated timeline to the dispatcher's cost summary.
 pub fn cost_of(tl: &Timeline) -> PlanCost {
     let busy = |k: DeviceKind| tl.busy_ms.get(&k).copied().unwrap_or(0.0);

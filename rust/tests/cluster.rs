@@ -1,0 +1,322 @@
+//! Integration tests for the fleet-level cluster layer: config-affinity
+//! routing vs the random baseline, fail-stop box kills with graceful
+//! rerouting, the rendezvous failover property across seeds, reactive
+//! autoscaling in both directions, and the report's JSON round-trip.
+//! Everything runs on the synthetic manifest and the simulated clock.
+
+use pointsplit::cluster::{
+    config_mix, plan_box, run_cluster, AutoscalePolicy, ClusterScenario, ClusterSpec, ClusterTrace,
+    Fault, RouterPolicy,
+};
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::serving::{ArrivalPattern, BatchPolicy, LoadGen, ServicePlanner, SloPolicy};
+use pointsplit::sim::DeviceKind;
+use pointsplit::util::json::Json;
+
+fn base_cfg() -> DetectorConfig {
+    DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    )
+}
+
+fn fleet_capacity(planner: &ServicePlanner, spec: &ClusterSpec, configs: &[DetectorConfig]) -> f64 {
+    let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
+    let mix = vec![1.0; configs.len()];
+    spec.boxes
+        .iter()
+        .map(|bt| plan_box(planner, bt, configs, 2048, &batch, &mix).unwrap().capacity_rps)
+        .sum()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scenario(
+    spec: &str,
+    configs: Vec<DetectorConfig>,
+    rate_rps: f64,
+    duration_s: f64,
+    deadline_ms: f64,
+    policy: SloPolicy,
+    router: RouterPolicy,
+    seed: u64,
+) -> ClusterScenario {
+    let n = configs.len();
+    let mut load = LoadGen::simple(
+        ArrivalPattern::Poisson { rate_rps },
+        duration_s * 1000.0,
+        deadline_ms,
+        seed,
+    );
+    load.mix = vec![1.0; n];
+    ClusterScenario {
+        name: format!("test-{spec}"),
+        spec: ClusterSpec::parse(spec).unwrap(),
+        configs,
+        num_points: 2048,
+        queue_capacity: 16,
+        load,
+        batch: BatchPolicy { max_batch: 4, max_wait_ms: 25.0 },
+        policy,
+        router,
+        router_seed: seed,
+        faults: Vec::new(),
+        autoscale: None,
+    }
+}
+
+fn assert_conserved(trace: &ClusterTrace) {
+    let r = &trace.report;
+    assert_eq!(trace.outcomes.len(), r.arrivals, "one outcome per arrival");
+    assert_eq!(
+        r.completed + r.rejected_full + r.expired + r.shed_slo,
+        r.arrivals,
+        "outcome counts must partition the arrivals"
+    );
+    let mut ids: Vec<u64> = trace.outcomes.iter().map(|o| o.id).collect();
+    ids.sort_unstable();
+    let n = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "a request resolved twice (double dispatch)");
+}
+
+/// Acceptance: at equal offered load on the identical arrival trace,
+/// config-affinity routing must batch better than random routing — and the
+/// better batching must show up as goodput.
+#[test]
+fn affinity_beats_random_on_batching_and_goodput() {
+    let planner = ServicePlanner::synthetic();
+    let configs = config_mix(&base_cfg(), 4);
+    let spec = "gpu+edgetpu:6";
+    let cap = fleet_capacity(&planner, &ClusterSpec::parse(spec).unwrap(), &configs);
+    let rate = cap * 0.9;
+    let mk = |router: RouterPolicy| {
+        scenario(spec, configs.clone(), rate, 90.0, 2_500.0, SloPolicy::None, router, 77)
+    };
+    let affinity = run_cluster(&mk(RouterPolicy::ConfigAffinity), &planner).unwrap();
+    let random = run_cluster(&mk(RouterPolicy::Random), &planner).unwrap();
+    assert_conserved(&affinity);
+    assert_conserved(&random);
+    // identical trace: both runs saw the same arrivals
+    assert_eq!(affinity.report.arrivals, random.report.arrivals);
+    assert!(
+        affinity.report.mean_batch > random.report.mean_batch,
+        "affinity mean batch {:.2} must beat random {:.2}",
+        affinity.report.mean_batch,
+        random.report.mean_batch
+    );
+    assert!(
+        affinity.report.goodput_rps > random.report.goodput_rps,
+        "affinity goodput {:.2} must beat random {:.2}",
+        affinity.report.goodput_rps,
+        random.report.goodput_rps
+    );
+}
+
+/// Acceptance: a box killed mid-run degrades attainment gracefully — its
+/// queue is drained and rerouted (visible in the report), nothing is lost,
+/// and no request is routed to the dead box afterwards.
+#[test]
+fn killed_box_reroutes_without_losing_requests() {
+    let planner = ServicePlanner::synthetic();
+    let spec = "gpu+edgetpu,gpu,cpu+edgetpu";
+    let configs = config_mix(&base_cfg(), 2);
+    let cap = fleet_capacity(&planner, &ClusterSpec::parse(spec).unwrap(), &configs);
+    let kill_ms = 15_000.0;
+    let mk = |faults: Vec<Fault>| {
+        let mut sc = scenario(
+            spec,
+            configs.clone(),
+            cap * 1.3,
+            30.0,
+            1_000.0,
+            SloPolicy::Degrade,
+            RouterPolicy::ConfigAffinity,
+            13,
+        );
+        sc.queue_capacity = 32;
+        sc.faults = faults;
+        sc
+    };
+    let healthy = run_cluster(&mk(Vec::new()), &planner).unwrap();
+    let sc = mk(vec![Fault::Kill { box_id: 0, at_ms: kill_ms }]);
+    let faulted = run_cluster(&sc, &planner).unwrap();
+    assert_conserved(&healthy);
+    assert_conserved(&faulted);
+    assert_eq!(healthy.report.arrivals, faulted.report.arrivals, "same trace");
+
+    let fr = &faulted.report;
+    assert!(fr.rerouted > 0, "a saturated box must have had queued work to drain");
+    assert!(
+        fr.events.iter().any(|e| e.what.contains("killed")),
+        "kill must appear in the event log"
+    );
+    assert!(!fr.boxes[0].alive, "box 0 must end the run dead");
+    assert!(fr.boxes[0].alive_s < fr.duration_s, "billed only while provisioned");
+    // graceful: still completing work, but strictly worse than the
+    // fault-free run on the same arrivals
+    assert!(fr.on_time > 0, "surviving boxes must keep serving");
+    assert!(
+        fr.on_time < healthy.report.on_time,
+        "losing a box mid-run cannot improve on-time count ({} vs {})",
+        fr.on_time,
+        healthy.report.on_time
+    );
+    // no request was routed to the dead box after the kill: any route to
+    // box 0 belongs to an arrival from before the fault fired
+    let arrivals = sc.load.generate();
+    for (id, box_id, _) in &faulted.routes {
+        if *box_id == 0 {
+            assert!(
+                arrivals[*id as usize].arrival_ms <= kill_ms,
+                "request {id} routed to the dead box after the kill"
+            );
+        }
+    }
+}
+
+/// Rendezvous-hash property, across seeds: while membership is stable each
+/// config key lands on at most `width` (2) boxes, and one fail-stop kill
+/// adds at most one replacement box per key. Conservation holds throughout.
+#[test]
+fn affinity_property_holds_under_failover_across_seeds() {
+    let planner = ServicePlanner::synthetic();
+    let spec = "gpu+edgetpu:5";
+    let configs = config_mix(&base_cfg(), 4);
+    let cap = fleet_capacity(&planner, &ClusterSpec::parse(spec).unwrap(), &configs);
+    for seed in [1u64, 5, 9] {
+        let mut sc = scenario(
+            spec,
+            configs.clone(),
+            cap * 0.8,
+            25.0,
+            1_500.0,
+            SloPolicy::Degrade,
+            RouterPolicy::ConfigAffinity,
+            seed,
+        );
+        sc.faults = vec![Fault::Kill { box_id: 2, at_ms: 10_000.0 }];
+        let trace = run_cluster(&sc, &planner).unwrap();
+        assert_conserved(&trace);
+        let num_keys = sc.configs.len();
+        let mut per_key: Vec<Vec<usize>> = vec![Vec::new(); num_keys];
+        for (_, box_id, key) in &trace.routes {
+            per_key[*key].push(*box_id);
+        }
+        for (key, boxes) in per_key.iter_mut().enumerate() {
+            boxes.sort_unstable();
+            boxes.dedup();
+            assert!(
+                boxes.len() <= 3,
+                "seed {seed}: key {key} spread over {} boxes (width 2 + 1 failover max)",
+                boxes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn autoscaler_adds_boxes_under_overload_and_improves_on_time() {
+    let planner = ServicePlanner::synthetic();
+    let spec = "gpu+edgetpu";
+    let configs = config_mix(&base_cfg(), 2);
+    let cap = fleet_capacity(&planner, &ClusterSpec::parse(spec).unwrap(), &configs);
+    let mk = |autoscale: Option<AutoscalePolicy>| {
+        let mut sc = scenario(
+            spec,
+            configs.clone(),
+            cap * 2.5,
+            30.0,
+            1_000.0,
+            SloPolicy::Degrade,
+            RouterPolicy::ConfigAffinity,
+            21,
+        );
+        sc.autoscale = autoscale;
+        sc
+    };
+    let fixed = run_cluster(&mk(None), &planner).unwrap();
+    let scaled =
+        run_cluster(&mk(Some(AutoscalePolicy { max_boxes: 6, ..Default::default() })), &planner)
+            .unwrap();
+    assert_conserved(&fixed);
+    assert_conserved(&scaled);
+    let sr = &scaled.report;
+    assert!(sr.events.iter().any(|e| e.what.contains("scale-up")), "scale-up must fire at 2.5x");
+    assert!(sr.boxes.len() > 1, "the fleet must actually have grown");
+    assert!(sr.boxes.len() <= 6, "max_boxes bound respected");
+    assert!(
+        sr.on_time > fixed.report.on_time,
+        "extra capacity must convert to on-time completions ({} vs {})",
+        sr.on_time,
+        fixed.report.on_time
+    );
+    assert!(sr.cost_units > fixed.report.cost_units, "extra boxes must show up on the bill");
+}
+
+#[test]
+fn autoscaler_retires_idle_boxes_at_low_load() {
+    let planner = ServicePlanner::synthetic();
+    let spec = "gpu+edgetpu:4";
+    let configs = config_mix(&base_cfg(), 2);
+    let cap = fleet_capacity(&planner, &ClusterSpec::parse(spec).unwrap(), &configs);
+    let mut sc = scenario(
+        spec,
+        configs,
+        cap * 0.05,
+        30.0,
+        1_000.0,
+        SloPolicy::Degrade,
+        RouterPolicy::ConfigAffinity,
+        33,
+    );
+    sc.autoscale = Some(AutoscalePolicy::default());
+    let trace = run_cluster(&sc, &planner).unwrap();
+    assert_conserved(&trace);
+    let r = &trace.report;
+    assert!(r.events.iter().any(|e| e.what.contains("retired")), "scale-down must fire at 5% load");
+    let alive = r.boxes.iter().filter(|b| b.alive).count();
+    assert!(alive < 4, "an idle fleet of 4 must shrink");
+    assert!(alive >= 1, "min_boxes floor respected");
+    // retired boxes stop billing: the bill must undercut 4 boxes all run
+    assert!(
+        r.cost_units < 4.0 * 4.0 * r.duration_s,
+        "bill {:.0} must reflect retired boxes (4 gpu+edgetpu boxes all run would be {:.0})",
+        r.cost_units,
+        4.0 * 4.0 * r.duration_s
+    );
+}
+
+#[test]
+fn cluster_report_json_roundtrips() {
+    let planner = ServicePlanner::synthetic();
+    let spec = "gpu+edgetpu,gpu,cpu+edgetpu";
+    let configs = config_mix(&base_cfg(), 2);
+    let cap = fleet_capacity(&planner, &ClusterSpec::parse(spec).unwrap(), &configs);
+    let mut sc = scenario(
+        spec,
+        configs,
+        cap,
+        20.0,
+        1_000.0,
+        SloPolicy::Degrade,
+        RouterPolicy::ConfigAffinity,
+        3,
+    );
+    sc.faults = vec![Fault::Kill { box_id: 1, at_ms: 10_000.0 }];
+    let trace = run_cluster(&sc, &planner).unwrap();
+    let text = trace.report.to_json().to_string();
+    let parsed = Json::parse(&text).expect("report JSON must parse back");
+    assert_eq!(parsed.req("arrivals").as_usize().unwrap(), trace.report.arrivals);
+    assert_eq!(parsed.req("router").as_str(), Some("affinity"));
+    assert_eq!(parsed.req("boxes").as_arr().unwrap().len(), 3);
+    assert!(!parsed.req("events").as_arr().unwrap().is_empty(), "kill event serialized");
+    let att = parsed.req("slo_attainment").as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&att));
+    assert!(parsed.req("goodput_rps").as_f64().unwrap() >= 0.0);
+    for b in parsed.req("boxes").as_arr().unwrap() {
+        assert!(b.req("capacity_rps").as_f64().unwrap() > 0.0);
+        assert!(b.req("type").as_str().is_some());
+    }
+}
