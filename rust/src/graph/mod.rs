@@ -164,7 +164,7 @@ pub struct StageGraph {
 /// [`StageGraph::build`] and [`StageGraph::quant_rewrite`], so the rewrite
 /// pass cannot drift from the constructor.
 #[allow(clippy::type_complexity)]
-fn nn_assign(
+pub(crate) fn nn_assign(
     m: &Manifest,
     cfg: &DetectorConfig,
     class: StageClass,
@@ -194,7 +194,11 @@ fn nn_assign(
 /// place by their own precision, backbone-class stages by the scheme's
 /// backbone precision — a mixed scheme keeps int8 stages on the NPU while
 /// fp32 ones fall back.
-fn nn_device(cfg: &DetectorConfig, class: StageClass, precision: Precision) -> DeviceKind {
+pub(crate) fn nn_device(
+    cfg: &DetectorConfig,
+    class: StageClass,
+    precision: Precision,
+) -> DeviceKind {
     let point_dev = cfg.schedule.point_dev();
     let nn_dev_raw = cfg.schedule.nn_dev();
     let fall = |p: Precision| {
@@ -521,14 +525,31 @@ impl StageGraph {
             None,
             None,
         );
-        Ok(StageGraph {
+        let g = StageGraph {
             nodes: b.nodes,
             chains,
             sa4_bias: use_bias4,
             cfg: cfg.clone(),
             num_points,
             skip_seg,
-        })
+        };
+        g.debug_verify(m);
+        Ok(g)
+    }
+
+    /// Pass self-verification: every constructor/rewrite output is checked
+    /// against the placement-independent rule set in debug builds (tests,
+    /// CI) at zero release cost. A violation here is a bug in the pass
+    /// itself, so it asserts rather than returning a `Result`.
+    #[inline]
+    fn debug_verify(&self, m: &Manifest) {
+        #[cfg(debug_assertions)]
+        {
+            let rep = crate::verify::verify_structure(m, self);
+            debug_assert!(!rep.has_errors(), "pass output failed verification:\n{rep}");
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = m;
     }
 
     pub fn cfg(&self) -> &DetectorConfig {
@@ -556,7 +577,8 @@ impl StageGraph {
     /// hardware (EdgeTPU: 20 ms per transfer, GPU: 14 ms per dispatch).
     pub fn batch_fold(&self, batch: usize) -> Vec<StageSpec> {
         let k = batch.max(1) as u64;
-        self.nodes
+        let folded: Vec<StageSpec> = self
+            .nodes
             .iter()
             .map(|n| {
                 let mut s = n.spec.clone();
@@ -565,7 +587,13 @@ impl StageGraph {
                 s.workload.wire_bytes *= k;
                 s
             })
-            .collect()
+            .collect();
+        #[cfg(debug_assertions)]
+        {
+            let rep = crate::verify::check_fold(&self.specs(), &folded, batch.max(1));
+            debug_assert!(!rep.has_errors(), "batch_fold output failed verification:\n{rep}");
+        }
+        folded
     }
 
     /// **quant-rewrite**: the same topology under a different
@@ -591,29 +619,52 @@ impl StageGraph {
             node.artifact = Some(art);
             node.qspec = Some(qspec);
         }
-        Ok(StageGraph {
+        let g = StageGraph {
             nodes,
             chains: self.chains.clone(),
             sa4_bias: self.sa4_bias,
             cfg,
             num_points: self.num_points,
             skip_seg: self.skip_seg,
-        })
+        };
+        g.debug_verify(m);
+        Ok(g)
     }
 
     /// Structural fingerprint of the graph: everything that changes what
     /// the simulator or executor would do — stage names, devices,
     /// precisions, workloads, dependency edges, artifact names and quant
-    /// specs — plus the point budget and seg-skip flag. Two configurations
-    /// differing **only** in `QuantScheme` granularity produce different
-    /// fingerprints even when their timing-visible specs coincide (the
-    /// quant specs differ), so plan caches keyed by this value can never
-    /// conflate them.
+    /// specs — plus the point budget, seg-skip flag, the executor-visible
+    /// config knobs (`w0`, `bias_layers`, `obj_thresh`, `nms_iou`) and the
+    /// full SA-chain metadata. Two configurations differing **only** in
+    /// `QuantScheme` granularity produce different fingerprints even when
+    /// their timing-visible specs coincide (the quant specs differ), so
+    /// plan caches keyed by this value can never conflate them. The
+    /// `fingerprint_covers_*` tests pin this completeness.
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv::new();
         h.u64(self.num_points as u64);
         h.u64(self.skip_seg as u64);
         h.u64(self.sa4_bias as u64);
+        // executor-visible config knobs that specs alone don't capture:
+        // sampling-bias strength, bias depth, and the decode thresholds all
+        // change the detections a replayed plan produces
+        h.u64(self.cfg.w0.to_bits() as u64);
+        h.u64(self.cfg.bias_layers as u64);
+        h.u64(self.cfg.obj_thresh.to_bits() as u64);
+        h.u64(self.cfg.nms_iou.to_bits());
+        for c in &self.chains {
+            h.bytes(c.tag.as_bytes());
+            h.u64(c.biased as u64);
+            h.u64(c.subset.map_or(u64::MAX, |s| s as u64));
+            h.u64(c.n0 as u64);
+            for l in &c.levels {
+                for v in [l.pm, l.nn, l.n_in, l.m, l.c, l.start] {
+                    h.u64(v as u64);
+                }
+                h.u64(l.use_bias as u64);
+            }
+        }
         for node in &self.nodes {
             let s = &node.spec;
             h.bytes(s.name.as_bytes());
@@ -781,6 +832,35 @@ mod tests {
         // determinism
         let a2 = StageGraph::build(&m, &split_cfg(), 2048, false).unwrap();
         assert_eq!(a.fingerprint(), a2.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_covers_executor_visible_config_knobs() {
+        // Regression: w0 / obj_thresh / nms_iou change what the executor
+        // *outputs* without changing a single StageSpec, so a plan cache
+        // keyed by a spec-only fingerprint would silently serve one
+        // config's plan (and accuracy expectations) for the other.
+        let m = Manifest::synthetic();
+        let base = StageGraph::build(&m, &split_cfg(), 2048, false).unwrap();
+        let tweaks: [(&str, fn(&mut DetectorConfig)); 4] = [
+            ("w0", |c| c.w0 = 3.0),
+            ("bias_layers", |c| c.bias_layers = 3),
+            ("obj_thresh", |c| c.obj_thresh = 0.05),
+            ("nms_iou", |c| c.nms_iou = 0.5),
+        ];
+        for (knob, tweak) in tweaks {
+            let mut cfg = split_cfg();
+            tweak(&mut cfg);
+            let g = StageGraph::build(&m, &cfg, 2048, false).unwrap();
+            assert_ne!(
+                base.fingerprint(),
+                g.fingerprint(),
+                "fingerprint must discriminate on {knob}"
+            );
+            if knob == "obj_thresh" || knob == "nms_iou" {
+                assert_eq!(base.specs(), g.specs(), "{knob} is timing-invisible by design");
+            }
+        }
     }
 
     #[test]

@@ -204,30 +204,14 @@ pub fn best_schedule(
 
 /// Capability + memory constraints, checked per stage at the folded batch
 /// size (a batch that overflows a device's capacity is rejected even when
-/// a single scene would fit).
+/// a single scene would fit). Delegates to the verifier's shared P001/S001
+/// rule so search rejections and `verify` diagnostics can never disagree.
 fn check_constraints(sim: &ScheduleSim, folded: &[StageSpec]) -> std::result::Result<(), String> {
-    for spec in folded {
-        let dev = sim.device(spec.device);
-        if !dev.supports(spec.workload.kind, spec.precision) {
-            return Err(format!(
-                "stage '{}' ({:?}, {}) unsupported on {}",
-                spec.name,
-                spec.workload.kind,
-                spec.precision.name(),
-                spec.device.name()
-            ));
-        }
-        if !dev.fits(&spec.workload) {
-            return Err(format!(
-                "stage '{}' streams {} B, over the {} capacity of {} B",
-                spec.name,
-                spec.workload.mem_bytes,
-                spec.device.name(),
-                dev.mem_capacity_bytes
-            ));
-        }
+    let rep = crate::verify::check_specs(sim, folded);
+    match rep.errors().first() {
+        Some(d) => Err(d.message.clone()),
+        None => Ok(()),
     }
-    Ok(())
 }
 
 #[cfg(test)]

@@ -43,6 +43,15 @@
 //! points: `cluster::run_cluster` from code, `pointsplit serve-cluster`
 //! from the CLI, and `benches/cluster_scale.rs` for the scaling sweep. See
 //! `docs/CLUSTER.md`.
+//!
+//! # Verifier
+//!
+//! Every IR pass output can be checked statically (`verify`): graph
+//! soundness, precision/capability flow, schedule resource fit, executor
+//! slot-race freedom, and cluster-plan conservation, as structured
+//! diagnostics with stable rule ids. Passes self-verify under
+//! `debug_assertions`; `pointsplit verify` runs the full rule set from the
+//! CLI. Rule catalog: `docs/VERIFIER.md`.
 
 pub mod bench;
 pub mod cluster;
@@ -51,6 +60,8 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod exec;
+// the IR and its verifier stay panic-free: unwrap is denied outside tests
+#[cfg_attr(not(test), deny(clippy::unwrap_used))]
 pub mod graph;
 pub mod metrics;
 pub mod pointops;
@@ -59,3 +70,5 @@ pub mod runtime;
 pub mod serving;
 pub mod sim;
 pub mod util;
+#[cfg_attr(not(test), deny(clippy::unwrap_used))]
+pub mod verify;

@@ -33,6 +33,13 @@
 //!     placement search over the stage graph: enumerate device assignments
 //!     (every Schedule over the available devices) under capability/memory
 //!     constraints, report per-candidate PlanCost, mark the optimum
+//! pointsplit verify   [--artifacts DIR] [--schedule gpu+edgetpu] [--batch 1]
+//!                     [--boxes "gpu+edgetpu:2,gpu:1,cpu+edgetpu:1"] [--configs 2]
+//!                     [--batch-max 4] [--verbose]
+//!     static verification sweep: run the G/P/S/E rule set over every
+//!     built-in configuration (all datasets x variants x precisions, plus
+//!     seg-skip and SLO-degraded rewrites) and the C rules over a cluster
+//!     spec; exit non-zero iff any Error fires (see docs/VERIFIER.md)
 //! pointsplit devices
 //!     print the calibrated device models
 //! ```
@@ -66,6 +73,7 @@ fn run() -> Result<()> {
         "serve-cluster" => cmd_serve_cluster(&cli),
         "quant-report" => cmd_quant_report(&cli),
         "plan-search" => cmd_plan_search(&cli),
+        "verify" => cmd_verify(&cli),
         "devices" => cmd_devices(),
         "probe" => cmd_probe(&cli),
         "" | "help" => {
@@ -73,8 +81,8 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => Err(anyhow!(
-            "unknown command '{other}' \
-             (try: check|detect|serve|serve-traffic|serve-cluster|quant-report|plan-search|devices)"
+            "unknown command '{other}' (try: check|detect|serve|serve-traffic|serve-cluster|\
+             quant-report|plan-search|verify|devices)"
         )),
     }
 }
@@ -83,7 +91,7 @@ fn print_help() {
     println!("pointsplit — on-device 3D detection with heterogeneous accelerators");
     println!(
         "commands: check | detect | serve | serve-traffic | serve-cluster | quant-report | \
-         plan-search | devices   (see rust/src/main.rs docs)"
+         plan-search | verify | devices   (see rust/src/main.rs docs)"
     );
 }
 
@@ -707,6 +715,130 @@ fn cmd_probe(cli: &Cli) -> Result<()> {
             .sqrt();
         println!("out[{i}] shape {:?} mean {mean:.6} std {std:.6} first {:?}", o.shape, &o.data[..6.min(o.data.len())]);
     }
+    Ok(())
+}
+
+/// Static verification sweep (the CI gate): run the full G/P/S/E rule set
+/// over every built-in configuration — all manifest datasets × variants ×
+/// precisions, each as base graph, seg-skip rewrite (painted variants) and
+/// SLO-degraded quant-rewrite — then the C rules over a cluster spec, the
+/// same way `serve-cluster` would provision it. Errors are always printed
+/// and make the command exit non-zero; warnings are advisory (printed
+/// under `--verbose`, counted otherwise).
+fn cmd_verify(cli: &Cli) -> Result<()> {
+    use pointsplit::cluster::{self, ClusterSpec};
+    use pointsplit::verify;
+
+    let manifest = {
+        let path =
+            std::path::Path::new(&cli.get_or("artifacts", "artifacts")).join("manifest.json");
+        match std::fs::read_to_string(&path) {
+            // same policy as plan-search: a present-but-broken manifest is
+            // a hard error; only a genuinely absent file falls back
+            Ok(text) => {
+                println!("manifest: {}", path.display());
+                Manifest::parse(&text)?
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                println!("manifest: synthetic (no exported artifacts found)");
+                Manifest::synthetic()
+            }
+            Err(e) => return Err(anyhow!("reading {}: {e}", path.display())),
+        }
+    };
+    let planner = ServicePlanner::new(manifest);
+    let schedule = parse_schedule(&cli.get_or("schedule", "gpu+edgetpu"))?;
+    let batch = cli.get_usize("batch", 1)?;
+    let verbose = cli.get_bool("verbose");
+
+    let mut datasets: Vec<String> = planner.manifest().datasets.keys().cloned().collect();
+    datasets.sort();
+    let (mut graphs, mut errors, mut warnings) = (0usize, 0usize, 0usize);
+    let mut table = pointsplit::bench::Table::new(&["config", "graphs", "errors", "warnings"]);
+    for dataset in &datasets {
+        let num_points = planner.manifest().datasets[dataset].num_points;
+        for variant in
+            [Variant::VoteNet, Variant::PointPainting, Variant::RandomSplit, Variant::PointSplit]
+        {
+            for int8 in [false, true] {
+                let cfg = DetectorConfig::new(dataset, variant, int8, schedule);
+                let label = format!(
+                    "{dataset}/{}/{}",
+                    cfg.variant.name(),
+                    if int8 { "int8" } else { "fp32" }
+                );
+                let mut reports: Vec<(&str, verify::Report)> = Vec::new();
+                let base = planner.graph(&cfg, num_points, false)?;
+                reports.push((
+                    "base",
+                    verify::verify_all(planner.sim(), planner.manifest(), &base, batch),
+                ));
+                if cfg.variant.painted() {
+                    let skip = planner.graph(&cfg, num_points, true)?;
+                    reports.push((
+                        "seg-skip",
+                        verify::verify_all(planner.sim(), planner.manifest(), &skip, batch),
+                    ));
+                }
+                let fast = pointsplit::serving::slo::degraded_graph(planner.manifest(), &base)?;
+                reports.push((
+                    "degraded",
+                    verify::verify_all(planner.sim(), planner.manifest(), &fast, batch),
+                ));
+                let (mut ne, mut nw) = (0usize, 0usize);
+                for (tag, rep) in &reports {
+                    ne += rep.errors().len();
+                    nw += rep.warnings().len();
+                    for d in &rep.diagnostics {
+                        if d.severity == verify::Severity::Error || verbose {
+                            println!("  {label} [{tag}] {d}");
+                        }
+                    }
+                }
+                graphs += reports.len();
+                errors += ne;
+                warnings += nw;
+                table.row(vec![label, reports.len().to_string(), ne.to_string(), nw.to_string()]);
+            }
+        }
+    }
+    table.print("per-config verification (base + seg-skip + degraded graphs)");
+
+    // the fleet plan, verified exactly the way serve-cluster provisions it
+    let spec = ClusterSpec::parse(&cli.get_or("boxes", "gpu+edgetpu:2,gpu:1,cpu+edgetpu:1"))?;
+    let ds0 = datasets.first().ok_or_else(|| anyhow!("manifest declares no datasets"))?;
+    let base_cfg = DetectorConfig::new(ds0, Variant::PointSplit, true, schedule);
+    let configs = cluster::config_mix(&base_cfg, cli.get_usize("configs", 2)?);
+    let mix = vec![1.0; configs.len()];
+    let bp = BatchPolicy {
+        max_batch: cli.get_usize("batch-max", 4)?,
+        max_wait_ms: cli.get_f64("batch-wait-ms", 25.0)?,
+    };
+    let num_points = planner.manifest().datasets[ds0].num_points;
+    let crep = verify::verify_cluster(&planner, &spec, &configs, num_points, &bp, &mix);
+    for d in &crep.diagnostics {
+        if d.severity == verify::Severity::Error || verbose {
+            println!("  cluster {d}");
+        }
+    }
+    println!(
+        "cluster: {} box types x {} config keys at batch {} — {} error(s), {} warning(s)",
+        spec.num_box_types(),
+        configs.len(),
+        bp.max_batch,
+        crep.errors().len(),
+        crep.warnings().len()
+    );
+    errors += crep.errors().len();
+    warnings += crep.warnings().len();
+
+    println!(
+        "\nverified {graphs} graphs + 1 cluster spec: {errors} error(s), {warnings} warning(s)"
+    );
+    if errors > 0 {
+        return Err(anyhow!("verification failed with {errors} error(s)"));
+    }
+    println!("all checks passed");
     Ok(())
 }
 

@@ -92,146 +92,194 @@ pub struct Manifest {
     by_name: HashMap<String, usize>,
 }
 
-fn pair(j: &Json) -> (usize, usize) {
-    let v = j.usize_vec();
-    (v[0], v[1])
+// Fallible typed readers over [`Json`]. `Manifest::parse` consumes an
+// externally-written file, so every missing key and shape mismatch must
+// surface as a recoverable error naming the offending key — never a panic.
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest: missing required key '{key}'"))
 }
 
-fn cost_pair(j: &Json) -> ((u64, u64), (u64, u64)) {
-    let o = j.req("orig").f64_vec();
-    let p = j.req("pointsplit").f64_vec();
-    ((o[0] as u64, o[1] as u64), (p[0] as u64, p[1] as u64))
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: '{key}' must be a string"))?
+        .to_string())
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize().ok_or_else(|| anyhow!("manifest: '{key}' must be a number"))
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?.as_f64().ok_or_else(|| anyhow!("manifest: '{key}' must be a number"))
+}
+
+fn bool_field(j: &Json, key: &str) -> Result<bool> {
+    req(j, key)?.as_bool().ok_or_else(|| anyhow!("manifest: '{key}' must be a boolean"))
+}
+
+fn arr_field<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    req(j, key)?.as_arr().ok_or_else(|| anyhow!("manifest: '{key}' must be an array"))
+}
+
+fn f64s(j: &Json, ctx: &str) -> Result<Vec<f64>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("manifest: '{ctx}' must be an array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow!("manifest: '{ctx}' must hold numbers")))
+        .collect()
+}
+
+fn usizes(j: &Json, ctx: &str) -> Result<Vec<usize>> {
+    Ok(f64s(j, ctx)?.into_iter().map(|x| x as usize).collect())
+}
+
+fn pair(j: &Json, ctx: &str) -> Result<(usize, usize)> {
+    let v = usizes(j, ctx)?;
+    if v.len() != 2 {
+        return Err(anyhow!("manifest: '{ctx}' must be a [lo, hi] pair, got {} entries", v.len()));
+    }
+    Ok((v[0], v[1]))
+}
+
+fn cost_pair(j: &Json, ctx: &str) -> Result<((u64, u64), (u64, u64))> {
+    let o = f64s(req(j, "orig")?, ctx)?;
+    let p = f64s(req(j, "pointsplit")?, ctx)?;
+    if o.len() != 2 || p.len() != 2 {
+        return Err(anyhow!("manifest: '{ctx}' entries must be [params, madds] pairs"));
+    }
+    Ok(((o[0] as u64, o[1] as u64), (p[0] as u64, p[1] as u64)))
 }
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
-        let classes = j
-            .req("classes")
-            .as_arr()
-            .unwrap()
+        let classes = arr_field(&j, "classes")?
             .iter()
-            .map(|c| c.as_str().unwrap().to_string())
-            .collect();
-        let mean_sizes = j
-            .req("mean_sizes")
-            .as_arr()
-            .unwrap()
+            .map(|c| {
+                Ok(c.as_str()
+                    .ok_or_else(|| anyhow!("manifest: 'classes' must hold strings"))?
+                    .to_string())
+            })
+            .collect::<Result<Vec<String>>>()?;
+        let mean_sizes = arr_field(&j, "mean_sizes")?
             .iter()
             .map(|s| {
-                let v = s.f64_vec();
-                [v[0] as f32, v[1] as f32, v[2] as f32]
+                let v = f64s(s, "mean_sizes")?;
+                if v.len() != 3 {
+                    return Err(anyhow!("manifest: each mean size must be [l, w, h]"));
+                }
+                Ok([v[0] as f32, v[1] as f32, v[2] as f32])
             })
-            .collect();
-        let sa_configs = j
-            .req("sa_configs")
-            .as_arr()
-            .unwrap()
+            .collect::<Result<Vec<_>>>()?;
+        let sa_configs = arr_field(&j, "sa_configs")?
             .iter()
-            .map(|s| SaConfig {
-                m: s.req("m").as_usize().unwrap(),
-                radius: s.req("radius").as_f64().unwrap() as f32,
-                k: s.req("k").as_usize().unwrap(),
-                mlp: s.req("mlp").usize_vec(),
+            .map(|s| {
+                Ok(SaConfig {
+                    m: usize_field(s, "m")?,
+                    radius: f64_field(s, "radius")? as f32,
+                    k: usize_field(s, "k")?,
+                    mlp: usizes(req(s, "mlp")?, "sa_configs.mlp")?,
+                })
             })
-            .collect();
-        let hl = j.req("head_layout");
+            .collect::<Result<Vec<_>>>()?;
+        let hl = req(&j, "head_layout")?;
         let head_layout = HeadLayout {
-            center: pair(hl.req("center")),
-            objectness: pair(hl.req("objectness")),
-            heading_cls: pair(hl.req("heading_cls")),
-            heading_reg: pair(hl.req("heading_reg")),
-            size_cls: pair(hl.req("size_cls")),
-            size_reg: pair(hl.req("size_reg")),
-            sem_cls: pair(hl.req("sem_cls")),
+            center: pair(req(hl, "center")?, "head_layout.center")?,
+            objectness: pair(req(hl, "objectness")?, "head_layout.objectness")?,
+            heading_cls: pair(req(hl, "heading_cls")?, "head_layout.heading_cls")?,
+            heading_reg: pair(req(hl, "heading_reg")?, "head_layout.heading_reg")?,
+            size_cls: pair(req(hl, "size_cls")?, "head_layout.size_cls")?,
+            size_reg: pair(req(hl, "size_reg")?, "head_layout.size_reg")?,
+            sem_cls: pair(req(hl, "sem_cls")?, "head_layout.sem_cls")?,
         };
-        let rg = j.req("role_groups");
-        let groups = |key: &str| -> Vec<Vec<usize>> {
-            rg.req(key).as_arr().unwrap().iter().map(|g| g.usize_vec()).collect()
+        let rg = req(&j, "role_groups")?;
+        let groups = |key: &str| -> Result<Vec<Vec<usize>>> {
+            arr_field(rg, key)?.iter().map(|g| usizes(g, "role_groups")).collect()
         };
-        let quant_param_count = j
-            .req("quant_param_count")
+        let quant_param_count = req(&j, "quant_param_count")?
             .as_obj()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.clone(), v.as_usize().unwrap()))
-            .collect();
-        let datasets = j
-            .req("datasets")
-            .as_obj()
-            .unwrap()
+            .ok_or_else(|| anyhow!("manifest: 'quant_param_count' must be an object"))?
             .iter()
             .map(|(k, v)| {
-                (
+                let n = v.as_usize().ok_or_else(|| {
+                    anyhow!("manifest: 'quant_param_count.{k}' must be a number")
+                })?;
+                Ok((k.clone(), n))
+            })
+            .collect::<Result<HashMap<_, _>>>()?;
+        let datasets = req(&j, "datasets")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: 'datasets' must be an object"))?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
                     k.clone(),
                     DatasetMeta {
-                        num_points: v.req("num_points").as_usize().unwrap(),
-                        room_min: v.req("room_min").as_f64().unwrap(),
-                        room_max: v.req("room_max").as_f64().unwrap(),
-                        min_objects: v.req("min_objects").as_usize().unwrap(),
-                        max_objects: v.req("max_objects").as_usize().unwrap(),
-                        single_view: v.req("single_view").as_bool().unwrap(),
-                        depth_noise: v.req("depth_noise").as_f64().unwrap(),
-                        seg_noise: v.req("seg_noise").as_f64().unwrap(),
+                        num_points: usize_field(v, "num_points")?,
+                        room_min: f64_field(v, "room_min")?,
+                        room_max: f64_field(v, "room_max")?,
+                        min_objects: usize_field(v, "min_objects")?,
+                        max_objects: usize_field(v, "max_objects")?,
+                        single_view: bool_field(v, "single_view")?,
+                        depth_noise: f64_field(v, "depth_noise")?,
+                        seg_noise: f64_field(v, "seg_noise")?,
                     },
-                )
+                ))
             })
-            .collect();
-        let artifacts: Vec<ArtifactMeta> = j
-            .req("artifacts")
-            .as_arr()
-            .unwrap()
+            .collect::<Result<HashMap<_, _>>>()?;
+        let artifacts = arr_field(&j, "artifacts")?
             .iter()
-            .map(|a| ArtifactMeta {
-                name: a.req("name").as_str().unwrap().to_string(),
-                file: a.req("file").as_str().unwrap().to_string(),
-                dataset: a.req("dataset").as_str().unwrap().to_string(),
-                model: a.req("model").as_str().unwrap().to_string(),
-                net: a.req("net").as_str().unwrap().to_string(),
-                precision: a.req("precision").as_str().unwrap().to_string(),
-                input_shapes: a
-                    .req("inputs")
-                    .as_arr()
-                    .unwrap()
-                    .iter()
-                    .map(|i| i.req("shape").usize_vec())
-                    .collect(),
-                flops: a.req("flops").as_f64().unwrap() as u64,
-                bytes_in: a.req("bytes_in").as_f64().unwrap() as u64,
-                wire_bytes_per_elem: a.req("wire_bytes_per_elem").as_f64().unwrap() as u64,
-                out_elems: a
-                    .get("out_elems")
-                    .and_then(|v| v.as_f64())
-                    .map(|v| v as u64)
-                    .unwrap_or(4096),
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: str_field(a, "name")?,
+                    file: str_field(a, "file")?,
+                    dataset: str_field(a, "dataset")?,
+                    model: str_field(a, "model")?,
+                    net: str_field(a, "net")?,
+                    precision: str_field(a, "precision")?,
+                    input_shapes: arr_field(a, "inputs")?
+                        .iter()
+                        .map(|i| usizes(req(i, "shape")?, "artifacts.inputs.shape"))
+                        .collect::<Result<Vec<_>>>()?,
+                    flops: f64_field(a, "flops")? as u64,
+                    bytes_in: f64_field(a, "bytes_in")? as u64,
+                    wire_bytes_per_elem: f64_field(a, "wire_bytes_per_elem")? as u64,
+                    out_elems: a
+                        .get("out_elems")
+                        .and_then(|v| v.as_f64())
+                        .map(|v| v as u64)
+                        .unwrap_or(4096),
+                })
             })
-            .collect();
+            .collect::<Result<Vec<ArtifactMeta>>>()?;
         let by_name = artifacts.iter().enumerate().map(|(i, a)| (a.name.clone(), i)).collect();
-        let fpc = j.req("fp_layer_cost");
+        let fpc = req(&j, "fp_layer_cost")?;
         Ok(Manifest {
             classes,
             mean_sizes,
-            num_heading_bin: j.req("num_heading_bin").as_usize().unwrap(),
-            num_seg_classes: j.req("num_seg_classes").as_usize().unwrap(),
-            img_size: j.req("img_size").as_usize().unwrap(),
+            num_heading_bin: usize_field(&j, "num_heading_bin")?,
+            num_seg_classes: usize_field(&j, "num_seg_classes")?,
+            img_size: usize_field(&j, "img_size")?,
             sa_configs,
-            num_seeds: j.req("num_seeds").as_usize().unwrap(),
-            num_proposals: j.req("num_proposals").as_usize().unwrap(),
-            proposal_radius: j.req("proposal_radius").as_f64().unwrap() as f32,
-            proposal_k: j.req("proposal_k").as_usize().unwrap(),
-            seed_feat: j.req("seed_feat").as_usize().unwrap(),
-            fp_in: j.req("fp_in").as_usize().unwrap(),
-            feat_dim_painted: j.req("feat_dim_painted").as_usize().unwrap(),
-            feat_dim_plain: j.req("feat_dim_plain").as_usize().unwrap(),
+            num_seeds: usize_field(&j, "num_seeds")?,
+            num_proposals: usize_field(&j, "num_proposals")?,
+            proposal_radius: f64_field(&j, "proposal_radius")? as f32,
+            proposal_k: usize_field(&j, "proposal_k")?,
+            seed_feat: usize_field(&j, "seed_feat")?,
+            fp_in: usize_field(&j, "fp_in")?,
+            feat_dim_painted: usize_field(&j, "feat_dim_painted")?,
+            feat_dim_plain: usize_field(&j, "feat_dim_plain")?,
             head_layout,
-            role_groups_vote: groups("vote"),
-            role_groups_prop: groups("prop"),
+            role_groups_vote: groups("vote")?,
+            role_groups_prop: groups("prop")?,
             quant_param_count,
-            fp_layer_cost_mini: cost_pair(fpc.req("mini")),
-            fp_layer_cost_paper: cost_pair(fpc.req("paper_scale")),
+            fp_layer_cost_mini: cost_pair(req(fpc, "mini")?, "fp_layer_cost.mini")?,
+            fp_layer_cost_paper: cost_pair(req(fpc, "paper_scale")?, "fp_layer_cost.paper_scale")?,
             datasets,
-            default_w0: j.req("default_w0").as_f64().unwrap() as f32,
-            default_bias_layers: j.req("default_bias_layers").as_usize().unwrap(),
+            default_w0: f64_field(&j, "default_w0")? as f32,
+            default_bias_layers: usize_field(&j, "default_bias_layers")?,
             artifacts,
             by_name,
         })
@@ -312,6 +360,7 @@ impl Manifest {
         let datasets: HashMap<String, DatasetMeta> = ["synrgbd", "synscan"]
             .iter()
             .map(|name| {
+                // infallible: both names are compiled-in data::DATASETS keys
                 let d = crate::data::dataset(name).expect("builtin dataset");
                 (
                     name.to_string(),
@@ -521,7 +570,9 @@ impl Manifest {
             "seg" => (self.num_seg_classes, Vec::new()),
             "fp_fc" => (self.seed_feat, Vec::new()),
             n if n.starts_with("sa") => {
-                let level = n[2..3].parse::<usize>().unwrap_or(1);
+                // defensive slice: a manifest net label of bare "sa" must
+                // not panic the request path
+                let level = n.get(2..3).and_then(|d| d.parse::<usize>().ok()).unwrap_or(1);
                 let cout = self
                     .sa_configs
                     .get(level.saturating_sub(1))
@@ -612,6 +663,22 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), before, "duplicate artifact names");
+    }
+
+    /// Regression (unwrap-audit satellite): a manifest file a user hands us
+    /// is arbitrary input — malformed shapes must come back as errors that
+    /// name the offending key, never panic the gateway.
+    #[test]
+    fn malformed_manifest_is_an_error_not_a_panic() {
+        assert!(Manifest::parse("{").is_err(), "syntax error");
+        let missing = format!("{:#}", Manifest::parse("{}").unwrap_err());
+        assert!(missing.contains("classes"), "{missing}");
+        let wrong_type = format!("{:#}", Manifest::parse(r#"{"classes": 3}"#).unwrap_err());
+        assert!(wrong_type.contains("classes"), "{wrong_type}");
+        // deep mismatch: a mean-size entry that is not an [l, w, h] triple
+        let bad = r#"{"classes": ["a"], "mean_sizes": [[1, 2]]}"#;
+        let e = format!("{:#}", Manifest::parse(bad).unwrap_err());
+        assert!(e.contains("mean size"), "{e}");
     }
 
     #[test]

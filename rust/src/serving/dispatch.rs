@@ -248,6 +248,8 @@ impl PipelineExecutor {
         cfg: &DetectorConfig,
         reqs: &[Request],
     ) -> Result<Vec<(Vec<Box3>, Vec<Box3>)>> {
+        // invariant, not input-dependent: `job_tx` is only taken in Drop,
+        // so it is always Some while `self` can still be called
         let tx = self.job_tx.as_ref().expect("executor pool alive");
         for (slot, r) in reqs.iter().enumerate() {
             tx.send(ExecJob { cfg: cfg.clone(), seed: r.seed, slot })
@@ -272,6 +274,8 @@ impl PipelineExecutor {
         if let Some(e) = first_err {
             return Err(e);
         }
+        // invariant: the loop above received exactly one result per job and
+        // any per-slot error returned early, so every slot is Some here
         Ok(out.into_iter().map(|o| o.expect("every slot filled")).collect())
     }
 }
@@ -421,7 +425,11 @@ impl BoxEngine {
         batch: BatchPolicy,
         policy: SloPolicy,
     ) -> Result<BoxEngine> {
-        assert!(!configs.is_empty(), "engine needs at least one detector config");
+        // scenario specs come from CLI flags and cluster plans — an empty
+        // config list is malformed input, not a programming error
+        if configs.is_empty() {
+            return Err(anyhow!("engine needs at least one detector config"));
+        }
         let fast_pts = slo::degraded_points(num_points);
         let mut plans = Vec::with_capacity(configs.len());
         for cfg in configs {
@@ -665,7 +673,7 @@ pub fn run_traffic_trace(
     planner: &ServicePlanner,
     exec: Option<&PipelineExecutor>,
 ) -> Result<(ServeTrafficReport, Vec<RequestOutcome>)> {
-    assert!(!sc.configs.is_empty(), "scenario needs at least one detector config");
+    // an empty config list errors inside BoxEngine::new
     let mut engine = BoxEngine::new(
         planner,
         &sc.configs,

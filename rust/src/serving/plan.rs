@@ -57,6 +57,12 @@ impl ServicePlanner {
         &self.manifest
     }
 
+    /// The calibrated device model the planner prices schedules with (the
+    /// verifier runs its schedule rules against the same one).
+    pub fn sim(&self) -> &ScheduleSim {
+        &self.sim
+    }
+
     /// The configuration's stage graph — the same object
     /// `ScenePipeline::run` lowers to execution.
     pub fn graph(
@@ -252,6 +258,26 @@ mod tests {
         c.scheme = c.scheme.with_head(StagePrecision::Int8(Granularity::Channel));
         p.cost(&c, 2048, 1, false).unwrap();
         assert_eq!(p.cache_len(), 3);
+    }
+
+    /// Regression (fingerprint-completeness satellite): the decode
+    /// thresholds and sampling-bias knobs change what the executor outputs
+    /// without touching a single StageSpec — the cache key must still
+    /// separate them, or one config's plan gets served for the other.
+    #[test]
+    fn executor_knobs_never_share_cache() {
+        let p = planner();
+        p.cost(&split_cfg(), 2048, 1, false).unwrap();
+        let mut w = split_cfg();
+        w.w0 = 3.0;
+        p.cost(&w, 2048, 1, false).unwrap();
+        let mut t = split_cfg();
+        t.obj_thresh = 0.05;
+        p.cost(&t, 2048, 1, false).unwrap();
+        let mut n = split_cfg();
+        n.nms_iou = 0.5;
+        p.cost(&n, 2048, 1, false).unwrap();
+        assert_eq!(p.cache_len(), 4, "each executor-visible knob needs its own cache entry");
     }
 
     #[test]

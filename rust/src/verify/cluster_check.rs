@@ -1,0 +1,168 @@
+//! Cluster-plan conservation (C rules): a fleet plan must be able to serve
+//! every request the router can legally hand it, before any traffic flows.
+//!
+//! The router pins any config key to any alive box (rendezvous hashing over
+//! the full key space) and the autoscaler clones the best
+//! capacity-per-cost plan, so the static property to prove is
+//! *conservation*: every box type's plan carries every config key, every
+//! planned schedule stays on devices the box actually has, every planned
+//! graph passes the full G/P/S/E rule set at the fleet batch size, and the
+//! autoscale template exists and verifies under the same rules.
+//!
+//! - **C001** — a box type cannot serve the config set at all (its
+//!   placement search has no feasible assignment, e.g. an EdgeTPU-only box
+//!   with no point-op device), or its plan dropped/added config keys.
+//! - **C002** — a planned schedule names a device outside the box's
+//!   complement: the engine would simulate hardware the box does not have.
+//! - **C003** — a planned config's graph/schedule fails the per-graph rule
+//!   set (diagnostics are nested with a `box '<type>' key <k>:` locus).
+//! - **C004** — no feasible autoscale template: every box type failed
+//!   planning, so the first scale-up decision would abort the fleet.
+
+use super::{verify_all, Report, Severity};
+use crate::cluster::{plan_box, BoxPlan, ClusterSpec};
+use crate::coordinator::DetectorConfig;
+use crate::serving::{BatchPolicy, ServicePlanner};
+
+/// Verify one provisioned box plan against the config-key space of size
+/// `num_keys` (the router's pinnable keys) at the fleet batch size.
+pub fn verify_box_plan(
+    planner: &ServicePlanner,
+    plan: &BoxPlan,
+    num_keys: usize,
+    num_points: usize,
+    batch: usize,
+) -> Report {
+    let mut r = Report::new();
+    let bt = &plan.box_type;
+    if plan.configs.len() != num_keys {
+        r.push(
+            "C001",
+            Severity::Error,
+            format!("box '{}'", bt.name),
+            format!(
+                "plan carries {} configs but the router pins {num_keys} keys — \
+                 requests for the missing keys would clamp to the wrong config",
+                plan.configs.len()
+            ),
+            "plan_box must keep the cluster's config list (and key indexing) intact",
+        );
+    }
+    for (k, cfg) in plan.configs.iter().enumerate() {
+        let locus = format!("box '{}' key {k}", bt.name);
+        for d in [cfg.schedule.point_dev(), cfg.schedule.nn_dev()] {
+            if !bt.devices.contains(&d) {
+                r.push(
+                    "C002",
+                    Severity::Error,
+                    locus.clone(),
+                    format!(
+                        "planned schedule {:?} uses {} which this box does not have \
+                         (complement: {})",
+                        cfg.schedule,
+                        d.name(),
+                        bt.name
+                    ),
+                    "re-run the placement search over exactly the box's devices",
+                );
+            }
+        }
+        match planner.graph(cfg, num_points, false) {
+            Err(e) => {
+                r.push(
+                    "C003",
+                    Severity::Error,
+                    locus,
+                    format!("planned config's graph does not build: {e:#}"),
+                    "the manifest must cover every config the cluster serves",
+                );
+            }
+            Ok(g) => {
+                let sub = verify_all(planner.sim(), planner.manifest(), &g, batch);
+                r.merge_prefixed(&format!("box '{}' key {k}: ", bt.name), sub);
+            }
+        }
+    }
+    r
+}
+
+/// Verify a whole fleet spec: plan every distinct box type the way
+/// `run_cluster` provisions it, check each plan for conservation, and
+/// prove an autoscale template exists (C004) — the same
+/// capacity-per-cost-unit maximum the autoscaler clones on scale-up.
+pub fn verify_cluster(
+    planner: &ServicePlanner,
+    spec: &ClusterSpec,
+    base_configs: &[DetectorConfig],
+    num_points: usize,
+    batch: &BatchPolicy,
+    mix: &[f64],
+) -> Report {
+    let mut r = Report::new();
+    let mut seen: Vec<String> = Vec::new();
+    let mut plans: Vec<BoxPlan> = Vec::new();
+    for bt in &spec.boxes {
+        if seen.iter().any(|n| n == &bt.name) {
+            continue; // one verification per box *type*
+        }
+        seen.push(bt.name.clone());
+        match plan_box(planner, bt, base_configs, num_points, batch, mix) {
+            Err(e) => {
+                r.push(
+                    "C001",
+                    Severity::Error,
+                    format!("box '{}'", bt.name),
+                    format!("box type cannot serve the config set: {e:#}"),
+                    "drop the box type from the spec or relax the config set",
+                );
+            }
+            Ok(plan) => {
+                r.merge(verify_box_plan(
+                    planner,
+                    &plan,
+                    base_configs.len(),
+                    num_points,
+                    batch.max_batch,
+                ));
+                plans.push(plan);
+            }
+        }
+    }
+    // the autoscaler clones the best capacity-per-cost plan; with no
+    // feasible plan the first scale-up decision has nothing to provision
+    let template = plans.iter().max_by(|a, b| {
+        (a.capacity_rps / a.box_type.cost_units)
+            .total_cmp(&(b.capacity_rps / b.box_type.cost_units))
+    });
+    match template {
+        Some(t) => {
+            // the template plan was verified above; surface which type won
+            // only if it somehow carries zero capacity (degenerate fleet)
+            if t.capacity_rps.is_nan() || t.capacity_rps <= 0.0 {
+                r.push(
+                    "C004",
+                    Severity::Error,
+                    format!("autoscale template '{}'", t.box_type.name),
+                    format!(
+                        "template capacity is {} rps — scale-up cannot add capacity",
+                        t.capacity_rps
+                    ),
+                    "fix the template box type's plan or the capacity model",
+                );
+            }
+        }
+        None => {
+            if !spec.boxes.is_empty() {
+                r.push(
+                    "C004",
+                    Severity::Error,
+                    "autoscale template".to_string(),
+                    "no box type yields a feasible plan: the autoscaler has no template to clone"
+                        .to_string(),
+                    "at least one box type must plan successfully",
+                );
+            }
+        }
+    }
+    r
+}

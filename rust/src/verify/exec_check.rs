@@ -1,0 +1,241 @@
+//! Executor-lowering soundness (E rules): prove, statically, that the
+//! closures `ScenePipeline::run` attaches per [`StageClass`] can never
+//! deadlock or race on a [`crate::exec::Slot`].
+//!
+//! The verifier carries a declarative mirror of each stage class's slot
+//! reads/writes — the same dataflow the closures in
+//! `coordinator/pipeline.rs` perform — and checks it against the graph's
+//! declared `deps`/`extra_deps`:
+//!
+//! - **E001** — a stage reads a slot whose producer is not covered by its
+//!   *transitive* declared dependencies. Under `HostExec::Parallel` the
+//!   executor may then run both concurrently: the read panics ("read
+//!   before its producer ran") or observes a torn order. This is exactly
+//!   the PR 2 `sa4_pm` merge bug (dropped cross-pipeline SA3 dependency),
+//!   now caught mechanically — `rust/tests/verify.rs` re-introduces that
+//!   bug in a fixture and pins this rule id.
+//! - **E002** — two stages write the same slot: `Slot::set` on an
+//!   already-full slot is a race regardless of scheduling order.
+//! - **E003** — a stage reads a slot no stage produces and that is not one
+//!   of the externally pre-seeded inputs (plain features for unpainted
+//!   variants, carried-over 2D scores under skip-seg).
+
+use std::collections::HashMap;
+
+use super::{check_edges, Report, Severity};
+use crate::graph::{StageClass, StageGraph};
+
+const SEG_SCORES: &str = "seg scores";
+const POINT_FEATURES: &str = "point features";
+
+fn geo(ci: usize, l: usize) -> String {
+    format!("chain {ci} geo[{l}]")
+}
+
+fn grp(ci: usize, l: usize) -> String {
+    format!("chain {ci} groups[{l}]")
+}
+
+fn feats(ci: usize, l: usize) -> String {
+    format!("chain {ci} feats[{l}]")
+}
+
+/// The slot dataflow of one stage class's compute closure, as (reads,
+/// writes) over abstract slot names. Mirrors `ScenePipeline::run` — if a
+/// closure there gains a new `Slot` read, add it here so the rule set
+/// keeps proving dependency coverage.
+fn slot_io(g: &StageGraph, class: StageClass) -> (Vec<String>, Vec<String>) {
+    let n_chains = g.chains.len();
+    let mut reads: Vec<String> = Vec::new();
+    let mut writes: Vec<String> = Vec::new();
+    match class {
+        StageClass::Seg => writes.push(SEG_SCORES.into()),
+        StageClass::Paint => {
+            reads.push(SEG_SCORES.into());
+            writes.push(POINT_FEATURES.into());
+        }
+        StageClass::SaPm { chain, level } => {
+            if level > 0 {
+                reads.push(geo(chain, level - 1));
+            }
+            let use_bias = g
+                .chains
+                .get(chain)
+                .and_then(|c| c.levels.get(level))
+                .is_some_and(|lv| lv.use_bias);
+            if use_bias {
+                reads.push(POINT_FEATURES.into()); // fg mask biases the FPS
+            }
+            writes.push(geo(chain, level));
+            writes.push(grp(chain, level));
+        }
+        StageClass::SaNn { chain, level } => {
+            reads.push(grp(chain, level));
+            if level > 0 {
+                reads.push(geo(chain, level - 1));
+                reads.push(feats(chain, level - 1));
+            } else {
+                reads.push(POINT_FEATURES.into()); // level-0 gather
+            }
+            writes.push(feats(chain, level));
+        }
+        StageClass::Sa4Pm => {
+            for ci in 0..n_chains {
+                reads.push(geo(ci, 2));
+            }
+            if g.sa4_bias {
+                reads.push(POINT_FEATURES.into()); // Table 10 "all SA layers"
+            }
+            writes.push("sa3 fused geo".into());
+            writes.push("sa4 groups".into());
+            writes.push("sa4 geo".into());
+        }
+        StageClass::Sa4Nn => {
+            for ci in 0..n_chains {
+                reads.push(feats(ci, 2));
+            }
+            reads.push("sa4 groups".into());
+            reads.push("sa3 fused geo".into());
+            writes.push("sa4 feats".into());
+            writes.push("sa3 fused feats".into());
+        }
+        StageClass::FpInterp => {
+            for ci in 0..n_chains {
+                reads.push(geo(ci, 1));
+                reads.push(feats(ci, 1));
+            }
+            reads.push("sa4 feats".into());
+            reads.push("sa4 geo".into());
+            reads.push("sa3 fused feats".into());
+            reads.push("sa3 fused geo".into());
+            writes.push("fp features".into());
+            writes.push("seed xyz".into());
+        }
+        StageClass::FpFc => {
+            reads.push("fp features".into());
+            writes.push("seeds".into());
+        }
+        StageClass::Vote => {
+            reads.push("seeds".into());
+            reads.push("seed xyz".into());
+            writes.push("votes".into());
+        }
+        StageClass::PropPm => {
+            reads.push("votes".into());
+            writes.push("proposal groups".into());
+            writes.push("cluster xyz".into());
+        }
+        StageClass::Prop => {
+            reads.push("proposal groups".into());
+            reads.push("votes".into());
+            writes.push("proposals".into());
+        }
+        StageClass::Decode => {
+            reads.push("cluster xyz".into());
+            reads.push("proposals".into());
+            writes.push("detections".into());
+        }
+    }
+    (reads, writes)
+}
+
+/// Slots `ScenePipeline::run` seeds before submitting the DAG, so a read
+/// with no in-graph producer is still safe.
+fn external_seeds(g: &StageGraph) -> Vec<String> {
+    let painted = g.cfg().variant.painted();
+    let mut seeds: Vec<String> = Vec::new();
+    if painted && g.skip_seg() {
+        seeds.push(SEG_SCORES.into()); // consecutive matching carries scores over
+    }
+    if !painted {
+        seeds.push(POINT_FEATURES.into()); // plain features built up front
+    }
+    seeds
+}
+
+/// Rule family E over the `exec::DagExecutor` lowering of a graph. Edge
+/// sanity (G001/G002) is re-checked first: dangling or forward deps make
+/// the closure analysis itself unsound, so those diagnostics are returned
+/// instead.
+pub fn verify_exec(g: &StageGraph) -> Report {
+    let mut r = Report::new();
+    check_edges(g, &mut r);
+    if r.has_errors() {
+        return r;
+    }
+
+    let n = g.nodes.len();
+    let io: Vec<(Vec<String>, Vec<String>)> =
+        g.nodes.iter().map(|node| slot_io(g, node.class)).collect();
+
+    // E002 — single-producer property
+    let mut producer: HashMap<&str, usize> = HashMap::new();
+    for (i, (_, writes)) in io.iter().enumerate() {
+        for w in writes {
+            if let Some(&first) = producer.get(w.as_str()) {
+                r.push(
+                    "E002",
+                    Severity::Error,
+                    format!("node {i} '{}'", g.nodes[i].spec.name),
+                    format!(
+                        "slot '{w}' written twice: also produced by node {first} '{}'",
+                        g.nodes[first].spec.name
+                    ),
+                    "every slot has exactly one producer; split the output or rename the slot",
+                );
+            } else {
+                producer.insert(w.as_str(), i);
+            }
+        }
+    }
+
+    // transitive dependency closure over deps ∪ extra_deps; indices are
+    // all `< i` after check_edges, so one forward sweep suffices
+    let mut reach: Vec<Vec<bool>> = Vec::with_capacity(n);
+    for node in g.nodes.iter() {
+        let mut row = vec![false; n];
+        for &d in node.spec.deps.iter().chain(node.extra_deps.iter()) {
+            row[d] = true;
+            for (dst, &via) in row.iter_mut().zip(reach[d].iter()) {
+                *dst = *dst || via;
+            }
+        }
+        reach.push(row);
+    }
+
+    let seeds = external_seeds(g);
+    for (i, (reads, _)) in io.iter().enumerate() {
+        for s in reads {
+            match producer.get(s.as_str()) {
+                None => {
+                    if !seeds.contains(s) {
+                        r.push(
+                            "E003",
+                            Severity::Error,
+                            format!("node {i} '{}'", g.nodes[i].spec.name),
+                            format!("reads slot '{s}' that no stage produces and no seed fills"),
+                            "add the producing stage or pre-seed the slot before submission",
+                        );
+                    }
+                }
+                Some(&p) => {
+                    if !reach[i][p] {
+                        r.push(
+                            "E001",
+                            Severity::Error,
+                            format!("node {i} '{}'", g.nodes[i].spec.name),
+                            format!(
+                                "reads slot '{s}' produced by node {p} '{}' which its declared \
+                                 deps do not (transitively) cover — a parallel executor may \
+                                 run the read first",
+                                g.nodes[p].spec.name
+                            ),
+                            "add the producer to deps (timeline) or extra_deps (host ordering)",
+                        );
+                    }
+                }
+            }
+        }
+    }
+    r
+}

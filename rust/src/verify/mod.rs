@@ -1,0 +1,669 @@
+//! `pallas-verify`: a static verifier + lint pass over the [`StageGraph`]
+//! IR, its pass outputs, and the cluster plans derived from it.
+//!
+//! Compilers earn trust with a verifier that runs after every pass; this
+//! module is that verifier for the detector's IR. Checks are composable and
+//! return structured [`Diagnostic`]s (rule id, severity, node/edge locus,
+//! fix hint) instead of booleans or panics, so the same rules serve three
+//! consumers:
+//!
+//! - the `verify` CLI command — non-zero exit iff any error-severity
+//!   diagnostic fires across graphs, schedules, and cluster specs;
+//! - debug-assertion auto-verification after every pass
+//!   ([`StageGraph::build`], [`StageGraph::quant_rewrite`] and
+//!   [`StageGraph::batch_fold`] self-check in debug builds, at zero
+//!   release cost);
+//! - the metamorphic suite (`rust/tests/verify.rs`) asserting each pass is
+//!   invariant-preserving: a clean graph stays clean under batch-fold,
+//!   quant-rewrite, degrade, and placement.
+//!
+//! Rule families (full catalog with example diagnostics: `docs/VERIFIER.md`):
+//!
+//! - **G — graph soundness** (G001–G004): dependency order including
+//!   `extra_deps` (submission order must be topological, exactly what
+//!   [`crate::exec::DagExecutor`] and [`crate::sim::ScheduleSim`] require),
+//!   no dangling dep indices, every node's artifact / [`QuantSpec`] /
+//!   workload consistent with the [`Manifest`] under the shared
+//!   `nn_assign`/`nn_device` derivation, SA-chain metadata matching the
+//!   topology.
+//! - **P — precision & capability flow** (P001–P003): each node's device
+//!   `supports()` its (workload kind, precision); no fp32→int8 edge into an
+//!   NN consumer without an explicit int8 QDQ spec; degenerate placements
+//!   (an NN device assigned but nothing runnable there) flagged.
+//! - **S — schedule / resource analysis** (S001–S004): per-stage memory
+//!   fit at the folded batch, per-device memory across *live intervals* of
+//!   the simulated timeline, every cross-device transfer priced (no free
+//!   edges), batch-fold(k) output exactly k-scalable.
+//! - **E — executor race/deadlock soundness** (E001–E003, [`verify_exec`]):
+//!   for the `exec::DagExecutor` lowering, every [`crate::exec::Slot`] a
+//!   stage closure reads is covered by its transitive declared deps, and no
+//!   slot has two producers — the class of bug the `sa4_pm` merge fix
+//!   closed by hand, caught mechanically.
+//! - **C — cluster-plan conservation** (C001–C004, [`verify_cluster`]):
+//!   every [`crate::cluster::ClusterSpec`] box plan serves every config key
+//!   the router can pin to it, on devices the box actually has; autoscale
+//!   templates verify under the same rules.
+//!
+//! [`QuantSpec`]: crate::quant::QuantSpec
+
+mod cluster_check;
+mod exec_check;
+
+pub use cluster_check::{verify_box_plan, verify_cluster};
+pub use exec_check::verify_exec;
+
+use std::fmt;
+
+use crate::graph::{StageClass, StageGraph};
+use crate::runtime::Manifest;
+use crate::sim::{Device, DeviceKind, Precision, ScheduleSim, StageSpec, WorkloadKind};
+
+/// How bad a finding is. `Error` means the graph/plan would panic, deadlock
+/// or mis-serve at runtime; `Warning` means it executes correctly but is
+/// degenerate or wasteful (reported, never fatal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: a stable rule id, a severity, the node/edge it anchors to,
+/// what is wrong, and how to fix it.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable rule id (`"G001"`, `"P002"`, …) — pinned by the bad-graph
+    /// corpus in `rust/tests/verify.rs` and cataloged in `docs/VERIFIER.md`.
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Where: `"node 12 'sa4_pm'"`, `"edge 3->7"`, `"box 'gpu' key 1"`, …
+    pub locus: String,
+    pub message: String,
+    /// Actionable fix hint.
+    pub hint: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {} (hint: {})",
+            self.severity.name(),
+            self.rule,
+            self.locus,
+            self.message,
+            self.hint
+        )
+    }
+}
+
+/// Outcome of a verification run: every diagnostic, in rule-firing order.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    fn push(
+        &mut self,
+        rule: &'static str,
+        severity: Severity,
+        locus: impl Into<String>,
+        message: impl Into<String>,
+        hint: impl Into<String>,
+    ) {
+        self.diagnostics.push(Diagnostic {
+            rule,
+            severity,
+            locus: locus.into(),
+            message: message.into(),
+            hint: hint.into(),
+        });
+    }
+
+    pub fn errors(&self) -> Vec<&Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).collect()
+    }
+
+    pub fn warnings(&self) -> Vec<&Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).collect()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// No diagnostics at all (not even warnings).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Did a specific rule fire?
+    pub fn fired(&self, rule: &str) -> bool {
+        self.diagnostics.iter().any(|d| d.rule == rule)
+    }
+
+    /// Absorb another report's diagnostics.
+    pub fn merge(&mut self, other: Report) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    /// Absorb another report's diagnostics with every locus prefixed
+    /// (cluster checks nest per-config graph reports this way).
+    pub fn merge_prefixed(&mut self, prefix: &str, other: Report) {
+        for mut d in other.diagnostics {
+            d.locus = format!("{prefix}{}", d.locus);
+            self.diagnostics.push(d);
+        }
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for d in &self.diagnostics {
+            writeln!(f, "{d}")?;
+        }
+        write!(f, "{} error(s), {} warning(s)", self.errors().len(), self.warnings().len())
+    }
+}
+
+/// Verify a graph's structure against its manifest: rule families G
+/// (soundness) and P (precision/capability flow).
+pub fn verify_graph(m: &Manifest, g: &StageGraph) -> Report {
+    let mut r = verify_structure(m, g);
+    if r.has_errors() {
+        // dangling indices make every downstream check unsafe to evaluate
+        return r;
+    }
+    check_capabilities(g, &mut r);
+    check_precision_flow(g, &mut r);
+    check_placement_degeneracy(g, &mut r);
+    r
+}
+
+/// The *placement-independent* subset of [`verify_graph`]: edge sanity,
+/// manifest consistency, chain metadata, and executor slot soundness. This
+/// is what every pass self-checks under `debug_assertions` — capability
+/// rules are deliberately excluded because the placement search builds
+/// graphs for infeasible schedules on purpose (and then rejects them).
+pub fn verify_structure(m: &Manifest, g: &StageGraph) -> Report {
+    let mut r = Report::new();
+    check_edges(g, &mut r);
+    if r.has_errors() {
+        return r;
+    }
+    check_manifest_consistency(m, g, &mut r);
+    check_chains(g, &mut r);
+    r.merge(verify_exec(g));
+    r
+}
+
+/// Verify a schedule lowering at a batch size: rule family S (resources),
+/// plus the structural/capability preconditions that make simulating it
+/// safe at all (a cyclic or unsupported spec list would panic the
+/// simulator — the verifier reports instead).
+pub fn verify_schedule(sim: &ScheduleSim, g: &StageGraph, batch: usize) -> Report {
+    let mut r = Report::new();
+    check_edges(g, &mut r);
+    if r.has_errors() {
+        return r;
+    }
+    let folded = g.batch_fold(batch);
+    r.merge(check_specs(sim, &folded));
+    r.merge(check_fold(&g.specs(), &folded, batch.max(1)));
+    check_priced_edges(g, &mut r);
+    if r.has_errors() {
+        return r;
+    }
+    check_live_memory(sim, &folded, &mut r);
+    r
+}
+
+/// Everything about one graph: structure + executor lowering
+/// ([`verify_graph`] includes the E rules) and the schedule at `batch`.
+pub fn verify_all(sim: &ScheduleSim, m: &Manifest, g: &StageGraph, batch: usize) -> Report {
+    let mut r = verify_graph(m, g);
+    if r.has_errors() {
+        return r; // schedule checks would only repeat the structural errors
+    }
+    r.merge(verify_schedule(sim, g, batch));
+    r
+}
+
+// --------------------------------------------------------------- G family
+
+/// G001/G002: every dep (timeline and host-ordering alike) must point to an
+/// existing, *earlier* node. Submission order is the topological order both
+/// the executor and the simulator rely on, so a forward or self edge is the
+/// static form of a cycle/deadlock: `DagExecutor::run` would reject it and
+/// `ScheduleSim::run` would panic on it.
+pub(crate) fn check_edges(g: &StageGraph, r: &mut Report) {
+    for (i, node) in g.nodes.iter().enumerate() {
+        let kinds = [("dep", &node.spec.deps), ("extra_dep", &node.extra_deps)];
+        for (kind, deps) in kinds {
+            for &d in deps.iter() {
+                if d >= g.nodes.len() {
+                    r.push(
+                        "G002",
+                        Severity::Error,
+                        format!("node {i} '{}'", node.spec.name),
+                        format!("{kind} {d} dangles: the graph has {} nodes", g.nodes.len()),
+                        "remove the edge or re-point it at an existing node",
+                    );
+                } else if d >= i {
+                    r.push(
+                        "G001",
+                        Severity::Error,
+                        format!("edge {d}->{i} '{}'", node.spec.name),
+                        format!(
+                            "{kind} on {} node {d}: submission order must be topological \
+                             (a forward/self edge is a cycle to the executor)",
+                            if d == i { "its own" } else { "a later" }
+                        ),
+                        "declare producers before consumers; never edge forward",
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// G003: every NN node's artifact, quant spec, precision and workload must
+/// equal what the shared `nn_assign`/`nn_device` derivation produces for
+/// its class under the graph's config — i.e. the node is consistent with
+/// the [`Manifest`] (artifact exists, channel widths match the declared
+/// quant roles) and with the per-precision placement rule. Point-op nodes
+/// must carry neither artifact nor quant spec.
+fn check_manifest_consistency(m: &Manifest, g: &StageGraph, r: &mut Report) {
+    let cfg = g.cfg();
+    for (i, node) in g.nodes.iter().enumerate() {
+        let locus = format!("node {i} '{}'", node.spec.name);
+        let derived = match crate::graph::nn_assign(m, cfg, node.class) {
+            Ok(d) => d,
+            Err(e) => {
+                r.push(
+                    "G003",
+                    Severity::Error,
+                    locus,
+                    format!("manifest cannot satisfy this node's class: {e:#}"),
+                    "export the artifact (make artifacts) or fix the config's dataset/scheme",
+                );
+                continue;
+            }
+        };
+        match derived {
+            None => {
+                if node.artifact.is_some() || node.qspec.is_some() {
+                    r.push(
+                        "G003",
+                        Severity::Error,
+                        locus,
+                        "point-op node carries an artifact or quant spec",
+                        "only NN stage classes execute manifest artifacts",
+                    );
+                }
+            }
+            Some((art, precision, wl, qspec)) => {
+                let mut bad: Vec<&str> = Vec::new();
+                if node.artifact.as_deref() != Some(art.as_str()) {
+                    bad.push("artifact");
+                }
+                if node.qspec.as_ref() != Some(&qspec) {
+                    bad.push("quant spec");
+                }
+                if node.spec.precision != precision {
+                    bad.push("precision");
+                }
+                if node.spec.workload != wl {
+                    bad.push("workload");
+                }
+                if node.spec.device != crate::graph::nn_device(cfg, node.class, precision) {
+                    bad.push("device");
+                }
+                if !bad.is_empty() {
+                    r.push(
+                        "G003",
+                        Severity::Error,
+                        locus,
+                        format!(
+                            "{} drifted from the manifest derivation for {:?} \
+                             (expected artifact '{art}')",
+                            bad.join(" + "),
+                            node.class
+                        ),
+                        "re-derive NN nodes through nn_assign/nn_device; never hand-edit them",
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// G004: the SA-chain metadata (`chains`) must match the node topology —
+/// right number of chains and levels, indices of the declared classes,
+/// PointNet depending on its point-manip stage, and the point budget
+/// chaining `level[l+1].n_in == level[l].m` the exec lowering assumes.
+fn check_chains(g: &StageGraph, r: &mut Report) {
+    let want_chains = if g.cfg().variant.split() { 2 } else { 1 };
+    if g.chains.len() != want_chains {
+        r.push(
+            "G004",
+            Severity::Error,
+            "chains".to_string(),
+            format!("{} chains declared, variant implies {want_chains}", g.chains.len()),
+            "chain metadata must mirror the variant's pipeline structure",
+        );
+    }
+    for (ci, chain) in g.chains.iter().enumerate() {
+        let locus = format!("chain {ci} '{}'", chain.tag);
+        if chain.levels.len() != 3 {
+            r.push(
+                "G004",
+                Severity::Error,
+                locus,
+                format!("{} SA levels declared, the backbone has exactly 3", chain.levels.len()),
+                "declare SA1..SA3 per chain; SA4 is a fused top-level stage",
+            );
+            continue;
+        }
+        let mut n_in = chain.n0;
+        for (l, lvl) in chain.levels.iter().enumerate() {
+            let locus = format!("chain {ci} '{}' level {l}", chain.tag);
+            let pm_ok = g
+                .nodes
+                .get(lvl.pm)
+                .is_some_and(|n| n.class == StageClass::SaPm { chain: ci, level: l });
+            let nn_ok = g
+                .nodes
+                .get(lvl.nn)
+                .is_some_and(|n| n.class == StageClass::SaNn { chain: ci, level: l });
+            if !pm_ok || !nn_ok {
+                r.push(
+                    "G004",
+                    Severity::Error,
+                    locus,
+                    format!(
+                        "level points at nodes {}/{} which are not its SaPm/SaNn stages",
+                        lvl.pm, lvl.nn
+                    ),
+                    "chain level indices must reference the matching stage-class nodes",
+                );
+                continue;
+            }
+            if !g.nodes[lvl.nn].spec.deps.contains(&lvl.pm) {
+                r.push(
+                    "G004",
+                    Severity::Error,
+                    locus,
+                    format!(
+                        "PointNet node {} does not depend on its point-manip {}",
+                        lvl.nn, lvl.pm
+                    ),
+                    "the NN stage consumes the grouping its pm stage produces",
+                );
+            }
+            if lvl.n_in != n_in {
+                r.push(
+                    "G004",
+                    Severity::Error,
+                    locus,
+                    format!("n_in {} breaks the chain: previous level sampled {n_in}", lvl.n_in),
+                    "level l+1 consumes exactly the centroids level l sampled",
+                );
+            }
+            n_in = lvl.m;
+        }
+    }
+}
+
+// --------------------------------------------------------------- P family
+
+/// P001 at batch 1 — see [`check_specs`] for the shared per-spec rule.
+fn check_capabilities(g: &StageGraph, r: &mut Report) {
+    for (i, node) in g.nodes.iter().enumerate() {
+        let s = &node.spec;
+        if !Device::by_kind(s.device).supports(s.workload.kind, s.precision) {
+            r.push(
+                "P001",
+                Severity::Error,
+                format!("node {i} '{}'", s.name),
+                format!(
+                    "stage ({:?}, {}) unsupported on {} — it would panic at dispatch",
+                    s.workload.kind,
+                    s.precision.name(),
+                    s.device.name()
+                ),
+                "re-place via the precision rule (fp32 NN falls back off the EdgeTPU)",
+            );
+        }
+    }
+}
+
+/// P002: an fp32→int8 edge into an NN consumer needs an explicit quantize
+/// step. In this IR the QDQ boundary is the consumer's [`QuantSpec`]
+/// (`crate::runtime` quantizes activations under it before the int8
+/// matmul), so an int8 NN node fed fp32 data without an int8 spec has no
+/// defined numeric behaviour.
+fn check_precision_flow(g: &StageGraph, r: &mut Report) {
+    for (i, node) in g.nodes.iter().enumerate() {
+        let s = &node.spec;
+        if s.precision != Precision::Int8 || s.workload.kind != WorkloadKind::NeuralNet {
+            continue;
+        }
+        let fp32_feed = s.deps.iter().any(|&d| g.nodes[d].spec.precision == Precision::Fp32);
+        let has_qdq = node.qspec.as_ref().is_some_and(|q| q.precision.is_int8());
+        if fp32_feed && !has_qdq {
+            r.push(
+                "P002",
+                Severity::Error,
+                format!("node {i} '{}'", s.name),
+                "fp32->int8 edge without a QDQ role: int8 NN consumer of fp32 data \
+                 carries no int8 quant spec",
+                "attach the scheme's QuantSpec so activations are quantized at the boundary",
+            );
+        }
+    }
+}
+
+/// P003 (warning): the schedule names an NN device but no node actually
+/// lands there (e.g. an fp32 scheme with an EdgeTPU NN assignment — every
+/// NN stage falls back to the point device). The graph executes correctly,
+/// but the placement label is a degenerate alias of a cheaper assignment;
+/// the placement search refuses to rank such candidates for the same
+/// reason.
+fn check_placement_degeneracy(g: &StageGraph, r: &mut Report) {
+    let sched = g.cfg().schedule;
+    let (pd, nd) = (sched.point_dev(), sched.nn_dev());
+    if nd != pd && !g.nodes.iter().any(|n| n.spec.device == nd) {
+        r.push(
+            "P003",
+            Severity::Warning,
+            format!("schedule {sched:?}"),
+            format!(
+                "degenerate placement: no stage of this scheme can execute on {} \
+                 (fp32 NN falls back to {})",
+                nd.name(),
+                pd.name()
+            ),
+            "quantize the scheme or drop the unused device from the schedule",
+        );
+    }
+}
+
+// --------------------------------------------------------------- S family
+
+/// P001 + S001 over an explicit (possibly folded) spec list: capability and
+/// single-stage memory fit against the given device models. Shared with
+/// the placement search's feasibility check, so search rejections and
+/// verifier diagnostics can never disagree.
+pub fn check_specs(sim: &ScheduleSim, specs: &[StageSpec]) -> Report {
+    let mut r = Report::new();
+    for (i, s) in specs.iter().enumerate() {
+        let dev = sim.device(s.device);
+        if !dev.supports(s.workload.kind, s.precision) {
+            r.push(
+                "P001",
+                Severity::Error,
+                format!("node {i} '{}'", s.name),
+                format!(
+                    "stage '{}' ({:?}, {}) unsupported on {}",
+                    s.name,
+                    s.workload.kind,
+                    s.precision.name(),
+                    s.device.name()
+                ),
+                "re-place via the precision rule (fp32 NN falls back off the EdgeTPU)",
+            );
+        } else if !dev.fits(&s.workload) {
+            r.push(
+                "S001",
+                Severity::Error,
+                format!("node {i} '{}'", s.name),
+                format!(
+                    "stage '{}' streams {} B, over the {} capacity of {} B",
+                    s.name,
+                    s.workload.mem_bytes,
+                    s.device.name(),
+                    dev.mem_capacity_bytes
+                ),
+                "shrink the batch or place the stage on a device with more memory",
+            );
+        }
+    }
+    r
+}
+
+/// S004: `batch_fold(k)` must be *exactly* k-scalable — identical names,
+/// devices, precisions and dependency edges, with every workload dimension
+/// scaled by exactly k (dispatch/transfer setup costs are per-stage and
+/// amortize by construction; anything else is a broken pass).
+pub fn check_fold(base: &[StageSpec], folded: &[StageSpec], k: usize) -> Report {
+    let mut r = Report::new();
+    let k64 = k.max(1) as u64;
+    if base.len() != folded.len() {
+        r.push(
+            "S004",
+            Severity::Error,
+            "batch-fold".to_string(),
+            format!("fold changed the stage count: {} -> {}", base.len(), folded.len()),
+            "batch-fold scales workloads; it never reshapes the DAG",
+        );
+        return r;
+    }
+    for (i, (b, f)) in base.iter().zip(folded.iter()).enumerate() {
+        let locus = format!("node {i} '{}'", b.name);
+        if b.name != f.name
+            || b.device != f.device
+            || b.precision != f.precision
+            || b.deps != f.deps
+            || b.workload.kind != f.workload.kind
+        {
+            r.push(
+                "S004",
+                Severity::Error,
+                locus,
+                "fold changed a non-workload field (name/device/precision/deps/kind)",
+                "batch-fold scales workloads; it never reshapes the DAG",
+            );
+            continue;
+        }
+        let pairs = [
+            ("flops", b.workload.flops, f.workload.flops),
+            ("mem_bytes", b.workload.mem_bytes, f.workload.mem_bytes),
+            ("wire_bytes", b.workload.wire_bytes, f.workload.wire_bytes),
+        ];
+        for (field, bv, fv) in pairs {
+            if fv != bv * k64 {
+                r.push(
+                    "S004",
+                    Severity::Error,
+                    format!("node {i} '{}'", b.name),
+                    format!("{field} not k-scalable: {bv} folded to {fv}, expected {}", bv * k64),
+                    "every workload dimension scales by exactly the batch size",
+                );
+            }
+        }
+    }
+    r
+}
+
+/// S003: every cross-device edge must be priced — a producer whose output
+/// crosses a device boundary with `wire_bytes == 0` would make the
+/// simulator (and hence the planner, dispatcher and autoscaler) treat the
+/// transfer as free.
+fn check_priced_edges(g: &StageGraph, r: &mut Report) {
+    for (i, node) in g.nodes.iter().enumerate() {
+        for &d in &node.spec.deps {
+            let p = &g.nodes[d].spec;
+            if p.device != node.spec.device && p.workload.wire_bytes == 0 {
+                r.push(
+                    "S003",
+                    Severity::Error,
+                    format!("edge {d}->{i} '{}'->'{}'", p.name, node.spec.name),
+                    format!(
+                        "free cross-device edge: '{}' ({}) feeds '{}' ({}) with 0 wire bytes",
+                        p.name,
+                        p.device.name(),
+                        node.spec.name,
+                        node.spec.device.name()
+                    ),
+                    "set the producer's wire_bytes to its activation size",
+                );
+            }
+        }
+    }
+}
+
+/// S002 (warning): per-device memory fit across *live intervals* of the
+/// simulated timeline. Single-stage fit (S001) is necessary but not
+/// sufficient — stages whose intervals overlap on one device (the CPU's
+/// concurrent point-op and NN lanes) must fit together.
+fn check_live_memory(sim: &ScheduleSim, folded: &[StageSpec], r: &mut Report) {
+    let tl = sim.run(folded);
+    for kind in [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::EdgeTpu] {
+        let cap = sim.device(kind).mem_capacity_bytes;
+        // (time, +/- working set) events over [start, end) of each stage
+        let mut events: Vec<(f64, i128)> = Vec::new();
+        for iv in tl.stages.iter().filter(|iv| iv.device == kind) {
+            let mem = folded
+                .iter()
+                .find(|s| s.name == iv.name)
+                .map_or(0i128, |s| s.workload.mem_bytes as i128);
+            if mem > 0 {
+                events.push((iv.start_ms, mem));
+                events.push((iv.end_ms, -mem));
+            }
+        }
+        // releases before acquisitions at equal timestamps
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let (mut live, mut peak) = (0i128, 0i128);
+        for (_, delta) in events {
+            live += delta;
+            peak = peak.max(live);
+        }
+        if peak > cap as i128 {
+            r.push(
+                "S002",
+                Severity::Warning,
+                format!("device {}", kind.name()),
+                format!(
+                    "live working sets peak at {peak} B, over the {} capacity of {cap} B",
+                    kind.name()
+                ),
+                "reduce the batch or serialize the overlapping stages",
+            );
+        }
+    }
+}

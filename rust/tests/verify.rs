@@ -1,0 +1,333 @@
+//! Acceptance suite for the static verifier (`pointsplit::verify`).
+//!
+//! Two halves:
+//!   1. Metamorphic properties (custom harness in `util::prop`): if a built
+//!      graph verifies clean, then every pass output derived from it —
+//!      `batch_fold`, `quant_rewrite`, the SLO degrade rewrite, and the
+//!      schedule the placement search ranks best — verifies clean too.
+//!      Random configurations cover corners the shipped-config sweep in
+//!      `pointsplit verify` never enumerates.
+//!   2. A seeded corpus of known-bad graphs, each pinned to the rule id
+//!      that must catch it via `Report::fired` — so a rule renumbering or
+//!      an accidentally-broadened sibling check cannot silently absorb a
+//!      case. The E001 entry re-introduces the PR 2 sa4 merge bug.
+
+use pointsplit::cluster::{config_mix, ClusterSpec};
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::graph::{place, StageClass, StageGraph};
+use pointsplit::quant::{Granularity, QuantScheme};
+use pointsplit::runtime::Manifest;
+use pointsplit::serving::{slo, BatchPolicy, ServicePlanner};
+use pointsplit::sim::{DeviceKind, ScheduleSim, WorkloadKind};
+use pointsplit::util::prop::{check, PropConfig};
+use pointsplit::util::rng::Rng;
+use pointsplit::verify;
+
+const VARIANTS: [Variant; 4] =
+    [Variant::VoteNet, Variant::PointPainting, Variant::RandomSplit, Variant::PointSplit];
+const ALL_DEVICES: [DeviceKind; 3] = [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::EdgeTpu];
+
+fn pipelined() -> Schedule {
+    Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu }
+}
+
+/// The shipped flagship config, built: the corpus mutates copies of this.
+fn split_graph() -> (Manifest, StageGraph) {
+    let m = Manifest::synthetic();
+    let cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, true, pipelined());
+    let g = StageGraph::build(&m, &cfg, 2048, false).expect("shipped config must build");
+    (m, g)
+}
+
+/// A random but *valid* configuration: any dataset/variant/precision, any
+/// schedule whose point device can actually run point ops (the EdgeTPU
+/// cannot — solo-EdgeTPU is a legitimately infeasible placement, not a
+/// metamorphic counterexample).
+fn random_config(rng: &mut Rng) -> DetectorConfig {
+    let point = [DeviceKind::Cpu, DeviceKind::Gpu][rng.below(2)];
+    let nn = ALL_DEVICES[rng.below(3)];
+    let schedule = match rng.below(3) {
+        0 => Schedule::SingleDevice(point),
+        1 => Schedule::Sequential { point_dev: point, nn_dev: nn },
+        _ => Schedule::Pipelined { point_dev: point, nn_dev: nn },
+    };
+    let ds = ["synrgbd", "synscan"][rng.below(2)];
+    let mut cfg = DetectorConfig::new(ds, VARIANTS[rng.below(4)], rng.below(2) == 0, schedule);
+    cfg.w0 = [1.0, 2.0, 4.0][rng.below(3)];
+    cfg.bias_layers = rng.below(4);
+    cfg
+}
+
+// ----------------------------------------------------- metamorphic properties
+
+/// verify(g) clean ⇒ verify of every pass output clean: batch_fold is
+/// exactly k-scalable, quant_rewrite and the SLO degrade rewrite produce
+/// graphs that verify, and the placement search's best-ranked schedule
+/// rebuilds into a graph that passes the full rule set.
+#[test]
+fn prop_passes_preserve_verification() {
+    let m = Manifest::synthetic();
+    let sim = ScheduleSim::new();
+    check("verify-metamorphic", PropConfig { cases: 48, seed: 0x5EED }, |rng, _size| {
+        let cfg = random_config(rng);
+        let num_points = [1024, 2048][rng.below(2)];
+        let skip_seg = cfg.variant.painted() && rng.below(2) == 0;
+        let g = StageGraph::build(&m, &cfg, num_points, skip_seg)
+            .map_err(|e| format!("build: {e:#}"))?;
+        let base = verify::verify_graph(&m, &g);
+        if base.has_errors() {
+            return Err(format!("base graph must verify clean:\n{base}"));
+        }
+
+        let k = 1 + rng.below(4);
+        let fold = verify::check_fold(&g.specs(), &g.batch_fold(k), k);
+        if fold.has_errors() {
+            return Err(format!("batch_fold({k}) broke k-scalability:\n{fold}"));
+        }
+
+        let scheme = match rng.below(4) {
+            0 => QuantScheme::fp32(),
+            1 => QuantScheme::int8(Granularity::Layer),
+            2 => QuantScheme::int8(Granularity::Role),
+            _ => cfg.scheme.degraded(),
+        };
+        let rw = g.quant_rewrite(&m, scheme).map_err(|e| format!("quant_rewrite: {e:#}"))?;
+        let r = verify::verify_graph(&m, &rw);
+        if r.has_errors() {
+            return Err(format!("quant_rewrite output failed verification:\n{r}"));
+        }
+
+        let fast = slo::degraded_graph(&m, &g).map_err(|e| format!("degraded_graph: {e:#}"))?;
+        let r = verify::verify_graph(&m, &fast);
+        if r.has_errors() {
+            return Err(format!("degraded_graph output failed verification:\n{r}"));
+        }
+
+        let s = place::search(&m, &cfg, num_points, 1, &ALL_DEVICES, place::Objective::Latency)
+            .map_err(|e| format!("place::search: {e:#}"))?;
+        let best = s.best().ok_or_else(|| "search ranked no candidates".to_string())?;
+        let mut placed = cfg.clone();
+        placed.schedule = best.schedule;
+        let g2 = StageGraph::build(&m, &placed, num_points, skip_seg)
+            .map_err(|e| format!("build(best placement): {e:#}"))?;
+        let r = verify::verify_all(&sim, &m, &g2, 1);
+        if r.has_errors() {
+            return Err(format!("best-ranked placement failed verification:\n{r}"));
+        }
+        Ok(())
+    });
+}
+
+/// Exhaustive version of the placement clause: *every* candidate the search
+/// ranks (not just the best) rebuilds into a clean graph. The search rejects
+/// through the verifier's own shared P001/S001 rule, so a ranked-but-broken
+/// schedule would mean the two code paths disagree.
+#[test]
+fn placement_candidates_verify_clean() {
+    let m = Manifest::synthetic();
+    let sim = ScheduleSim::new();
+    for int8 in [false, true] {
+        let cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, int8, pipelined());
+        let s = place::search(&m, &cfg, 2048, 1, &ALL_DEVICES, place::Objective::Latency)
+            .expect("search over the full device set succeeds");
+        assert!(s.best().is_some(), "search must rank at least one candidate");
+        for c in &s.candidates {
+            let mut ranked = cfg.clone();
+            ranked.schedule = c.schedule;
+            let g = StageGraph::build(&m, &ranked, 2048, false).expect("candidate builds");
+            let rep = verify::verify_all(&sim, &m, &g, 1);
+            assert!(!rep.has_errors(), "candidate {:?} fails verification:\n{rep}", c.schedule);
+        }
+    }
+}
+
+/// The acceptance sweep as a test: every shipped configuration verifies
+/// with zero errors (warnings like P003 degenerate-placement are allowed).
+#[test]
+fn shipped_configs_verify_clean() {
+    let m = Manifest::synthetic();
+    let sim = ScheduleSim::new();
+    for ds in ["synrgbd", "synscan"] {
+        for variant in VARIANTS {
+            for int8 in [false, true] {
+                let cfg = DetectorConfig::new(ds, variant, int8, pipelined());
+                let g = StageGraph::build(&m, &cfg, 2048, false).expect("shipped config builds");
+                let rep = verify::verify_all(&sim, &m, &g, 1);
+                assert!(!rep.has_errors(), "{ds}/{variant:?}/int8={int8}:\n{rep}");
+            }
+        }
+    }
+}
+
+/// The shipped cluster layout verifies with zero errors end-to-end
+/// (per-box plans, routing-key counts, and every planned config's graph).
+#[test]
+fn shipped_cluster_spec_verifies_clean() {
+    let planner = ServicePlanner::synthetic();
+    let spec = ClusterSpec::parse("gpu+edgetpu:2,gpu:1,cpu+edgetpu:1").expect("spec parses");
+    let cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, true, pipelined());
+    let configs = config_mix(&cfg, 2);
+    let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
+    let rep = verify::verify_cluster(&planner, &spec, &configs, 2048, &batch, &[1.0, 1.0]);
+    assert!(!rep.has_errors(), "the shipped cluster spec must verify clean:\n{rep}");
+}
+
+// ----------------------------------------------------------- bad-graph corpus
+
+#[test]
+fn corpus_self_dep_is_g001() {
+    let (m, mut g) = split_graph();
+    g.nodes[5].extra_deps.push(5);
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("G001"), "self edge (static cycle) must be G001:\n{rep}");
+}
+
+#[test]
+fn corpus_forward_dep_is_g001() {
+    let (m, mut g) = split_graph();
+    let last = g.nodes.len() - 1;
+    g.nodes[0].spec.deps.push(last);
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("G001"), "forward edge (static cycle) must be G001:\n{rep}");
+}
+
+#[test]
+fn corpus_dangling_dep_is_g002() {
+    let (m, mut g) = split_graph();
+    g.nodes[3].spec.deps.push(999);
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("G002"), "dangling dep must be G002:\n{rep}");
+}
+
+#[test]
+fn corpus_artifact_drift_is_g003() {
+    let (m, mut g) = split_graph();
+    let nn = g.nodes.iter().position(|n| n.artifact.is_some()).expect("graph has NN nodes");
+    g.nodes[nn].artifact = Some("synrgbd_pointsplit_vote_fp32".into());
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("G003"), "artifact drift from the derivation must be G003:\n{rep}");
+}
+
+#[test]
+fn corpus_chain_metadata_drift_is_g004() {
+    let (m, mut g) = split_graph();
+    let decode = g.nodes.iter().position(|n| n.class == StageClass::Decode).expect("decode node");
+    g.chains[0].levels[0].pm = decode;
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("G004"), "chain level pointing at a non-PM node must be G004:\n{rep}");
+}
+
+#[test]
+fn corpus_point_op_on_edgetpu_is_p001() {
+    let (m, mut g) = split_graph();
+    let pm = g.nodes.iter().position(|n| matches!(n.class, StageClass::SaPm { .. })).expect("pm");
+    g.nodes[pm].spec.device = DeviceKind::EdgeTpu;
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("P001"), "a point op placed on the EdgeTPU must be P001:\n{rep}");
+}
+
+#[test]
+fn corpus_fp32_nn_on_edgetpu_is_p001() {
+    let m = Manifest::synthetic();
+    let cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, false, pipelined());
+    let g = StageGraph::build(&m, &cfg, 2048, false).expect("fp32 config builds");
+    let mut specs = g.specs();
+    let nn = specs
+        .iter()
+        .position(|s| s.workload.kind == WorkloadKind::NeuralNet)
+        .expect("graph has NN stages");
+    specs[nn].device = DeviceKind::EdgeTpu;
+    let rep = verify::check_specs(&ScheduleSim::new(), &specs);
+    assert!(rep.fired("P001"), "an fp32 NN forced onto the EdgeTPU must be P001:\n{rep}");
+}
+
+#[test]
+fn corpus_oversized_stage_is_s001() {
+    let (_, g) = split_graph();
+    let mut specs = g.specs();
+    specs[0].workload.mem_bytes = u64::MAX / 2;
+    let rep = verify::check_specs(&ScheduleSim::new(), &specs);
+    assert!(rep.fired("S001"), "a working set over device capacity must be S001:\n{rep}");
+}
+
+#[test]
+fn corpus_free_cross_device_edge_is_s003() {
+    let (_, mut g) = split_graph();
+    let mut prod = None;
+    'outer: for node in &g.nodes {
+        for &d in &node.spec.deps {
+            if g.nodes[d].spec.device != node.spec.device {
+                prod = Some(d);
+                break 'outer;
+            }
+        }
+    }
+    let prod = prod.expect("a pipelined split graph has cross-device edges");
+    assert!(g.nodes[prod].spec.workload.wire_bytes > 0, "the edge must be priced today");
+    g.nodes[prod].spec.workload.wire_bytes = 0;
+    let rep = verify::verify_schedule(&ScheduleSim::new(), &g, 1);
+    assert!(rep.fired("S003"), "a zero-byte cross-device edge must be S003:\n{rep}");
+}
+
+#[test]
+fn corpus_tampered_fold_is_s004() {
+    let (_, g) = split_graph();
+    let base = g.specs();
+    let mut folded = g.batch_fold(2);
+    folded[0].workload.flops += 1;
+    let rep = verify::check_fold(&base, &folded, 2);
+    assert!(rep.fired("S004"), "a fold that is not exactly k-scaled must be S004:\n{rep}");
+}
+
+/// The PR 2 merge bug, re-introduced as a fixture: `sa4_pm` lost its
+/// dependency on the *other* pipeline's SA3 output, so a replayed plan
+/// could read chain 1's geometry before it was written. The executor
+/// soundness rule pins it — this is the regression the E family exists for.
+#[test]
+fn corpus_sa4_missing_cross_pipeline_dep_is_e001() {
+    let (m, mut g) = split_graph();
+    let dropped = g.chains[1].levels[2].nn;
+    let sa4 = g.nodes.iter().position(|n| n.class == StageClass::Sa4Pm).expect("sa4 pm node");
+    let before = g.nodes[sa4].spec.deps.len();
+    g.nodes[sa4].spec.deps.retain(|&d| d != dropped);
+    g.nodes[sa4].extra_deps.retain(|&d| d != dropped);
+    assert!(g.nodes[sa4].spec.deps.len() < before, "fixture must drop a real edge");
+    let rep = verify::verify_exec(&g);
+    assert!(rep.fired("E001"), "the sa4 merge bug must be E001:\n{rep}");
+    let full = verify::verify_graph(&m, &g);
+    assert!(full.fired("E001"), "the full graph pipeline surfaces it too:\n{full}");
+}
+
+#[test]
+fn corpus_double_write_is_e002() {
+    let (_, mut g) = split_graph();
+    let decode = g.nodes.iter().position(|n| n.class == StageClass::Decode).expect("decode node");
+    let dup = g.nodes[decode].clone();
+    g.nodes.push(dup);
+    let rep = verify::verify_exec(&g);
+    assert!(rep.fired("E002"), "two writers of one slot must be E002:\n{rep}");
+}
+
+#[test]
+fn corpus_unproduced_read_is_e003() {
+    let (_, mut g) = split_graph();
+    // knock out the segmenter's write: Paint still reads the seg scores,
+    // which nothing produces and nothing seeds (the scene is not pre-painted)
+    let seg = g.nodes.iter().position(|n| n.class == StageClass::Seg).expect("seg node");
+    g.nodes[seg].class = StageClass::Decode;
+    let rep = verify::verify_exec(&g);
+    assert!(rep.fired("E003"), "a read with no producer and no seed must be E003:\n{rep}");
+}
+
+#[test]
+fn corpus_infeasible_box_type_is_c001_and_c004() {
+    let planner = ServicePlanner::synthetic();
+    // an EdgeTPU-only box cannot run point ops, so no config can be planned
+    let spec = ClusterSpec::parse("edgetpu:1").expect("spec parses");
+    let cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, true, pipelined());
+    let configs = config_mix(&cfg, 2);
+    let batch = BatchPolicy { max_batch: 4, max_wait_ms: 25.0 };
+    let rep = verify::verify_cluster(&planner, &spec, &configs, 2048, &batch, &[1.0, 1.0]);
+    assert!(rep.fired("C001"), "a box type with no feasible plan must be C001:\n{rep}");
+    assert!(rep.fired("C004"), "a cluster with no scalable template must be C004:\n{rep}");
+}
