@@ -1,23 +1,49 @@
 //! §Perf: wall-clock micro-benchmarks of the L3 hot path on this host.
 //!
-//! These numbers feed EXPERIMENTS.md §Perf (before/after optimization log).
-//! Covered: FPS, biased FPS, ball query, grouping, 3-NN interpolation, scene
-//! generation, full functional pipeline, and PJRT executable dispatch.
+//! These numbers feed EXPERIMENTS.md §Perf (before/after optimization log)
+//! and are persisted to `BENCH_hotpath.json` (section `perf_hotpath`, merged
+//! alongside `pointops_parallel`) so the scalar → SIMD → parallel trajectory
+//! of every kernel is diffable across runs. Covered: FPS, biased FPS, ball
+//! query, grouping, 3-NN interpolation, scene generation, full functional
+//! pipeline, and PJRT executable dispatch.
+//!
+//! Knobs:
+//!   POINTSPLIT_BENCH_POINTS   kernel-trajectory cloud size (default 8192)
+//!   POINTSPLIT_BENCH_SCENES   pipeline iterations          (default 8, CI: 1)
 
 mod common;
 
-use pointsplit::bench::bench_fn;
+use pointsplit::bench::{bench_fn, f2, update_bench_json, BenchResult, Table};
 use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
 use pointsplit::data::{generate_scene, SYNRGBD};
 use pointsplit::pointops;
 use pointsplit::sim::DeviceKind;
+use pointsplit::util::json::Json;
+use pointsplit::util::rng::Rng;
 use pointsplit::util::tensor::Tensor;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// One kernel's scalar → SIMD → parallel trajectory as a JSON row.
+fn traj(scalar: &BenchResult, simd: &BenchResult, par: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("scalar_ms", Json::Num(scalar.mean_us / 1e3)),
+        ("simd_ms", Json::Num(simd.mean_us / 1e3)),
+        ("par_ms", Json::Num(par.mean_us / 1e3)),
+        ("speedup_simd", Json::Num(scalar.mean_us / simd.mean_us.max(1e-9))),
+        ("speedup_par", Json::Num(scalar.mean_us / par.mean_us.max(1e-9))),
+    ])
+}
 
 fn main() {
     let rt = common::open_runtime();
     let scene = generate_scene(3, &SYNRGBD);
     let fg: Vec<f32> =
         scene.point_obj.iter().map(|&o| if o >= 0 { 1.0 } else { 0.0 }).collect();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let scenes = common::scene_budget(8);
 
     println!("=== §Perf hot-path micro-benchmarks (host wall-clock) ===\n");
     bench_fn("fps 2048->256", 3, 30, || {
@@ -50,6 +76,86 @@ fn main() {
     })
     .print();
 
+    // ------------------------------------- scalar -> SIMD -> par trajectory
+    // the acceptance metric of the SoA/SIMD rewrite: the lane kernels must
+    // beat the scalar oracles (bit-identical results, pinned by tests) on a
+    // larger cloud where the distance loops dominate
+    let n = env_usize("POINTSPLIT_BENCH_POINTS", 8192);
+    let m = (n / 8).clamp(1, 1024);
+    let mut rng = Rng::new(7);
+    let cloud: Vec<[f32; 3]> = (0..n)
+        .map(|_| [rng.f32() * 8.0, rng.f32() * 8.0, rng.f32() * 2.5])
+        .collect();
+    println!("\nkernel trajectory (n={n}, m={m}, {threads} threads):");
+    let fps_scalar = bench_fn(&format!("fps {n}->{m} scalar"), 1, 10, || {
+        std::hint::black_box(pointops::fps_scalar(&cloud, m, None, 1.0, 0));
+    });
+    fps_scalar.print();
+    let fps_simd = bench_fn(&format!("fps {n}->{m} simd"), 1, 10, || {
+        std::hint::black_box(pointops::fps(&cloud, m));
+    });
+    fps_simd.print();
+    let fps_par = bench_fn(&format!("fps {n}->{m} simd par x{threads}"), 1, 10, || {
+        std::hint::black_box(pointops::fps_par(&cloud, m, threads));
+    });
+    fps_par.print();
+
+    let kcenters = pointops::fps(&cloud, m);
+    let bq_scalar = bench_fn(&format!("ball_query {n}x{m} k=32 scalar"), 1, 10, || {
+        std::hint::black_box(pointops::ball_query_scalar(&cloud, &kcenters, 0.4, 32));
+    });
+    bq_scalar.print();
+    let bq_simd = bench_fn(&format!("ball_query {n}x{m} k=32 simd"), 1, 10, || {
+        std::hint::black_box(pointops::ball_query(&cloud, &kcenters, 0.4, 32));
+    });
+    bq_simd.print();
+    let bq_par = bench_fn(&format!("ball_query {n}x{m} k=32 simd par x{threads}"), 1, 10, || {
+        std::hint::black_box(pointops::ball_query_par(&cloud, &kcenters, 0.4, 32, threads));
+    });
+    bq_par.print();
+
+    // c=16 keeps the bench on the knn search, not feature accumulation
+    let src: Vec<[f32; 3]> = kcenters.iter().map(|&i| cloud[i]).collect();
+    let sfeats = Tensor::zeros(vec![src.len(), 16]);
+    let nn_scalar = bench_fn(&format!("three_nn {n}<-{m} c=16 scalar"), 1, 10, || {
+        std::hint::black_box(pointops::three_nn_interpolate_scalar(&cloud, &src, &sfeats));
+    });
+    nn_scalar.print();
+    let nn_simd = bench_fn(&format!("three_nn {n}<-{m} c=16 simd"), 1, 10, || {
+        std::hint::black_box(pointops::three_nn_interpolate(&cloud, &src, &sfeats));
+    });
+    nn_simd.print();
+    let nn_par = bench_fn(&format!("three_nn {n}<-{m} c=16 simd par x{threads}"), 1, 10, || {
+        std::hint::black_box(pointops::three_nn_interpolate_par(&cloud, &src, &sfeats, threads));
+    });
+    nn_par.print();
+
+    let mut t = Table::new(&["kernel", "scalar ms", "simd ms", "par ms", "simd speedup"]);
+    let rows = [
+        ("fps", &fps_scalar, &fps_simd, &fps_par),
+        ("ball_query", &bq_scalar, &bq_simd, &bq_par),
+        ("three_nn", &nn_scalar, &nn_simd, &nn_par),
+    ];
+    let mut wins = 0;
+    for (name, sc, si, pa) in rows {
+        let speedup = sc.mean_us / si.mean_us.max(1e-9);
+        if speedup >= 1.5 {
+            wins += 1;
+        }
+        t.row(vec![
+            name.to_string(),
+            f2(sc.mean_us / 1e3),
+            f2(si.mean_us / 1e3),
+            f2(pa.mean_us / 1e3),
+            f2(speedup),
+        ]);
+    }
+    t.print("kernel trajectory: scalar oracle vs SIMD lanes");
+    println!(
+        "\nacceptance: >= 1.5x SIMD speedup on >= 2 of 3 kernels -> {}",
+        if wins >= 2 { "PASS" } else { "below (smoke settings or tiny cloud)" }
+    );
+
     // PJRT dispatch cost: the smallest artifact round-trip
     let seeds = Tensor::zeros(vec![rt.manifest.num_seeds, rt.manifest.seed_feat]);
     bench_fn("pjrt dispatch (vote fp32)", 3, 30, || {
@@ -58,6 +164,7 @@ fn main() {
     .print();
 
     // full functional pipelines
+    let mut pipe_rows = Vec::new();
     for (name, variant, int8) in [
         ("pipeline votenet fp32", Variant::VoteNet, false),
         ("pipeline pointsplit fp32", Variant::PointSplit, false),
@@ -70,9 +177,29 @@ fn main() {
             Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
         );
         let pipe = ScenePipeline::new(&rt, cfg);
-        bench_fn(name, 1, 8, || {
+        let r = bench_fn(name, 1, scenes, || {
             std::hint::black_box(pipe.run(&scene, 3).unwrap());
-        })
-        .print();
+        });
+        r.print();
+        pipe_rows.push((name, Json::Num(r.mean_us / 1e3)));
     }
+
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("perf_hotpath".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "kernels",
+            Json::obj(vec![
+                ("fps", traj(&fps_scalar, &fps_simd, &fps_par)),
+                ("ball_query", traj(&bq_scalar, &bq_simd, &bq_par)),
+                ("three_nn", traj(&nn_scalar, &nn_simd, &nn_par)),
+            ]),
+        ),
+        ("simd_wins", Json::Num(wins as f64)),
+        ("pass", Json::Bool(wins >= 2)),
+        ("pipelines_ms", Json::obj(pipe_rows)),
+    ]);
+    update_bench_json("BENCH_hotpath.json", "perf_hotpath", payload);
 }

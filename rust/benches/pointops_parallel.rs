@@ -3,10 +3,14 @@
 //! Pillar (2) of the paper is *parallelized 3D feature extraction*; this
 //! bench records what the host-side analogue buys us, at two levels:
 //!
-//! 1. op level — chunked-scan FPS, per-center ball query, grid-accelerated
-//!    3-NN interpolation on a large synthetic cloud;
+//! 1. op level — scalar-oracle vs SIMD-lane vs thread-parallel FPS, ball
+//!    query, and grid-accelerated 3-NN interpolation on a large synthetic
+//!    cloud;
 //! 2. pipeline level — the full PointSplit scene pipeline run sequentially
 //!    vs DAG-parallel (`host_ms`, the acceptance metric).
+//!
+//! Results are persisted to `BENCH_hotpath.json` (section
+//! `pointops_parallel`, merged alongside `perf_hotpath`).
 //!
 //! Runs offline on the synthetic runtime (deterministic host surrogate for
 //! NN stages). Knobs:
@@ -19,18 +23,27 @@ mod common;
 
 use std::time::Instant;
 
-use pointsplit::bench::{bench_fn, f1, f2, Table};
+use pointsplit::bench::{bench_fn, f1, f2, update_bench_json, BenchResult, Table};
 use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
 use pointsplit::data::{generate_scene, DatasetCfg, SYNRGBD};
 use pointsplit::exec::HostExec;
 use pointsplit::pointops;
 use pointsplit::runtime::Runtime;
 use pointsplit::sim::DeviceKind;
+use pointsplit::util::json::Json;
 use pointsplit::util::rng::Rng;
 use pointsplit::util::tensor::Tensor;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn op_row(scalar: &BenchResult, seq: &BenchResult, par: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("scalar_ms", Json::Num(scalar.mean_us / 1e3)),
+        ("seq_ms", Json::Num(seq.mean_us / 1e3)),
+        ("par_ms", Json::Num(par.mean_us / 1e3)),
+    ])
 }
 
 fn main() {
@@ -51,29 +64,41 @@ fn main() {
     let fg: Vec<f32> = cloud.iter().map(|p| if p[0] < 2.0 { 1.0 } else { 0.0 }).collect();
     let m = (n / 4).clamp(1, 512);
 
-    let fps_seq = bench_fn(&format!("fps {n}->{m} seq"), 1, 3, || {
+    let fps_scalar = bench_fn(&format!("fps {n}->{m} scalar"), 1, 3, || {
+        std::hint::black_box(pointops::fps_scalar(&cloud, m, None, 1.0, 0));
+    });
+    fps_scalar.print();
+    let fps_seq = bench_fn(&format!("fps {n}->{m} simd seq"), 1, 3, || {
         std::hint::black_box(pointops::fps(&cloud, m));
     });
     fps_seq.print();
-    let fps_par = bench_fn(&format!("fps {n}->{m} par x{threads}"), 1, 3, || {
+    let fps_par = bench_fn(&format!("fps {n}->{m} simd par x{threads}"), 1, 3, || {
         std::hint::black_box(pointops::fps_par(&cloud, m, threads));
     });
     fps_par.print();
-    let bfps_seq = bench_fn(&format!("biased_fps {n}->{m} seq"), 1, 3, || {
+    let bfps_scalar = bench_fn(&format!("biased_fps {n}->{m} scalar"), 1, 3, || {
+        std::hint::black_box(pointops::fps_scalar(&cloud, m, Some(&fg), 2.0, 0));
+    });
+    bfps_scalar.print();
+    let bfps_seq = bench_fn(&format!("biased_fps {n}->{m} simd seq"), 1, 3, || {
         std::hint::black_box(pointops::biased_fps(&cloud, m, &fg, 2.0));
     });
     bfps_seq.print();
-    let bfps_par = bench_fn(&format!("biased_fps {n}->{m} par x{threads}"), 1, 3, || {
+    let bfps_par = bench_fn(&format!("biased_fps {n}->{m} simd par x{threads}"), 1, 3, || {
         std::hint::black_box(pointops::biased_fps_par(&cloud, m, &fg, 2.0, threads));
     });
     bfps_par.print();
 
     let centers = pointops::fps_par(&cloud, m, threads);
-    let bq_seq = bench_fn(&format!("ball_query {n}x{m} k=32 seq"), 1, 5, || {
+    let bq_scalar = bench_fn(&format!("ball_query {n}x{m} k=32 scalar"), 1, 5, || {
+        std::hint::black_box(pointops::ball_query_scalar(&cloud, &centers, 0.4, 32));
+    });
+    bq_scalar.print();
+    let bq_seq = bench_fn(&format!("ball_query {n}x{m} k=32 simd seq"), 1, 5, || {
         std::hint::black_box(pointops::ball_query(&cloud, &centers, 0.4, 32));
     });
     bq_seq.print();
-    let bq_par = bench_fn(&format!("ball_query {n}x{m} k=32 par x{threads}"), 1, 5, || {
+    let bq_par = bench_fn(&format!("ball_query {n}x{m} k=32 simd par x{threads}"), 1, 5, || {
         std::hint::black_box(pointops::ball_query_par(&cloud, &centers, 0.4, 32, threads));
     });
     bq_par.print();
@@ -81,36 +106,41 @@ fn main() {
     let src: Vec<[f32; 3]> = centers.iter().map(|&i| cloud[i]).collect();
     let feats = Tensor::zeros(vec![src.len(), 128]);
     let in_brute = bench_fn(&format!("three_nn {n}<-{m} brute"), 1, 3, || {
-        std::hint::black_box(pointops::interp::three_nn_interpolate_bruteforce(
+        std::hint::black_box(pointsplit::pointops::interp::three_nn_interpolate_bruteforce(
             &cloud, &src, &feats,
         ));
     });
     in_brute.print();
-    let in_grid = bench_fn(&format!("three_nn {n}<-{m} grid seq"), 1, 5, || {
+    let in_scalar = bench_fn(&format!("three_nn {n}<-{m} grid scalar"), 1, 5, || {
+        std::hint::black_box(pointops::three_nn_interpolate_scalar(&cloud, &src, &feats));
+    });
+    in_scalar.print();
+    let in_grid = bench_fn(&format!("three_nn {n}<-{m} grid simd seq"), 1, 5, || {
         std::hint::black_box(pointops::three_nn_interpolate(&cloud, &src, &feats));
     });
     in_grid.print();
-    let in_par = bench_fn(&format!("three_nn {n}<-{m} grid par x{threads}"), 1, 5, || {
+    let in_par = bench_fn(&format!("three_nn {n}<-{m} grid simd par x{threads}"), 1, 5, || {
         std::hint::black_box(pointops::three_nn_interpolate_par(&cloud, &src, &feats, threads));
     });
     in_par.print();
 
-    let mut ops = Table::new(&["op", "seq ms", "par ms", "speedup"]);
-    for (name, a, b) in [
-        ("fps", &fps_seq, &fps_par),
-        ("biased_fps", &bfps_seq, &bfps_par),
-        ("ball_query", &bq_seq, &bq_par),
-        ("three_nn (vs brute)", &in_brute, &in_par),
-        ("three_nn (vs grid seq)", &in_grid, &in_par),
+    let mut ops = Table::new(&["op", "scalar ms", "simd ms", "par ms", "par speedup"]);
+    for (name, sc, a, b) in [
+        ("fps", &fps_scalar, &fps_seq, &fps_par),
+        ("biased_fps", &bfps_scalar, &bfps_seq, &bfps_par),
+        ("ball_query", &bq_scalar, &bq_seq, &bq_par),
+        ("three_nn (brute base)", &in_brute, &in_grid, &in_par),
+        ("three_nn (grid base)", &in_scalar, &in_grid, &in_par),
     ] {
         ops.row(vec![
             name.to_string(),
+            f2(sc.mean_us / 1e3),
             f2(a.mean_us / 1e3),
             f2(b.mean_us / 1e3),
-            f2(a.mean_us / b.mean_us),
+            f2(sc.mean_us / b.mean_us),
         ]);
     }
-    ops.print("op-level: sequential vs parallel");
+    ops.print("op-level: scalar oracle vs SIMD vs parallel");
 
     // ------------------------------------------------------ pipeline level
     let ds = DatasetCfg { name: "bench", num_points: n, ..SYNRGBD };
@@ -154,6 +184,34 @@ fn main() {
         "\nacceptance: >= 1.5x on a >= 4-core runner -> {}",
         if speedup >= 1.5 { "PASS" } else { "below (small host or smoke settings)" }
     );
+
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("pointops_parallel".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "ops",
+            Json::obj(vec![
+                ("fps", op_row(&fps_scalar, &fps_seq, &fps_par)),
+                ("biased_fps", op_row(&bfps_scalar, &bfps_seq, &bfps_par)),
+                ("ball_query", op_row(&bq_scalar, &bq_seq, &bq_par)),
+                ("three_nn", op_row(&in_scalar, &in_grid, &in_par)),
+                ("three_nn_brute_ms", Json::Num(in_brute.mean_us / 1e3)),
+            ]),
+        ),
+        (
+            "pipeline",
+            Json::obj(vec![
+                ("scenes", Json::Num(scenes as f64)),
+                ("seq_host_ms", Json::Num(seq_ms)),
+                ("par_host_ms", Json::Num(par_ms)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ),
+    ]);
+    update_bench_json("BENCH_hotpath.json", "pointops_parallel", payload);
+
     if std::env::var("POINTSPLIT_BENCH_ASSERT").is_ok() {
         assert!(speedup >= 1.5, "pipeline parallel speedup {speedup:.2} < 1.5x");
     }

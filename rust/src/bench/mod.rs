@@ -112,6 +112,31 @@ pub fn write_bench_json(file: &str, payload: &Json) -> Option<PathBuf> {
     }
 }
 
+/// Merge `payload` under `section` in the top-level object parsed from
+/// `existing` (unparseable or non-object contents are replaced wholesale).
+fn merge_section(existing: Option<&str>, section: &str, payload: Json) -> Json {
+    let mut map = existing
+        .and_then(|text| Json::parse(text).ok())
+        .and_then(|j| match j {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        })
+        .unwrap_or_default();
+    map.insert(section.to_string(), payload);
+    Json::Obj(map)
+}
+
+/// Read-modify-write one `section` of `file`'s top-level JSON object
+/// (creating the file if absent). Lets several bench binaries share one
+/// `BENCH_*.json` — e.g. `perf_hotpath` and `pointops_parallel` both record
+/// their kernel trajectories into `BENCH_hotpath.json`.
+pub fn update_bench_json(file: &str, section: &str, payload: Json) -> Option<PathBuf> {
+    let dir = std::env::var("POINTSPLIT_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = PathBuf::from(dir).join(file);
+    let existing = std::fs::read_to_string(&path).ok();
+    write_bench_json(file, &merge_section(existing.as_deref(), section, payload))
+}
+
 /// `f(x)` formatted with fixed decimals, convenience for table cells.
 pub fn f1(x: f64) -> String {
     format!("{x:.1}")
@@ -144,5 +169,19 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn merge_section_preserves_other_sections() {
+        let first = merge_section(None, "a", Json::Num(1.0));
+        let text = format!("{first}");
+        let both = merge_section(Some(&text), "b", Json::Num(2.0));
+        assert_eq!(both.req("a").as_f64(), Some(1.0));
+        assert_eq!(both.req("b").as_f64(), Some(2.0));
+        // same-key update replaces, garbage input is replaced wholesale
+        let upd = merge_section(Some(&format!("{both}")), "a", Json::Num(3.0));
+        assert_eq!(upd.req("a").as_f64(), Some(3.0));
+        let fresh = merge_section(Some("not json"), "x", Json::Bool(true));
+        assert_eq!(fresh.req("x").as_bool(), Some(true));
     }
 }

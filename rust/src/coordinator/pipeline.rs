@@ -124,9 +124,11 @@ pub struct PipelineOutput {
 /// Chain-local geometry after a sampling step: positions plus the composed
 /// index of every point back into the original cloud (so any stage can look
 /// up per-point metadata like the painted fg mask without carrying it).
+/// Positions are SoA so every downstream point op takes the SIMD fast path
+/// without a conversion copy.
 #[derive(Clone)]
 struct Geo {
-    xyz: Vec<[f32; 3]>,
+    xyz: pointops::PointsSoA,
     src: Vec<usize>,
 }
 
@@ -245,7 +247,7 @@ impl<'a> ScenePipeline<'a> {
         let sa3_feats_fused: Slot<Tensor> = Slot::new("sa3 fused feats");
         let sa4_feats: Slot<Tensor> = Slot::new("sa4 feats");
         let f2_slot: Slot<Tensor> = Slot::new("fp features");
-        let seed_xyz_slot: Slot<Vec<[f32; 3]>> = Slot::new("seed xyz");
+        let seed_xyz_slot: Slot<pointops::PointsSoA> = Slot::new("seed xyz");
         let seeds_slot: Slot<Tensor> = Slot::new("seeds");
         let vote_slot: Slot<(Vec<[f32; 3]>, Tensor)> = Slot::new("votes");
         let pgrp_slot: Slot<(Vec<usize>, Vec<Vec<usize>>)> = Slot::new("proposal groups");
@@ -299,15 +301,13 @@ impl<'a> ScenePipeline<'a> {
                             Some(fs) => {
                                 let fg: Vec<f32> =
                                     fs.with(|(_, fg)| geo.src.iter().map(|&i| fg[i]).collect());
-                                pointops::biased_fps_from_par(
-                                    &geo.xyz, mm, &fg, w0, start, threads,
-                                )
+                                pointops::biased_fps_soa(&geo.xyz, mm, &fg, w0, start, threads)
                             }
-                            None => pointops::fps_from_par(&geo.xyz, mm, start, threads),
+                            None => pointops::fps_soa(&geo.xyz, mm, start, threads),
                         };
-                        let groups = pointops::ball_query_par(&geo.xyz, &idx, radius, k, threads);
+                        let groups = pointops::ball_query_soa(&geo.xyz, &idx, radius, k, threads);
                         geo_out.set(Geo {
-                            xyz: idx.iter().map(|&i| geo.xyz[i]).collect(),
+                            xyz: geo.xyz.gather(&idx),
                             src: idx.iter().map(|&i| geo.src[i]).collect(),
                         });
                         grp_out.set((idx, groups));
@@ -335,7 +335,7 @@ impl<'a> ScenePipeline<'a> {
                         let g = match &prev {
                             Some((pgeo, pfeats)) => pgeo.with(|geo| {
                                 pfeats.with(|f| {
-                                    pointops::group_features(&geo.xyz, Some(f), &idx, &groups)
+                                    pointops::group_features_soa(&geo.xyz, Some(f), &idx, &groups)
                                 })
                             }),
                             None => match &input {
@@ -369,11 +369,11 @@ impl<'a> ScenePipeline<'a> {
                     let sa4cfg = &m.sa_configs[3];
                     let (m4, r4, k4, w0) = (sa4cfg.m, sa4cfg.radius, sa4cfg.k, cfg.w0);
                     Compute::Pool(Box::new(move || {
-                        let mut xyz = Vec::new();
+                        let mut xyz = pointops::PointsSoA::new();
                         let mut src = Vec::new();
                         for g in &sa3_geos {
                             g.with(|geo| {
-                                xyz.extend_from_slice(&geo.xyz);
+                                xyz.append(&geo.xyz);
                                 src.extend_from_slice(&geo.src);
                             });
                         }
@@ -381,13 +381,13 @@ impl<'a> ScenePipeline<'a> {
                             Some(fs) => {
                                 let fg: Vec<f32> =
                                     fs.with(|(_, fg)| src.iter().map(|&i| fg[i]).collect());
-                                pointops::biased_fps_par(&xyz, m4, &fg, w0, threads)
+                                pointops::biased_fps_soa(&xyz, m4, &fg, w0, 0, threads)
                             }
-                            None => pointops::fps_par(&xyz, m4, threads),
+                            None => pointops::fps_soa(&xyz, m4, 0, threads),
                         };
-                        let groups4 = pointops::ball_query_par(&xyz, &idx4, r4, k4, threads);
+                        let groups4 = pointops::ball_query_soa(&xyz, &idx4, r4, k4, threads);
                         geo4.set(Geo {
-                            xyz: idx4.iter().map(|&i| xyz[i]).collect(),
+                            xyz: xyz.gather(&idx4),
                             src: idx4.iter().map(|&i| src[i]).collect(),
                         });
                         grp4.set((idx4, groups4));
@@ -411,7 +411,7 @@ impl<'a> ScenePipeline<'a> {
                         let fused = Tensor::concat0(&refs);
                         let (idx4, groups4) = grp4.take();
                         let g4 = sa3_fused.with(|geo| {
-                            pointops::group_features(&geo.xyz, Some(&fused), &idx4, &groups4)
+                            pointops::group_features_soa(&geo.xyz, Some(&fused), &idx4, &groups4)
                         });
                         sa4_feats
                             .set(self.rt.run_with_spec(&art, &[&g4], qspec.as_ref())?.remove(0));
@@ -436,17 +436,17 @@ impl<'a> ScenePipeline<'a> {
                         let sa4_xyz = geo4.with(|g| g.xyz.clone());
                         let sa3_f = sa3_feats_fused.take();
                         let f3 = sa3_fused.with(|sa3| {
-                            let f3up = pointops::three_nn_interpolate_par(
+                            let f3up = pointops::three_nn_interpolate_soa(
                                 &sa3.xyz, &sa4_xyz, &sa4_f, threads,
                             );
                             hconcat(&sa3_f, &f3up)
                         });
-                        let mut sa2_xyz = Vec::new();
+                        let mut sa2_xyz = pointops::PointsSoA::new();
                         for g in &sa2_geos {
-                            g.with(|geo| sa2_xyz.extend_from_slice(&geo.xyz));
+                            g.with(|geo| sa2_xyz.append(&geo.xyz));
                         }
                         let f2up = sa3_fused.with(|sa3| {
-                            pointops::three_nn_interpolate_par(&sa2_xyz, &sa3.xyz, &f3, threads)
+                            pointops::three_nn_interpolate_soa(&sa2_xyz, &sa3.xyz, &f3, threads)
                         });
                         let parts: Vec<Tensor> = sa2_feats.iter().map(|f| f.cloned()).collect();
                         let refs: Vec<&Tensor> = parts.iter().collect();
@@ -480,11 +480,8 @@ impl<'a> ScenePipeline<'a> {
                         let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
                         for i in 0..seed_xyz.len() {
                             let row = vote_out.row(i);
-                            vote_xyz.push([
-                                seed_xyz[i][0] + row[0],
-                                seed_xyz[i][1] + row[1],
-                                seed_xyz[i][2] + row[2],
-                            ]);
+                            let s = seed_xyz.get(i);
+                            vote_xyz.push([s[0] + row[0], s[1] + row[1], s[2] + row[2]]);
                             for c in 0..cfeat {
                                 vote_feats.row_mut(i)[c] = seeds.row(i)[c] + row[3 + c];
                             }
@@ -603,11 +600,11 @@ fn resolve_geo(prev: &Option<Slot<Geo>>, input: &ChainInput, scene: &Scene) -> G
         Some(s) => s.cloned(),
         None => match input {
             ChainInput::Full => Geo {
-                xyz: scene.points.clone(),
+                xyz: pointops::PointsSoA::from_points(&scene.points),
                 src: (0..scene.points.len()).collect(),
             },
             ChainInput::Subset(idx) => Geo {
-                xyz: idx.iter().map(|&i| scene.points[i]).collect(),
+                xyz: pointops::PointsSoA::from_indexed(&scene.points, idx),
                 src: idx.as_ref().clone(),
             },
         },

@@ -85,10 +85,16 @@ impl Counters {
 
 /// Coarse allocation tracker for the Fig. 9 peak-memory accounting of
 /// request-path buffers (framework bases are modeled in arch.rs).
+///
+/// Besides the byte accounting it counts discrete allocation *events*
+/// (`alloc_count`), which is what the steady-state tests assert on: the
+/// scratch-arena hot path reports every buffer growth here, so a flat count
+/// across scenes proves the per-scene path stopped allocating after warm-up.
 #[derive(Debug, Default)]
 pub struct MemTracker {
     current: AtomicU64,
     peak: AtomicU64,
+    allocs: AtomicU64,
 }
 
 impl MemTracker {
@@ -99,6 +105,7 @@ impl MemTracker {
     pub fn alloc(&self, bytes: u64) {
         let cur = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
         self.peak.fetch_max(cur, Ordering::Relaxed);
+        self.allocs.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn free(&self, bytes: u64) {
@@ -107,6 +114,11 @@ impl MemTracker {
 
     pub fn peak_bytes(&self) -> u64 {
         self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Number of allocation events recorded so far.
+    pub fn alloc_count(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
     }
 }
 
@@ -141,5 +153,6 @@ mod tests {
         m.free(150);
         m.alloc(50);
         assert_eq!(m.peak_bytes(), 300);
+        assert_eq!(m.alloc_count(), 3, "three discrete allocation events");
     }
 }

@@ -7,23 +7,35 @@
 //! §Perf: a uniform grid (cell size = radius) prunes the candidate set from
 //! N to the 27 neighboring cells, turning the O(M*N) scan into ~O(M*K) for
 //! indoor point densities (see EXPERIMENTS.md §Perf for the before/after).
-//! `ball_query_par` additionally spreads the per-center loop over scoped
-//! threads — every center's result is independent, so the output is
-//! identical for any thread count. The [`Grid`] is shared with
-//! `pointops::interp`'s 3-NN search.
+//! The production [`GridStorage`] packs every cell's members into flat
+//! SoA coordinate arrays, so the per-candidate distance loop runs as
+//! fixed-width `[f32; LANES]` chunks over contiguous memory; grid storage
+//! and the candidate list live in the per-worker `ScratchArena`, so the
+//! steady-state query allocates nothing. `ball_query_par` additionally
+//! spreads the per-center loop over scoped threads — every center's result
+//! is independent, so the output is identical for any thread count.
+//!
+//! [`ScalarGrid`] and `ball_query_scalar` keep the original one-`Vec`-per-
+//! cell scalar implementation verbatim as the reference oracle (candidates
+//! are ranked by the total order `(d2, index)`, so packed SIMD collection
+//! order cannot change results — pinned by `scalar_oracle_matches_simd`).
 
 use std::collections::HashMap;
 
+use super::arena::{with_arena, ScratchArena};
+use super::soa::{PointsSoA, LANES};
 use crate::exec::par_map;
 
-/// Uniform hash grid over a point cloud.
-pub(crate) struct Grid {
+/// Uniform hash grid over a point cloud — the original scalar layout
+/// (one index `Vec` per cell), kept as the reference oracle and shared
+/// with `interp`'s scalar 3-NN path.
+pub(crate) struct ScalarGrid {
     cell: f32,
     cells: HashMap<(i32, i32, i32), Vec<u32>>,
 }
 
-impl Grid {
-    pub(crate) fn build(xyz: &[[f32; 3]], cell: f32) -> Grid {
+impl ScalarGrid {
+    pub(crate) fn build(xyz: &[[f32; 3]], cell: f32) -> ScalarGrid {
         let mut cells: HashMap<(i32, i32, i32), Vec<u32>> =
             HashMap::with_capacity(xyz.len() / 2);
         for (i, p) in xyz.iter().enumerate() {
@@ -32,7 +44,7 @@ impl Grid {
                 .or_default()
                 .push(i as u32);
         }
-        Grid { cell, cells }
+        ScalarGrid { cell, cells }
     }
 
     pub(crate) fn cell_size(&self) -> f32 {
@@ -104,9 +116,303 @@ impl Grid {
     }
 }
 
+/// Packed uniform grid: every cell is a `(start, end)` range into flat SoA
+/// coordinate + id arrays, so candidate scans stream contiguous memory in
+/// SIMD lanes instead of chasing one heap `Vec` per cell. Rebuilt in place
+/// inside the scratch arena — zero steady-state allocations.
+#[derive(Debug, Default)]
+pub struct GridStorage {
+    cell: f32,
+    cells: HashMap<(i32, i32, i32), (u32, u32)>,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    zs: Vec<f32>,
+    ids: Vec<u32>,
+}
+
+impl GridStorage {
+    #[inline]
+    fn key(p: [f32; 3], cell: f32) -> (i32, i32, i32) {
+        (
+            (p[0] / cell).floor() as i32,
+            (p[1] / cell).floor() as i32,
+            (p[2] / cell).floor() as i32,
+        )
+    }
+
+    /// Rebuild over `pts` with the given cell size, reusing all storage.
+    /// Count pass -> running-offset pass -> scatter: each cell's value is
+    /// `(start, cursor)` during the scatter and `(start, end)` after it.
+    pub(crate) fn build(&mut self, pts: &PointsSoA, cell: f32) {
+        self.cell = cell;
+        self.cells.clear();
+        let n = pts.len();
+        self.xs.clear();
+        self.xs.resize(n, 0.0);
+        self.ys.clear();
+        self.ys.resize(n, 0.0);
+        self.zs.clear();
+        self.zs.resize(n, 0.0);
+        self.ids.clear();
+        self.ids.resize(n, 0);
+        for i in 0..n {
+            self.cells.entry(Self::key(pts.get(i), cell)).or_insert((0, 0)).0 += 1;
+        }
+        let mut off = 0u32;
+        for v in self.cells.values_mut() {
+            let count = v.0;
+            v.0 = off;
+            v.1 = off;
+            off += count;
+        }
+        for i in 0..n {
+            let v = self
+                .cells
+                .get_mut(&Self::key(pts.get(i), cell))
+                .expect("cell exists after count pass");
+            let slot = v.1 as usize;
+            let p = pts.get(i);
+            self.xs[slot] = p[0];
+            self.ys[slot] = p[1];
+            self.zs[slot] = p[2];
+            self.ids[slot] = i as u32;
+            v.1 += 1;
+        }
+    }
+
+    pub(crate) fn cell_size(&self) -> f32 {
+        self.cell
+    }
+
+    #[inline]
+    fn cell_slices(
+        &self,
+        key: (i32, i32, i32),
+        f: &mut impl FnMut(&[f32], &[f32], &[f32], &[u32]),
+    ) {
+        if let Some(&(s, e)) = self.cells.get(&key) {
+            let (s, e) = (s as usize, e as usize);
+            f(&self.xs[s..e], &self.ys[s..e], &self.zs[s..e], &self.ids[s..e]);
+        }
+    }
+
+    /// Visit the packed member slices of the 27 cells around `c`.
+    #[inline]
+    pub(crate) fn neighbors(
+        &self,
+        c: [f32; 3],
+        mut f: impl FnMut(&[f32], &[f32], &[f32], &[u32]),
+    ) {
+        let (kx, ky, kz) = Self::key(c, self.cell);
+        for dx in -1..=1 {
+            for dy in -1..=1 {
+                for dz in -1..=1 {
+                    self.cell_slices((kx + dx, ky + dy, kz + dz), &mut f);
+                }
+            }
+        }
+    }
+
+    /// Visit the packed member slices of cells at Chebyshev distance exactly
+    /// `ring` (same shell enumeration as [`ScalarGrid::ring`]).
+    pub(crate) fn ring(
+        &self,
+        c: [f32; 3],
+        ring: i32,
+        mut f: impl FnMut(&[f32], &[f32], &[f32], &[u32]),
+    ) {
+        let (kx, ky, kz) = Self::key(c, self.cell);
+        if ring == 0 {
+            self.cell_slices((kx, ky, kz), &mut f);
+            return;
+        }
+        for dx in -ring..=ring {
+            for dy in -ring..=ring {
+                self.cell_slices((kx + dx, ky + dy, kz - ring), &mut f);
+                self.cell_slices((kx + dx, ky + dy, kz + ring), &mut f);
+            }
+        }
+        for dx in -ring..=ring {
+            for dz in -(ring - 1)..=(ring - 1) {
+                self.cell_slices((kx + dx, ky - ring, kz + dz), &mut f);
+                self.cell_slices((kx + dx, ky + ring, kz + dz), &mut f);
+            }
+        }
+        for dy in -(ring - 1)..=(ring - 1) {
+            for dz in -(ring - 1)..=(ring - 1) {
+                self.cell_slices((kx - ring, ky + dy, kz + dz), &mut f);
+                self.cell_slices((kx + ring, ky + dy, kz + dz), &mut f);
+            }
+        }
+    }
+
+    /// Pre-size for an `n`-point cloud (arena warm-up).
+    pub(crate) fn reserve(&mut self, n: usize) {
+        self.xs.reserve(n.saturating_sub(self.xs.len()));
+        self.ys.reserve(n.saturating_sub(self.ys.len()));
+        self.zs.reserve(n.saturating_sub(self.zs.len()));
+        self.ids.reserve(n.saturating_sub(self.ids.len()));
+        self.cells.reserve((n / 2).saturating_sub(self.cells.len()));
+    }
+
+    /// Heap bytes currently reserved (arena growth accounting).
+    pub(crate) fn capacity_bytes(&self) -> u64 {
+        ((self.xs.capacity() + self.ys.capacity() + self.zs.capacity() + self.ids.capacity())
+            * 4) as u64
+            + (self.cells.capacity()
+                * std::mem::size_of::<((i32, i32, i32), (u32, u32))>()) as u64
+    }
+}
+
+/// Collect in-radius candidates from one packed cell slice: distance lanes
+/// first (same per-element op order as the scalar oracle), then the radius
+/// test. `ids` carries the original point indices.
+#[inline]
+fn collect_hits(
+    c: [f32; 3],
+    r2: f32,
+    xs: &[f32],
+    ys: &[f32],
+    zs: &[f32],
+    ids: &[u32],
+    hits: &mut Vec<(f32, usize)>,
+) {
+    let len = ids.len();
+    let mut i = 0;
+    while i + LANES <= len {
+        let mut d2 = [0.0f32; LANES];
+        for l in 0..LANES {
+            let dx = xs[i + l] - c[0];
+            let dy = ys[i + l] - c[1];
+            let dz = zs[i + l] - c[2];
+            d2[l] = dx * dx + dy * dy + dz * dz;
+        }
+        for l in 0..LANES {
+            if d2[l] <= r2 {
+                hits.push((d2[l], ids[i + l] as usize));
+            }
+        }
+        i += LANES;
+    }
+    for j in i..len {
+        let dx = xs[j] - c[0];
+        let dy = ys[j] - c[1];
+        let dz = zs[j] - c[2];
+        let d2 = dx * dx + dy * dy + dz * dz;
+        if d2 <= r2 {
+            hits.push((d2, ids[j] as usize));
+        }
+    }
+}
+
+/// Globally nearest point to `c` (empty-ball fallback) — scalar scan in
+/// index order, bitwise the same rule as the brute-force reference.
+fn nearest_point(pts: &PointsSoA, c: [f32; 3], ci: usize) -> usize {
+    let (xs, ys, zs) = (pts.xs(), pts.ys(), pts.zs());
+    let mut nearest = (f32::INFINITY, ci);
+    for j in 0..pts.len() {
+        let dx = xs[j] - c[0];
+        let dy = ys[j] - c[1];
+        let dz = zs[j] - c[2];
+        let d2 = dx * dx + dy * dy + dz * dz;
+        if d2 < nearest.0 {
+            nearest = (d2, j);
+        }
+    }
+    nearest.1
+}
+
 /// One center's group: K nearest in-radius members (grid-pruned candidates).
 fn query_one(
-    grid: &Grid,
+    grid: &GridStorage,
+    pts: &PointsSoA,
+    ci: usize,
+    r2: f32,
+    k: usize,
+    hits: &mut Vec<(f32, usize)>,
+) -> Vec<usize> {
+    let c = pts.get(ci);
+    hits.clear();
+    grid.neighbors(c, |xs, ys, zs, ids| collect_hits(c, r2, xs, ys, zs, ids, hits));
+    // (d2, index) is a total order over distinct indices, so the sorted
+    // prefix is unique no matter what order the packed cells emitted hits
+    hits.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut out: Vec<usize> = hits.iter().take(k).map(|&(_, j)| j).collect();
+    let fill = out.first().copied().unwrap_or_else(|| nearest_point(pts, c, ci));
+    out.resize(k, fill);
+    out
+}
+
+/// Shared SIMD implementation over prepared scratch buffers.
+fn ball_query_core(
+    pts: &PointsSoA,
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+    threads: usize,
+    grid: &mut GridStorage,
+    hits: &mut Vec<(f32, usize)>,
+) -> Vec<Vec<usize>> {
+    let r2 = radius * radius;
+    grid.build(pts, radius);
+    // clamp the raw thread budget: more threads than centers is never useful
+    let threads = threads.clamp(1, centers.len().max(1));
+    if threads <= 1 || centers.len() < 64 {
+        return centers.iter().map(|&ci| query_one(grid, pts, ci, r2, k, hits)).collect();
+    }
+    let grid = &*grid;
+    par_map(centers, threads, |_, &ci| {
+        // worker threads own their own arenas — only the candidate list is
+        // needed per center, the grid is shared read-only
+        with_arena(|a| query_one(grid, pts, ci, r2, k, &mut a.hits))
+    })
+}
+
+/// Returns (M, K) neighbor indices for each center index.
+pub fn ball_query(
+    xyz: &[[f32; 3]],
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+) -> Vec<Vec<usize>> {
+    ball_query_par(xyz, centers, radius, k, 1)
+}
+
+/// `ball_query` with the per-center loop spread over up to `threads`
+/// scoped threads (clamped to the center count; 0 behaves as 1).
+/// Identical output for any thread count.
+pub fn ball_query_par(
+    xyz: &[[f32; 3]],
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+    threads: usize,
+) -> Vec<Vec<usize>> {
+    with_arena(|a| {
+        let ScratchArena { soa, grid, hits, .. } = a;
+        soa.fill_from_points(xyz);
+        ball_query_core(soa, centers, radius, k, threads, grid, hits)
+    })
+}
+
+/// `ball_query` over a cloud already in SoA layout (the pipeline's steady
+/// path — skips the conversion copy).
+pub fn ball_query_soa(
+    pts: &PointsSoA,
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+    threads: usize,
+) -> Vec<Vec<usize>> {
+    with_arena(|a| {
+        let ScratchArena { grid, hits, .. } = a;
+        ball_query_core(pts, centers, radius, k, threads, grid, hits)
+    })
+}
+
+/// One center's group on the scalar reference grid (the pre-SIMD code).
+fn scalar_query_one(
+    grid: &ScalarGrid,
     xyz: &[[f32; 3]],
     ci: usize,
     r2: f32,
@@ -145,38 +451,19 @@ fn query_one(
     out
 }
 
-/// Returns (M, K) neighbor indices for each center index.
-pub fn ball_query(
+/// Scalar reference implementation (original grid path) — the oracle the
+/// SIMD path is pinned bit-identical to, and the baseline `BENCH_hotpath`
+/// measures speedups against.
+pub fn ball_query_scalar(
     xyz: &[[f32; 3]],
     centers: &[usize],
     radius: f32,
     k: usize,
-) -> Vec<Vec<usize>> {
-    ball_query_par(xyz, centers, radius, k, 1)
-}
-
-/// `ball_query` with the per-center loop spread over up to `threads`
-/// scoped threads. Identical output for any thread count.
-pub fn ball_query_par(
-    xyz: &[[f32; 3]],
-    centers: &[usize],
-    radius: f32,
-    k: usize,
-    threads: usize,
 ) -> Vec<Vec<usize>> {
     let r2 = radius * radius;
-    let grid = Grid::build(xyz, radius);
-    if threads <= 1 || centers.len() < 64 {
-        let mut hits: Vec<(f32, usize)> = Vec::with_capacity(64);
-        return centers
-            .iter()
-            .map(|&ci| query_one(&grid, xyz, ci, r2, k, &mut hits))
-            .collect();
-    }
-    par_map(centers, threads, |_, &ci| {
-        let mut hits: Vec<(f32, usize)> = Vec::with_capacity(64);
-        query_one(&grid, xyz, ci, r2, k, &mut hits)
-    })
+    let grid = ScalarGrid::build(xyz, radius);
+    let mut hits: Vec<(f32, usize)> = Vec::with_capacity(64);
+    centers.iter().map(|&ci| scalar_query_one(&grid, xyz, ci, r2, k, &mut hits)).collect()
 }
 
 /// Reference O(M*N) implementation kept for tests and the §Perf comparison.
@@ -243,6 +530,35 @@ mod tests {
     }
 
     #[test]
+    fn scalar_oracle_matches_simd() {
+        for seed in 0..6 {
+            let pts = cloud(700, seed + 50);
+            let centers: Vec<usize> = (0..64).map(|i| i * 10).collect();
+            for (r, k) in [(0.15, 8), (0.4, 16)] {
+                assert_eq!(
+                    ball_query(&pts, &centers, r, k),
+                    ball_query_scalar(&pts, &centers, r, k),
+                    "seed {seed} r {r} k {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn soa_entry_point_matches_interleaved() {
+        let pts = cloud(600, 77);
+        let soa = crate::pointops::soa::PointsSoA::from_points(&pts);
+        let centers: Vec<usize> = (0..80).map(|i| i * 7).collect();
+        for threads in [1, 4] {
+            assert_eq!(
+                ball_query_soa(&soa, &centers, 0.3, 8, threads),
+                ball_query(&pts, &centers, 0.3, 8),
+                "threads {threads}"
+            );
+        }
+    }
+
+    #[test]
     fn parallel_matches_sequential() {
         let pts = cloud(2000, 11);
         let centers: Vec<usize> = (0..200).map(|i| i * 10).collect();
@@ -250,6 +566,17 @@ mod tests {
         for threads in [2, 3, 8] {
             assert_eq!(ball_query_par(&pts, &centers, 0.35, 12, threads), seq);
         }
+    }
+
+    #[test]
+    fn thread_budget_is_clamped() {
+        // threads == 0 and threads far beyond the center count must both
+        // behave exactly like the sequential path
+        let pts = cloud(800, 13);
+        let centers: Vec<usize> = (0..100).map(|i| i * 8).collect();
+        let seq = ball_query(&pts, &centers, 0.3, 8);
+        assert_eq!(ball_query_par(&pts, &centers, 0.3, 8, 0), seq, "threads=0");
+        assert_eq!(ball_query_par(&pts, &centers, 0.3, 8, 10_000), seq, "threads>n");
     }
 
     #[test]
@@ -309,14 +636,48 @@ mod tests {
     #[test]
     fn ring_zero_is_center_cell_and_rings_partition() {
         // visiting rings 0..=R must hit every point exactly once once R
-        // spans the cloud
+        // spans the cloud — on the scalar grid and the packed grid alike
         let pts = cloud(300, 12);
-        let grid = Grid::build(&pts, 0.5);
+        let grid = ScalarGrid::build(&pts, 0.5);
         let c = [1.0f32, 1.0, 0.5];
         let mut seen = vec![0usize; pts.len()];
         for ring in 0..8 {
             grid.ring(&c, ring, |j| seen[j as usize] += 1);
         }
         assert!(seen.iter().all(|&s| s == 1), "rings must partition the grid");
+
+        let soa = crate::pointops::soa::PointsSoA::from_points(&pts);
+        let mut packed = GridStorage::default();
+        packed.build(&soa, 0.5);
+        let mut seen = vec![0usize; pts.len()];
+        for ring in 0..8 {
+            packed.ring(c, ring, |_, _, _, ids| {
+                for &j in ids {
+                    seen[j as usize] += 1;
+                }
+            });
+        }
+        assert!(seen.iter().all(|&s| s == 1), "packed rings must partition the grid");
+    }
+
+    #[test]
+    fn packed_cells_carry_their_points() {
+        // every packed slot must hold the coordinates of the point its id
+        // names, and cell ranges must cover the cloud exactly once
+        let pts = cloud(257, 21); // odd size: exercises the scalar tail
+        let soa = crate::pointops::soa::PointsSoA::from_points(&pts);
+        let mut g = GridStorage::default();
+        g.build(&soa, 0.33);
+        let mut seen = vec![false; pts.len()];
+        for ring in 0..16 {
+            g.ring([1.0, 1.0, 0.5], ring, |xs, ys, zs, ids| {
+                for (l, &id) in ids.iter().enumerate() {
+                    assert_eq!([xs[l], ys[l], zs[l]], pts[id as usize]);
+                    assert!(!seen[id as usize], "point {id} packed twice");
+                    seen[id as usize] = true;
+                }
+            });
+        }
+        assert!(seen.iter().all(|&s| s), "every point must be packed");
     }
 }

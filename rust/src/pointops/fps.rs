@@ -6,17 +6,32 @@
 //! endpoint is foreground, so foreground points look "farther" and are
 //! selected more often (w0 > 1) or less often (w0 < 1).
 //!
-//! §Perf: the `_par` entry points run the per-iteration min-distance scan
-//! chunked over scoped threads. Each thread owns a contiguous slice of the
-//! rolling `min_d2` array and reports its chunk's first-max; the reduction
-//! combines chunks in index order with a strict `>`, so the result is
-//! **bit-identical** to the sequential scan for any thread count (the
-//! determinism contract of `exec::DagExecutor`). Small clouds fall back to
-//! the sequential path — the scan is memory-bound and thread handoff only
-//! pays off past a few thousand points.
+//! §Perf: the production scan runs over [`PointsSoA`] in fixed-width
+//! `[f32; LANES]` chunks (`scan_chunk_lanes`) — three contiguous coordinate
+//! streams auto-vectorize where the interleaved layout gathered. Each lane
+//! keeps its own running first-max and the lanes are combined by
+//! (max value, then smallest index), which equals the scalar left-to-right
+//! strict-`>` scan; the scalar tail then continues the same reduction, so
+//! the SIMD result is **bit-identical** to [`fps_scalar`] (the original
+//! code, kept as the oracle). The rolling `min_d2` buffer comes from the
+//! per-worker `ScratchArena`, so steady-state calls allocate only the
+//! output indices.
+//!
+//! The `_par` entry points additionally run the per-iteration scan chunked
+//! over scoped threads. Each thread owns a contiguous slice of `min_d2` and
+//! reports its chunk's first-max; the reduction combines chunks in index
+//! order with a strict `>`, so the result is bit-identical to the
+//! sequential scan for any thread count (the determinism contract of
+//! `exec::DagExecutor`). Small clouds fall back to the sequential path —
+//! the scan is memory-bound and thread handoff only pays off past a few
+//! thousand points. Thread budgets are clamped to the point count and
+//! `threads == 0` behaves as 1.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
+
+use super::arena::{with_arena, ScratchArena};
+use super::soa::{PointsSoA, LANES};
 
 /// Below this cloud size the parallel scan is not worth the barriers.
 const PAR_MIN_POINTS: usize = 4096;
@@ -84,9 +99,272 @@ pub fn biased_fps_from_par(
     fps_impl(xyz, m, Some(fg), w0, start, threads)
 }
 
-/// Scan one chunk of the cloud: update its `min_d2` slice against the last
-/// selected point and return the chunk's running first-max `(value, index)`.
-/// `off` is the chunk's offset into the full cloud.
+/// FPS over a cloud already in SoA layout (the pipeline's steady path —
+/// skips the conversion copy).
+pub fn fps_soa(pts: &PointsSoA, m: usize, start: usize, threads: usize) -> Vec<usize> {
+    fps_soa_impl(pts, m, None, 1.0, start, threads)
+}
+
+/// Biased FPS over a cloud already in SoA layout.
+pub fn biased_fps_soa(
+    pts: &PointsSoA,
+    m: usize,
+    fg: &[f32],
+    w0: f32,
+    start: usize,
+    threads: usize,
+) -> Vec<usize> {
+    fps_soa_impl(pts, m, Some(fg), w0, start, threads)
+}
+
+fn check_args(n: usize, m: usize, start: usize, fg: Option<&[f32]>) {
+    assert!(m >= 1 && m <= n, "fps: m={m} out of range for n={n}");
+    // reject — don't silently clamp — a start index outside the cloud
+    assert!(start < n, "fps: start={start} out of range for n={n}");
+    if let Some(f) = fg {
+        assert_eq!(f.len(), n);
+    }
+}
+
+/// Hoist the per-pair bias branch by specializing the unbiased path (the
+/// common case: every SA layer of SA-normal plus SA3+ of SA-bias).
+fn bias_of<'f>(fg: Option<&'f [f32]>, w0: f32) -> Option<(&'f [f32], f32)> {
+    match fg {
+        Some(f) if w0 != 1.0 => Some((f, w0)),
+        _ => None,
+    }
+}
+
+/// Effective inner-loop thread count: the raw budget is clamped to the
+/// point count (`threads == 0` behaves as 1), then small clouds fall back
+/// to the sequential scan.
+fn thread_budget(n: usize, threads: usize) -> usize {
+    let threads = threads.clamp(1, n.max(1));
+    if threads > 1 && n >= PAR_MIN_POINTS {
+        threads.min(n / PAR_MIN_CHUNK).max(1)
+    } else {
+        1
+    }
+}
+
+fn fps_impl(
+    xyz: &[[f32; 3]],
+    m: usize,
+    fg: Option<&[f32]>,
+    w0: f32,
+    start: usize,
+    threads: usize,
+) -> Vec<usize> {
+    let n = xyz.len();
+    check_args(n, m, start, fg);
+    let bias = bias_of(fg, w0);
+    let nt = thread_budget(n, threads);
+    with_arena(|a| {
+        let ScratchArena { soa, min_d2, .. } = a;
+        soa.fill_from_points(xyz);
+        fps_core(soa, m, bias, start, nt, min_d2)
+    })
+}
+
+fn fps_soa_impl(
+    pts: &PointsSoA,
+    m: usize,
+    fg: Option<&[f32]>,
+    w0: f32,
+    start: usize,
+    threads: usize,
+) -> Vec<usize> {
+    let n = pts.len();
+    check_args(n, m, start, fg);
+    let bias = bias_of(fg, w0);
+    let nt = thread_budget(n, threads);
+    with_arena(|a| fps_core(pts, m, bias, start, nt, &mut a.min_d2))
+}
+
+/// Shared SIMD implementation over the arena's rolling `min_d2` buffer.
+fn fps_core(
+    pts: &PointsSoA,
+    m: usize,
+    bias: Option<(&[f32], f32)>,
+    start: usize,
+    nt: usize,
+    min_d2: &mut Vec<f32>,
+) -> Vec<usize> {
+    min_d2.clear();
+    min_d2.resize(pts.len(), f32::INFINITY);
+    if nt > 1 {
+        return fps_parallel(pts, m, bias, start, nt, min_d2);
+    }
+    let mut out = Vec::with_capacity(m);
+    let mut last = start;
+    out.push(last);
+    for _ in 1..m {
+        let chunk_bias = bias.map(|(f, w)| (f, f[last], w));
+        let (_, best) =
+            scan_chunk_lanes(pts.xs(), pts.ys(), pts.zs(), min_d2, 0, pts.get(last), chunk_bias);
+        out.push(best);
+        last = best;
+    }
+    out
+}
+
+/// Scan one chunk of the cloud in `[f32; LANES]` blocks: update its
+/// `min_d2` slice against the last selected point and return the chunk's
+/// running first-max `(value, index)`. `off` is the chunk's offset into the
+/// full cloud (`bias.0` is indexed globally).
+///
+/// Bit-identity with the scalar scan: each lane `l` sees the index
+/// subsequence `off+i+l` in order, so its running strict-`>` max is the
+/// lane's *first* maximum; combining lanes by (greater value, else smaller
+/// index) then yields the first maximum of the whole block prefix, and the
+/// scalar tail continues that reduction unchanged.
+#[inline]
+fn scan_chunk_lanes(
+    xs: &[f32],
+    ys: &[f32],
+    zs: &[f32],
+    min_d2: &mut [f32],
+    off: usize,
+    lp: [f32; 3],
+    bias: Option<(&[f32], f32, f32)>, // (fg, fg_last, w0)
+) -> (f32, usize) {
+    let len = min_d2.len();
+    debug_assert!(xs.len() == len && ys.len() == len && zs.len() == len);
+    let mut best = off;
+    let mut best_v = f32::NEG_INFINITY;
+    let mut lane_v = [f32::NEG_INFINITY; LANES];
+    let mut lane_i = [0usize; LANES];
+    for (l, li) in lane_i.iter_mut().enumerate() {
+        *li = off + l;
+    }
+    let mut i = 0;
+    while i + LANES <= len {
+        let mut d2 = [0.0f32; LANES];
+        for l in 0..LANES {
+            let dx = xs[i + l] - lp[0];
+            let dy = ys[i + l] - lp[1];
+            let dz = zs[i + l] - lp[2];
+            d2[l] = dx * dx + dy * dy + dz * dz;
+        }
+        if let Some((fg, fg_last, w0)) = bias {
+            for l in 0..LANES {
+                // either-endpoint-foreground indicator (Eq. 1)
+                let fg_j = fg[off + i + l];
+                let either = fg_j + fg_last - fg_j * fg_last;
+                let f = 1.0 + (w0 - 1.0) * either;
+                d2[l] *= f * f;
+            }
+        }
+        for l in 0..LANES {
+            let md = min_d2[i + l];
+            let nmd = if d2[l] < md { d2[l] } else { md };
+            min_d2[i + l] = nmd;
+            if nmd > lane_v[l] {
+                lane_v[l] = nmd;
+                lane_i[l] = off + i + l;
+            }
+        }
+        i += LANES;
+    }
+    for l in 0..LANES {
+        if lane_v[l] > best_v || (lane_v[l] == best_v && lane_i[l] < best) {
+            best_v = lane_v[l];
+            best = lane_i[l];
+        }
+    }
+    for j in i..len {
+        let dx = xs[j] - lp[0];
+        let dy = ys[j] - lp[1];
+        let dz = zs[j] - lp[2];
+        let mut d2 = dx * dx + dy * dy + dz * dz;
+        if let Some((fg, fg_last, w0)) = bias {
+            let fg_j = fg[off + j];
+            let either = fg_j + fg_last - fg_j * fg_last;
+            let f = 1.0 + (w0 - 1.0) * either;
+            d2 *= f * f;
+        }
+        let md = min_d2[j];
+        let nmd = if d2 < md { d2 } else { md };
+        min_d2[j] = nmd;
+        if nmd > best_v {
+            best_v = nmd;
+            best = off + j;
+        }
+    }
+    (best_v, best)
+}
+
+/// Chunked-parallel scan: `nt` scoped threads each own one contiguous slice
+/// of `min_d2`; the caller reduces the per-chunk first-maxima in chunk order
+/// between two barriers per iteration.
+fn fps_parallel(
+    pts: &PointsSoA,
+    m: usize,
+    bias: Option<(&[f32], f32)>,
+    start: usize,
+    nt: usize,
+    min_d2: &mut [f32],
+) -> Vec<usize> {
+    let n = pts.len();
+    let mut out = Vec::with_capacity(m);
+    out.push(start);
+    if m == 1 {
+        return out;
+    }
+    let chunk_len = n.div_ceil(nt);
+    let chunks: Vec<&mut [f32]> = min_d2.chunks_mut(chunk_len).collect();
+    let nt = chunks.len(); // may be fewer than requested
+    let last = AtomicUsize::new(start);
+    let results: Vec<Mutex<(f32, usize)>> =
+        (0..nt).map(|_| Mutex::new((f32::NEG_INFINITY, 0))).collect();
+    let barrier = Barrier::new(nt + 1);
+    let (xs, ys, zs) = (pts.xs(), pts.ys(), pts.zs());
+    std::thread::scope(|scope| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let (results, barrier, last) = (&results, &barrier, &last);
+            scope.spawn(move || {
+                let off = t * chunk_len;
+                let end = off + chunk.len();
+                for _ in 1..m {
+                    let cur = last.load(Ordering::Acquire);
+                    let chunk_bias = bias.map(|(f, w)| (f, f[cur], w));
+                    let lp = [xs[cur], ys[cur], zs[cur]];
+                    let r = scan_chunk_lanes(
+                        &xs[off..end],
+                        &ys[off..end],
+                        &zs[off..end],
+                        chunk,
+                        off,
+                        lp,
+                        chunk_bias,
+                    );
+                    *results[t].lock().unwrap() = r;
+                    barrier.wait(); // results posted
+                    barrier.wait(); // reduction done, `last` updated
+                }
+            });
+        }
+        for _ in 1..m {
+            barrier.wait();
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for r in &results {
+                let v = *r.lock().unwrap();
+                // strict > keeps the earliest chunk on ties — the same
+                // first-max rule as the sequential scan
+                if v.0 > best.0 {
+                    best = v;
+                }
+            }
+            out.push(best.1);
+            last.store(best.1, Ordering::Release);
+            barrier.wait();
+        }
+    });
+    out
+}
+
+/// Scan one chunk of an interleaved cloud — the original scalar kernel,
+/// kept verbatim as the oracle the SIMD lanes are pinned against.
 #[inline]
 fn scan_chunk(
     xyz: &[[f32; 3]],
@@ -146,35 +424,20 @@ fn scan_chunk(
     (best_v, best)
 }
 
-fn fps_impl(
+/// Scalar reference FPS (the pre-SIMD sequential implementation) — the
+/// oracle the lane kernel is pinned bit-identical to, and the baseline
+/// `BENCH_hotpath` measures speedups against. Pass `fg: None, w0: 1.0` for
+/// regular FPS.
+pub fn fps_scalar(
     xyz: &[[f32; 3]],
     m: usize,
     fg: Option<&[f32]>,
     w0: f32,
     start: usize,
-    threads: usize,
 ) -> Vec<usize> {
     let n = xyz.len();
-    assert!(m >= 1 && m <= n, "fps: m={m} out of range for n={n}");
-    // reject — don't silently clamp — a start index outside the cloud
-    assert!(start < n, "fps: start={start} out of range for n={n}");
-    if let Some(f) = fg {
-        assert_eq!(f.len(), n);
-    }
-    // hoist the per-pair bias branch by specializing the unbiased path (the
-    // common case: every SA layer of SA-normal plus SA3+ of SA-bias)
-    let bias = match fg {
-        Some(f) if w0 != 1.0 => Some((f, w0)),
-        _ => None,
-    };
-    let nt = if threads > 1 && n >= PAR_MIN_POINTS {
-        threads.min(n / PAR_MIN_CHUNK).max(1)
-    } else {
-        1
-    };
-    if nt > 1 {
-        return fps_parallel(xyz, m, bias, start, nt);
-    }
+    check_args(n, m, start, fg);
+    let bias = bias_of(fg, w0);
     let mut out = Vec::with_capacity(m);
     let mut min_d2 = vec![f32::INFINITY; n];
     let mut last = start;
@@ -185,64 +448,6 @@ fn fps_impl(
         out.push(best);
         last = best;
     }
-    out
-}
-
-/// Chunked-parallel scan: `nt` scoped threads each own one contiguous slice
-/// of `min_d2`; the caller reduces the per-chunk first-maxima in chunk order
-/// between two barriers per iteration.
-fn fps_parallel(
-    xyz: &[[f32; 3]],
-    m: usize,
-    bias: Option<(&[f32], f32)>,
-    start: usize,
-    nt: usize,
-) -> Vec<usize> {
-    let n = xyz.len();
-    let mut out = Vec::with_capacity(m);
-    out.push(start);
-    if m == 1 {
-        return out;
-    }
-    let chunk_len = n.div_ceil(nt);
-    let mut min_d2 = vec![f32::INFINITY; n];
-    let chunks: Vec<&mut [f32]> = min_d2.chunks_mut(chunk_len).collect();
-    let nt = chunks.len(); // may be fewer than requested
-    let last = AtomicUsize::new(start);
-    let results: Vec<Mutex<(f32, usize)>> =
-        (0..nt).map(|_| Mutex::new((f32::NEG_INFINITY, 0))).collect();
-    let barrier = Barrier::new(nt + 1);
-    std::thread::scope(|scope| {
-        for (t, chunk) in chunks.into_iter().enumerate() {
-            let (results, barrier, last) = (&results, &barrier, &last);
-            scope.spawn(move || {
-                let off = t * chunk_len;
-                for _ in 1..m {
-                    let cur = last.load(Ordering::Acquire);
-                    let chunk_bias = bias.map(|(f, w)| (f, f[cur], w));
-                    let r = scan_chunk(xyz, chunk, off, xyz[cur], chunk_bias);
-                    *results[t].lock().unwrap() = r;
-                    barrier.wait(); // results posted
-                    barrier.wait(); // reduction done, `last` updated
-                }
-            });
-        }
-        for _ in 1..m {
-            barrier.wait();
-            let mut best = (f32::NEG_INFINITY, 0usize);
-            for r in &results {
-                let v = *r.lock().unwrap();
-                // strict > keeps the earliest chunk on ties — the same
-                // first-max rule as the sequential scan
-                if v.0 > best.0 {
-                    best = v;
-                }
-            }
-            out.push(best.1);
-            last.store(best.1, Ordering::Release);
-            barrier.wait();
-        }
-    });
     out
 }
 
@@ -336,6 +541,52 @@ mod tests {
         let pts = cloud(300, 6);
         let fg = vec![1.0; 300];
         assert_eq!(fps(&pts, 50), biased_fps(&pts, 50, &fg, 1.0));
+    }
+
+    #[test]
+    fn simd_lanes_bit_identical_to_scalar_oracle() {
+        // sizes straddling the lane width (tails of every length) and both
+        // bias modes; the SIMD path must reproduce the scalar oracle exactly
+        for n in [63usize, 64, 65, 500, 1021] {
+            let pts = cloud(n, 40 + n as u64);
+            let fg: Vec<f32> =
+                pts.iter().map(|p| if p[0] < 1.5 { 1.0 } else { 0.0 }).collect();
+            let m = (n / 4).max(2);
+            assert_eq!(fps(&pts, m), fps_scalar(&pts, m, None, 1.0, 0), "n={n}");
+            assert_eq!(
+                biased_fps(&pts, m, &fg, 2.0),
+                fps_scalar(&pts, m, Some(&fg), 2.0, 0),
+                "biased n={n}"
+            );
+            assert_eq!(
+                fps_from(&pts, m, n / 2),
+                fps_scalar(&pts, m, None, 1.0, n / 2),
+                "start n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn soa_entry_point_matches_interleaved() {
+        let pts = cloud(700, 60);
+        let soa = PointsSoA::from_points(&pts);
+        let fg: Vec<f32> = pts.iter().map(|p| if p[1] < 2.0 { 1.0 } else { 0.0 }).collect();
+        assert_eq!(fps_soa(&soa, 96, 0, 1), fps(&pts, 96));
+        assert_eq!(fps_soa(&soa, 96, 350, 1), fps_from(&pts, 96, 350));
+        assert_eq!(biased_fps_soa(&soa, 96, &fg, 2.0, 0, 1), biased_fps(&pts, 96, &fg, 2.0));
+    }
+
+    #[test]
+    fn thread_budget_is_clamped() {
+        // threads == 0 and absurd budgets must both match the sequential
+        // result (clamped to the point count, then the small-cloud floor)
+        let pts = cloud(PAR_MIN_POINTS + 133, 70);
+        let seq = fps(&pts, 48);
+        assert_eq!(fps_par(&pts, 48, 0), seq, "threads=0");
+        assert_eq!(fps_par(&pts, 48, usize::MAX), seq, "threads=usize::MAX");
+        let small = cloud(200, 71);
+        assert_eq!(fps_par(&small, 16, 0), fps(&small, 16), "small cloud threads=0");
+        assert_eq!(fps_par(&small, 16, 999), fps(&small, 16), "small cloud threads=999");
     }
 
     #[test]

@@ -1,20 +1,24 @@
 //! Feature propagation: inverse-distance-weighted 3-NN interpolation
 //! (mirror of sampling.three_nn_interpolate).
 //!
-//! §Perf: the production path reuses the uniform hash [`Grid`] from
-//! `ballquery` with an expanding-ring search, replacing the O(Nd*Ns)
-//! brute-force scan, and `three_nn_interpolate_par` spreads destination
-//! points over scoped threads. Candidates are ranked by `(d2, index)` so the
-//! grid search, the brute-force reference, and every thread count produce
-//! identical neighbor sets (exact-tie handling included).
+//! §Perf: the production path searches the packed SoA [`GridStorage`] from
+//! `ballquery` with an expanding-ring walk, scanning each cell's members in
+//! fixed-width `[f32; LANES]` distance blocks, and writes rows into one
+//! preallocated output buffer (`chunks_mut` over scoped threads — no
+//! per-destination row allocation). Candidates are ranked by `(d2, index)`,
+//! a total order, so the best-3 selection is independent of visit order:
+//! the SIMD grid search, the scalar [`ScalarGrid`] oracle
+//! ([`three_nn_interpolate_scalar`], the pre-SIMD code kept verbatim), the
+//! brute-force reference, and every thread count produce identical output.
 //!
 //! Degenerate sources are well-defined: zero source points interpolate to
 //! zeros, and 1 or 2 sources use all of them with IDW weights — no
 //! `(INFINITY, 0)` sentinel ever reaches the weighting (the seed code
 //! panicked on `row(0)` for empty sources and could emit NaN for Ns < 3).
 
-use super::ballquery::Grid;
-use crate::exec::par_map;
+use super::arena::{with_arena, ScratchArena};
+use super::ballquery::{GridStorage, ScalarGrid};
+use super::soa::{PointsSoA, LANES};
 use crate::util::tensor::Tensor;
 
 /// Below this source count a brute-force scan beats building a grid.
@@ -51,16 +55,16 @@ fn dist2(a: &[f32; 3], b: &[f32; 3]) -> f32 {
     dx * dx + dy * dy + dz * dz
 }
 
-/// `kk` nearest sources to `d` via expanding grid rings. After finishing
-/// ring R every unvisited point is farther than `R * cell`, so the search
-/// stops as soon as the current `kk`-th best is within that bound.
-/// `start_ring` skips rings that provably contain no source point (queries
-/// far outside the source bounding box); `max_ring` bounds the search once
-/// every populated cell has been visited.
+/// `kk` nearest sources to `d` via expanding rings on the scalar oracle
+/// grid. After finishing ring R every unvisited point is farther than
+/// `R * cell`, so the search stops as soon as the current `kk`-th best is
+/// within that bound. `start_ring` skips rings that provably contain no
+/// source point (queries far outside the source bounding box); `max_ring`
+/// bounds the search once every populated cell has been visited.
 fn knn_grid(
     d: &[f32; 3],
     src: &[[f32; 3]],
-    grid: &Grid,
+    grid: &ScalarGrid,
     kk: usize,
     start_ring: i32,
     max_ring: i32,
@@ -84,6 +88,71 @@ fn knn_grid(
         if ring > max_ring {
             break; // every populated cell visited
         }
+    }
+    best
+}
+
+/// `kk` nearest sources via expanding rings on the packed grid, scanning
+/// each cell's members in `[f32; LANES]` distance blocks. Identical result
+/// to [`knn_grid`]: the rings enumerate the same cells, the per-element
+/// distance op order matches, and the `(d2, index)` ranking makes the
+/// selection independent of visit order.
+fn knn_grid_lanes(
+    d: [f32; 3],
+    grid: &GridStorage,
+    kk: usize,
+    start_ring: i32,
+    max_ring: i32,
+) -> [(f32, usize); 3] {
+    let cell = grid.cell_size();
+    let mut best = [(f32::INFINITY, usize::MAX); 3];
+    let mut ring = start_ring.max(0);
+    loop {
+        grid.ring(d, ring, |xs, ys, zs, ids| {
+            let len = ids.len();
+            let mut i = 0;
+            while i + LANES <= len {
+                let mut d2 = [0.0f32; LANES];
+                for l in 0..LANES {
+                    let dx = xs[i + l] - d[0];
+                    let dy = ys[i + l] - d[1];
+                    let dz = zs[i + l] - d[2];
+                    d2[l] = dx * dx + dy * dy + dz * dz;
+                }
+                for l in 0..LANES {
+                    insert(&mut best, kk, d2[l], ids[i + l] as usize);
+                }
+                i += LANES;
+            }
+            for j in i..len {
+                let dx = xs[j] - d[0];
+                let dy = ys[j] - d[1];
+                let dz = zs[j] - d[2];
+                insert(&mut best, kk, dx * dx + dy * dy + dz * dz, ids[j] as usize);
+            }
+        });
+        let covered = (ring as f32) * cell;
+        if best[kk - 1].0.is_finite() && best[kk - 1].0 < covered * covered {
+            break;
+        }
+        ring += 1;
+        if ring > max_ring {
+            break;
+        }
+    }
+    best
+}
+
+/// Best-`kk` by plain scan over an SoA cloud (small-source and far-query
+/// fallbacks; same op order and ranking as the reference scan).
+fn brute_best(d: [f32; 3], src: &PointsSoA, kk: usize) -> [(f32, usize); 3] {
+    let (xs, ys, zs) = (src.xs(), src.ys(), src.zs());
+    let mut best = [(f32::INFINITY, usize::MAX); 3];
+    for j in 0..src.len() {
+        let dx = xs[j] - d[0];
+        let dy = ys[j] - d[1];
+        let dz = zs[j] - d[2];
+        insert(&mut best, kk, dx * dx + dy * dy + dz * dz, j);
     }
     best
 }
@@ -116,12 +185,136 @@ pub fn three_nn_interpolate(
 }
 
 /// `three_nn_interpolate` with destination points spread over up to
-/// `threads` scoped threads. Identical output for any thread count.
+/// `threads` scoped threads (clamped to the destination count; 0 behaves
+/// as 1). Identical output for any thread count.
 pub fn three_nn_interpolate_par(
     dst_xyz: &[[f32; 3]],
     src_xyz: &[[f32; 3]],
     src_feats: &Tensor,
     threads: usize,
+) -> Tensor {
+    with_arena(|a| {
+        let ScratchArena { soa, soa2, grid, .. } = a;
+        soa.fill_from_points(dst_xyz);
+        soa2.fill_from_points(src_xyz);
+        three_nn_core(soa, soa2, src_feats, threads, grid)
+    })
+}
+
+/// Interpolation over clouds already in SoA layout (the pipeline's steady
+/// path — skips both conversion copies).
+pub fn three_nn_interpolate_soa(
+    dst: &PointsSoA,
+    src: &PointsSoA,
+    src_feats: &Tensor,
+    threads: usize,
+) -> Tensor {
+    with_arena(|a| three_nn_core(dst, src, src_feats, threads, &mut a.grid))
+}
+
+/// Shared SIMD implementation over the arena's packed grid. Writes every
+/// destination row into one preallocated buffer.
+fn three_nn_core(
+    dst: &PointsSoA,
+    src: &PointsSoA,
+    src_feats: &Tensor,
+    threads: usize,
+    grid: &mut GridStorage,
+) -> Tensor {
+    assert_eq!(src.len(), src_feats.rows());
+    let c = src_feats.row_len();
+    let nd = dst.len();
+    let ns = src.len();
+    let mut out = vec![0.0f32; nd * c];
+    if ns == 0 {
+        return Tensor::new(vec![nd, c], out);
+    }
+    let kk = ns.min(3);
+    // grid cell sized for ~1 source point per cell; degenerate clouds
+    // (tiny or near-coincident) take the bounded exact scan instead
+    let grid_params = if ns >= GRID_MIN_SRC {
+        let (mut lo, mut hi) = (src.get(0), src.get(0));
+        for p in src.iter() {
+            for a in 0..3 {
+                lo[a] = lo[a].min(p[a]);
+                hi[a] = hi[a].max(p[a]);
+            }
+        }
+        let extent = (hi[0] - lo[0]).max(hi[1] - lo[1]).max(hi[2] - lo[2]);
+        let cell = extent / (ns as f32).cbrt();
+        if cell < 1e-4 {
+            None
+        } else {
+            grid.build(src, cell);
+            // past this ring the search has seen every populated cell no
+            // matter where the query sits relative to the bounding box
+            let span = ((extent / cell).ceil() as i32).saturating_add(1);
+            Some((lo, hi, cell, span))
+        }
+    } else {
+        None
+    };
+    let grid = &*grid;
+    let row_of = |i: usize, row: &mut [f32]| {
+        let d = dst.get(i);
+        match grid_params {
+            Some((lo, hi, cell, span)) => {
+                // Chebyshev distance from the query to the source bounding
+                // box: rings below floor(r/cell) - 1 cannot contain a source
+                // point, and rings beyond span + ceil(r/cell) + 1 have all
+                // been visited
+                let mut r = 0f32;
+                for a in 0..3 {
+                    r = r.max((lo[a] - d[a]).max(d[a] - hi[a]).max(0.0));
+                }
+                let start_ring = ((r / cell).floor() as i32).saturating_sub(1);
+                if start_ring > FAR_BRUTE_RINGS {
+                    // far outside the cloud: a plain scan is bounded and exact
+                    let best = brute_best(d, src, kk);
+                    idw_row(&best, kk, src_feats, row);
+                } else {
+                    let max_ring =
+                        span.saturating_add((r / cell).ceil() as i32).saturating_add(1);
+                    let best = knn_grid_lanes(d, grid, kk, start_ring, max_ring);
+                    idw_row(&best, kk, src_feats, row);
+                }
+            }
+            None => {
+                let best = brute_best(d, src, kk);
+                idw_row(&best, kk, src_feats, row);
+            }
+        }
+    };
+    let nt = threads.clamp(1, nd.max(1));
+    if nt <= 1 || nd < 64 {
+        for (i, row) in out.chunks_mut(c.max(1)).enumerate() {
+            row_of(i, row);
+        }
+    } else {
+        // each thread owns a contiguous block of output rows — rows are
+        // independent, so the result is identical for any thread count
+        let rows_per = nd.div_ceil(nt);
+        std::thread::scope(|scope| {
+            for (t, chunk) in out.chunks_mut(rows_per * c.max(1)).enumerate() {
+                let row_of = &row_of;
+                scope.spawn(move || {
+                    for (j, row) in chunk.chunks_mut(c.max(1)).enumerate() {
+                        row_of(t * rows_per + j, row);
+                    }
+                });
+            }
+        });
+    }
+    Tensor::new(vec![nd, c], out)
+}
+
+/// Scalar reference implementation (the pre-SIMD grid path, kept verbatim)
+/// — the oracle the SIMD path is pinned bit-identical to, and the baseline
+/// `BENCH_hotpath` measures speedups against.
+pub fn three_nn_interpolate_scalar(
+    dst_xyz: &[[f32; 3]],
+    src_xyz: &[[f32; 3]],
+    src_feats: &Tensor,
 ) -> Tensor {
     assert_eq!(src_xyz.len(), src_feats.rows());
     let c = src_feats.row_len();
@@ -148,14 +341,10 @@ pub fn three_nn_interpolate_par(
         // searches crawl; the plain scan is bounded and exact
         return three_nn_interpolate_bruteforce(dst_xyz, src_xyz, src_feats);
     }
-    let grid = Grid::build(src_xyz, cell);
-    // past this ring the search has seen every populated cell no matter
-    // where the query sits relative to the source bounding box
+    let grid = ScalarGrid::build(src_xyz, cell);
     let span = ((extent / cell).ceil() as i32).saturating_add(1);
-    let rows = par_map(dst_xyz, threads, |_, d| {
-        // Chebyshev distance from the query to the source bounding box:
-        // rings below floor(r/cell) - 1 cannot contain a source point, and
-        // rings beyond span + ceil(r/cell) + 1 have all been visited
+    let mut out = Vec::with_capacity(dst_xyz.len() * c);
+    for d in dst_xyz {
         let mut r = 0f32;
         for a in 0..3 {
             r = r.max((lo[a] - d[a]).max(d[a] - hi[a]).max(0.0));
@@ -163,7 +352,6 @@ pub fn three_nn_interpolate_par(
         let start_ring = ((r / cell).floor() as i32).saturating_sub(1);
         let mut row = vec![0.0f32; c];
         if start_ring > FAR_BRUTE_RINGS {
-            // far outside the cloud: a plain scan is bounded and exact
             let mut best = [(f32::INFINITY, usize::MAX); 3];
             for (j, s) in src_xyz.iter().enumerate() {
                 insert(&mut best, kk, dist2(d, s), j);
@@ -176,11 +364,7 @@ pub fn three_nn_interpolate_par(
             let best = knn_grid(d, src_xyz, &grid, kk, start_ring, max_ring);
             idw_row(&best, kk, src_feats, &mut row);
         }
-        row
-    });
-    let mut out = Vec::with_capacity(dst_xyz.len() * c);
-    for r in rows {
-        out.extend_from_slice(&r);
+        out.extend_from_slice(&row);
     }
     Tensor::new(vec![dst_xyz.len(), c], out)
 }
@@ -256,6 +440,36 @@ mod tests {
     }
 
     #[test]
+    fn simd_matches_scalar_oracle() {
+        for seed in 0..4 {
+            let src = cloud(450, seed + 10);
+            let f = feats(450, 6, seed + 110);
+            let dst = cloud(173, seed + 210); // odd count exercises lane tails
+            assert_eq!(
+                three_nn_interpolate(&dst, &src, &f),
+                three_nn_interpolate_scalar(&dst, &src, &f),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn soa_entry_point_matches_interleaved() {
+        let src = cloud(300, 51);
+        let f = feats(300, 4, 52);
+        let dst = cloud(140, 53);
+        let s_src = PointsSoA::from_points(&src);
+        let s_dst = PointsSoA::from_points(&dst);
+        for threads in [1, 4] {
+            assert_eq!(
+                three_nn_interpolate_soa(&s_dst, &s_src, &f, threads),
+                three_nn_interpolate(&dst, &src, &f),
+                "threads {threads}"
+            );
+        }
+    }
+
+    #[test]
     fn parallel_matches_sequential() {
         let src = cloud(500, 21);
         let f = feats(500, 5, 22);
@@ -264,6 +478,20 @@ mod tests {
         for threads in [2, 3, 8] {
             assert_eq!(three_nn_interpolate_par(&dst, &src, &f, threads), seq);
         }
+    }
+
+    #[test]
+    fn thread_budget_is_clamped() {
+        let src = cloud(400, 25);
+        let f = feats(400, 5, 26);
+        let dst = cloud(200, 27);
+        let seq = three_nn_interpolate(&dst, &src, &f);
+        assert_eq!(three_nn_interpolate_par(&dst, &src, &f, 0), seq, "threads=0");
+        assert_eq!(
+            three_nn_interpolate_par(&dst, &src, &f, usize::MAX),
+            seq,
+            "threads=usize::MAX"
+        );
     }
 
     #[test]

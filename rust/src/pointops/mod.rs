@@ -6,20 +6,27 @@
 //! it runs on the Rust side of the split and is numerics-mirrored by
 //! python/compile/sampling.py (parity checked by the Table 3 bench).
 
+pub mod arena;
 pub mod fps;
 pub mod ballquery;
 pub mod density;
 pub mod interp;
 pub mod paint;
+pub mod soa;
 
-pub use ballquery::{ball_query, ball_query_par};
+pub use arena::{scratch_tracker, warm, with_arena, ScratchArena};
+pub use ballquery::{ball_query, ball_query_par, ball_query_scalar, ball_query_soa};
 pub use density::{density_biased_sample, local_density};
 pub use fps::{
-    biased_fps, biased_fps_from, biased_fps_from_par, biased_fps_par, fps, fps_from, fps_from_par,
-    fps_par,
+    biased_fps, biased_fps_from, biased_fps_from_par, biased_fps_par, biased_fps_soa, fps,
+    fps_from, fps_from_par, fps_par, fps_scalar, fps_soa,
 };
-pub use interp::{three_nn_interpolate, three_nn_interpolate_par};
+pub use interp::{
+    three_nn_interpolate, three_nn_interpolate_par, three_nn_interpolate_scalar,
+    three_nn_interpolate_soa,
+};
 pub use paint::{build_features, fg_mask, paint_points};
+pub use soa::{padded_len, soa_bytes, PointsSoA, LANES};
 
 use crate::util::tensor::Tensor;
 
@@ -41,6 +48,34 @@ pub fn group_features(
         let center = xyz[*ci];
         for &pi in group {
             let p = xyz[pi];
+            data.push(p[0] - center[0]);
+            data.push(p[1] - center[1]);
+            data.push(p[2] - center[2]);
+            if let Some(f) = feats {
+                data.extend_from_slice(f.row(pi));
+            }
+        }
+    }
+    Tensor::new(vec![m, k, 3 + c], data)
+}
+
+/// [`group_features`] over a cloud in SoA layout (the pipeline's steady
+/// path). Same output bit-for-bit: per-point coordinates are identical and
+/// the emit order is unchanged.
+pub fn group_features_soa(
+    pts: &PointsSoA,
+    feats: Option<&Tensor>,
+    centers: &[usize],
+    groups: &[Vec<usize>],
+) -> Tensor {
+    let m = centers.len();
+    let k = groups.first().map_or(0, |g| g.len());
+    let c = feats.map_or(0, |f| f.row_len());
+    let mut data = Vec::with_capacity(m * k * (3 + c));
+    for (ci, group) in centers.iter().zip(groups.iter()) {
+        let center = pts.get(*ci);
+        for &pi in group {
+            let p = pts.get(pi);
             data.push(p[0] - center[0]);
             data.push(p[1] - center[1]);
             data.push(p[2] - center[2]);
@@ -76,5 +111,22 @@ mod tests {
         // first neighbor: p0 - p1 = (-1,0,0) ++ feats[0]
         assert_eq!(&g.data[0..5], &[-1.0, 0.0, 0.0, 10.0, 11.0]);
         assert_eq!(&g.data[5..10], &[-1.0, 2.0, 0.0, 30.0, 31.0]);
+    }
+
+    #[test]
+    fn group_features_soa_matches_interleaved() {
+        let xyz = vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [0.0, 2.0, 0.0], [3.0, 1.0, 2.0]];
+        let feats = Tensor::new(vec![4, 2], vec![10., 11., 20., 21., 30., 31., 40., 41.]);
+        let soa = PointsSoA::from_points(&xyz);
+        let centers = vec![1, 3];
+        let groups = vec![vec![0, 2], vec![3, 1]];
+        assert_eq!(
+            group_features_soa(&soa, Some(&feats), &centers, &groups),
+            group_features(&xyz, Some(&feats), &centers, &groups)
+        );
+        assert_eq!(
+            group_features_soa(&soa, None, &centers, &groups),
+            group_features(&xyz, None, &centers, &groups)
+        );
     }
 }

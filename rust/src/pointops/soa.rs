@@ -1,0 +1,232 @@
+//! Structure-of-arrays point storage for the SIMD hot path.
+//!
+//! The distance loops in `fps`, `ballquery` and `interp` are bound by how
+//! fast they can stream coordinates. The interleaved `[[f32; 3]]` layout
+//! makes every lane load a gather; [`PointsSoA`] stores x/y/z as three flat
+//! `Vec<f32>` so a fixed-width `[f32; LANES]` chunk kernel reads three
+//! contiguous streams and auto-vectorizes. Arrays are kept padded to a
+//! [`LANES`] multiple (zero-filled tail) so a kernel may always read a full
+//! lane block starting at any live index; the live prefix is `len` points
+//! and the padding never participates in results.
+//!
+//! `soa_bytes(n)` is the canonical padded footprint of one cloud — the sim's
+//! workload accounting is checked against it by the verifier's S005 rule so
+//! the layout cannot silently drift from the memory model.
+
+/// Fixed SIMD lane width of the chunk kernels (f32 elements per block).
+pub const LANES: usize = 8;
+
+/// Storage length of an `n`-point cloud: `n` rounded up to a lane multiple.
+pub fn padded_len(n: usize) -> usize {
+    n.div_ceil(LANES) * LANES
+}
+
+/// Bytes of the lane-padded coordinate storage for an `n`-point cloud
+/// (three f32 arrays). The verifier checks declared point-op workloads
+/// cover at least this footprint.
+pub fn soa_bytes(n: usize) -> u64 {
+    (padded_len(n) as u64) * 3 * 4
+}
+
+/// Lane-padded structure-of-arrays point cloud.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PointsSoA {
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    zs: Vec<f32>,
+    len: usize,
+}
+
+impl PointsSoA {
+    pub fn new() -> PointsSoA {
+        PointsSoA::default()
+    }
+
+    pub fn from_points(pts: &[[f32; 3]]) -> PointsSoA {
+        let mut s = PointsSoA::new();
+        s.fill_from_points(pts);
+        s
+    }
+
+    /// Refill in place from an interleaved cloud, reusing capacity.
+    pub fn fill_from_points(&mut self, pts: &[[f32; 3]]) {
+        self.clear();
+        for p in pts {
+            self.xs.push(p[0]);
+            self.ys.push(p[1]);
+            self.zs.push(p[2]);
+        }
+        self.len = pts.len();
+        self.pad();
+    }
+
+    /// Build from a subset of an interleaved cloud (`pts[idx[0]], ...`).
+    pub fn from_indexed(pts: &[[f32; 3]], idx: &[usize]) -> PointsSoA {
+        let mut s = PointsSoA::new();
+        for &i in idx {
+            s.xs.push(pts[i][0]);
+            s.ys.push(pts[i][1]);
+            s.zs.push(pts[i][2]);
+        }
+        s.len = idx.len();
+        s.pad();
+        s
+    }
+
+    /// Gather a subset of this cloud into a new one.
+    pub fn gather(&self, idx: &[usize]) -> PointsSoA {
+        let mut s = PointsSoA::new();
+        for &i in idx {
+            debug_assert!(i < self.len, "gather index {i} out of range for len {}", self.len);
+            s.xs.push(self.xs[i]);
+            s.ys.push(self.ys[i]);
+            s.zs.push(self.zs[i]);
+        }
+        s.len = idx.len();
+        s.pad();
+        s
+    }
+
+    /// Append another cloud's live points (the padding of either side never
+    /// leaks into the result).
+    pub fn append(&mut self, other: &PointsSoA) {
+        self.truncate_to_len();
+        self.xs.extend_from_slice(other.xs());
+        self.ys.extend_from_slice(other.ys());
+        self.zs.extend_from_slice(other.zs());
+        self.len += other.len;
+        self.pad();
+    }
+
+    pub fn clear(&mut self) {
+        self.xs.clear();
+        self.ys.clear();
+        self.zs.clear();
+        self.len = 0;
+    }
+
+    /// Number of live points (excludes padding).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> [f32; 3] {
+        debug_assert!(i < self.len, "point index {i} out of range for len {}", self.len);
+        [self.xs[i], self.ys[i], self.zs[i]]
+    }
+
+    /// Live x coordinates (length `len`, padding excluded).
+    #[inline]
+    pub fn xs(&self) -> &[f32] {
+        &self.xs[..self.len]
+    }
+
+    #[inline]
+    pub fn ys(&self) -> &[f32] {
+        &self.ys[..self.len]
+    }
+
+    #[inline]
+    pub fn zs(&self) -> &[f32] {
+        &self.zs[..self.len]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = [f32; 3]> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    pub fn to_points(&self) -> Vec<[f32; 3]> {
+        self.iter().collect()
+    }
+
+    /// Heap bytes currently reserved (all three arrays) — the scratch-arena
+    /// growth accounting reads this before/after each kernel.
+    pub fn capacity_bytes(&self) -> u64 {
+        ((self.xs.capacity() + self.ys.capacity() + self.zs.capacity()) * 4) as u64
+    }
+
+    /// Pre-reserve padded capacity for an `n`-point cloud.
+    pub fn reserve(&mut self, n: usize) {
+        let p = padded_len(n);
+        self.xs.reserve(p.saturating_sub(self.xs.len()));
+        self.ys.reserve(p.saturating_sub(self.ys.len()));
+        self.zs.reserve(p.saturating_sub(self.zs.len()));
+    }
+
+    fn truncate_to_len(&mut self) {
+        self.xs.truncate(self.len);
+        self.ys.truncate(self.len);
+        self.zs.truncate(self.len);
+    }
+
+    /// Restore the invariant: storage length is the lane-padded live length,
+    /// padding zero-filled.
+    fn pad(&mut self) {
+        let p = padded_len(self.len);
+        self.xs.resize(p, 0.0);
+        self.ys.resize(p, 0.0);
+        self.zs.resize(p, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud(n: usize) -> Vec<[f32; 3]> {
+        (0..n).map(|i| [i as f32, i as f32 * 2.0, i as f32 * 3.0]).collect()
+    }
+
+    #[test]
+    fn roundtrip_and_padding_invariant() {
+        for n in [0usize, 1, 7, 8, 9, 100] {
+            let pts = cloud(n);
+            let s = PointsSoA::from_points(&pts);
+            assert_eq!(s.len(), n);
+            assert_eq!(s.to_points(), pts, "n={n}");
+            assert_eq!(s.xs().len(), n, "live slice excludes padding");
+            assert_eq!(padded_len(n) % LANES, 0);
+            assert!(padded_len(n) >= n && padded_len(n) < n + LANES);
+        }
+    }
+
+    #[test]
+    fn gather_and_append_preserve_live_points() {
+        let s = PointsSoA::from_points(&cloud(20));
+        let g = s.gather(&[3, 0, 19]);
+        assert_eq!(g.to_points(), vec![[3.0, 6.0, 9.0], [0.0, 0.0, 0.0], [19.0, 38.0, 57.0]]);
+        let mut a = s.gather(&[1, 2]);
+        a.append(&g);
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.get(2), [3.0, 6.0, 9.0], "append starts after the live prefix");
+        assert_eq!(a.get(4), [19.0, 38.0, 57.0]);
+    }
+
+    #[test]
+    fn fill_reuses_capacity() {
+        let mut s = PointsSoA::from_points(&cloud(64));
+        let cap = s.capacity_bytes();
+        s.fill_from_points(&cloud(32));
+        assert_eq!(s.len(), 32);
+        assert_eq!(s.capacity_bytes(), cap, "refilling smaller must not reallocate");
+    }
+
+    #[test]
+    fn from_indexed_matches_gather() {
+        let pts = cloud(16);
+        let s = PointsSoA::from_points(&pts);
+        assert_eq!(PointsSoA::from_indexed(&pts, &[5, 9]), s.gather(&[5, 9]));
+    }
+
+    #[test]
+    fn soa_bytes_counts_three_padded_arrays() {
+        assert_eq!(soa_bytes(0), 0);
+        assert_eq!(soa_bytes(1), (LANES * 12) as u64);
+        assert_eq!(soa_bytes(2048), 2048 * 12);
+    }
+}

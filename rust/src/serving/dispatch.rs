@@ -318,6 +318,10 @@ fn worker_loop(
             }
         }
     };
+    // pre-size this worker's point-op scratch arena for the dataset's cloud
+    // size: one allocation burst here instead of growth during the first
+    // request — the steady-state per-scene path then allocates nothing
+    crate::pointops::arena::warm(ds.num_points);
     let mut pipes: HashMap<String, ScenePipeline<'_>> = HashMap::new();
     loop {
         let Ok(job) = recv_job(rx) else { return };

@@ -30,10 +30,12 @@
 //!   `supports()` its (workload kind, precision); no fp32→int8 edge into an
 //!   NN consumer without an explicit int8 QDQ spec; degenerate placements
 //!   (an NN device assigned but nothing runnable there) flagged.
-//! - **S — schedule / resource analysis** (S001–S004): per-stage memory
+//! - **S — schedule / resource analysis** (S001–S005): per-stage memory
 //!   fit at the folded batch, per-device memory across *live intervals* of
 //!   the simulated timeline, every cross-device transfer priced (no free
-//!   edges), batch-fold(k) output exactly k-scalable.
+//!   edges), batch-fold(k) output exactly k-scalable, and every point-op
+//!   stage's declared memory covering at least the SoA-padded coordinate
+//!   buffer the lane kernels actually stream.
 //! - **E — executor race/deadlock soundness** (E001–E003, [`verify_exec`]):
 //!   for the `exec::DagExecutor` lowering, every [`crate::exec::Slot`] a
 //!   stage closure reads is covered by its transitive declared deps, and no
@@ -190,6 +192,7 @@ pub fn verify_graph(m: &Manifest, g: &StageGraph) -> Report {
     check_capabilities(g, &mut r);
     check_precision_flow(g, &mut r);
     check_placement_degeneracy(g, &mut r);
+    check_soa_footprint(g, &mut r);
     r
 }
 
@@ -663,6 +666,47 @@ fn check_live_memory(sim: &ScheduleSim, folded: &[StageSpec], r: &mut Report) {
                     kind.name()
                 ),
                 "reduce the batch or serialize the overlapping stages",
+            );
+        }
+    }
+}
+
+/// S005 (warning): a point-manipulation stage's declared `mem_bytes` must
+/// cover at least the SoA coordinate buffer the lane kernels stream — the
+/// input cloud padded to a lane multiple ([`crate::pointops::soa_bytes`]).
+/// A smaller declaration means the memory-fit analyses (S001/S002) and the
+/// placement search reason about less memory than the executor touches.
+/// Input sizes come from the chain metadata (validated by G004 before this
+/// check runs): `SaPm` reads its level's `n_in`, `Sa4Pm` fuses every
+/// chain's SA3 output, `PropPm` clusters the seed set (SA2-sized).
+fn check_soa_footprint(g: &StageGraph, r: &mut Report) {
+    let level_sum = |l: usize| -> usize {
+        g.chains.iter().filter_map(|c| c.levels.get(l)).map(|lvl| lvl.m).sum()
+    };
+    for (i, node) in g.nodes.iter().enumerate() {
+        let n_in = match node.class {
+            StageClass::SaPm { chain, level } => {
+                match g.chains.get(chain).and_then(|c| c.levels.get(level)) {
+                    Some(lvl) => lvl.n_in,
+                    None => continue, // G004 already reported the broken metadata
+                }
+            }
+            StageClass::Sa4Pm => level_sum(2),
+            StageClass::PropPm => level_sum(1),
+            _ => continue,
+        };
+        let need = crate::pointops::soa_bytes(n_in);
+        let declared = node.spec.workload.mem_bytes;
+        if declared < need {
+            r.push(
+                "S005",
+                Severity::Warning,
+                format!("node {i} '{}'", node.spec.name),
+                format!(
+                    "declared workload streams {declared} B but the SoA-padded input \
+                     cloud alone is {need} B ({n_in} points, lane-padded x/y/z)"
+                ),
+                "size the stage's mem_bytes from its real input cloud, not the output",
             );
         }
     }

@@ -4,7 +4,7 @@
 //! the deterministic host surrogate, so the full functional pipeline —
 //! detections included — is exercised without artifacts or a PJRT backend.
 //!
-//! The two core contracts:
+//! The core contracts:
 //! 1. **Determinism** — parallel execution produces bit-identical detections
 //!    and identical `StageSpec` DAGs to sequential execution, for every
 //!    variant (property over seeds).
@@ -12,16 +12,25 @@
 //!    pipelines' SA3 NN stages and never starts before either finishes in
 //!    the simulated timeline. (On the pre-fix code the dep list held only
 //!    the max stage index, so the structural assertion below fails there.)
+//! 3. **SIMD bit-identity** — the SoA lane kernels the pipeline runs match
+//!    the retained scalar oracles exactly, over the same seed set the
+//!    determinism property uses.
+//! 4. **Steady-state allocation freedom** — after warm-up, running scenes
+//!    through the worker pool leaves the scratch-arena allocation counter
+//!    flat (the per-scene path reuses per-worker arenas).
 
 use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
 use pointsplit::data::{self, generate_scene, SYNRGBD};
 use pointsplit::exec::HostExec;
+use pointsplit::pointops;
 use pointsplit::runtime::Runtime;
 use pointsplit::serving::dispatch::PipelineExecutor;
 use pointsplit::serving::{
-    run_traffic, ArrivalPattern, BatchPolicy, LoadGen, ServicePlanner, SloPolicy, TrafficScenario,
+    run_traffic, ArrivalPattern, BatchPolicy, LoadGen, Request, ServicePlanner, SloPolicy,
+    TrafficScenario,
 };
 use pointsplit::sim::DeviceKind;
+use pointsplit::util::tensor::Tensor;
 
 const VARIANTS: [Variant; 4] =
     [Variant::VoteNet, Variant::PointPainting, Variant::RandomSplit, Variant::PointSplit];
@@ -205,4 +214,123 @@ fn traffic_gateway_executes_functionally_offline() {
         rep.map_25.is_some(),
         "functional execution must report mAP on the surrogate backend"
     );
+}
+
+/// The SIMD lane kernels the pipeline actually runs are bit-identical to
+/// the retained scalar oracles, on real generated scenes over the same
+/// seeds the determinism property uses (the unit suites pin synthetic
+/// clouds; this pins the production data path).
+#[test]
+fn simd_kernels_bit_identical_to_scalar_oracles() {
+    for seed in [1u64, 42, 1234] {
+        let scene = generate_scene(seed, &SYNRGBD);
+        let pts = &scene.points;
+        let fg: Vec<f32> =
+            scene.point_obj.iter().map(|&o| if o >= 0 { 1.0 } else { 0.0 }).collect();
+        let m = 256;
+        let start = pts.len() / 2;
+        assert_eq!(
+            pointops::fps(pts, m),
+            pointops::fps_scalar(pts, m, None, 1.0, 0),
+            "fps diverged from the scalar oracle (seed {seed})"
+        );
+        assert_eq!(
+            pointops::biased_fps_from(pts, m, &fg, 2.0, start),
+            pointops::fps_scalar(pts, m, Some(&fg), 2.0, start),
+            "biased fps diverged from the scalar oracle (seed {seed})"
+        );
+        let centers = pointops::fps(pts, m);
+        assert_eq!(
+            pointops::ball_query(pts, &centers, 0.3, 32),
+            pointops::ball_query_scalar(pts, &centers, 0.3, 32),
+            "ball_query diverged from the scalar oracle (seed {seed})"
+        );
+        let src: Vec<[f32; 3]> = centers.iter().map(|&i| pts[i]).collect();
+        let mut feats = Tensor::zeros(vec![src.len(), 8]);
+        for (i, v) in feats.data.iter_mut().enumerate() {
+            *v = (i % 97) as f32 * 0.25 - 12.0;
+        }
+        let simd = pointops::three_nn_interpolate(pts, &src, &feats);
+        let oracle = pointops::three_nn_interpolate_scalar(pts, &src, &feats);
+        assert_eq!(simd.shape, oracle.shape);
+        for (i, (a, b)) in simd.data.iter().zip(oracle.data.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "three_nn diverged from the scalar oracle at element {i} (seed {seed})"
+            );
+        }
+    }
+}
+
+/// Degenerate thread budgets at the public API level: zero and absurdly
+/// large counts are clamped, never panic, and return the sequential result
+/// (the unit suites cover the clamp arithmetic; this pins the entry points).
+#[test]
+fn degenerate_thread_budgets_are_clamped_at_the_api() {
+    let scene = generate_scene(42, &SYNRGBD);
+    let pts = &scene.points;
+    let base = pointops::fps(pts, 128);
+    for threads in [0usize, usize::MAX] {
+        assert_eq!(pointops::fps_par(pts, 128, threads), base, "fps_par threads={threads}");
+    }
+    let centers = &base[..16]; // < par threshold: the clamp still applies
+    let groups = pointops::ball_query(pts, centers, 0.3, 16);
+    for threads in [0usize, usize::MAX] {
+        assert_eq!(
+            pointops::ball_query_par(pts, centers, 0.3, 16, threads),
+            groups,
+            "ball_query_par threads={threads}"
+        );
+    }
+    let dst: Vec<[f32; 3]> = pts[..100].to_vec();
+    let src: Vec<[f32; 3]> = base.iter().map(|&i| pts[i]).collect();
+    let feats = Tensor::zeros(vec![src.len(), 8]);
+    let out = pointops::three_nn_interpolate(&dst, &src, &feats);
+    for threads in [0usize, usize::MAX] {
+        assert_eq!(
+            pointops::three_nn_interpolate_par(&dst, &src, &feats, threads),
+            out,
+            "three_nn_interpolate_par threads={threads}"
+        );
+    }
+}
+
+/// Satellite acceptance: after warm-up, pushing scenes through the worker
+/// pool leaves the scratch allocation counter flat — the per-scene hot path
+/// reuses each worker's arena instead of allocating. Retries tolerate other
+/// tests growing *their* thread arenas concurrently; a correct
+/// implementation reaches a flat window, a regressing one never does.
+#[test]
+fn steady_state_scenes_do_not_grow_scratch_arenas() {
+    let rt = Runtime::synthetic();
+    let ds = data::dataset("synrgbd").unwrap();
+    let exec = PipelineExecutor::with_workers(&rt, ds, 2);
+    let c = cfg(Variant::PointSplit, pipelined());
+    let batch = |lo: u64| -> Vec<Request> {
+        (0..4)
+            .map(|i| Request {
+                id: lo + i,
+                arrival_ms: 0.0,
+                deadline_ms: f64::MAX,
+                seed: lo + i,
+                class: 0,
+                key: 0,
+            })
+            .collect()
+    };
+    // warm-up: workers pre-size their arenas at spawn (`warm(ds.num_points)`)
+    // and the first batches grow whatever the exact workload still needs
+    exec.execute(&c, &batch(0)).expect("warm-up batch");
+    exec.execute(&c, &batch(4)).expect("warm-up batch");
+    let mut flat = false;
+    for round in 0..8u64 {
+        let before = pointops::scratch_tracker().alloc_count();
+        exec.execute(&c, &batch(8 + 4 * round)).expect("steady-state batch");
+        if pointops::scratch_tracker().alloc_count() == before {
+            flat = true;
+            break;
+        }
+    }
+    assert!(flat, "scratch arenas kept growing after warm-up: the per-scene path allocates");
 }

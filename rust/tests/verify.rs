@@ -279,6 +279,21 @@ fn corpus_tampered_fold_is_s004() {
     assert!(rep.fired("S004"), "a fold that is not exactly k-scaled must be S004:\n{rep}");
 }
 
+/// A point-op stage whose declared memory understates the SoA-padded
+/// coordinate buffer the lane kernels actually stream. The shipped graphs
+/// are sized from the grouped output tensor, which dwarfs the coordinate
+/// arrays — so the rule stays silent on them and fires only on the tamper.
+#[test]
+fn corpus_understated_pointop_memory_is_s005() {
+    let (m, mut g) = split_graph();
+    let base = verify::verify_graph(&m, &g);
+    assert!(!base.fired("S005"), "shipped graphs must not trip S005:\n{base}");
+    let pm = g.nodes.iter().position(|n| matches!(n.class, StageClass::SaPm { .. })).expect("pm");
+    g.nodes[pm].spec.workload.mem_bytes = 16;
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("S005"), "understated point-op mem_bytes must be S005:\n{rep}");
+}
+
 /// The PR 2 merge bug, re-introduced as a fixture: `sa4_pm` lost its
 /// dependency on the *other* pipeline's SA3 output, so a replayed plan
 /// could read chain 1's geometry before it was written. The executor
