@@ -1,0 +1,149 @@
+//! §Stream: temporal-reuse bench — per-frame latency and mAP-proxy of the
+//! streaming path, cold vs warm session, persisted to `BENCH_stream.json`
+//! (section `stream_reuse`).
+//!
+//! For each sequence seed a frame stream is generated once (seeded
+//! ego-motion + movers + one scene cut per `cut_period`), then run twice:
+//!
+//! * **cold** — every frame through the full single-scene pipeline, the way
+//!   a sessionless gateway would serve it;
+//! * **warm** — every frame through `run_stream` against one per-session
+//!   `FrameCache`, so REUSE frames ride the stream-tail sub-graph and
+//!   PARTIAL frames repaint only dirty grid cells.
+//!
+//! Acceptance (the PR's perf bar): >= 2.0x median simulated per-frame
+//! latency at >= 70% frame-reuse rate, with the warm mAP-proxy within 0.1
+//! of cold.
+//!
+//! Knobs: POINTSPLIT_BENCH_SCENES = sequence count (default 2, CI: 1).
+
+mod common;
+
+use pointsplit::bench::{f2, update_bench_json, Table};
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::stream::{generate_stream, StreamCfg};
+use pointsplit::data::SYNRGBD;
+use pointsplit::eval::{eval_map, Detection};
+use pointsplit::sim::DeviceKind;
+use pointsplit::temporal::{DeltaCfg, FrameCache};
+use pointsplit::util::json::Json;
+
+fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    if s.is_empty() { 0.0 } else { s[s.len() / 2] }
+}
+
+fn main() {
+    let rt = common::open_runtime();
+    let sequences = common::scene_budget(2);
+    let frames_per_seq = if sequences <= 1 { 16 } else { 24 };
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let pipe = ScenePipeline::new(&rt, cfg.clone());
+    let num_class = rt.manifest.classes.len();
+
+    println!(
+        "=== §Stream temporal reuse: {sequences} sequence(s) x {frames_per_seq} frames ===\n"
+    );
+    let mut cold_ms: Vec<f64> = Vec::new();
+    let mut warm_ms: Vec<f64> = Vec::new();
+    let mut cold_host: Vec<f64> = Vec::new();
+    let mut warm_host: Vec<f64> = Vec::new();
+    let mut cold_dets: Vec<Detection> = Vec::new();
+    let mut warm_dets: Vec<Detection> = Vec::new();
+    let mut gts = Vec::new();
+    let (mut n_full, mut n_partial, mut n_reuse) = (0u64, 0u64, 0u64);
+    let mut table =
+        Table::new(&["seq", "full/part/reuse", "cold med ms", "warm med ms", "speedup"]);
+    for s in 0..sequences {
+        let seed = 40_000 + s as u64;
+        let scfg = StreamCfg { frames: frames_per_seq, ..StreamCfg::default() };
+        let stream = generate_stream(seed, &SYNRGBD, scfg);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 64 << 20);
+        let (mut seq_cold, mut seq_warm) = (Vec::new(), Vec::new());
+        for f in &stream {
+            let scene_id = gts.len();
+            gts.push(f.scene.gt_boxes());
+            let cold = pipe.run(&f.scene, seed).expect("cold pipeline");
+            seq_cold.push(cold.timeline.total_ms);
+            cold_host.push(cold.host_ms);
+            cold_dets
+                .extend(cold.detections.iter().map(|b| Detection { scene: scene_id, b: *b }));
+            let (warm, _class) = pipe.run_stream(&f.scene, seed, &mut cache).expect("warm pipeline");
+            seq_warm.push(warm.timeline.total_ms);
+            warm_host.push(warm.host_ms);
+            warm_dets
+                .extend(warm.detections.iter().map(|b| Detection { scene: scene_id, b: *b }));
+        }
+        let st = *cache.stats();
+        n_full += st.full;
+        n_partial += st.partial;
+        n_reuse += st.reuse;
+        table.row(vec![
+            s.to_string(),
+            format!("{}/{}/{}", st.full, st.partial, st.reuse),
+            f2(median(&seq_cold)),
+            f2(median(&seq_warm)),
+            f2(median(&seq_cold) / median(&seq_warm).max(1e-9)),
+        ]);
+        cold_ms.extend(seq_cold);
+        warm_ms.extend(seq_warm);
+    }
+    table.print("per-sequence latency (simulated ms, median over frames)");
+
+    let frames = (n_full + n_partial + n_reuse).max(1);
+    let reuse_rate = (n_partial + n_reuse) as f64 / frames as f64;
+    let (cm, wm) = (median(&cold_ms), median(&warm_ms));
+    let speedup = cm / wm.max(1e-9);
+    let map_cold = eval_map(&cold_dets, &gts, num_class, 0.25).map;
+    let map_warm = eval_map(&warm_dets, &gts, num_class, 0.25).map;
+    let pass = speedup >= 2.0 && reuse_rate >= 0.7 && map_warm >= map_cold - 0.1;
+    println!(
+        "\nframes: full {n_full}  partial {n_partial}  reuse {n_reuse}  \
+         (reuse rate {:.0}%)",
+        100.0 * reuse_rate
+    );
+    println!(
+        "median simulated per-frame latency: cold {cm:.1} ms  warm {wm:.1} ms  ({speedup:.2}x)"
+    );
+    println!(
+        "median host per-frame time: cold {:.1} ms  warm {:.1} ms",
+        median(&cold_host),
+        median(&warm_host)
+    );
+    println!(
+        "mAP-proxy@0.25: cold {:.1}  warm {:.1}  (delta {:+.1})",
+        100.0 * map_cold,
+        100.0 * map_warm,
+        100.0 * (map_warm - map_cold)
+    );
+    println!(
+        "acceptance: >= 2.0x at >= 70% reuse, mAP within 0.1 -> {}",
+        if pass { "PASS" } else { "below (smoke settings?)" }
+    );
+
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("stream_reuse".to_string())),
+        ("sequences", Json::Num(sequences as f64)),
+        ("frames_per_seq", Json::Num(frames_per_seq as f64)),
+        ("frames", Json::Num(frames as f64)),
+        ("full", Json::Num(n_full as f64)),
+        ("partial", Json::Num(n_partial as f64)),
+        ("reuse", Json::Num(n_reuse as f64)),
+        ("reuse_rate", Json::Num(reuse_rate)),
+        ("cold_median_ms", Json::Num(cm)),
+        ("warm_median_ms", Json::Num(wm)),
+        ("speedup", Json::Num(speedup)),
+        ("cold_host_median_ms", Json::Num(median(&cold_host))),
+        ("warm_host_median_ms", Json::Num(median(&warm_host))),
+        ("map_cold", Json::Num(map_cold)),
+        ("map_warm", Json::Num(map_warm)),
+        ("pass", Json::Bool(pass)),
+    ]);
+    update_bench_json("BENCH_stream.json", "stream_reuse", payload);
+}

@@ -29,6 +29,11 @@ pub struct BoxReport {
     pub util_gpu: f64,
     pub util_npu: f64,
     pub util_cpu: f64,
+    /// Streaming frames served from cached state / all streaming frames on
+    /// this box (0 for sessionless traffic).
+    pub stream_reuse_rate: f64,
+    /// Sessions evicted from this box's bounded session cache.
+    pub session_evictions: usize,
 }
 
 /// One membership or fault event on the cluster timeline.
@@ -68,6 +73,17 @@ pub struct ClusterReport {
     pub goodput_rps: f64,
     /// max/mean of per-box routed-per-alive-second (1.0 = perfectly even).
     pub routing_imbalance: f64,
+    /// Streaming frames served at each temporal class across the fleet
+    /// (all zero for sessionless traffic).
+    pub stream_full: usize,
+    pub stream_partial: usize,
+    pub stream_reuse: usize,
+    /// Sessions evicted from the per-box bounded session caches.
+    pub session_evictions: usize,
+    /// Batches served on the stale-tracks SLO rung.
+    pub stale_batches: usize,
+    /// Sessions the router re-bound after their box left the fleet.
+    pub session_rebinds: usize,
     /// Σ box cost-units × alive seconds — the run's provisioning bill.
     pub cost_units: f64,
     pub boxes: Vec<BoxReport>,
@@ -115,6 +131,20 @@ impl ClusterReport {
             self.routing_imbalance,
             self.cost_units
         );
+        let frames = self.stream_full + self.stream_partial + self.stream_reuse;
+        if frames > 0 {
+            println!(
+                "stream frames: full {}  partial {}  reuse {}  (reuse rate {:.0}%)  \
+                 evictions {}  stale batches {}  rebinds {}",
+                self.stream_full,
+                self.stream_partial,
+                self.stream_reuse,
+                100.0 * (self.stream_partial + self.stream_reuse) as f64 / frames as f64,
+                self.session_evictions,
+                self.stale_batches,
+                self.session_rebinds
+            );
+        }
         for b in &self.boxes {
             println!(
                 "  box {:>2} {:<12} {}  alive {:>6.1}s  routed {:>6}  done {:>6}  \
@@ -160,6 +190,8 @@ impl ClusterReport {
                     ("util_gpu", Json::Num(b.util_gpu)),
                     ("util_npu", Json::Num(b.util_npu)),
                     ("util_cpu", Json::Num(b.util_cpu)),
+                    ("stream_reuse_rate", Json::Num(b.stream_reuse_rate)),
+                    ("session_evictions", Json::Num(b.session_evictions as f64)),
                 ])
             })
             .collect();
@@ -199,6 +231,12 @@ impl ClusterReport {
             ("slo_attainment", Json::Num(self.slo_attainment)),
             ("goodput_rps", Json::Num(self.goodput_rps)),
             ("routing_imbalance", Json::Num(self.routing_imbalance)),
+            ("stream_full", Json::Num(self.stream_full as f64)),
+            ("stream_partial", Json::Num(self.stream_partial as f64)),
+            ("stream_reuse", Json::Num(self.stream_reuse as f64)),
+            ("session_evictions", Json::Num(self.session_evictions as f64)),
+            ("stale_batches", Json::Num(self.stale_batches as f64)),
+            ("session_rebinds", Json::Num(self.session_rebinds as f64)),
             ("cost_units", Json::Num(self.cost_units)),
             ("boxes", Json::Arr(boxes)),
             ("events", Json::Arr(events)),

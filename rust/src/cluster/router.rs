@@ -15,6 +15,15 @@
 //!   it served (to their next-ranked box); every other key keeps its boxes.
 //!
 //! `Random` and pure `LeastLoaded` are kept as baselines for the bench.
+//!
+//! Streaming sessions route differently: a session's frame cache lives on
+//! exactly one box, so [`Router::route_session`] gives each client a
+//! **sticky binding** — rendezvous-chosen on first contact, then pinned as
+//! long as the box is alive. Load and membership growth never move a bound
+//! session (scale-up must not strand warm caches); only the bound box's
+//! death forces a re-bind.
+
+use std::collections::HashMap;
 
 use crate::util::rng::Rng;
 
@@ -70,16 +79,27 @@ fn affinity_score(key: usize, box_id: usize) -> u64 {
 }
 
 /// Stateful router (the RNG only feeds the `Random` baseline; affinity and
-/// least-loaded are pure functions of the targets).
+/// least-loaded are pure functions of the targets; session bindings are
+/// sticky state).
 pub struct Router {
     policy: RouterPolicy,
     rng: Rng,
     width: usize,
+    /// Sticky client → box bindings for streaming sessions.
+    bindings: HashMap<u64, usize>,
+    /// Bindings re-made because the bound box left the fleet.
+    rebinds: usize,
 }
 
 impl Router {
     pub fn new(policy: RouterPolicy, seed: u64) -> Router {
-        Router { policy, rng: Rng::new(seed ^ 0xC1A5_7E12_0B0E_5EED), width: 2 }
+        Router {
+            policy,
+            rng: Rng::new(seed ^ 0xC1A5_7E12_0B0E_5EED),
+            width: 2,
+            bindings: HashMap::new(),
+            rebinds: 0,
+        }
     }
 
     /// Affinity spread: each key may land on at most this many boxes while
@@ -119,6 +139,37 @@ impl Router {
                 Some(ranked[best].id)
             }
         }
+    }
+
+    /// Pick a box for a streaming client among the alive targets.
+    ///
+    /// An existing binding to an alive box always wins, regardless of load
+    /// or of better-ranked newcomers — the client's frame cache is warm
+    /// there and moving it costs a FULL recompute. Otherwise (first contact
+    /// or bound box dead) the client binds to its rendezvous-top alive box;
+    /// width 1, load ignored, so the choice is a pure function of
+    /// (client, membership) and cannot bounce between boxes.
+    pub fn route_session(&mut self, client: u64, targets: &[RouteTarget]) -> Option<usize> {
+        if targets.is_empty() {
+            return None;
+        }
+        if let Some(&id) = self.bindings.get(&client) {
+            if targets.iter().any(|t| t.id == id) {
+                return Some(id);
+            }
+            self.rebinds += 1;
+        }
+        let chosen = targets
+            .iter()
+            .max_by_key(|t| (affinity_score(client as usize, t.id), t.id))
+            .map(|t| t.id)?;
+        self.bindings.insert(client, chosen);
+        Some(chosen)
+    }
+
+    /// Sessions re-bound after losing their box (fleet-health signal).
+    pub fn session_rebinds(&self) -> usize {
+        self.rebinds
     }
 }
 
@@ -186,6 +237,59 @@ mod tests {
             let mut r = Router::new(p, 1);
             assert!(r.route(0, &[]).is_none());
         }
+    }
+
+    #[test]
+    fn session_binding_survives_scale_up_and_load() {
+        let mut r = Router::new(RouterPolicy::ConfigAffinity, 7);
+        let small = fleet(2);
+        let bound = r.route_session(42, &small).unwrap();
+        // membership grows and the bound box becomes the most loaded —
+        // the session must stay put (its cache is warm there)
+        let mut grown = fleet(8);
+        for t in &mut grown {
+            t.queue_len = if t.id == bound { 50 } else { 0 };
+        }
+        for _ in 0..20 {
+            assert_eq!(r.route_session(42, &grown), Some(bound));
+        }
+        assert_eq!(r.session_rebinds(), 0);
+    }
+
+    #[test]
+    fn session_rebinds_only_when_its_box_dies() {
+        let mut r = Router::new(RouterPolicy::ConfigAffinity, 3);
+        let full = fleet(4);
+        let clients: Vec<u64> = (1..=12).collect();
+        let before: Vec<usize> =
+            clients.iter().map(|&c| r.route_session(c, &full).unwrap()).collect();
+        let dead = before[0];
+        let survivors: Vec<RouteTarget> =
+            full.iter().copied().filter(|t| t.id != dead).collect();
+        let after: Vec<usize> =
+            clients.iter().map(|&c| r.route_session(c, &survivors).unwrap()).collect();
+        let mut moved = 0;
+        for (i, &c) in clients.iter().enumerate() {
+            assert_ne!(after[i], dead, "client {c} routed to the dead box");
+            if before[i] != dead {
+                assert_eq!(before[i], after[i], "client {c} moved although its box survived");
+            } else {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0);
+        assert_eq!(r.session_rebinds(), moved);
+    }
+
+    #[test]
+    fn sessions_spread_across_the_fleet() {
+        let mut r = Router::new(RouterPolicy::ConfigAffinity, 1);
+        let targets = fleet(4);
+        let mut seen: Vec<usize> =
+            (1..=64).map(|c| r.route_session(c, &targets).unwrap()).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert!(seen.len() >= 3, "64 clients should use most of a 4-box fleet");
     }
 
     #[test]

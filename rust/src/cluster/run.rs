@@ -79,7 +79,14 @@ fn route_request(
         .filter(|b| b.alive)
         .map(|b| RouteTarget { id: b.id, queue_len: b.engine.queue_len() })
         .collect();
-    match router.route(r.key, &targets) {
+    // streaming sessions pin to the box holding their frame cache;
+    // sessionless requests load-balance by config key as before
+    let choice = if r.client != 0 {
+        router.route_session(r.client, &targets)
+    } else {
+        router.route(r.key, &targets)
+    };
+    match choice {
         Some(id) => {
             let b = boxes
                 .iter_mut()
@@ -349,6 +356,11 @@ pub fn run_cluster(sc: &ClusterScenario, planner: &ServicePlanner) -> Result<Clu
     let mut degraded = 0usize;
     let mut batches = 0usize;
     let mut batched_reqs = 0usize;
+    let mut stream_full = 0usize;
+    let mut stream_partial = 0usize;
+    let mut stream_reuse = 0usize;
+    let mut session_evictions = 0usize;
+    let mut stale_batches = 0usize;
     let mut cost_units = 0.0f64;
     let mut box_reports: Vec<BoxReport> = Vec::new();
     for b in &boxes {
@@ -361,6 +373,11 @@ pub fn run_cluster(sc: &ClusterScenario, planner: &ServicePlanner) -> Result<Clu
         degraded += st.degraded;
         batches += st.batches;
         batched_reqs += st.batched_reqs;
+        stream_full += st.stream_full;
+        stream_partial += st.stream_partial;
+        stream_reuse += st.stream_reuse;
+        session_evictions += st.stream_evictions;
+        stale_batches += st.stale_batches;
         lat.extend_from_slice(b.engine.latencies());
         qwait.extend_from_slice(b.engine.queue_waits());
         let alive_s = (b.died_ms.unwrap_or(end_ms) - b.spawned_ms).max(0.0) / 1000.0;
@@ -384,6 +401,8 @@ pub fn run_cluster(sc: &ClusterScenario, planner: &ServicePlanner) -> Result<Clu
             util_gpu: st.busy_gpu_ms / 1000.0 / denom,
             util_npu: st.busy_npu_ms / 1000.0 / denom,
             util_cpu: st.busy_cpu_ms / 1000.0 / denom,
+            stream_reuse_rate: st.stream_reuse_rate(),
+            session_evictions: st.stream_evictions,
         });
     }
     // router-rejected requests (no alive box) count toward rejections too
@@ -430,6 +449,12 @@ pub fn run_cluster(sc: &ClusterScenario, planner: &ServicePlanner) -> Result<Clu
         slo_attainment: if total > 0 { on_time as f64 / total as f64 } else { 1.0 },
         goodput_rps: on_time as f64 / makespan_s,
         routing_imbalance,
+        stream_full,
+        stream_partial,
+        stream_reuse,
+        session_evictions,
+        stale_batches,
+        session_rebinds: router.session_rebinds(),
         cost_units,
         boxes: box_reports,
         events,
@@ -489,6 +514,31 @@ mod tests {
         // the three heterogeneous types planned differently
         assert!(r.capacity_rps > 0.0);
         assert!(r.boxes.iter().any(|b| b.completed > 0));
+    }
+
+    #[test]
+    fn streaming_cluster_counts_frames_and_pins_sessions() {
+        let planner = ServicePlanner::synthetic();
+        let mut sc = tiny_scenario(&planner);
+        sc.load.clients = 6;
+        let trace = run_cluster(&sc, &planner).unwrap();
+        let r = &trace.report;
+        assert_eq!(trace.outcomes.len(), r.arrivals);
+        assert!(r.stream_reuse > 0, "streaming traffic must hit the reuse tail");
+        assert_eq!(r.session_rebinds, 0, "no faults, so no session should re-bind");
+        // a session's frames must all land on the box holding its cache
+        let client_of: std::collections::HashMap<u64, u64> =
+            sc.load.generate().iter().map(|a| (a.id, a.client)).collect();
+        let mut bound: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        for (id, box_id, _) in &trace.routes {
+            let c = client_of[id];
+            if c == 0 {
+                continue;
+            }
+            let e = bound.entry(c).or_insert(*box_id);
+            assert_eq!(*e, *box_id, "client {c} bounced between boxes");
+        }
+        assert!(!bound.is_empty());
     }
 
     #[test]

@@ -36,6 +36,7 @@ use crate::pointops;
 use crate::quant::{Granularity, QuantScheme, QuantSpec, StagePrecision};
 use crate::runtime::Runtime;
 use crate::sim::{ScheduleSim, StageSpec, Timeline};
+use crate::temporal::{FrameCache, FrameClass, StreamArtifacts};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -141,6 +142,20 @@ enum ChainInput {
     Subset(Arc<Vec<usize>>),
 }
 
+/// What a streaming frame inherits from the previous one (the `run_impl`
+/// input that selects the paint/segment behaviour; see `crate::temporal`).
+#[derive(Clone, Copy)]
+enum ReuseMode<'p> {
+    /// cold frame: full pipeline, segmenter included
+    Cold,
+    /// consecutive matching (paper §3.2): previous frame's 2D scores reused,
+    /// the cloud is repainted in full
+    Scores(&'p Tensor),
+    /// temporal PARTIAL frame: previous scores *and* previous paint carried
+    /// over; only points in dirty grid cells are re-projected
+    Partial { scores: &'p Tensor, prev_paint: &'p Tensor, dirty: &'p [bool] },
+}
+
 /// Per-chain slot set wiring the SA-level closures together (one slot per
 /// graph [`crate::graph::LevelInfo`]).
 #[allow(clippy::type_complexity)]
@@ -189,6 +204,27 @@ impl<'a> ScenePipeline<'a> {
         seed: u64,
         prev_scores: Option<&Tensor>,
     ) -> Result<(PipelineOutput, Option<Tensor>)> {
+        let mode = match prev_scores {
+            Some(s) => ReuseMode::Scores(s),
+            None => ReuseMode::Cold,
+        };
+        self.run_impl(scene, seed, mode, None)
+    }
+
+    /// The lower-to-exec pass proper. `reuse` selects how much 2D work the
+    /// frame inherits (nothing / scores / scores + partial paint); `capture`
+    /// optionally harvests the stream artifacts (painted scores, fg mask,
+    /// seed index set, seed features) the temporal cache stores for the next
+    /// frame. With `ReuseMode::Cold` the executed DAG and its outputs are
+    /// bit-identical to [`ScenePipeline::run`] whether or not capture is on
+    /// (capture only clones values out of the existing slots).
+    fn run_impl(
+        &self,
+        scene: &Scene,
+        seed: u64,
+        reuse: ReuseMode<'_>,
+        capture: Option<&mut StreamArtifacts>,
+    ) -> Result<(PipelineOutput, Option<Tensor>)> {
         let t_host = std::time::Instant::now();
         let cfg = &self.cfg;
         let m = &self.rt.manifest;
@@ -198,7 +234,7 @@ impl<'a> ScenePipeline<'a> {
 
         // the one stage-graph construction: this same object is what the
         // serving planner builds for this configuration
-        let graph = StageGraph::build(m, cfg, n, prev_scores.is_some())?;
+        let graph = StageGraph::build(m, cfg, n, !matches!(reuse, ReuseMode::Cold))?;
 
         // ---------------------------------------------------------- slots
         // scores_slot: segmenter output (or the previous frame's scores);
@@ -206,13 +242,26 @@ impl<'a> ScenePipeline<'a> {
         let scores_slot: Slot<Tensor> = Slot::new("seg scores");
         let feat_slot: Slot<(Tensor, Vec<f32>)> = Slot::new("point features");
         if painted {
-            if let Some(prev) = prev_scores {
+            match reuse {
                 // consecutive matching: reuse the previous frame's scores
-                scores_slot.set(prev.clone());
+                ReuseMode::Scores(prev) => scores_slot.set(prev.clone()),
+                ReuseMode::Partial { scores, .. } => scores_slot.set(scores.clone()),
+                ReuseMode::Cold => {}
             }
         } else {
             feat_slot.set((pointops::build_features(scene, None), vec![0.0; n]));
         }
+        // PARTIAL frames re-project only dirty points inside the paint stage
+        let partial_paint: Option<(&Tensor, &[bool])> = match reuse {
+            ReuseMode::Partial { prev_paint, dirty, .. } => Some((prev_paint, dirty)),
+            _ => None,
+        };
+        // capture slots live alongside the pipeline's own: existing stages
+        // clone values into them, so the DAG the executor runs is unchanged
+        let capture_paint: Option<Slot<Tensor>> =
+            capture.is_some().then(|| Slot::new("capture paint"));
+        let capture_seeds: Option<Slot<Tensor>> =
+            capture.is_some().then(|| Slot::new("capture seeds"));
         let chain_slots: Vec<ChainSlots> = graph
             .chains
             .iter()
@@ -276,11 +325,21 @@ impl<'a> ScenePipeline<'a> {
                 StageClass::Paint => {
                     let sl = scores_slot.clone();
                     let fs = feat_slot.clone();
+                    let cap = capture_paint.clone();
                     Compute::Pool(Box::new(move || {
                         sl.with(|scores| {
-                            let paint = pointops::paint_points(scene, scores);
+                            let paint = match partial_paint {
+                                Some((prev, dirty)) => {
+                                    pointops::paint_points_partial(scene, scores, prev, dirty)
+                                }
+                                None => pointops::paint_points(scene, scores),
+                            };
                             let fg = pointops::fg_mask(&paint, 0.5);
-                            fs.set((pointops::build_features(scene, Some(&paint)), fg));
+                            let feats = pointops::build_features(scene, Some(&paint));
+                            if let Some(c) = &cap {
+                                c.set(paint);
+                            }
+                            fs.set((feats, fg));
                         });
                         Ok(())
                     }))
@@ -470,8 +529,12 @@ impl<'a> ScenePipeline<'a> {
                     let art = art.expect("vote artifact");
                     let (seeds_slot, seed_xyz_slot, vote_slot) =
                         (seeds_slot.clone(), seed_xyz_slot.clone(), vote_slot.clone());
+                    let cap = capture_seeds.clone();
                     Compute::Host(Box::new(move || {
                         let seeds = seeds_slot.take();
+                        if let Some(c) = &cap {
+                            c.set(seeds.clone());
+                        }
                         let vote_out =
                             self.rt.run_with_spec(&art, &[&seeds], qspec.as_ref())?.remove(0);
                         let seed_xyz = seed_xyz_slot.take();
@@ -543,6 +606,22 @@ impl<'a> ScenePipeline<'a> {
         let specs = DagExecutor::new(self.host_exec).run(decls)?;
         let detections = det_slot.take();
         let used_scores = if painted { Some(scores_slot.take()) } else { None };
+        if let Some(arts) = capture {
+            arts.paint = match &capture_paint {
+                Some(s) if painted => Some(s.take()),
+                _ => None,
+            };
+            arts.seeds = capture_seeds.as_ref().map(|s| s.take());
+            arts.fg = feat_slot.with(|(_, fg)| fg.clone());
+            // the seed index set, in the same chain order FpInterp fused the
+            // SA2 geometries — row i of `seeds` is point `seed_src[i]`
+            let mut seed_src = Vec::new();
+            for (ci, _) in graph.chains.iter().enumerate() {
+                chain_slots[ci].geo[1].with(|g| seed_src.extend_from_slice(&g.src));
+            }
+            arts.seed_src = seed_src;
+            arts.points = pointops::PointsSoA::from_points(&scene.points);
+        }
         let timeline = self.sim.run(&specs);
         let fp32_framework = !cfg.int8() && matches!(cfg.schedule, Schedule::SingleDevice(_));
         let peak = peak_memory_mb(m, painted, fp32_framework, n);
@@ -556,6 +635,163 @@ impl<'a> ScenePipeline<'a> {
             },
             used_scores,
         ))
+    }
+
+    /// Run one frame of a temporal stream against a per-session cache.
+    ///
+    /// The cache's delta estimator classifies the frame; the class actually
+    /// *served* (returned alongside the output) may degrade to FULL when the
+    /// cache cannot back the verdict (cold session, missing artifacts, index
+    /// drift). FULL frames run the existing single-scene pipeline
+    /// bit-identically — the cache only observes them, never influences them
+    /// — and refresh the cache. PARTIAL frames skip the segmenter and
+    /// repaint only dirty grid cells. REUSE frames execute only the
+    /// stream-tail sub-graph from cached seed features.
+    pub fn run_stream(
+        &self,
+        scene: &Scene,
+        seed: u64,
+        cache: &mut FrameCache,
+    ) -> Result<(PipelineOutput, FrameClass)> {
+        let delta = cache.classify(&scene.points);
+        let painted = self.cfg.variant.painted();
+        let n = scene.points.len();
+        let class = match delta.class {
+            FrameClass::Reuse
+                if cache.artifacts().is_some_and(|a| {
+                    a.seeds.is_some()
+                        && !a.seed_src.is_empty()
+                        && a.seed_src.iter().all(|&i| i < n)
+                }) =>
+            {
+                FrameClass::Reuse
+            }
+            FrameClass::Partial
+                if painted
+                    && cache.artifacts().is_some_and(|a| {
+                        a.scores.is_some()
+                            && a.paint.as_ref().is_some_and(|p| p.rows() == n)
+                            && delta.dirty.len() == n
+                    }) =>
+            {
+                FrameClass::Partial
+            }
+            _ => FrameClass::Full,
+        };
+        match class {
+            FrameClass::Full => {
+                let mut arts = StreamArtifacts::default();
+                let (out, used_scores) =
+                    self.run_impl(scene, seed, ReuseMode::Cold, Some(&mut arts))?;
+                arts.scores = used_scores;
+                cache.install(&scene.points, arts);
+                cache.record(FrameClass::Full);
+                Ok((out, FrameClass::Full))
+            }
+            FrameClass::Partial => {
+                let prev = cache
+                    .take_artifacts()
+                    .ok_or_else(|| anyhow!("partial frame without cached artifacts"))?;
+                let scores = prev
+                    .scores
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("partial frame without cached scores"))?;
+                let prev_paint = prev
+                    .paint
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("partial frame without cached paint"))?;
+                let mut arts = StreamArtifacts::default();
+                let mode =
+                    ReuseMode::Partial { scores, prev_paint, dirty: &delta.dirty };
+                let (out, used_scores) = self.run_impl(scene, seed, mode, Some(&mut arts))?;
+                arts.scores = used_scores;
+                cache.install(&scene.points, arts);
+                cache.record(FrameClass::Partial);
+                Ok((out, FrameClass::Partial))
+            }
+            FrameClass::Reuse => {
+                let arts = cache
+                    .artifacts()
+                    .ok_or_else(|| anyhow!("reuse frame without cached artifacts"))?;
+                let out = self.run_stream_reuse(scene, arts)?;
+                cache.record(FrameClass::Reuse);
+                Ok((out, FrameClass::Reuse))
+            }
+        }
+    }
+
+    /// REUSE-frame fast path: execute only the stream-tail sub-graph (vote →
+    /// proposal clustering → proposal net → decode) from the cached seed
+    /// features. Seed *centers* are re-gathered from the **current** cloud
+    /// through the cached biased-sampling indices — within a shot, point
+    /// index identity makes that gather the exact ego-motion + object-motion
+    /// transform of the cached centers, so votes track the moving scene even
+    /// though the SA features are a frame old.
+    fn run_stream_reuse(&self, scene: &Scene, arts: &StreamArtifacts) -> Result<PipelineOutput> {
+        let t_host = std::time::Instant::now();
+        let cfg = &self.cfg;
+        let m = &self.rt.manifest;
+        let threads = self.host_exec.threads();
+        let n = scene.points.len();
+        let tail = StageGraph::build(m, cfg, n, true)?.stream_tail();
+        let node = |class: StageClass| {
+            tail.nodes
+                .iter()
+                .find(|nd| nd.class == class)
+                .ok_or_else(|| anyhow!("stream tail missing a {class:?} stage"))
+        };
+        let vote_node = node(StageClass::Vote)?;
+        let prop_node = node(StageClass::Prop)?;
+        let vote_art =
+            vote_node.artifact.as_deref().ok_or_else(|| anyhow!("vote artifact missing"))?;
+        let prop_art =
+            prop_node.artifact.as_deref().ok_or_else(|| anyhow!("prop artifact missing"))?;
+        let seeds =
+            arts.seeds.as_ref().ok_or_else(|| anyhow!("reuse frame without cached seeds"))?;
+        if arts.seed_src.iter().any(|&i| i >= n) {
+            return Err(anyhow!("cached seed indices out of range for this frame"));
+        }
+        let seed_xyz = pointops::PointsSoA::from_indexed(&scene.points, &arts.seed_src);
+        if seed_xyz.len() != seeds.rows() {
+            return Err(anyhow!(
+                "cached seeds ({} rows) disagree with seed index set ({})",
+                seeds.rows(),
+                seed_xyz.len()
+            ));
+        }
+        // vote head — same math as the Vote closure of the full pipeline
+        let vote_out =
+            self.rt.run_with_spec(vote_art, &[seeds], vote_node.qspec.as_ref())?.remove(0);
+        let cfeat = seeds.row_len();
+        let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
+        let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
+        for i in 0..seed_xyz.len() {
+            let row = vote_out.row(i);
+            let s = seed_xyz.get(i);
+            vote_xyz.push([s[0] + row[0], s[1] + row[1], s[2] + row[2]]);
+            for c in 0..cfeat {
+                vote_feats.row_mut(i)[c] = seeds.row(i)[c] + row[3 + c];
+            }
+        }
+        let (np, pr, pk) = (m.num_proposals, m.proposal_radius, m.proposal_k);
+        let pidx = pointops::fps_par(&vote_xyz, np, threads);
+        let pgroups = pointops::ball_query_par(&vote_xyz, &pidx, pr, pk, threads);
+        let cluster_xyz: Vec<[f32; 3]> = pidx.iter().map(|&i| vote_xyz[i]).collect();
+        let pg = pointops::group_features(&vote_xyz, Some(&vote_feats), &pidx, &pgroups);
+        let prop =
+            self.rt.run_with_spec(prop_art, &[&pg], prop_node.qspec.as_ref())?.remove(0);
+        let detections = decode_detections(m, &cluster_xyz, &prop, cfg.obj_thresh, cfg.nms_iou);
+        let specs = tail.specs();
+        let timeline = self.sim.run(&specs);
+        let fp32_framework = !cfg.int8() && matches!(cfg.schedule, Schedule::SingleDevice(_));
+        let peak = peak_memory_mb(m, cfg.variant.painted(), fp32_framework, n);
+        Ok(PipelineOutput {
+            detections,
+            timeline,
+            stage_specs: specs,
+            peak_memory_mb: peak,
+            host_ms: t_host.elapsed().as_secs_f64() * 1000.0,
+        })
     }
 
     /// Execute an SA artifact whose ball-batch dimension may exceed ours

@@ -7,6 +7,7 @@
 //! asserted in tests on both sides.
 
 pub mod shapes;
+pub mod stream;
 
 use crate::util::rng::Rng;
 
@@ -215,9 +216,10 @@ fn place_objects(rng: &mut Rng, cfg: &DatasetCfg, room: f64) -> Vec<SceneObject>
     objects
 }
 
-fn camera(rng: &mut Rng, room: f64) -> ([f64; 3], [[f64; 3]; 3], f64) {
-    let ang = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
-    let cam = [ang.cos() * room * 0.55, ang.sin() * room * 0.55, rng.uniform(1.2, 1.7)];
+/// World->camera look-at rotation for a camera at `cam` targeting the room
+/// center (rows: right, -up, forward) — shared by the static camera
+/// placement and the streaming ego-motion path (`stream`).
+pub(crate) fn look_at(cam: [f64; 3]) -> [[f64; 3]; 3] {
     let target = [0.0, 0.0, 0.8];
     let mut fwd = [target[0] - cam[0], target[1] - cam[1], target[2] - cam[2]];
     let n = (fwd[0] * fwd[0] + fwd[1] * fwd[1] + fwd[2] * fwd[2]).sqrt();
@@ -232,8 +234,13 @@ fn camera(rng: &mut Rng, room: f64) -> ([f64; 3], [[f64; 3]; 3], f64) {
         right[2] * fwd[0] - right[0] * fwd[2],
         right[0] * fwd[1] - right[1] * fwd[0],
     ];
-    let rot = [right, [-up[0], -up[1], -up[2]], fwd];
-    (cam, rot, IMG_SIZE as f64 * 0.9)
+    [right, [-up[0], -up[1], -up[2]], fwd]
+}
+
+fn camera(rng: &mut Rng, room: f64) -> ([f64; 3], [[f64; 3]; 3], f64) {
+    let ang = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+    let cam = [ang.cos() * room * 0.55, ang.sin() * room * 0.55, rng.uniform(1.2, 1.7)];
+    (cam, look_at(cam), IMG_SIZE as f64 * 0.9)
 }
 
 /// Generate one deterministic scene (same procedural family as scene.py).
@@ -352,7 +359,13 @@ pub fn generate_scene(seed: u64, cfg: &DatasetCfg) -> Scene {
     scene
 }
 
-fn render(rng: &mut Rng, pts: &[[f64; 3]], obj: &[i32], cfg: &DatasetCfg, scene: &mut Scene) {
+pub(crate) fn render(
+    rng: &mut Rng,
+    pts: &[[f64; 3]],
+    obj: &[i32],
+    cfg: &DatasetCfg,
+    scene: &mut Scene,
+) {
     let hw = IMG_SIZE * IMG_SIZE;
     let mut img = vec![0.0f32; hw * 3];
     let mut seg = vec![0u8; hw];

@@ -1,0 +1,294 @@
+//! Sequential scene generator: temporal frame streams over synthetic rooms.
+//!
+//! Each stream is a sequence of *shots*. A shot opens with a scene-change cut
+//! (a fresh `generate_scene` room) and then evolves deterministically under
+//! seeded camera ego-motion (the camera continues its orbit around the room
+//! center), per-object jitter, and a few "mover" objects that translate and
+//! bounce off the walls. Within a shot, point index `i` refers to the *same*
+//! physical surface point in every frame — points translate rigidly with
+//! their object — which is exactly the property the temporal reuse cache
+//! (`crate::temporal`) relies on for index-based feature warm-starting.
+
+use super::{generate_scene, look_at, render, DatasetCfg, Scene};
+use crate::util::rng::Rng;
+
+/// Stream evolution parameters.
+#[derive(Debug, Clone)]
+pub struct StreamCfg {
+    /// frames emitted by `generate_stream`
+    pub frames: usize,
+    /// shot length: a scene-change cut fires every `cut_period` frames
+    pub cut_period: usize,
+    /// camera orbit step per frame (radians)
+    pub ego_step: f64,
+    /// per-frame Gaussian jitter applied to every object (meters)
+    pub jitter_sigma: f64,
+    /// number of objects per shot that translate continuously
+    pub movers: usize,
+    /// mover translation speed (meters per frame)
+    pub mover_speed: f64,
+}
+
+impl Default for StreamCfg {
+    fn default() -> Self {
+        StreamCfg {
+            frames: 32,
+            cut_period: 16,
+            ego_step: 0.01,
+            jitter_sigma: 0.002,
+            movers: 1,
+            mover_speed: 0.03,
+        }
+    }
+}
+
+/// Position of a frame within its stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameMeta {
+    pub index: usize,
+    pub shot: usize,
+    pub frame_in_shot: usize,
+    /// true on the first frame of a shot (scene-change cut)
+    pub is_cut: bool,
+}
+
+/// One frame of a temporal stream: a full `Scene` plus stream position.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub scene: Scene,
+    pub meta: FrameMeta,
+}
+
+fn mix(seed: u64, k: u64) -> u64 {
+    let mut z = seed ^ k.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 31)
+}
+
+/// Stateful frame-sequence generator. Deterministic in (seed, cfg): two
+/// generators with the same inputs emit bit-identical frame sequences.
+pub struct StreamGen {
+    seed: u64,
+    ds: &'static DatasetCfg,
+    cfg: StreamCfg,
+    index: usize,
+    shot: usize,
+    frame_in_shot: usize,
+    cur: Option<Scene>,
+    // orbit state recovered from the shot's opening camera
+    angle: f64,
+    radius: f64,
+    height: f64,
+    /// wall bound for mover bounce (half room extent minus margin)
+    room_lim: f64,
+    /// per-object velocity, zero for non-movers
+    vel: Vec<[f64; 2]>,
+}
+
+impl StreamGen {
+    pub fn new(seed: u64, ds: &'static DatasetCfg, cfg: StreamCfg) -> Self {
+        StreamGen {
+            seed,
+            ds,
+            cfg,
+            index: 0,
+            shot: 0,
+            frame_in_shot: 0,
+            cur: None,
+            angle: 0.0,
+            radius: 1.0,
+            height: 1.4,
+            room_lim: 1.0,
+            vel: Vec::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &StreamCfg {
+        &self.cfg
+    }
+
+    /// Open a new shot: fresh room, orbit state derived from its camera.
+    fn cut(&mut self) {
+        let shot_seed = mix(self.seed, 0xC07 ^ ((self.shot as u64) << 12));
+        let scene = generate_scene(shot_seed, self.ds);
+        let cam = scene.cam_pos;
+        self.angle = cam[1].atan2(cam[0]);
+        self.radius = (cam[0] * cam[0] + cam[1] * cam[1]).sqrt();
+        self.height = cam[2];
+        // camera orbits at room * 0.55, so half room extent = radius / 1.1
+        self.room_lim = (self.radius / 1.1 - 0.3).max(0.3);
+        let mut srng = Rng::new(shot_seed ^ 0xA11CE);
+        self.vel = scene
+            .objects
+            .iter()
+            .enumerate()
+            .map(|(oi, _)| {
+                if oi < self.cfg.movers {
+                    let dir = srng.uniform(0.0, 2.0 * std::f64::consts::PI);
+                    [dir.cos() * self.cfg.mover_speed, dir.sin() * self.cfg.mover_speed]
+                } else {
+                    [0.0, 0.0]
+                }
+            })
+            .collect();
+        self.cur = Some(scene);
+    }
+
+    /// Advance the current shot by one frame of ego-motion + object motion.
+    fn advance(&mut self) {
+        let mut rng = Rng::new(mix(self.seed, 0x0F0F ^ self.index as u64));
+        let scene = match self.cur.as_mut() {
+            Some(s) => s,
+            None => return,
+        };
+        // camera ego-motion: continue the orbit, slight step noise
+        self.angle += self.cfg.ego_step + rng.normal_scaled(0.0, self.cfg.ego_step * 0.1);
+        let cam = [self.angle.cos() * self.radius, self.angle.sin() * self.radius, self.height];
+        scene.cam_pos = cam;
+        scene.cam_rot = look_at(cam);
+        // object motion: mover velocity (wall bounce) + isotropic jitter
+        let mut deltas: Vec<[f32; 2]> = Vec::with_capacity(scene.objects.len());
+        for (oi, o) in scene.objects.iter_mut().enumerate() {
+            for a in 0..2 {
+                let next = o.center[a] as f64 + self.vel[oi][a];
+                if next.abs() > self.room_lim {
+                    self.vel[oi][a] = -self.vel[oi][a];
+                }
+            }
+            let dx = (self.vel[oi][0] + rng.normal_scaled(0.0, self.cfg.jitter_sigma)) as f32;
+            let dy = (self.vel[oi][1] + rng.normal_scaled(0.0, self.cfg.jitter_sigma)) as f32;
+            o.center[0] += dx;
+            o.center[1] += dy;
+            deltas.push([dx, dy]);
+        }
+        // points translate rigidly with their object — index identity holds
+        for (p, &oi) in scene.points.iter_mut().zip(scene.point_obj.iter()) {
+            if oi >= 0 {
+                p[0] += deltas[oi as usize][0];
+                p[1] += deltas[oi as usize][1];
+            }
+        }
+        // re-render under the new camera (image + seg mask move with it)
+        let pts: Vec<[f64; 3]> =
+            scene.points.iter().map(|p| [p[0] as f64, p[1] as f64, p[2] as f64]).collect();
+        let obj = scene.point_obj.clone();
+        render(&mut rng, &pts, &obj, self.ds, scene);
+    }
+
+    /// Emit the next frame of the stream (infinite; callers bound it).
+    pub fn next_frame(&mut self) -> Frame {
+        let is_cut = self.frame_in_shot == 0;
+        if is_cut {
+            self.cut();
+        } else {
+            self.advance();
+        }
+        let meta = FrameMeta {
+            index: self.index,
+            shot: self.shot,
+            frame_in_shot: self.frame_in_shot,
+            is_cut,
+        };
+        let scene = self.cur.clone().unwrap_or_else(|| generate_scene(self.seed, self.ds));
+        self.index += 1;
+        self.frame_in_shot += 1;
+        if self.frame_in_shot >= self.cfg.cut_period.max(1) {
+            self.frame_in_shot = 0;
+            self.shot += 1;
+        }
+        Frame { scene, meta }
+    }
+}
+
+/// Generate a bounded frame sequence (`cfg.frames` long).
+pub fn generate_stream(seed: u64, ds: &'static DatasetCfg, cfg: StreamCfg) -> Vec<Frame> {
+    let frames = cfg.frames;
+    let mut g = StreamGen::new(seed, ds, cfg);
+    (0..frames).map(|_| g.next_frame()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SYNRGBD;
+
+    #[test]
+    fn stream_is_deterministic() {
+        let a = generate_stream(7, &SYNRGBD, StreamCfg::default());
+        let b = generate_stream(7, &SYNRGBD, StreamCfg::default());
+        assert_eq!(a.len(), b.len());
+        for (fa, fb) in a.iter().zip(b.iter()) {
+            assert_eq!(fa.meta, fb.meta);
+            assert_eq!(fa.scene.points, fb.scene.points);
+            assert_eq!(fa.scene.seg_mask, fb.scene.seg_mask);
+        }
+    }
+
+    #[test]
+    fn point_identity_within_shot() {
+        let cfg = StreamCfg { frames: 6, cut_period: 8, ..StreamCfg::default() };
+        let frames = generate_stream(3, &SYNRGBD, cfg);
+        for w in frames.windows(2) {
+            assert!(!w[1].meta.is_cut);
+            let (a, b) = (&w[0].scene, &w[1].scene);
+            assert_eq!(a.points.len(), b.points.len());
+            assert_eq!(a.point_obj, b.point_obj);
+            // background points are static; object points move < 10 cm / frame
+            for ((pa, pb), &oi) in a.points.iter().zip(b.points.iter()).zip(a.point_obj.iter()) {
+                if oi < 0 {
+                    assert_eq!(pa, pb);
+                } else {
+                    let d = ((pa[0] - pb[0]).powi(2) + (pa[1] - pb[1]).powi(2)).sqrt();
+                    assert!(d < 0.1, "object point jumped {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cuts_reset_the_scene() {
+        let cfg = StreamCfg { frames: 10, cut_period: 4, ..StreamCfg::default() };
+        let frames = generate_stream(11, &SYNRGBD, cfg);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.meta.index, i);
+            assert_eq!(f.meta.is_cut, i % 4 == 0);
+            assert_eq!(f.meta.shot, i / 4);
+        }
+        // frames across a cut come from different rooms
+        let before = &frames[3].scene;
+        let after = &frames[4].scene;
+        assert_ne!(before.points, after.points);
+        assert_ne!(before.objects.len(), 0);
+    }
+
+    #[test]
+    fn camera_moves_every_frame() {
+        let frames = generate_stream(5, &SYNRGBD, StreamCfg { frames: 4, ..Default::default() });
+        for w in frames.windows(2) {
+            if w[1].meta.is_cut {
+                continue;
+            }
+            assert_ne!(w[0].scene.cam_pos, w[1].scene.cam_pos);
+            assert_ne!(w[0].scene.image, w[1].scene.image);
+        }
+    }
+
+    #[test]
+    fn movers_stay_inside_the_room() {
+        let cfg = StreamCfg { frames: 48, cut_period: 48, mover_speed: 0.08, ..Default::default() };
+        let frames = generate_stream(9, &SYNRGBD, cfg);
+        let lim = {
+            let c = frames[0].scene.cam_pos;
+            ((c[0] * c[0] + c[1] * c[1]).sqrt() / 1.1 - 0.3).max(0.3) + 0.5
+        };
+        for f in &frames {
+            for o in &f.scene.objects {
+                assert!(
+                    (o.center[0] as f64).abs() < lim + 1.0 && (o.center[1] as f64).abs() < lim + 1.0,
+                    "mover escaped: {:?}",
+                    o.center
+                );
+            }
+        }
+    }
+}

@@ -631,6 +631,46 @@ impl StageGraph {
         Ok(g)
     }
 
+    /// **stream-tail**: the sub-graph a REUSE frame of a temporal stream
+    /// executes — vote head, proposal clustering, proposal net, and decode.
+    /// Paint, biased FPS, and the whole SA backbone are skipped; the cached
+    /// seed features warm-start the vote stage (see
+    /// `coordinator::pipeline::run_stream` and `crate::temporal`).
+    /// Dependencies on dropped nodes are removed and the surviving edges
+    /// re-indexed, so the tail prices through the serving planner unchanged;
+    /// its fingerprint differs from the full graph's (different node set),
+    /// so plan caches never conflate the two.
+    pub fn stream_tail(&self) -> StageGraph {
+        let keep = |c: StageClass| {
+            matches!(
+                c,
+                StageClass::Vote | StageClass::PropPm | StageClass::Prop | StageClass::Decode
+            )
+        };
+        let mut map = vec![usize::MAX; self.nodes.len()];
+        let mut nodes: Vec<StageNode> = Vec::with_capacity(4);
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !keep(n.class) {
+                continue;
+            }
+            let mut node = n.clone();
+            node.spec.deps =
+                n.spec.deps.iter().map(|&d| map[d]).filter(|&d| d != usize::MAX).collect();
+            node.extra_deps =
+                n.extra_deps.iter().map(|&d| map[d]).filter(|&d| d != usize::MAX).collect();
+            map[i] = nodes.len();
+            nodes.push(node);
+        }
+        StageGraph {
+            nodes,
+            chains: Vec::new(),
+            sa4_bias: self.sa4_bias,
+            cfg: self.cfg.clone(),
+            num_points: self.num_points,
+            skip_seg: self.skip_seg,
+        }
+    }
+
     /// Structural fingerprint of the graph: everything that changes what
     /// the simulator or executor would do — stage names, devices,
     /// precisions, workloads, dependency edges, artifact names and quant
@@ -860,6 +900,41 @@ mod tests {
             if knob == "obj_thresh" || knob == "nms_iou" {
                 assert_eq!(base.specs(), g.specs(), "{knob} is timing-invisible by design");
             }
+        }
+    }
+
+    #[test]
+    fn stream_tail_keeps_only_the_head() {
+        let m = Manifest::synthetic();
+        for v in [Variant::PointSplit, Variant::PointPainting, Variant::VoteNet] {
+            let cfg = DetectorConfig::new("synrgbd", v, true, pipelined());
+            let g = StageGraph::build(&m, &cfg, 2048, false).unwrap();
+            let tail = g.stream_tail();
+            let classes: Vec<StageClass> = tail.nodes.iter().map(|n| n.class).collect();
+            assert_eq!(
+                classes,
+                vec![StageClass::Vote, StageClass::PropPm, StageClass::Prop, StageClass::Decode],
+                "{v:?}"
+            );
+            // edges re-indexed into a valid DAG over the surviving nodes
+            for (i, n) in tail.nodes.iter().enumerate() {
+                for &d in n.spec.deps.iter().chain(n.extra_deps.iter()) {
+                    assert!(d < i, "{v:?}: tail node {i} depends forward on {d}");
+                }
+            }
+            assert_eq!(tail.nodes[1].spec.deps, vec![0], "prop_pm waits for vote");
+            assert_eq!(tail.nodes[2].spec.deps, vec![1]);
+            assert_eq!(tail.nodes[3].spec.deps, vec![2]);
+            // surviving specs are byte-identical to the full graph's
+            for n in &tail.nodes {
+                let orig = g.nodes.iter().find(|o| o.spec.name == n.spec.name).unwrap();
+                assert_eq!(orig.spec.workload, n.spec.workload);
+                assert_eq!(orig.artifact, n.artifact);
+                assert_eq!(orig.qspec, n.qspec);
+            }
+            assert_ne!(tail.fingerprint(), g.fingerprint());
+            // the tail still batch-folds (the planner prices it unchanged)
+            assert_eq!(tail.batch_fold(4).len(), 4);
         }
     }
 

@@ -69,6 +69,7 @@ pub mod quant;
 pub mod runtime;
 pub mod serving;
 pub mod sim;
+pub mod temporal;
 pub mod util;
 #[cfg_attr(not(test), deny(clippy::unwrap_used))]
 pub mod verify;

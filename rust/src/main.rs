@@ -9,16 +9,24 @@
 //! pointsplit serve    [--scenes 32] [--workers 4] [... detect flags]
 //!     multi-scene request loop; print mAP + latency/memory report
 //! pointsplit serve-traffic [--pattern poisson|bursty|diurnal|all] [--load 0.8 | --rate RPS]
-//!                     [--duration-s 30] [--deadline-ms 1000] [--policy degrade|shed|none]
-//!                     [--queue-cap 64] [--batch-max 4] [--batch-wait-ms 25] [--hi-frac 0]
+//!                     [--duration-s 30] [--deadline-ms 1000]
+//!                     [--policy degrade|stale-tracks|shed|none] [--queue-cap 64]
+//!                     [--batch-max 4] [--batch-wait-ms 25] [--hi-frac 0] [--clients 0]
 //!                     [--functional] [--exec-workers N] [... detect flags]
 //!     open-loop traffic gateway on the simulated clock; print a
-//!     ServeTrafficReport per arrival pattern (see docs/SERVING.md)
+//!     ServeTrafficReport per arrival pattern (see docs/SERVING.md);
+//!     --clients > 0 tags arrivals as streaming sessions (docs/STREAMING.md)
+//! pointsplit serve-stream [--frames 32] [--cut-period 16] [--session-cache-mb 4]
+//!                     [--seed N] [... detect flags]
+//!     temporal streaming demo: evolve one synthetic room under seeded
+//!     ego-motion, run every frame through a warm per-session FrameCache,
+//!     and compare against the cold per-frame pipeline (docs/STREAMING.md)
 //! pointsplit serve-cluster [--boxes "gpu+edgetpu:2,gpu:1,cpu+edgetpu:1"] [--configs 2]
 //!                     [--router affinity|random|least-loaded] [--pattern poisson|bursty|diurnal]
 //!                     [--load 0.8 | --rate RPS] [--duration-s 30] [--deadline-ms 1000]
-//!                     [--policy degrade|shed|none] [--queue-cap 32] [--batch-max 4]
-//!                     [--batch-wait-ms 25] [--kill "1@15"] [--slow "0@10x3:5"]
+//!                     [--policy degrade|stale-tracks|shed|none] [--queue-cap 32]
+//!                     [--batch-max 4] [--batch-wait-ms 25] [--clients 0] [--kill "1@15"]
+//!                     [--slow "0@10x3:5"]
 //!                     [--autoscale] [--scale-max 16] [--json PATH] [... detect flags]
 //!     fleet-scale gateway: shard traffic across heterogeneous edge boxes,
 //!     each planned by the placement search; print a ClusterReport with
@@ -35,11 +43,12 @@
 //!     constraints, report per-candidate PlanCost, mark the optimum
 //! pointsplit verify   [--artifacts DIR] [--schedule gpu+edgetpu] [--batch 1]
 //!                     [--boxes "gpu+edgetpu:2,gpu:1,cpu+edgetpu:1"] [--configs 2]
-//!                     [--batch-max 4] [--verbose]
+//!                     [--batch-max 4] [--sessions 64] [--session-cache-mb 64] [--verbose]
 //!     static verification sweep: run the G/P/S/E rule set over every
 //!     built-in configuration (all datasets x variants x precisions, plus
-//!     seg-skip and SLO-degraded rewrites) and the C rules over a cluster
-//!     spec; exit non-zero iff any Error fires (see docs/VERIFIER.md)
+//!     seg-skip and SLO-degraded rewrites), the C rules over a cluster
+//!     spec, and the S006 session-cache budget check; exit non-zero iff
+//!     any Error fires (see docs/VERIFIER.md)
 //! pointsplit devices
 //!     print the calibrated device models
 //! ```
@@ -70,6 +79,7 @@ fn run() -> Result<()> {
         "detect" => cmd_detect(&cli),
         "serve" => cmd_serve(&cli),
         "serve-traffic" => cmd_serve_traffic(&cli),
+        "serve-stream" => cmd_serve_stream(&cli),
         "serve-cluster" => cmd_serve_cluster(&cli),
         "quant-report" => cmd_quant_report(&cli),
         "plan-search" => cmd_plan_search(&cli),
@@ -81,8 +91,8 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => Err(anyhow!(
-            "unknown command '{other}' (try: check|detect|serve|serve-traffic|serve-cluster|\
-             quant-report|plan-search|verify|devices)"
+            "unknown command '{other}' (try: check|detect|serve|serve-traffic|serve-stream|\
+             serve-cluster|quant-report|plan-search|verify|devices)"
         )),
     }
 }
@@ -90,8 +100,8 @@ fn run() -> Result<()> {
 fn print_help() {
     println!("pointsplit — on-device 3D detection with heterogeneous accelerators");
     println!(
-        "commands: check | detect | serve | serve-traffic | serve-cluster | quant-report | \
-         plan-search | verify | devices   (see rust/src/main.rs docs)"
+        "commands: check | detect | serve | serve-traffic | serve-stream | serve-cluster | \
+         quant-report | plan-search | verify | devices   (see rust/src/main.rs docs)"
     );
 }
 
@@ -346,6 +356,7 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
             deadline_ms,
             hi_frac: cli.get_f64("hi-frac", 0.0)?,
             mix: vec![1.0],
+            clients: cli.get_usize("clients", 0)?,
             seed,
         };
         let sc = TrafficScenario {
@@ -361,6 +372,84 @@ fn cmd_serve_traffic(cli: &Cli) -> Result<()> {
         rep.print();
         println!();
     }
+    Ok(())
+}
+
+/// Temporal streaming demo: generate one frame sequence (seeded ego-motion,
+/// per-object jitter, movers, periodic scene cuts), run every frame through
+/// a single warm [`pointsplit::temporal::FrameCache`] session, and compare
+/// against re-running the full single-scene pipeline cold on each frame.
+/// Reports per-class frame counts, simulated per-frame latency (median), the
+/// warm-over-cold speedup, and the cache footprint against its bound.
+fn cmd_serve_stream(cli: &Cli) -> Result<()> {
+    use pointsplit::data::stream::{generate_stream, StreamCfg};
+    use pointsplit::temporal::{DeltaCfg, FrameCache};
+
+    let rt = open_runtime(cli)?;
+    let (cfg, ds) = detector_config(cli)?;
+    let seed = cli.get_usize("seed", 1)? as u64;
+    let scfg = StreamCfg {
+        frames: cli.get_usize("frames", 32)?.max(1),
+        cut_period: cli.get_usize("cut-period", StreamCfg::default().cut_period)?.max(1),
+        ..StreamCfg::default()
+    };
+    let frames = generate_stream(seed, ds, scfg.clone());
+    let pipe = ScenePipeline::new(&rt, cfg.clone());
+    let bound = (cli.get_usize("session-cache-mb", 4)? as u64) << 20;
+    let mut cache = FrameCache::new(DeltaCfg::default(), bound);
+    println!(
+        "serve-stream: {} {} int8={} — {} frames, cut every {}, session bound {} MB",
+        ds.name,
+        cfg.variant.name(),
+        cfg.int8(),
+        scfg.frames,
+        scfg.cut_period,
+        bound >> 20
+    );
+    let mut warm_ms: Vec<f64> = Vec::with_capacity(frames.len());
+    let mut cold_ms: Vec<f64> = Vec::with_capacity(frames.len());
+    for f in &frames {
+        let (out, class) = pipe.run_stream(&f.scene, seed, &mut cache)?;
+        let cold = pipe.run(&f.scene, seed)?;
+        warm_ms.push(out.timeline.total_ms);
+        cold_ms.push(cold.timeline.total_ms);
+        println!(
+            "  frame {:>3} shot {:>2}{}  {:<7}  warm {:>7.1} ms  cold {:>7.1} ms  {} dets",
+            f.meta.index,
+            f.meta.shot,
+            if f.meta.is_cut { " CUT" } else { "    " },
+            class.name(),
+            out.timeline.total_ms,
+            cold.timeline.total_ms,
+            out.detections.len()
+        );
+    }
+    let median = |xs: &[f64]| {
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.total_cmp(b));
+        s[s.len() / 2]
+    };
+    let st = *cache.stats();
+    let reuse_rate = (st.partial + st.reuse) as f64 / st.frames().max(1) as f64;
+    let (wm, cm) = (median(&warm_ms), median(&cold_ms));
+    println!(
+        "\nframes: full {}  partial {}  reuse {}  (reuse rate {:.0}%)",
+        st.full,
+        st.partial,
+        st.reuse,
+        100.0 * reuse_rate
+    );
+    println!(
+        "median simulated latency: warm {:.1} ms vs cold {:.1} ms  ({:.2}x)",
+        wm,
+        cm,
+        cm / wm.max(1e-9)
+    );
+    println!(
+        "session cache: {:.0} KB used of {} KB bound",
+        cache.footprint_bytes() as f64 / 1024.0,
+        cache.bound_bytes() >> 10
+    );
     Ok(())
 }
 
@@ -470,6 +559,7 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
             deadline_ms,
             hi_frac: cli.get_f64("hi-frac", 0.0)?,
             mix,
+            clients: cli.get_usize("clients", 0)?,
             seed,
         },
         batch,
@@ -832,8 +922,37 @@ fn cmd_verify(cli: &Cli) -> Result<()> {
     errors += crep.errors().len();
     warnings += crep.warnings().len();
 
+    // the streaming session cache, sized the way the gateway provisions it:
+    // per-session declared bytes from the canonical footprint formula x the
+    // session-map capacity, against the configured memory bound (S006)
+    let sessions = cli.get_usize("sessions", 64)?;
+    let cache_bound = (cli.get_usize("session-cache-mb", 64)? as u64) << 20;
+    let m0 = planner.manifest();
+    let per_session = pointsplit::temporal::session_footprint_bytes(
+        num_points,
+        m0.num_seeds,
+        m0.seed_feat,
+        m0.classes.len() + 1,
+        m0.img_size,
+    );
+    let srep = verify::verify_session_cache(sessions, per_session, cache_bound);
+    for d in &srep.diagnostics {
+        if d.severity == verify::Severity::Error || verbose {
+            println!("  session-cache {d}");
+        }
+    }
     println!(
-        "\nverified {graphs} graphs + 1 cluster spec: {errors} error(s), {warnings} warning(s)"
+        "session cache: {sessions} sessions x {:.0} KB declared vs {} MB bound — {} error(s)",
+        per_session as f64 / 1024.0,
+        cache_bound >> 20,
+        srep.errors().len()
+    );
+    errors += srep.errors().len();
+    warnings += srep.warnings().len();
+
+    println!(
+        "\nverified {graphs} graphs + 1 cluster spec + 1 session-cache budget: \
+         {errors} error(s), {warnings} warning(s)"
     );
     if errors > 0 {
         return Err(anyhow!("verification failed with {errors} error(s)"));

@@ -25,7 +25,7 @@ pub use interp::{
     three_nn_interpolate, three_nn_interpolate_par, three_nn_interpolate_scalar,
     three_nn_interpolate_soa,
 };
-pub use paint::{build_features, fg_mask, paint_points};
+pub use paint::{build_features, fg_mask, paint_points, paint_points_partial};
 pub use soa::{padded_len, soa_bytes, PointsSoA, LANES};
 
 use crate::util::tensor::Tensor;

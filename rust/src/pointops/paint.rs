@@ -25,6 +25,42 @@ pub fn paint_points(scene: &Scene, seg_scores: &Tensor) -> Tensor {
     Tensor::new(vec![scene.points.len(), c], out)
 }
 
+/// PARTIAL-frame painting for the temporal reuse path: recompute the
+/// projection only for `dirty` points (those whose grid-occupancy cell
+/// changed since the cached frame) and copy the remaining rows from the
+/// previous frame's painted scores. With an all-true mask this is exactly
+/// [`paint_points`]; with an all-false mask it is a row copy of `prev`.
+pub fn paint_points_partial(
+    scene: &Scene,
+    seg_scores: &Tensor,
+    prev: &Tensor,
+    dirty: &[bool],
+) -> Tensor {
+    let (h, w, c) = (seg_scores.shape[0], seg_scores.shape[1], seg_scores.shape[2]);
+    debug_assert_eq!(prev.rows(), scene.points.len());
+    debug_assert_eq!(prev.row_len(), c);
+    debug_assert_eq!(dirty.len(), scene.points.len());
+    let mut out = Vec::with_capacity(scene.points.len() * c);
+    for (i, p) in scene.points.iter().enumerate() {
+        if !dirty.get(i).copied().unwrap_or(true) {
+            out.extend_from_slice(prev.row(i));
+            continue;
+        }
+        let (u, v, z) = scene.project(*p);
+        let inside = u >= 0.0 && u < w as f64 && v >= 0.0 && v < h as f64 && z > 0.0;
+        if inside {
+            let ui = (u.floor() as usize).min(w - 1);
+            let vi = (v.floor() as usize).min(h - 1);
+            let base = (vi * w + ui) * c;
+            out.extend_from_slice(&seg_scores.data[base..base + c]);
+        } else {
+            out.push(1.0);
+            out.extend(std::iter::repeat(0.0).take(c - 1));
+        }
+    }
+    Tensor::new(vec![scene.points.len(), c], out)
+}
+
 /// Foreground mask from painted scores: P(not background) > thresh.
 pub fn fg_mask(scores: &Tensor, thresh: f32) -> Vec<f32> {
     (0..scores.rows())
@@ -93,6 +129,26 @@ mod tests {
             hit as f32 / tot as f32 > 0.5,
             "oracle painting should label most object points fg ({hit}/{tot})"
         );
+    }
+
+    #[test]
+    fn partial_paint_matches_full_on_all_dirty_and_copies_on_clean() {
+        let s = generate_scene(4, &SYNRGBD);
+        let scores = gt_scores(&s);
+        let full = paint_points(&s, &scores);
+        let n = s.points.len();
+        let all_dirty = paint_points_partial(&s, &scores, &full, &vec![true; n]);
+        assert_eq!(all_dirty.data, full.data, "all-dirty partial must equal full paint");
+        // with a stale prev and an all-clean mask, rows come from prev
+        let stale = Tensor::new(vec![n, full.row_len()], vec![0.25; n * full.row_len()]);
+        let clean = paint_points_partial(&s, &scores, &stale, &vec![false; n]);
+        assert_eq!(clean.data, stale.data);
+        // mixed: dirty rows recomputed, clean rows from prev
+        let mut mask = vec![false; n];
+        mask[0] = true;
+        let mixed = paint_points_partial(&s, &scores, &stale, &mask);
+        assert_eq!(mixed.row(0), full.row(0));
+        assert_eq!(mixed.row(1), stale.row(1));
     }
 
     #[test]

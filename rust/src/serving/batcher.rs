@@ -99,6 +99,7 @@ mod tests {
             seed: id,
             class: 0,
             key,
+            client: 0,
         }
     }
 

@@ -31,6 +31,8 @@ use crate::eval::{eval_map, Detection};
 use crate::exec::HostExec;
 use crate::graph::StageGraph;
 use crate::runtime::{Runtime, RuntimeSource};
+use crate::sim::PlanCost;
+use crate::temporal::FrameClass;
 use crate::util::stats::Stats;
 
 use super::batcher::{self, BatchPolicy};
@@ -107,6 +109,15 @@ pub struct ServeTrafficReport {
     pub util_gpu: f64,
     pub util_npu: f64,
     pub max_queue_depth: usize,
+    /// Streaming frames served at each temporal class (all zero for
+    /// sessionless traffic).
+    pub stream_full: usize,
+    pub stream_partial: usize,
+    pub stream_reuse: usize,
+    /// Sessions evicted from the bounded per-box session cache.
+    pub session_evictions: usize,
+    /// Batches served on the stale-tracks SLO rung.
+    pub stale_batches: usize,
     /// mAP@0.25 over functionally executed scenes (None without a real
     /// PJRT backend + artifacts).
     pub map_25: Option<f64>,
@@ -149,6 +160,19 @@ impl ServeTrafficReport {
             100.0 * self.util_npu,
             self.max_queue_depth
         );
+        let frames = self.stream_full + self.stream_partial + self.stream_reuse;
+        if frames > 0 {
+            println!(
+                "stream frames: full {}  partial {}  reuse {}  (reuse rate {:.0}%)  \
+                 evictions {}  stale batches {}",
+                self.stream_full,
+                self.stream_partial,
+                self.stream_reuse,
+                100.0 * (self.stream_partial + self.stream_reuse) as f64 / frames as f64,
+                self.session_evictions,
+                self.stale_batches
+            );
+        }
         match self.map_25 {
             Some(m) => println!("mAP@0.25 (functional) = {:.1}", m * 100.0),
             None => println!("mAP: n/a (simulated-time run; needs artifacts + PJRT)"),
@@ -344,12 +368,133 @@ fn worker_loop(
 }
 
 /// Per-config plan bundle a [`BoxEngine`] dispatches against: the full
-/// stage graph plus the SLO degrade fast path, built once at construction.
+/// stage graph, the SLO degrade fast path, and the two temporal-reuse
+/// shapes ([`crate::temporal`]) — all built once at construction.
 struct ConfigPlan {
     cfg: DetectorConfig,
     full: StageGraph,
     fast_cfg: DetectorConfig,
     fast: StageGraph,
+    /// PARTIAL frames: full precision and point budget, but the 2D
+    /// segmentation pass is skipped (painted scores patched from the
+    /// session cache).
+    partial: StageGraph,
+    /// REUSE frames: only the detection head re-runs over cached SA
+    /// features ([`StageGraph::stream_tail`]).
+    tail: StageGraph,
+}
+
+/// Session-model knobs for the virtual-time dispatcher. The dispatcher only
+/// needs per-frame *costs*, so frame classes are modelled deterministically
+/// (mirroring the measured delta estimator in [`crate::temporal`]): a
+/// forced-FULL cut every `CUT_PERIOD` frames, a PARTIAL roughly every
+/// `PARTIAL_EVERY` frames (seeded per client), REUSE otherwise.
+const SESSION_CAP_DEFAULT: usize = 64;
+const CUT_PERIOD: u64 = 16;
+const PARTIAL_EVERY: u64 = 8;
+
+/// SplitMix64 finalizer (same family as the router's rendezvous hash).
+fn session_hash(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Frame class of a session's `frame`-th dispatch (0-based; frame 0 and
+/// every cut are FULL).
+fn frame_class_of(client: u64, frame: u64) -> FrameClass {
+    if frame % CUT_PERIOD == 0 {
+        return FrameClass::Full;
+    }
+    if session_hash(client ^ frame.wrapping_mul(0x9E37)) % PARTIAL_EVERY == 0 {
+        FrameClass::Partial
+    } else {
+        FrameClass::Reuse
+    }
+}
+
+struct SessionEntry {
+    /// Logical-clock timestamp of the last dispatched frame (LRU key;
+    /// unique per entry, so eviction is deterministic despite `HashMap`
+    /// iteration order).
+    last_used: u64,
+    /// Frames dispatched for this session so far.
+    frames: u64,
+}
+
+/// Bounded per-client session table of one box. Holds the frame-class state
+/// machine only; the artifact bytes it stands for are accounted by
+/// [`crate::temporal::session_footprint_bytes`] and checked by verifier
+/// rule S006.
+struct SessionMap {
+    map: HashMap<u64, SessionEntry>,
+    cap: usize,
+    clock: u64,
+    evictions: usize,
+}
+
+impl SessionMap {
+    fn new(cap: usize) -> SessionMap {
+        SessionMap { map: HashMap::new(), cap: cap.max(1), clock: 0, evictions: 0 }
+    }
+
+    /// Class the session's next frame would be served at (cold = FULL).
+    fn peek_class(&self, client: u64) -> FrameClass {
+        match self.map.get(&client) {
+            None => FrameClass::Full,
+            Some(e) => frame_class_of(client, e.frames),
+        }
+    }
+
+    /// A warm session has cached state a stale-tracks rung can serve from.
+    fn is_warm(&self, client: u64) -> bool {
+        self.map.get(&client).is_some_and(|e| e.frames > 0)
+    }
+
+    /// Record one dispatched frame, evicting the least-recently-used
+    /// session when a new client would exceed the capacity bound (the
+    /// evicted client restarts cold, i.e. FULL).
+    fn commit(&mut self, client: u64) {
+        self.clock += 1;
+        if !self.map.contains_key(&client) && self.map.len() >= self.cap {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(id, e)| (e.last_used, **id))
+                .map(|(id, _)| *id);
+            if let Some(v) = victim {
+                self.map.remove(&v);
+                self.evictions += 1;
+            }
+        }
+        let e = self.map.entry(client).or_insert(SessionEntry { last_used: 0, frames: 0 });
+        e.last_used = self.clock;
+        e.frames += 1;
+    }
+}
+
+const ZERO_COST: PlanCost = PlanCost {
+    total_ms: 0.0,
+    busy_gpu_ms: 0.0,
+    busy_npu_ms: 0.0,
+    busy_cpu_ms: 0.0,
+    comm_ms: 0.0,
+    bottleneck_ms: 0.0,
+};
+
+/// Sequential composition of two sub-batch costs (the lane runs the FULL,
+/// PARTIAL and REUSE sub-batches back to back, so times and occupancies
+/// add).
+fn add_cost(a: PlanCost, b: PlanCost) -> PlanCost {
+    PlanCost {
+        total_ms: a.total_ms + b.total_ms,
+        busy_gpu_ms: a.busy_gpu_ms + b.busy_gpu_ms,
+        busy_npu_ms: a.busy_npu_ms + b.busy_npu_ms,
+        busy_cpu_ms: a.busy_cpu_ms + b.busy_cpu_ms,
+        comm_ms: a.comm_ms + b.comm_ms,
+        bottleneck_ms: a.bottleneck_ms + b.bottleneck_ms,
+    }
 }
 
 /// Lifetime counters of one [`BoxEngine`] — everything a per-box report
@@ -370,11 +515,33 @@ pub struct EngineStats {
     pub busy_cpu_ms: f64,
     /// Completion time of the last batch, ms on the simulated clock.
     pub makespan_ms: f64,
+    /// Streaming frames served at each temporal class (sessionless
+    /// requests count nowhere; degraded redos count nowhere).
+    pub stream_full: usize,
+    pub stream_partial: usize,
+    pub stream_reuse: usize,
+    /// Sessions evicted from the bounded session cache (LRU).
+    pub stream_evictions: usize,
+    /// Live sessions in the cache at snapshot time.
+    pub stream_sessions: usize,
+    /// Batches served on the stale-tracks SLO rung.
+    pub stale_batches: usize,
 }
 
 impl EngineStats {
     pub fn mean_batch(&self) -> f64 {
         if self.batches > 0 { self.batched_reqs as f64 / self.batches as f64 } else { 0.0 }
+    }
+
+    /// Streaming frames served from cached state / all streaming frames
+    /// (the session-cache hit rate; 0 for sessionless traffic).
+    pub fn stream_reuse_rate(&self) -> f64 {
+        let frames = self.stream_full + self.stream_partial + self.stream_reuse;
+        if frames > 0 {
+            (self.stream_partial + self.stream_reuse) as f64 / frames as f64
+        } else {
+            0.0
+        }
     }
 }
 
@@ -409,6 +576,12 @@ pub struct BoxEngine {
     degraded: usize,
     batches: usize,
     batched_reqs: usize,
+    // streaming-session state and counters
+    sessions: SessionMap,
+    stream_full: usize,
+    stream_partial: usize,
+    stream_reuse: usize,
+    stale_batches: usize,
     // functional-accuracy accumulators (only with a working executor)
     exec_ok: bool,
     gts: Vec<Vec<Box3>>,
@@ -440,7 +613,9 @@ impl BoxEngine {
             let full = planner.graph(cfg, num_points, false)?;
             let fast_cfg = slo::degraded_config(cfg);
             let fast = planner.graph(&fast_cfg, fast_pts, true)?;
-            plans.push(ConfigPlan { cfg: cfg.clone(), full, fast_cfg, fast });
+            let partial = planner.graph(cfg, num_points, true)?;
+            let tail = full.stream_tail();
+            plans.push(ConfigPlan { cfg: cfg.clone(), full, fast_cfg, fast, partial, tail });
         }
         Ok(BoxEngine {
             plans,
@@ -461,10 +636,66 @@ impl BoxEngine {
             degraded: 0,
             batches: 0,
             batched_reqs: 0,
+            sessions: SessionMap::new(SESSION_CAP_DEFAULT),
+            stream_full: 0,
+            stream_partial: 0,
+            stream_reuse: 0,
+            stale_batches: 0,
             exec_ok: true,
             gts: Vec::new(),
             dets: Vec::new(),
         })
+    }
+
+    /// Override the streaming session-cache capacity (default
+    /// 64 live client sessions per box). Resets session state, so call it
+    /// before offering traffic.
+    pub fn with_session_cap(mut self, cap: usize) -> BoxEngine {
+        self.sessions = SessionMap::new(cap);
+        self
+    }
+
+    /// Configured session-cache capacity (for memory-bound verification).
+    pub fn session_cap(&self) -> usize {
+        self.sessions.cap
+    }
+
+    /// Class request `r` would be served at right now (sessionless = FULL).
+    fn peek_class(&self, r: &Request) -> FrameClass {
+        if r.client == 0 { FrameClass::Full } else { self.sessions.peek_class(r.client) }
+    }
+
+    /// Price a batch whose members are served at the given frame classes:
+    /// the FULL, PARTIAL and REUSE sub-batches each cost their own graph,
+    /// run back to back. An all-FULL batch degenerates to exactly the full
+    /// graph's cost, so sessionless traffic is priced bit-identically to
+    /// the pre-streaming dispatcher.
+    fn classed_cost(
+        &self,
+        planner: &ServicePlanner,
+        ci: usize,
+        classes: &[FrameClass],
+    ) -> PlanCost {
+        let (mut kf, mut kp, mut kr) = (0usize, 0usize, 0usize);
+        for c in classes {
+            match c {
+                FrameClass::Full => kf += 1,
+                FrameClass::Partial => kp += 1,
+                FrameClass::Reuse => kr += 1,
+            }
+        }
+        let p = &self.plans[ci];
+        let mut cost = ZERO_COST;
+        if kf > 0 {
+            cost = add_cost(cost, planner.cost_of_graph(&p.full, kf));
+        }
+        if kp > 0 {
+            cost = add_cost(cost, planner.cost_of_graph(&p.partial, kp));
+        }
+        if kr > 0 {
+            cost = add_cost(cost, planner.cost_of_graph(&p.tail, kr));
+        }
+        cost
     }
 
     /// Admit one arrival. A rejection emits its terminal outcome here so
@@ -498,10 +729,34 @@ impl BoxEngine {
                 batcher::BatchDecision::Dispatch(batch) => {
                     let ci = batch.key.min(self.plans.len() - 1);
                     let k0 = batch.reqs.len();
-                    let full = planner.cost_of_graph(&self.plans[ci].full, k0).scaled(self.slow);
+                    // price the batch at each member's temporal frame class;
+                    // the stale rung additionally forces every warm session
+                    // onto its REUSE tail
+                    let classes: Vec<FrameClass> =
+                        batch.reqs.iter().map(|r| self.peek_class(r)).collect();
+                    let stale_classes: Vec<FrameClass> = batch
+                        .reqs
+                        .iter()
+                        .zip(&classes)
+                        .map(|(r, &c)| {
+                            if r.client != 0 && self.sessions.is_warm(r.client) {
+                                FrameClass::Reuse
+                            } else {
+                                c
+                            }
+                        })
+                        .collect();
+                    let full = self.classed_cost(planner, ci, &classes).scaled(self.slow);
+                    let stale = self.classed_cost(planner, ci, &stale_classes).scaled(self.slow);
                     let fast = planner.cost_of_graph(&self.plans[ci].fast, k0).scaled(self.slow);
-                    let dec =
-                        slo::apply(self.policy, batch.reqs, now, full.total_ms, fast.total_ms);
+                    let dec = slo::apply_stream(
+                        self.policy,
+                        batch.reqs,
+                        now,
+                        full.total_ms,
+                        stale.total_ms,
+                        fast.total_ms,
+                    );
                     for r in &dec.shed {
                         self.shed_slo += 1;
                         outcomes.push(RequestOutcome {
@@ -514,11 +769,30 @@ impl BoxEngine {
                         continue; // whole batch shed; lane still open
                     }
                     let k = dec.dispatch.len();
-                    let cost = if dec.degraded {
-                        planner.cost_of_graph(&self.plans[ci].fast, k).scaled(self.slow)
-                    } else {
-                        planner.cost_of_graph(&self.plans[ci].full, k).scaled(self.slow)
+                    // class each dispatched request is actually served at
+                    // (None = degraded redo, priced on the fast graph)
+                    let served: Option<Vec<FrameClass>> = (!dec.degraded).then(|| {
+                        dec.dispatch
+                            .iter()
+                            .map(|r| {
+                                if dec.stale
+                                    && r.client != 0
+                                    && self.sessions.is_warm(r.client)
+                                {
+                                    FrameClass::Reuse
+                                } else {
+                                    self.peek_class(r)
+                                }
+                            })
+                            .collect()
+                    });
+                    let cost = match &served {
+                        Some(cls) => self.classed_cost(planner, ci, cls).scaled(self.slow),
+                        None => planner.cost_of_graph(&self.plans[ci].fast, k).scaled(self.slow),
                     };
+                    if dec.stale {
+                        self.stale_batches += 1;
+                    }
                     let done = now + cost.total_ms;
                     self.lane_free = now + cost.bottleneck_ms;
                     self.makespan_ms = self.makespan_ms.max(done);
@@ -555,7 +829,7 @@ impl BoxEngine {
                             }
                         }
                     }
-                    for r in &dec.dispatch {
+                    for (j, r) in dec.dispatch.iter().enumerate() {
                         self.lat.push(done - r.arrival_ms);
                         self.qwait.push(now - r.arrival_ms);
                         self.completed += 1;
@@ -565,6 +839,18 @@ impl BoxEngine {
                         }
                         if dec.degraded {
                             self.degraded += 1;
+                        }
+                        if r.client != 0 {
+                            if let Some(cls) = &served {
+                                match cls[j] {
+                                    FrameClass::Full => self.stream_full += 1,
+                                    FrameClass::Partial => self.stream_partial += 1,
+                                    FrameClass::Reuse => self.stream_reuse += 1,
+                                }
+                            }
+                            // degraded redos also advance the session: the
+                            // fast-path run refreshes its cached state
+                            self.sessions.commit(r.client);
                         }
                         outcomes.push(RequestOutcome {
                             id: r.id,
@@ -645,6 +931,12 @@ impl BoxEngine {
             busy_npu_ms: self.busy_npu,
             busy_cpu_ms: self.busy_cpu,
             makespan_ms: self.makespan_ms,
+            stream_full: self.stream_full,
+            stream_partial: self.stream_partial,
+            stream_reuse: self.stream_reuse,
+            stream_evictions: self.sessions.evictions,
+            stream_sessions: self.sessions.map.len(),
+            stale_batches: self.stale_batches,
         }
     }
 
@@ -745,6 +1037,11 @@ pub fn run_traffic_trace(
         util_gpu: st.busy_gpu_ms / 1000.0 / makespan_s,
         util_npu: st.busy_npu_ms / 1000.0 / makespan_s,
         max_queue_depth: st.max_queue_depth,
+        stream_full: st.stream_full,
+        stream_partial: st.stream_partial,
+        stream_reuse: st.stream_reuse,
+        session_evictions: st.stream_evictions,
+        stale_batches: st.stale_batches,
         map_25: engine.map_25(planner),
     };
     Ok((report, outcomes))
@@ -894,6 +1191,108 @@ mod tests {
         assert!(rep.capacity_rps < cap_fast && rep.capacity_rps > cap_slow);
     }
 
+    fn stream_req(id: u64, client: u64, arrival: f64, deadline: f64) -> Request {
+        Request {
+            id,
+            arrival_ms: arrival,
+            deadline_ms: deadline,
+            seed: id,
+            class: 0,
+            key: 0,
+            client,
+        }
+    }
+
+    fn one_shot_engine(planner: &ServicePlanner, policy: SloPolicy) -> BoxEngine {
+        BoxEngine::new(
+            planner,
+            std::slice::from_ref(&split_cfg()),
+            2048,
+            8,
+            BatchPolicy { max_batch: 1, max_wait_ms: 0.0 },
+            policy,
+        )
+        .unwrap()
+    }
+
+    /// Streaming traffic rides the reuse tail, which must cost less than
+    /// recomputing every frame — under overload that shows up as goodput.
+    #[test]
+    fn streaming_sessions_raise_goodput_under_overload() {
+        let planner = ServicePlanner::synthetic();
+        let mut sc = scenario(1.5, SloPolicy::None, 13);
+        let cold = run_traffic(&sc, &planner, None).unwrap();
+        assert_eq!(cold.stream_full + cold.stream_partial + cold.stream_reuse, 0);
+        sc.load.clients = 4;
+        let warm = run_traffic(&sc, &planner, None).unwrap();
+        assert!(warm.stream_reuse > 0, "streaming trace must hit the reuse tail");
+        assert!(
+            warm.goodput_rps > cold.goodput_rps,
+            "frame reuse should raise goodput under overload: {} vs {}",
+            warm.goodput_rps,
+            cold.goodput_rps
+        );
+    }
+
+    /// The session cache is bounded: a new client beyond the capacity
+    /// evicts the least-recently-used session, which restarts cold (FULL).
+    #[test]
+    fn session_cache_evicts_lru_when_over_cap() {
+        let planner = ServicePlanner::synthetic();
+        let mut e = one_shot_engine(&planner, SloPolicy::None).with_session_cap(2);
+        assert_eq!(e.session_cap(), 2);
+        let mut outcomes = Vec::new();
+        let mut now = 0.0;
+        for (i, client) in [1u64, 2, 3, 1].into_iter().enumerate() {
+            let r = stream_req(i as u64, client, now, 1e12);
+            assert_eq!(e.offer(r, &mut outcomes), AdmitResult::Admitted);
+            e.advance(now, &planner, None, &mut outcomes);
+            now += 60_000.0; // lane surely free again
+        }
+        let st = e.stats();
+        assert_eq!(st.completed, 4);
+        // client 3 evicts client 1; client 1's return evicts client 2
+        assert_eq!(st.stream_evictions, 2);
+        assert_eq!(st.stream_sessions, 2);
+        // every dispatch was a cold first frame (client 1 lost its state)
+        assert_eq!(st.stream_full, 4);
+        assert_eq!(st.stream_partial + st.stream_reuse, 0);
+    }
+
+    /// The stale-tracks rung: a warm session hitting a forced-FULL cut
+    /// under deadline pressure is served from its cached REUSE tail instead
+    /// of being quantize-degraded.
+    #[test]
+    fn stale_tracks_serves_cut_frames_from_the_cache_under_pressure() {
+        let planner = ServicePlanner::synthetic();
+        let mut e = one_shot_engine(&planner, SloPolicy::StaleTracks);
+        let mut outcomes = Vec::new();
+        let mut now = 0.0;
+        // warm the session past the first cut window: frames 0..=15
+        for i in 0..16u64 {
+            let r = stream_req(i, 7, now, f64::INFINITY);
+            assert_eq!(e.offer(r, &mut outcomes), AdmitResult::Admitted);
+            e.advance(now, &planner, None, &mut outcomes);
+            now += 60_000.0;
+        }
+        let before = e.stats();
+        assert_eq!(before.stream_full, 1, "only frame 0 recomputes in the first window");
+        assert_eq!(before.stale_batches, 0);
+        // frame 16 is a cut (FULL); give it a deadline only the tail makes
+        let full_ms = planner.cost_of_graph(&e.plans[0].full, 1).total_ms;
+        let tail_ms = planner.cost_of_graph(&e.plans[0].tail, 1).total_ms;
+        assert!(tail_ms < full_ms, "reuse tail must be cheaper than the full graph");
+        let r = stream_req(16, 7, now, now + 0.5 * (full_ms + tail_ms));
+        assert_eq!(e.offer(r, &mut outcomes), AdmitResult::Admitted);
+        e.advance(now, &planner, None, &mut outcomes);
+        let st = e.stats();
+        assert_eq!(st.completed, 17);
+        assert_eq!(st.stale_batches, 1, "cut frame should ride the stale rung");
+        assert_eq!(st.stream_full, 1, "the cut was served stale, not recomputed");
+        assert_eq!(st.degraded, 0, "stale rung preempts quantize-degradation");
+        assert_eq!(st.on_time, 17);
+    }
+
     /// The straggler knob scales every charged service time uniformly.
     #[test]
     fn straggler_factor_stretches_service_times() {
@@ -918,6 +1317,7 @@ mod tests {
                 seed: 1,
                 class: 0,
                 key: 0,
+                client: 0,
             };
             assert_eq!(e.offer(r, &mut outcomes), AdmitResult::Admitted);
             let hint = e.advance(0.0, &planner, None, &mut outcomes);

@@ -26,6 +26,10 @@ pub struct Request {
     /// Index into the scenario's detector-config list — the batching
     /// compatibility key (same dataset + precision variant batch together).
     pub key: usize,
+    /// Streaming session id: consecutive frames from one camera share a
+    /// client id so the gateway can reuse that session's cached frame state
+    /// (see [`crate::temporal`]). `0` means a sessionless one-shot request.
+    pub client: u64,
 }
 
 /// Arrival process shapes. Rates are requests per second of simulated time.
@@ -95,6 +99,9 @@ pub struct LoadGen {
     pub hi_frac: f64,
     /// Mix weights over the scenario's detector configs (batch keys).
     pub mix: Vec<f64>,
+    /// Number of distinct streaming clients arrivals are spread over
+    /// (round-robin). `0` = every request is sessionless (`client == 0`).
+    pub clients: usize,
     /// Base seed: both the arrival trace and the per-request scene seeds.
     pub seed: u64,
 }
@@ -102,7 +109,7 @@ pub struct LoadGen {
 impl LoadGen {
     /// Single-config, single-class trace (the common case).
     pub fn simple(pattern: ArrivalPattern, duration_ms: f64, deadline_ms: f64, seed: u64) -> LoadGen {
-        LoadGen { pattern, duration_ms, deadline_ms, hi_frac: 0.0, mix: vec![1.0], seed }
+        LoadGen { pattern, duration_ms, deadline_ms, hi_frac: 0.0, mix: vec![1.0], clients: 0, seed }
     }
 
     /// Generate the arrival trace, sorted by arrival time.
@@ -129,6 +136,9 @@ impl LoadGen {
                 seed: self.seed.wrapping_mul(0x9E37).wrapping_add(i as u64),
                 class: if rng.f64() < self.hi_frac { 0 } else { 1 },
                 key: if self.mix.len() > 1 { rng.weighted(&self.mix) } else { 0 },
+                // round-robin, no RNG draw: adding clients never perturbs the
+                // class/key sequence of an existing trace
+                client: if self.clients > 0 { 1 + (i as u64) % self.clients as u64 } else { 0 },
             })
             .collect()
     }
@@ -325,6 +335,23 @@ mod tests {
         let k0 = reqs.iter().filter(|r| r.key == 0).count() as f64 / reqs.len() as f64;
         assert!((hi - 0.3).abs() < 0.08, "hi frac {hi}");
         assert!((k0 - 0.75).abs() < 0.08, "key0 frac {k0}");
+    }
+
+    #[test]
+    fn client_assignment_is_round_robin_and_off_by_default() {
+        let mut lg = LoadGen::simple(ArrivalPattern::Poisson { rate_rps: 40.0 }, 5_000.0, 500.0, 9);
+        let plain = lg.generate();
+        assert!(plain.iter().all(|r| r.client == 0), "clients=0 must stay sessionless");
+        lg.clients = 3;
+        let streamed = lg.generate();
+        assert_eq!(plain.len(), streamed.len());
+        for (p, s) in plain.iter().zip(streamed.iter()) {
+            // adding clients must not perturb the rest of the trace
+            assert_eq!(p.arrival_ms, s.arrival_ms);
+            assert_eq!(p.class, s.class);
+            assert_eq!(p.key, s.key);
+            assert_eq!(s.client, 1 + s.id % 3);
+        }
     }
 
     #[test]

@@ -26,6 +26,12 @@
 //! [`BoxEngine`]: `cluster::run_cluster` drives one engine per edge box
 //! behind a router to scale the gateway out to a heterogeneous fleet (see
 //! `docs/CLUSTER.md`).
+//!
+//! Streaming clients ([`Request::client`] != 0) get a bounded per-box
+//! session cache: frames classified REUSE/PARTIAL by the temporal model
+//! ride cheaper graphs (the [`crate::temporal`] reuse path), and the
+//! stale-tracks SLO rung can force warm sessions onto their cached REUSE
+//! tail under overload. See `docs/STREAMING.md`.
 
 pub mod batcher;
 pub mod dispatch;
@@ -42,4 +48,4 @@ pub use dispatch::{
 pub use loadgen::{ArrivalPattern, LoadGen, Request};
 pub use plan::{PlanCost, ServicePlanner};
 pub use queue::{AdmissionQueue, AdmitResult, QueueStats};
-pub use slo::SloPolicy;
+pub use slo::{SloDecision, SloPolicy};

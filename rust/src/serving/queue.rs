@@ -158,7 +158,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, class: usize, key: usize, arrival: f64, deadline: f64) -> Request {
-        Request { id, arrival_ms: arrival, deadline_ms: deadline, seed: id, class, key }
+        Request { id, arrival_ms: arrival, deadline_ms: deadline, seed: id, class, key, client: 0 }
     }
 
     #[test]

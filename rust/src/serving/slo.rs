@@ -15,6 +15,11 @@
 //! - **shed** requests that even the fast path cannot save, so the
 //!   accelerators never burn time on work that is already dead (doing so is
 //!   what collapses goodput in the no-policy baseline).
+//!
+//! Streaming gateways get a fourth move between full and degrade:
+//! **stale tracks** ([`SloPolicy::StaleTracks`]) serves warm sessions from
+//! their cached frame state (REUSE tail only, see [`crate::temporal`]) —
+//! stale-but-fast tracks at full precision instead of a quantized redo.
 
 use anyhow::Result;
 
@@ -35,6 +40,12 @@ pub enum SloPolicy {
     /// Prefer the degraded fast path when it saves deadlines; shed only what
     /// even degradation cannot save.
     Degrade,
+    /// Streaming rung above Degrade: under pressure, first serve warm
+    /// sessions stale — force their frames onto the cached REUSE tail
+    /// (raising the effective reuse threshold) — and only then fall through
+    /// to the degraded fast path and shedding. Sessionless traffic sees
+    /// exactly the Degrade ladder.
+    StaleTracks,
 }
 
 impl SloPolicy {
@@ -43,6 +54,7 @@ impl SloPolicy {
             "none" | "off" => Some(SloPolicy::None),
             "shed" => Some(SloPolicy::Shed),
             "degrade" | "slo" => Some(SloPolicy::Degrade),
+            "stale-tracks" | "stale" => Some(SloPolicy::StaleTracks),
             _ => None,
         }
     }
@@ -52,6 +64,7 @@ impl SloPolicy {
             SloPolicy::None => "none",
             SloPolicy::Shed => "shed",
             SloPolicy::Degrade => "degrade",
+            SloPolicy::StaleTracks => "stale-tracks",
         }
     }
 }
@@ -93,6 +106,9 @@ pub struct SloDecision {
     pub dispatch: Vec<Request>,
     /// Whether the dispatched work runs on the degraded fast path.
     pub degraded: bool,
+    /// Whether warm sessions in the dispatched work are served stale (forced
+    /// onto their cached REUSE tail). Only [`SloPolicy::StaleTracks`] sets it.
+    pub stale: bool,
     /// Requests dropped because no available path meets their deadline.
     pub shed: Vec<Request>,
 }
@@ -109,24 +125,62 @@ pub fn apply(
     full_ms: f64,
     fast_ms: f64,
 ) -> SloDecision {
+    // with no stale pricing the stale rung is never cheaper than full, so
+    // StaleTracks collapses onto the Degrade ladder
+    apply_stream(policy, reqs, now_ms, full_ms, full_ms, fast_ms)
+}
+
+/// [`apply`] with the streaming rung priced in: `stale_ms` is the predicted
+/// batch service time when every warm session is forced onto its cached
+/// REUSE tail. The ladder is full → stale → degraded fast → shed; the stale
+/// rung only exists under [`SloPolicy::StaleTracks`] and only fires when it
+/// is actually cheaper than full (a batch of cold or sessionless requests
+/// prices stale == full and falls straight through).
+pub fn apply_stream(
+    policy: SloPolicy,
+    reqs: Vec<Request>,
+    now_ms: f64,
+    full_ms: f64,
+    stale_ms: f64,
+    fast_ms: f64,
+) -> SloDecision {
     match policy {
-        SloPolicy::None => SloDecision { dispatch: reqs, degraded: false, shed: Vec::new() },
+        SloPolicy::None => {
+            SloDecision { dispatch: reqs, degraded: false, stale: false, shed: Vec::new() }
+        }
         SloPolicy::Shed => {
             let done = now_ms + full_ms;
             let (keep, shed) = reqs.into_iter().partition(|r| r.deadline_ms >= done);
-            SloDecision { dispatch: keep, degraded: false, shed }
+            SloDecision { dispatch: keep, degraded: false, stale: false, shed }
         }
-        SloPolicy::Degrade => {
+        SloPolicy::Degrade | SloPolicy::StaleTracks => {
             let full_done = now_ms + full_ms;
             let all_make_full = reqs.iter().all(|r| r.deadline_ms >= full_done);
             if all_make_full {
-                return SloDecision { dispatch: reqs, degraded: false, shed: Vec::new() };
+                return SloDecision {
+                    dispatch: reqs,
+                    degraded: false,
+                    stale: false,
+                    shed: Vec::new(),
+                };
             }
-            // full quality would miss someone: try the fast path
+            if policy == SloPolicy::StaleTracks && stale_ms < full_ms {
+                // full quality would miss someone: serve stale-but-fast tracks
+                let stale_done = now_ms + stale_ms;
+                if reqs.iter().all(|r| r.deadline_ms >= stale_done) {
+                    return SloDecision {
+                        dispatch: reqs,
+                        degraded: false,
+                        stale: true,
+                        shed: Vec::new(),
+                    };
+                }
+            }
+            // last resort before shedding: the degraded fast path
             let fast_done = now_ms + fast_ms;
             let (keep, shed): (Vec<Request>, Vec<Request>) =
                 reqs.into_iter().partition(|r| r.deadline_ms >= fast_done);
-            SloDecision { dispatch: keep, degraded: true, shed }
+            SloDecision { dispatch: keep, degraded: true, stale: false, shed }
         }
     }
 }
@@ -138,7 +192,7 @@ mod tests {
     use crate::sim::DeviceKind;
 
     fn req(id: u64, deadline: f64) -> Request {
-        Request { id, arrival_ms: 0.0, deadline_ms: deadline, seed: id, class: 0, key: 0 }
+        Request { id, arrival_ms: 0.0, deadline_ms: deadline, seed: id, class: 0, key: 0, client: 0 }
     }
 
     #[test]
@@ -229,9 +283,73 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for p in [SloPolicy::None, SloPolicy::Shed, SloPolicy::Degrade] {
+        for p in [SloPolicy::None, SloPolicy::Shed, SloPolicy::Degrade, SloPolicy::StaleTracks] {
             assert_eq!(SloPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(SloPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn stale_tracks_prefers_full_when_safe() {
+        let d = apply_stream(SloPolicy::StaleTracks, vec![req(0, 200.0)], 100.0, 50.0, 10.0, 20.0);
+        assert!(!d.stale && !d.degraded);
+        assert_eq!(d.dispatch.len(), 1);
+    }
+
+    #[test]
+    fn stale_tracks_serves_stale_before_degrading() {
+        // full misses (done 150 > 130), stale makes it (done 110)
+        let d = apply_stream(
+            SloPolicy::StaleTracks,
+            vec![req(0, 130.0), req(1, 300.0)],
+            100.0,
+            50.0,
+            10.0,
+            20.0,
+        );
+        assert!(d.stale, "stale rung should save req 0 without degrading");
+        assert!(!d.degraded);
+        assert_eq!(d.dispatch.len(), 2);
+        assert!(d.shed.is_empty());
+    }
+
+    #[test]
+    fn stale_tracks_falls_through_to_fast_then_shed() {
+        // stale done = 140 still misses req 0 (deadline 135); fast done = 120 saves it
+        let d = apply_stream(
+            SloPolicy::StaleTracks,
+            vec![req(0, 135.0), req(1, 300.0)],
+            100.0,
+            50.0,
+            40.0,
+            20.0,
+        );
+        assert!(d.degraded && !d.stale);
+        assert_eq!(d.dispatch.len(), 2);
+        // and a deadline even fast cannot save is shed
+        let d = apply_stream(
+            SloPolicy::StaleTracks,
+            vec![req(0, 110.0), req(1, 300.0)],
+            100.0,
+            50.0,
+            40.0,
+            20.0,
+        );
+        assert!(d.degraded);
+        assert_eq!(d.shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn stale_rung_requires_a_real_saving() {
+        // stale == full (cold batch): StaleTracks must behave exactly like Degrade
+        let d = apply_stream(
+            SloPolicy::StaleTracks,
+            vec![req(0, 130.0), req(1, 300.0)],
+            100.0,
+            50.0,
+            50.0,
+            20.0,
+        );
+        assert!(d.degraded && !d.stale);
     }
 }

@@ -1,0 +1,387 @@
+//! Cross-frame reuse for streaming scenes (the temporal workload class).
+//!
+//! Consecutive frames of a video point-cloud stream overlap almost entirely;
+//! recomputing 2D semantics, biased FPS, and the SA chain per frame wastes
+//! most of the accelerator budget. This module holds the per-session state
+//! that lets the pipeline skip that work:
+//!
+//! * [`FrameCache`] — the previous frame's cloud, painted semantics,
+//!   biased-sampling index set, and seed features (everything the head of
+//!   the detector needs to warm-start).
+//! * a cheap **delta estimator**: a grid-occupancy histogram over the same
+//!   cell keys as the PR 8 `GridStorage`; diffing the incoming frame's
+//!   histogram against the cached anchor classifies the frame as
+//!   [`FrameClass::Reuse`] / [`FrameClass::Partial`] / [`FrameClass::Full`]
+//!   in one O(N) pass — far cheaper than the work it saves.
+//!
+//! The pipeline-side consumers live in `coordinator::pipeline`
+//! (`run_stream`); the gateway keys one cache per client session in
+//! `serving::dispatch`. Design notes: `docs/STREAMING.md`.
+
+use std::collections::HashMap;
+
+use crate::pointops::ballquery::ScalarGrid;
+use crate::pointops::{soa_bytes, PointsSoA};
+use crate::util::tensor::Tensor;
+
+/// How much of the previous frame's work a new frame may inherit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameClass {
+    /// frame is near-identical: skip paint + biased FPS, warm-start the head
+    Reuse,
+    /// localized change: recompute painting only for dirty grid cells
+    Partial,
+    /// scene change (or no cache): run the full pipeline, bit-identically
+    Full,
+}
+
+impl FrameClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameClass::Reuse => "reuse",
+            FrameClass::Partial => "partial",
+            FrameClass::Full => "full",
+        }
+    }
+}
+
+/// Delta-estimator thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct DeltaCfg {
+    /// occupancy grid cell edge (meters) — matches the ball-query grid scale
+    pub cell: f32,
+    /// changed-mass fraction at or below which a frame is REUSE. The
+    /// default (0.10) absorbs one default-speed mover (~3% changed mass
+    /// per frame) for a few frames; because REUSE never re-anchors, the
+    /// accumulated drift then tips the frame into PARTIAL and re-anchors.
+    pub reuse_max: f64,
+    /// changed-mass fraction at or below which a frame is PARTIAL
+    pub partial_max: f64,
+}
+
+impl Default for DeltaCfg {
+    fn default() -> Self {
+        DeltaCfg { cell: 0.4, reuse_max: 0.10, partial_max: 0.45 }
+    }
+}
+
+/// Verdict of the delta estimator for one incoming frame.
+#[derive(Debug, Clone)]
+pub struct FrameDelta {
+    pub class: FrameClass,
+    /// fraction of point mass whose grid cell occupancy changed, in [0, 1]
+    pub changed_frac: f64,
+    /// per-point dirty flag: point i sits in a cell whose occupancy changed
+    pub dirty: Vec<bool>,
+}
+
+/// Everything the pipeline can inherit from the previous frame. Stored per
+/// session; repopulated on every FULL / PARTIAL frame.
+#[derive(Debug, Clone, Default)]
+pub struct StreamArtifacts {
+    /// 2D segmentation scores (H, W, C) — lets PARTIAL/REUSE skip the seg net
+    pub scores: Option<Tensor>,
+    /// painted per-point semantics (N, C)
+    pub paint: Option<Tensor>,
+    /// foreground mask used by biased sampling (N)
+    pub fg: Vec<f32>,
+    /// biased-sampling index set: seed point indices into the frame cloud,
+    /// in SA-chain concat order. Within a shot point index identity holds, so
+    /// re-gathering these indices from the *current* cloud applies the exact
+    /// ego-motion / object-motion transform to the cached seed centers.
+    pub seed_src: Vec<usize>,
+    /// seed features entering the vote stage (num_seeds, 3 + C)
+    pub seeds: Option<Tensor>,
+    /// the frame's point cloud in SoA layout
+    pub points: PointsSoA,
+}
+
+impl StreamArtifacts {
+    /// Actual heap footprint of the cached artifacts (bytes).
+    pub fn bytes(&self) -> u64 {
+        let t = |t: &Option<Tensor>| t.as_ref().map_or(0, |t| t.size_bytes() as u64);
+        t(&self.scores)
+            + t(&self.paint)
+            + t(&self.seeds)
+            + (self.fg.len() * 4) as u64
+            + (self.seed_src.len() * 8) as u64
+            + soa_bytes(self.points.len())
+    }
+}
+
+/// Reuse counters for one session (exported into serving stats).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub full: u64,
+    pub partial: u64,
+    pub reuse: u64,
+}
+
+impl CacheStats {
+    pub fn frames(&self) -> u64 {
+        self.full + self.partial + self.reuse
+    }
+
+    pub fn record(&mut self, class: FrameClass) {
+        match class {
+            FrameClass::Full => self.full += 1,
+            FrameClass::Partial => self.partial += 1,
+            FrameClass::Reuse => self.reuse += 1,
+        }
+    }
+}
+
+/// Canonical declared memory of one streaming session cache. The gateway
+/// sizes its session map with this and the verifier's S006 rule checks the
+/// declared total against the configured bound — keep in sync with
+/// [`StreamArtifacts::bytes`].
+pub fn session_footprint_bytes(
+    num_points: usize,
+    num_seeds: usize,
+    seed_feat: usize,
+    num_classes: usize,
+    img_size: usize,
+) -> u64 {
+    let scores = (img_size * img_size * num_classes * 4) as u64;
+    let paint = (num_points * num_classes * 4) as u64;
+    let fg = (num_points * 4) as u64;
+    let seed_src = (num_seeds * 8) as u64;
+    let seeds = (num_seeds * (3 + seed_feat) * 4) as u64;
+    // occupancy histogram: key (12 B) + count (4 B) + map overhead, one
+    // entry per occupied cell, bounded by one cell per point
+    let occ = (num_points * 24) as u64;
+    scores + paint + fg + seed_src + seeds + occ + soa_bytes(num_points)
+}
+
+/// Per-session temporal cache: occupancy anchor + reusable artifacts.
+#[derive(Debug, Clone)]
+pub struct FrameCache {
+    cfg: DeltaCfg,
+    /// grid-occupancy histogram of the last *installed* frame
+    occ: HashMap<(i32, i32, i32), u32>,
+    n_anchor: usize,
+    arts: Option<StreamArtifacts>,
+    bound_bytes: u64,
+    stats: CacheStats,
+}
+
+impl FrameCache {
+    pub fn new(cfg: DeltaCfg, bound_bytes: u64) -> Self {
+        FrameCache {
+            cfg,
+            occ: HashMap::new(),
+            n_anchor: 0,
+            arts: None,
+            bound_bytes,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &DeltaCfg {
+        &self.cfg
+    }
+
+    /// Raise the REUSE threshold (the SLO "stale tracks" rung): more frames
+    /// ride the cheap tail path at the cost of staler semantics.
+    pub fn set_reuse_max(&mut self, reuse_max: f64) {
+        self.cfg.reuse_max = reuse_max;
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    pub fn record(&mut self, class: FrameClass) {
+        self.stats.record(class);
+    }
+
+    pub fn bound_bytes(&self) -> u64 {
+        self.bound_bytes
+    }
+
+    /// Current heap use: artifacts + occupancy anchor.
+    pub fn footprint_bytes(&self) -> u64 {
+        self.arts.as_ref().map_or(0, |a| a.bytes()) + (self.occ.len() * 24) as u64
+    }
+
+    pub fn artifacts(&self) -> Option<&StreamArtifacts> {
+        self.arts.as_ref()
+    }
+
+    pub fn take_artifacts(&mut self) -> Option<StreamArtifacts> {
+        self.arts.take()
+    }
+
+    fn histogram(&self, points: &[[f32; 3]]) -> HashMap<(i32, i32, i32), u32> {
+        let mut h = HashMap::with_capacity(points.len() / 4 + 1);
+        for p in points {
+            *h.entry(ScalarGrid::key(p, self.cfg.cell)).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Classify an incoming frame against the anchor. O(N); does not mutate
+    /// the cache. With no anchor (cold session) every frame is FULL.
+    pub fn classify(&self, points: &[[f32; 3]]) -> FrameDelta {
+        if self.n_anchor == 0 || self.arts.is_none() || points.len() != self.n_anchor {
+            return FrameDelta {
+                class: FrameClass::Full,
+                changed_frac: 1.0,
+                dirty: vec![true; points.len()],
+            };
+        }
+        let now = self.histogram(points);
+        // changed mass = sum over the union of cells of |count delta|
+        let mut diff: u64 = 0;
+        for (k, &c) in now.iter() {
+            let prev = self.occ.get(k).copied().unwrap_or(0);
+            diff += c.abs_diff(prev) as u64;
+        }
+        for (k, &c) in self.occ.iter() {
+            if !now.contains_key(k) {
+                diff += c as u64;
+            }
+        }
+        let changed_frac = (diff as f64 / points.len() as f64).min(1.0);
+        let class = if changed_frac <= self.cfg.reuse_max {
+            FrameClass::Reuse
+        } else if changed_frac <= self.cfg.partial_max {
+            FrameClass::Partial
+        } else {
+            FrameClass::Full
+        };
+        let dirty = points
+            .iter()
+            .map(|p| {
+                let k = ScalarGrid::key(p, self.cfg.cell);
+                now.get(&k).copied().unwrap_or(0) != self.occ.get(&k).copied().unwrap_or(0)
+            })
+            .collect();
+        FrameDelta { class, changed_frac, dirty }
+    }
+
+    /// Install a freshly computed frame as the new anchor. Called after every
+    /// FULL or PARTIAL frame; REUSE frames deliberately do *not* re-anchor,
+    /// so slow drift accumulates against the last real compute and
+    /// eventually tips the estimator into PARTIAL.
+    pub fn install(&mut self, points: &[[f32; 3]], arts: StreamArtifacts) {
+        self.occ = self.histogram(points);
+        self.n_anchor = points.len();
+        self.arts = Some(arts);
+    }
+
+    /// Drop all cached state (e.g. on session eviction + readmission).
+    pub fn reset(&mut self) {
+        self.occ.clear();
+        self.n_anchor = 0;
+        self.arts = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud(n: usize, off: f32) -> Vec<[f32; 3]> {
+        (0..n)
+            .map(|i| {
+                let f = i as f32 / n as f32;
+                [f * 4.0 + off, (f * 31.0) % 3.0, (f * 17.0) % 2.0]
+            })
+            .collect()
+    }
+
+    fn arts(n: usize) -> StreamArtifacts {
+        StreamArtifacts {
+            fg: vec![0.5; n],
+            seed_src: (0..n / 4).collect(),
+            points: PointsSoA::from_points(&cloud(n, 0.0)),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cold_cache_is_full() {
+        let cache = FrameCache::new(DeltaCfg::default(), 1 << 20);
+        let d = cache.classify(&cloud(256, 0.0));
+        assert_eq!(d.class, FrameClass::Full);
+        assert!(d.dirty.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn identical_frame_is_reuse_and_clean() {
+        let pts = cloud(512, 0.0);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 1 << 20);
+        cache.install(&pts, arts(512));
+        let d = cache.classify(&pts);
+        assert_eq!(d.class, FrameClass::Reuse);
+        assert_eq!(d.changed_frac, 0.0);
+        assert!(d.dirty.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn local_motion_is_partial_and_marks_dirty_cells() {
+        let pts = cloud(512, 0.0);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 1 << 20);
+        cache.install(&pts, arts(512));
+        // move 20% of the points a full cell over
+        let mut moved = pts.clone();
+        for p in moved.iter_mut().take(102) {
+            p[0] += 0.8;
+        }
+        let d = cache.classify(&moved);
+        assert_eq!(d.class, FrameClass::Partial, "changed_frac {}", d.changed_frac);
+        assert!(d.dirty[0], "moved point must be dirty");
+        assert!(d.dirty.iter().filter(|&&b| b).count() < 512, "some points stay clean");
+    }
+
+    #[test]
+    fn global_change_is_full() {
+        let pts = cloud(512, 0.0);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 1 << 20);
+        cache.install(&pts, arts(512));
+        let d = cache.classify(&cloud(512, 10.0));
+        assert_eq!(d.class, FrameClass::Full);
+        assert!(d.changed_frac > 0.9);
+    }
+
+    #[test]
+    fn point_count_change_forces_full() {
+        let pts = cloud(512, 0.0);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 1 << 20);
+        cache.install(&pts, arts(512));
+        assert_eq!(cache.classify(&cloud(500, 0.0)).class, FrameClass::Full);
+    }
+
+    #[test]
+    fn footprint_tracks_artifacts_and_reset_clears() {
+        let pts = cloud(512, 0.0);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 1 << 20);
+        assert_eq!(cache.footprint_bytes(), 0);
+        cache.install(&pts, arts(512));
+        assert!(cache.footprint_bytes() > soa_bytes(512));
+        cache.reset();
+        assert_eq!(cache.footprint_bytes(), 0);
+        assert_eq!(cache.classify(&pts).class, FrameClass::Full);
+    }
+
+    #[test]
+    fn session_footprint_formula_covers_real_artifacts() {
+        let n = 512;
+        let mut a = arts(n);
+        a.scores = Some(Tensor::zeros(vec![64, 64, 11]));
+        a.paint = Some(Tensor::zeros(vec![n, 11]));
+        a.seeds = Some(Tensor::zeros(vec![n / 4, 3 + 128]));
+        let declared = session_footprint_bytes(n, n / 4, 128, 11, 64);
+        assert!(declared >= a.bytes(), "declared {declared} < actual {}", a.bytes());
+    }
+
+    #[test]
+    fn stats_record_counts() {
+        let mut s = CacheStats::default();
+        s.record(FrameClass::Full);
+        s.record(FrameClass::Reuse);
+        s.record(FrameClass::Reuse);
+        assert_eq!((s.full, s.partial, s.reuse, s.frames()), (1, 0, 2, 3));
+    }
+}

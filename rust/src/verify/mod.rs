@@ -30,12 +30,14 @@
 //!   `supports()` its (workload kind, precision); no fp32→int8 edge into an
 //!   NN consumer without an explicit int8 QDQ spec; degenerate placements
 //!   (an NN device assigned but nothing runnable there) flagged.
-//! - **S — schedule / resource analysis** (S001–S005): per-stage memory
+//! - **S — schedule / resource analysis** (S001–S006): per-stage memory
 //!   fit at the folded batch, per-device memory across *live intervals* of
 //!   the simulated timeline, every cross-device transfer priced (no free
-//!   edges), batch-fold(k) output exactly k-scalable, and every point-op
+//!   edges), batch-fold(k) output exactly k-scalable, every point-op
 //!   stage's declared memory covering at least the SoA-padded coordinate
-//!   buffer the lane kernels actually stream.
+//!   buffer the lane kernels actually stream, and a streaming gateway's
+//!   session cache fitting its declared memory bound
+//!   ([`verify_session_cache`]).
 //! - **E — executor race/deadlock soundness** (E001–E003, [`verify_exec`]):
 //!   for the `exec::DagExecutor` lowering, every [`crate::exec::Slot`] a
 //!   stage closure reads is covered by its transitive declared deps, and no
@@ -710,4 +712,33 @@ fn check_soa_footprint(g: &StageGraph, r: &mut Report) {
             );
         }
     }
+}
+
+/// S006 (error): a streaming gateway's per-box session cache must fit its
+/// configured memory bound: `sessions × per-session footprint ≤ bound`.
+/// The per-session footprint is what [`crate::temporal::FrameCache`]
+/// actually retains between frames
+/// ([`crate::temporal::session_footprint_bytes`]); a cache declared over
+/// its bound would OOM the box under a full client load, exactly when the
+/// reuse path matters most.
+pub fn verify_session_cache(
+    sessions: usize,
+    per_session_bytes: u64,
+    bound_bytes: u64,
+) -> Report {
+    let mut r = Report::new();
+    let declared = sessions as u64 * per_session_bytes;
+    if declared > bound_bytes {
+        r.push(
+            "S006",
+            Severity::Error,
+            format!("session cache ({sessions} sessions)"),
+            format!(
+                "declared session memory {declared} B ({sessions} sessions x \
+                 {per_session_bytes} B) exceeds the configured bound {bound_bytes} B"
+            ),
+            "lower the session capacity, shrink the cached artifacts, or raise the bound",
+        );
+    }
+    r
 }

@@ -316,6 +316,7 @@ fn steady_state_scenes_do_not_grow_scratch_arenas() {
                 seed: lo + i,
                 class: 0,
                 key: 0,
+                client: 0,
             })
             .collect()
     };

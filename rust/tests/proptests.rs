@@ -292,7 +292,7 @@ fn prop_pipelined_never_slower_than_chained() {
 // ---------------------------------------------------------------------------
 
 fn mk_req(id: u64, arrival: f64, deadline: f64, class: usize, key: usize) -> Request {
-    Request { id, arrival_ms: arrival, deadline_ms: deadline, seed: id, class, key }
+    Request { id, arrival_ms: arrival, deadline_ms: deadline, seed: id, class, key, client: 0 }
 }
 
 #[test]

@@ -1,0 +1,132 @@
+//! Streaming-path invariants: the temporal reuse cache must never change
+//! what a FULL frame computes, the delta estimator must catch scene cuts
+//! immediately, and the session-cache memory rule (S006) must price the
+//! gateway's session map the way the verifier declares it.
+
+use pointsplit::coordinator::{DetectorConfig, ScenePipeline, Schedule, Variant};
+use pointsplit::data::stream::{generate_stream, StreamCfg};
+use pointsplit::data::SYNRGBD;
+use pointsplit::pointops::PointsSoA;
+use pointsplit::runtime::Runtime;
+use pointsplit::sim::DeviceKind;
+use pointsplit::temporal::{
+    session_footprint_bytes, DeltaCfg, FrameCache, FrameClass, StreamArtifacts,
+};
+use pointsplit::util::tensor::Tensor;
+use pointsplit::verify;
+
+fn pipelined() -> Schedule {
+    Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu }
+}
+
+/// Satellite (a): after any run of REUSE/PARTIAL frames, a forced FULL
+/// recompute (here: the scene cut opening shot 1, plus the cold first
+/// frame) must be bit-identical to running the single-scene pipeline cold
+/// on the same frame — the cache may only *observe* FULL frames, never
+/// influence them.
+#[test]
+fn full_recompute_after_reuse_matches_cold_pipeline_bit_for_bit() {
+    let rt = Runtime::synthetic();
+    let cfg = DetectorConfig::new("synrgbd", Variant::PointSplit, true, pipelined());
+    let pipe = ScenePipeline::new(&rt, cfg);
+    for seed in [3u64, 19] {
+        let scfg = StreamCfg { frames: 18, cut_period: 16, ..StreamCfg::default() };
+        let stream = generate_stream(seed, &SYNRGBD, scfg);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 64 << 20);
+        let mut classes = Vec::new();
+        for f in &stream {
+            let (out, class) = pipe.run_stream(&f.scene, seed, &mut cache).expect("stream frame");
+            if f.meta.is_cut {
+                assert_eq!(
+                    class,
+                    FrameClass::Full,
+                    "seed {seed}: cut frame {} must be served FULL",
+                    f.meta.index
+                );
+                let cold = pipe.run(&f.scene, seed).expect("cold frame");
+                assert_eq!(
+                    out.detections, cold.detections,
+                    "seed {seed}: FULL frame {} detections diverged from the cold pipeline",
+                    f.meta.index
+                );
+                assert_eq!(
+                    out.timeline.total_ms.to_bits(),
+                    cold.timeline.total_ms.to_bits(),
+                    "seed {seed}: FULL frame {} timeline diverged",
+                    f.meta.index
+                );
+                assert_eq!(out.peak_memory_mb.to_bits(), cold.peak_memory_mb.to_bits());
+            }
+            classes.push(class);
+        }
+        assert_eq!(classes[0], FrameClass::Full, "a cold session must open FULL");
+        assert!(
+            classes[1..16].iter().any(|c| *c != FrameClass::Full),
+            "seed {seed}: expected REUSE/PARTIAL frames before the cut, got {classes:?}"
+        );
+    }
+}
+
+/// Satellite (d): across seeds, a scene-change cut is classified FULL by
+/// the delta estimator on the very frame it happens — never served from a
+/// stale anchor — while ordinary in-shot motion stays mostly reusable.
+#[test]
+fn delta_estimator_flags_scene_cuts_within_one_frame() {
+    for seed in [1u64, 5, 9, 23] {
+        let scfg = StreamCfg { frames: 33, cut_period: 8, ..StreamCfg::default() };
+        let stream = generate_stream(seed, &SYNRGBD, scfg);
+        let mut cache = FrameCache::new(DeltaCfg::default(), 64 << 20);
+        let (mut non_cut, mut non_cut_full) = (0usize, 0usize);
+        for f in &stream {
+            let d = cache.classify(&f.scene.points);
+            if f.meta.is_cut && f.meta.index > 0 {
+                assert_eq!(
+                    d.class,
+                    FrameClass::Full,
+                    "seed {seed}: cut at frame {} classified {:?} (changed_frac {:.3})",
+                    f.meta.index,
+                    d.class,
+                    d.changed_frac
+                );
+            } else if !f.meta.is_cut {
+                non_cut += 1;
+                if d.class == FrameClass::Full {
+                    non_cut_full += 1;
+                }
+            }
+            // mirror the pipeline: FULL and PARTIAL frames re-anchor the cache
+            if d.class != FrameClass::Reuse {
+                let arts = StreamArtifacts {
+                    seeds: Some(Tensor::zeros(vec![4, 3])),
+                    seed_src: vec![0, 1, 2, 3],
+                    points: PointsSoA::from_points(&f.scene.points),
+                    ..Default::default()
+                };
+                cache.install(&f.scene.points, arts);
+            }
+        }
+        assert!(
+            non_cut_full * 2 < non_cut,
+            "seed {seed}: {non_cut_full}/{non_cut} in-shot frames re-ran FULL — the \
+             estimator is too jumpy for streaming to pay off"
+        );
+    }
+}
+
+/// The verifier's S006 rule: the session map's declared memory (sessions x
+/// canonical per-session footprint) must fire if and only if it exceeds
+/// the configured bound.
+#[test]
+fn s006_fires_only_when_declared_session_memory_exceeds_bound() {
+    let per = session_footprint_bytes(2048, 256, 128, 11, 64);
+    assert!(per > 0);
+    let clean = verify::verify_session_cache(64, per, 64 << 20);
+    assert!(
+        !clean.fired("S006"),
+        "default sizing (64 sessions x {per} B) must fit the default 64 MB bound"
+    );
+    assert!(clean.errors().is_empty());
+    let over = verify::verify_session_cache(64, per, 8 << 20);
+    assert!(over.fired("S006"), "64 sessions x {per} B must exceed an 8 MB bound");
+    assert_eq!(over.errors().len(), 1);
+}
