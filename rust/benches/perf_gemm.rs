@@ -1,0 +1,243 @@
+//! §Perf: wall-clock micro-benchmarks of the NN surrogate GEMM hot path.
+//!
+//! These numbers feed EXPERIMENTS.md §Perf and are persisted to
+//! `BENCH_gemm.json` (section `perf_gemm`) so the naive → canonical-scalar
+//! → tiled → tiled-parallel trajectory of every layer shape is diffable
+//! across runs. Covered: the three dominant dense shapes of the detector
+//! (backbone FP, vote, proposal head) in fp32 and int8, the weight-cache
+//! cold/warm asymmetry, and the fused batched execution path against the
+//! graph's priced k-scalability.
+//!
+//! Knobs:
+//!   POINTSPLIT_BENCH_POINTS   GEMM row count          (default 4096, CI: 1024)
+//!   POINTSPLIT_BENCH_SCENES   fused-batch iterations  (default 8, CI: 1)
+
+mod common;
+
+use pointsplit::bench::{bench_fn, f2, update_bench_json, BenchResult, Table};
+use pointsplit::coordinator::{DetectorConfig, Schedule, Variant};
+use pointsplit::graph::StageGraph;
+use pointsplit::runtime::gemm;
+use pointsplit::sim::DeviceKind;
+use pointsplit::util::json::Json;
+use pointsplit::util::rng::Rng;
+use pointsplit::util::tensor::Tensor;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// One layer shape's naive → scalar → tiled → parallel trajectory.
+fn traj(naive: &BenchResult, scalar: &BenchResult, tiled: &BenchResult, par: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("naive_ms", Json::Num(naive.mean_us / 1e3)),
+        ("scalar_ms", Json::Num(scalar.mean_us / 1e3)),
+        ("tiled_ms", Json::Num(tiled.mean_us / 1e3)),
+        ("par_ms", Json::Num(par.mean_us / 1e3)),
+        ("speedup_tiled", Json::Num(naive.mean_us / tiled.mean_us.max(1e-9))),
+        ("speedup_par", Json::Num(naive.mean_us / par.mean_us.max(1e-9))),
+    ])
+}
+
+fn main() {
+    let rt = common::open_runtime();
+    let n = env_usize("POINTSPLIT_BENCH_POINTS", 4096);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let m = &rt.manifest;
+
+    // the three dominant dense shapes of the detector (manifest widths)
+    let shapes: [(&str, usize, usize); 3] = [
+        ("backbone_fp", m.fp_in, m.seed_feat),         // 384 -> 128
+        ("vote", m.seed_feat, 3 + m.seed_feat),        // 128 -> 131
+        ("prop", 3 + m.seed_feat, m.head_layout.sem_cls.1), // 131 -> 79
+    ];
+
+    println!("=== §Perf GEMM micro-benchmarks (n={n} rows, {threads} threads) ===\n");
+
+    // --------------------------------------------------- weight cache
+    // cold pack (generate + insert) vs warm hit (lock + Arc clone)
+    gemm::clear_cache();
+    let key = 0xA11CE;
+    let cold = bench_fn("weight pack cold (384x128)", 0, 8, || {
+        gemm::clear_cache();
+        std::hint::black_box(gemm::packed(key, 384, 128));
+    });
+    cold.print();
+    let warm = bench_fn("weight cache warm hit", 1, 64, || {
+        std::hint::black_box(gemm::packed(key, 384, 128));
+    });
+    warm.print();
+    let (hits, misses) = gemm::cache_stats();
+    println!("cache stats: {hits} hits / {misses} misses, {} resident\n", gemm::cache_len());
+
+    // --------------------------------------- fp32 kernel trajectories
+    let mut rng = Rng::new(0x6E44);
+    let mut fp_rows = Vec::new();
+    let mut fp_wins = 0usize;
+    let mut t = Table::new(&["layer", "naive ms", "scalar ms", "tiled ms", "par ms", "tiled speedup"]);
+    for (name, cin, cout) in shapes {
+        let lkey = gemm::packed(0x6E44 ^ cout as u64, cin, cout);
+        let data: Vec<f32> = (0..n * cin).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut out = vec![0.0f32; n * cout];
+        let naive = bench_fn(&format!("{name} {cin}x{cout} fp32 naive"), 1, 10, || {
+            std::hint::black_box(gemm::dense_fp32_naive(0x6E44 ^ cout as u64, cin, cout, &data));
+        });
+        naive.print();
+        let scalar = bench_fn(&format!("{name} {cin}x{cout} fp32 scalar"), 1, 10, || {
+            gemm::dense_fp32_scalar(&lkey, &data, &mut out);
+            std::hint::black_box(&out);
+        });
+        scalar.print();
+        let tiled = bench_fn(&format!("{name} {cin}x{cout} fp32 tiled x1"), 1, 10, || {
+            gemm::dense_fp32(&lkey, &data, &mut out, 1);
+            std::hint::black_box(&out);
+        });
+        tiled.print();
+        let par = bench_fn(&format!("{name} {cin}x{cout} fp32 tiled x{threads}"), 1, 10, || {
+            gemm::dense_fp32(&lkey, &data, &mut out, threads);
+            std::hint::black_box(&out);
+        });
+        par.print();
+        let speedup = naive.mean_us / tiled.mean_us.max(1e-9);
+        if speedup >= 2.0 {
+            fp_wins += 1;
+        }
+        t.row(vec![
+            name.to_string(),
+            f2(naive.mean_us / 1e3),
+            f2(scalar.mean_us / 1e3),
+            f2(tiled.mean_us / 1e3),
+            f2(par.mean_us / 1e3),
+            f2(speedup),
+        ]);
+        fp_rows.push((name, traj(&naive, &scalar, &tiled, &par)));
+    }
+    t.print("fp32 layer trajectory: pre-PR naive vs canonical scalar vs tiled lanes");
+    println!(
+        "\nacceptance: >= 2x tiled speedup (single thread, vs pre-PR naive) on >= 2 of 3 \
+         shapes -> {}\n",
+        if fp_wins >= 2 { "PASS" } else { "below (smoke settings or tiny row count)" }
+    );
+
+    // --------------------------------------- int8 kernel trajectory
+    // one contiguous layer-granularity group: the common case the run
+    // detector fast-paths; scattered role groups are covered by tests
+    let (cin, cout) = (m.fp_in, m.seed_feat);
+    let pw = gemm::packed(0x17E8, cin, cout);
+    let qx: Vec<i8> = (0..n * cin).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+    let groups = vec![(0..cin).collect::<Vec<usize>>()];
+    let gscale = vec![0.05f32];
+    let gzero = vec![3i64];
+    let wsum: Vec<i64> = (0..cout)
+        .map(|j| pw.wq[j * cin..(j + 1) * cin].iter().map(|&w| w as i64).sum())
+        .collect();
+    let ctx = gemm::Int8Ctx::new(&groups, &gscale, &gzero, &wsum);
+    let mut qout = vec![0.0f32; n * cout];
+    let i8_scalar = bench_fn(&format!("int8 {cin}x{cout} scalar (pre-PR i64)"), 1, 10, || {
+        gemm::dense_int8_scalar(&pw, &ctx, &qx, &mut qout);
+        std::hint::black_box(&qout);
+    });
+    i8_scalar.print();
+    let i8_tiled = bench_fn(&format!("int8 {cin}x{cout} tiled x1"), 1, 10, || {
+        gemm::dense_int8(&pw, &ctx, &qx, &mut qout, 1);
+        std::hint::black_box(&qout);
+    });
+    i8_tiled.print();
+    let i8_par = bench_fn(&format!("int8 {cin}x{cout} tiled x{threads}"), 1, 10, || {
+        gemm::dense_int8(&pw, &ctx, &qx, &mut qout, threads);
+        std::hint::black_box(&qout);
+    });
+    i8_par.print();
+    let i8_speedup = i8_scalar.mean_us / i8_tiled.mean_us.max(1e-9);
+    println!("int8 tiled speedup (single thread): {}\n", f2(i8_speedup));
+
+    // ------------------------------------------- fused batched execution
+    // one (k·n, cin) GEMM vs k sequential dispatches of the vote artifact,
+    // against the stage graph's priced k-scalability (batch_fold on the
+    // host device model)
+    let iters = common::scene_budget(8);
+    let seeds = Tensor::zeros(vec![m.num_seeds, m.seed_feat]);
+    let art = "synrgbd_pointsplit_vote_fp32";
+    let cfg = DetectorConfig::new(
+        "synrgbd",
+        Variant::PointSplit,
+        true,
+        Schedule::Pipelined { point_dev: DeviceKind::Gpu, nn_dev: DeviceKind::EdgeTpu },
+    );
+    let graph = StageGraph::build(m, &cfg, 2048, false).expect("graph");
+    let base = bench_fn("fused k=1 (vote fp32)", 1, iters.max(4), || {
+        std::hint::black_box(rt.run_batch_with_spec(art, &[&seeds], None, 1).unwrap());
+    });
+    base.print();
+    let mut batch_rows = Vec::new();
+    let mut within = 0usize;
+    let mut fused_beats_seq = false;
+    for k in [2usize, 4, 8] {
+        let inputs: Vec<Tensor> = (0..k).map(|_| seeds.clone()).collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let seq = bench_fn(&format!("sequential x{k} (vote fp32)"), 1, iters.max(4), || {
+            for x in &inputs {
+                std::hint::black_box(rt.run_with_spec(art, &[x], None).unwrap());
+            }
+        });
+        seq.print();
+        let fused = bench_fn(&format!("fused batch k={k} (vote fp32)"), 1, iters.max(4), || {
+            std::hint::black_box(rt.run_batch_with_spec(art, &refs, None, 1).unwrap());
+        });
+        fused.print();
+        let measured = fused.mean_us / base.mean_us.max(1e-9);
+        let priced = graph.priced_batch_scaling(k);
+        let rel = (measured / priced - 1.0).abs();
+        if rel <= 0.25 {
+            within += 1;
+        }
+        if k == 8 {
+            fused_beats_seq = fused.mean_us < seq.mean_us;
+        }
+        println!(
+            "  k={k}: measured scaling {} vs priced {} (rel err {})",
+            f2(measured),
+            f2(priced),
+            f2(rel)
+        );
+        batch_rows.push((
+            format!("k{k}"),
+            Json::obj(vec![
+                ("seq_ms", Json::Num(seq.mean_us / 1e3)),
+                ("fused_ms", Json::Num(fused.mean_us / 1e3)),
+                ("measured_scaling", Json::Num(measured)),
+                ("priced_scaling", Json::Num(priced)),
+            ]),
+        ));
+    }
+    println!(
+        "\nacceptance: fused batch-of-8 beats 8 sequential -> {}; priced-vs-measured within \
+         25% on {}/3 of k in {{2,4,8}}",
+        if fused_beats_seq { "PASS" } else { "below (smoke settings)" },
+        within
+    );
+
+    let (hits2, misses2) = gemm::cache_stats();
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("perf_gemm".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("cache_cold_pack_ms", Json::Num(cold.mean_us / 1e3)),
+        ("cache_warm_hit_ms", Json::Num(warm.mean_us / 1e3)),
+        ("cache_hits", Json::Num(hits2 as f64)),
+        ("cache_misses", Json::Num(misses2 as f64)),
+        ("fp32", Json::obj(fp_rows)),
+        ("fp32_wins", Json::Num(fp_wins as f64)),
+        ("fp32_pass", Json::Bool(fp_wins >= 2)),
+        ("int8_speedup_tiled", Json::Num(i8_speedup)),
+        (
+            "fused",
+            Json::obj(
+                batch_rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect::<Vec<_>>(),
+            ),
+        ),
+        ("fused_beats_sequential_k8", Json::Bool(fused_beats_seq)),
+        ("fused_within_25pct", Json::Num(within as f64)),
+    ]);
+    update_bench_json("BENCH_gemm.json", "perf_gemm", payload);
+}

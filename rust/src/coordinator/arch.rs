@@ -17,20 +17,30 @@ pub fn sa_pointmanip_workload(n_in: usize, m_out: usize, k: usize, c_in: usize) 
     }
 }
 
-/// NN workload straight from artifact metadata. Memory and wire traffic
-/// follow the artifact's precision: int8 stages stream and ship one byte
-/// per element where fp32 moves four. Output traffic uses the artifact's
-/// declared `out_elems` (per-artifact head widths, not a magic constant).
+/// NN workload straight from artifact metadata. Memory traffic covers the
+/// activations the stage streams (one byte per element on int8, four on
+/// fp32) *plus* the packed weights its dense layer touches — the resident
+/// footprint the GEMM layer actually holds per `(cin, cout, precision)`
+/// ([`crate::runtime::gemm::packed_weight_bytes`]), which verifier rule
+/// S007 checks declared graphs against. Wire traffic stays activations
+/// only: weights are cached on-device after the first execution, never
+/// re-shipped per scene. Output traffic uses the artifact's declared
+/// `out_elems` (per-artifact head widths, not a magic constant).
 ///
 /// Artifact *lookup* (and its missing-artifact `Result`) lives with the
 /// only consumer, `graph::StageGraph::build` — a malformed manifest is a
 /// recoverable build error there, never a worker-killing panic.
-pub fn nn_workload_of(meta: &ArtifactMeta) -> Workload {
+pub fn nn_workload_of(manifest: &Manifest, meta: &ArtifactMeta) -> Workload {
     let per_elem = meta.wire_bytes_per_elem;
+    // a net role the surrogate cannot shape (unknown in a hand-built
+    // manifest) contributes no weight term rather than failing the build
+    let weight_bytes = crate::runtime::surrogate::layer_dims(manifest, meta)
+        .map(|(_, cin, cout)| crate::runtime::gemm::packed_weight_bytes(cin, cout, per_elem == 1))
+        .unwrap_or(0);
     Workload {
         kind: WorkloadKind::NeuralNet,
         flops: meta.flops,
-        mem_bytes: (meta.bytes_in / 4) * per_elem,
+        mem_bytes: (meta.bytes_in / 4) * per_elem + weight_bytes,
         wire_bytes: (meta.bytes_in / 4 + meta.out_elems) * per_elem,
     }
 }

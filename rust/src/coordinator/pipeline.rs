@@ -317,7 +317,7 @@ impl<'a> ScenePipeline<'a> {
                     Compute::Host(Box::new(move || {
                         let img = Tensor::new(vec![img_size, img_size, 3], scene.image.clone());
                         sl.set(
-                            self.rt.run_with_spec(&art, &[&img], qspec.as_ref())?.remove(0),
+                            self.rt.run_with_spec_t(&art, &[&img], qspec.as_ref(), threads)?.remove(0),
                         );
                         Ok(())
                     }))
@@ -414,7 +414,7 @@ impl<'a> ScenePipeline<'a> {
                                 }
                             },
                         };
-                        feats_out.set(self.run_maybe_padded(&art, &g, mm, qspec.as_ref())?);
+                        feats_out.set(self.run_maybe_padded(&art, &g, mm, qspec.as_ref(), threads)?);
                         Ok(())
                     }))
                 }
@@ -473,7 +473,7 @@ impl<'a> ScenePipeline<'a> {
                             pointops::group_features_soa(&geo.xyz, Some(&fused), &idx4, &groups4)
                         });
                         sa4_feats
-                            .set(self.rt.run_with_spec(&art, &[&g4], qspec.as_ref())?.remove(0));
+                            .set(self.rt.run_with_spec_t(&art, &[&g4], qspec.as_ref(), threads)?.remove(0));
                         sa3_feats_fused.set(fused);
                         Ok(())
                     }))
@@ -521,7 +521,7 @@ impl<'a> ScenePipeline<'a> {
                     Compute::Host(Box::new(move || {
                         let f2 = f2_slot.take();
                         seeds_slot
-                            .set(self.rt.run_with_spec(&art, &[&f2], qspec.as_ref())?.remove(0));
+                            .set(self.rt.run_with_spec_t(&art, &[&f2], qspec.as_ref(), threads)?.remove(0));
                         Ok(())
                     }))
                 }
@@ -536,7 +536,7 @@ impl<'a> ScenePipeline<'a> {
                             c.set(seeds.clone());
                         }
                         let vote_out =
-                            self.rt.run_with_spec(&art, &[&seeds], qspec.as_ref())?.remove(0);
+                            self.rt.run_with_spec_t(&art, &[&seeds], qspec.as_ref(), threads)?.remove(0);
                         let seed_xyz = seed_xyz_slot.take();
                         let cfeat = seeds.row_len();
                         let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
@@ -578,7 +578,7 @@ impl<'a> ScenePipeline<'a> {
                             pointops::group_features(vote_xyz, Some(vote_feats), &pidx, &pgroups)
                         });
                         prop_slot
-                            .set(self.rt.run_with_spec(&art, &[&pg], qspec.as_ref())?.remove(0));
+                            .set(self.rt.run_with_spec_t(&art, &[&pg], qspec.as_ref(), threads)?.remove(0));
                         Ok(())
                     }))
                 }
@@ -761,7 +761,7 @@ impl<'a> ScenePipeline<'a> {
         }
         // vote head — same math as the Vote closure of the full pipeline
         let vote_out =
-            self.rt.run_with_spec(vote_art, &[seeds], vote_node.qspec.as_ref())?.remove(0);
+            self.rt.run_with_spec_t(vote_art, &[seeds], vote_node.qspec.as_ref(), threads)?.remove(0);
         let cfeat = seeds.row_len();
         let mut vote_xyz: Vec<[f32; 3]> = Vec::with_capacity(seed_xyz.len());
         let mut vote_feats = Tensor::zeros(vec![seed_xyz.len(), cfeat]);
@@ -779,7 +779,7 @@ impl<'a> ScenePipeline<'a> {
         let cluster_xyz: Vec<[f32; 3]> = pidx.iter().map(|&i| vote_xyz[i]).collect();
         let pg = pointops::group_features(&vote_xyz, Some(&vote_feats), &pidx, &pgroups);
         let prop =
-            self.rt.run_with_spec(prop_art, &[&pg], prop_node.qspec.as_ref())?.remove(0);
+            self.rt.run_with_spec_t(prop_art, &[&pg], prop_node.qspec.as_ref(), threads)?.remove(0);
         let detections = decode_detections(m, &cluster_xyz, &prop, cfg.obj_thresh, cfg.nms_iou);
         let specs = tail.specs();
         let timeline = self.sim.run(&specs);
@@ -805,6 +805,7 @@ impl<'a> ScenePipeline<'a> {
         g: &Tensor,
         b: usize,
         spec: Option<&QuantSpec>,
+        threads: usize,
     ) -> Result<Tensor> {
         let meta = self
             .rt
@@ -813,7 +814,7 @@ impl<'a> ScenePipeline<'a> {
             .ok_or_else(|| anyhow!("artifact '{art}' missing"))?;
         let want = meta.input_shapes[0][0];
         if want == b {
-            return Ok(self.rt.run_with_spec(art, &[g], spec)?.remove(0));
+            return Ok(self.rt.run_with_spec_t(art, &[g], spec, threads)?.remove(0));
         }
         if want < b {
             return Err(anyhow!(
@@ -823,7 +824,7 @@ impl<'a> ScenePipeline<'a> {
         }
         let mut padded = Tensor::zeros(vec![want, g.shape[1], g.shape[2]]);
         padded.data[..g.data.len()].copy_from_slice(&g.data);
-        let out = self.rt.run_with_spec(art, &[&padded], spec)?.remove(0);
+        let out = self.rt.run_with_spec_t(art, &[&padded], spec, threads)?.remove(0);
         let rows: Vec<usize> = (0..b).collect();
         Ok(out.gather_rows(&rows))
     }
@@ -881,7 +882,7 @@ mod tests {
         // sa1_full expects 256 balls of (32, 15); feed 200
         let g = Tensor::zeros(vec![200, 32, 15]);
         let out = p
-            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 200, None)
+            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 200, None, 1)
             .unwrap();
         assert_eq!(out.rows(), 200);
     }
@@ -892,7 +893,7 @@ mod tests {
         let p = pipeline(&rt);
         let g = Tensor::zeros(vec![300, 32, 15]);
         let err = p
-            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 300, None)
+            .run_maybe_padded("synrgbd_pointsplit_sa1_full_int8", &g, 300, None, 1)
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("smaller than workload"), "unexpected error: {msg}");

@@ -346,6 +346,24 @@ fn finish(shared: &Shared<'_>, i: usize, res: Result<()>) {
     shared.cv.notify_all();
 }
 
+/// Contiguous `(start, end)` index ranges for row-tile parallelism, with
+/// the same budget clamping the point-op kernels use: `threads <= 1`, tiny
+/// inputs (fewer than `min_per_tile` rows per would-be tile), or `n == 0`
+/// collapse to at most one tile, so callers fall through to their
+/// sequential path and the results stay identical for any thread count.
+pub fn row_tiles(n: usize, threads: usize, min_per_tile: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let by_size = if min_per_tile == 0 { threads } else { n / min_per_tile };
+    let nt = threads.min(by_size).min(n).max(1);
+    let chunk = n.div_ceil(nt);
+    (0..nt)
+        .map(|i| (i * chunk, ((i + 1) * chunk).min(n)))
+        .filter(|(a, b)| a < b)
+        .collect()
+}
+
 /// Deterministic parallel map: applies `f` to every item on up to `threads`
 /// scoped threads, preserving input order. Falls back to a plain loop for
 /// tiny inputs or `threads <= 1`. `f` receives `(index, item)`.

@@ -181,7 +181,7 @@ pub(crate) fn nn_assign(
         .ok_or_else(|| anyhow!("artifact '{art}' missing from manifest"))?;
     let precision =
         StagePrecision::parse(&meta.precision).map_or(Precision::Fp32, StagePrecision::sim);
-    let mut wl = nn_workload_of(meta);
+    let mut wl = nn_workload_of(m, meta);
     if class == StageClass::Seg {
         wl.flops *= cfg.seg_passes as u64;
     }
@@ -596,6 +596,33 @@ impl StageGraph {
         folded
     }
 
+    /// Priced k-scalability of the graph's NN stages on the host device:
+    /// the [`StageGraph::batch_fold`] compute time of every NN node on
+    /// [`crate::sim::Device::cpu`] divided by the unfolded total. Sub-linear
+    /// in `k` (the per-stage dispatch overhead is paid once per fold), this
+    /// is the number the fused-batch GEMM path is validated against —
+    /// `benches/perf_gemm.rs` compares measured batched host time to this
+    /// ratio for k ∈ {2, 4, 8}. Priced on the CPU device regardless of the
+    /// graph's placement because the measurement runs on the host surrogate.
+    pub fn priced_batch_scaling(&self, batch: usize) -> f64 {
+        let k = batch.max(1);
+        let cpu = crate::sim::Device::cpu();
+        let folded = self.batch_fold(k);
+        let mut base_ms = 0.0f64;
+        let mut fold_ms = 0.0f64;
+        for (n, f) in self.nodes.iter().zip(folded.iter()) {
+            if n.spec.workload.kind != crate::sim::WorkloadKind::NeuralNet {
+                continue;
+            }
+            base_ms += cpu.compute_ms(&n.spec.workload, n.spec.precision);
+            fold_ms += cpu.compute_ms(&f.workload, f.precision);
+        }
+        if base_ms <= 0.0 {
+            return k as f64;
+        }
+        fold_ms / base_ms
+    }
+
     /// **quant-rewrite**: the same topology under a different
     /// [`QuantScheme`]. Every NN node's artifact, precision, workload and
     /// quant spec are re-derived from the new scheme; devices are re-placed
@@ -842,6 +869,22 @@ mod tests {
             assert_eq!(b.workload.flops, 4 * a.workload.flops);
             assert_eq!(b.workload.wire_bytes, 4 * a.workload.wire_bytes);
         }
+    }
+
+    #[test]
+    fn priced_batch_scaling_is_sublinear_and_monotonic() {
+        let m = Manifest::synthetic();
+        let g = StageGraph::build(&m, &split_cfg(), 2048, false).unwrap();
+        let mut prev = 1.0f64;
+        for k in [2usize, 4, 8] {
+            let r = g.priced_batch_scaling(k);
+            // folding k scenes costs more than one but less than k separate
+            // runs: the per-stage dispatch overhead is paid once
+            assert!(r > prev, "scaling must grow with k: k={k} r={r} prev={prev}");
+            assert!(r < k as f64, "k={k}: priced scaling {r} must be sub-linear");
+            prev = r;
+        }
+        assert!((g.priced_batch_scaling(1) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -66,6 +66,9 @@ pub mod graph;
 pub mod metrics;
 pub mod pointops;
 pub mod quant;
+// the NN execution layer (GEMM kernels, weight cache, surrogate) runs
+// inside long-lived serving workers: unwrap is denied outside tests
+#[cfg_attr(not(test), deny(clippy::unwrap_used))]
 pub mod runtime;
 pub mod serving;
 pub mod sim;

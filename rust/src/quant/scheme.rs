@@ -252,8 +252,23 @@ pub struct QTensor {
 }
 
 impl QTensor {
+    /// An empty tensor whose buffers [`QTensor::quantize_into`] can reuse.
+    pub fn empty() -> QTensor {
+        QTensor { shape: Vec::new(), data: Vec::new(), scale: Vec::new(), zero: Vec::new() }
+    }
+
     /// Quantize a `(N, C)` tensor with a calibrated quantizer.
     pub fn quantize(t: &Tensor, q: &ActQuant) -> Result<QTensor> {
+        let mut qt = QTensor::empty();
+        qt.quantize_into(t, q)?;
+        Ok(qt)
+    }
+
+    /// Quantize into this tensor's existing storage. The packed GEMM path
+    /// keeps one scratch `QTensor` per thread and re-quantizes into it each
+    /// call, so the steady-state int8 hot path allocates no code buffer.
+    /// Produces codes bit-identical to [`QTensor::quantize`].
+    pub fn quantize_into(&mut self, t: &Tensor, q: &ActQuant) -> Result<()> {
         let c = q.scale.len();
         if t.row_len() != c {
             return Err(anyhow!(
@@ -261,19 +276,18 @@ impl QTensor {
                 t.row_len()
             ));
         }
-        let mut data = Vec::with_capacity(t.data.len());
+        self.data.clear();
+        self.data.reserve(t.data.len());
         for row in 0..t.rows() {
             for (i, &v) in t.row(row).iter().enumerate() {
                 let code = (v / q.scale[i] + q.zero[i]).round().clamp(-128.0, 127.0);
-                data.push(code as i8);
+                self.data.push(code as i8);
             }
         }
-        Ok(QTensor {
-            shape: t.shape.clone(),
-            data,
-            scale: q.scale.clone(),
-            zero: q.zero.clone(),
-        })
+        self.shape.clone_from(&t.shape);
+        self.scale.clone_from(&q.scale);
+        self.zero.clone_from(&q.zero);
+        Ok(())
     }
 
     /// Recover the f32 view (bit-consistent with [`ActQuant::qdq`]).

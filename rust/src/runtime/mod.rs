@@ -20,6 +20,7 @@
 //! builds a runtime that needs no artifacts directory at all: synthetic
 //! manifest + surrogate execution.
 
+pub mod gemm;
 pub mod manifest;
 pub mod surrogate;
 
@@ -28,7 +29,7 @@ pub use manifest::{ArtifactMeta, Manifest};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Mutex, Once};
+use std::sync::{Mutex, Once, PoisonError};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -129,7 +130,12 @@ impl Runtime {
 
     /// Compile (or fetch from cache) an artifact by name.
     pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = self
+            .cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(name)
+        {
             return Ok(e.clone());
         }
         let client = self
@@ -150,13 +156,16 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow!("compiling artifact '{name}': {e:?}"))?;
         let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        self.cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
     /// Number of executables compiled so far (for metrics/tests).
     pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     /// Execute an artifact on f32 tensors at its manifest-declared quant
@@ -180,6 +189,91 @@ impl Runtime {
         inputs: &[&Tensor],
         spec: Option<&QuantSpec>,
     ) -> Result<Vec<Tensor>> {
+        self.run_with_spec_t(name, inputs, spec, 1)
+    }
+
+    /// [`Runtime::run_with_spec`] with a row-tile thread budget for the
+    /// surrogate GEMM kernels (the pipeline passes its per-scene host
+    /// thread budget through; results are bit-identical for any count).
+    /// The budget only affects the surrogate — real PJRT executables
+    /// thread themselves.
+    pub fn run_with_spec_t(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        spec: Option<&QuantSpec>,
+        threads: usize,
+    ) -> Result<Vec<Tensor>> {
+        let meta = self.validated_meta(name, inputs)?;
+        if !self.surrogate_only.load(Ordering::Relaxed) {
+            match self.run_pjrt(name, inputs) {
+                Ok(out) => return Ok(out),
+                // the stub fails with this exact marker; real backend
+                // errors (missing file, bad HLO, exec fault) propagate
+                Err(e) if format!("{e:#}").contains("PJRT unavailable") => {
+                    self.surrogate_only.store(true, Ordering::Relaxed);
+                    note_surrogate();
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        surrogate::run_with_spec_t(&self.manifest, &meta, inputs, spec, threads)
+    }
+
+    /// Execute one artifact over a batch of k scenes' inputs as a single
+    /// fused GEMM ([`surrogate::run_batch_with_spec`]); returns one output
+    /// tensor per scene, in order. Each scene contributes the artifact's
+    /// first input, validated against the manifest shape. On a real PJRT
+    /// backend the executables run sequentially per scene (their batch
+    /// dimension is baked in at export time); the surrogate fuses.
+    pub fn run_batch_with_spec(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        spec: Option<&QuantSpec>,
+        threads: usize,
+    ) -> Result<Vec<Tensor>> {
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let shape = meta
+            .input_shapes
+            .first()
+            .ok_or_else(|| anyhow!("artifact '{name}' declares no inputs"))?;
+        for (i, t) in inputs.iter().enumerate() {
+            if &t.shape != shape {
+                return Err(anyhow!(
+                    "artifact '{name}' batch input {i}: shape {:?} != manifest {:?}",
+                    t.shape,
+                    shape
+                ));
+            }
+        }
+        if !self.surrogate_only.load(Ordering::Relaxed) {
+            let mut outs = Vec::with_capacity(inputs.len());
+            let mut pjrt_ok = true;
+            for t in inputs {
+                match self.run_pjrt(name, &[t]) {
+                    Ok(mut out) => outs.push(out.swap_remove(0)),
+                    Err(e) if format!("{e:#}").contains("PJRT unavailable") => {
+                        self.surrogate_only.store(true, Ordering::Relaxed);
+                        note_surrogate();
+                        pjrt_ok = false;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if pjrt_ok {
+                return Ok(outs);
+            }
+        }
+        surrogate::run_batch_with_spec(&self.manifest, &meta, inputs, spec, threads)
+    }
+
+    fn validated_meta(&self, name: &str, inputs: &[&Tensor]) -> Result<ArtifactMeta> {
         let meta = self
             .manifest
             .artifact(name)
@@ -201,19 +295,7 @@ impl Runtime {
                 ));
             }
         }
-        if !self.surrogate_only.load(Ordering::Relaxed) {
-            match self.run_pjrt(name, inputs) {
-                Ok(out) => return Ok(out),
-                // the stub fails with this exact marker; real backend
-                // errors (missing file, bad HLO, exec fault) propagate
-                Err(e) if format!("{e:#}").contains("PJRT unavailable") => {
-                    self.surrogate_only.store(true, Ordering::Relaxed);
-                    note_surrogate();
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        surrogate::run_with_spec(&self.manifest, &meta, inputs, spec)
+        Ok(meta)
     }
 
     /// The real PJRT execution path (requires a working `xla-rs` backend).
@@ -298,6 +380,31 @@ mod tests {
         let bad = Tensor::zeros(vec![1, 2, 3]);
         assert!(rt.run("synrgbd_seg_int8", &[&bad]).is_err());
         assert!(rt.run("no_such_artifact", &[&bad]).is_err());
+    }
+
+    #[test]
+    fn batch_run_validates_and_matches_sequential() {
+        let rt = Runtime::synthetic();
+        let name = "synrgbd_pointsplit_vote_fp32";
+        let meta = rt.manifest.artifact(name).expect(name).clone();
+        let xs: Vec<Tensor> = (0..2)
+            .map(|i| {
+                let mut t = Tensor::zeros(meta.input_shapes[0].clone());
+                for (k, v) in t.data.iter_mut().enumerate() {
+                    *v = ((k + 1) as f32 * 0.001) + i as f32 * 0.1;
+                }
+                t
+            })
+            .collect();
+        let refs: Vec<&Tensor> = xs.iter().collect();
+        let fused = rt.run_batch_with_spec(name, &refs, None, 2).expect("batch");
+        assert_eq!(fused.len(), 2);
+        for (x, y) in xs.iter().zip(fused.iter()) {
+            let solo = rt.run(name, &[x]).expect("solo").remove(0);
+            assert_eq!(&solo, y);
+        }
+        let bad = Tensor::zeros(vec![1, 2, 3]);
+        assert!(rt.run_batch_with_spec(name, &[&bad], None, 1).is_err());
     }
 
     #[test]

@@ -29,11 +29,12 @@ use crate::coordinator::{DetectorConfig, ScenePipeline};
 use crate::data::{generate_scene, Box3, DatasetCfg};
 use crate::eval::{eval_map, Detection};
 use crate::exec::HostExec;
-use crate::graph::StageGraph;
+use crate::graph::{StageClass, StageGraph};
 use crate::runtime::{Runtime, RuntimeSource};
 use crate::sim::PlanCost;
 use crate::temporal::FrameClass;
 use crate::util::stats::Stats;
+use crate::util::tensor::Tensor;
 
 use super::batcher::{self, BatchPolicy};
 use super::loadgen::{LoadGen, Request};
@@ -185,6 +186,9 @@ struct ExecJob {
     cfg: DetectorConfig,
     seed: u64,
     slot: usize,
+    /// 2D segmentation scores computed ahead of dispatch by the fused
+    /// batched GEMM pre-pass; `Some` makes the worker skip its seg stage.
+    scores: Option<Tensor>,
 }
 
 type ExecResult = (usize, Result<(Vec<Box3>, Vec<Box3>)>);
@@ -219,6 +223,13 @@ pub struct PipelineExecutor {
     job_tx: Option<mpsc::Sender<ExecJob>>,
     res_rx: mpsc::Receiver<ExecResult>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Runtime owned by the dispatcher thread for the fused segmentation
+    /// pre-pass: the batch's 2D images run as one `(k·h·w, cin)` GEMM
+    /// through the shared weight cache before scenes fan out to workers.
+    /// `None` (open failure) just disables fusion — workers still run seg.
+    batch_rt: Option<Runtime>,
+    ds: &'static DatasetCfg,
+    batch_threads: usize,
 }
 
 impl PipelineExecutor {
@@ -255,7 +266,55 @@ impl PipelineExecutor {
                 std::thread::spawn(move || worker_loop(source, ds, host_exec, &rx, &tx))
             })
             .collect();
-        PipelineExecutor { job_tx: Some(job_tx), res_rx, workers: handles }
+        PipelineExecutor {
+            job_tx: Some(job_tx),
+            res_rx,
+            workers: handles,
+            batch_rt: rt.source().open().ok(),
+            ds,
+            batch_threads: cores.clamp(1, 4),
+        }
+    }
+
+    /// Fused segmentation pre-pass: when a batch has ≥ 2 painted scenes,
+    /// run every scene's 2D image through ONE batched GEMM
+    /// ([`Runtime::run_batch_with_spec`]) instead of one per worker — the
+    /// per-call calibration/packing overhead amortizes across the batch
+    /// and the weight cache is touched once. fp32 rows are independent, so
+    /// the fused scores are bitwise identical to per-scene execution; int8
+    /// calibrates over the joint batch (documented batching semantics).
+    /// Any failure (or `POINTSPLIT_FUSED_BATCH=0`) falls back to all-`None`
+    /// and workers run their own seg stage unchanged.
+    fn fused_seg_scores(&self, cfg: &DetectorConfig, reqs: &[Request]) -> Vec<Option<Tensor>> {
+        let none = vec![None; reqs.len()];
+        if reqs.len() < 2 || !cfg.variant.painted() {
+            return none;
+        }
+        if std::env::var("POINTSPLIT_FUSED_BATCH").is_ok_and(|v| v == "0") {
+            return none;
+        }
+        let Some(rt) = &self.batch_rt else { return none };
+        // the seg node of this config's graph names the artifact + QDQ spec
+        let Ok(graph) = StageGraph::build(&rt.manifest, cfg, self.ds.num_points, false) else {
+            return none;
+        };
+        let Some(seg) = graph.nodes.iter().find(|n| n.class == StageClass::Seg) else {
+            return none;
+        };
+        let Some(art) = seg.artifact.clone() else { return none };
+        let img_size = rt.manifest.img_size;
+        let imgs: Vec<Tensor> = reqs
+            .iter()
+            .map(|r| {
+                let scene = generate_scene(r.seed, self.ds);
+                Tensor::new(vec![img_size, img_size, 3], scene.image)
+            })
+            .collect();
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        match rt.run_batch_with_spec(&art, &refs, seg.qspec.as_ref(), self.batch_threads) {
+            Ok(scores) => scores.into_iter().map(Some).collect(),
+            Err(_) => none,
+        }
     }
 
     /// Execute each request's scene; returns (detections, ground truth) per
@@ -275,8 +334,9 @@ impl PipelineExecutor {
         // invariant, not input-dependent: `job_tx` is only taken in Drop,
         // so it is always Some while `self` can still be called
         let tx = self.job_tx.as_ref().expect("executor pool alive");
-        for (slot, r) in reqs.iter().enumerate() {
-            tx.send(ExecJob { cfg: cfg.clone(), seed: r.seed, slot })
+        let scores = self.fused_seg_scores(cfg, reqs);
+        for ((slot, r), s) in reqs.iter().enumerate().zip(scores) {
+            tx.send(ExecJob { cfg: cfg.clone(), seed: r.seed, slot, scores: s })
                 .map_err(|_| anyhow!("pipeline executor workers exited"))?;
         }
         let mut out: Vec<Option<(Vec<Box3>, Vec<Box3>)>> =
@@ -357,7 +417,12 @@ fn worker_loop(
         // a panic inside the pipeline must still produce a result, or the
         // dispatcher's recv() for this slot would block forever
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            pipe.run(&scene, job.seed)
+            match &job.scores {
+                // fused pre-pass already ran 2D seg for this scene: skip
+                // the seg stage and patch its scores in
+                Some(s) => pipe.run_with_scores(&scene, job.seed, Some(s)).map(|(o, _)| o),
+                None => pipe.run(&scene, job.seed),
+            }
         }))
         .unwrap_or_else(|_| Err(anyhow!("worker panicked executing scene {}", job.seed)))
         .map(|out| (out.detections, gt));
@@ -1332,5 +1397,37 @@ mod tests {
             (slowed - 3.0 * base).abs() < 1e-6 * base,
             "3x straggler: {slowed} ms vs base {base} ms"
         );
+    }
+
+    /// The fused segmentation pre-pass must be invisible in the results:
+    /// fp32 batched GEMM rows are bitwise identical to per-scene execution
+    /// (canonical lane-reduction order), so a batch served with fused seg
+    /// scores pins the exact detections a direct [`ScenePipeline::run`]
+    /// produces for each seed.
+    #[test]
+    fn fused_seg_batch_matches_direct_pipeline() {
+        let rt = Runtime::synthetic();
+        let ds = crate::data::dataset("synrgbd").unwrap();
+        let cfg = split_cfg(); // painted fp32 → fusion engages and is exact
+        let exec = PipelineExecutor::with_workers(&rt, ds, 1);
+        let reqs: Vec<Request> = (0..3).map(|i| stream_req(40 + i, i, 0.0, 1e12)).collect();
+        let got = exec.execute(&cfg, &reqs).unwrap();
+        // mirror the single worker's host-exec policy so any thread-count
+        // sensitivity would be the fused path's fault, not the pool's
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let per = cores.clamp(1, 4);
+        let host_exec =
+            if per > 1 { HostExec::Parallel { threads: per } } else { HostExec::Sequential };
+        let pipe = ScenePipeline::new(&rt, cfg).with_host_exec(host_exec);
+        for (r, (dets, gt)) in reqs.iter().zip(&got) {
+            let scene = generate_scene(r.seed, ds);
+            assert_eq!(gt, &scene.gt_boxes());
+            let direct = pipe.run(&scene, r.seed).unwrap();
+            assert_eq!(
+                dets, &direct.detections,
+                "fused seg scores changed seed {} detections",
+                r.seed
+            );
+        }
     }
 }

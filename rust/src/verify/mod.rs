@@ -30,14 +30,16 @@
 //!   `supports()` its (workload kind, precision); no fp32→int8 edge into an
 //!   NN consumer without an explicit int8 QDQ spec; degenerate placements
 //!   (an NN device assigned but nothing runnable there) flagged.
-//! - **S — schedule / resource analysis** (S001–S006): per-stage memory
+//! - **S — schedule / resource analysis** (S001–S007): per-stage memory
 //!   fit at the folded batch, per-device memory across *live intervals* of
 //!   the simulated timeline, every cross-device transfer priced (no free
 //!   edges), batch-fold(k) output exactly k-scalable, every point-op
 //!   stage's declared memory covering at least the SoA-padded coordinate
-//!   buffer the lane kernels actually stream, and a streaming gateway's
+//!   buffer the lane kernels actually stream, a streaming gateway's
 //!   session cache fitting its declared memory bound
-//!   ([`verify_session_cache`]).
+//!   ([`verify_session_cache`]), and every NN stage's declared memory
+//!   covering the packed-weight + activation footprint its dense layer
+//!   touches ([`crate::runtime::gemm::nn_footprint_bytes`]).
 //! - **E — executor race/deadlock soundness** (E001–E003, [`verify_exec`]):
 //!   for the `exec::DagExecutor` lowering, every [`crate::exec::Slot`] a
 //!   stage closure reads is covered by its transitive declared deps, and no
@@ -195,6 +197,7 @@ pub fn verify_graph(m: &Manifest, g: &StageGraph) -> Report {
     check_precision_flow(g, &mut r);
     check_placement_degeneracy(g, &mut r);
     check_soa_footprint(g, &mut r);
+    check_nn_footprint(m, g, &mut r);
     r
 }
 
@@ -709,6 +712,43 @@ fn check_soa_footprint(g: &StageGraph, r: &mut Report) {
                      cloud alone is {need} B ({n_in} points, lane-padded x/y/z)"
                 ),
                 "size the stage's mem_bytes from its real input cloud, not the output",
+            );
+        }
+    }
+}
+
+/// S007 (warning, mirroring S005 for the NN stages): an NN stage's declared
+/// `mem_bytes` must cover at least the packed-weight + input-activation
+/// footprint of the dense layer it executes —
+/// [`crate::runtime::gemm::nn_footprint_bytes`] over the `(rows, cin, cout)`
+/// the surrogate derives from the manifest contract
+/// ([`crate::runtime::surrogate::layer_dims`]) at the stage's precision.
+/// A smaller declaration means the memory-fit analyses (S001/S002) and the
+/// placement search reason about less memory than the GEMM layer resident
+/// weights + streamed activations actually touch. Stages whose artifact is
+/// missing or whose net role the surrogate cannot shape are skipped (G003
+/// owns manifest consistency).
+fn check_nn_footprint(m: &Manifest, g: &StageGraph, r: &mut Report) {
+    for (i, node) in g.nodes.iter().enumerate() {
+        let Some(art) = node.artifact.as_deref() else { continue };
+        let Some(meta) = m.artifact(art) else { continue };
+        let Ok((rows, cin, cout)) = crate::runtime::surrogate::layer_dims(m, meta) else {
+            continue;
+        };
+        let int8 = node.spec.precision == Precision::Int8;
+        let need = crate::runtime::gemm::nn_footprint_bytes(rows, cin, cout, int8);
+        let declared = node.spec.workload.mem_bytes;
+        if declared < need {
+            r.push(
+                "S007",
+                Severity::Warning,
+                format!("node {i} '{}'", node.spec.name),
+                format!(
+                    "declared workload streams {declared} B but the packed weights + \
+                     input activations of its ({cin} -> {cout}) dense layer over {rows} \
+                     rows need {need} B"
+                ),
+                "size the stage's mem_bytes from its packed weights and real activation rows",
             );
         }
     }

@@ -294,6 +294,21 @@ fn corpus_understated_pointop_memory_is_s005() {
     assert!(rep.fired("S005"), "understated point-op mem_bytes must be S005:\n{rep}");
 }
 
+/// An NN stage whose declared memory understates the packed-weight +
+/// activation footprint of its dense layer. Shipped graphs size NN stages
+/// from streamed activations *plus* packed weights (`arch::nn_workload_of`),
+/// so the rule stays silent on them and fires only on the tamper.
+#[test]
+fn corpus_understated_nn_memory_is_s007() {
+    let (m, mut g) = split_graph();
+    let base = verify::verify_graph(&m, &g);
+    assert!(!base.fired("S007"), "shipped graphs must not trip S007:\n{base}");
+    let nn = g.nodes.iter().position(|n| n.artifact.is_some()).expect("an NN node");
+    g.nodes[nn].spec.workload.mem_bytes = 16;
+    let rep = verify::verify_graph(&m, &g);
+    assert!(rep.fired("S007"), "understated NN mem_bytes must be S007:\n{rep}");
+}
+
 /// The PR 2 merge bug, re-introduced as a fixture: `sa4_pm` lost its
 /// dependency on the *other* pipeline's SA3 output, so a replayed plan
 /// could read chain 1's geometry before it was written. The executor
